@@ -1,0 +1,96 @@
+//! V-sim: validate the analytical model against the discrete-event
+//! simulator — expected makespan, expected energy, and the location of
+//! both optimal periods.
+//!
+//! ```bash
+//! cargo run --release --example model_vs_sim [-- --quick]
+//! ```
+
+use ckpt_period::config::presets::fig1_scenario;
+use ckpt_period::model::energy::e_final;
+use ckpt_period::model::ratios::compare;
+use ckpt_period::model::time::t_final;
+use ckpt_period::sim::runner::empirical_optimal_period;
+use ckpt_period::sim::{monte_carlo, SimConfig};
+use ckpt_period::util::stats::rel_err;
+use ckpt_period::util::table::{fnum, Table};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let reps = if quick { 150 } else { 600 };
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+
+    println!("=== expected makespan & energy: model vs Monte-Carlo ({reps} reps) ===");
+    let mut t = Table::new(&[
+        "mu_min",
+        "rho",
+        "period",
+        "makespan_model",
+        "makespan_sim",
+        "err_pct",
+        "energy_model",
+        "energy_sim",
+        "err_pct",
+    ]);
+    for mu in [120.0, 300.0] {
+        for rho in [2.0, 5.5, 7.0] {
+            let s = fig1_scenario(mu, rho);
+            let cmp = compare(&s).unwrap();
+            for (label, period) in [("AlgoT", cmp.t_time), ("AlgoE", cmp.t_energy)] {
+                let mc = monte_carlo(&SimConfig::paper(s, period), reps, 11, threads);
+                let tm = t_final(&s, period);
+                let em = e_final(&s, period);
+                t.row(&[
+                    fnum(mu, 0),
+                    fnum(rho, 1),
+                    format!("{label}={:.1}", period),
+                    fnum(tm, 0),
+                    fnum(mc.makespan.mean(), 0),
+                    fnum(rel_err(tm, mc.makespan.mean()) * 100.0, 2),
+                    fnum(em, 0),
+                    fnum(mc.energy.mean(), 0),
+                    fnum(rel_err(em, mc.energy.mean()) * 100.0, 2),
+                ]);
+            }
+        }
+    }
+    println!("{}", t.render());
+
+    println!("=== empirical optimal periods vs closed forms (mu=300, rho=5.5) ===");
+    let s = fig1_scenario(300.0, 5.5);
+    let cmp = compare(&s).unwrap();
+    let grid: Vec<f64> = (1..=30).map(|i| 10.0 * i as f64).collect();
+    let sweep_reps = if quick { 60 } else { 200 };
+    let (t_emp, _) = empirical_optimal_period(
+        |t| SimConfig::paper(s, t),
+        &grid,
+        sweep_reps,
+        23,
+        threads,
+        false,
+    );
+    let (e_emp, _) = empirical_optimal_period(
+        |t| SimConfig::paper(s, t),
+        &grid,
+        sweep_reps,
+        23,
+        threads,
+        true,
+    );
+    println!("  time-optimal period:   closed form {:.1} min, empirical grid argmin {t_emp:.1} min", cmp.t_time);
+    println!("  energy-optimal period: closed form {:.1} min, empirical grid argmin {e_emp:.1} min", cmp.t_energy);
+
+    println!("\n=== simulated strategy ratios vs model (mu=300, rho=5.5) ===");
+    let mc_t = monte_carlo(&SimConfig::paper(s, cmp.t_time), reps, 31, threads);
+    let mc_e = monte_carlo(&SimConfig::paper(s, cmp.t_energy), reps, 31, threads);
+    println!(
+        "  energy ratio AlgoT/AlgoE: model {:.4}, simulated {:.4}",
+        cmp.energy_ratio(),
+        mc_t.energy.mean() / mc_e.energy.mean()
+    );
+    println!(
+        "  time ratio   AlgoE/AlgoT: model {:.4}, simulated {:.4}",
+        cmp.time_ratio(),
+        mc_e.makespan.mean() / mc_t.makespan.mean()
+    );
+}

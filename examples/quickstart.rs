@@ -1,0 +1,50 @@
+//! Quickstart: compute the paper's optimal checkpoint periods for an
+//! Exascale-like platform and print the time/energy trade-off.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use ckpt_period::model::energy::{e_final, t_energy_opt};
+use ckpt_period::model::params::{CheckpointParams, PowerParams, Scenario};
+use ckpt_period::model::ratios::compare;
+use ckpt_period::model::time::{daly, t_final, t_time_opt, young};
+use ckpt_period::util::table::{fnum, Table};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // The paper's §4 reference platform: C = R = 10 min, D = 1 min,
+    // half-overlapped checkpoints, P_Static = P_Cal = 10 mW/node,
+    // P_IO = 100 mW/node (rho = 5.5), MTBF 300 min (~220k nodes of
+    // Jaguar-class hardware), and a one-week application.
+    let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, 0.5)?;
+    let power = PowerParams::new(10.0, 10.0, 100.0, 0.0)?;
+    let scenario = Scenario::new(ckpt, power, 300.0, 7.0 * 24.0 * 60.0)?;
+
+    println!("platform: mu = {} min, rho = {}", scenario.mu, power.rho());
+    println!("application: T_base = {} min\n", scenario.t_base);
+
+    let mut table = Table::new(&["strategy", "period_min", "makespan_min", "energy_mW_min"]);
+    for (name, period) in [
+        ("AlgoT (Eq. 1)", t_time_opt(&scenario)?),
+        ("AlgoE (quadratic root)", t_energy_opt(&scenario)?),
+        ("Young", scenario.clamp_period(young(&scenario))?),
+        ("Daly", scenario.clamp_period(daly(&scenario))?),
+    ] {
+        table.row(&[
+            name.to_string(),
+            fnum(period, 2),
+            fnum(t_final(&scenario, period), 0),
+            fnum(e_final(&scenario, period), 0),
+        ]);
+    }
+    println!("{}", table.render());
+
+    let cmp = compare(&scenario)?;
+    println!(
+        "checkpointing at the energy-optimal period saves {:.1}% energy\n\
+         at the cost of {:.1}% longer execution — the paper's core trade-off.",
+        cmp.energy_gain_pct(),
+        cmp.time_overhead_pct()
+    );
+    Ok(())
+}

@@ -1,0 +1,156 @@
+"""AOT compiler: lower the L2/L1 program once to HLO text artifacts.
+
+Run via ``make artifacts`` (or ``python -m compile.aot --out-dir
+../artifacts`` from ``python/``). Python never runs again after this —
+the rust binary loads the artifacts through PJRT.
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts written:
+  train_step.hlo.txt  — one Adam step of the transformer LM
+  eval_loss.hlo.txt   — forward-only loss
+  sweep_eval.hlo.txt  — Pallas period-sweep kernel over a 1024-point grid
+  params.bin          — initial flat f32 parameter vector (little-endian)
+  meta.json           — shapes, dtypes, layout manifest, config, seeds
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from .kernels import sweep as sweep_mod
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(cfg: model_mod.TransformerConfig, out_dir: str) -> dict:
+    entries = model_mod.jitted_entry_points(cfg)
+    meta_fns = {}
+    for name, (fn, specs) in entries.items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta_fns[name] = {
+            "path": os.path.basename(path),
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+            ],
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    return meta_fns
+
+
+def lower_sweep(grid_n: int, out_dir: str) -> dict:
+    f32 = jnp.float32
+    t_spec = jax.ShapeDtypeStruct((grid_n,), f32)
+    p_spec = jax.ShapeDtypeStruct((sweep_mod.N_PARAMS,), f32)
+    lowered = jax.jit(
+        lambda t, p: sweep_mod.period_sweep(t, p)
+    ).lower(t_spec, p_spec)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, "sweep_eval.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+    return {
+        "path": os.path.basename(path),
+        "grid_n": grid_n,
+        "param_names": list(sweep_mod.PARAM_NAMES),
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+
+
+def dump_params(cfg: model_mod.TransformerConfig, seed: int, out_dir: str) -> dict:
+    theta = model_mod.init_theta(cfg, jax.random.PRNGKey(seed))
+    raw = bytes(memoryview(jnp.asarray(theta, jnp.float32)).cast("B"))
+    path = os.path.join(out_dir, "params.bin")
+    with open(path, "wb") as f:
+        f.write(raw)
+    print(f"wrote {path} ({len(raw)} bytes, {theta.shape[0]} params)")
+    manifest = []
+    off = 0
+    for name, shape in model_mod.param_manifest(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        manifest.append({"name": name, "shape": list(shape), "offset": off})
+        off += n
+    return {
+        "path": os.path.basename(path),
+        "n_params": int(theta.shape[0]),
+        "seed": seed,
+        "manifest": manifest,
+        "sha256": hashlib.sha256(raw).hexdigest(),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--grid-n", type=int, default=1024)
+    ap.add_argument("--seed", type=int, default=2013)
+    # Model size knobs (defaults match DESIGN.md).
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--n-layers", type=int, default=2)
+    ap.add_argument("--n-heads", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+
+    cfg = model_mod.TransformerConfig(
+        d_model=args.d_model,
+        n_layers=args.n_layers,
+        n_heads=args.n_heads,
+        seq=args.seq,
+        batch=args.batch,
+        d_mlp=4 * args.d_model,
+        lr=args.lr,
+    )
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    meta = {
+        "paper": "Aupy et al., Optimal Checkpointing Period: Time vs. Energy (2013)",
+        "jax_version": jax.__version__,
+        "config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers,
+            "seq": cfg.seq,
+            "batch": cfg.batch,
+            "d_mlp": cfg.d_mlp,
+            "lr": cfg.lr,
+        },
+        "functions": lower_model(cfg, args.out_dir),
+        "sweep": lower_sweep(args.grid_n, args.out_dir),
+        "params": dump_params(cfg, args.seed, args.out_dir),
+    }
+    meta_path = os.path.join(args.out_dir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

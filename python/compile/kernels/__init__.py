@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the L2 HLO).
+
+- ``matmul``: MXU-tiled matrix multiply with a custom VJP so the L2
+  training step differentiates through it.
+- ``sweep``: the paper's T_final/E_final formulas evaluated over a dense
+  grid of candidate periods (the figure harness's hot loop).
+- ``ref``: pure-jnp oracles for both, used by pytest.
+"""
+
+from .matmul import matmul, pallas_matmul
+from .sweep import period_sweep
+
+__all__ = ["matmul", "pallas_matmul", "period_sweep"]

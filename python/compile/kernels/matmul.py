@@ -1,0 +1,119 @@
+"""Pallas tiled matmul (Layer 1).
+
+The transformer's dense layers (QKV/output projections, MLP, logits) all
+route through this kernel, so the training step's compute hot-spot lowers
+to an explicitly tiled program.
+
+TPU mapping (DESIGN.md §7): each grid cell loads an ``(bm, K)`` × ``(K,
+bn)`` pair of VMEM-resident tiles and issues one MXU contraction with
+``preferred_element_type=float32`` accumulation. The BlockSpec index maps
+express the HBM→VMEM schedule; K is kept un-tiled because every K we use
+(≤ 512) fits VMEM comfortably (see the VMEM budget check below).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel runs through the Pallas interpreter and lowers
+to plain HLO — numerically identical, structurally the same program.
+
+``matmul`` wraps the kernel in a ``jax.custom_vjp`` whose backward pass
+reuses the same kernel (dX = dO·Wᵀ, dW = Xᵀ·dO), making the L2 training
+step differentiable through Pallas.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget per core in bytes (TPU v4-class scratchpad); the tile
+# chooser refuses configurations whose working set exceeds a safe half of
+# it. This is the structural knob the §Perf pass tunes.
+VMEM_BYTES = 16 * 1024 * 1024
+VMEM_SAFETY = 0.5
+
+# MXU systolic array is 128x128: column tiles stick to the 128-lane
+# width; row tiles go as large as VMEM allows — a bigger bm amortises the
+# weight-tile (K, bn) load across more rows and, on the CPU-interpret
+# path our AOT artifact actually executes, cuts the per-grid-cell
+# dispatch overhead ~3x (see EXPERIMENTS.md §Perf L1-1 for the sweep).
+ROW_TILES = (512, 256, 128, 64, 32, 16, 8)
+COL_TILES = (128, 64, 32, 16, 8)
+# Kept for backward compatibility with older callers/tests.
+PREFERRED_TILES = COL_TILES
+
+
+def _pick_tile(dim: int, preferred) -> int:
+    """Largest preferred tile that divides ``dim`` (falls back to dim)."""
+    for t in preferred:
+        if dim % t == 0 and t <= dim:
+            return t
+    return dim
+
+
+def tile_config(m: int, k: int, n: int):
+    """Choose (bm, bn) tiles and check the VMEM working set.
+
+    Returns ``(bm, bn, vmem_bytes)``. Raises if even the smallest tiling
+    exceeds the VMEM budget (callers should then tile K too — our shapes
+    never need it).
+    """
+    bm, bn = _pick_tile(m, ROW_TILES), _pick_tile(n, COL_TILES)
+    while True:
+        vmem = 4 * (bm * k + k * bn + bm * bn)  # f32 operand+output tiles
+        if vmem <= VMEM_BYTES * VMEM_SAFETY:
+            return bm, bn, vmem
+        if bm >= bn and bm > 8:
+            bm //= 2
+        elif bn > 8:
+            bn //= 2
+        else:
+            raise ValueError(
+                f"matmul tile ({bm}x{k})x({k}x{bn}) exceeds VMEM budget"
+            )
+
+
+def _mm_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pallas_matmul(x, y, *, interpret=True):
+    """Raw Pallas matmul: ``x @ y`` with grid tiling, no VJP."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {y.shape}"
+    bm, bn, _ = tile_config(m, k, n)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, y)
+
+
+@jax.custom_vjp
+def matmul(x, y):
+    """Differentiable Pallas matmul used by the L2 model."""
+    return pallas_matmul(x, y)
+
+
+def _matmul_fwd(x, y):
+    return pallas_matmul(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    # Both cotangents go through the same Pallas kernel.
+    dx = pallas_matmul(g, y.T)
+    dy = pallas_matmul(x.T, g)
+    return dx, dy
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal at build time: pytest compares
+every kernel against its oracle over hypothesis-generated shapes and
+parameter draws before ``aot.py`` is allowed to emit artifacts
+(``make artifacts`` runs the tests first).
+"""
+
+import jax.numpy as jnp
+
+from .sweep import N_PARAMS
+
+
+def ref_matmul(x, y):
+    """Oracle for kernels.matmul."""
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def ref_period_sweep(t_grid, params):
+    """Oracle for kernels.period_sweep — straight transcription of
+    §3.1/§3.2 with numpy-style broadcasting (no Pallas, no blocking)."""
+    assert params.shape == (N_PARAMS,)
+    c, r, d, omega, mu, t_base, p_static, p_cal, p_io, p_down = [
+        params[i] for i in range(N_PARAMS)
+    ]
+    t = t_grid.astype(jnp.float32)
+
+    a = (1.0 - omega) * c
+    b = 1.0 - (d + r + omega * c) / mu
+    hi = 2.0 * mu * b
+    in_domain = (t > a) & (t < hi)
+    t_safe = jnp.where(in_domain, t, a + 1.0)
+
+    t_final = t_base * t_safe / ((t_safe - a) * (b - t_safe / (2.0 * mu)))
+    failures = t_final / mu
+    re_exec = (
+        omega * c
+        + (t_safe**2 - c**2) / (2.0 * t_safe)
+        + omega * c**2 / (2.0 * t_safe)
+    )
+    t_cal = t_base + failures * re_exec
+    t_io = t_base * c / (t_safe - a) + failures * (r + c**2 / (2.0 * t_safe))
+    t_down = failures * d
+    e_final = t_cal * p_cal + t_io * p_io + t_down * p_down + t_final * p_static
+
+    inf = jnp.float32(jnp.inf)
+    return (
+        jnp.where(in_domain, t_final, inf),
+        jnp.where(in_domain, e_final, inf),
+    )

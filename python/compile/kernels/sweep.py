@@ -1,0 +1,119 @@
+"""Pallas period-sweep kernel (Layer 1).
+
+Evaluates the paper's closed forms ``T_final(T)`` and ``E_final(T)``
+(§3.1–§3.2) for a dense grid of candidate periods in one shot. This is
+the figure harness's inner loop, expressed as an elementwise Pallas
+program: the grid of periods is tiled into VMEM-sized blocks and the ten
+scenario scalars are broadcast to every block.
+
+The rust coordinator loads the lowered artifact
+(``artifacts/sweep_eval.hlo.txt``) and cross-checks its own
+``model::{time,energy}`` implementation against it through PJRT — a
+three-layer consistency test (rust float math vs XLA vs the pure-jnp
+oracle in ``ref.py``).
+
+Out-of-domain periods (``T ≤ (1−ω)C`` or ``T ≥ 2μb``) evaluate to +inf,
+mirroring ``model::time::t_final``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Scenario parameter vector layout (keep in sync with
+# rust/src/runtime/artifacts.rs and ref.py):
+PARAM_NAMES = (
+    "c",
+    "r",
+    "d",
+    "omega",
+    "mu",
+    "t_base",
+    "p_static",
+    "p_cal",
+    "p_io",
+    "p_down",
+)
+N_PARAMS = len(PARAM_NAMES)
+
+# Periods per Pallas block: 128 f64-ish f32 lanes is one VPU-friendly
+# vector register row; the whole block is a few KB of VMEM.
+BLOCK = 128
+
+
+def _sweep_math(t, p):
+    """Shared elementwise math (used by the kernel body on refs)."""
+    c, r, d, omega, mu = p[0], p[1], p[2], p[3], p[4]
+    t_base, p_static, p_cal, p_io, p_down = p[5], p[6], p[7], p[8], p[9]
+
+    a = (1.0 - omega) * c
+    b = 1.0 - (d + r + omega * c) / mu
+    hi = 2.0 * mu * b
+
+    in_domain = (t > a) & (t < hi)
+    # Guard the arithmetic so out-of-domain lanes do not produce NaNs
+    # that would poison `where`.
+    t_safe = jnp.where(in_domain, t, a + 1.0)
+
+    denom = (t_safe - a) * (b - t_safe / (2.0 * mu))
+    t_final = t_base * t_safe / denom
+
+    failures = t_final / mu
+    re_exec = (
+        omega * c
+        + (t_safe * t_safe - c * c) / (2.0 * t_safe)
+        + omega * c * c / (2.0 * t_safe)
+    )
+    t_cal = t_base + failures * re_exec
+    t_io = t_base * c / (t_safe - a) + failures * (r + c * c / (2.0 * t_safe))
+    t_down = failures * d
+    e_final = (
+        t_cal * p_cal + t_io * p_io + t_down * p_down + t_final * p_static
+    )
+
+    inf = jnp.float32(jnp.inf)
+    return (
+        jnp.where(in_domain, t_final, inf),
+        jnp.where(in_domain, e_final, inf),
+    )
+
+
+def _sweep_kernel(t_ref, p_ref, tf_ref, ef_ref):
+    tf, ef = _sweep_math(t_ref[...], p_ref[...])
+    tf_ref[...] = tf
+    ef_ref[...] = ef
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def period_sweep(t_grid, params, *, interpret=True):
+    """Evaluate (T_final, E_final) for every period in ``t_grid``.
+
+    Args:
+      t_grid: f32[n] candidate periods; n must be a multiple of BLOCK.
+      params: f32[N_PARAMS] scenario vector (see PARAM_NAMES).
+
+    Returns:
+      (t_final f32[n], e_final f32[n]).
+    """
+    (n,) = t_grid.shape
+    assert n % BLOCK == 0, f"grid size {n} not a multiple of {BLOCK}"
+    assert params.shape == (N_PARAMS,)
+    return pl.pallas_call(
+        _sweep_kernel,
+        grid=(n // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((N_PARAMS,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(t_grid, params)

@@ -1,0 +1,242 @@
+"""Layer 2: the checkpointed application — a byte-level transformer LM.
+
+This is the "parallel scientific application" whose execution the paper's
+coordinated-checkpointing model protects (DESIGN.md §6). The rust
+coordinator trains it through PJRT: one AOT-lowered ``train_step`` call
+per step, with the parameter/optimizer state living in rust-owned buffers
+that the checkpoint manager serializes on the paper's period.
+
+Design constraints from the three-layer architecture:
+
+* Every dense contraction routes through the Layer-1 Pallas ``matmul``
+  kernel so the training step's hot-spot is an explicitly tiled program.
+* All model/optimizer state is carried as ONE flat f32 vector (``theta``
+  plus Adam's ``m``/``v``): the HLO signature stays six buffers wide,
+  which keeps the rust runtime simple and the checkpoint format trivial
+  (three contiguous f32 blobs + a step counter).
+* Shapes are static: batch and sequence length are baked at AOT time.
+
+The model is a standard pre-LN causal transformer, sized so that a few
+hundred CPU training steps complete in minutes (~470k parameters by
+default — the end-to-end example's loss curve is the deliverable, not
+the parameter count).
+"""
+
+import dataclasses
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    vocab: int = 256
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    seq: int = 64
+    batch: int = 8
+    d_mlp: int = 512
+    lr: float = 3e-3
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999
+    adam_eps: float = 1e-8
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# --------------------------------------------------------------------------
+# Parameter layout: a flat f32 vector with a static (name, shape) manifest.
+# --------------------------------------------------------------------------
+
+
+def param_manifest(cfg: TransformerConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list defining the flat layout."""
+    d, v, s, h = cfg.d_model, cfg.vocab, cfg.seq, cfg.d_mlp
+    manifest = [("embed", (v, d)), ("pos_embed", (s, d))]
+    for i in range(cfg.n_layers):
+        manifest += [
+            (f"l{i}.ln1_g", (d,)),
+            (f"l{i}.ln1_b", (d,)),
+            (f"l{i}.wqkv", (d, 3 * d)),
+            (f"l{i}.bqkv", (3 * d,)),
+            (f"l{i}.wo", (d, d)),
+            (f"l{i}.bo", (d,)),
+            (f"l{i}.ln2_g", (d,)),
+            (f"l{i}.ln2_b", (d,)),
+            (f"l{i}.wmlp1", (d, h)),
+            (f"l{i}.bmlp1", (h,)),
+            (f"l{i}.wmlp2", (h, d)),
+            (f"l{i}.bmlp2", (d,)),
+        ]
+    manifest += [
+        ("ln_f_g", (d,)),
+        ("ln_f_b", (d,)),
+        ("w_logits", (d, v)),
+        ("b_logits", (v,)),
+    ]
+    return manifest
+
+
+def param_count(cfg: TransformerConfig) -> int:
+    total = 0
+    for _, shape in param_manifest(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        total += n
+    return total
+
+
+def unflatten(cfg: TransformerConfig, theta) -> Dict[str, jnp.ndarray]:
+    """Static slicing of the flat vector into named arrays (fused away by
+    XLA — zero runtime cost)."""
+    params = {}
+    off = 0
+    for name, shape in param_manifest(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        params[name] = theta[off : off + n].reshape(shape)
+        off += n
+    assert off == theta.shape[0], (off, theta.shape)
+    return params
+
+
+def init_theta(cfg: TransformerConfig, key) -> jnp.ndarray:
+    """Initialise the flat parameter vector.
+
+    Scaled-normal for projections, zeros for biases, ones for LN gains —
+    the standard GPT-ish recipe.
+    """
+    chunks = []
+    for name, shape in param_manifest(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_g",)):
+            arr = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("_b", "bqkv", "bo", "bmlp1", "bmlp2", "b_logits")):
+            arr = jnp.zeros(shape, jnp.float32)
+        elif name in ("embed", "pos_embed"):
+            arr = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            arr = jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(
+                jnp.float32(fan_in)
+            )
+        chunks.append(arr.reshape(-1))
+    return jnp.concatenate(chunks)
+
+
+# --------------------------------------------------------------------------
+# Forward pass.
+# --------------------------------------------------------------------------
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mean = x.mean(axis=-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * g + b
+
+
+def _dense(x2d, w, b):
+    """[N, in] @ [in, out] + b through the Pallas kernel."""
+    return matmul(x2d, w) + b
+
+
+def forward(cfg: TransformerConfig, params: Dict[str, jnp.ndarray], tokens):
+    """tokens i32[B, S] -> logits f32[B, S, V]."""
+    b, s = tokens.shape
+    d = cfg.d_model
+    x = params["embed"][tokens] + params["pos_embed"][None, :s, :]
+
+    causal = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    for i in range(cfg.n_layers):
+        p = lambda k: params[f"l{i}.{k}"]
+        # Attention block.
+        h = _layer_norm(x, p("ln1_g"), p("ln1_b"))
+        qkv = _dense(h.reshape(b * s, d), p("wqkv"), p("bqkv"))
+        qkv = qkv.reshape(b, s, 3, cfg.n_heads, cfg.d_head)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(
+            jnp.float32(cfg.d_head)
+        )
+        scores = jnp.where(causal[None, None, :, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b * s, d)
+        x = x + _dense(ctx, p("wo"), p("bo")).reshape(b, s, d)
+        # MLP block.
+        h = _layer_norm(x, p("ln2_g"), p("ln2_b"))
+        h = _dense(h.reshape(b * s, d), p("wmlp1"), p("bmlp1"))
+        h = jax.nn.gelu(h)
+        x = x + _dense(h, p("wmlp2"), p("bmlp2")).reshape(b, s, d)
+
+    x = _layer_norm(x, params["ln_f_g"], params["ln_f_b"])
+    logits = _dense(x.reshape(b * s, d), params["w_logits"], params["b_logits"])
+    return logits.reshape(b, s, cfg.vocab)
+
+
+def loss_fn(cfg: TransformerConfig, theta, x_tokens, y_tokens):
+    """Mean next-token cross-entropy."""
+    params = unflatten(cfg, theta)
+    logits = forward(cfg, params, x_tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y_tokens[..., None], axis=-1)
+    return nll.mean()
+
+
+# --------------------------------------------------------------------------
+# Training step (Adam) and eval — the two AOT entry points.
+# --------------------------------------------------------------------------
+
+
+def train_step(cfg: TransformerConfig, theta, m, v, step, x_tokens, y_tokens):
+    """One Adam step. All state flat; returns the updated state + loss.
+
+    Signature (the artifact's parameter order the rust runtime relies on):
+      theta f32[P], m f32[P], v f32[P], step f32[], x i32[B,S], y i32[B,S]
+      -> (theta' f32[P], m' f32[P], v' f32[P], step' f32[], loss f32[])
+    """
+    loss, grad = jax.value_and_grad(lambda t: loss_fn(cfg, t, x_tokens, y_tokens))(
+        theta
+    )
+    step = step + 1.0
+    m = cfg.adam_b1 * m + (1.0 - cfg.adam_b1) * grad
+    v = cfg.adam_b2 * v + (1.0 - cfg.adam_b2) * grad * grad
+    mhat = m / (1.0 - cfg.adam_b1**step)
+    vhat = v / (1.0 - cfg.adam_b2**step)
+    theta = theta - cfg.lr * mhat / (jnp.sqrt(vhat) + cfg.adam_eps)
+    return theta, m, v, step, loss
+
+
+def eval_loss(cfg: TransformerConfig, theta, x_tokens, y_tokens):
+    """Forward-only loss (used by the coordinator to verify restored
+    checkpoints and to log validation loss)."""
+    return (loss_fn(cfg, theta, x_tokens, y_tokens),)
+
+
+def jitted_entry_points(cfg: TransformerConfig):
+    """The two functions ``aot.py`` lowers, with shapes baked in."""
+    p = param_count(cfg)
+    f32 = jnp.float32
+    i32 = jnp.int32
+    theta_s = jax.ShapeDtypeStruct((p,), f32)
+    scalar_s = jax.ShapeDtypeStruct((), f32)
+    tok_s = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), i32)
+
+    def train_fn(theta, m, v, step, x, y):
+        return train_step(cfg, theta, m, v, step, x, y)
+
+    def eval_fn(theta, x, y):
+        return eval_loss(cfg, theta, x, y)
+
+    return {
+        "train_step": (train_fn, (theta_s, theta_s, theta_s, scalar_s, tok_s, tok_s)),
+        "eval_loss": (eval_fn, (theta_s, tok_s, tok_s)),
+    }

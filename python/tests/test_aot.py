@@ -1,0 +1,89 @@
+"""AOT pipeline: lowering produces loadable, well-formed artifacts."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+PY_DIR = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    # Tiny model so the test lowers in seconds.
+    subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out-dir",
+            str(out),
+            "--d-model",
+            "32",
+            "--n-layers",
+            "1",
+            "--n-heads",
+            "2",
+            "--seq",
+            "16",
+            "--batch",
+            "4",
+            "--grid-n",
+            "256",
+        ],
+        cwd=PY_DIR,
+        check=True,
+    )
+    return out
+
+
+def test_all_artifacts_exist(artifacts):
+    for name in (
+        "train_step.hlo.txt",
+        "eval_loss.hlo.txt",
+        "sweep_eval.hlo.txt",
+        "params.bin",
+        "meta.json",
+    ):
+        assert (artifacts / name).exists(), name
+
+
+def test_hlo_text_is_parseable_shape(artifacts):
+    for name in ("train_step", "eval_loss", "sweep_eval"):
+        text = (artifacts / f"{name}.hlo.txt").read_text()
+        assert "ENTRY" in text, name
+        assert "HloModule" in text, name
+
+
+def test_meta_consistency(artifacts):
+    meta = json.loads((artifacts / "meta.json").read_text())
+    n = meta["params"]["n_params"]
+    raw = (artifacts / "params.bin").read_bytes()
+    assert len(raw) == 4 * n
+    theta = np.frombuffer(raw, np.float32)
+    assert np.isfinite(theta).all()
+    # Manifest offsets are contiguous and complete.
+    off = 0
+    for entry in meta["params"]["manifest"]:
+        assert entry["offset"] == off
+        off += int(np.prod(entry["shape"]))
+    assert off == n
+    # train_step inputs: theta, m, v, step, x, y.
+    ins = meta["functions"]["train_step"]["inputs"]
+    assert len(ins) == 6
+    assert ins[0]["shape"] == [n]
+    assert ins[3]["shape"] == []
+    assert ins[4]["dtype"] == "int32"
+    assert meta["sweep"]["param_names"][0] == "c"
+
+
+def test_train_step_hlo_has_flat_signature(artifacts):
+    text = (artifacts / "train_step.hlo.txt").read_text()
+    meta = json.loads((artifacts / "meta.json").read_text())
+    n = meta["params"]["n_params"]
+    # Entry computation takes three f32[n] state vectors.
+    assert text.count(f"f32[{n}]") >= 3

@@ -1,0 +1,161 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps the matmul shapes and the sweep kernel's scenario
+parameters; numerics are compared with assert_allclose. This is the gate
+``make artifacts`` runs before emitting HLO.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, pallas_matmul, period_sweep
+from compile.kernels.matmul import tile_config, VMEM_BYTES, VMEM_SAFETY
+from compile.kernels.ref import ref_matmul, ref_period_sweep
+from compile.kernels.sweep import BLOCK, N_PARAMS
+
+
+# ---------------------------------------------------------------- matmul
+
+dims = st.sampled_from([8, 16, 24, 32, 64, 128, 256])
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, seed):
+    key = jax.random.PRNGKey(seed)
+    kx, ky = jax.random.split(key)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    y = jax.random.normal(ky, (k, n), jnp.float32)
+    out = pallas_matmul(x, y)
+    np.testing.assert_allclose(out, ref_matmul(x, y), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_nonsquare_large():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (512, 128), jnp.float32)
+    y = jax.random.normal(key, (128, 384), jnp.float32)
+    np.testing.assert_allclose(
+        pallas_matmul(x, y), ref_matmul(x, y), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_matmul_rejects_contraction_mismatch():
+    x = jnp.zeros((8, 16), jnp.float32)
+    y = jnp.zeros((8, 16), jnp.float32)
+    with pytest.raises(AssertionError):
+        pallas_matmul(x, y)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.sampled_from([8, 64, 128]), seed=st.integers(0, 2**31 - 1))
+def test_matmul_custom_vjp_matches_autodiff(m, seed):
+    key = jax.random.PRNGKey(seed)
+    kx, ky = jax.random.split(key)
+    x = jax.random.normal(kx, (m, 32), jnp.float32)
+    y = jax.random.normal(ky, (32, 16), jnp.float32)
+
+    def f_pallas(x, y):
+        return (matmul(x, y) ** 2).sum()
+
+    def f_ref(x, y):
+        return (ref_matmul(x, y) ** 2).sum()
+
+    gx, gy = jax.grad(f_pallas, argnums=(0, 1))(x, y)
+    rx, ry = jax.grad(f_ref, argnums=(0, 1))(x, y)
+    np.testing.assert_allclose(gx, rx, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gy, ry, rtol=1e-4, atol=1e-4)
+
+
+def test_tile_config_divides_and_fits_vmem():
+    for m, k, n in [(512, 128, 384), (512, 512, 128), (8, 8, 8), (128, 128, 256)]:
+        bm, bn, vmem = tile_config(m, k, n)
+        assert m % bm == 0 and n % bn == 0
+        assert vmem <= VMEM_BYTES * VMEM_SAFETY
+
+
+def test_tile_config_prefers_mxu_sized_tiles():
+    # Rows: as large as VMEM allows (amortises weight-tile loads and
+    # grid dispatch); columns: the 128-lane MXU width.
+    bm, bn, _ = tile_config(512, 128, 384)
+    assert bm == 512
+    assert bn == 128
+
+
+# ----------------------------------------------------------------- sweep
+
+
+def paper_params(mu=300.0, rho=5.5, omega=0.5, c=10.0, r=10.0, d=1.0):
+    alpha = 1.0
+    beta = rho * (1.0 + alpha) - 1.0
+    return np.array(
+        [c, r, d, omega, mu, 10_000.0, 1.0, alpha, beta, 0.0], np.float32
+    )
+
+
+def test_sweep_matches_ref_paper_point():
+    t = np.linspace(11.0, 500.0, 1024, dtype=np.float32)
+    p = paper_params()
+    tf, ef = period_sweep(jnp.asarray(t), jnp.asarray(p))
+    rtf, ref_ = ref_period_sweep(jnp.asarray(t), jnp.asarray(p))
+    np.testing.assert_allclose(tf, rtf, rtol=1e-5)
+    np.testing.assert_allclose(ef, ref_, rtol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    mu=st.floats(200.0, 5000.0),
+    rho=st.floats(1.0, 20.0),
+    omega=st.floats(0.0, 1.0),
+    c=st.floats(1.0, 15.0),
+    blocks=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sweep_matches_ref_hypothesis(mu, rho, omega, c, blocks, seed):
+    n = BLOCK * blocks
+    rng = np.random.default_rng(seed)
+    t = rng.uniform(0.1, 3.0 * mu, n).astype(np.float32)
+    p = paper_params(mu=mu, rho=rho, omega=omega, c=c, r=c, d=0.1 * c)
+    tf, ef = period_sweep(jnp.asarray(t), jnp.asarray(p))
+    rtf, ref_ = ref_period_sweep(jnp.asarray(t), jnp.asarray(p))
+    np.testing.assert_allclose(tf, rtf, rtol=2e-5, atol=1e-3)
+    np.testing.assert_allclose(ef, ref_, rtol=2e-5, atol=1e-3)
+
+
+def test_sweep_out_of_domain_is_inf():
+    p = paper_params()
+    a = (1.0 - p[3]) * p[0]
+    hi = 2.0 * p[4] * (1.0 - (p[2] + p[1] + p[3] * p[0]) / p[4])
+    t = np.full(BLOCK, a * 0.5, np.float32)
+    t[1] = hi * 1.5
+    t[2] = 100.0  # in domain
+    tf, ef = period_sweep(jnp.asarray(t), jnp.asarray(p))
+    assert np.isinf(tf[0]) and np.isinf(ef[0])
+    assert np.isinf(tf[1]) and np.isinf(ef[1])
+    assert np.isfinite(tf[2]) and np.isfinite(ef[2])
+
+
+def test_sweep_grid_argmin_near_eq1():
+    # The grid argmin of T_final should sit near Eq. 1's
+    # sqrt(2(1-w)C(mu-(D+R+wC))) = sqrt(2840) for the paper's Fig 1 point.
+    p = paper_params()
+    t = np.linspace(10.5, 300.0, 1024, dtype=np.float32)
+    tf, _ = period_sweep(jnp.asarray(t), jnp.asarray(p))
+    t_opt = float(t[int(np.argmin(np.asarray(tf)))])
+    assert abs(t_opt - np.sqrt(2840.0)) < 2.0, t_opt
+
+
+def test_sweep_requires_block_multiple():
+    p = paper_params()
+    with pytest.raises(AssertionError):
+        period_sweep(jnp.zeros(100, jnp.float32), jnp.asarray(p))
+
+
+def test_sweep_param_vector_arity():
+    assert N_PARAMS == 10
+    with pytest.raises(AssertionError):
+        period_sweep(
+            jnp.zeros(BLOCK, jnp.float32), jnp.zeros(N_PARAMS + 1, jnp.float32)
+        )

@@ -1,0 +1,153 @@
+"""L2 correctness: transformer shapes, flat-layout invariants, and a
+short end-to-end training sanity run (loss must drop on learnable data).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def tiny_cfg(**kw):
+    base = dict(
+        vocab=64, d_model=32, n_heads=2, n_layers=1, seq=16, batch=4, d_mlp=64,
+        lr=1e-2,
+    )
+    base.update(kw)
+    return M.TransformerConfig(**base)
+
+
+def test_param_count_matches_manifest():
+    cfg = tiny_cfg()
+    total = sum(int(np.prod(s)) for _, s in M.param_manifest(cfg))
+    assert M.param_count(cfg) == total
+    theta = M.init_theta(cfg, jax.random.PRNGKey(0))
+    assert theta.shape == (total,)
+
+
+def test_default_config_size():
+    cfg = M.TransformerConfig()
+    n = M.param_count(cfg)
+    assert 300_000 < n < 800_000, n  # ~470k by design
+
+
+def test_unflatten_roundtrip_offsets():
+    cfg = tiny_cfg()
+    theta = jnp.arange(M.param_count(cfg), dtype=jnp.float32)
+    params = M.unflatten(cfg, theta)
+    off = 0
+    for name, shape in M.param_manifest(cfg):
+        n = int(np.prod(shape))
+        np.testing.assert_array_equal(
+            np.asarray(params[name]).reshape(-1),
+            np.arange(off, off + n, dtype=np.float32),
+        )
+        off += n
+
+
+def test_init_scheme():
+    cfg = tiny_cfg()
+    params = M.unflatten(cfg, M.init_theta(cfg, jax.random.PRNGKey(1)))
+    assert np.allclose(params["l0.ln1_g"], 1.0)
+    assert np.allclose(params["l0.bqkv"], 0.0)
+    assert 0.0 < np.std(np.asarray(params["l0.wqkv"])) < 1.0
+    assert np.std(np.asarray(params["embed"])) < 0.05
+
+
+def test_forward_shapes_and_finiteness():
+    cfg = tiny_cfg()
+    theta = M.init_theta(cfg, jax.random.PRNGKey(2))
+    params = M.unflatten(cfg, theta)
+    toks = jnp.zeros((cfg.batch, cfg.seq), jnp.int32)
+    logits = M.forward(cfg, params, toks)
+    assert logits.shape == (cfg.batch, cfg.seq, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_causality():
+    # Changing a future token must not affect past logits.
+    cfg = tiny_cfg()
+    theta = M.init_theta(cfg, jax.random.PRNGKey(3))
+    params = M.unflatten(cfg, theta)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq)).astype(np.int32)
+    toks2 = toks.copy()
+    toks2[:, -1] = (toks2[:, -1] + 1) % cfg.vocab
+    l1 = M.forward(cfg, params, jnp.asarray(toks))
+    l2 = M.forward(cfg, params, jnp.asarray(toks2))
+    np.testing.assert_allclose(l1[:, :-1], l2[:, :-1], atol=1e-5)
+    assert not np.allclose(l1[:, -1], l2[:, -1], atol=1e-5)
+
+
+def test_initial_loss_near_log_vocab():
+    cfg = tiny_cfg()
+    theta = M.init_theta(cfg, jax.random.PRNGKey(4))
+    rng = np.random.default_rng(1)
+    x = rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq)).astype(np.int32)
+    y = rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq)).astype(np.int32)
+    loss = M.loss_fn(cfg, theta, jnp.asarray(x), jnp.asarray(y))
+    assert abs(float(loss) - np.log(cfg.vocab)) < 0.5
+
+
+def synthetic_batch(cfg, rng):
+    """Learnable data: y = (3x + 7) mod vocab — a lookup table a 1-layer
+    transformer memorises quickly."""
+    x = rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq)).astype(np.int32)
+    y = ((3 * x + 7) % cfg.vocab).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def test_train_step_decreases_loss():
+    cfg = tiny_cfg()
+    theta = M.init_theta(cfg, jax.random.PRNGKey(5))
+    p = M.param_count(cfg)
+    m = jnp.zeros(p, jnp.float32)
+    v = jnp.zeros(p, jnp.float32)
+    step = jnp.float32(0.0)
+    rng = np.random.default_rng(2)
+
+    step_fn = jax.jit(lambda *a: M.train_step(cfg, *a))
+    first = None
+    loss = None
+    for _ in range(40):
+        x, y = synthetic_batch(cfg, rng)
+        theta, m, v, step, loss = step_fn(theta, m, v, step, x, y)
+        if first is None:
+            first = float(loss)
+    assert float(step) == 40.0
+    assert float(loss) < first * 0.7, (first, float(loss))
+
+
+def test_train_step_deterministic():
+    cfg = tiny_cfg()
+    theta0 = M.init_theta(cfg, jax.random.PRNGKey(6))
+    p = M.param_count(cfg)
+    z = jnp.zeros(p, jnp.float32)
+    rng = np.random.default_rng(3)
+    x, y = synthetic_batch(cfg, rng)
+    out1 = M.train_step(cfg, theta0, z, z, jnp.float32(0.0), x, y)
+    out2 = M.train_step(cfg, theta0, z, z, jnp.float32(0.0), x, y)
+    for a, b in zip(out1, out2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_eval_loss_matches_loss_fn():
+    cfg = tiny_cfg()
+    theta = M.init_theta(cfg, jax.random.PRNGKey(7))
+    rng = np.random.default_rng(4)
+    x, y = synthetic_batch(cfg, rng)
+    (e,) = M.eval_loss(cfg, theta, x, y)
+    l = M.loss_fn(cfg, theta, x, y)
+    np.testing.assert_allclose(np.asarray(e), np.asarray(l))
+
+
+def test_entry_points_shapes():
+    cfg = tiny_cfg()
+    eps = M.jitted_entry_points(cfg)
+    assert set(eps) == {"train_step", "eval_loss"}
+    fn, specs = eps["train_step"]
+    assert len(specs) == 6
+    assert specs[0].shape == (M.param_count(cfg),)
+    assert specs[4].shape == (cfg.batch, cfg.seq)

@@ -1,0 +1,66 @@
+//! End-to-end runtime bench: PJRT train-step latency, checkpoint
+//! save/restore cost (the measured C and R), and a short coordinated run
+//! — the L3 hot path the §Perf pass optimises.
+//!
+//! Requires `make artifacts`.
+
+use ckpt_period::coordinator::checkpoint::CheckpointStore;
+use ckpt_period::coordinator::{Coordinator, CoordinatorConfig, PeriodPolicy};
+use ckpt_period::runtime::{ArtifactDir, Runtime, SweepEvaluator};
+use ckpt_period::util::bench::{black_box, Bench};
+use ckpt_period::workload::{TrainSession, TrainState};
+
+fn main() {
+    let mut b = Bench::new("end_to_end_runtime");
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let dir = ArtifactDir::open("artifacts").expect("run `make artifacts` first");
+
+    // Artifact compile time (cold-start cost, once per process).
+    b.run("compile_train_step_artifact", || {
+        black_box(rt.load_hlo_text(&dir.hlo_path("train_step")).unwrap())
+    });
+
+    let session = TrainSession::new(&rt, &dir, 1).unwrap();
+    let mut state = TrainState::initial(&dir).unwrap();
+
+    // The request-path hot loop: one PJRT train step (470k params),
+    // host-vector path vs the literal-resident §Perf path (L3-2).
+    b.run_units("train_step_pjrt", 1.0, || black_box(session.step(&mut state).unwrap()));
+    let mut lit_state = ckpt_period::workload::LitTrainState::from_state(&state);
+    b.run_units("train_step_pjrt_lit", 1.0, || {
+        black_box(session.step_lit(&mut lit_state).unwrap())
+    });
+    b.run_units("eval_loss_pjrt", 1.0, || black_box(session.eval(&state, 0).unwrap()));
+
+    // Checkpoint C and R on this machine (5.6 MB state).
+    let store =
+        CheckpointStore::new(std::env::temp_dir().join("ckpt_bench_store")).unwrap();
+    b.run_units("checkpoint_save_c", 1.0, || black_box(store.save(&state).unwrap()));
+    b.run_units("checkpoint_load_r", 1.0, || black_box(store.load().unwrap().1));
+
+    // Sweep artifact (1024-period grid through XLA).
+    let evaluator = SweepEvaluator::load(&rt, &dir).unwrap();
+    let s = ckpt_period::config::presets::fig1_scenario(300.0, 5.5);
+    let grid = evaluator.uniform_grid(&s);
+    b.run_units("sweep_eval_1024_via_xla", 1024.0, || {
+        black_box(evaluator.eval(&s, &grid).unwrap())
+    });
+
+    // A short coordinated run (failure-free, fixed period) to time the
+    // full control loop. Artifact compilation happens once in
+    // Coordinator::new, outside the timed closure — the loop is what we
+    // are measuring.
+    let ckpt_dir = std::env::temp_dir().join("ckpt_bench_e2e");
+    let mut cfg = CoordinatorConfig::new("artifacts", &ckpt_dir);
+    cfg.steps = 20;
+    cfg.inject_failures = false;
+    cfg.policy = PeriodPolicy::Fixed(0.5);
+    cfg.calibration_steps = 1;
+    let coord = Coordinator::new(&rt, cfg).unwrap();
+    b.run_units("coordinator_20steps_failure_free", 20.0, || {
+        let _ = std::fs::remove_dir_all(&ckpt_dir);
+        black_box(coord.run().unwrap())
+    });
+
+    b.finish();
+}

@@ -1,0 +1,33 @@
+//! Bench for Figure 1: regenerates the ρ-sweep series (4 μ-curves) and
+//! times the generation. Prints the series' summary so the bench output
+//! itself documents the reproduced figure.
+
+use ckpt_period::figures::fig1;
+use ckpt_period::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("fig1_rho_sweep");
+
+    for n in [60usize, 240, 960] {
+        let rhos = fig1::rho_grid(n);
+        b.run_units(&format!("series_{}pts", n * fig1::MUS.len()), (n * 4) as f64, || {
+            black_box(fig1::series(&rhos))
+        });
+    }
+
+    // Reproduce + report the figure itself (fixed resolution).
+    let pts = fig1::series(&fig1::rho_grid(60));
+    let p = pts
+        .iter()
+        .filter(|p| p.mu == 300.0)
+        .min_by(|a, b| (a.rho - 5.5).abs().partial_cmp(&(b.rho - 5.5).abs()).unwrap())
+        .unwrap();
+    println!(
+        "fig1 @ (mu=300, rho=5.5): energy ratio {:.4}, time ratio {:.4} \
+         (paper: ~1.25 / ~1.1)",
+        p.energy_ratio, p.time_ratio
+    );
+    let table = fig1::table(&pts);
+    let _ = table.write_csv(std::path::Path::new("target/bench-results/fig1.csv"));
+    b.finish();
+}

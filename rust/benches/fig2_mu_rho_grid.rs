@@ -1,0 +1,24 @@
+//! Bench for Figure 2: the (μ, ρ) ratio surfaces.
+
+use ckpt_period::figures::fig2;
+use ckpt_period::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("fig2_mu_rho_grid");
+
+    for n in [20usize, 40, 80] {
+        let mus = fig2::mu_grid(n);
+        let rhos = fig2::rho_grid(n);
+        b.run_units(&format!("surface_{n}x{n}"), (n * n) as f64, || {
+            black_box(fig2::grid(&mus, &rhos))
+        });
+    }
+
+    let cells = fig2::grid(&fig2::mu_grid(40), &fig2::rho_grid(40));
+    println!(
+        "fig2: max energy gain over surface {:.1}% (paper: >20% at mu=300)",
+        fig2::max_energy_gain_pct(&cells)
+    );
+    let _ = fig2::table(&cells).write_csv(std::path::Path::new("target/bench-results/fig2.csv"));
+    b.finish();
+}

@@ -1,0 +1,23 @@
+//! Bench for Figures 3a/3b: ratios vs node count at ρ = 5.5 and ρ = 7.
+
+use ckpt_period::figures::fig3;
+use ckpt_period::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("fig3_node_scaling");
+
+    for (rho, name) in [(5.5, "fig3a_rho5.5"), (7.0, "fig3b_rho7")] {
+        let nodes = fig3::node_grid(80);
+        b.run_units(name, nodes.len() as f64, || black_box(fig3::series(rho, &nodes)));
+        let pts = fig3::series(rho, &nodes);
+        let (gain, at) = fig3::peak_energy_gain(&pts);
+        println!(
+            "{name}: peak energy gain {gain:.1}% at N={at:.2e} \
+             (paper: up to 30% between 1e6 and 1e7); tail ratio {:.3}",
+            pts.last().unwrap().energy_ratio
+        );
+        let csv = format!("target/bench-results/{}.csv", &name[..5]);
+        let _ = fig3::table(&pts).write_csv(std::path::Path::new(&csv));
+    }
+    b.finish();
+}

@@ -1,0 +1,38 @@
+//! Micro-bench: the analytical model's hot paths (the figure harness
+//! evaluates these ~10⁶ times per surface).
+
+use ckpt_period::config::presets::fig1_scenario;
+use ckpt_period::model::energy::{de_quadratic, e_final, t_energy_opt_numeric, t_energy_opt_raw};
+use ckpt_period::model::time::{t_final, t_time_opt_raw};
+use ckpt_period::model::{compare, t_energy_opt};
+use ckpt_period::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("micro_model_eval");
+    let s = fig1_scenario(300.0, 5.5);
+
+    b.run_units("t_final_1k_evals", 1000.0, || {
+        let mut acc = 0.0;
+        for i in 0..1000 {
+            acc += t_final(&s, 11.0 + i as f64 * 0.5);
+        }
+        black_box(acc)
+    });
+
+    b.run_units("e_final_1k_evals", 1000.0, || {
+        let mut acc = 0.0;
+        for i in 0..1000 {
+            acc += e_final(&s, 11.0 + i as f64 * 0.5);
+        }
+        black_box(acc)
+    });
+
+    b.run("t_time_opt_closed_form", || black_box(t_time_opt_raw(&s)));
+    b.run("de_quadratic_coeffs", || black_box(de_quadratic(&s)));
+    b.run("t_energy_opt_closed_form", || black_box(t_energy_opt_raw(&s)));
+    b.run("t_energy_opt_clamped", || black_box(t_energy_opt(&s).unwrap()));
+    b.run("t_energy_opt_numeric_golden", || black_box(t_energy_opt_numeric(&s)));
+    b.run("compare_full", || black_box(compare(&s).unwrap()));
+
+    b.finish();
+}

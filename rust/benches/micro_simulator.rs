@@ -1,0 +1,52 @@
+//! Micro-bench: discrete-event simulator throughput (single runs and
+//! multi-threaded Monte-Carlo), plus the failure-stream generators.
+
+use ckpt_period::config::presets::fig1_scenario;
+use ckpt_period::model::t_time_opt;
+use ckpt_period::sim::{monte_carlo, FailureProcess, SimConfig, Simulator};
+use ckpt_period::util::bench::{black_box, Bench};
+use ckpt_period::util::rng::Pcg64;
+
+fn main() {
+    let mut b = Bench::new("micro_simulator");
+    let s = fig1_scenario(300.0, 5.5);
+    let t = t_time_opt(&s).unwrap();
+
+    // Single-run cost (~190 periods + ~35 failures per run at these
+    // parameters).
+    let sim = Simulator::new(SimConfig::paper(s, t));
+    let mut seed = 0u64;
+    b.run_units("single_run_10k_min_app", 1.0, || {
+        seed += 1;
+        black_box(sim.run(seed))
+    });
+
+    // Monte-Carlo scaling across threads.
+    for threads in [1usize, 4, 8] {
+        let cfg = SimConfig::paper(s, t);
+        b.run_units(&format!("monte_carlo_128reps_{threads}thr"), 128.0, || {
+            black_box(monte_carlo(&cfg, 128, 99, threads))
+        });
+    }
+
+    // Failure streams.
+    for (name, proc_) in [
+        ("stream_exponential", FailureProcess::Exponential { mtbf: 10.0 }),
+        (
+            "stream_per_node_weibull_100",
+            FailureProcess::PerNodeWeibull { n: 100, shape: 0.7, scale_ind: 1000.0 },
+        ),
+    ] {
+        b.run_units(&format!("{name}_10k_events"), 10_000.0, || {
+            let mut rng = Pcg64::seeded(5);
+            let mut stream = proc_.stream(&mut rng);
+            let mut now = 0.0;
+            for _ in 0..10_000 {
+                now = stream.next_after(now).at;
+            }
+            black_box(now)
+        });
+    }
+
+    b.finish();
+}

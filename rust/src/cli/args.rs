@@ -1,0 +1,235 @@
+//! Declarative flag parser.
+
+use std::collections::BTreeMap;
+
+/// Errors produced while parsing a command line.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum CliError {
+    #[error("unknown flag `{0}`\n{1}")]
+    UnknownFlag(String, String),
+    #[error("flag `{0}` requires a value")]
+    MissingValue(String),
+    #[error("invalid value `{1}` for flag `{0}`: {2}")]
+    InvalidValue(String, String, String),
+    #[error("unexpected positional argument `{0}`")]
+    UnexpectedPositional(String),
+    #[error("{0}")]
+    Help(String),
+}
+
+/// Specification of one flag.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// `None` ⇒ boolean switch; `Some(default)` ⇒ value flag.
+    pub default: Option<&'static str>,
+}
+
+impl ArgSpec {
+    pub const fn flag(name: &'static str, default: &'static str, help: &'static str) -> Self {
+        ArgSpec { name, help, default: Some(default) }
+    }
+
+    pub const fn switch(name: &'static str, help: &'static str) -> Self {
+        ArgSpec { name, help, default: None }
+    }
+}
+
+/// Parsed arguments for one subcommand.
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+}
+
+impl Args {
+    /// Parse `argv` (without program/subcommand) against `specs`.
+    pub fn parse(
+        command: &str,
+        about: &str,
+        specs: &[ArgSpec],
+        argv: &[String],
+    ) -> Result<Args, CliError> {
+        let mut values = BTreeMap::new();
+        let mut switches = BTreeMap::new();
+        for s in specs {
+            match s.default {
+                Some(d) => {
+                    values.insert(s.name.to_string(), d.to_string());
+                }
+                None => {
+                    switches.insert(s.name.to_string(), false);
+                }
+            }
+        }
+        let usage = render_usage(command, about, specs);
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError::Help(usage));
+            }
+            if let Some(name) = a.strip_prefix("--") {
+                // Support --flag=value.
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                if switches.contains_key(name) {
+                    if inline.is_some() {
+                        return Err(CliError::InvalidValue(
+                            name.into(),
+                            inline.unwrap(),
+                            "switch takes no value".into(),
+                        ));
+                    }
+                    switches.insert(name.to_string(), true);
+                } else if values.contains_key(name) {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(name.into()))?
+                        }
+                    };
+                    values.insert(name.to_string(), v);
+                } else {
+                    return Err(CliError::UnknownFlag(a.clone(), usage));
+                }
+            } else {
+                return Err(CliError::UnexpectedPositional(a.clone()));
+            }
+            i += 1;
+        }
+        Ok(Args { values, switches })
+    }
+
+    pub fn get(&self, name: &str) -> &str {
+        self.values.get(name).map(|s| s.as_str()).unwrap_or_else(|| {
+            panic!("flag `{name}` was not declared in the ArgSpec list")
+        })
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        let raw = self.get(name);
+        raw.parse().map_err(|e: std::num::ParseFloatError| {
+            CliError::InvalidValue(name.into(), raw.into(), e.to_string())
+        })
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        let raw = self.get(name);
+        raw.parse().map_err(|e: std::num::ParseIntError| {
+            CliError::InvalidValue(name.into(), raw.into(), e.to_string())
+        })
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
+        let raw = self.get(name);
+        raw.parse().map_err(|e: std::num::ParseIntError| {
+            CliError::InvalidValue(name.into(), raw.into(), e.to_string())
+        })
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        *self.switches.get(name).unwrap_or_else(|| {
+            panic!("switch `{name}` was not declared in the ArgSpec list")
+        })
+    }
+}
+
+fn render_usage(command: &str, about: &str, specs: &[ArgSpec]) -> String {
+    let mut s = format!("{command} — {about}\n\nflags:\n");
+    for spec in specs {
+        match spec.default {
+            Some(d) => {
+                s.push_str(&format!("  --{:<24} {} (default: {})\n", spec.name, spec.help, d))
+            }
+            None => s.push_str(&format!("  --{:<24} {} (switch)\n", spec.name, spec.help)),
+        }
+    }
+    s.push_str("  --help                     show this help\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPECS: &[ArgSpec] = &[
+        ArgSpec::flag("mu", "300", "platform MTBF in minutes"),
+        ArgSpec::flag("name", "default", "scenario name"),
+        ArgSpec::switch("verbose", "print more"),
+    ];
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse("t", "test", SPECS, &argv(&[])).unwrap();
+        assert_eq!(a.get_f64("mu").unwrap(), 300.0);
+        assert_eq!(a.get("name"), "default");
+        assert!(!a.switch("verbose"));
+    }
+
+    #[test]
+    fn values_and_switches() {
+        let a =
+            Args::parse("t", "test", SPECS, &argv(&["--mu", "42.5", "--verbose"])).unwrap();
+        assert_eq!(a.get_f64("mu").unwrap(), 42.5);
+        assert!(a.switch("verbose"));
+    }
+
+    #[test]
+    fn inline_equals_form() {
+        let a = Args::parse("t", "test", SPECS, &argv(&["--mu=60"])).unwrap();
+        assert_eq!(a.get_f64("mu").unwrap(), 60.0);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let e = Args::parse("t", "test", SPECS, &argv(&["--bogus", "1"])).unwrap_err();
+        assert!(matches!(e, CliError::UnknownFlag(..)));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        let e = Args::parse("t", "test", SPECS, &argv(&["--mu"])).unwrap_err();
+        assert_eq!(e, CliError::MissingValue("mu".into()));
+    }
+
+    #[test]
+    fn bad_number_reported() {
+        let a = Args::parse("t", "test", SPECS, &argv(&["--mu", "abc"])).unwrap();
+        assert!(matches!(a.get_f64("mu"), Err(CliError::InvalidValue(..))));
+    }
+
+    #[test]
+    fn help_contains_flags() {
+        let e = Args::parse("t", "test", SPECS, &argv(&["--help"])).unwrap_err();
+        match e {
+            CliError::Help(text) => {
+                assert!(text.contains("--mu"));
+                assert!(text.contains("--verbose"));
+            }
+            other => panic!("expected help, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn positional_rejected() {
+        let e = Args::parse("t", "test", SPECS, &argv(&["oops"])).unwrap_err();
+        assert_eq!(e, CliError::UnexpectedPositional("oops".into()));
+    }
+
+    #[test]
+    fn switch_with_value_rejected() {
+        let e = Args::parse("t", "test", SPECS, &argv(&["--verbose=yes"])).unwrap_err();
+        assert!(matches!(e, CliError::InvalidValue(..)));
+    }
+}

@@ -1,0 +1,9 @@
+//! Std-only command-line parsing (no `clap` in the offline vendor set).
+//!
+//! Grammar: `ckpt-period <subcommand> [--flag value]... [--switch]`.
+//! Each subcommand declares its flags up front so `--help` is generated
+//! and unknown flags are rejected with a useful message.
+
+mod args;
+
+pub use args::{ArgSpec, Args, CliError};

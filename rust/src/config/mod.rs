@@ -1,0 +1,12 @@
+//! Scenario configuration: the paper's §4 presets plus a JSON loader so
+//! users can instantiate the model on their own platforms.
+//!
+//! * [`presets`] — the exact parameter sets behind Figures 1, 2 and 3.
+//! * [`spec`] — [`spec::ScenarioSpec`]: a JSON-serialisable scenario
+//!   description with validation (`ckpt-period optimize --config x.json`).
+
+pub mod presets;
+pub mod spec;
+
+pub use presets::{fig1_scenario, fig2_scenario, fig3_scenario, jaguar_platform};
+pub use spec::ScenarioSpec;

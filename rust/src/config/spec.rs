@@ -1,0 +1,165 @@
+//! JSON scenario specification for user-provided platforms.
+//!
+//! ```json
+//! {
+//!   "checkpoint": {"c": 10.0, "r": 10.0, "d": 1.0, "omega": 0.5},
+//!   "power": {"p_static": 10.0, "p_cal": 10.0, "p_io": 100.0, "p_down": 0.0},
+//!   "platform": {"n_nodes": 1e6, "mu_ind_minutes": 65700000.0},
+//!   "t_base_minutes": 10000.0
+//! }
+//! ```
+//!
+//! `platform` may be replaced by a direct `"mu_minutes": 120.0`.
+
+use std::path::Path;
+
+use crate::model::params::{CheckpointParams, ModelError, Platform, PowerParams, Scenario};
+use crate::util::json::{parse, Json, JsonError};
+
+/// Parsed + validated scenario file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    pub scenario: Scenario,
+    /// Node count, if the file specified a platform (for reporting).
+    pub n_nodes: Option<f64>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum SpecError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error(transparent)]
+    Json(#[from] JsonError),
+    #[error(transparent)]
+    Model(#[from] ModelError),
+}
+
+impl ScenarioSpec {
+    pub fn from_file(path: &Path) -> Result<Self, SpecError> {
+        Self::from_str(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn from_str(raw: &str) -> Result<Self, SpecError> {
+        let doc = parse(raw)?;
+        let ck = doc
+            .get("checkpoint")
+            .ok_or_else(|| JsonError::Schema("missing `checkpoint`".into()))?;
+        let ckpt = CheckpointParams::new(
+            ck.req_f64("c")?,
+            ck.req_f64("r")?,
+            ck.req_f64("d")?,
+            ck.req_f64("omega")?,
+        )?;
+        let pw = doc
+            .get("power")
+            .ok_or_else(|| JsonError::Schema("missing `power`".into()))?;
+        let power = PowerParams::new(
+            pw.req_f64("p_static")?,
+            pw.req_f64("p_cal")?,
+            pw.req_f64("p_io")?,
+            pw.req_f64("p_down")?,
+        )?;
+        let (mu, n_nodes) = if let Some(pl) = doc.get("platform") {
+            let platform =
+                Platform::new(pl.req_f64("n_nodes")?, pl.req_f64("mu_ind_minutes")?)?;
+            (platform.mu(), Some(platform.n_nodes))
+        } else {
+            (doc.req_f64("mu_minutes")?, None)
+        };
+        let t_base = doc.req_f64("t_base_minutes")?;
+        Ok(ScenarioSpec { scenario: Scenario::new(ckpt, power, mu, t_base)?, n_nodes })
+    }
+
+    /// Serialise back to JSON (round-trip support for tooling).
+    pub fn to_json(&self) -> Json {
+        let s = &self.scenario;
+        let mut fields = vec![
+            (
+                "checkpoint",
+                Json::obj(vec![
+                    ("c", Json::Num(s.ckpt.c)),
+                    ("r", Json::Num(s.ckpt.r)),
+                    ("d", Json::Num(s.ckpt.d)),
+                    ("omega", Json::Num(s.ckpt.omega)),
+                ]),
+            ),
+            (
+                "power",
+                Json::obj(vec![
+                    ("p_static", Json::Num(s.power.p_static)),
+                    ("p_cal", Json::Num(s.power.p_cal)),
+                    ("p_io", Json::Num(s.power.p_io)),
+                    ("p_down", Json::Num(s.power.p_down)),
+                ]),
+            ),
+            ("mu_minutes", Json::Num(s.mu)),
+            ("t_base_minutes", Json::Num(s.t_base)),
+        ];
+        if let Some(n) = self.n_nodes {
+            fields.push(("n_nodes", Json::Num(n)));
+        }
+        Json::obj(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = r#"{
+        "checkpoint": {"c": 10.0, "r": 10.0, "d": 1.0, "omega": 0.5},
+        "power": {"p_static": 10, "p_cal": 10, "p_io": 100, "p_down": 0},
+        "mu_minutes": 300.0,
+        "t_base_minutes": 10000.0
+    }"#;
+
+    #[test]
+    fn parses_direct_mu() {
+        let spec = ScenarioSpec::from_str(GOOD).unwrap();
+        assert_eq!(spec.scenario.mu, 300.0);
+        assert!((spec.scenario.power.rho() - 5.5).abs() < 1e-12);
+        assert_eq!(spec.n_nodes, None);
+    }
+
+    #[test]
+    fn parses_platform_form() {
+        let raw = r#"{
+            "checkpoint": {"c": 1.0, "r": 1.0, "d": 0.1, "omega": 0.5},
+            "power": {"p_static": 10, "p_cal": 10, "p_io": 100, "p_down": 0},
+            "platform": {"n_nodes": 1000000, "mu_ind_minutes": 120000000},
+            "t_base_minutes": 5000.0
+        }"#;
+        let spec = ScenarioSpec::from_str(raw).unwrap();
+        assert!((spec.scenario.mu - 120.0).abs() < 1e-9);
+        assert_eq!(spec.n_nodes, Some(1e6));
+    }
+
+    #[test]
+    fn rejects_missing_sections_and_bad_values() {
+        assert!(ScenarioSpec::from_str("{}").is_err());
+        let bad_omega = GOOD.replace("0.5", "1.5");
+        assert!(matches!(
+            ScenarioSpec::from_str(&bad_omega),
+            Err(SpecError::Model(_))
+        ));
+        let bad_json = &GOOD[..GOOD.len() - 2];
+        assert!(matches!(ScenarioSpec::from_str(bad_json), Err(SpecError::Json(_))));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let spec = ScenarioSpec::from_str(GOOD).unwrap();
+        let text = spec.to_json().to_string_pretty();
+        let back = ScenarioSpec::from_str(&text).unwrap();
+        assert_eq!(spec.scenario, back.scenario);
+    }
+
+    #[test]
+    fn file_io() {
+        let path = std::env::temp_dir().join("ckpt_spec_test.json");
+        std::fs::write(&path, GOOD).unwrap();
+        let spec = ScenarioSpec::from_file(&path).unwrap();
+        assert_eq!(spec.scenario.t_base, 10_000.0);
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -1,0 +1,286 @@
+//! Online period adaptation.
+//!
+//! The paper assumes `C`, `R` and `μ` are known a priori. In production
+//! none of them is: checkpoint cost drifts with model size and filesystem
+//! load, and the platform MTBF is only revealed by observed failures.
+//! [`AdaptiveController`] estimates all three online and recomputes the
+//! policy period whenever the estimates move materially:
+//!
+//! * `C`, `R` — exponentially weighted moving averages of measured
+//!   save/restore durations (EWMA, α = 0.3: reactive but not jumpy);
+//! * `μ` — the classical exposure estimator `total uptime / failures`,
+//!   with a Bayesian-flavoured prior (`prior_mu`, weight one pseudo-
+//!   failure) so the controller behaves before the first failure.
+//!
+//! The controller is policy-agnostic: it owns a [`PeriodPolicy`] and a
+//! power model and exposes [`AdaptiveController::period`], which the
+//! leader re-reads after every checkpoint/failure event.
+
+use super::policy::PeriodPolicy;
+use crate::model::params::{CheckpointParams, PowerParams, Scenario};
+
+/// EWMA with configurable smoothing.
+#[derive(Debug, Clone, Copy)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Ewma { alpha, value: None }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.value = Some(match self.value {
+            None => x,
+            Some(v) => self.alpha * x + (1.0 - self.alpha) * v,
+        });
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Online estimates + period recomputation.
+#[derive(Debug, Clone)]
+pub struct AdaptiveController {
+    policy: PeriodPolicy,
+    power: PowerParams,
+    omega: f64,
+    downtime: f64,
+    t_base_hint: f64,
+    /// Prior platform MTBF (used until failures are observed, and blended
+    /// afterwards with one pseudo-failure of weight).
+    prior_mu: f64,
+    c_est: Ewma,
+    r_est: Ewma,
+    uptime: f64,
+    failures: u64,
+    /// Current period (recomputed lazily).
+    cached_period: Option<f64>,
+    /// Relative estimate movement that invalidates the cached period.
+    hysteresis: f64,
+    cached_inputs: (f64, f64, f64),
+}
+
+impl AdaptiveController {
+    pub fn new(
+        policy: PeriodPolicy,
+        power: PowerParams,
+        omega: f64,
+        downtime: f64,
+        prior_mu: f64,
+        t_base_hint: f64,
+    ) -> Self {
+        AdaptiveController {
+            policy,
+            power,
+            omega,
+            downtime,
+            t_base_hint,
+            prior_mu,
+            c_est: Ewma::new(0.3),
+            r_est: Ewma::new(0.3),
+            uptime: 0.0,
+            failures: 0,
+            cached_period: None,
+            hysteresis: 0.05,
+            cached_inputs: (0.0, 0.0, 0.0),
+        }
+    }
+
+    /// Record a measured checkpoint write duration.
+    pub fn observe_checkpoint(&mut self, seconds: f64) {
+        self.c_est.push(seconds);
+    }
+
+    /// Record a measured restore duration.
+    pub fn observe_restore(&mut self, seconds: f64) {
+        self.r_est.push(seconds);
+    }
+
+    /// Record uptime accrued since the last call (any phase where a
+    /// failure could have struck).
+    pub fn observe_uptime(&mut self, seconds: f64) {
+        debug_assert!(seconds >= 0.0);
+        self.uptime += seconds;
+    }
+
+    /// Record an observed failure.
+    pub fn observe_failure(&mut self) {
+        self.failures += 1;
+    }
+
+    /// Current MTBF estimate: exposure estimator blended with the prior
+    /// (one pseudo-failure at `prior_mu`).
+    pub fn mu_estimate(&self) -> f64 {
+        (self.uptime + self.prior_mu) / (self.failures + 1) as f64
+    }
+
+    /// Current C estimate (falls back to a conservative guess until the
+    /// first observation).
+    pub fn c_estimate(&self) -> f64 {
+        self.c_est.get().unwrap_or(self.prior_mu / 100.0)
+    }
+
+    pub fn r_estimate(&self) -> f64 {
+        self.r_est.get().unwrap_or_else(|| self.c_estimate())
+    }
+
+    pub fn observed_failures(&self) -> u64 {
+        self.failures
+    }
+
+    /// The scenario implied by current estimates.
+    pub fn scenario(&self) -> Option<Scenario> {
+        let ckpt = CheckpointParams::new(
+            self.c_estimate().max(1e-9),
+            self.r_estimate().max(1e-9),
+            self.downtime,
+            self.omega,
+        )
+        .ok()?;
+        Scenario::new(ckpt, self.power, self.mu_estimate(), self.t_base_hint).ok()
+    }
+
+    /// Current period. Recomputed only when an input estimate moved by
+    /// more than the hysteresis band — the leader can call this every
+    /// iteration without thrashing the period.
+    pub fn period(&mut self) -> Option<f64> {
+        let inputs = (self.c_estimate(), self.r_estimate(), self.mu_estimate());
+        let moved = |a: f64, b: f64| (a - b).abs() > self.hysteresis * b.abs().max(1e-12);
+        if let Some(p) = self.cached_period {
+            let (c0, r0, m0) = self.cached_inputs;
+            if !moved(inputs.0, c0) && !moved(inputs.1, r0) && !moved(inputs.2, m0) {
+                return Some(p);
+            }
+        }
+        let s = self.scenario()?;
+        let p = self.policy.period(&s).ok()?;
+        self.cached_period = Some(p);
+        self.cached_inputs = inputs;
+        Some(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn controller() -> AdaptiveController {
+        AdaptiveController::new(
+            PeriodPolicy::AlgoT,
+            PowerParams::new(10.0, 10.0, 100.0, 0.0).unwrap(),
+            0.5,
+            0.1,
+            30.0, // prior mu: 30 s
+            1000.0,
+        )
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let mut e = Ewma::new(0.3);
+        assert_eq!(e.get(), None);
+        e.push(10.0);
+        assert_eq!(e.get(), Some(10.0));
+        for _ in 0..50 {
+            e.push(2.0);
+        }
+        assert!((e.get().unwrap() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mu_estimator_blends_prior_and_observations() {
+        let mut c = controller();
+        // No failures yet: estimate equals the prior.
+        assert_eq!(c.mu_estimate(), 30.0);
+        // 90 s uptime, 2 failures: (90 + 30) / 3 = 40.
+        c.observe_uptime(90.0);
+        c.observe_failure();
+        c.observe_failure();
+        assert_eq!(c.mu_estimate(), 40.0);
+    }
+
+    #[test]
+    fn period_tracks_c_changes() {
+        let mut c = controller();
+        c.observe_checkpoint(0.1);
+        let p1 = c.period().unwrap();
+        // Checkpoints suddenly get 16x slower: Eq.1 ~ sqrt(C) => the
+        // period should grow by ~4x (modulo the (D+R+wC) correction).
+        for _ in 0..30 {
+            c.observe_checkpoint(1.6);
+        }
+        let p2 = c.period().unwrap();
+        assert!(p2 > 2.5 * p1, "p1={p1} p2={p2}");
+    }
+
+    #[test]
+    fn hysteresis_avoids_thrash() {
+        let mut c = controller();
+        c.observe_checkpoint(0.1);
+        let p1 = c.period().unwrap();
+        // A 1% wobble in C must not change the cached period.
+        c.observe_checkpoint(0.101);
+        let p2 = c.period().unwrap();
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn more_failures_shrink_the_period() {
+        let mut quiet = controller();
+        quiet.observe_checkpoint(0.1);
+        quiet.observe_uptime(300.0);
+        let p_quiet = quiet.period().unwrap();
+
+        let mut noisy = controller();
+        noisy.observe_checkpoint(0.1);
+        noisy.observe_uptime(300.0);
+        for _ in 0..20 {
+            noisy.observe_failure();
+        }
+        let p_noisy = noisy.period().unwrap();
+        assert!(p_noisy < p_quiet, "noisy {p_noisy} !< quiet {p_quiet}");
+    }
+
+    #[test]
+    fn algo_e_policy_supported() {
+        let mut c = AdaptiveController::new(
+            PeriodPolicy::AlgoE,
+            PowerParams::new(10.0, 10.0, 100.0, 0.0).unwrap(),
+            0.5,
+            0.1,
+            30.0,
+            1000.0,
+        );
+        c.observe_checkpoint(0.1);
+        c.observe_restore(0.05);
+        let mut t = AdaptiveController::new(
+            PeriodPolicy::AlgoT,
+            PowerParams::new(10.0, 10.0, 100.0, 0.0).unwrap(),
+            0.5,
+            0.1,
+            30.0,
+            1000.0,
+        );
+        t.observe_checkpoint(0.1);
+        t.observe_restore(0.05);
+        // rho = 5.5 > 1: energy period longer.
+        assert!(c.period().unwrap() > t.period().unwrap());
+    }
+
+    #[test]
+    fn degenerate_estimates_return_none() {
+        let mut c = controller();
+        // Make mu collapse far below C: no feasible period.
+        c.observe_checkpoint(100.0);
+        for _ in 0..1000 {
+            c.observe_failure();
+        }
+        assert!(c.period().is_none());
+    }
+}

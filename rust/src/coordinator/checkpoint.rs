@@ -1,0 +1,405 @@
+//! Durable checkpoint store for [`crate::workload::TrainState`].
+//!
+//! Format (little-endian):
+//!
+//! ```text
+//! magic  u32 = 0xC4E2_2013      version u32 = 1
+//! n_params u64   step f32   next_batch u64
+//! theta f32[n]   m f32[n]   v f32[n]
+//! crc32  u32 (IEEE, over everything above)
+//! ```
+//!
+//! Writes go to `<dir>/ckpt.tmp` then atomically rename onto
+//! `<dir>/ckpt.bin`, so a failure mid-write never corrupts the last
+//! durable checkpoint — exactly the "stable storage" assumption of
+//! coordinated checkpointing (§2.1).
+//!
+//! [`AsyncCheckpointWriter`] runs the serialization + write on its own
+//! thread: in non-blocking mode the trainer keeps stepping while the
+//! write is in flight, which is the behavioural definition of the
+//! paper's ω.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::workload::trainer::TrainState;
+
+const MAGIC: u32 = 0xC4E2_2013;
+const VERSION: u32 = 1;
+
+/// Errors from checkpoint persistence.
+#[derive(Debug, thiserror::Error)]
+pub enum CheckpointError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("corrupt checkpoint: {0}")]
+    Corrupt(String),
+    #[error("no checkpoint present at {0}")]
+    Missing(PathBuf),
+}
+
+/// IEEE CRC-32 (table-driven).
+pub fn crc32(data: &[u8]) -> u32 {
+    static TABLE: once_cell::sync::Lazy<[u32; 256]> = once_cell::sync::Lazy::new(|| {
+        let mut table = [0u32; 256];
+        for (i, entry) in table.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *entry = c;
+        }
+        table
+    });
+    let mut c = !0u32;
+    for &b in data {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// Serialize a [`TrainState`] into the on-disk format.
+pub fn encode(state: &TrainState) -> Vec<u8> {
+    let n = state.theta.len();
+    let mut buf = Vec::with_capacity(28 + 12 * n + 4);
+    buf.extend_from_slice(&MAGIC.to_le_bytes());
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&(n as u64).to_le_bytes());
+    buf.extend_from_slice(&state.step.to_le_bytes());
+    buf.extend_from_slice(&state.next_batch.to_le_bytes());
+    for vec in [&state.theta, &state.m, &state.v] {
+        for x in vec.iter() {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    let crc = crc32(&buf);
+    buf.extend_from_slice(&crc.to_le_bytes());
+    buf
+}
+
+/// Parse the on-disk format back into a [`TrainState`].
+pub fn decode(data: &[u8]) -> Result<TrainState, CheckpointError> {
+    let fail = |m: &str| Err(CheckpointError::Corrupt(m.to_string()));
+    if data.len() < 32 {
+        return fail("truncated header");
+    }
+    let (body, crc_bytes) = data.split_at(data.len() - 4);
+    let stored_crc = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+    if crc32(body) != stored_crc {
+        return fail("crc mismatch");
+    }
+    let rd_u32 = |off: usize| u32::from_le_bytes(data[off..off + 4].try_into().unwrap());
+    let rd_u64 = |off: usize| u64::from_le_bytes(data[off..off + 8].try_into().unwrap());
+    if rd_u32(0) != MAGIC {
+        return fail("bad magic");
+    }
+    if rd_u32(4) != VERSION {
+        return fail("unsupported version");
+    }
+    let n = rd_u64(8) as usize;
+    let step = f32::from_le_bytes(data[16..20].try_into().unwrap());
+    let next_batch = rd_u64(20);
+    let expect = 28 + 12 * n + 4;
+    if data.len() != expect {
+        return fail(&format!("length {} != expected {expect}", data.len()));
+    }
+    let read_vec = |start: usize| -> Vec<f32> {
+        data[start..start + 4 * n]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    };
+    let theta = read_vec(28);
+    let m = read_vec(28 + 4 * n);
+    let v = read_vec(28 + 8 * n);
+    Ok(TrainState { theta, m, v, step, next_batch })
+}
+
+/// Synchronous checkpoint store rooted at a directory.
+#[derive(Debug, Clone)]
+pub struct CheckpointStore {
+    dir: PathBuf,
+}
+
+impl CheckpointStore {
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self, CheckpointError> {
+        std::fs::create_dir_all(dir.as_ref())?;
+        Ok(CheckpointStore { dir: dir.as_ref().to_path_buf() })
+    }
+
+    pub fn path(&self) -> PathBuf {
+        self.dir.join("ckpt.bin")
+    }
+
+    fn tmp_path(&self) -> PathBuf {
+        self.dir.join("ckpt.tmp")
+    }
+
+    /// Durably save (write tmp + fsync + atomic rename).
+    /// Returns the wall time taken — the measured `C`.
+    pub fn save(&self, state: &TrainState) -> Result<Duration, CheckpointError> {
+        let t0 = Instant::now();
+        let buf = encode(state);
+        let tmp = self.tmp_path();
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&buf)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, self.path())?;
+        Ok(t0.elapsed())
+    }
+
+    /// Load + verify the last durable checkpoint.
+    /// Returns the state and the wall time taken — the measured `R`.
+    pub fn load(&self) -> Result<(TrainState, Duration), CheckpointError> {
+        let t0 = Instant::now();
+        let path = self.path();
+        if !path.exists() {
+            return Err(CheckpointError::Missing(path));
+        }
+        let data = std::fs::read(&path)?;
+        let state = decode(&data)?;
+        Ok((state, t0.elapsed()))
+    }
+
+    pub fn exists(&self) -> bool {
+        self.path().exists()
+    }
+
+    /// Remove any stored checkpoint (test hygiene).
+    pub fn clear(&self) -> Result<(), CheckpointError> {
+        for p in [self.path(), self.tmp_path()] {
+            if p.exists() {
+                std::fs::remove_file(p)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+enum WriterMsg {
+    Save(TrainState),
+    Shutdown,
+}
+
+/// Completed-write notification.
+#[derive(Debug, Clone, Copy)]
+pub struct WriteDone {
+    pub duration: Duration,
+    /// The step counter the written checkpoint captured.
+    pub step: f32,
+}
+
+/// Background checkpoint writer (the non-blocking half of the protocol).
+pub struct AsyncCheckpointWriter {
+    tx: mpsc::Sender<WriterMsg>,
+    done_rx: mpsc::Receiver<Result<WriteDone, String>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    in_flight: bool,
+}
+
+impl AsyncCheckpointWriter {
+    pub fn new(store: CheckpointStore) -> Self {
+        let (tx, rx) = mpsc::channel::<WriterMsg>();
+        let (done_tx, done_rx) = mpsc::channel();
+        let handle = std::thread::Builder::new()
+            .name("ckpt-writer".into())
+            .spawn(move || {
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        WriterMsg::Save(state) => {
+                            let step = state.step;
+                            let res = store
+                                .save(&state)
+                                .map(|duration| WriteDone { duration, step })
+                                .map_err(|e| e.to_string());
+                            if done_tx.send(res).is_err() {
+                                return;
+                            }
+                        }
+                        WriterMsg::Shutdown => return,
+                    }
+                }
+            })
+            .expect("spawn ckpt-writer");
+        AsyncCheckpointWriter { tx, done_rx, handle: Some(handle), in_flight: false }
+    }
+
+    /// Begin a non-blocking save of a state snapshot. Panics if a write
+    /// is already in flight (the leader enforces one-at-a-time — a
+    /// period shorter than the write time means the scenario is
+    //  infeasible and is caught by period validation).
+    pub fn begin(&mut self, snapshot: TrainState) {
+        assert!(!self.in_flight, "checkpoint writer already busy");
+        self.in_flight = true;
+        self.tx.send(WriterMsg::Save(snapshot)).expect("ckpt-writer alive");
+    }
+
+    pub fn in_flight(&self) -> bool {
+        self.in_flight
+    }
+
+    /// Non-blocking poll for a completed write.
+    pub fn poll(&mut self) -> Option<Result<WriteDone, String>> {
+        match self.done_rx.try_recv() {
+            Ok(res) => {
+                self.in_flight = false;
+                Some(res)
+            }
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                self.in_flight = false;
+                Some(Err("checkpoint writer thread died".into()))
+            }
+        }
+    }
+
+    /// Block until the in-flight write (if any) completes.
+    pub fn wait(&mut self) -> Option<Result<WriteDone, String>> {
+        if !self.in_flight {
+            return None;
+        }
+        let res = self.done_rx.recv().map_err(|e| e.to_string()).and_then(|r| r);
+        self.in_flight = false;
+        Some(res)
+    }
+}
+
+impl Drop for AsyncCheckpointWriter {
+    fn drop(&mut self) {
+        let _ = self.tx.send(WriterMsg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(n: usize) -> TrainState {
+        TrainState {
+            theta: (0..n).map(|i| i as f32 * 0.25).collect(),
+            m: (0..n).map(|i| -(i as f32)).collect(),
+            v: (0..n).map(|i| i as f32 * i as f32).collect(),
+            step: 42.0,
+            next_batch: 17,
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ckpt_store_{tag}"));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // Standard test vector.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let s = state(100);
+        let buf = encode(&s);
+        let back = decode(&buf).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn decode_rejects_corruption() {
+        let s = state(10);
+        let mut buf = encode(&s);
+        // Flip a byte in theta.
+        buf[40] ^= 0xFF;
+        match decode(&buf) {
+            Err(CheckpointError::Corrupt(msg)) => assert!(msg.contains("crc")),
+            other => panic!("expected corrupt, got {other:?}"),
+        }
+        // Truncation.
+        assert!(decode(&encode(&s)[..20]).is_err());
+        // Bad magic.
+        let mut buf = encode(&s);
+        buf[0] ^= 1;
+        assert!(decode(&buf).is_err());
+    }
+
+    #[test]
+    fn store_roundtrip_and_timing() {
+        let store = CheckpointStore::new(tmp_dir("rt")).unwrap();
+        let s = state(1000);
+        let c = store.save(&s).unwrap();
+        assert!(c.as_nanos() > 0);
+        let (back, r) = store.load().unwrap();
+        assert_eq!(s, back);
+        assert!(r.as_nanos() > 0);
+        store.clear().unwrap();
+        assert!(!store.exists());
+    }
+
+    #[test]
+    fn load_missing_is_typed() {
+        let store = CheckpointStore::new(tmp_dir("missing")).unwrap();
+        assert!(matches!(store.load(), Err(CheckpointError::Missing(_))));
+    }
+
+    #[test]
+    fn save_overwrites_atomically() {
+        let store = CheckpointStore::new(tmp_dir("atomic")).unwrap();
+        let s1 = state(50);
+        let mut s2 = state(50);
+        s2.step = 99.0;
+        store.save(&s1).unwrap();
+        store.save(&s2).unwrap();
+        let (back, _) = store.load().unwrap();
+        assert_eq!(back.step, 99.0);
+        // No tmp file left behind.
+        assert!(!store.tmp_path().exists());
+    }
+
+    #[test]
+    fn async_writer_completes_and_reports() {
+        let store = CheckpointStore::new(tmp_dir("async")).unwrap();
+        let mut w = AsyncCheckpointWriter::new(store.clone());
+        assert!(!w.in_flight());
+        w.begin(state(5000));
+        assert!(w.in_flight());
+        let done = w.wait().unwrap().unwrap();
+        assert_eq!(done.step, 42.0);
+        assert!(!w.in_flight());
+        let (back, _) = store.load().unwrap();
+        assert_eq!(back.next_batch, 17);
+    }
+
+    #[test]
+    #[should_panic(expected = "already busy")]
+    fn async_writer_rejects_concurrent_begin() {
+        let store = CheckpointStore::new(tmp_dir("busy")).unwrap();
+        let mut w = AsyncCheckpointWriter::new(store);
+        w.begin(state(10));
+        w.begin(state(10));
+    }
+
+    #[test]
+    fn async_writer_poll_eventually_sees_completion() {
+        let store = CheckpointStore::new(tmp_dir("poll")).unwrap();
+        let mut w = AsyncCheckpointWriter::new(store);
+        w.begin(state(10));
+        let mut tries = 0;
+        loop {
+            if let Some(res) = w.poll() {
+                res.unwrap();
+                break;
+            }
+            tries += 1;
+            assert!(tries < 10_000, "writer never completed");
+            std::thread::sleep(Duration::from_micros(100));
+        }
+    }
+}

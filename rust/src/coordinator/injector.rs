@@ -1,0 +1,122 @@
+//! Failure injection for real runs.
+//!
+//! The schedule is pre-drawn (reproducible per seed) from any
+//! [`FailureProcess`], in wall-clock seconds. The leader polls
+//! [`FailureSchedule::due`] against its monotonic clock; firing discards
+//! the live training state, exactly like a node loss under coordinated
+//! checkpointing (all processes roll back together — §2.1).
+
+use crate::sim::failure::FailureProcess;
+use crate::util::rng::Pcg64;
+
+/// A reproducible sequence of failure instants (seconds from run start).
+#[derive(Debug, Clone)]
+pub struct FailureSchedule {
+    times: Vec<f64>,
+    next: usize,
+}
+
+impl FailureSchedule {
+    /// Draw all failures up to `horizon` seconds.
+    pub fn generate(process: &FailureProcess, horizon: f64, seed: u64) -> Self {
+        let mut rng = Pcg64::seeded(seed);
+        let mut stream = process.stream(&mut rng);
+        let mut times = Vec::new();
+        let mut now = 0.0;
+        loop {
+            let f = stream.next_after(now);
+            if f.at > horizon {
+                break;
+            }
+            times.push(f.at);
+            now = f.at;
+        }
+        FailureSchedule { times, next: 0 }
+    }
+
+    /// A schedule with no failures (baseline runs).
+    pub fn none() -> Self {
+        FailureSchedule { times: Vec::new(), next: 0 }
+    }
+
+    /// Explicit failure instants (tests, deterministic demos).
+    pub fn at(times: Vec<f64>) -> Self {
+        let mut times = times;
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        FailureSchedule { times, next: 0 }
+    }
+
+    /// Total failures in the schedule.
+    pub fn len(&self) -> usize {
+        self.times.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.times.is_empty()
+    }
+
+    /// Time of the next pending failure, if any.
+    pub fn peek(&self) -> Option<f64> {
+        self.times.get(self.next).copied()
+    }
+
+    /// If a failure is due at/before `now`, consume and return it.
+    /// Multiple overdue failures collapse into the earliest (the machine
+    /// is already down; coordinated rollback handles them identically) —
+    /// the rest are consumed too.
+    pub fn due(&mut self, now: f64) -> Option<f64> {
+        let first = self.peek().filter(|&t| t <= now)?;
+        while self.peek().is_some_and(|t| t <= now) {
+            self.next += 1;
+        }
+        Some(first)
+    }
+
+    /// Remaining failure count.
+    pub fn remaining(&self) -> usize {
+        self.times.len() - self.next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_reproducible() {
+        let p = FailureProcess::Exponential { mtbf: 10.0 };
+        let a = FailureSchedule::generate(&p, 1000.0, 7);
+        let b = FailureSchedule::generate(&p, 1000.0, 7);
+        assert_eq!(a.times, b.times);
+        assert!(a.len() > 50, "len={}", a.len());
+    }
+
+    #[test]
+    fn generate_respects_horizon_and_rate() {
+        let p = FailureProcess::Exponential { mtbf: 5.0 };
+        let s = FailureSchedule::generate(&p, 10_000.0, 1);
+        assert!(s.times.iter().all(|&t| t <= 10_000.0));
+        let rate = s.len() as f64 / 10_000.0;
+        assert!((rate - 0.2).abs() < 0.02, "rate={rate}");
+    }
+
+    #[test]
+    fn due_consumes_in_order() {
+        let mut s = FailureSchedule::at(vec![5.0, 1.0, 3.0]);
+        assert_eq!(s.peek(), Some(1.0));
+        assert_eq!(s.due(0.5), None);
+        assert_eq!(s.due(1.0), Some(1.0));
+        assert_eq!(s.remaining(), 2);
+        // Two overdue collapse to the earliest.
+        assert_eq!(s.due(10.0), Some(3.0));
+        assert_eq!(s.remaining(), 0);
+        assert_eq!(s.due(100.0), None);
+    }
+
+    #[test]
+    fn none_never_fires() {
+        let mut s = FailureSchedule::none();
+        assert!(s.is_empty());
+        assert_eq!(s.due(f64::INFINITY), None);
+    }
+}

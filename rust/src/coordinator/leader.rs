@@ -1,0 +1,444 @@
+//! The leader control loop: calibrate → pick the period → train with
+//! periodic (optionally non-blocking) checkpoints under injected
+//! failures → report time/energy.
+//!
+//! Wall-clock semantics: the run executes in real time. The scenario
+//! handed to the period policy uses *measured* quantities — checkpoint
+//! write time `C`, restore time `R`, per-step time — plus the configured
+//! MTBF `μ` and downtime `D` (both in seconds). Energy applies the
+//! paper's power model to the measured phase durations
+//! ([`crate::energy`]).
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use super::adaptive::AdaptiveController;
+use super::checkpoint::{AsyncCheckpointWriter, CheckpointStore};
+use super::injector::FailureSchedule;
+use super::policy::PeriodPolicy;
+use super::report::{Event, EventKind, RunReport};
+use crate::energy::{energy_of, Phase, PhaseTracker};
+use crate::model::params::{CheckpointParams, PowerParams, Scenario};
+use crate::model::{e_final, t_final};
+use crate::runtime::{ArtifactDir, Runtime};
+use crate::sim::failure::FailureProcess;
+use crate::workload::{LitTrainState, TrainSession, TrainState};
+
+/// Blocking vs non-blocking checkpoints.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OverlapMode {
+    /// Training pauses while the checkpoint is written (ω = 0).
+    Blocking,
+    /// A writer thread persists a snapshot while training continues;
+    /// `assumed_omega` seeds the period computation and the measured ω
+    /// is reported afterwards.
+    Overlapped { assumed_omega: f64 },
+}
+
+impl OverlapMode {
+    pub fn assumed_omega(&self) -> f64 {
+        match self {
+            OverlapMode::Blocking => 0.0,
+            OverlapMode::Overlapped { assumed_omega } => *assumed_omega,
+        }
+    }
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub artifacts_dir: PathBuf,
+    pub checkpoint_dir: PathBuf,
+    pub power: PowerParams,
+    /// Platform MTBF in wall-clock seconds.
+    pub mu_s: f64,
+    /// Downtime (simulated by sleeping) in seconds.
+    pub downtime_s: f64,
+    pub policy: PeriodPolicy,
+    pub overlap: OverlapMode,
+    /// Target training steps (the workload size).
+    pub steps: u64,
+    pub data_seed: u64,
+    pub failure_seed: u64,
+    /// Calibration steps used to measure per-step time.
+    pub calibration_steps: u64,
+    /// Verify restored checkpoints with a forward-pass eval.
+    pub verify_on_restore: bool,
+    /// Disable failure injection (baseline runs).
+    pub inject_failures: bool,
+    /// Adapt the period online: re-estimate C/R (EWMA of measured
+    /// durations) and μ (exposure estimator seeded with `mu_s` as the
+    /// prior) and recompute the policy period after every event
+    /// ([`super::adaptive::AdaptiveController`]).
+    pub adaptive: bool,
+}
+
+impl CoordinatorConfig {
+    /// Reasonable defaults for the end-to-end example: Exascale power
+    /// ratios, MTBF scaled down to seconds.
+    pub fn new(artifacts_dir: impl Into<PathBuf>, checkpoint_dir: impl Into<PathBuf>) -> Self {
+        CoordinatorConfig {
+            artifacts_dir: artifacts_dir.into(),
+            checkpoint_dir: checkpoint_dir.into(),
+            power: PowerParams::new(10.0, 10.0, 100.0, 0.0).expect("valid powers"),
+            mu_s: 30.0,
+            downtime_s: 0.1,
+            policy: PeriodPolicy::AlgoT,
+            overlap: OverlapMode::Overlapped { assumed_omega: 0.9 },
+            steps: 200,
+            data_seed: 1,
+            failure_seed: 2,
+            calibration_steps: 5,
+            verify_on_restore: true,
+            inject_failures: true,
+            adaptive: false,
+        }
+    }
+}
+
+/// Errors the coordinator can surface.
+#[derive(Debug, thiserror::Error)]
+pub enum CoordinatorError {
+    #[error(transparent)]
+    Runtime(#[from] crate::runtime::RuntimeError),
+    #[error(transparent)]
+    Checkpoint(#[from] super::checkpoint::CheckpointError),
+    #[error(transparent)]
+    Model(#[from] crate::model::ModelError),
+    #[error("coordinator error: {0}")]
+    Other(String),
+}
+
+/// The leader. Owns the PJRT session, the checkpoint store and the
+/// failure schedule for one run.
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    session: TrainSession,
+    dir: ArtifactDir,
+}
+
+impl Coordinator {
+    pub fn new(rt: &Runtime, cfg: CoordinatorConfig) -> Result<Self, CoordinatorError> {
+        let dir = ArtifactDir::open(&cfg.artifacts_dir)?;
+        let session = TrainSession::new(rt, &dir, cfg.data_seed)?;
+        Ok(Coordinator { cfg, session, dir })
+    }
+
+    /// Calibrate, choose the period, and execute the full run.
+    pub fn run(&self) -> Result<RunReport, CoordinatorError> {
+        let cfg = &self.cfg;
+        let store = CheckpointStore::new(&cfg.checkpoint_dir)?;
+        store.clear()?;
+
+        // ---- calibration -------------------------------------------------
+        let mut cal_state = LitTrainState::from_state(&TrainState::initial(&self.dir)?);
+        // One untimed warmup step: the first PJRT execution after
+        // compilation pays lazy-initialisation costs that would bias the
+        // estimate high.
+        self.session.step_lit(&mut cal_state)?;
+        let mut step_times = Vec::new();
+        for _ in 0..cfg.calibration_steps.max(1) {
+            let t0 = Instant::now();
+            self.session.step_lit(&mut cal_state)?;
+            step_times.push(t0.elapsed().as_secs_f64());
+        }
+        let step_s = crate::util::stats::median(&step_times);
+        // C includes the snapshot materialisation (Literal -> host
+        // vectors), exactly what the runtime pays per checkpoint. The
+        // first save also creates the file and warms the fsync path —
+        // do one untimed, then take the median of three.
+        let snap = cal_state.to_state()?;
+        store.save(&snap)?;
+        let mut c_times = Vec::new();
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            let snap = cal_state.to_state()?;
+            store.save(&snap)?;
+            c_times.push(t0.elapsed().as_secs_f64());
+        }
+        let c_s = crate::util::stats::median(&c_times);
+        let (_, r_dur) = store.load()?;
+        // Restore verification cost is part of R when enabled.
+        let mut r_s = r_dur.as_secs_f64();
+        if cfg.verify_on_restore {
+            let t0 = Instant::now();
+            let _ = self.session.eval_lit(&cal_state, 0)?;
+            r_s += t0.elapsed().as_secs_f64();
+        }
+        store.clear()?;
+
+        // ---- scenario + period -------------------------------------------
+        let omega = cfg.overlap.assumed_omega();
+        let t_base_s = cfg.steps as f64 * step_s;
+        let ckpt = CheckpointParams::new(c_s.max(1e-6), r_s.max(1e-6), cfg.downtime_s, omega)?;
+        let scenario = Scenario::new(ckpt, cfg.power, cfg.mu_s, t_base_s)?;
+        let period_s = cfg.policy.period(&scenario)?;
+        // A period must fit at least one step beyond the checkpoint.
+        let mut period_s = period_s.max(c_s + step_s);
+
+        // Optional online adaptation, seeded with the calibration
+        // measurements and the configured MTBF as prior.
+        let mut controller = if cfg.adaptive {
+            let mut ctl = AdaptiveController::new(
+                cfg.policy,
+                cfg.power,
+                omega,
+                cfg.downtime_s,
+                cfg.mu_s,
+                t_base_s,
+            );
+            ctl.observe_checkpoint(c_s);
+            ctl.observe_restore(r_s);
+            Some(ctl)
+        } else {
+            None
+        };
+
+        let predicted_makespan = t_final(&scenario, period_s);
+        let predicted_energy = e_final(&scenario, period_s);
+
+        // ---- failure schedule --------------------------------------------
+        let horizon = (predicted_makespan.max(t_base_s) * 4.0).max(60.0);
+        let mut schedule = if cfg.inject_failures {
+            FailureSchedule::generate(
+                &FailureProcess::Exponential { mtbf: cfg.mu_s },
+                horizon,
+                cfg.failure_seed,
+            )
+        } else {
+            FailureSchedule::none()
+        };
+
+        // ---- main loop -----------------------------------------------------
+        let mut writer = AsyncCheckpointWriter::new(store.clone());
+        let mut phases = PhaseTracker::new();
+        let mut events: Vec<Event> = Vec::new();
+        let mut losses: Vec<(f32, f32)> = Vec::new();
+        let mut state = LitTrainState::from_state(&TrainState::initial(&self.dir)?);
+        let mut n_failures = 0u64;
+        let mut n_checkpoints = 0u64;
+        let mut steps_executed = 0u64;
+        // ω measurement: wall time spent in checkpoint windows and the
+        // step-work completed inside them.
+        let mut ckpt_window_s = 0.0f64;
+        let mut ckpt_window_work_s = 0.0f64;
+
+        let run_start = Instant::now();
+        let now = |start: &Instant| start.elapsed().as_secs_f64();
+        let mut last_ckpt_at = 0.0f64;
+
+        while state.step < cfg.steps as f32 {
+            let t_now = now(&run_start);
+
+            // -- failure? --
+            if let Some(_fired) = schedule.due(t_now) {
+                n_failures += 1;
+                events.push(Event { at: t_now, kind: EventKind::Failure });
+                if let Some(ctl) = controller.as_mut() {
+                    ctl.observe_failure();
+                }
+                // Let an in-flight (pre-failure, still valid) write drain;
+                // its tail is checkpoint time.
+                if writer.in_flight() {
+                    let t0 = Instant::now();
+                    if let Some(done) = writer.wait() {
+                        let d = done.map_err(CoordinatorError::Other)?;
+                        n_checkpoints += 1;
+                        events.push(Event {
+                            at: now(&run_start),
+                            kind: EventKind::CheckpointDone {
+                                step: d.step,
+                                seconds: d.duration.as_secs_f64(),
+                            },
+                        });
+                    }
+                    let drain = t0.elapsed().as_secs_f64();
+                    phases.add(Phase::Checkpoint, drain);
+                    ckpt_window_s += drain;
+                }
+                // Downtime.
+                std::thread::sleep(std::time::Duration::from_secs_f64(cfg.downtime_s));
+                phases.add(Phase::Down, cfg.downtime_s);
+                // Recovery: restore last durable checkpoint (or restart).
+                let t0 = Instant::now();
+                match store.load() {
+                    Ok((restored, _)) => {
+                        state = LitTrainState::from_state(&restored);
+                        if cfg.verify_on_restore {
+                            let loss = self.session.eval_lit(&state, state.next_batch)?;
+                            if !loss.is_finite() {
+                                return Err(CoordinatorError::Other(
+                                    "restored checkpoint produced non-finite loss".into(),
+                                ));
+                            }
+                        }
+                        events.push(Event {
+                            at: now(&run_start),
+                            kind: EventKind::Restored {
+                                step: state.step,
+                                seconds: t0.elapsed().as_secs_f64(),
+                            },
+                        });
+                    }
+                    Err(super::checkpoint::CheckpointError::Missing(_)) => {
+                        state = LitTrainState::from_state(&TrainState::initial(&self.dir)?);
+                        events.push(Event {
+                            at: now(&run_start),
+                            kind: EventKind::RestartedFromScratch,
+                        });
+                    }
+                    Err(e) => return Err(e.into()),
+                }
+                let recovery_secs = t0.elapsed().as_secs_f64();
+                phases.add(Phase::Recovery, recovery_secs);
+                if let Some(ctl) = controller.as_mut() {
+                    ctl.observe_restore(recovery_secs);
+                    if let Some(p) = ctl.period() {
+                        period_s = p.max(ctl.c_estimate() + step_s);
+                    }
+                }
+                // The period restarts after recovery.
+                last_ckpt_at = now(&run_start);
+                continue;
+            }
+
+            // -- checkpoint due? --
+            if !writer.in_flight() && t_now - last_ckpt_at >= period_s {
+                events.push(Event {
+                    at: t_now,
+                    kind: EventKind::CheckpointBegun { step: state.step },
+                });
+                match cfg.overlap {
+                    OverlapMode::Blocking => {
+                        let t0 = Instant::now();
+                        let snap = state.to_state()?;
+                        store.save(&snap)?;
+                        let secs = t0.elapsed().as_secs_f64();
+                        phases.add(Phase::Checkpoint, secs);
+                        ckpt_window_s += secs;
+                        n_checkpoints += 1;
+                        events.push(Event {
+                            at: now(&run_start),
+                            kind: EventKind::CheckpointDone { step: state.step, seconds: secs },
+                        });
+                        if let Some(ctl) = controller.as_mut() {
+                            ctl.observe_checkpoint(secs);
+                            if let Some(p) = ctl.period() {
+                                period_s = p.max(ctl.c_estimate() + step_s);
+                            }
+                        }
+                    }
+                    OverlapMode::Overlapped { .. } => {
+                        // Snapshot materialisation is the synchronous part
+                        // of a non-blocking checkpoint (the "copy to local
+                        // memory" of §2.1); the disk write then overlaps.
+                        let t0 = Instant::now();
+                        writer.begin(state.to_state()?);
+                        let snap_secs = t0.elapsed().as_secs_f64();
+                        phases.add(Phase::Checkpoint, snap_secs);
+                        ckpt_window_s += snap_secs;
+                    }
+                }
+                last_ckpt_at = now(&run_start);
+            }
+
+            // -- one training step --
+            let in_ckpt_window = writer.in_flight();
+            let t0 = Instant::now();
+            let loss = self.session.step_lit(&mut state)?;
+            let dt = t0.elapsed().as_secs_f64();
+            steps_executed += 1;
+            losses.push((state.step, loss));
+            if let Some(ctl) = controller.as_mut() {
+                ctl.observe_uptime(dt);
+            }
+            if in_ckpt_window {
+                phases.add(Phase::Checkpoint, dt);
+                ckpt_window_s += dt;
+                ckpt_window_work_s += step_s;
+            } else {
+                phases.add(Phase::Compute, dt);
+            }
+
+            // -- writer completion? --
+            if let Some(done) = writer.poll() {
+                let d = done.map_err(CoordinatorError::Other)?;
+                n_checkpoints += 1;
+                events.push(Event {
+                    at: now(&run_start),
+                    kind: EventKind::CheckpointDone {
+                        step: d.step,
+                        seconds: d.duration.as_secs_f64(),
+                    },
+                });
+                if let Some(ctl) = controller.as_mut() {
+                    ctl.observe_checkpoint(d.duration.as_secs_f64());
+                    if let Some(p) = ctl.period() {
+                        period_s = p.max(ctl.c_estimate() + step_s);
+                    }
+                }
+            }
+        }
+
+        // Drain a trailing write so the store is consistent.
+        if writer.in_flight() {
+            let t0 = Instant::now();
+            if let Some(done) = writer.wait() {
+                let d = done.map_err(CoordinatorError::Other)?;
+                n_checkpoints += 1;
+                events.push(Event {
+                    at: now(&run_start),
+                    kind: EventKind::CheckpointDone {
+                        step: d.step,
+                        seconds: d.duration.as_secs_f64(),
+                    },
+                });
+            }
+            let drain = t0.elapsed().as_secs_f64();
+            phases.add(Phase::Checkpoint, drain);
+            ckpt_window_s += drain;
+        }
+
+        let makespan_s = now(&run_start);
+        let omega_measured = if ckpt_window_s > 0.0 {
+            (ckpt_window_work_s / ckpt_window_s).min(1.0)
+        } else {
+            0.0
+        };
+        let energy = energy_of(
+            &phases,
+            &cfg.power,
+            match cfg.overlap {
+                OverlapMode::Blocking => 0.0,
+                OverlapMode::Overlapped { .. } => omega_measured,
+            },
+        );
+
+        Ok(RunReport {
+            policy: cfg.policy.name().to_string(),
+            period_s,
+            measured_c_s: c_s,
+            measured_r_s: r_s,
+            step_s,
+            omega_assumed: omega,
+            omega_measured,
+            makespan_s,
+            compute_s: phases.get(Phase::Compute),
+            checkpoint_s: phases.get(Phase::Checkpoint),
+            recovery_s: phases.get(Phase::Recovery),
+            down_s: phases.get(Phase::Down),
+            energy,
+            n_failures,
+            n_checkpoints,
+            steps_executed,
+            steps_target: cfg.steps,
+            losses,
+            events,
+            predicted_makespan_s: predicted_makespan,
+            predicted_energy,
+        })
+    }
+}
+
+// Integration tests (need artifacts + PJRT) live in
+// rust/tests/coordinator_e2e.rs.

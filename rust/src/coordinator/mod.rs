@@ -1,0 +1,43 @@
+//! Layer-3 coordinator: a fault-tolerant training runtime that applies
+//! the paper's checkpoint-period policies to a real PJRT workload.
+//!
+//! Topology (std threads + mpsc; no tokio in the offline vendor set):
+//!
+//! ```text
+//!  leader (control loop, real wall-clock)
+//!    ├── trainer           one PJRT train_step call per step (in-loop)
+//!    ├── checkpoint writer thread — serializes snapshots to disk;
+//!    │                     non-blocking mode lets training continue
+//!    │                     while the write is in flight (this IS the
+//!    │                     paper's ω-overlap, measured not assumed)
+//!    └── failure injector  pre-drawn exponential schedule; on firing,
+//!                          the leader discards live state, pays a
+//!                          downtime D, restores the last durable
+//!                          checkpoint (recovery R) and replays
+//! ```
+//!
+//! Energy is accounted per phase with the paper's power model
+//! ([`crate::energy`]); the run report carries everything EXPERIMENTS.md
+//! needs (makespan, energy breakdown, loss curve, measured C/R/ω).
+//!
+//! * [`checkpoint`] — durable checkpoint store (CRC-protected binary
+//!   format, atomic rename, async writer thread).
+//! * [`policy`] — period policies: AlgoT (Eq. 1), AlgoE (quadratic),
+//!   Young, Daly, fixed.
+//! * [`injector`] — reproducible failure schedules in wall-clock seconds.
+//! * [`leader`] — the control loop.
+//! * [`report`] — structured run results (+ JSON).
+
+pub mod adaptive;
+pub mod checkpoint;
+pub mod injector;
+pub mod leader;
+pub mod policy;
+pub mod report;
+
+pub use adaptive::AdaptiveController;
+pub use checkpoint::{AsyncCheckpointWriter, CheckpointStore};
+pub use injector::FailureSchedule;
+pub use leader::{Coordinator, CoordinatorConfig, OverlapMode};
+pub use policy::PeriodPolicy;
+pub use report::RunReport;

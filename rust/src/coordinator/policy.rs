@@ -1,0 +1,119 @@
+//! Checkpoint-period policies.
+//!
+//! The coordinator treats the period as a pluggable policy so AlgoT and
+//! AlgoE (the paper's two strategies) can be compared on identical runs,
+//! with Young/Daly as classical baselines and `Fixed` for ablations.
+
+use crate::model::energy::t_energy_opt;
+use crate::model::params::{ModelError, Scenario};
+use crate::model::time::{daly, t_time_opt, young};
+
+/// Which period to checkpoint with.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PeriodPolicy {
+    /// Time-optimal (Eq. 1) — the paper's AlgoT.
+    AlgoT,
+    /// Energy-optimal (quadratic root) — the paper's AlgoE.
+    AlgoE,
+    /// Young's `sqrt(2Cμ) + C`.
+    Young,
+    /// Daly's `sqrt(2C(μ+D+R)) + C`.
+    Daly,
+    /// A fixed period (same units as the scenario).
+    Fixed(f64),
+}
+
+impl PeriodPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PeriodPolicy::AlgoT => "algo-t",
+            PeriodPolicy::AlgoE => "algo-e",
+            PeriodPolicy::Young => "young",
+            PeriodPolicy::Daly => "daly",
+            PeriodPolicy::Fixed(_) => "fixed",
+        }
+    }
+
+    /// Parse a CLI-style name (`fixed:<value>` for fixed periods).
+    pub fn parse(s: &str) -> Option<PeriodPolicy> {
+        match s {
+            "algo-t" | "algot" | "time" => Some(PeriodPolicy::AlgoT),
+            "algo-e" | "algoe" | "energy" => Some(PeriodPolicy::AlgoE),
+            "young" => Some(PeriodPolicy::Young),
+            "daly" => Some(PeriodPolicy::Daly),
+            other => other
+                .strip_prefix("fixed:")
+                .and_then(|v| v.parse::<f64>().ok())
+                .map(PeriodPolicy::Fixed),
+        }
+    }
+
+    /// The period this policy checkpoints with, clamped to the
+    /// scenario's feasible range.
+    pub fn period(&self, s: &Scenario) -> Result<f64, ModelError> {
+        match self {
+            PeriodPolicy::AlgoT => t_time_opt(s),
+            PeriodPolicy::AlgoE => t_energy_opt(s),
+            PeriodPolicy::Young => s.clamp_period(young(s)),
+            PeriodPolicy::Daly => s.clamp_period(daly(s)),
+            PeriodPolicy::Fixed(t) => s.clamp_period(*t),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::{CheckpointParams, PowerParams};
+
+    fn scenario() -> Scenario {
+        let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, 0.5).unwrap();
+        let power = PowerParams::new(10.0, 10.0, 100.0, 0.0).unwrap();
+        Scenario::new(ckpt, power, 300.0, 10_000.0).unwrap()
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for (s, p) in [
+            ("algo-t", PeriodPolicy::AlgoT),
+            ("algo-e", PeriodPolicy::AlgoE),
+            ("young", PeriodPolicy::Young),
+            ("daly", PeriodPolicy::Daly),
+            ("fixed:42.5", PeriodPolicy::Fixed(42.5)),
+        ] {
+            assert_eq!(PeriodPolicy::parse(s), Some(p));
+        }
+        assert_eq!(PeriodPolicy::parse("nope"), None);
+        assert_eq!(PeriodPolicy::parse("fixed:abc"), None);
+    }
+
+    #[test]
+    fn periods_ordered_as_expected() {
+        let s = scenario();
+        let t = PeriodPolicy::AlgoT.period(&s).unwrap();
+        let e = PeriodPolicy::AlgoE.period(&s).unwrap();
+        let y = PeriodPolicy::Young.period(&s).unwrap();
+        let d = PeriodPolicy::Daly.period(&s).unwrap();
+        // rho = 5.5 > 1 so AlgoE stretches the period.
+        assert!(e > t, "e={e} t={t}");
+        assert!(d >= y, "d={d} y={y}");
+        // All feasible.
+        for p in [t, e, y, d] {
+            assert!(p >= s.min_period());
+        }
+    }
+
+    #[test]
+    fn fixed_clamps() {
+        let s = scenario();
+        assert_eq!(PeriodPolicy::Fixed(1.0).period(&s).unwrap(), s.min_period());
+        let big = PeriodPolicy::Fixed(1e9).period(&s).unwrap();
+        assert!(big < s.domain().1);
+    }
+
+    #[test]
+    fn names_stable() {
+        assert_eq!(PeriodPolicy::AlgoT.name(), "algo-t");
+        assert_eq!(PeriodPolicy::Fixed(1.0).name(), "fixed");
+    }
+}

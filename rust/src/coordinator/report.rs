@@ -1,0 +1,196 @@
+//! Structured results of a coordinator run.
+
+use crate::energy::EnergyBreakdown;
+use crate::util::json::Json;
+
+/// One logged event (failure, checkpoint, restore…).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    /// Seconds from run start.
+    pub at: f64,
+    pub kind: EventKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    CheckpointBegun { step: f32 },
+    CheckpointDone { step: f32, seconds: f64 },
+    Failure,
+    Restored { step: f32, seconds: f64 },
+    RestartedFromScratch,
+}
+
+impl EventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::CheckpointBegun { .. } => "checkpoint_begun",
+            EventKind::CheckpointDone { .. } => "checkpoint_done",
+            EventKind::Failure => "failure",
+            EventKind::Restored { .. } => "restored",
+            EventKind::RestartedFromScratch => "restarted_from_scratch",
+        }
+    }
+}
+
+/// Everything a run produces; EXPERIMENTS.md tables are printed from
+/// this, and `to_json` feeds machine-readable logs.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub policy: String,
+    /// Chosen checkpoint period (seconds).
+    pub period_s: f64,
+    /// Calibration measurements (seconds).
+    pub measured_c_s: f64,
+    pub measured_r_s: f64,
+    pub step_s: f64,
+    /// ω used for the period computation and the ω actually measured
+    /// (steps completed inside checkpoint windows / window capacity).
+    pub omega_assumed: f64,
+    pub omega_measured: f64,
+    /// Wall-clock makespan (seconds).
+    pub makespan_s: f64,
+    /// Phase durations (seconds).
+    pub compute_s: f64,
+    pub checkpoint_s: f64,
+    pub recovery_s: f64,
+    pub down_s: f64,
+    pub energy: EnergyBreakdown,
+    pub n_failures: u64,
+    pub n_checkpoints: u64,
+    /// Steps executed including re-execution after rollbacks.
+    pub steps_executed: u64,
+    /// Target steps (the workload's `T_base` in step units).
+    pub steps_target: u64,
+    /// (step, loss) samples.
+    pub losses: Vec<(f32, f32)>,
+    pub events: Vec<Event>,
+    /// Model predictions for this run's scenario (for side-by-side).
+    pub predicted_makespan_s: f64,
+    pub predicted_energy: f64,
+}
+
+impl RunReport {
+    /// Fraction of executed steps that were re-execution.
+    pub fn re_exec_fraction(&self) -> f64 {
+        if self.steps_executed == 0 {
+            return 0.0;
+        }
+        1.0 - self.steps_target as f64 / self.steps_executed as f64
+    }
+
+    pub fn final_loss(&self) -> Option<f32> {
+        self.losses.last().map(|&(_, l)| l)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("policy", Json::Str(self.policy.clone())),
+            ("period_s", Json::Num(self.period_s)),
+            ("measured_c_s", Json::Num(self.measured_c_s)),
+            ("measured_r_s", Json::Num(self.measured_r_s)),
+            ("step_s", Json::Num(self.step_s)),
+            ("omega_assumed", Json::Num(self.omega_assumed)),
+            ("omega_measured", Json::Num(self.omega_measured)),
+            ("makespan_s", Json::Num(self.makespan_s)),
+            ("compute_s", Json::Num(self.compute_s)),
+            ("checkpoint_s", Json::Num(self.checkpoint_s)),
+            ("recovery_s", Json::Num(self.recovery_s)),
+            ("down_s", Json::Num(self.down_s)),
+            ("energy_total", Json::Num(self.energy.total)),
+            ("energy_static", Json::Num(self.energy.static_e)),
+            ("energy_cal", Json::Num(self.energy.cal_e)),
+            ("energy_io", Json::Num(self.energy.io_e)),
+            ("energy_down", Json::Num(self.energy.down_e)),
+            ("n_failures", Json::Num(self.n_failures as f64)),
+            ("n_checkpoints", Json::Num(self.n_checkpoints as f64)),
+            ("steps_executed", Json::Num(self.steps_executed as f64)),
+            ("steps_target", Json::Num(self.steps_target as f64)),
+            ("re_exec_fraction", Json::Num(self.re_exec_fraction())),
+            ("predicted_makespan_s", Json::Num(self.predicted_makespan_s)),
+            ("predicted_energy", Json::Num(self.predicted_energy)),
+            (
+                "losses",
+                Json::Arr(
+                    self.losses
+                        .iter()
+                        .map(|&(s, l)| Json::arr_f64(&[s as f64, l as f64]))
+                        .collect(),
+                ),
+            ),
+            (
+                "events",
+                Json::Arr(
+                    self.events
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("at", Json::Num(e.at)),
+                                ("kind", Json::Str(e.kind.name().into())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> RunReport {
+        RunReport {
+            policy: "algo-t".into(),
+            period_s: 5.0,
+            measured_c_s: 0.1,
+            measured_r_s: 0.05,
+            step_s: 0.02,
+            omega_assumed: 0.9,
+            omega_measured: 0.85,
+            makespan_s: 100.0,
+            compute_s: 90.0,
+            checkpoint_s: 8.0,
+            recovery_s: 1.0,
+            down_s: 1.0,
+            energy: EnergyBreakdown {
+                static_e: 1000.0,
+                cal_e: 900.0,
+                io_e: 900.0,
+                down_e: 0.0,
+                total: 2800.0,
+            },
+            n_failures: 2,
+            n_checkpoints: 18,
+            steps_executed: 220,
+            steps_target: 200,
+            losses: vec![(1.0, 5.5), (200.0, 0.3)],
+            events: vec![Event { at: 10.0, kind: EventKind::Failure }],
+            predicted_makespan_s: 98.0,
+            predicted_energy: 2700.0,
+        }
+    }
+
+    #[test]
+    fn re_exec_fraction_math() {
+        let r = report();
+        assert!((r.re_exec_fraction() - (1.0 - 200.0 / 220.0)).abs() < 1e-12);
+        assert_eq!(r.final_loss(), Some(0.3));
+    }
+
+    #[test]
+    fn json_roundtrips_and_has_fields() {
+        let r = report();
+        let j = r.to_json();
+        let parsed = crate::util::json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.req_f64("makespan_s").unwrap(), 100.0);
+        assert_eq!(parsed.req_str("policy").unwrap(), "algo-t");
+        assert_eq!(parsed.get("losses").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(
+            parsed.get("events").unwrap().as_arr().unwrap()[0]
+                .req_str("kind")
+                .unwrap(),
+            "failure"
+        );
+    }
+}

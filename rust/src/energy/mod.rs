@@ -1,0 +1,176 @@
+//! Phase-based energy accounting for *real* runs (§2.2 applied to the
+//! coordinator).
+//!
+//! No power meter exists on this machine, so — exactly like the paper —
+//! energy is `Σ phase_time × phase_power` with the phase powers taken
+//! from the scenario's [`crate::model::params::PowerParams`]:
+//!
+//! | phase      | power                        |
+//! |------------|------------------------------|
+//! | Compute    | `P_Static + P_Cal`           |
+//! | Checkpoint | `P_Static + ω·P_Cal + P_IO`  |
+//! | Recovery   | `P_Static + P_IO`            |
+//! | Down       | `P_Static + P_Down`          |
+//! | Idle       | `P_Static`                   |
+//!
+//! (ω enters because a non-blocking checkpoint keeps the CPU doing useful
+//! work at rate ω while the I/O system writes — same convention as the
+//! simulator and the analytical `T_Cal`.)
+
+use crate::model::params::PowerParams;
+
+/// The coordinator's power states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Compute,
+    Checkpoint,
+    Recovery,
+    Down,
+    Idle,
+}
+
+pub const ALL_PHASES: [Phase; 5] =
+    [Phase::Compute, Phase::Checkpoint, Phase::Recovery, Phase::Down, Phase::Idle];
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Compute => "compute",
+            Phase::Checkpoint => "checkpoint",
+            Phase::Recovery => "recovery",
+            Phase::Down => "down",
+            Phase::Idle => "idle",
+        }
+    }
+
+    fn index(&self) -> usize {
+        match self {
+            Phase::Compute => 0,
+            Phase::Checkpoint => 1,
+            Phase::Recovery => 2,
+            Phase::Down => 3,
+            Phase::Idle => 4,
+        }
+    }
+}
+
+/// Accumulates wall time per phase.
+#[derive(Debug, Clone, Default)]
+pub struct PhaseTracker {
+    seconds: [f64; 5],
+}
+
+impl PhaseTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, phase: Phase, seconds: f64) {
+        debug_assert!(seconds >= 0.0, "negative phase duration {seconds}");
+        self.seconds[phase.index()] += seconds;
+    }
+
+    pub fn get(&self, phase: Phase) -> f64 {
+        self.seconds[phase.index()]
+    }
+
+    pub fn total(&self) -> f64 {
+        self.seconds.iter().sum()
+    }
+
+    /// Merge another tracker (e.g. a worker thread's) into this one.
+    pub fn merge(&mut self, other: &PhaseTracker) {
+        for i in 0..self.seconds.len() {
+            self.seconds[i] += other.seconds[i];
+        }
+    }
+}
+
+/// Energy breakdown of a run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyBreakdown {
+    pub static_e: f64,
+    pub cal_e: f64,
+    pub io_e: f64,
+    pub down_e: f64,
+    pub total: f64,
+}
+
+/// Apply the paper's power model to measured phase times.
+/// `omega` is the effective compute rate during checkpoints.
+pub fn energy_of(tracker: &PhaseTracker, power: &PowerParams, omega: f64) -> EnergyBreakdown {
+    let compute = tracker.get(Phase::Compute);
+    let ckpt = tracker.get(Phase::Checkpoint);
+    let rec = tracker.get(Phase::Recovery);
+    let down = tracker.get(Phase::Down);
+
+    let static_e = power.p_static * tracker.total();
+    let cal_e = power.p_cal * (compute + omega * ckpt);
+    let io_e = power.p_io * (ckpt + rec);
+    let down_e = power.p_down * down;
+    EnergyBreakdown { static_e, cal_e, io_e, down_e, total: static_e + cal_e + io_e + down_e }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn power() -> PowerParams {
+        PowerParams::new(10.0, 10.0, 100.0, 5.0).unwrap()
+    }
+
+    #[test]
+    fn accumulates_and_totals() {
+        let mut t = PhaseTracker::new();
+        t.add(Phase::Compute, 10.0);
+        t.add(Phase::Compute, 5.0);
+        t.add(Phase::Checkpoint, 2.0);
+        assert_eq!(t.get(Phase::Compute), 15.0);
+        assert_eq!(t.total(), 17.0);
+        assert_eq!(t.get(Phase::Idle), 0.0);
+    }
+
+    #[test]
+    fn merge_adds_componentwise() {
+        let mut a = PhaseTracker::new();
+        a.add(Phase::Down, 1.0);
+        let mut b = PhaseTracker::new();
+        b.add(Phase::Down, 2.0);
+        b.add(Phase::Recovery, 3.0);
+        a.merge(&b);
+        assert_eq!(a.get(Phase::Down), 3.0);
+        assert_eq!(a.get(Phase::Recovery), 3.0);
+    }
+
+    #[test]
+    fn energy_formula_blocking() {
+        let mut t = PhaseTracker::new();
+        t.add(Phase::Compute, 100.0);
+        t.add(Phase::Checkpoint, 10.0);
+        t.add(Phase::Recovery, 4.0);
+        t.add(Phase::Down, 2.0);
+        let e = energy_of(&t, &power(), 0.0);
+        assert_eq!(e.static_e, 10.0 * 116.0);
+        assert_eq!(e.cal_e, 10.0 * 100.0);
+        assert_eq!(e.io_e, 100.0 * 14.0);
+        assert_eq!(e.down_e, 5.0 * 2.0);
+        assert_eq!(e.total, e.static_e + e.cal_e + e.io_e + e.down_e);
+    }
+
+    #[test]
+    fn omega_credits_checkpoint_cpu() {
+        let mut t = PhaseTracker::new();
+        t.add(Phase::Compute, 100.0);
+        t.add(Phase::Checkpoint, 10.0);
+        let blocking = energy_of(&t, &power(), 0.0);
+        let overlapped = energy_of(&t, &power(), 1.0);
+        assert_eq!(overlapped.cal_e - blocking.cal_e, 10.0 * 10.0);
+    }
+
+    #[test]
+    fn phase_names_unique() {
+        let names: std::collections::BTreeSet<_> =
+            ALL_PHASES.iter().map(|p| p.name()).collect();
+        assert_eq!(names.len(), ALL_PHASES.len());
+    }
+}

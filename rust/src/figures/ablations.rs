@@ -1,0 +1,301 @@
+//! Ablations beyond the paper (DESIGN.md §8):
+//!
+//! * **ω sweep** — how the optimal periods and the energy gain move from
+//!   fully blocking (ω=0) to fully overlapped (ω=1) checkpoints.
+//! * **first-order accuracy** — closed-form optima vs numeric argmins of
+//!   the exact closed-form objectives as C/μ grows.
+//! * **γ sweep** — the paper sets `P_Down = 0`; how sensitive are the
+//!   ratios to that assumption?
+//! * **MSK comparison** — the §3.2 side note quantified: energy penalty
+//!   of checkpointing with MSK's period under the refined model.
+
+use crate::model::energy::{t_energy_opt_numeric, t_time_opt_numeric};
+use crate::model::msk::{compare_with_msk, MskComparison};
+use crate::model::params::{CheckpointParams, PowerParams, Scenario};
+use crate::model::ratios::compare;
+use crate::model::time::t_time_opt_raw;
+use crate::util::table::{fnum, Table};
+
+/// One row of the ω sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct OmegaRow {
+    pub omega: f64,
+    pub t_time: f64,
+    pub t_energy: f64,
+    pub energy_gain_pct: f64,
+    pub time_overhead_pct: f64,
+}
+
+/// Sweep ω at the Fig. 1 reference point (μ = 300 min, ρ = 5.5).
+pub fn omega_sweep(n: usize) -> Vec<OmegaRow> {
+    assert!(n >= 2);
+    (0..n)
+        .map(|i| {
+            let omega = i as f64 / (n - 1) as f64;
+            let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, omega).unwrap();
+            let power = PowerParams::from_rho(5.5, 1.0, 0.0).unwrap();
+            let s = Scenario::new(ckpt, power, 300.0, 10_000.0).unwrap();
+            let cmp = compare(&s).unwrap();
+            OmegaRow {
+                omega,
+                t_time: cmp.t_time,
+                t_energy: cmp.t_energy,
+                energy_gain_pct: cmp.energy_gain_pct(),
+                time_overhead_pct: cmp.time_overhead_pct(),
+            }
+        })
+        .collect()
+}
+
+pub fn omega_table(rows: &[OmegaRow]) -> Table {
+    let mut t = Table::new(&[
+        "omega",
+        "T_time_min",
+        "T_energy_min",
+        "energy_gain_pct",
+        "time_overhead_pct",
+    ]);
+    for r in rows {
+        t.row(&[
+            fnum(r.omega, 3),
+            fnum(r.t_time, 2),
+            fnum(r.t_energy, 2),
+            fnum(r.energy_gain_pct, 2),
+            fnum(r.time_overhead_pct, 2),
+        ]);
+    }
+    t
+}
+
+/// One row of the first-order accuracy study.
+#[derive(Debug, Clone, Copy)]
+pub struct AccuracyRow {
+    /// C/μ — the small parameter of the first-order expansion.
+    pub c_over_mu: f64,
+    pub t_time_formula: f64,
+    pub t_time_numeric: f64,
+    pub time_rel_err: f64,
+    pub t_energy_quadratic: f64,
+    pub t_energy_numeric: f64,
+    pub energy_rel_err: f64,
+}
+
+/// Scan C/μ from 1/1000 to ~1/3 at the Fig. 1 power point.
+pub fn first_order_accuracy(n: usize) -> Vec<AccuracyRow> {
+    assert!(n >= 2);
+    (0..n)
+        .map(|i| {
+            // log-spaced C/mu in [1e-3, 0.3]
+            let frac = 10f64.powf(-3.0 + (2.48) * i as f64 / (n - 1) as f64);
+            let mu = 300.0;
+            let c = frac * mu;
+            let ckpt = CheckpointParams::new(c, c, 0.1 * c, 0.5).unwrap();
+            let power = PowerParams::from_rho(5.5, 1.0, 0.0).unwrap();
+            let s = Scenario::new(ckpt, power, mu, 10_000.0).unwrap();
+            let tt_f = t_time_opt_raw(&s);
+            let tt_n = t_time_opt_numeric(&s);
+            let te_f = crate::model::energy::t_energy_opt_raw(&s);
+            let te_n = t_energy_opt_numeric(&s);
+            AccuracyRow {
+                c_over_mu: frac,
+                t_time_formula: tt_f,
+                t_time_numeric: tt_n,
+                time_rel_err: crate::util::stats::rel_err(tt_f, tt_n),
+                t_energy_quadratic: te_f,
+                t_energy_numeric: te_n,
+                energy_rel_err: crate::util::stats::rel_err(te_f, te_n),
+            }
+        })
+        .collect()
+}
+
+pub fn accuracy_table(rows: &[AccuracyRow]) -> Table {
+    let mut t = Table::new(&[
+        "c_over_mu",
+        "T_time_eq1",
+        "T_time_numeric",
+        "time_rel_err",
+        "T_energy_quad",
+        "T_energy_numeric",
+        "energy_rel_err",
+    ]);
+    for r in rows {
+        t.row(&[
+            fnum(r.c_over_mu, 5),
+            fnum(r.t_time_formula, 3),
+            fnum(r.t_time_numeric, 3),
+            format!("{:.2e}", r.time_rel_err),
+            fnum(r.t_energy_quadratic, 3),
+            fnum(r.t_energy_numeric, 3),
+            format!("{:.2e}", r.energy_rel_err),
+        ]);
+    }
+    t
+}
+
+/// γ sweep at the Fig. 1 point: does `P_Down > 0` change the story?
+pub fn gamma_sweep(n: usize) -> Vec<(f64, f64, f64)> {
+    (0..n)
+        .map(|i| {
+            let gamma = 2.0 * i as f64 / (n - 1).max(1) as f64;
+            let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, 0.5).unwrap();
+            let power = PowerParams::from_rho(5.5, 1.0, gamma).unwrap();
+            let s = Scenario::new(ckpt, power, 300.0, 10_000.0).unwrap();
+            let cmp = compare(&s).unwrap();
+            (gamma, cmp.energy_gain_pct(), cmp.time_overhead_pct())
+        })
+        .collect()
+}
+
+/// One row of the first-order-vs-exact (renewal) model comparison.
+#[derive(Debug, Clone, Copy)]
+pub struct ExactRow {
+    pub mu: f64,
+    /// First-order AlgoE period vs exact energy-optimal period.
+    pub t_energy_first: f64,
+    pub t_energy_exact: f64,
+    /// Exact energy at each period: how much the first-order period
+    /// actually costs (in % over the exact optimum).
+    pub energy_penalty_pct: f64,
+    /// Same question for AlgoT/makespan.
+    pub t_time_first: f64,
+    pub t_time_exact: f64,
+    pub time_penalty_pct: f64,
+}
+
+/// How much the paper's first-order periods cost under the exact
+/// renewal objective, across the μ range (an answer the paper could not
+/// compute: the first-order model cannot price its own error).
+pub fn first_order_vs_exact(mus: &[f64]) -> Vec<ExactRow> {
+    use crate::model::exact::{e_final_exact, t_energy_opt_exact, t_final_exact, t_time_opt_exact, RecoveryModel};
+    mus.iter()
+        .map(|&mu| {
+            let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, 0.5).unwrap();
+            let power = PowerParams::from_rho(5.5, 1.0, 0.0).unwrap();
+            let s = Scenario::new(ckpt, power, mu, 10_000.0).unwrap();
+            let m = RecoveryModel::Ideal;
+            let tt_f = crate::model::t_time_opt(&s).unwrap();
+            let tt_x = t_time_opt_exact(&s, m);
+            let te_f = crate::model::t_energy_opt(&s).unwrap();
+            let te_x = t_energy_opt_exact(&s, m);
+            ExactRow {
+                mu,
+                t_energy_first: te_f,
+                t_energy_exact: te_x,
+                energy_penalty_pct: (e_final_exact(&s, te_f, m) / e_final_exact(&s, te_x, m)
+                    - 1.0)
+                    * 100.0,
+                t_time_first: tt_f,
+                t_time_exact: tt_x,
+                time_penalty_pct: (t_final_exact(&s, tt_f, m) / t_final_exact(&s, tt_x, m)
+                    - 1.0)
+                    * 100.0,
+            }
+        })
+        .collect()
+}
+
+pub fn exact_table(rows: &[ExactRow]) -> Table {
+    let mut t = Table::new(&[
+        "mu_min",
+        "T_time_eq1",
+        "T_time_exact",
+        "time_penalty_pct",
+        "T_energy_quad",
+        "T_energy_exact",
+        "energy_penalty_pct",
+    ]);
+    for r in rows {
+        t.row(&[
+            fnum(r.mu, 0),
+            fnum(r.t_time_first, 2),
+            fnum(r.t_time_exact, 2),
+            fnum(r.time_penalty_pct, 3),
+            fnum(r.t_energy_first, 2),
+            fnum(r.t_energy_exact, 2),
+            fnum(r.energy_penalty_pct, 3),
+        ]);
+    }
+    t
+}
+
+/// MSK comparison at the paper's blocking point (ω = 0 required by MSK).
+pub fn msk_comparison(mu: f64, rho: f64) -> MskComparison {
+    let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, 0.0).unwrap();
+    let power = PowerParams::from_rho(rho, 1.0, 0.0).unwrap();
+    let s = Scenario::new(ckpt, power, mu, 10_000.0).unwrap();
+    compare_with_msk(&s).expect("in domain")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn omega_sweep_shape() {
+        let rows = omega_sweep(11);
+        assert_eq!(rows.len(), 11);
+        // Blocking endpoint: Eq.1 reduces to ~sqrt(2C(mu-D-R)).
+        assert!((rows[0].t_time - (2.0f64 * 10.0 * (300.0 - 11.0)).sqrt()).abs() < 1.0);
+        // Fully-overlapped endpoint: AlgoT clamps to C.
+        assert_eq!(rows[10].t_time, 10.0);
+        // Gains stay positive everywhere rho > 1.
+        assert!(rows.iter().all(|r| r.energy_gain_pct >= -1e-9));
+        assert_eq!(omega_table(&rows).n_rows(), 11);
+    }
+
+    #[test]
+    fn first_order_err_grows_with_c_over_mu() {
+        let rows = first_order_accuracy(10);
+        // Small C/mu: formulas agree with numeric argmin tightly.
+        assert!(rows[0].time_rel_err < 1e-5, "{:?}", rows[0]);
+        assert!(rows[0].energy_rel_err < 1e-4, "{:?}", rows[0]);
+        // The quadratic is the exact stationarity condition of the
+        // closed-form E_final, so its error stays tiny even at large
+        // C/mu; Eq. 1 likewise. What grows is the *model's* truncation
+        // error (unobservable here) — we assert the optima stay finite
+        // and feasible.
+        for r in &rows {
+            assert!(r.t_time_numeric.is_finite() && r.t_energy_numeric > 0.0);
+        }
+        assert_eq!(accuracy_table(&rows).n_rows(), 10);
+    }
+
+    #[test]
+    fn gamma_barely_moves_the_needle() {
+        // D is tiny compared to mu, so even gamma=2 shifts gains by <2pp.
+        let rows = gamma_sweep(5);
+        let gains: Vec<f64> = rows.iter().map(|r| r.1).collect();
+        let spread = gains.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+            - gains.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(spread < 2.0, "spread={spread}");
+    }
+
+    #[test]
+    fn first_order_penalty_small_at_large_mu_grows_at_small_mu() {
+        let rows = first_order_vs_exact(&[40.0, 120.0, 300.0, 3000.0]);
+        // Large mu: first-order periods are essentially free.
+        let big = rows.last().unwrap();
+        assert!(big.time_penalty_pct < 0.1, "{big:?}");
+        assert!(big.energy_penalty_pct < 0.5, "{big:?}");
+        // Small mu: the first-order period materially overpays.
+        let small = &rows[0];
+        assert!(
+            small.time_penalty_pct > big.time_penalty_pct,
+            "{small:?} vs {big:?}"
+        );
+        // Penalties are nonnegative by construction (exact opt is argmin).
+        for r in &rows {
+            assert!(r.time_penalty_pct >= -1e-9, "{r:?}");
+            assert!(r.energy_penalty_pct >= -1e-9, "{r:?}");
+        }
+        assert_eq!(exact_table(&rows).n_rows(), 4);
+    }
+
+    #[test]
+    fn msk_penalty_positive() {
+        let cmp = msk_comparison(300.0, 5.5);
+        assert!(cmp.penalty_pct >= 0.0);
+        assert!(cmp.t_msk != cmp.t_algo_e);
+    }
+}

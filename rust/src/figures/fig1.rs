@@ -1,0 +1,145 @@
+//! Figure 1: time ratio (AlgoE/AlgoT) and energy ratio (AlgoT/AlgoE) as
+//! functions of ρ, one curve per μ ∈ {30, 60, 120, 300} min.
+//!
+//! Parameters: C = R = 10 min, D = 1 min, γ = 0, ω = 1/2 (§4). The two
+//! arrows in the paper's plot mark ρ = 5.5 and ρ = 7.
+
+use crate::config::presets::fig1_scenario;
+use crate::model::ratios::compare;
+use crate::util::table::{fnum, Table};
+
+/// The μ values plotted in the paper (minutes).
+pub const MUS: [f64; 4] = [30.0, 60.0, 120.0, 300.0];
+
+/// The paper's two emphasised ρ values.
+pub const RHO_ARROWS: [f64; 2] = [5.5, 7.0];
+
+/// One point of the figure.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Point {
+    pub mu: f64,
+    pub rho: f64,
+    pub time_ratio: f64,
+    pub energy_ratio: f64,
+    pub t_time: f64,
+    pub t_energy: f64,
+}
+
+/// Uniform ρ grid over `[1, 20]` (the plotted range).
+pub fn rho_grid(n: usize) -> Vec<f64> {
+    assert!(n >= 2);
+    (0..n).map(|i| 1.0 + 19.0 * i as f64 / (n - 1) as f64).collect()
+}
+
+/// Compute the full figure: every (μ, ρ) pair.
+pub fn series(rhos: &[f64]) -> Vec<Point> {
+    let mut out = Vec::with_capacity(rhos.len() * MUS.len());
+    for &mu in &MUS {
+        for &rho in rhos {
+            let s = fig1_scenario(mu, rho);
+            let cmp = compare(&s).expect("fig1 scenario in domain");
+            out.push(Point {
+                mu,
+                rho,
+                time_ratio: cmp.time_ratio(),
+                energy_ratio: cmp.energy_ratio(),
+                t_time: cmp.t_time,
+                t_energy: cmp.t_energy,
+            });
+        }
+    }
+    out
+}
+
+/// Render as a table (one row per point).
+pub fn table(points: &[Point]) -> Table {
+    let mut t = Table::new(&[
+        "mu_min",
+        "rho",
+        "time_ratio_E_over_T",
+        "energy_ratio_T_over_E",
+        "T_time_min",
+        "T_energy_min",
+    ]);
+    for p in points {
+        t.row(&[
+            fnum(p.mu, 0),
+            fnum(p.rho, 3),
+            fnum(p.time_ratio, 5),
+            fnum(p.energy_ratio, 5),
+            fnum(p.t_time, 2),
+            fnum(p.t_energy, 2),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_range() {
+        let g = rho_grid(20);
+        assert_eq!(g.len(), 20);
+        assert_eq!(g[0], 1.0);
+        assert!((g[19] - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn series_has_paper_shape() {
+        let pts = series(&rho_grid(40));
+        assert_eq!(pts.len(), 160);
+        // Every ratio >= 1.
+        assert!(pts.iter().all(|p| p.time_ratio >= 1.0 - 1e-12));
+        assert!(pts.iter().all(|p| p.energy_ratio >= 1.0 - 1e-12));
+        // Energy ratio is nondecreasing in rho at fixed mu.
+        for &mu in &MUS {
+            let curve: Vec<&Point> =
+                pts.iter().filter(|p| p.mu == mu).collect();
+            for w in curve.windows(2) {
+                assert!(
+                    w[1].energy_ratio >= w[0].energy_ratio - 1e-9,
+                    "mu={mu} rho {} -> {}",
+                    w[0].rho,
+                    w[1].rho
+                );
+            }
+        }
+        // At the paper's rho=5.5, mu=300: >15% energy gain (paper: >20%
+        // around here) and modest time overhead.
+        let p = pts
+            .iter()
+            .filter(|p| p.mu == 300.0)
+            .min_by(|a, b| {
+                (a.rho - 5.5).abs().partial_cmp(&(b.rho - 5.5).abs()).unwrap()
+            })
+            .unwrap();
+        assert!(p.energy_ratio > 1.18, "energy ratio {}", p.energy_ratio);
+        assert!(p.time_ratio < 1.25, "time ratio {}", p.time_ratio);
+    }
+
+    #[test]
+    fn larger_mu_gives_larger_gain_at_fixed_rho() {
+        // The paper's Fig 1 curves are ordered by mu: bigger mu (fewer
+        // failures) => AlgoE can stretch the period more => more gain.
+        let pts = series(&[7.0]);
+        let mut by_mu: Vec<&Point> = pts.iter().collect();
+        by_mu.sort_by(|a, b| a.mu.partial_cmp(&b.mu).unwrap());
+        for w in by_mu.windows(2) {
+            assert!(
+                w[1].energy_ratio >= w[0].energy_ratio - 1e-9,
+                "mu {} -> {}",
+                w[0].mu,
+                w[1].mu
+            );
+        }
+    }
+
+    #[test]
+    fn table_rows_match_points() {
+        let pts = series(&rho_grid(5));
+        let t = table(&pts);
+        assert_eq!(t.n_rows(), pts.len());
+    }
+}

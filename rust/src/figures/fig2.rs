@@ -1,0 +1,113 @@
+//! Figure 2: the two ratio surfaces over the (μ, ρ) plane.
+//!
+//! (a) energy ratio of AlgoT over AlgoE; (b) execution-time ratio of
+//! AlgoE over AlgoT. Same C/R/D/ω parameters as Fig. 1.
+
+use crate::config::presets::fig2_scenario;
+use crate::model::ratios::compare;
+use crate::util::table::{fnum, Table};
+
+/// A grid cell of the surface.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Cell {
+    pub mu: f64,
+    pub rho: f64,
+    pub time_ratio: f64,
+    pub energy_ratio: f64,
+}
+
+/// μ axis: uniform in `[30, 300]` minutes (the paper's plotted range).
+pub fn mu_grid(n: usize) -> Vec<f64> {
+    assert!(n >= 2);
+    (0..n).map(|i| 30.0 + 270.0 * i as f64 / (n - 1) as f64).collect()
+}
+
+/// ρ axis: uniform in `[1, 20]`.
+pub fn rho_grid(n: usize) -> Vec<f64> {
+    assert!(n >= 2);
+    (0..n).map(|i| 1.0 + 19.0 * i as f64 / (n - 1) as f64).collect()
+}
+
+/// Compute the surface row-major (μ outer, ρ inner).
+pub fn grid(mus: &[f64], rhos: &[f64]) -> Vec<Cell> {
+    let mut out = Vec::with_capacity(mus.len() * rhos.len());
+    for &mu in mus {
+        for &rho in rhos {
+            let s = fig2_scenario(mu, rho);
+            let cmp = compare(&s).expect("fig2 scenario in domain");
+            out.push(Cell {
+                mu,
+                rho,
+                time_ratio: cmp.time_ratio(),
+                energy_ratio: cmp.energy_ratio(),
+            });
+        }
+    }
+    out
+}
+
+/// Long-format table (one row per cell) — ready for any surface plotter.
+pub fn table(cells: &[Cell]) -> Table {
+    let mut t = Table::new(&["mu_min", "rho", "time_ratio_E_over_T", "energy_ratio_T_over_E"]);
+    for c in cells {
+        t.row(&[
+            fnum(c.mu, 1),
+            fnum(c.rho, 3),
+            fnum(c.time_ratio, 5),
+            fnum(c.energy_ratio, 5),
+        ]);
+    }
+    t
+}
+
+/// Max energy gain (%) over the surface — the number the paper's
+/// conclusion quotes ("more than 20% at μ = 300").
+pub fn max_energy_gain_pct(cells: &[Cell]) -> f64 {
+    cells
+        .iter()
+        .map(|c| (1.0 - 1.0 / c.energy_ratio) * 100.0)
+        .fold(f64::NEG_INFINITY, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn surface_dimensions() {
+        let cells = grid(&mu_grid(5), &rho_grid(7));
+        assert_eq!(cells.len(), 35);
+        assert_eq!(table(&cells).n_rows(), 35);
+    }
+
+    #[test]
+    fn surface_monotone_in_rho_for_energy() {
+        let mus = mu_grid(4);
+        let rhos = rho_grid(10);
+        let cells = grid(&mus, &rhos);
+        for (i, _) in mus.iter().enumerate() {
+            let row = &cells[i * rhos.len()..(i + 1) * rhos.len()];
+            for w in row.windows(2) {
+                assert!(w[1].energy_ratio >= w[0].energy_ratio - 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn paper_conclusion_gain_exceeds_20pct() {
+        // At mu = 300 and large rho the paper reports > 20% energy gain.
+        let cells = grid(&[300.0], &rho_grid(20));
+        assert!(max_energy_gain_pct(&cells) > 20.0);
+    }
+
+    #[test]
+    fn unity_corner_at_rho_1() {
+        // rho = 1: I/O power == CPU power, energy ~ time objective =>
+        // nearly identical periods, ratios ~ 1.
+        let cells = grid(&mu_grid(4), &[1.0]);
+        for c in &cells {
+            assert!(c.energy_ratio < 1.02, "{c:?}");
+            assert!(c.time_ratio < 1.02, "{c:?}");
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! Figure 3: time and energy ratios as functions of the node count, for
+//! ρ = 5.5 (3a) and ρ = 7 (3b).
+//!
+//! Parameters (§4): C = R = 1 min, D = 0.1 min, γ = 0, ω = 1/2, and
+//! μ = 120 min at 10⁶ nodes scaling as 1/N, N ∈ [10⁵, 10⁸].
+//!
+//! Beyond ~6·10⁷ nodes the first-order model leaves its domain
+//! (μ approaches the checkpoint overheads); both strategies degenerate to
+//! back-to-back checkpointing (`T = C`) and the ratios are exactly 1 —
+//! the paper's "converge to 1" tail. [`series`] reports those points
+//! with `clamped = true`.
+
+use crate::config::presets::fig3_scenario;
+use crate::model::ratios::compare;
+use crate::util::table::{fnum, Table};
+
+/// One point of Fig. 3.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Point {
+    pub n_nodes: f64,
+    pub mu: f64,
+    pub rho: f64,
+    pub time_ratio: f64,
+    pub energy_ratio: f64,
+    /// True when the scenario left the model's domain and both
+    /// strategies collapsed to `T = C` (ratio forced to 1).
+    pub clamped: bool,
+}
+
+/// Log-uniform node-count grid over `[1e5, 1e8]`.
+pub fn node_grid(n: usize) -> Vec<f64> {
+    assert!(n >= 2);
+    (0..n)
+        .map(|i| 10f64.powf(5.0 + 3.0 * i as f64 / (n - 1) as f64))
+        .collect()
+}
+
+/// Compute one panel (fixed ρ).
+pub fn series(rho: f64, nodes: &[f64]) -> Vec<Point> {
+    nodes
+        .iter()
+        .map(|&n| match fig3_scenario(n, rho).and_then(|s| compare(&s).ok().map(|c| (s, c))) {
+            Some((s, cmp)) => Point {
+                n_nodes: n,
+                mu: s.mu,
+                rho,
+                time_ratio: cmp.time_ratio(),
+                energy_ratio: cmp.energy_ratio(),
+                clamped: false,
+            },
+            None => Point {
+                n_nodes: n,
+                mu: super::fig3_mu(n),
+                rho,
+                time_ratio: 1.0,
+                energy_ratio: 1.0,
+                clamped: true,
+            },
+        })
+        .collect()
+}
+
+/// Render one panel as a table.
+pub fn table(points: &[Point]) -> Table {
+    let mut t = Table::new(&[
+        "n_nodes",
+        "mu_min",
+        "rho",
+        "time_ratio_E_over_T",
+        "energy_ratio_T_over_E",
+        "clamped",
+    ]);
+    for p in points {
+        t.row(&[
+            format!("{:.3e}", p.n_nodes),
+            fnum(p.mu, 3),
+            fnum(p.rho, 2),
+            fnum(p.time_ratio, 5),
+            fnum(p.energy_ratio, 5),
+            format!("{}", p.clamped),
+        ]);
+    }
+    t
+}
+
+/// The panel's peak energy gain (%) and where it happens.
+pub fn peak_energy_gain(points: &[Point]) -> (f64, f64) {
+    let best = points
+        .iter()
+        .max_by(|a, b| a.energy_ratio.partial_cmp(&b.energy_ratio).unwrap())
+        .expect("non-empty series");
+    ((1.0 - 1.0 / best.energy_ratio) * 100.0, best.n_nodes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_is_log_uniform() {
+        let g = node_grid(7);
+        assert!((g[0] - 1e5).abs() / 1e5 < 1e-9);
+        assert!((g[6] - 1e8).abs() / 1e8 < 1e-9);
+        let r1 = g[1] / g[0];
+        let r2 = g[5] / g[4];
+        assert!((r1 - r2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_headline_peak_gain() {
+        // §4: "up to 30% [energy gain] for a time overhead of only 12%",
+        // with the maximum between 10^6 and 10^7 nodes. Our exact argmin
+        // of the paper's own E_final gives 18.6% (rho=5.5) / 22.6%
+        // (rho=7) at N≈5e6 with ~11-13% time overhead — same shape,
+        // somewhat smaller magnitude (see EXPERIMENTS.md §Fig3 for the
+        // discrepancy analysis).
+        let pts = series(5.5, &node_grid(60));
+        let (gain, at) = peak_energy_gain(&pts);
+        assert!(gain > 15.0, "gain={gain}%");
+        assert!(gain < 45.0, "gain={gain}%");
+        assert!(
+            (1e5..1e8).contains(&at),
+            "peak at {at}"
+        );
+        // Time overhead at the peak point is modest.
+        let peak = pts
+            .iter()
+            .max_by(|a, b| a.energy_ratio.partial_cmp(&b.energy_ratio).unwrap())
+            .unwrap();
+        assert!(peak.time_ratio < 1.30, "time ratio {}", peak.time_ratio);
+    }
+
+    #[test]
+    fn rho7_gains_exceed_rho55() {
+        let n = node_grid(30);
+        let a = series(5.5, &n);
+        let b = series(7.0, &n);
+        let (gain_a, _) = peak_energy_gain(&a);
+        let (gain_b, _) = peak_energy_gain(&b);
+        assert!(gain_b > gain_a, "{gain_b} <= {gain_a}");
+    }
+
+    #[test]
+    fn tail_converges_to_one() {
+        let pts = series(5.5, &node_grid(40));
+        let last = pts.last().unwrap();
+        assert!(last.clamped);
+        assert_eq!(last.time_ratio, 1.0);
+        assert_eq!(last.energy_ratio, 1.0);
+        // And the first points (small N) are finite, unclamped.
+        assert!(!pts[0].clamped);
+    }
+
+    #[test]
+    fn table_includes_clamp_column() {
+        let pts = series(5.5, &node_grid(10));
+        let t = table(&pts);
+        assert_eq!(t.n_rows(), 10);
+    }
+}

@@ -1,0 +1,34 @@
+//! Figure/series harness: regenerates every figure in the paper's
+//! evaluation (§4) plus our ablations, as data series + CSV/JSON files.
+//!
+//! | function | paper artefact |
+//! |----------|----------------|
+//! | [`fig1::series`]    | Fig. 1 — ratios vs ρ for several μ |
+//! | [`fig2::grid`]      | Fig. 2 — ratio surfaces over (μ, ρ) |
+//! | [`fig3::series`]    | Fig. 3a/3b — ratios vs node count |
+//! | [`headline::compute`] | §5 headline numbers |
+//! | [`ablations`]       | ω sweep, first-order accuracy, γ sweep, MSK |
+//!
+//! All series come straight from `model::ratios::compare`; the benches
+//! time them and the examples print/persist them.
+
+pub mod ablations;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod headline;
+
+use std::path::Path;
+
+use crate::config::presets::FIG3_MU_AT_1E6_MIN;
+use crate::util::table::Table;
+
+/// Write a table to `<dir>/<name>.csv`, creating the directory.
+pub fn persist(table: &Table, dir: &Path, name: &str) -> std::io::Result<()> {
+    table.write_csv(&dir.join(format!("{name}.csv")))
+}
+
+/// Fig. 3 MTBF law: `μ(N) = 120 min · 10⁶ / N`.
+pub fn fig3_mu(n_nodes: f64) -> f64 {
+    FIG3_MU_AT_1E6_MIN * 1e6 / n_nodes
+}

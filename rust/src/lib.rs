@@ -1,0 +1,30 @@
+//! # ckpt-period
+//!
+//! A production-quality reproduction of **Aupy, Benoit, Hérault, Robert,
+//! Dongarra — "Optimal Checkpointing Period: Time vs. Energy" (2013)**.
+//!
+//! The crate is organised as a three-layer stack:
+//!
+//! * **Layer 3 (this crate)** — the coordination contribution: the
+//!   analytical time/energy model ([`model`]), a discrete-event platform
+//!   simulator ([`sim`]), and a fault-tolerant leader/worker training
+//!   runtime ([`coordinator`]) that checkpoints a real PJRT-executed
+//!   workload with the paper's period policies.
+//! * **Layer 2 (python/compile/model.py)** — a JAX transformer training
+//!   step, AOT-lowered to HLO text, loaded by [`runtime`].
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels (tiled matmul
+//!   and a period-sweep evaluator) called from Layer 2.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the JAX
+//! program once, and the rust binary is self-contained afterwards.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod figures;
+pub mod model;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;

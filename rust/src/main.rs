@@ -1,0 +1,369 @@
+//! `ckpt-period` — CLI for the checkpoint-period library.
+//!
+//! Subcommands:
+//!
+//! * `optimize`  — optimal periods + time/energy trade-off for a scenario
+//! * `sweep`     — CSV of `T_final`/`E_final` over a period grid
+//! * `simulate`  — Monte-Carlo validation of the model on a scenario
+//! * `figures`   — regenerate every paper figure as CSV + JSON
+//! * `train`     — run the fault-tolerant training coordinator (PJRT)
+//! * `info`      — artifact inventory
+
+use std::path::Path;
+
+use ckpt_period::cli::{ArgSpec, Args, CliError};
+use ckpt_period::config::presets::fig1_scenario;
+use ckpt_period::config::ScenarioSpec;
+use ckpt_period::coordinator::{Coordinator, CoordinatorConfig, OverlapMode, PeriodPolicy};
+use ckpt_period::figures;
+use ckpt_period::model::energy::{e_final, t_energy_opt};
+use ckpt_period::model::msk::compare_with_msk;
+use ckpt_period::model::params::{CheckpointParams, PowerParams, Scenario};
+use ckpt_period::model::ratios::compare;
+use ckpt_period::model::time::{daly, t_final, t_time_opt, young};
+use ckpt_period::runtime::{ArtifactDir, Runtime};
+use ckpt_period::sim::{monte_carlo, SimConfig};
+use ckpt_period::util::table::{fnum, Table};
+
+const USAGE: &str = "ckpt-period <optimize|sweep|simulate|figures|train|info> [flags]
+Reproduction of Aupy et al., 'Optimal Checkpointing Period: Time vs. Energy' (2013).
+Run a subcommand with --help for its flags.";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match argv.first().map(|s| s.as_str()) {
+        Some("optimize") => run(cmd_optimize(&argv[1..])),
+        Some("sweep") => run(cmd_sweep(&argv[1..])),
+        Some("simulate") => run(cmd_simulate(&argv[1..])),
+        Some("figures") => run(cmd_figures(&argv[1..])),
+        Some("train") => run(cmd_train(&argv[1..])),
+        Some("info") => run(cmd_info(&argv[1..])),
+        Some("--help") | Some("-h") | None => {
+            println!("{USAGE}");
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand `{other}`\n{USAGE}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(res: Result<(), String>) -> i32 {
+    match res {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    }
+}
+
+fn cli_err(e: CliError) -> String {
+    match e {
+        CliError::Help(text) => text,
+        other => other.to_string(),
+    }
+}
+
+/// Shared scenario flags.
+const SCENARIO_SPECS: [ArgSpec; 8] = [
+    ArgSpec::flag("c", "10", "checkpoint duration C (minutes)"),
+    ArgSpec::flag("r", "10", "recovery duration R (minutes)"),
+    ArgSpec::flag("d", "1", "downtime D (minutes)"),
+    ArgSpec::flag("omega", "0.5", "checkpoint overlap factor in [0,1]"),
+    ArgSpec::flag("mu", "300", "platform MTBF (minutes)"),
+    ArgSpec::flag("t-base", "10000", "application duration T_base (minutes)"),
+    ArgSpec::flag("rho", "5.5", "power ratio rho = (1+beta)/(1+alpha)"),
+    ArgSpec::flag("config", "", "JSON scenario file (overrides the flags above)"),
+];
+
+fn scenario_from(args: &Args) -> Result<Scenario, String> {
+    let cfg = args.get("config");
+    if !cfg.is_empty() {
+        let spec = ScenarioSpec::from_file(Path::new(cfg)).map_err(|e| e.to_string())?;
+        return Ok(spec.scenario);
+    }
+    let ckpt = CheckpointParams::new(
+        args.get_f64("c").map_err(cli_err)?,
+        args.get_f64("r").map_err(cli_err)?,
+        args.get_f64("d").map_err(cli_err)?,
+        args.get_f64("omega").map_err(cli_err)?,
+    )
+    .map_err(|e| e.to_string())?;
+    let power = PowerParams::from_rho(args.get_f64("rho").map_err(cli_err)?, 1.0, 0.0)
+        .map_err(|e| e.to_string())?;
+    Scenario::new(
+        ckpt,
+        power,
+        args.get_f64("mu").map_err(cli_err)?,
+        args.get_f64("t-base").map_err(cli_err)?,
+    )
+    .map_err(|e| e.to_string())
+}
+
+fn cmd_optimize(argv: &[String]) -> Result<(), String> {
+    let mut specs = SCENARIO_SPECS.to_vec();
+    specs.push(ArgSpec::switch("msk", "also compare against the MSK baseline (omega=0)"));
+    let args = Args::parse("optimize", "optimal periods for a scenario", &specs, argv)
+        .map_err(cli_err)?;
+    let s = scenario_from(&args)?;
+
+    let tt = t_time_opt(&s).map_err(|e| e.to_string())?;
+    let te = t_energy_opt(&s).map_err(|e| e.to_string())?;
+    let cmp = compare(&s).map_err(|e| e.to_string())?;
+
+    let mut t = Table::new(&["strategy", "period_min", "makespan_min", "energy_mW_min"]);
+    for (name, period) in [
+        ("AlgoT (Eq.1)", tt),
+        ("AlgoE (quadratic)", te),
+        ("Young", s.clamp_period(young(&s)).map_err(|e| e.to_string())?),
+        ("Daly", s.clamp_period(daly(&s)).map_err(|e| e.to_string())?),
+    ] {
+        t.row(&[
+            name.to_string(),
+            fnum(period, 3),
+            fnum(t_final(&s, period), 1),
+            fnum(e_final(&s, period), 1),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "AlgoE vs AlgoT: energy gain {:.2}% for a time overhead of {:.2}%",
+        cmp.energy_gain_pct(),
+        cmp.time_overhead_pct()
+    );
+    if !s.first_order_ok() {
+        println!("warning: C/D/R are not << mu; first-order approximations degrade");
+    }
+    if args.switch("msk") {
+        if s.ckpt.omega == 0.0 {
+            let m = compare_with_msk(&s).map_err(|e| e.to_string())?;
+            println!(
+                "MSK baseline: period {:.2} min (ours {:.2}); energy penalty at MSK's period: {:.2}%",
+                m.t_msk, m.t_algo_e, m.penalty_pct
+            );
+        } else {
+            println!("--msk requires --omega 0 (MSK models blocking checkpoints)");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sweep(argv: &[String]) -> Result<(), String> {
+    let mut specs = SCENARIO_SPECS.to_vec();
+    specs.push(ArgSpec::flag("points", "200", "grid points"));
+    specs.push(ArgSpec::flag("out", "", "CSV output path (default: stdout table)"));
+    specs.push(ArgSpec::switch("breakdown", "add waste-decomposition columns"));
+    let args = Args::parse("sweep", "T_final/E_final over a period grid", &specs, argv)
+        .map_err(cli_err)?;
+    let s = scenario_from(&args)?;
+    let n = args.get_usize("points").map_err(cli_err)?.max(2);
+    let breakdown = args.switch("breakdown");
+    let (lo, hi) = s.domain();
+    let lo = s.min_period().max(lo * 1.01);
+    let hi = hi * 0.99;
+
+    let header: &[&str] = if breakdown {
+        &[
+            "period_min",
+            "makespan_min",
+            "energy_mW_min",
+            "time_ckpt_min",
+            "time_fail_min",
+            "energy_ckpt",
+            "energy_fail",
+        ]
+    } else {
+        &["period_min", "makespan_min", "energy_mW_min"]
+    };
+    let mut t = Table::new(header);
+    for i in 0..n {
+        let period = lo + (hi - lo) * i as f64 / (n - 1) as f64;
+        let mut row = vec![
+            fnum(period, 3),
+            fnum(t_final(&s, period), 2),
+            fnum(e_final(&s, period), 2),
+        ];
+        if breakdown {
+            let w = ckpt_period::model::waste::waste_breakdown(&s, period);
+            row.extend([
+                fnum(w.time_checkpointing, 2),
+                fnum(w.time_failures, 2),
+                fnum(w.energy_checkpointing, 1),
+                fnum(w.energy_failures, 1),
+            ]);
+        }
+        t.row(&row);
+    }
+    let out = args.get("out");
+    if out.is_empty() {
+        println!("{}", t.render());
+    } else {
+        t.write_csv(Path::new(out)).map_err(|e| e.to_string())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_simulate(argv: &[String]) -> Result<(), String> {
+    let mut specs = SCENARIO_SPECS.to_vec();
+    specs.push(ArgSpec::flag("period", "0", "period to simulate (0 = AlgoT)"));
+    specs.push(ArgSpec::flag("replicates", "200", "Monte-Carlo replicates"));
+    specs.push(ArgSpec::flag("threads", "8", "worker threads"));
+    specs.push(ArgSpec::flag("seed", "1", "base seed"));
+    let args = Args::parse("simulate", "Monte-Carlo validation of the model", &specs, argv)
+        .map_err(cli_err)?;
+    let s = scenario_from(&args)?;
+    let period = {
+        let p = args.get_f64("period").map_err(cli_err)?;
+        if p <= 0.0 {
+            t_time_opt(&s).map_err(|e| e.to_string())?
+        } else {
+            p
+        }
+    };
+    let reps = args.get_usize("replicates").map_err(cli_err)?;
+    let threads = args.get_usize("threads").map_err(cli_err)?;
+    let seed = args.get_u64("seed").map_err(cli_err)?;
+
+    let mc = monte_carlo(&SimConfig::paper(s, period), reps, seed, threads);
+    let (mk_lo, mk_hi) = mc.makespan_ci95();
+    let (en_lo, en_hi) = mc.energy_ci95();
+    let mut t = Table::new(&["quantity", "model", "simulated (95% CI)"]);
+    t.row(&[
+        "makespan_min".into(),
+        fnum(t_final(&s, period), 1),
+        format!("{} [{}, {}]", fnum(mc.makespan.mean(), 1), fnum(mk_lo, 1), fnum(mk_hi, 1)),
+    ]);
+    t.row(&[
+        "energy_mW_min".into(),
+        fnum(e_final(&s, period), 1),
+        format!("{} [{}, {}]", fnum(mc.energy.mean(), 1), fnum(en_lo, 1), fnum(en_hi, 1)),
+    ]);
+    t.row(&[
+        "failures".into(),
+        fnum(t_final(&s, period) / s.mu, 2),
+        fnum(mc.failures.mean(), 2),
+    ]);
+    println!("period = {period:.2} min, {reps} replicates");
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_figures(argv: &[String]) -> Result<(), String> {
+    let specs = [
+        ArgSpec::flag("out-dir", "target/figures", "output directory"),
+        ArgSpec::flag("points", "60", "points per axis"),
+    ];
+    let args = Args::parse("figures", "regenerate all paper figures", &specs, argv)
+        .map_err(cli_err)?;
+    let dir = Path::new(args.get("out-dir")).to_path_buf();
+    let n = args.get_usize("points").map_err(cli_err)?.max(4);
+
+    let f1 = figures::fig1::series(&figures::fig1::rho_grid(n));
+    figures::persist(&figures::fig1::table(&f1), &dir, "fig1").map_err(|e| e.to_string())?;
+
+    let f2 =
+        figures::fig2::grid(&figures::fig2::mu_grid(n / 2), &figures::fig2::rho_grid(n / 2));
+    figures::persist(&figures::fig2::table(&f2), &dir, "fig2").map_err(|e| e.to_string())?;
+
+    for (rho, name) in [(5.5, "fig3a"), (7.0, "fig3b")] {
+        let pts = figures::fig3::series(rho, &figures::fig3::node_grid(n));
+        figures::persist(&figures::fig3::table(&pts), &dir, name)
+            .map_err(|e| e.to_string())?;
+        let (gain, at) = figures::fig3::peak_energy_gain(&pts);
+        println!("{name}: peak energy gain {gain:.1}% at N = {at:.2e}");
+    }
+
+    let h = figures::headline::compute();
+    println!(
+        "headline: mu=300 rho=5.5 -> {:.1}% energy gain / {:.1}% time overhead",
+        h.energy_gain_mu300_rho55_pct, h.time_overhead_mu300_rho55_pct
+    );
+    println!("figures written to {}", dir.display());
+    Ok(())
+}
+
+fn cmd_train(argv: &[String]) -> Result<(), String> {
+    let specs = [
+        ArgSpec::flag("artifacts", "artifacts", "artifacts directory"),
+        ArgSpec::flag("ckpt-dir", "target/ckpt", "checkpoint directory"),
+        ArgSpec::flag("policy", "algo-t", "algo-t|algo-e|young|daly|fixed:<s>"),
+        ArgSpec::flag("steps", "200", "training steps"),
+        ArgSpec::flag("mu", "30", "MTBF in wall-clock seconds"),
+        ArgSpec::flag("downtime", "0.1", "downtime in seconds"),
+        ArgSpec::flag("seed", "1", "data + failure seed"),
+        ArgSpec::switch("blocking", "blocking checkpoints (omega = 0)"),
+        ArgSpec::switch("no-failures", "disable failure injection"),
+        ArgSpec::switch("adaptive", "re-estimate C/R/mu online and adapt the period"),
+        ArgSpec::flag("report", "", "write the JSON run report here"),
+    ];
+    let args = Args::parse("train", "fault-tolerant PJRT training run", &specs, argv)
+        .map_err(cli_err)?;
+
+    let mut cfg = CoordinatorConfig::new(args.get("artifacts"), args.get("ckpt-dir"));
+    cfg.policy = PeriodPolicy::parse(args.get("policy"))
+        .ok_or_else(|| format!("bad policy `{}`", args.get("policy")))?;
+    cfg.steps = args.get_u64("steps").map_err(cli_err)?;
+    cfg.mu_s = args.get_f64("mu").map_err(cli_err)?;
+    cfg.downtime_s = args.get_f64("downtime").map_err(cli_err)?;
+    cfg.data_seed = args.get_u64("seed").map_err(cli_err)?;
+    cfg.failure_seed = cfg.data_seed + 1;
+    if args.switch("blocking") {
+        cfg.overlap = OverlapMode::Blocking;
+    }
+    cfg.inject_failures = !args.switch("no-failures");
+    cfg.adaptive = args.switch("adaptive");
+
+    let rt = Runtime::cpu().map_err(|e| e.to_string())?;
+    let coord = Coordinator::new(&rt, cfg).map_err(|e| e.to_string())?;
+    let report = coord.run().map_err(|e| e.to_string())?;
+
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(&["policy".into(), report.policy.clone()]);
+    t.row(&["period_s".into(), fnum(report.period_s, 3)]);
+    t.row(&["measured C_s".into(), fnum(report.measured_c_s, 4)]);
+    t.row(&["measured R_s".into(), fnum(report.measured_r_s, 4)]);
+    t.row(&["step_s".into(), fnum(report.step_s, 4)]);
+    t.row(&["makespan_s".into(), fnum(report.makespan_s, 2)]);
+    t.row(&["energy".into(), fnum(report.energy.total, 1)]);
+    t.row(&["failures".into(), format!("{}", report.n_failures)]);
+    t.row(&["checkpoints".into(), format!("{}", report.n_checkpoints)]);
+    t.row(&["steps_executed".into(), format!("{}", report.steps_executed)]);
+    t.row(&["re_exec_fraction".into(), fnum(report.re_exec_fraction(), 4)]);
+    t.row(&["omega_measured".into(), fnum(report.omega_measured, 3)]);
+    t.row(&[
+        "final_loss".into(),
+        report.final_loss().map(|l| fnum(l as f64, 4)).unwrap_or_default(),
+    ]);
+    println!("{}", t.render());
+
+    let out = args.get("report");
+    if !out.is_empty() {
+        std::fs::write(out, report.to_json().to_string_pretty()).map_err(|e| e.to_string())?;
+        println!("report written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_info(argv: &[String]) -> Result<(), String> {
+    let specs = [ArgSpec::flag("artifacts", "artifacts", "artifacts directory")];
+    let args = Args::parse("info", "artifact inventory", &specs, argv).map_err(cli_err)?;
+    let dir = ArtifactDir::open(args.get("artifacts")).map_err(|e| e.to_string())?;
+    println!("artifacts at {}", dir.root().display());
+    println!(
+        "  model: {} params, batch {} x seq {}, vocab {}, lr {}",
+        dir.n_params, dir.batch, dir.seq, dir.vocab, dir.lr
+    );
+    println!("  sweep grid: {} periods", dir.sweep_grid_n);
+    println!("  parameter manifest: {} tensors", dir.manifest.len());
+    // The reference scenario, for orientation.
+    let cmp = compare(&fig1_scenario(300.0, 5.5)).map_err(|e| e.to_string())?;
+    println!(
+        "reference scenario (mu=300, rho=5.5): AlgoT {:.1} min, AlgoE {:.1} min",
+        cmp.t_time, cmp.t_energy
+    );
+    Ok(())
+}

@@ -1,0 +1,33 @@
+//! The paper's analytical model (§2–§3).
+//!
+//! * [`params`] — checkpoint, power and platform parameters ([`Scenario`]).
+//! * [`time`] — expected makespan `T_final(T)` and the time-optimal period
+//!   `T_Time_opt` (Eq. 1), plus Young's and Daly's classical formulas.
+//! * [`energy`] — expected energy `E_final(T)` phase by phase, and the
+//!   energy-optimal period `T_Energy_opt` (positive root of the
+//!   stationarity quadratic of `E_final`).
+//! * [`optimize`] — golden-section minimiser used to cross-validate the
+//!   closed forms and to optimise models with no closed form (MSK).
+//! * [`msk`] — the Meneses–Sarood–Kalé baseline of [6], with the
+//!   per-failure loss terms the paper's §3.2 side note attributes to it.
+//! * [`ratios`] — the AlgoT-vs-AlgoE comparisons all figures are built on.
+//!
+//! # Conventions
+//!
+//! All times are **minutes** (the paper's unit) and powers are **mW per
+//! node** (the paper's 20 MW / 10⁶ nodes budget); energies are mW·min.
+//! The model is agnostic to units as long as they are consistent.
+
+pub mod energy;
+pub mod exact;
+pub mod msk;
+pub mod optimize;
+pub mod params;
+pub mod ratios;
+pub mod time;
+pub mod waste;
+
+pub use energy::{e_final, t_energy_opt};
+pub use params::{CheckpointParams, ModelError, Platform, PowerParams, Scenario};
+pub use ratios::{compare, Comparison};
+pub use time::{t_final, t_time_opt};

@@ -1,0 +1,177 @@
+//! Scalar minimisation utilities.
+//!
+//! Used to (a) cross-validate the closed-form optimal periods against the
+//! exact closed-form objectives, (b) optimise objectives with no closed
+//! form (the MSK baseline, DES-calibrated objectives), and (c) quantify
+//! how far the paper's first-order formulas drift from the numeric optima
+//! as `C/μ` grows (an ablation in `examples/exascale_study`).
+
+/// Golden-section search for the minimum of a unimodal `f` on `[lo, hi]`.
+///
+/// Returns `(argmin, min)`. Tolerance is on the argument. If `f` is not
+/// unimodal the result is a local minimum bracketed by the initial
+/// interval — combine with [`grid_then_golden`] for robustness.
+pub fn golden_section(mut f: impl FnMut(f64) -> f64, lo: f64, hi: f64, tol: f64) -> (f64, f64) {
+    assert!(hi > lo, "invalid bracket [{lo}, {hi}]");
+    const INVPHI: f64 = 0.618_033_988_749_894_8; // 1/φ
+    const INVPHI2: f64 = 0.381_966_011_250_105_2; // 1/φ²
+    let (mut a, mut b) = (lo, hi);
+    let mut h = b - a;
+    let mut c = a + INVPHI2 * h;
+    let mut d = a + INVPHI * h;
+    let mut fc = f(c);
+    let mut fd = f(d);
+    // Enough iterations to shrink below tol.
+    let n = ((tol / h).ln() / INVPHI.ln()).ceil().max(1.0) as usize;
+    for _ in 0..n {
+        if fc < fd {
+            b = d;
+            d = c;
+            fd = fc;
+            h = b - a;
+            c = a + INVPHI2 * h;
+            fc = f(c);
+        } else {
+            a = c;
+            c = d;
+            fc = fd;
+            h = b - a;
+            d = a + INVPHI * h;
+            fd = f(d);
+        }
+    }
+    let x = if fc < fd { (a + d) / 2.0 } else { (c + b) / 2.0 };
+    let fx = f(x);
+    (x, fx)
+}
+
+/// Coarse grid scan followed by golden-section refinement around the best
+/// grid cell. Robust to mild non-unimodality (e.g. objectives flattened
+/// by clamping at the domain edge).
+pub fn grid_then_golden(
+    mut f: impl FnMut(f64) -> f64,
+    lo: f64,
+    hi: f64,
+    grid: usize,
+    tol: f64,
+) -> (f64, f64) {
+    assert!(grid >= 2 && hi > lo);
+    let mut best_i = 0;
+    let mut best_v = f64::INFINITY;
+    let step = (hi - lo) / grid as f64;
+    for i in 0..=grid {
+        let x = lo + step * i as f64;
+        let v = f(x);
+        if v < best_v {
+            best_v = v;
+            best_i = i;
+        }
+    }
+    let a = lo + step * best_i.saturating_sub(1) as f64;
+    let b = (lo + step * (best_i + 1) as f64).min(hi);
+    golden_section(f, a, b, tol)
+}
+
+/// Solve `a2·x² + a1·x + a0 = 0` for real roots, returned ascending.
+pub fn quadratic_roots(a2: f64, a1: f64, a0: f64) -> Vec<f64> {
+    if a2 == 0.0 {
+        if a1 == 0.0 {
+            return vec![];
+        }
+        return vec![-a0 / a1];
+    }
+    let disc = a1 * a1 - 4.0 * a2 * a0;
+    if disc < 0.0 {
+        return vec![];
+    }
+    let sq = disc.sqrt();
+    // Numerically stable: avoid cancellation by computing the large-|.|
+    // root first, then the other via Vieta.
+    let q = -0.5 * (a1 + a1.signum() * sq);
+    let (r1, r2) = if q == 0.0 { (0.0, 0.0) } else { (q / a2, a0 / q) };
+    let mut roots = vec![r1, r2];
+    roots.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    roots.dedup();
+    roots
+}
+
+/// The unique positive root of a quadratic, if any.
+pub fn positive_root(a2: f64, a1: f64, a0: f64) -> Option<f64> {
+    quadratic_roots(a2, a1, a0).into_iter().find(|&r| r > 0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::{check, Gen};
+
+    #[test]
+    fn golden_finds_parabola_min() {
+        let (x, fx) = golden_section(|x| (x - 3.2) * (x - 3.2) + 1.0, 0.0, 10.0, 1e-9);
+        assert!((x - 3.2).abs() < 1e-7, "x={x}");
+        assert!((fx - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn golden_handles_min_at_edge() {
+        let (x, _) = golden_section(|x| x, 2.0, 5.0, 1e-9);
+        assert!((x - 2.0).abs() < 1e-6, "x={x}");
+    }
+
+    #[test]
+    fn grid_then_golden_escapes_local_flat() {
+        // Piecewise: flat high plateau then a dip near 8.
+        let f = |x: f64| if x < 6.0 { 10.0 - 1e-6 * x } else { (x - 8.0) * (x - 8.0) };
+        let (x, _) = grid_then_golden(f, 0.0, 10.0, 50, 1e-9);
+        assert!((x - 8.0).abs() < 1e-6, "x={x}");
+    }
+
+    #[test]
+    fn quadratic_root_cases() {
+        assert_eq!(quadratic_roots(0.0, 0.0, 1.0), vec![]);
+        assert_eq!(quadratic_roots(0.0, 2.0, -4.0), vec![2.0]);
+        let r = quadratic_roots(1.0, -3.0, 2.0);
+        assert!((r[0] - 1.0).abs() < 1e-12 && (r[1] - 2.0).abs() < 1e-12);
+        assert_eq!(quadratic_roots(1.0, 0.0, 1.0), vec![]);
+        // Double root dedups.
+        let r = quadratic_roots(1.0, -2.0, 1.0);
+        assert_eq!(r.len(), 1);
+        assert!((r[0] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn positive_root_picks_positive() {
+        // roots -5 and +2
+        let r = positive_root(1.0, 3.0, -10.0).unwrap();
+        assert!((r - 2.0).abs() < 1e-12);
+        assert!(positive_root(1.0, 3.0, 2.0).is_none()); // roots -1, -2
+    }
+
+    #[test]
+    fn prop_golden_matches_true_quadratic_min() {
+        check("golden-section finds quadratic minima", 300, |g: &mut Gen| {
+            let m = g.f64_in(-50.0, 50.0);
+            let scale = g.f64_in(0.1, 10.0);
+            let (x, _) =
+                golden_section(|x| scale * (x - m) * (x - m), m - 100.0, m + 100.0, 1e-10);
+            prop_assert!(g, (x - m).abs() < 1e-6, "x={x} m={m}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_quadratic_roots_satisfy_equation() {
+        check("roots satisfy polynomial", 300, |g: &mut Gen| {
+            let a2 = g.f64_in(-10.0, 10.0);
+            let a1 = g.f64_in(-10.0, 10.0);
+            let a0 = g.f64_in(-10.0, 10.0);
+            for r in quadratic_roots(a2, a1, a0) {
+                let v = a2 * r * r + a1 * r + a0;
+                let scale = a2.abs() * r * r + a1.abs() * r.abs() + a0.abs() + 1e-12;
+                prop_assert!(g, v.abs() / scale < 1e-9, "residual {v} at root {r}");
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,368 @@
+//! Model parameters (§2 of the paper) and their validity checks.
+
+/// Resilience parameters (§2.1). All times in minutes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CheckpointParams {
+    /// Checkpoint duration `C`.
+    pub c: f64,
+    /// Recovery duration `R` (time to read the last checkpoint).
+    pub r: f64,
+    /// Downtime `D` (reboot / spare setup).
+    pub d: f64,
+    /// Slow-down factor `ω ∈ [0, 1]`: during a checkpoint of length `C`,
+    /// `ωC` work units still complete. `ω = 0` is fully blocking,
+    /// `ω = 1` fully overlapped.
+    pub omega: f64,
+}
+
+impl CheckpointParams {
+    pub fn new(c: f64, r: f64, d: f64, omega: f64) -> Result<Self, ModelError> {
+        let p = CheckpointParams { c, r, d, omega };
+        p.validate()?;
+        Ok(p)
+    }
+
+    pub fn validate(&self) -> Result<(), ModelError> {
+        if !(self.c > 0.0 && self.c.is_finite()) {
+            return Err(ModelError::Invalid(format!("C must be > 0, got {}", self.c)));
+        }
+        if self.r < 0.0 || self.d < 0.0 {
+            return Err(ModelError::Invalid(format!(
+                "R and D must be >= 0, got R={} D={}",
+                self.r, self.d
+            )));
+        }
+        if !(0.0..=1.0).contains(&self.omega) {
+            return Err(ModelError::Invalid(format!(
+                "omega must be in [0,1], got {}",
+                self.omega
+            )));
+        }
+        Ok(())
+    }
+
+    /// The paper's `a = (1-ω)C`: work units lost to each checkpoint.
+    #[inline]
+    pub fn a(&self) -> f64 {
+        (1.0 - self.omega) * self.c
+    }
+}
+
+/// Power parameters (§2.2), in mW per node. `P_Cal`, `P_IO`, `P_Down`
+/// are *overheads on top of* `P_Static`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerParams {
+    pub p_static: f64,
+    pub p_cal: f64,
+    pub p_io: f64,
+    pub p_down: f64,
+}
+
+impl PowerParams {
+    pub fn new(p_static: f64, p_cal: f64, p_io: f64, p_down: f64) -> Result<Self, ModelError> {
+        let p = PowerParams { p_static, p_cal, p_io, p_down };
+        p.validate()?;
+        Ok(p)
+    }
+
+    pub fn validate(&self) -> Result<(), ModelError> {
+        if !(self.p_static > 0.0) {
+            return Err(ModelError::Invalid(format!(
+                "P_Static must be > 0, got {}",
+                self.p_static
+            )));
+        }
+        for (name, v) in
+            [("P_Cal", self.p_cal), ("P_IO", self.p_io), ("P_Down", self.p_down)]
+        {
+            if v < 0.0 || !v.is_finite() {
+                return Err(ModelError::Invalid(format!("{name} must be >= 0, got {v}")));
+            }
+        }
+        Ok(())
+    }
+
+    /// `α = P_Cal / P_Static`.
+    #[inline]
+    pub fn alpha(&self) -> f64 {
+        self.p_cal / self.p_static
+    }
+
+    /// `β = P_IO / P_Static`.
+    #[inline]
+    pub fn beta(&self) -> f64 {
+        self.p_io / self.p_static
+    }
+
+    /// `γ = P_Down / P_Static`.
+    #[inline]
+    pub fn gamma(&self) -> f64 {
+        self.p_down / self.p_static
+    }
+
+    /// The paper's headline knob `ρ = (1+β)/(1+α)` (Eq. 2).
+    #[inline]
+    pub fn rho(&self) -> f64 {
+        (1.0 + self.beta()) / (1.0 + self.alpha())
+    }
+
+    /// Build powers from `(α, β, γ)` ratios with `P_Static = 1`.
+    /// Keeps figures parameterised exactly as in the paper.
+    pub fn from_ratios(alpha: f64, beta: f64, gamma: f64) -> Result<Self, ModelError> {
+        PowerParams::new(1.0, alpha, beta, gamma)
+    }
+
+    /// Build powers achieving a target `ρ` for a fixed `α` and `γ`:
+    /// `β = ρ(1+α) − 1`. This is how Fig. 1 and Fig. 2 scan ρ.
+    pub fn from_rho(rho: f64, alpha: f64, gamma: f64) -> Result<Self, ModelError> {
+        let beta = rho * (1.0 + alpha) - 1.0;
+        if beta < 0.0 {
+            return Err(ModelError::Invalid(format!(
+                "rho={rho} with alpha={alpha} gives negative beta={beta}"
+            )));
+        }
+        PowerParams::from_ratios(alpha, beta, gamma)
+    }
+}
+
+/// Platform description: `μ = μ_ind / N` (§2.1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Platform {
+    /// Number of nodes `N`.
+    pub n_nodes: f64,
+    /// Individual node MTBF `μ_ind`, in minutes.
+    pub mu_ind: f64,
+}
+
+impl Platform {
+    pub fn new(n_nodes: f64, mu_ind: f64) -> Result<Self, ModelError> {
+        if !(n_nodes >= 1.0) || !(mu_ind > 0.0) {
+            return Err(ModelError::Invalid(format!(
+                "need N >= 1 and mu_ind > 0, got N={n_nodes} mu_ind={mu_ind}"
+            )));
+        }
+        Ok(Platform { n_nodes, mu_ind })
+    }
+
+    /// Platform MTBF `μ = μ_ind / N`.
+    #[inline]
+    pub fn mu(&self) -> f64 {
+        self.mu_ind / self.n_nodes
+    }
+
+    /// Jaguar-derived individual MTBF (§4): 45 208 processors, one fault
+    /// per day ⇒ `μ_ind = 45 208 days ≈ 125 years`, in minutes.
+    pub fn jaguar_mu_ind_minutes() -> f64 {
+        45_208.0 * 24.0 * 60.0
+    }
+}
+
+/// A complete model instantiation: what every formula in [`super::time`]
+/// and [`super::energy`] takes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Scenario {
+    pub ckpt: CheckpointParams,
+    pub power: PowerParams,
+    /// Platform MTBF `μ` in minutes.
+    pub mu: f64,
+    /// Failure-free application duration `T_base` in minutes.
+    pub t_base: f64,
+}
+
+impl Scenario {
+    pub fn new(
+        ckpt: CheckpointParams,
+        power: PowerParams,
+        mu: f64,
+        t_base: f64,
+    ) -> Result<Self, ModelError> {
+        let s = Scenario { ckpt, power, mu, t_base };
+        s.validate()?;
+        Ok(s)
+    }
+
+    pub fn validate(&self) -> Result<(), ModelError> {
+        self.ckpt.validate()?;
+        self.power.validate()?;
+        if !(self.mu > 0.0 && self.mu.is_finite()) {
+            return Err(ModelError::Invalid(format!("mu must be > 0, got {}", self.mu)));
+        }
+        if !(self.t_base > 0.0) {
+            return Err(ModelError::Invalid(format!(
+                "t_base must be > 0, got {}",
+                self.t_base
+            )));
+        }
+        // First-order validity: failures must not be able to absorb the
+        // whole period budget, i.e. b > 0.
+        if self.b() <= 0.0 {
+            return Err(ModelError::OutOfDomain(format!(
+                "D + R + omega*C = {} >= mu = {}: first-order model breaks down",
+                self.ckpt.d + self.ckpt.r + self.ckpt.omega * self.ckpt.c,
+                self.mu
+            )));
+        }
+        Ok(())
+    }
+
+    /// `a = (1-ω)C`.
+    #[inline]
+    pub fn a(&self) -> f64 {
+        self.ckpt.a()
+    }
+
+    /// `b = 1 − (D + R + ωC)/μ`.
+    #[inline]
+    pub fn b(&self) -> f64 {
+        1.0 - (self.ckpt.d + self.ckpt.r + self.ckpt.omega * self.ckpt.c) / self.mu
+    }
+
+    /// The open interval of periods on which `T_final` is positive and
+    /// finite: `T ∈ (a, 2μb)`.
+    pub fn domain(&self) -> (f64, f64) {
+        (self.a(), 2.0 * self.mu * self.b())
+    }
+
+    /// Practical lower bound on the period: the checkpoint itself must
+    /// fit, so `T ≥ C` (also `> a` automatically since `a ≤ C`).
+    pub fn min_period(&self) -> f64 {
+        self.ckpt.c
+    }
+
+    /// Clamp a period into the physically meaningful part of the domain.
+    /// Matches the paper's observed behaviour near the breakdown regime
+    /// ("both periods become close to C"). Returns an error when even
+    /// `T = C` is outside the model's domain (μ too small: the machine
+    /// fails faster than it checkpoints).
+    pub fn clamp_period(&self, t: f64) -> Result<f64, ModelError> {
+        let (_, hi) = self.domain();
+        let lo = self.min_period();
+        if lo >= hi {
+            return Err(ModelError::OutOfDomain(format!(
+                "no feasible period: C={} >= 2*mu*b={hi}",
+                self.ckpt.c
+            )));
+        }
+        // Keep strictly inside the upper bound.
+        Ok(t.clamp(lo, hi * (1.0 - 1e-9)))
+    }
+
+    /// Whether the first-order approximation is trustworthy:
+    /// `C, D, R ≪ μ` (we use a factor-10 rule of thumb).
+    pub fn first_order_ok(&self) -> bool {
+        let worst = self.ckpt.c.max(self.ckpt.d).max(self.ckpt.r);
+        worst * 10.0 <= self.mu
+    }
+}
+
+/// Errors from parameter validation or out-of-domain evaluation.
+#[derive(Debug, Clone, thiserror::Error, PartialEq)]
+pub enum ModelError {
+    #[error("invalid parameter: {0}")]
+    Invalid(String),
+    #[error("out of model domain: {0}")]
+    OutOfDomain(String),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub fn paper_fig1_scenario(mu: f64, rho: f64) -> Scenario {
+        // Fig 1: C=R=10 min, D=1 min, gamma=0, omega=1/2; alpha = 1.
+        let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, 0.5).unwrap();
+        let power = PowerParams::from_rho(rho, 1.0, 0.0).unwrap();
+        Scenario::new(ckpt, power, mu, 10_000.0).unwrap()
+    }
+
+    #[test]
+    fn ratios_match_paper_values() {
+        // P_Static=10, P_Cal=10, P_IO=100 => rho = (1+10)/(1+1) = 5.5.
+        let p = PowerParams::new(10.0, 10.0, 100.0, 0.0).unwrap();
+        assert!((p.alpha() - 1.0).abs() < 1e-12);
+        assert!((p.beta() - 10.0).abs() < 1e-12);
+        assert!((p.rho() - 5.5).abs() < 1e-12);
+        // P_Static=5 with same overheads => rho = (1+20)/(1+2) = 7.
+        let p = PowerParams::new(5.0, 10.0, 100.0, 0.0).unwrap();
+        assert!((p.rho() - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_rho_roundtrips() {
+        for rho in [1.0, 2.0, 5.5, 7.0, 20.0] {
+            let p = PowerParams::from_rho(rho, 1.0, 0.0).unwrap();
+            assert!((p.rho() - rho).abs() < 1e-12, "rho={rho}");
+        }
+        assert!(PowerParams::from_rho(0.1, 1.0, 0.0).is_err());
+    }
+
+    #[test]
+    fn jaguar_mu_ind_is_about_125_years() {
+        let years = Platform::jaguar_mu_ind_minutes() / (365.0 * 24.0 * 60.0);
+        assert!((years - 123.8).abs() < 1.0, "years={years}");
+    }
+
+    #[test]
+    fn platform_mtbf_scales_inverse_n() {
+        let p = Platform::new(1e6, Platform::jaguar_mu_ind_minutes()).unwrap();
+        let p10 = Platform::new(1e7, Platform::jaguar_mu_ind_minutes()).unwrap();
+        assert!((p.mu() / p10.mu() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_node_counts_give_paper_mtbf() {
+        // §4: N = 219,150 => mu = 300 min; N = 2,191,500 => mu = 30 min.
+        let mu_ind = Platform::jaguar_mu_ind_minutes();
+        let mu_300 = Platform::new(219_150.0, mu_ind).unwrap().mu();
+        let mu_30 = Platform::new(2_191_500.0, mu_ind).unwrap().mu();
+        assert!((mu_300 - 297.0).abs() < 3.0, "mu_300={mu_300}");
+        assert!((mu_30 - 29.7).abs() < 0.3, "mu_30={mu_30}");
+    }
+
+    #[test]
+    fn validation_rejects_bad_params() {
+        assert!(CheckpointParams::new(0.0, 1.0, 1.0, 0.5).is_err());
+        assert!(CheckpointParams::new(1.0, -1.0, 1.0, 0.5).is_err());
+        assert!(CheckpointParams::new(1.0, 1.0, 1.0, 1.5).is_err());
+        assert!(PowerParams::new(0.0, 1.0, 1.0, 0.0).is_err());
+        assert!(PowerParams::new(1.0, -1.0, 1.0, 0.0).is_err());
+        assert!(Platform::new(0.5, 100.0).is_err());
+    }
+
+    #[test]
+    fn scenario_domain_and_b() {
+        let s = paper_fig1_scenario(300.0, 5.5);
+        // b = 1 - (1 + 10 + 5)/300 = 1 - 16/300
+        assert!((s.b() - (1.0 - 16.0 / 300.0)).abs() < 1e-12);
+        assert!((s.a() - 5.0).abs() < 1e-12);
+        let (lo, hi) = s.domain();
+        assert!(lo < s.min_period() && s.min_period() < hi);
+    }
+
+    #[test]
+    fn scenario_rejects_mu_smaller_than_overheads() {
+        let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, 0.5).unwrap();
+        let power = PowerParams::from_rho(5.5, 1.0, 0.0).unwrap();
+        // D + R + omega C = 16 > mu = 10 => b < 0.
+        assert!(matches!(
+            Scenario::new(ckpt, power, 10.0, 1000.0),
+            Err(ModelError::OutOfDomain(_))
+        ));
+    }
+
+    #[test]
+    fn clamp_period_behaviour() {
+        let s = paper_fig1_scenario(300.0, 5.5);
+        assert_eq!(s.clamp_period(1.0).unwrap(), s.min_period());
+        let (_, hi) = s.domain();
+        assert!(s.clamp_period(1e9).unwrap() < hi);
+        let t = s.clamp_period(100.0).unwrap();
+        assert_eq!(t, 100.0);
+    }
+
+    #[test]
+    fn first_order_flag() {
+        assert!(paper_fig1_scenario(300.0, 5.5).first_order_ok());
+        assert!(!paper_fig1_scenario(50.0, 5.5).first_order_ok());
+    }
+}

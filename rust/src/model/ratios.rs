@@ -1,0 +1,168 @@
+//! AlgoT vs AlgoE comparisons — the quantities every figure plots.
+//!
+//! * **time ratio** = `T_final(T_Energy_opt) / T_final(T_Time_opt)` ≥ 1:
+//!   the slowdown paid for running at the energy-optimal period
+//!   (Fig. 2b, Fig. 3 "execution time ratio of AlgoE over AlgoT").
+//! * **energy ratio** = `E_final(T_Time_opt) / E_final(T_Energy_opt)` ≥ 1:
+//!   the energy saved by AlgoE
+//!   (Fig. 2a, Fig. 3 "energy ratio of AlgoT over AlgoE").
+
+use super::energy::{e_final, t_energy_opt};
+use super::params::{ModelError, Scenario};
+use super::time::{t_final, t_time_opt};
+
+/// Everything the figures need for one scenario.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Comparison {
+    /// AlgoT's period (clamped Eq. 1).
+    pub t_time: f64,
+    /// AlgoE's period (clamped quadratic root).
+    pub t_energy: f64,
+    /// Makespans at each period.
+    pub makespan_at_t: f64,
+    pub makespan_at_e: f64,
+    /// Energies at each period.
+    pub energy_at_t: f64,
+    pub energy_at_e: f64,
+}
+
+impl Comparison {
+    /// `T_final(AlgoE) / T_final(AlgoT)` — "execution time ratio of
+    /// AlgoE over AlgoT" (≥ 1).
+    pub fn time_ratio(&self) -> f64 {
+        self.makespan_at_e / self.makespan_at_t
+    }
+
+    /// `E_final(AlgoT) / E_final(AlgoE)` — "energy ratio of AlgoT over
+    /// AlgoE" (≥ 1).
+    pub fn energy_ratio(&self) -> f64 {
+        self.energy_at_t / self.energy_at_e
+    }
+
+    /// Energy saved by AlgoE, in percent of AlgoT's energy.
+    pub fn energy_gain_pct(&self) -> f64 {
+        (1.0 - self.energy_at_e / self.energy_at_t) * 100.0
+    }
+
+    /// Extra time paid by AlgoE, in percent of AlgoT's makespan.
+    pub fn time_overhead_pct(&self) -> f64 {
+        (self.time_ratio() - 1.0) * 100.0
+    }
+}
+
+/// Evaluate both strategies on a scenario.
+pub fn compare(s: &Scenario) -> Result<Comparison, ModelError> {
+    let t_time = t_time_opt(s)?;
+    let t_energy = t_energy_opt(s)?;
+    Ok(Comparison {
+        t_time,
+        t_energy,
+        makespan_at_t: t_final(s, t_time),
+        makespan_at_e: t_final(s, t_energy),
+        energy_at_t: e_final(s, t_time),
+        energy_at_e: e_final(s, t_energy),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::{CheckpointParams, PowerParams};
+    use crate::prop_assert;
+    use crate::util::proptest::{check, Gen};
+
+    fn paper_scenario(mu: f64, rho: f64) -> Scenario {
+        let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, 0.5).unwrap();
+        let power = PowerParams::from_rho(rho, 1.0, 0.0).unwrap();
+        Scenario::new(ckpt, power, mu, 10_000.0).unwrap()
+    }
+
+    #[test]
+    fn ratios_at_least_one() {
+        for mu in [30.0, 60.0, 120.0, 300.0] {
+            for rho in [1.0, 2.0, 5.5, 7.0, 15.0] {
+                let cmp = compare(&paper_scenario(mu, rho)).unwrap();
+                assert!(cmp.time_ratio() >= 1.0 - 1e-12, "mu={mu} rho={rho}");
+                assert!(cmp.energy_ratio() >= 1.0 - 1e-12, "mu={mu} rho={rho}");
+            }
+        }
+    }
+
+    #[test]
+    fn rho_one_with_matching_gamma_gives_identical_strategies() {
+        // rho=1 means P_IO == P_Cal; with gamma chosen so downtime power
+        // matches too, energy is a monotone transform of a
+        // time-like objective only at alpha==beta; in practice the
+        // periods are close. Assert near-unity ratios.
+        let cmp = compare(&paper_scenario(300.0, 1.0)).unwrap();
+        assert!(cmp.time_ratio() < 1.02);
+        assert!(cmp.energy_ratio() < 1.02);
+    }
+
+    #[test]
+    fn paper_headline_mu300() {
+        // §5: "with current values (rho=5.5..7, mu=300 min) we can save
+        // more than 20% of energy at the price of ~10% more time".
+        let cmp = compare(&paper_scenario(300.0, 5.5)).unwrap();
+        assert!(
+            cmp.energy_gain_pct() > 15.0,
+            "energy gain {}%",
+            cmp.energy_gain_pct()
+        );
+        assert!(
+            cmp.time_overhead_pct() < 20.0,
+            "time overhead {}%",
+            cmp.time_overhead_pct()
+        );
+        // Energy gain strictly exceeds the time price (the paper's point).
+        assert!(cmp.energy_gain_pct() > cmp.time_overhead_pct());
+    }
+
+    #[test]
+    fn prop_energy_ratio_monotone_in_rho() {
+        // Bigger I/O power premium => bigger gain from AlgoE.
+        check("energy ratio nondecreasing in rho", 60, |g: &mut Gen| {
+            let mu = g.f64_in(100.0, 500.0);
+            let rho_lo = g.f64_in(1.0, 10.0);
+            let rho_hi = rho_lo + g.f64_in(0.5, 8.0);
+            let lo = compare(&paper_scenario(mu, rho_lo)).unwrap();
+            let hi = compare(&paper_scenario(mu, rho_hi)).unwrap();
+            prop_assert!(
+                g,
+                hi.energy_ratio() >= lo.energy_ratio() - 1e-9,
+                "mu={mu} rho {rho_lo}->{rho_hi}: {} -> {}",
+                lo.energy_ratio(),
+                hi.energy_ratio()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ratios_converge_to_one_when_c_approaches_mu() {
+        // Fig 3 regime: enormous N => mu ~ C => both periods clamp to C.
+        let ckpt = CheckpointParams::new(1.0, 1.0, 0.1, 0.5).unwrap();
+        let power = PowerParams::from_rho(5.5, 1.0, 0.0).unwrap();
+        let ratios_at = |mu: f64| {
+            let s = Scenario::new(ckpt, power, mu, 1e4).unwrap();
+            let cmp = compare(&s).unwrap();
+            (cmp.time_ratio(), cmp.energy_ratio())
+        };
+        let (t_mid, e_mid) = ratios_at(4.0);
+        let (t_tiny, e_tiny) = ratios_at(2.5); // mu only 2.5x the checkpoint
+        // Toward the breakdown regime (mu -> C) both ratios head back to 1
+        // — the tail of the paper's Fig 3 hump at 10^8 nodes.
+        assert!(t_tiny < t_mid, "time {t_tiny} !< {t_mid}");
+        assert!(e_tiny < e_mid, "energy {e_tiny} !< {e_mid}");
+        assert!(t_tiny < 1.05, "time ratio {t_tiny}");
+        assert!(e_tiny < 1.10, "energy ratio {e_tiny}");
+    }
+
+    #[test]
+    fn gain_and_overhead_consistent_with_ratios() {
+        let cmp = compare(&paper_scenario(120.0, 7.0)).unwrap();
+        assert!((cmp.time_overhead_pct() - (cmp.time_ratio() - 1.0) * 100.0).abs() < 1e-12);
+        let gain = cmp.energy_gain_pct() / 100.0;
+        assert!(((1.0 / (1.0 - gain)) - cmp.energy_ratio()).abs() < 1e-9);
+    }
+}

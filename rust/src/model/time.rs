@@ -1,0 +1,226 @@
+//! Expected execution time (§3.1).
+//!
+//! With `a = (1−ω)C` and `b = 1 − (D+R+ωC)/μ`:
+//!
+//! ```text
+//! T_ff(T)    = T_base · T / (T − a)
+//! T_final(T) = T_base · T / ((T − a)(b − T/(2μ)))
+//! ```
+//!
+//! `T_final` is exactly minimised (within the closed form) at
+//! `T_Time_opt = sqrt(2(1−ω)C(μ − (D+R+ωC)))` — the paper's Eq. (1):
+//! setting `dT_final/dT = 0` gives `T²/(2μ) = ab`, i.e.
+//! `T² = 2μ·(1−ω)C·b = 2(1−ω)C(μ − (D+R+ωC))`.
+
+use super::params::{ModelError, Scenario};
+
+/// Fault-free execution time `T_ff(T)` (checkpoint overhead only).
+pub fn t_ff(s: &Scenario, t: f64) -> f64 {
+    s.t_base * t / (t - s.a())
+}
+
+/// Expected number of failures over the whole (expected) execution.
+pub fn expected_failures(s: &Scenario, t: f64) -> f64 {
+    t_final(s, t) / s.mu
+}
+
+/// Expected time lost per failure: `D + R + ωC + T/2` (§3.1).
+pub fn time_lost_per_failure(s: &Scenario, t: f64) -> f64 {
+    s.ckpt.d + s.ckpt.r + s.ckpt.omega * s.ckpt.c + t / 2.0
+}
+
+/// Expected total execution time `T_final(T)`.
+///
+/// Panics in debug if `t` is outside the open domain `(a, 2μb)`; returns
+/// `+inf` in release (callers that sweep grids filter on finiteness).
+pub fn t_final(s: &Scenario, t: f64) -> f64 {
+    let (lo, hi) = s.domain();
+    if t <= lo || t >= hi {
+        return f64::INFINITY;
+    }
+    s.t_base * t / ((t - s.a()) * (s.b() - t / (2.0 * s.mu)))
+}
+
+/// The waste ratio `T_final/T_base − 1` (overhead fraction).
+pub fn waste(s: &Scenario, t: f64) -> f64 {
+    t_final(s, t) / s.t_base - 1.0
+}
+
+/// Time-optimal checkpointing period (Eq. 1), **unclamped**:
+/// `sqrt(2(1−ω)C(μ − (D+R+ωC)))`.
+pub fn t_time_opt_raw(s: &Scenario) -> f64 {
+    (2.0 * s.a() * (s.mu - (s.ckpt.d + s.ckpt.r + s.ckpt.omega * s.ckpt.c))).sqrt()
+}
+
+/// Time-optimal period, clamped into the physical domain `[C, 2μb)`.
+/// This is the period **AlgoT** checkpoints with.
+///
+/// For `ω = 1` the checkpoint is fully overlapped and the failure-free
+/// overhead vanishes; the raw formula returns 0 and the clamp (to `C`)
+/// is what makes AlgoT well defined — checkpoint back-to-back.
+pub fn t_time_opt(s: &Scenario) -> Result<f64, ModelError> {
+    s.clamp_period(t_time_opt_raw(s))
+}
+
+/// Young's classical period `sqrt(2Cμ) + C` (blocking checkpoints).
+pub fn young(s: &Scenario) -> f64 {
+    (2.0 * s.ckpt.c * s.mu).sqrt() + s.ckpt.c
+}
+
+/// Daly's higher-order period `sqrt(2C(μ + D + R)) + C` (blocking).
+///
+/// Note: Daly's own refinement subtracts the overheads from μ in some
+/// variants; we implement the form quoted by this paper (§2.1).
+pub fn daly(s: &Scenario) -> f64 {
+    (2.0 * s.ckpt.c * (s.mu + s.ckpt.d + s.ckpt.r)).sqrt() + s.ckpt.c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::{CheckpointParams, PowerParams};
+    use crate::prop_assert;
+    use crate::util::proptest::{check, Gen};
+
+    fn scenario(mu: f64, omega: f64) -> Scenario {
+        let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, omega).unwrap();
+        let power = PowerParams::from_rho(5.5, 1.0, 0.0).unwrap();
+        Scenario::new(ckpt, power, mu, 10_000.0).unwrap()
+    }
+
+    fn random_scenario(g: &mut Gen) -> Scenario {
+        // Draw parameters in the paper's realistic ranges with mu large
+        // enough that the domain is non-degenerate.
+        let c = g.f64_in(0.5, 20.0);
+        let r = g.f64_in(0.5, 20.0);
+        let d = g.f64_in(0.0, 5.0);
+        let omega = g.f64_in(0.0, 1.0);
+        let mu = g.f64_log_in(10.0 * (c + r + d), 1e6);
+        let alpha = g.f64_in(0.1, 4.0);
+        let rho = g.f64_in(1.0, 20.0);
+        let gamma = g.f64_in(0.0, 1.0);
+        let ckpt = CheckpointParams::new(c, r, d, omega).unwrap();
+        let power = PowerParams::from_rho(rho, alpha, gamma).unwrap();
+        Scenario::new(ckpt, power, mu, 10_000.0).unwrap()
+    }
+
+    #[test]
+    fn t_ff_at_large_period_approaches_t_base() {
+        let s = scenario(300.0, 0.5);
+        assert!((t_ff(&s, 1e9) - s.t_base) / s.t_base < 1e-6);
+    }
+
+    #[test]
+    fn t_ff_overhead_formula() {
+        let s = scenario(300.0, 0.5);
+        // T=100, a=5 => T_ff = T_base * 100/95.
+        assert!((t_ff(&s, 100.0) - s.t_base * 100.0 / 95.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn t_final_outside_domain_is_infinite() {
+        let s = scenario(300.0, 0.5);
+        let (lo, hi) = s.domain();
+        assert!(t_final(&s, lo).is_infinite());
+        assert!(t_final(&s, hi).is_infinite());
+        assert!(t_final(&s, lo / 2.0).is_infinite());
+        assert!(t_final(&s, hi * 2.0).is_infinite());
+        assert!(t_final(&s, (lo + hi) / 2.0).is_finite());
+    }
+
+    #[test]
+    fn t_final_exceeds_t_ff() {
+        let s = scenario(300.0, 0.5);
+        for t in [20.0, 50.0, 100.0, 200.0] {
+            assert!(t_final(&s, t) > t_ff(&s, t), "t={t}");
+        }
+    }
+
+    #[test]
+    fn eq1_value_paper_fig1() {
+        // mu=300, C=10, R=10, D=1, omega=1/2:
+        // T_opt = sqrt(2*5*(300-16)) = sqrt(2840).
+        let s = scenario(300.0, 0.5);
+        assert!((t_time_opt_raw(&s) - (2840.0f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eq1_is_stationary_point() {
+        // Central finite difference of T_final at T_opt is ~0.
+        let s = scenario(300.0, 0.5);
+        let t = t_time_opt_raw(&s);
+        let h = 1e-4;
+        let d = (t_final(&s, t + h) - t_final(&s, t - h)) / (2.0 * h);
+        let scale = t_final(&s, t) / t;
+        assert!(d.abs() / scale < 1e-6, "d={d}");
+    }
+
+    #[test]
+    fn prop_t_opt_is_global_min_on_grid() {
+        check("T_Time_opt minimises T_final", 200, |g| {
+            let s = random_scenario(g);
+            let topt = t_time_opt(&s).unwrap();
+            let best = t_final(&s, topt);
+            let (lo, hi) = s.domain();
+            for i in 1..200 {
+                let t = lo + (hi - lo) * i as f64 / 200.0;
+                let t = t.max(s.min_period());
+                if t >= hi {
+                    break;
+                }
+                let v = t_final(&s, t);
+                prop_assert!(
+                    g,
+                    best <= v * (1.0 + 1e-9),
+                    "T_final({t})={v} < T_final({topt})={best}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_young_daly_order_and_closeness() {
+        check("Daly >= Young and both near Eq.1 for omega=0, large mu", 100, |g| {
+            let c = g.f64_in(1.0, 15.0);
+            let mu = g.f64_log_in(1e4, 1e6);
+            let ckpt = CheckpointParams::new(c, c, 1.0, 0.0).unwrap();
+            let power = PowerParams::from_rho(5.5, 1.0, 0.0).unwrap();
+            let s = Scenario::new(ckpt, power, mu, 1e4).unwrap();
+            prop_assert!(g, daly(&s) >= young(&s), "daly < young");
+            let rel = (t_time_opt_raw(&s) - young(&s)).abs() / young(&s);
+            prop_assert!(g, rel < 0.05, "Eq.1 vs Young rel diff {rel}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn omega_one_clamps_to_c() {
+        let s = scenario(300.0, 1.0);
+        assert_eq!(t_time_opt_raw(&s), 0.0);
+        assert_eq!(t_time_opt(&s).unwrap(), s.ckpt.c);
+    }
+
+    #[test]
+    fn waste_positive_and_small_for_large_mu() {
+        let s = scenario(300.0, 0.5);
+        let t = t_time_opt(&s).unwrap();
+        let w = waste(&s, t);
+        assert!(w > 0.0 && w < 0.5, "w={w}");
+    }
+
+    #[test]
+    fn expected_failures_scales_with_final_time() {
+        let s = scenario(300.0, 0.5);
+        let t = t_time_opt(&s).unwrap();
+        let f = expected_failures(&s, t);
+        assert!((f - t_final(&s, t) / 300.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_lost_per_failure_terms() {
+        let s = scenario(300.0, 0.5);
+        // D + R + omega*C + T/2 = 1 + 10 + 5 + 50 at T=100.
+        assert!((time_lost_per_failure(&s, 100.0) - 66.0).abs() < 1e-12);
+    }
+}

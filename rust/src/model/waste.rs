@@ -1,0 +1,155 @@
+//! Waste decomposition: *where* the overhead goes at a given period.
+//!
+//! The paper's trade-off is easiest to see as a budget: every minute
+//! beyond `T_base` is either checkpoint overhead (grows as `1/T`) or
+//! failure-induced loss (grows as `T`), and every Joule beyond the
+//! baseline splits the same way but weighted by different powers —
+//! checkpoints cost `P_IO`-heavy time while re-execution costs
+//! `P_Cal`-heavy time. AlgoE moves the period to rebalance the *energy*
+//! budget, which is exactly why it stretches `T` when `ρ > 1`.
+//!
+//! Used by the `sweep` CLI (`--breakdown`) and the `exascale_study`
+//! discussion; tested against the closed forms it decomposes.
+
+use super::energy::{io_per_failure, phase_times, re_exec_per_failure};
+use super::params::Scenario;
+use super::time::{t_ff, t_final};
+
+/// Additive decomposition of time and energy overheads at period `t`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WasteBreakdown {
+    /// Expected makespan and the failure-free baseline `T_base`.
+    pub makespan: f64,
+    /// Time lost to periodic checkpointing alone (`T_ff − T_base`).
+    pub time_checkpointing: f64,
+    /// Additional time lost to failures (`T_final − T_ff`).
+    pub time_failures: f64,
+    /// Energy above `T_base · (P_Static + P_Cal)` split by cause.
+    pub energy_baseline: f64,
+    pub energy_checkpointing: f64,
+    pub energy_failures: f64,
+    /// Fractions of makespan (diagnostics; sum with `t_base/makespan` to 1).
+    pub frac_checkpointing: f64,
+    pub frac_failures: f64,
+}
+
+/// Decompose time and energy waste at period `t`.
+///
+/// Energy attribution: the checkpointing share is what a failure-free
+/// run at period `t` would consume above baseline (ckpt I/O time at
+/// `P_IO` plus the stretched static time, minus the `ωC` work credit);
+/// the failure share is the remainder of `E_final`.
+pub fn waste_breakdown(s: &Scenario, t: f64) -> WasteBreakdown {
+    let makespan = t_final(s, t);
+    let ff = t_ff(s, t);
+    let p = &s.power;
+
+    let energy_baseline = s.t_base * (p.p_static + p.p_cal);
+
+    // Failure-free run at period t: T_ff wall time; CPU busy exactly
+    // T_base work-units; checkpoints active C per period.
+    let n_periods = s.t_base / (t - s.a());
+    let ckpt_wall = n_periods * s.ckpt.c;
+    let e_ff = p.p_static * ff + p.p_cal * s.t_base + p.p_io * ckpt_wall;
+    let energy_checkpointing = e_ff - energy_baseline;
+
+    let ph = phase_times(s, t);
+    let e_total = ph.t_cal * p.p_cal
+        + ph.t_io * p.p_io
+        + ph.t_down * p.p_down
+        + ph.t_final * p.p_static;
+    let energy_failures = e_total - e_ff;
+
+    WasteBreakdown {
+        makespan,
+        time_checkpointing: ff - s.t_base,
+        time_failures: makespan - ff,
+        energy_baseline,
+        energy_checkpointing,
+        energy_failures,
+        frac_checkpointing: (ff - s.t_base) / makespan,
+        frac_failures: (makespan - ff) / makespan,
+    }
+}
+
+/// The two marginal energy prices the optimum balances (per failure):
+/// CPU re-execution energy and I/O loss energy. Diagnostic used by the
+/// study example.
+pub fn per_failure_energy(s: &Scenario, t: f64) -> (f64, f64) {
+    let cpu = re_exec_per_failure(s, t) * s.power.p_cal;
+    let io = io_per_failure(s, t) * s.power.p_io;
+    (cpu, io)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::energy::e_final;
+    use crate::model::params::{CheckpointParams, PowerParams};
+    use crate::model::{t_energy_opt, t_time_opt};
+    use crate::util::stats::rel_err;
+
+    fn scenario(mu: f64) -> Scenario {
+        let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, 0.5).unwrap();
+        let power = PowerParams::new(10.0, 10.0, 100.0, 0.0).unwrap();
+        Scenario::new(ckpt, power, mu, 10_000.0).unwrap()
+    }
+
+    #[test]
+    fn time_parts_sum_to_makespan() {
+        let s = scenario(300.0);
+        for t in [40.0, 80.0, 160.0] {
+            let w = waste_breakdown(&s, t);
+            let sum = s.t_base + w.time_checkpointing + w.time_failures;
+            assert!(rel_err(sum, w.makespan) < 1e-12, "t={t}");
+            assert!(w.time_checkpointing > 0.0 && w.time_failures > 0.0);
+        }
+    }
+
+    #[test]
+    fn energy_parts_sum_to_e_final() {
+        let s = scenario(300.0);
+        for t in [40.0, 80.0, 160.0] {
+            let w = waste_breakdown(&s, t);
+            let sum = w.energy_baseline + w.energy_checkpointing + w.energy_failures;
+            assert!(rel_err(sum, e_final(&s, t)) < 1e-9, "t={t}");
+        }
+    }
+
+    #[test]
+    fn checkpoint_share_falls_with_t_failure_share_rises() {
+        let s = scenario(300.0);
+        let a = waste_breakdown(&s, 40.0);
+        let b = waste_breakdown(&s, 160.0);
+        assert!(b.time_checkpointing < a.time_checkpointing);
+        assert!(b.time_failures > a.time_failures);
+        assert!(b.energy_checkpointing < a.energy_checkpointing);
+        assert!(b.energy_failures > a.energy_failures);
+    }
+
+    #[test]
+    fn algo_e_spends_less_on_checkpointing_than_algo_t() {
+        // The whole point of AlgoE at rho > 1: buy fewer expensive
+        // checkpoints with cheaper re-execution.
+        let s = scenario(300.0);
+        let wt = waste_breakdown(&s, t_time_opt(&s).unwrap());
+        let we = waste_breakdown(&s, t_energy_opt(&s).unwrap());
+        assert!(we.energy_checkpointing < wt.energy_checkpointing);
+        assert!(we.energy_failures > wt.energy_failures);
+        // And in total AlgoE wins on energy.
+        let et = wt.energy_baseline + wt.energy_checkpointing + wt.energy_failures;
+        let ee = we.energy_baseline + we.energy_checkpointing + we.energy_failures;
+        assert!(ee < et);
+    }
+
+    #[test]
+    fn per_failure_prices_cross_with_t() {
+        let s = scenario(300.0);
+        // Small T: IO loss per failure dominates CPU re-exec; large T:
+        // re-exec dominates.
+        let (cpu_small, io_small) = per_failure_energy(&s, 15.0);
+        let (cpu_large, io_large) = per_failure_energy(&s, 250.0);
+        assert!(io_small > cpu_small, "{io_small} vs {cpu_small}");
+        assert!(cpu_large > io_large, "{cpu_large} vs {io_large}");
+    }
+}

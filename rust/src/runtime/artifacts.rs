@@ -1,0 +1,231 @@
+//! `artifacts/` directory schema — the contract between `python/compile`
+//! and the rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use super::client::RuntimeError;
+use crate::util::json::{parse, Json};
+
+/// One entry of the flat-parameter manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+impl ParamEntry {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Parsed view of `artifacts/` (meta.json + lazily-loaded blobs).
+#[derive(Debug, Clone)]
+pub struct ArtifactDir {
+    root: PathBuf,
+    /// Model/optimizer sizing baked at AOT time.
+    pub n_params: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    pub lr: f64,
+    /// Period-sweep grid size baked at AOT time.
+    pub sweep_grid_n: usize,
+    pub manifest: Vec<ParamEntry>,
+}
+
+impl ArtifactDir {
+    /// Parse `<root>/meta.json` and validate internal consistency.
+    pub fn open(root: impl AsRef<Path>) -> Result<Self, RuntimeError> {
+        let root = root.as_ref().to_path_buf();
+        let meta_path = root.join("meta.json");
+        let raw = std::fs::read_to_string(&meta_path).map_err(|e| {
+            RuntimeError::Artifact(format!(
+                "cannot read {} ({e}) — run `make artifacts` first",
+                meta_path.display()
+            ))
+        })?;
+        let meta =
+            parse(&raw).map_err(|e| RuntimeError::Artifact(format!("meta.json: {e}")))?;
+
+        let cfg = meta
+            .get("config")
+            .ok_or_else(|| RuntimeError::Artifact("meta.json missing `config`".into()))?;
+        let params = meta
+            .get("params")
+            .ok_or_else(|| RuntimeError::Artifact("meta.json missing `params`".into()))?;
+        let sweep = meta
+            .get("sweep")
+            .ok_or_else(|| RuntimeError::Artifact("meta.json missing `sweep`".into()))?;
+
+        let req = |j: &Json, k: &str| -> Result<f64, RuntimeError> {
+            j.req_f64(k).map_err(|e| RuntimeError::Artifact(e.to_string()))
+        };
+
+        let mut manifest = Vec::new();
+        if let Some(Json::Arr(entries)) = params.get("manifest") {
+            for e in entries {
+                let name = e
+                    .req_str("name")
+                    .map_err(|e| RuntimeError::Artifact(e.to_string()))?
+                    .to_string();
+                let shape = e
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| RuntimeError::Artifact(format!("{name}: bad shape")))?
+                    .iter()
+                    .map(|v| v.as_usize().unwrap_or(0))
+                    .collect();
+                let offset = req(e, "offset")? as usize;
+                manifest.push(ParamEntry { name, shape, offset });
+            }
+        }
+
+        let dir = ArtifactDir {
+            root,
+            n_params: req(params, "n_params")? as usize,
+            batch: req(cfg, "batch")? as usize,
+            seq: req(cfg, "seq")? as usize,
+            vocab: req(cfg, "vocab")? as usize,
+            lr: req(cfg, "lr")?,
+            sweep_grid_n: req(sweep, "grid_n")? as usize,
+            manifest,
+        };
+        dir.validate()?;
+        Ok(dir)
+    }
+
+    fn validate(&self) -> Result<(), RuntimeError> {
+        let mut off = 0;
+        for e in &self.manifest {
+            if e.offset != off {
+                return Err(RuntimeError::Artifact(format!(
+                    "manifest gap at `{}`: offset {} expected {off}",
+                    e.name, e.offset
+                )));
+            }
+            off += e.len();
+        }
+        if off != self.n_params {
+            return Err(RuntimeError::Artifact(format!(
+                "manifest covers {off} params, meta says {}",
+                self.n_params
+            )));
+        }
+        Ok(())
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.root.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Load the initial flat parameter vector from `params.bin`.
+    pub fn initial_params(&self) -> Result<Vec<f32>, RuntimeError> {
+        let path = self.root.join("params.bin");
+        let raw = std::fs::read(&path)?;
+        if raw.len() != 4 * self.n_params {
+            return Err(RuntimeError::Artifact(format!(
+                "params.bin is {} bytes, expected {}",
+                raw.len(),
+                4 * self.n_params
+            )));
+        }
+        let mut out = Vec::with_capacity(self.n_params);
+        for chunk in raw.chunks_exact(4) {
+            out.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        Ok(out)
+    }
+
+    /// Find a manifest entry by name.
+    pub fn entry(&self, name: &str) -> Option<&ParamEntry> {
+        self.manifest.iter().find(|e| e.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fake_artifacts(dir: &Path, n: usize) {
+        std::fs::create_dir_all(dir).unwrap();
+        let meta = format!(
+            r#"{{
+              "config": {{"vocab": 256, "d_model": 8, "n_heads": 2,
+                          "n_layers": 1, "seq": 4, "batch": 2, "d_mlp": 16,
+                          "lr": 0.003}},
+              "params": {{"n_params": {n}, "manifest": [
+                 {{"name": "a", "shape": [2, 2], "offset": 0}},
+                 {{"name": "b", "shape": [{rest}], "offset": 4}}
+              ]}},
+              "sweep": {{"grid_n": 256}}
+            }}"#,
+            n = n,
+            rest = n - 4
+        );
+        std::fs::write(dir.join("meta.json"), meta).unwrap();
+        let blob: Vec<u8> =
+            (0..n).flat_map(|i| (i as f32 * 0.5).to_le_bytes()).collect();
+        std::fs::write(dir.join("params.bin"), blob).unwrap();
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let dir = std::env::temp_dir().join("ckpt_artifacts_ok");
+        write_fake_artifacts(&dir, 10);
+        let a = ArtifactDir::open(&dir).unwrap();
+        assert_eq!(a.n_params, 10);
+        assert_eq!(a.batch, 2);
+        assert_eq!(a.seq, 4);
+        assert_eq!(a.sweep_grid_n, 256);
+        assert_eq!(a.entry("a").unwrap().len(), 4);
+        assert_eq!(a.entry("b").unwrap().offset, 4);
+        let p = a.initial_params().unwrap();
+        assert_eq!(p.len(), 10);
+        assert_eq!(p[3], 1.5);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn rejects_manifest_gap() {
+        let dir = std::env::temp_dir().join("ckpt_artifacts_gap");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            r#"{"config": {"vocab":1,"batch":1,"seq":1,"lr":0.1},
+                "params": {"n_params": 8, "manifest": [
+                  {"name": "a", "shape": [2], "offset": 0},
+                  {"name": "b", "shape": [2], "offset": 4}]},
+                "sweep": {"grid_n": 128}}"#,
+        )
+        .unwrap();
+        let err = ArtifactDir::open(&dir).unwrap_err();
+        assert!(err.to_string().contains("manifest gap"), "{err}");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn rejects_bad_params_bin_size() {
+        let dir = std::env::temp_dir().join("ckpt_artifacts_size");
+        write_fake_artifacts(&dir, 10);
+        std::fs::write(dir.join("params.bin"), [0u8; 12]).unwrap();
+        let a = ArtifactDir::open(&dir).unwrap();
+        assert!(a.initial_params().is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn missing_meta_mentions_make_artifacts() {
+        let err = ArtifactDir::open("/nonexistent-dir").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,156 @@
+//! CPU PJRT client + compiled-executable wrapper.
+//!
+//! Pattern from /opt/xla-example/load_hlo: HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Compilation happens once per artifact at
+//! startup; the hot path is `Executable::call`.
+
+use std::path::Path;
+
+/// Errors from the runtime layer.
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("xla error: {0}")]
+    Xla(String),
+    #[error("artifact error: {0}")]
+    Artifact(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+/// Owns the PJRT client. Create one per process.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Connect to the CPU PJRT backend.
+    pub fn cpu() -> Result<Self, RuntimeError> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable, RuntimeError> {
+        if !path.exists() {
+            return Err(RuntimeError::Artifact(format!(
+                "missing artifact {} — run `make artifacts` first",
+                path.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| RuntimeError::Artifact("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable { exe, name: path.file_name().unwrap().to_string_lossy().into_owned() })
+    }
+}
+
+/// A compiled artifact. `call` executes with literal inputs and splits the
+/// tuple output (all our artifacts are lowered with `return_tuple=True`).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with the given inputs; returns the tuple elements.
+    /// Generic over `Borrow<Literal>` so the hot path can pass
+    /// references to persistent literals without copying them.
+    pub fn call<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>, RuntimeError> {
+        let result = self.exe.execute::<L>(inputs)?;
+        let literal = result[0][0].to_literal_sync()?;
+        Ok(literal.to_tuple()?)
+    }
+}
+
+/// Build an `f32[n]` literal from a slice.
+pub fn literal_f32(xs: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(xs)
+}
+
+/// Build an `i32[rows, cols]` literal from a flat slice.
+pub fn literal_i32_2d(xs: &[i32], rows: usize, cols: usize) -> Result<xla::Literal, RuntimeError> {
+    assert_eq!(xs.len(), rows * cols);
+    Ok(xla::Literal::vec1(xs).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// Build a scalar f32 literal.
+pub fn literal_scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Copy a literal out into a Vec<f32>.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>, RuntimeError> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Read a scalar f32 out of a literal.
+pub fn to_scalar_f32(lit: &xla::Literal) -> Result<f32, RuntimeError> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The PJRT client tests live in rust/tests/runtime_integration.rs
+    // (they need the artifacts directory); here we only test the pure
+    // helpers.
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let lit = literal_f32(&[1.0, 2.5, -3.0]);
+        assert_eq!(to_vec_f32(&lit).unwrap(), vec![1.0, 2.5, -3.0]);
+    }
+
+    #[test]
+    fn literal_i32_2d_shape() {
+        let lit = literal_i32_2d(&[1, 2, 3, 4, 5, 6], 2, 3).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn literal_scalar() {
+        let lit = literal_scalar_f32(7.25);
+        assert_eq!(to_scalar_f32(&lit).unwrap(), 7.25);
+    }
+
+    #[test]
+    fn missing_artifact_is_reported() {
+        // Runtime::cpu() is heavier; constructing it here is fine (CPU
+        // client exists everywhere the tests run).
+        let rt = Runtime::cpu().unwrap();
+        let err = match rt.load_hlo_text(Path::new("/nonexistent/x.hlo.txt")) {
+            Ok(_) => panic!("load of missing artifact unexpectedly succeeded"),
+            Err(e) => e,
+        };
+        match err {
+            RuntimeError::Artifact(msg) => assert!(msg.contains("make artifacts")),
+            other => panic!("unexpected error {other:?}"),
+        }
+    }
+}

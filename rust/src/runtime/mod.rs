@@ -1,0 +1,19 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile` and
+//! executes them on the request path. Python is never involved here.
+//!
+//! * [`client`] — thin wrapper over the `xla` crate: CPU PJRT client,
+//!   HLO-text loading (`HloModuleProto::from_text_file`), compilation,
+//!   tuple-returning execution.
+//! * [`artifacts`] — `artifacts/` directory schema: `meta.json` parsing,
+//!   parameter manifest, initial `params.bin` loading, integrity checks.
+//! * [`sweep`] — typed facade over the `sweep_eval` artifact: evaluate
+//!   `(T_final, E_final)` grids through XLA (used by the three-layer
+//!   consistency test and the figure harness's `--via-xla` mode).
+
+pub mod artifacts;
+pub mod client;
+pub mod sweep;
+
+pub use artifacts::{ArtifactDir, ParamEntry};
+pub use client::{Executable, Runtime, RuntimeError};
+pub use sweep::SweepEvaluator;

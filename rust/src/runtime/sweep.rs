@@ -1,0 +1,110 @@
+//! Typed facade over the `sweep_eval` artifact: evaluate the paper's
+//! `(T_final, E_final)` over a period grid **through XLA**.
+//!
+//! This exists for the three-layer consistency check: the same formulas
+//! live in three places — `model::{time,energy}` (rust), the Pallas
+//! kernel (L1), and `ref.py` (oracle). `rust/tests/xla_consistency.rs`
+//! asserts rust and the compiled Pallas kernel agree through PJRT.
+
+use super::artifacts::ArtifactDir;
+use super::client::{literal_f32, to_vec_f32, Executable, Runtime, RuntimeError};
+use crate::model::params::Scenario;
+
+/// Number of scenario scalars in the artifact's parameter vector — must
+/// match `python/compile/kernels/sweep.py::PARAM_NAMES`.
+pub const N_SWEEP_PARAMS: usize = 10;
+
+/// Compiled `sweep_eval` ready to evaluate grids.
+pub struct SweepEvaluator {
+    exe: Executable,
+    grid_n: usize,
+}
+
+impl SweepEvaluator {
+    pub fn load(rt: &Runtime, dir: &ArtifactDir) -> Result<Self, RuntimeError> {
+        let exe = rt.load_hlo_text(&dir.hlo_path("sweep_eval"))?;
+        Ok(SweepEvaluator { exe, grid_n: dir.sweep_grid_n })
+    }
+
+    /// Grid size the artifact was lowered for.
+    pub fn grid_n(&self) -> usize {
+        self.grid_n
+    }
+
+    /// Pack a [`Scenario`] into the artifact's parameter vector.
+    pub fn pack_params(s: &Scenario) -> [f32; N_SWEEP_PARAMS] {
+        [
+            s.ckpt.c as f32,
+            s.ckpt.r as f32,
+            s.ckpt.d as f32,
+            s.ckpt.omega as f32,
+            s.mu as f32,
+            s.t_base as f32,
+            s.power.p_static as f32,
+            s.power.p_cal as f32,
+            s.power.p_io as f32,
+            s.power.p_down as f32,
+        ]
+    }
+
+    /// Evaluate `(T_final, E_final)` for each period in `t_grid`
+    /// (`t_grid.len()` must equal [`SweepEvaluator::grid_n`]).
+    pub fn eval(
+        &self,
+        s: &Scenario,
+        t_grid: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>), RuntimeError> {
+        if t_grid.len() != self.grid_n {
+            return Err(RuntimeError::Artifact(format!(
+                "sweep artifact lowered for {} periods, got {}",
+                self.grid_n,
+                t_grid.len()
+            )));
+        }
+        let params = Self::pack_params(s);
+        let out = self.exe.call(&[literal_f32(t_grid), literal_f32(&params)])?;
+        if out.len() != 2 {
+            return Err(RuntimeError::Artifact(format!(
+                "sweep artifact returned {}-tuple, expected 2",
+                out.len()
+            )));
+        }
+        Ok((to_vec_f32(&out[0])?, to_vec_f32(&out[1])?))
+    }
+
+    /// Build a uniform grid spanning the scenario's feasible periods.
+    pub fn uniform_grid(&self, s: &Scenario) -> Vec<f32> {
+        let (_, hi) = s.domain();
+        let lo = s.min_period() * 1.01;
+        let hi = (hi * 0.99).max(lo * 2.0);
+        (0..self.grid_n)
+            .map(|i| (lo + (hi - lo) * i as f64 / (self.grid_n - 1) as f64) as f32)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::{CheckpointParams, PowerParams};
+
+    fn scenario() -> Scenario {
+        let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, 0.5).unwrap();
+        let power = PowerParams::new(10.0, 10.0, 100.0, 0.0).unwrap();
+        Scenario::new(ckpt, power, 300.0, 10_000.0).unwrap()
+    }
+
+    #[test]
+    fn pack_params_layout_matches_python() {
+        // Order must match sweep.py PARAM_NAMES:
+        // c r d omega mu t_base p_static p_cal p_io p_down.
+        let p = SweepEvaluator::pack_params(&scenario());
+        assert_eq!(
+            p,
+            [10.0, 10.0, 1.0, 0.5, 300.0, 10_000.0, 10.0, 10.0, 100.0, 0.0]
+        );
+    }
+
+    // Execution tests live in rust/tests/xla_consistency.rs (they need
+    // the compiled artifacts).
+}

@@ -1,0 +1,428 @@
+//! Single-run event loop: executes one sample path of the checkpointed
+//! application and integrates wall-clock time and energy exactly.
+//!
+//! Semantics (matching §2–§3 of the paper):
+//!
+//! * A period of length `T` is `T−C` of pure compute (work rate 1)
+//!   followed by a checkpoint of length `C` during which the work rate is
+//!   `ω` and the I/O system is active.
+//! * A completed checkpoint captures the progress at its *start*; the
+//!   `ωC` work units executed while it was being written are only covered
+//!   by the *next* checkpoint (this is why each failure additionally
+//!   costs `ωC` re-execution in the paper's analysis).
+//! * A failure interrupts the current phase, discards everything since
+//!   the last completed checkpoint's cut point, then costs a downtime `D`
+//!   (power `P_Static + P_Down`) and a recovery `R` (power
+//!   `P_Static + P_IO`), after which a fresh period starts.
+//! * Power states: compute ⇒ `P_Static + P_Cal`; checkpoint ⇒
+//!   `P_Static + ω·P_Cal + P_IO` (CPU does `ω` work-units per unit time,
+//!   I/O streams the checkpoint); recovery ⇒ `P_Static + P_IO`;
+//!   downtime ⇒ `P_Static + P_Down`. These integrate to exactly the
+//!   paper's `T_Cal`, `T_IO`, `T_Down` decomposition in expectation.
+//! * The run ends the instant cumulative executed work reaches `T_base`
+//!   (no checkpoint is taken after the final work unit).
+//!
+//! The engine is allocation-free after construction: one loop, a few
+//! floats — ~50 ns per simulated period (see `benches/micro_simulator`).
+
+use super::failure::{FailureProcess, FailureStream};
+use crate::model::params::Scenario;
+use crate::util::rng::Pcg64;
+
+/// Configuration of a simulation.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub scenario: Scenario,
+    /// Checkpointing period `T` to simulate.
+    pub period: f64,
+    pub failure: FailureProcess,
+    /// If `true` (default, realistic), failures can also strike during
+    /// downtime/recovery, restarting them. The paper's first-order model
+    /// ignores this; at `μ ≫ D+R` the difference is second-order.
+    pub failures_during_recovery: bool,
+}
+
+impl SimConfig {
+    /// Config with the paper's aggregate-exponential failure process.
+    pub fn paper(scenario: Scenario, period: f64) -> Self {
+        SimConfig {
+            scenario,
+            period,
+            failure: FailureProcess::Exponential { mtbf: scenario.mu },
+            failures_during_recovery: true,
+        }
+    }
+}
+
+/// Outcome of one simulated execution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RunResult {
+    /// Total wall-clock time (the sample of `T_final`).
+    pub makespan: f64,
+    /// Total energy (the sample of `E_final`).
+    pub energy: f64,
+    pub n_failures: u64,
+    pub n_checkpoints: u64,
+    /// Work units discarded by failures.
+    pub work_lost: f64,
+    /// Wall-clock time per power state.
+    pub time_compute: f64,
+    pub time_checkpoint: f64,
+    pub time_recovery: f64,
+    pub time_down: f64,
+}
+
+impl RunResult {
+    /// CPU-seconds at `P_Cal` (the paper's `T_Cal`): full-rate compute
+    /// plus the `ω` fraction of checkpoint wall time.
+    pub fn t_cal(&self, omega: f64) -> f64 {
+        self.time_compute + omega * self.time_checkpoint
+    }
+
+    /// I/O-seconds at `P_IO` (the paper's `T_IO`).
+    pub fn t_io(&self) -> f64 {
+        self.time_checkpoint + self.time_recovery
+    }
+}
+
+/// The simulator. Construct once, run many seeds.
+#[derive(Debug, Clone)]
+pub struct Simulator {
+    cfg: SimConfig,
+}
+
+/// What ended a phase.
+enum PhaseEnd {
+    /// Phase ran its full planned length.
+    Ran,
+    /// The application's last work unit completed at the returned
+    /// in-phase offset.
+    Finished(f64),
+    /// A failure struck at the returned in-phase offset.
+    Failed(f64),
+}
+
+impl Simulator {
+    pub fn new(cfg: SimConfig) -> Self {
+        assert!(
+            cfg.period >= cfg.scenario.min_period(),
+            "period {} shorter than checkpoint {}",
+            cfg.period,
+            cfg.scenario.ckpt.c
+        );
+        Simulator { cfg }
+    }
+
+    pub fn config(&self) -> &SimConfig {
+        &self.cfg
+    }
+
+    /// Execute one sample path.
+    pub fn run(&self, seed: u64) -> RunResult {
+        let s = &self.cfg.scenario;
+        let t_period = self.cfg.period;
+        let c = s.ckpt.c;
+        let (d, r) = (s.ckpt.d, s.ckpt.r);
+        let omega = s.ckpt.omega;
+        let compute_len = t_period - c;
+
+        let mut rng = Pcg64::seeded(seed);
+        let mut stream = self.cfg.failure.stream(&mut rng);
+
+        let mut res = RunResult {
+            makespan: 0.0,
+            energy: 0.0,
+            n_failures: 0,
+            n_checkpoints: 0,
+            work_lost: 0.0,
+            time_compute: 0.0,
+            time_checkpoint: 0.0,
+            time_recovery: 0.0,
+            time_down: 0.0,
+        };
+
+        let mut now = 0.0f64;
+        // Work captured by the last completed checkpoint.
+        let mut saved = 0.0f64;
+        // Work done during that checkpoint (not yet covered by any ckpt).
+        let mut overlap = 0.0f64;
+        let mut next_fail = stream.next_after(0.0);
+
+        // Returns the phase outcome for a phase of `len` wall time during
+        // which `need` work remains and work accrues at `rate`.
+        let phase_end = |now: f64, len: f64, need: f64, rate: f64, fail_at: f64| -> PhaseEnd {
+            let finish = if rate > 0.0 && need / rate <= len {
+                Some(need / rate)
+            } else {
+                None
+            };
+            let fail = if fail_at < now + len { Some(fail_at - now) } else { None };
+            match (finish, fail) {
+                (Some(f), Some(x)) if f <= x => PhaseEnd::Finished(f),
+                (_, Some(x)) => PhaseEnd::Failed(x),
+                (Some(f), None) => PhaseEnd::Finished(f),
+                (None, None) => PhaseEnd::Ran,
+            }
+        };
+
+        loop {
+            // ---- compute phase (rate 1, power static+cal) ----
+            let base_progress = saved + overlap;
+            let need = s.t_base - base_progress;
+            debug_assert!(need > 0.0);
+            match phase_end(now, compute_len, need, 1.0, next_fail.at) {
+                PhaseEnd::Finished(dt) => {
+                    res.time_compute += dt;
+                    now += dt;
+                    break;
+                }
+                PhaseEnd::Failed(dt) => {
+                    res.time_compute += dt;
+                    now += dt;
+                    res.work_lost += overlap + dt;
+                    overlap = 0.0;
+                    self.fail_and_recover(&mut res, &mut now, &mut next_fail, &mut stream, d, r);
+                    continue;
+                }
+                PhaseEnd::Ran => {
+                    res.time_compute += compute_len;
+                    now += compute_len;
+                }
+            }
+
+            // ---- checkpoint phase (rate ω, power static+ω·cal+io) ----
+            let at_ckpt_start = base_progress + compute_len;
+            let need = s.t_base - at_ckpt_start;
+            match phase_end(now, c, need, omega, next_fail.at) {
+                PhaseEnd::Finished(dt) => {
+                    res.time_checkpoint += dt;
+                    now += dt;
+                    break;
+                }
+                PhaseEnd::Failed(dt) => {
+                    res.time_checkpoint += dt;
+                    now += dt;
+                    res.work_lost += overlap + compute_len + omega * dt;
+                    overlap = 0.0;
+                    self.fail_and_recover(&mut res, &mut now, &mut next_fail, &mut stream, d, r);
+                    continue;
+                }
+                PhaseEnd::Ran => {
+                    res.time_checkpoint += c;
+                    now += c;
+                    res.n_checkpoints += 1;
+                    saved = at_ckpt_start;
+                    overlap = omega * c;
+                }
+            }
+        }
+
+        res.makespan = now;
+        let p = &s.power;
+        res.energy = p.p_static * res.makespan
+            + p.p_cal * (res.time_compute + omega * res.time_checkpoint)
+            + p.p_io * (res.time_checkpoint + res.time_recovery)
+            + p.p_down * res.time_down;
+        res
+    }
+
+    /// Handle the downtime + recovery after a failure, including failures
+    /// that strike *during* recovery when configured.
+    fn fail_and_recover(
+        &self,
+        res: &mut RunResult,
+        now: &mut f64,
+        next_fail: &mut super::failure::Failure,
+        stream: &mut FailureStream,
+        d: f64,
+        r: f64,
+    ) {
+        res.n_failures += 1;
+        *next_fail = stream.next_after(*now);
+        loop {
+            let d_end = *now + d;
+            let r_end = d_end + r;
+            if self.cfg.failures_during_recovery && next_fail.at < r_end {
+                // Failure mid-downtime or mid-recovery: account the
+                // partial phases, then restart D + R.
+                let fail_at = next_fail.at;
+                if fail_at < d_end {
+                    res.time_down += fail_at - *now;
+                } else {
+                    res.time_down += d;
+                    res.time_recovery += fail_at - d_end;
+                }
+                *now = fail_at;
+                res.n_failures += 1;
+                *next_fail = stream.next_after(*now);
+                continue;
+            }
+            res.time_down += d;
+            res.time_recovery += r;
+            *now = r_end;
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::{CheckpointParams, PowerParams, Scenario};
+    use crate::util::stats::rel_err;
+
+    fn scenario(mu: f64, omega: f64, t_base: f64) -> Scenario {
+        let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, omega).unwrap();
+        let power = PowerParams::new(10.0, 10.0, 100.0, 0.0).unwrap();
+        Scenario::new(ckpt, power, mu, t_base).unwrap()
+    }
+
+    /// A failure process that never fires (for failure-free checks).
+    fn no_failures() -> FailureProcess {
+        FailureProcess::Exponential { mtbf: 1e18 }
+    }
+
+    #[test]
+    fn failure_free_matches_t_ff_blocking() {
+        // omega=0, T=100, C=10: work per period 90; T_base=9000 => exactly
+        // 100 periods; the last period needs no trailing checkpoint.
+        let s = scenario(1e18, 0.0, 9000.0);
+        let sim = Simulator::new(SimConfig {
+            scenario: s,
+            period: 100.0,
+            failure: no_failures(),
+            failures_during_recovery: true,
+        });
+        let res = sim.run(1);
+        assert_eq!(res.n_failures, 0);
+        // 99 full periods (with checkpoints) + 90 compute = 9990 — one C
+        // less than T_ff's 100*T/(T-C) = 10000 (model checkpoints the
+        // last period too).
+        assert!((res.makespan - 9990.0).abs() < 1e-6, "makespan={}", res.makespan);
+        assert_eq!(res.n_checkpoints, 99);
+        assert!((res.time_compute - 9000.0).abs() < 1e-6);
+        assert!((res.time_checkpoint - 990.0).abs() < 1e-6);
+        assert_eq!(res.work_lost, 0.0);
+    }
+
+    #[test]
+    fn failure_free_overlap_accounts_omega() {
+        // omega=1/2, T=100, C=10: work per period = 95.
+        let s = scenario(1e18, 0.5, 9500.0);
+        let sim = Simulator::new(SimConfig {
+            scenario: s,
+            period: 100.0,
+            failure: no_failures(),
+            failures_during_recovery: true,
+        });
+        let res = sim.run(1);
+        // 99 full periods = 99*95 = 9405 work, 9900 time; remaining 95
+        // work = 90 compute + 5/0.5=10 ckpt time => finishes exactly at
+        // the end of period 100's checkpoint.
+        assert!((res.makespan - 10000.0).abs() < 1e-6, "makespan={}", res.makespan);
+    }
+
+    #[test]
+    fn finishes_mid_compute_without_checkpoint() {
+        let s = scenario(1e18, 0.5, 50.0);
+        let sim = Simulator::new(SimConfig {
+            scenario: s,
+            period: 100.0,
+            failure: no_failures(),
+            failures_during_recovery: true,
+        });
+        let res = sim.run(1);
+        assert_eq!(res.n_checkpoints, 0);
+        assert!((res.makespan - 50.0).abs() < 1e-9);
+        assert!((res.energy - 50.0 * (10.0 + 10.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let s = scenario(200.0, 0.5, 5000.0);
+        let sim = Simulator::new(SimConfig::paper(s, 80.0));
+        let a = sim.run(42);
+        let b = sim.run(42);
+        assert_eq!(a, b);
+        let c = sim.run(43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn energy_identity() {
+        let s = scenario(150.0, 0.5, 5000.0);
+        let sim = Simulator::new(SimConfig::paper(s, 70.0));
+        for seed in 0..20 {
+            let res = sim.run(seed);
+            let p = &s.power;
+            let manual = p.p_static * res.makespan
+                + p.p_cal * res.t_cal(0.5)
+                + p.p_io * res.t_io()
+                + p.p_down * res.time_down;
+            assert!(rel_err(res.energy, manual) < 1e-12);
+            // Makespan is the sum of phase wall times.
+            let total = res.time_compute
+                + res.time_checkpoint
+                + res.time_recovery
+                + res.time_down;
+            assert!(rel_err(res.makespan, total) < 1e-12, "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn failures_cost_work_and_time() {
+        let s = scenario(100.0, 0.5, 5000.0);
+        let sim = Simulator::new(SimConfig::paper(s, 60.0));
+        let res = sim.run(7);
+        assert!(res.n_failures > 10, "n_failures={}", res.n_failures);
+        assert!(res.work_lost > 0.0);
+        assert!(res.makespan > 5000.0);
+        assert!(res.time_down > 0.0 && res.time_recovery > 0.0);
+    }
+
+    #[test]
+    fn more_failures_with_smaller_mtbf() {
+        let mk = |mu: f64| {
+            let s = scenario(mu, 0.5, 20_000.0);
+            Simulator::new(SimConfig::paper(s, 80.0)).run(11)
+        };
+        assert!(mk(50.0).n_failures > mk(500.0).n_failures);
+    }
+
+    #[test]
+    fn recovery_failures_toggle() {
+        // With a tiny MTBF comparable to D+R, allowing failures during
+        // recovery must increase the failure count.
+        let s = scenario(40.0, 0.0, 2000.0);
+        let mut cfg = SimConfig::paper(s, 50.0);
+        cfg.failures_during_recovery = false;
+        let without = Simulator::new(cfg.clone()).run(3);
+        cfg.failures_during_recovery = true;
+        let with = Simulator::new(cfg).run(3);
+        assert!(with.n_failures >= without.n_failures);
+    }
+
+    #[test]
+    #[should_panic(expected = "shorter than checkpoint")]
+    fn rejects_period_below_c() {
+        let s = scenario(200.0, 0.5, 1000.0);
+        let _ = Simulator::new(SimConfig::paper(s, 5.0));
+    }
+
+    #[test]
+    fn work_conservation() {
+        // Executed work = t_base + work_lost (every executed unit is
+        // either part of the final result or was lost to a failure).
+        let s = scenario(120.0, 0.5, 8000.0);
+        let sim = Simulator::new(SimConfig::paper(s, 70.0));
+        for seed in 0..10 {
+            let res = sim.run(seed);
+            let executed = res.time_compute + 0.5 * res.time_checkpoint;
+            assert!(
+                rel_err(executed, 8000.0 + res.work_lost) < 1e-9,
+                "seed={seed}: executed={executed} vs {}",
+                8000.0 + res.work_lost
+            );
+        }
+    }
+}

@@ -1,0 +1,300 @@
+//! Failure processes for the platform simulator.
+//!
+//! The paper models platform failures as a renewal process with MTBF `μ`
+//! (exponential inter-arrivals — §2.1). We provide that process directly
+//! (`Exponential`), the equivalent superposition of `N` per-node
+//! exponential streams (`PerNodeExponential` — used to *test* the
+//! `μ = μ_ind/N` aggregation the paper asserts), and per-node Weibull
+//! renewals (`PerNodeWeibull` — a robustness extension: real HPC failure
+//! logs show shape < 1, i.e. infant mortality).
+
+use crate::util::rng::Pcg64;
+
+/// Specification of a failure process.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FailureProcess {
+    /// Platform-aggregate exponential with the given MTBF (the paper's
+    /// model; memoryless, so recovery/downtime need no special-casing).
+    Exponential { mtbf: f64 },
+    /// `n` nodes, each an independent exponential renewal with MTBF
+    /// `mtbf_ind`. Equivalent in law to `Exponential { mtbf_ind / n }`.
+    PerNodeExponential { n: usize, mtbf_ind: f64 },
+    /// `n` nodes, each a Weibull renewal. `shape < 1` ⇒ decreasing hazard
+    /// (bursty, infant-mortality-like); `shape = 1` ⇒ exponential.
+    /// `scale_ind` is each node's Weibull scale parameter.
+    PerNodeWeibull { n: usize, shape: f64, scale_ind: f64 },
+}
+
+impl FailureProcess {
+    /// The process's long-run platform MTBF (used to parameterise model
+    /// comparisons).
+    pub fn platform_mtbf(&self) -> f64 {
+        match self {
+            FailureProcess::Exponential { mtbf } => *mtbf,
+            FailureProcess::PerNodeExponential { n, mtbf_ind } => mtbf_ind / *n as f64,
+            FailureProcess::PerNodeWeibull { n, shape, scale_ind } => {
+                // Node mean = scale * Γ(1 + 1/shape); platform rate = n/node-mean.
+                scale_ind * gamma(1.0 + 1.0 / shape) / *n as f64
+            }
+        }
+    }
+
+    /// Instantiate a sampling stream.
+    pub fn stream(&self, rng: &mut Pcg64) -> FailureStream {
+        match self {
+            FailureProcess::Exponential { mtbf } => {
+                FailureStream::Exponential { mtbf: *mtbf, rng: rng.split(0xFA11) }
+            }
+            FailureProcess::PerNodeExponential { n, mtbf_ind } => {
+                // Superposition of exponentials is exponential: sample the
+                // aggregate directly but keep per-node attribution by
+                // picking a uniformly random node per event (exact for
+                // i.i.d. exponential nodes).
+                FailureStream::AggregateAttributed {
+                    mtbf: mtbf_ind / *n as f64,
+                    n: *n,
+                    rng: rng.split(0xFA12),
+                }
+            }
+            FailureProcess::PerNodeWeibull { n, shape, scale_ind } => {
+                // True per-node renewal simulation via a next-event heap.
+                let mut heap = std::collections::BinaryHeap::with_capacity(*n);
+                let mut streams = Vec::with_capacity(*n);
+                for node in 0..*n {
+                    let mut node_rng = rng.split(0x7E1B + node as u64);
+                    let first = node_rng.weibull(*shape, *scale_ind);
+                    heap.push(NextEvent { at: first, node });
+                    streams.push(node_rng);
+                }
+                FailureStream::PerNodeRenewal {
+                    shape: *shape,
+                    scale: *scale_ind,
+                    heap,
+                    streams,
+                }
+            }
+        }
+    }
+}
+
+/// A single failure event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Failure {
+    /// Absolute platform time of the failure.
+    pub at: f64,
+    /// Which node failed (0 for aggregate processes).
+    pub node: usize,
+}
+
+/// Min-heap entry (BinaryHeap is a max-heap; invert ordering on time).
+/// Public only because it appears in [`FailureStream`]'s variant fields;
+/// not constructible outside this module.
+#[derive(Debug)]
+pub struct NextEvent {
+    at: f64,
+    node: usize,
+}
+
+impl PartialEq for NextEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at
+    }
+}
+impl Eq for NextEvent {}
+impl PartialOrd for NextEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for NextEvent {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reverse: smallest time pops first.
+        other.at.partial_cmp(&self.at).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+/// A stateful stream of failure events in increasing time order.
+pub enum FailureStream {
+    Exponential {
+        mtbf: f64,
+        rng: Pcg64,
+    },
+    AggregateAttributed {
+        mtbf: f64,
+        n: usize,
+        rng: Pcg64,
+    },
+    PerNodeRenewal {
+        shape: f64,
+        scale: f64,
+        heap: std::collections::BinaryHeap<NextEvent>,
+        streams: Vec<Pcg64>,
+    },
+}
+
+impl FailureStream {
+    /// Next failure strictly after `now`. Streams are renewal processes in
+    /// absolute time; the engine simply consumes them in order and skips
+    /// events that land inside already-lost intervals is NOT needed —
+    /// failures during downtime/recovery are real events the engine
+    /// handles explicitly.
+    pub fn next_after(&mut self, now: f64) -> Failure {
+        match self {
+            FailureStream::Exponential { mtbf, rng } => {
+                Failure { at: now + rng.exponential(*mtbf), node: 0 }
+            }
+            FailureStream::AggregateAttributed { mtbf, n, rng } => {
+                let at = now + rng.exponential(*mtbf);
+                let node = rng.below(*n as u64) as usize;
+                Failure { at, node }
+            }
+            FailureStream::PerNodeRenewal { shape, scale, heap, streams } => {
+                loop {
+                    let ev = heap.pop().expect("renewal heap never empties");
+                    let node = ev.node;
+                    let next = ev.at + streams[node].weibull(*shape, *scale);
+                    heap.push(NextEvent { at: next, node });
+                    if ev.at > now {
+                        return Failure { at: ev.at, node };
+                    }
+                    // Event at or before `now` (can happen after the engine
+                    // fast-forwards across downtime): drop it and keep the
+                    // renewal ticking.
+                }
+            }
+        }
+    }
+}
+
+/// Lanczos approximation of Γ(x) for x > 0 (used for Weibull means).
+pub fn gamma(x: f64) -> f64 {
+    // g = 7, n = 9 Lanczos coefficients.
+    const G: f64 = 7.0;
+    const COEF: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        std::f64::consts::PI / ((std::f64::consts::PI * x).sin() * gamma(1.0 - x))
+    } else {
+        let x = x - 1.0;
+        let mut a = COEF[0];
+        let t = x + G + 0.5;
+        for (i, &c) in COEF.iter().enumerate().skip(1) {
+            a += c / (x + i as f64);
+        }
+        (2.0 * std::f64::consts::PI).sqrt() * t.powf(x + 0.5) * (-t).exp() * a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::OnlineStats;
+
+    #[test]
+    fn gamma_known_values() {
+        assert!((gamma(1.0) - 1.0).abs() < 1e-10);
+        assert!((gamma(2.0) - 1.0).abs() < 1e-10);
+        assert!((gamma(5.0) - 24.0).abs() < 1e-8);
+        assert!((gamma(0.5) - std::f64::consts::PI.sqrt()).abs() < 1e-10);
+        assert!((gamma(1.5) - std::f64::consts::PI.sqrt() / 2.0).abs() < 1e-10);
+    }
+
+    fn mean_interarrival(proc: &FailureProcess, events: usize, seed: u64) -> f64 {
+        let mut rng = Pcg64::seeded(seed);
+        let mut stream = proc.stream(&mut rng);
+        let mut stats = OnlineStats::new();
+        let mut now = 0.0;
+        for _ in 0..events {
+            let f = stream.next_after(now);
+            stats.push(f.at - now);
+            now = f.at;
+        }
+        stats.mean()
+    }
+
+    #[test]
+    fn exponential_stream_mtbf() {
+        let p = FailureProcess::Exponential { mtbf: 120.0 };
+        let m = mean_interarrival(&p, 100_000, 1);
+        assert!((m - 120.0).abs() / 120.0 < 0.02, "m={m}");
+    }
+
+    #[test]
+    fn per_node_exponential_aggregates_to_mu_ind_over_n() {
+        let p = FailureProcess::PerNodeExponential { n: 1000, mtbf_ind: 120_000.0 };
+        assert!((p.platform_mtbf() - 120.0).abs() < 1e-9);
+        let m = mean_interarrival(&p, 100_000, 2);
+        assert!((m - 120.0).abs() / 120.0 < 0.02, "m={m}");
+    }
+
+    #[test]
+    fn per_node_attribution_covers_nodes() {
+        let p = FailureProcess::PerNodeExponential { n: 16, mtbf_ind: 1600.0 };
+        let mut rng = Pcg64::seeded(3);
+        let mut stream = p.stream(&mut rng);
+        let mut seen = vec![false; 16];
+        let mut now = 0.0;
+        for _ in 0..2000 {
+            let f = stream.next_after(now);
+            seen[f.node] = true;
+            now = f.at;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn weibull_platform_mtbf_matches_simulation() {
+        let p = FailureProcess::PerNodeWeibull { n: 50, shape: 0.7, scale_ind: 5000.0 };
+        let predicted = p.platform_mtbf();
+        // Long-run renewal rate: simulate plenty of events.
+        let m = mean_interarrival(&p, 200_000, 4);
+        assert!(
+            (m - predicted).abs() / predicted < 0.05,
+            "sim={m} predicted={predicted}"
+        );
+    }
+
+    #[test]
+    fn weibull_shape1_matches_exponential_mtbf() {
+        let p = FailureProcess::PerNodeWeibull { n: 10, shape: 1.0, scale_ind: 1000.0 };
+        assert!((p.platform_mtbf() - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn events_strictly_increase() {
+        for p in [
+            FailureProcess::Exponential { mtbf: 10.0 },
+            FailureProcess::PerNodeExponential { n: 4, mtbf_ind: 40.0 },
+            FailureProcess::PerNodeWeibull { n: 4, shape: 0.8, scale_ind: 40.0 },
+        ] {
+            let mut rng = Pcg64::seeded(5);
+            let mut stream = p.stream(&mut rng);
+            let mut now = 0.0;
+            for _ in 0..5000 {
+                let f = stream.next_after(now);
+                assert!(f.at > now, "{p:?}");
+                now = f.at;
+            }
+        }
+    }
+
+    #[test]
+    fn next_after_skips_stale_renewals() {
+        // Jump far ahead: per-node renewal must discard old events.
+        let p = FailureProcess::PerNodeWeibull { n: 8, shape: 1.0, scale_ind: 10.0 };
+        let mut rng = Pcg64::seeded(6);
+        let mut stream = p.stream(&mut rng);
+        let f = stream.next_after(1000.0);
+        assert!(f.at > 1000.0);
+    }
+}

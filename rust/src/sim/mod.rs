@@ -1,0 +1,30 @@
+//! Discrete-event simulator of coordinated checkpointing (the paper's
+//! missing testbed — see DESIGN.md §6).
+//!
+//! The simulator executes the *stochastic process* that §3 of the paper
+//! analyses in expectation: an application of `T_base` work units runs on
+//! a platform whose failures arrive with MTBF `μ`; every period `T` it
+//! takes a non-blocking checkpoint of length `C` during which computation
+//! progresses at rate `ω`; each failure costs a downtime `D`, a recovery
+//! `R`, and the loss of all work since the last *completed* checkpoint's
+//! cut point. Wall-clock time and per-power-state energy are integrated
+//! exactly along the sample path.
+//!
+//! Monte-Carlo replicates ([`runner`]) then estimate `E[T_final]` and
+//! `E[E_final]`, which `rust/tests/sim_vs_model.rs` and
+//! `examples/model_vs_sim` compare against the closed forms — the
+//! validation the paper could not run.
+//!
+//! * [`failure`] — failure processes: platform-aggregate exponential (the
+//!   paper's model), per-node exponential (superposition sanity check),
+//!   and per-node Weibull (robustness extension).
+//! * [`engine`] — the single-run event loop.
+//! * [`runner`] — seeded, multi-threaded Monte-Carlo replication.
+
+pub mod engine;
+pub mod failure;
+pub mod runner;
+
+pub use engine::{RunResult, SimConfig, Simulator};
+pub use failure::FailureProcess;
+pub use runner::{monte_carlo, MonteCarloResult};

@@ -1,0 +1,204 @@
+//! Monte-Carlo replication over seeds, multi-threaded with std threads
+//! (no tokio/rayon in the offline vendor set — a scoped-thread fan-out is
+//! all this needs).
+
+use super::engine::{RunResult, SimConfig, Simulator};
+use crate::util::stats::{ConfidenceLevel, OnlineStats};
+
+/// Aggregated Monte-Carlo estimates.
+#[derive(Debug, Clone)]
+pub struct MonteCarloResult {
+    pub replicates: usize,
+    pub makespan: OnlineStats,
+    pub energy: OnlineStats,
+    pub failures: OnlineStats,
+    pub checkpoints: OnlineStats,
+    pub work_lost: OnlineStats,
+}
+
+impl MonteCarloResult {
+    pub fn makespan_ci95(&self) -> (f64, f64) {
+        self.makespan.ci(ConfidenceLevel::P95)
+    }
+
+    pub fn energy_ci95(&self) -> (f64, f64) {
+        self.energy.ci(ConfidenceLevel::P95)
+    }
+}
+
+/// Run `replicates` independent sample paths of `cfg`, fanned out over
+/// `threads` OS threads (seeds `base_seed..base_seed+replicates` are
+/// partitioned round-robin so results are independent of thread count).
+pub fn monte_carlo(
+    cfg: &SimConfig,
+    replicates: usize,
+    base_seed: u64,
+    threads: usize,
+) -> MonteCarloResult {
+    assert!(replicates > 0);
+    let mut threads = threads.clamp(1, replicates);
+    let sim = Simulator::new(cfg.clone());
+    // §Perf: thread spawn + join costs ~100 µs; a replicate of a typical
+    // scenario costs ~2 µs. Calibrate on one run and only fan out when
+    // the parallel half actually amortises the fork (see EXPERIMENTS.md
+    // §Perf L3-1 for the before/after).
+    let mut first: Option<RunResult> = None;
+    if threads > 1 {
+        let t0 = std::time::Instant::now();
+        first = Some(sim.run(base_seed));
+        let est_total = t0.elapsed().as_secs_f64() * (replicates - 1) as f64;
+        if est_total < 1e-3 {
+            threads = 1;
+        }
+    }
+    let results: Vec<RunResult> = if threads == 1 {
+        let skip = usize::from(first.is_some());
+        let mut out: Vec<RunResult> = Vec::with_capacity(replicates);
+        out.extend(first);
+        out.extend((skip..replicates).map(|i| sim.run(base_seed + i as u64)));
+        out
+    } else {
+        let mut out: Vec<Option<RunResult>> = vec![None; replicates];
+        let chunks: Vec<Vec<usize>> = (0..threads)
+            .map(|t| (t..replicates).step_by(threads).collect())
+            .collect();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for idxs in &chunks {
+                let sim = &sim;
+                handles.push(scope.spawn(move || {
+                    idxs.iter()
+                        .map(|&i| (i, sim.run(base_seed + i as u64)))
+                        .collect::<Vec<_>>()
+                }));
+            }
+            for h in handles {
+                for (i, r) in h.join().expect("sim thread panicked") {
+                    out[i] = Some(r);
+                }
+            }
+        });
+        out.into_iter().map(|r| r.unwrap()).collect()
+    };
+
+    let mut mc = MonteCarloResult {
+        replicates,
+        makespan: OnlineStats::new(),
+        energy: OnlineStats::new(),
+        failures: OnlineStats::new(),
+        checkpoints: OnlineStats::new(),
+        work_lost: OnlineStats::new(),
+    };
+    for r in &results {
+        mc.makespan.push(r.makespan);
+        mc.energy.push(r.energy);
+        mc.failures.push(r.n_failures as f64);
+        mc.checkpoints.push(r.n_checkpoints as f64);
+        mc.work_lost.push(r.work_lost);
+    }
+    mc
+}
+
+/// Empirically search the period minimising mean makespan or energy by
+/// Monte Carlo over a grid — the simulator's answer to AlgoT/AlgoE, used
+/// to validate the closed-form optima end to end.
+pub fn empirical_optimal_period(
+    cfg_at: impl Fn(f64) -> SimConfig,
+    grid: &[f64],
+    replicates: usize,
+    base_seed: u64,
+    threads: usize,
+    objective_energy: bool,
+) -> (f64, f64) {
+    assert!(!grid.is_empty());
+    let mut best = (f64::NAN, f64::INFINITY);
+    for &t in grid {
+        let mc = monte_carlo(&cfg_at(t), replicates, base_seed, threads);
+        let v = if objective_energy { mc.energy.mean() } else { mc.makespan.mean() };
+        if v < best.1 {
+            best = (t, v);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::{CheckpointParams, PowerParams, Scenario};
+    use crate::model::{e_final, t_final};
+    use crate::util::stats::rel_err;
+
+    fn scenario(mu: f64) -> Scenario {
+        let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, 0.5).unwrap();
+        let power = PowerParams::new(10.0, 10.0, 100.0, 0.0).unwrap();
+        Scenario::new(ckpt, power, mu, 20_000.0).unwrap()
+    }
+
+    #[test]
+    fn thread_count_does_not_change_estimates() {
+        let cfg = SimConfig::paper(scenario(300.0), 80.0);
+        let a = monte_carlo(&cfg, 64, 7, 1);
+        let b = monte_carlo(&cfg, 64, 7, 8);
+        assert_eq!(a.makespan.mean(), b.makespan.mean());
+        assert_eq!(a.energy.mean(), b.energy.mean());
+    }
+
+    #[test]
+    fn sim_mean_matches_model_t_final() {
+        // mu=300 >> C=10: first-order model should match MC within ~2%.
+        let s = scenario(300.0);
+        let t = 80.0;
+        let cfg = SimConfig::paper(s, t);
+        let mc = monte_carlo(&cfg, 400, 1, 8);
+        let model = t_final(&s, t);
+        let sim = mc.makespan.mean();
+        assert!(rel_err(model, sim) < 0.02, "model={model} sim={sim}");
+    }
+
+    #[test]
+    fn sim_mean_matches_model_e_final() {
+        let s = scenario(300.0);
+        let t = 80.0;
+        let cfg = SimConfig::paper(s, t);
+        let mc = monte_carlo(&cfg, 400, 2, 8);
+        let model = e_final(&s, t);
+        let sim = mc.energy.mean();
+        assert!(rel_err(model, sim) < 0.02, "model={model} sim={sim}");
+    }
+
+    #[test]
+    fn failure_count_matches_expectation() {
+        let s = scenario(300.0);
+        let t = 80.0;
+        let mc = monte_carlo(&SimConfig::paper(s, t), 400, 3, 8);
+        let expect = t_final(&s, t) / s.mu;
+        assert!(
+            rel_err(mc.failures.mean(), expect) < 0.05,
+            "sim={} expect={expect}",
+            mc.failures.mean()
+        );
+    }
+
+    #[test]
+    fn empirical_optimum_near_closed_form() {
+        let s = scenario(300.0);
+        let topt = crate::model::t_time_opt(&s).unwrap();
+        let grid: Vec<f64> = (1..=12).map(|i| 20.0 * i as f64).collect();
+        let (t_emp, _) = empirical_optimal_period(
+            |t| SimConfig::paper(s, t),
+            &grid,
+            200,
+            5,
+            8,
+            false,
+        );
+        // Grid resolution is 20 min; the empirical argmin should land in
+        // the cell containing T_Time_opt (or an adjacent one: the
+        // objective is very flat near the optimum).
+        assert!(
+            (t_emp - topt).abs() <= 40.0,
+            "empirical={t_emp} closed-form={topt}"
+        );
+    }
+}

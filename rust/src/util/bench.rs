@@ -1,0 +1,230 @@
+//! Timing harness for the `harness = false` benches.
+//!
+//! `criterion` is not in the offline vendor set; this provides the part we
+//! rely on: warmup, N timed iterations, median/p10/p90 and throughput
+//! reporting, plus an optional JSON dump (consumed by EXPERIMENTS.md
+//! tooling). Results print in a stable, grep-friendly format:
+//!
+//! ```text
+//! bench fig1_rho_sweep/series_200pts        median=1.234ms p10=1.2ms p90=1.3ms iters=50
+//! ```
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::stats::percentile;
+
+/// Re-export of `std::hint::black_box` so benches depend only on this mod.
+pub fn black_box<T>(x: T) -> T {
+    bb(x)
+}
+
+/// One benchmark's measurements.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wall time in seconds.
+    pub samples: Vec<f64>,
+    /// Optional units-processed per iteration for throughput reporting.
+    pub units_per_iter: Option<f64>,
+}
+
+impl Measurement {
+    pub fn median(&self) -> f64 {
+        percentile(&self.samples, 0.5)
+    }
+
+    pub fn p10(&self) -> f64 {
+        percentile(&self.samples, 0.1)
+    }
+
+    pub fn p90(&self) -> f64 {
+        percentile(&self.samples, 0.9)
+    }
+
+    pub fn report_line(&self) -> String {
+        let mut line = format!(
+            "bench {:<44} median={} p10={} p90={} iters={}",
+            self.name,
+            fmt_dur(self.median()),
+            fmt_dur(self.p10()),
+            fmt_dur(self.p90()),
+            self.iters
+        );
+        if let Some(u) = self.units_per_iter {
+            line.push_str(&format!(" thrpt={}/s", fmt_count(u / self.median())));
+        }
+        line
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("median_s", Json::Num(self.median())),
+            ("p10_s", Json::Num(self.p10())),
+            ("p90_s", Json::Num(self.p90())),
+            (
+                "throughput_per_s",
+                match self.units_per_iter {
+                    Some(u) => Json::Num(u / self.median()),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+/// Bench runner: collects measurements, prints a report, optionally dumps
+/// JSON to `target/bench-results/<name>.json`.
+pub struct Bench {
+    suite: String,
+    measurements: Vec<Measurement>,
+    /// Target time per benchmark (split across iterations).
+    target: Duration,
+    min_iters: usize,
+    max_iters: usize,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        let quick = std::env::var("CKPT_BENCH_QUICK").is_ok();
+        Bench {
+            suite: suite.to_string(),
+            measurements: Vec::new(),
+            target: if quick { Duration::from_millis(200) } else { Duration::from_secs(2) },
+            min_iters: if quick { 3 } else { 10 },
+            max_iters: if quick { 20 } else { 1000 },
+        }
+    }
+
+    /// Time `f`, auto-choosing the iteration count to fill the target
+    /// duration. `f` should return something `black_box`-able.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        self.run_with_units(name, None, &mut f)
+    }
+
+    /// Like [`Bench::run`], with a units-per-iteration for throughput.
+    pub fn run_units<T>(
+        &mut self,
+        name: &str,
+        units_per_iter: f64,
+        mut f: impl FnMut() -> T,
+    ) -> &Measurement {
+        self.run_with_units(name, Some(units_per_iter), &mut f)
+    }
+
+    fn run_with_units<T>(
+        &mut self,
+        name: &str,
+        units_per_iter: Option<f64>,
+        f: &mut dyn FnMut() -> T,
+    ) -> &Measurement {
+        // Warmup + calibration: one untimed call, then estimate rate.
+        let t0 = Instant::now();
+        bb(f());
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((self.target.as_secs_f64() / once) as usize)
+            .clamp(self.min_iters, self.max_iters);
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            bb(f());
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let m = Measurement { name: name.to_string(), iters, samples, units_per_iter };
+        println!("{}", m.report_line());
+        self.measurements.push(m);
+        self.measurements.last().unwrap()
+    }
+
+    /// Print the suite footer and write JSON results.
+    pub fn finish(self) {
+        println!("suite {} done: {} benchmarks", self.suite, self.measurements.len());
+        let dir = std::path::Path::new("target/bench-results");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let doc = Json::obj(vec![
+                ("suite", Json::Str(self.suite.clone())),
+                (
+                    "benchmarks",
+                    Json::Arr(self.measurements.iter().map(|m| m.to_json()).collect()),
+                ),
+            ]);
+            let path = dir.join(format!("{}.json", self.suite));
+            let _ = std::fs::write(path, doc.to_string_pretty());
+        }
+    }
+}
+
+/// Format a duration (seconds) with an adaptive unit.
+pub fn fmt_dur(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Format a count with an adaptive suffix.
+pub fn fmt_count(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2}k", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_dur_units() {
+        assert_eq!(fmt_dur(2.5), "2.500s");
+        assert_eq!(fmt_dur(2.5e-3), "2.500ms");
+        assert_eq!(fmt_dur(2.5e-6), "2.500us");
+        assert_eq!(fmt_dur(2.5e-9), "2.5ns");
+    }
+
+    #[test]
+    fn fmt_count_units() {
+        assert_eq!(fmt_count(5.0), "5.0");
+        assert_eq!(fmt_count(5e3), "5.00k");
+        assert_eq!(fmt_count(5e6), "5.00M");
+        assert_eq!(fmt_count(5e9), "5.00G");
+    }
+
+    #[test]
+    fn measurement_stats() {
+        let m = Measurement {
+            name: "t".into(),
+            iters: 3,
+            samples: vec![0.001, 0.002, 0.003],
+            units_per_iter: Some(100.0),
+        };
+        assert!((m.median() - 0.002).abs() < 1e-12);
+        assert!(m.report_line().contains("thrpt="));
+        let j = m.to_json();
+        assert_eq!(j.req_f64("median_s").unwrap(), 0.002);
+    }
+
+    #[test]
+    fn bench_runs_quickly_in_quick_mode() {
+        std::env::set_var("CKPT_BENCH_QUICK", "1");
+        let mut b = Bench::new("unit-test-suite");
+        let m = b.run("noop", || 1 + 1);
+        assert!(m.iters >= 3);
+        b.finish();
+        std::env::remove_var("CKPT_BENCH_QUICK");
+    }
+}

@@ -1,0 +1,17 @@
+//! Self-contained utility layer.
+//!
+//! The build environment is fully offline and the vendored crate set has
+//! no `rand`, `serde`, `criterion` or `proptest`, so this module provides
+//! the small, well-tested subset of those that the rest of the crate
+//! needs: a seedable PCG PRNG with the usual distributions
+//! ([`rng`]), streaming statistics and confidence intervals ([`stats`]),
+//! a minimal JSON reader/writer ([`json`]), a tiny property-based testing
+//! harness ([`proptest`]), a timing harness for the `harness = false`
+//! benches ([`bench`]), and an ASCII table printer ([`table`]).
+
+pub mod bench;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;

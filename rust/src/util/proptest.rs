@@ -1,0 +1,214 @@
+//! A miniature property-based testing harness.
+//!
+//! No `proptest`/`quickcheck` exists in the offline vendor set, so this
+//! module provides the 10% we need: seeded generators over the crate's
+//! parameter spaces and an N-case `check` loop that reports the failing
+//! seed and case. There is no shrinking — cases are drawn from already
+//! small, interpretable spaces (model parameters), so the raw failing
+//! case is directly debuggable.
+//!
+//! Usage (`no_run` because rustdoc test binaries don't inherit the
+//! xla_extension rpath; the same pattern runs for real in every
+//! `#[test]` below):
+//! ```no_run
+//! use ckpt_period::prop_assert;
+//! use ckpt_period::util::proptest::{check, Gen};
+//! check("sum is commutative", 500, |g: &mut Gen| {
+//!     let a = g.f64_in(-1e6, 1e6);
+//!     let b = g.f64_in(-1e6, 1e6);
+//!     prop_assert!(g, a + b == b + a, "a={a} b={b}");
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Pcg64;
+
+/// Case generator handed to each property invocation.
+pub struct Gen {
+    rng: Pcg64,
+    /// Human-readable trace of drawn values, printed on failure.
+    trace: Vec<String>,
+    case: usize,
+}
+
+impl Gen {
+    fn new(seed: u64, case: usize) -> Self {
+        Gen { rng: Pcg64::new(seed, case as u64), trace: Vec::new(), case }
+    }
+
+    /// Current case index (0-based).
+    pub fn case(&self) -> usize {
+        self.case
+    }
+
+    /// Draw a uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.uniform_in(lo, hi);
+        self.trace.push(format!("f64_in({lo},{hi})={v}"));
+        v
+    }
+
+    /// Draw a log-uniform f64 in [lo, hi): equal mass per decade.
+    /// The natural draw for scale parameters (MTBF, node counts).
+    pub fn f64_log_in(&mut self, lo: f64, hi: f64) -> f64 {
+        assert!(lo > 0.0 && hi > lo);
+        let v = (self.rng.uniform_in(lo.ln(), hi.ln())).exp();
+        self.trace.push(format!("f64_log_in({lo},{hi})={v}"));
+        v
+    }
+
+    /// Draw a uniform integer in [lo, hi].
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        let v = lo + self.rng.below((hi - lo + 1) as u64) as usize;
+        self.trace.push(format!("usize_in({lo},{hi})={v}"));
+        v
+    }
+
+    /// Draw a boolean.
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.uniform() < 0.5;
+        self.trace.push(format!("bool={v}"));
+        v
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.below(xs.len() as u64) as usize;
+        self.trace.push(format!("choose(idx={i})"));
+        &xs[i]
+    }
+
+    /// Underlying RNG, for drawing domain objects directly.
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+
+    /// Record a named value in the failure trace.
+    pub fn note(&mut self, name: &str, value: impl std::fmt::Display) {
+        self.trace.push(format!("{name}={value}"));
+    }
+}
+
+/// A property failure: message plus the generator trace.
+#[derive(Debug)]
+pub struct PropError(pub String);
+
+/// Result type returned by properties.
+pub type PropResult = Result<(), PropError>;
+
+/// Assert inside a property, capturing the generator trace on failure.
+#[macro_export]
+macro_rules! prop_assert {
+    ($g:expr, $cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err($crate::util::proptest::PropError(format!($($fmt)*)));
+        }
+    };
+}
+pub use prop_assert;
+
+/// Environment knob: `CKPT_PROPTEST_SEED` overrides the default seed so a
+/// failing run can be replayed exactly.
+fn base_seed() -> u64 {
+    std::env::var("CKPT_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_2013)
+}
+
+/// Run `cases` random cases of `prop`; panic with seed + trace on the
+/// first failure.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    let seed = base_seed();
+    for case in 0..cases {
+        let mut g = Gen::new(seed, case);
+        if let Err(PropError(msg)) = prop(&mut g) {
+            panic!(
+                "property `{name}` failed at case {case}/{cases} \
+                 (replay with CKPT_PROPTEST_SEED={seed}):\n  {msg}\n  trace: {}",
+                g.trace.join(", ")
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("tautology", 100, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            n += 1;
+            prop_assert!(g, (0.0..1.0).contains(&x), "x={x}");
+            Ok(())
+        });
+        assert_eq!(n, 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_panics_with_context() {
+        check("always-fails", 10, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            prop_assert!(g, x > 2.0, "x={x} not > 2");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn log_uniform_within_bounds() {
+        check("log-uniform bounds", 300, |g| {
+            let v = g.f64_log_in(1e-3, 1e6);
+            prop_assert!(g, (1e-3..1e6).contains(&v), "v={v}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn usize_in_bounds_inclusive() {
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        check("usize bounds", 500, |g| {
+            let v = g.usize_in(3, 7);
+            seen_lo |= v == 3;
+            seen_hi |= v == 7;
+            prop_assert!(g, (3..=7).contains(&v), "v={v}");
+            Ok(())
+        });
+        assert!(seen_lo && seen_hi);
+    }
+
+    #[test]
+    fn choose_covers_all() {
+        let xs = [1, 2, 3];
+        let mut seen = [false; 3];
+        check("choose coverage", 200, |g| {
+            let v = *g.choose(&xs);
+            seen[(v - 1) as usize] = true;
+            Ok(())
+        });
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn cases_are_deterministic_per_seed() {
+        let mut first = Vec::new();
+        check("record", 20, |g| {
+            first.push(g.f64_in(0.0, 1.0));
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check("record", 20, |g| {
+            second.push(g.f64_in(0.0, 1.0));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

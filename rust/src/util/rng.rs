@@ -1,0 +1,265 @@
+//! Seedable PCG-XSH-RR 64/32 pseudo-random generator plus the
+//! distributions the simulator and workload need.
+//!
+//! PCG (O'Neill 2014) is small, fast, statistically solid, and — crucially
+//! for reproducibility of every experiment in EXPERIMENTS.md —
+//! deterministic across platforms. All stochastic components of the crate
+//! (failure injection, Monte-Carlo simulation, synthetic data) take an
+//! explicit seed and derive independent streams via [`Pcg64::split`].
+
+/// PCG-XSH-RR with 64-bit state and 32-bit output, wrapped to produce
+/// 64-bit values by concatenating two outputs.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg64 {
+    /// Create a generator from a seed and a stream id. Different stream
+    /// ids give statistically independent sequences for the same seed.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let inc = (stream << 1) | 1;
+        let mut rng = Pcg64 { state: 0, inc };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Convenience constructor with stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Derive an independent generator (new stream keyed by `tag`).
+    /// Used to give each simulated node / worker its own failure stream.
+    pub fn split(&mut self, tag: u64) -> Pcg64 {
+        let seed = self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15);
+        Pcg64::new(seed, tag.wrapping_add(1))
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's method, bias-free for the
+    /// ranges we use).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // 128-bit multiply rejection sampling.
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n || lo >= (u64::MAX - n + 1) % n {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Exponential with mean `mean` (inverse-CDF). This is the paper's
+    /// failure inter-arrival model: MTBF `μ` ⇒ `Exp(1/μ)`.
+    #[inline]
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        debug_assert!(mean > 0.0);
+        // 1 - uniform() ∈ (0, 1] avoids ln(0).
+        -mean * (1.0 - self.uniform()).ln()
+    }
+
+    /// Weibull with shape `k` and scale `lambda` (inverse-CDF). Used by
+    /// the simulator's non-exponential failure extension: `k < 1` models
+    /// infant mortality observed on real HPC failure logs.
+    #[inline]
+    pub fn weibull(&mut self, shape: f64, scale: f64) -> f64 {
+        debug_assert!(shape > 0.0 && scale > 0.0);
+        scale * (-(1.0 - self.uniform()).ln()).powf(1.0 / shape)
+    }
+
+    /// Standard normal via Box–Muller (one value per call; we do not
+    /// cache the second — simplicity over speed, this is not a hot path).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = 1.0 - self.uniform();
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Normal with given mean and standard deviation.
+    pub fn normal_with(&mut self, mean: f64, sd: f64) -> f64 {
+        mean + sd * self.normal()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Fill a slice with uniform values in `[lo, hi)` — synthetic data.
+    pub fn fill_uniform(&mut self, xs: &mut [f32], lo: f32, hi: f32) {
+        for x in xs.iter_mut() {
+            *x = lo + (hi - lo) * self.uniform() as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg64::seeded(42);
+        let mut b = Pcg64::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::seeded(1);
+        let mut b = Pcg64::seeded(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn different_streams_differ() {
+        let mut a = Pcg64::new(7, 0);
+        let mut b = Pcg64::new(7, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn split_streams_are_independent_of_parent_continuation() {
+        let mut parent = Pcg64::seeded(9);
+        let mut child = parent.split(3);
+        let c: Vec<u64> = (0..16).map(|_| child.next_u64()).collect();
+        let p: Vec<u64> = (0..16).map(|_| parent.next_u64()).collect();
+        assert_ne!(c, p);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut rng = Pcg64::seeded(3);
+        for _ in 0..10_000 {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_is_half() {
+        let mut rng = Pcg64::seeded(4);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.uniform()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut rng = Pcg64::seeded(5);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = rng.below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn exponential_mean_matches() {
+        let mut rng = Pcg64::seeded(6);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| rng.exponential(3.5)).sum::<f64>() / n as f64;
+        assert!((mean - 3.5).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn exponential_memoryless_tail() {
+        // P(X > t) = exp(-t/mean): check at t = mean (should be ~0.3679).
+        let mut rng = Pcg64::seeded(7);
+        let n = 200_000;
+        let tail = (0..n).filter(|_| rng.exponential(2.0) > 2.0).count() as f64 / n as f64;
+        assert!((tail - (-1.0f64).exp()).abs() < 0.01, "tail={tail}");
+    }
+
+    #[test]
+    fn weibull_shape1_is_exponential() {
+        let mut rng = Pcg64::seeded(8);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| rng.weibull(1.0, 2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 2.0).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn weibull_mean_gamma_relation() {
+        // shape=2 ⇒ mean = scale * Γ(1.5) = scale * sqrt(pi)/2.
+        let mut rng = Pcg64::seeded(9);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| rng.weibull(2.0, 1.0)).sum::<f64>() / n as f64;
+        let expect = std::f64::consts::PI.sqrt() / 2.0;
+        assert!((mean - expect).abs() < 0.01, "mean={mean} expect={expect}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::seeded(10);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::seeded(11);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fill_uniform_in_range() {
+        let mut rng = Pcg64::seeded(12);
+        let mut buf = vec![0f32; 1000];
+        rng.fill_uniform(&mut buf, -0.5, 0.5);
+        assert!(buf.iter().all(|&x| (-0.5..0.5).contains(&x)));
+        assert!(buf.iter().any(|&x| x != 0.0));
+    }
+}

@@ -1,0 +1,178 @@
+//! ASCII table printer used by the examples and the CLI to render the
+//! paper's tables/series in a terminal, and a small CSV writer used by the
+//! figure harness (one CSV per figure so the plots can be regenerated with
+//! any plotting tool).
+
+use std::fmt::Write as _;
+use std::io;
+use std::path::Path;
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// An in-memory table with a header row.
+#[derive(Debug, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    align: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            align: header.iter().map(|_| Align::Right).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Override alignments (defaults to all right-aligned).
+    pub fn with_align(mut self, align: &[Align]) -> Self {
+        assert_eq!(align.len(), self.header.len());
+        self.align = align.to_vec();
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience: build a row from Display values.
+    pub fn row_display(&mut self, cells: &[&dyn std::fmt::Display]) -> &mut Self {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells)
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render with box-drawing separators.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let sep = |out: &mut String| {
+            out.push('+');
+            for w in &width {
+                for _ in 0..w + 2 {
+                    out.push('-');
+                }
+                out.push('+');
+            }
+            out.push('\n');
+        };
+        let line = |out: &mut String, cells: &[String], align: &[Align]| {
+            out.push('|');
+            for ((c, w), a) in cells.iter().zip(&width).zip(align) {
+                let pad = w - c.chars().count();
+                match a {
+                    Align::Left => {
+                        let _ = write!(out, " {}{} ", c, " ".repeat(pad));
+                    }
+                    Align::Right => {
+                        let _ = write!(out, " {}{} ", " ".repeat(pad), c);
+                    }
+                }
+                out.push('|');
+            }
+            out.push('\n');
+        };
+        sep(&mut out);
+        line(&mut out, &self.header, &self.align);
+        sep(&mut out);
+        for row in &self.rows {
+            line(&mut out, row, &self.align);
+        }
+        sep(&mut out);
+        out
+    }
+
+    /// Write the table as CSV (header + rows, RFC-4180 quoting).
+    pub fn write_csv(&self, path: &Path) -> io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut s = String::new();
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        s.push_str(&self.header.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            s.push('\n');
+        }
+        std::fs::write(path, s)
+    }
+}
+
+/// Format a float with `prec` significant-looking decimals, trimming noise.
+pub fn fnum(x: f64, prec: usize) -> String {
+    if !x.is_finite() {
+        return format!("{x}");
+    }
+    format!("{x:.prec$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["name", "value"]).with_align(&[Align::Left, Align::Right]);
+        t.row(&["alpha".into(), "1.0".into()]);
+        t.row(&["b".into(), "12345.6".into()]);
+        let s = t.render();
+        assert!(s.contains("| alpha |"));
+        assert!(s.contains("| 12345.6 |"));
+        // All lines same width.
+        let widths: Vec<usize> = s.lines().map(|l| l.chars().count()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_quoting() {
+        let dir = std::env::temp_dir().join("ckpt_table_test");
+        let path = dir.join("t.csv");
+        let mut t = Table::new(&["a", "b,c"]);
+        t.row(&["x\"y".into(), "1".into()]);
+        t.write_csv(&path).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(s, "a,\"b,c\"\n\"x\"\"y\",1\n");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn fnum_formats() {
+        assert_eq!(fnum(1.23456, 3), "1.235");
+        assert_eq!(fnum(f64::INFINITY, 2), "inf");
+    }
+}

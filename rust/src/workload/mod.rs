@@ -1,0 +1,15 @@
+//! The checkpointed application: a byte-level transformer-LM training
+//! workload executed through PJRT.
+//!
+//! * [`data`] — deterministic synthetic corpus (an affine byte map plus a
+//!   Markov background), batched to the shapes baked into the artifacts.
+//! * [`trainer`] — [`trainer::TrainState`] (flat `theta`/`m`/`v`/`step`,
+//!   exactly the artifact's calling convention) and
+//!   [`trainer::TrainSession`] which owns the compiled `train_step` /
+//!   `eval_loss` executables and advances the state one step per call.
+
+pub mod data;
+pub mod trainer;
+
+pub use data::DataGen;
+pub use trainer::{LitTrainState, TrainSession, TrainState};

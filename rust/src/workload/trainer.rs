@@ -1,0 +1,193 @@
+//! Training session: rust-owned state advanced by the compiled
+//! `train_step` artifact, one PJRT call per step.
+
+use super::data::DataGen;
+use crate::runtime::artifacts::ArtifactDir;
+use crate::runtime::client::{
+    literal_f32, literal_i32_2d, literal_scalar_f32, to_scalar_f32, to_vec_f32, Executable,
+    Runtime, RuntimeError,
+};
+
+/// Full training state — exactly what a checkpoint must capture.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainState {
+    pub theta: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: f32,
+    /// Index of the next data batch (so restores replay the schedule).
+    pub next_batch: u64,
+}
+
+impl TrainState {
+    /// Fresh state from the artifact's initial parameters.
+    pub fn initial(dir: &ArtifactDir) -> Result<Self, RuntimeError> {
+        let theta = dir.initial_params()?;
+        let n = theta.len();
+        Ok(TrainState { theta, m: vec![0.0; n], v: vec![0.0; n], step: 0.0, next_batch: 0 })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.theta.len()
+    }
+
+    /// Total bytes a checkpoint of this state occupies (3 f32 vectors +
+    /// step + batch counter).
+    pub fn checkpoint_bytes(&self) -> usize {
+        3 * 4 * self.theta.len() + 4 + 8
+    }
+}
+
+/// Literal-resident training state — the §Perf representation of the
+/// hot loop (EXPERIMENTS.md §Perf L3-2).
+///
+/// Keeping `theta`/`m`/`v` as `xla::Literal` between steps skips the
+/// `Literal -> Vec<f32> -> Literal` round trip (~7 ms/step at 470k
+/// params); the host vectors are materialised only when a checkpoint
+/// snapshot is taken.
+pub struct LitTrainState {
+    theta: xla::Literal,
+    m: xla::Literal,
+    v: xla::Literal,
+    pub step: f32,
+    pub next_batch: u64,
+}
+
+impl LitTrainState {
+    pub fn from_state(s: &TrainState) -> Self {
+        LitTrainState {
+            theta: literal_f32(&s.theta),
+            m: literal_f32(&s.m),
+            v: literal_f32(&s.v),
+            step: s.step,
+            next_batch: s.next_batch,
+        }
+    }
+
+    /// Materialise the host-vector form (checkpoint snapshots).
+    pub fn to_state(&self) -> Result<TrainState, RuntimeError> {
+        Ok(TrainState {
+            theta: to_vec_f32(&self.theta)?,
+            m: to_vec_f32(&self.m)?,
+            v: to_vec_f32(&self.v)?,
+            step: self.step,
+            next_batch: self.next_batch,
+        })
+    }
+}
+
+/// Owns the compiled executables and the data generator; advances a
+/// [`TrainState`] one step per [`TrainSession::step`] call.
+pub struct TrainSession {
+    train_exe: Executable,
+    eval_exe: Executable,
+    data: DataGen,
+    batch: usize,
+    seq: usize,
+}
+
+impl TrainSession {
+    pub fn new(rt: &Runtime, dir: &ArtifactDir, data_seed: u64) -> Result<Self, RuntimeError> {
+        let train_exe = rt.load_hlo_text(&dir.hlo_path("train_step"))?;
+        let eval_exe = rt.load_hlo_text(&dir.hlo_path("eval_loss"))?;
+        let data = DataGen::new(dir.batch, dir.seq, dir.vocab, data_seed);
+        Ok(TrainSession { train_exe, eval_exe, data, batch: dir.batch, seq: dir.seq })
+    }
+
+    pub fn data(&self) -> &DataGen {
+        &self.data
+    }
+
+    /// Execute one training step, mutating `state` in place.
+    /// Returns the step's loss.
+    pub fn step(&self, state: &mut TrainState) -> Result<f32, RuntimeError> {
+        let (x, y) = self.data.batch_at(state.next_batch);
+        let out = self.train_exe.call(&[
+            literal_f32(&state.theta),
+            literal_f32(&state.m),
+            literal_f32(&state.v),
+            literal_scalar_f32(state.step),
+            literal_i32_2d(&x, self.batch, self.seq)?,
+            literal_i32_2d(&y, self.batch, self.seq)?,
+        ])?;
+        if out.len() != 5 {
+            return Err(RuntimeError::Artifact(format!(
+                "train_step returned {}-tuple, expected 5",
+                out.len()
+            )));
+        }
+        state.theta = to_vec_f32(&out[0])?;
+        state.m = to_vec_f32(&out[1])?;
+        state.v = to_vec_f32(&out[2])?;
+        state.step = to_scalar_f32(&out[3])?;
+        state.next_batch += 1;
+        to_scalar_f32(&out[4])
+    }
+
+    /// One training step on literal-resident state — the optimised hot
+    /// path (no host-vector round trip; see [`LitTrainState`]).
+    pub fn step_lit(&self, state: &mut LitTrainState) -> Result<f32, RuntimeError> {
+        let (x, y) = self.data.batch_at(state.next_batch);
+        let step_scalar = literal_scalar_f32(state.step);
+        let xl = literal_i32_2d(&x, self.batch, self.seq)?;
+        let yl = literal_i32_2d(&y, self.batch, self.seq)?;
+        let inputs: [&xla::Literal; 6] =
+            [&state.theta, &state.m, &state.v, &step_scalar, &xl, &yl];
+        let mut out = self.train_exe.call(&inputs)?;
+        if out.len() != 5 {
+            return Err(RuntimeError::Artifact(format!(
+                "train_step returned {}-tuple, expected 5",
+                out.len()
+            )));
+        }
+        let loss = to_scalar_f32(&out[4])?;
+        state.step = to_scalar_f32(&out[3])?;
+        state.v = out.swap_remove(2);
+        state.m = out.swap_remove(1);
+        state.theta = out.swap_remove(0);
+        state.next_batch += 1;
+        Ok(loss)
+    }
+
+    /// Forward-only loss on literal-resident state.
+    pub fn eval_lit(&self, state: &LitTrainState, index: u64) -> Result<f32, RuntimeError> {
+        let (x, y) = self.data.batch_at(index);
+        let xl = literal_i32_2d(&x, self.batch, self.seq)?;
+        let yl = literal_i32_2d(&y, self.batch, self.seq)?;
+        let inputs: [&xla::Literal; 3] = [&state.theta, &xl, &yl];
+        let out = self.eval_exe.call(&inputs)?;
+        to_scalar_f32(&out[0])
+    }
+
+    /// Forward-only loss on batch `index` (checkpoint verification,
+    /// validation logging).
+    pub fn eval(&self, state: &TrainState, index: u64) -> Result<f32, RuntimeError> {
+        let (x, y) = self.data.batch_at(index);
+        let out = self.eval_exe.call(&[
+            literal_f32(&state.theta),
+            literal_i32_2d(&x, self.batch, self.seq)?,
+            literal_i32_2d(&y, self.batch, self.seq)?,
+        ])?;
+        to_scalar_f32(&out[0])
+    }
+}
+
+// Execution tests live in rust/tests/runtime_integration.rs (they need
+// the artifacts + a PJRT client). State-only tests:
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_bytes_accounting() {
+        let s = TrainState {
+            theta: vec![0.0; 100],
+            m: vec![0.0; 100],
+            v: vec![0.0; 100],
+            step: 0.0,
+            next_batch: 0,
+        };
+        assert_eq!(s.checkpoint_bytes(), 1212);
+        assert_eq!(s.n_params(), 100);
+    }
+}

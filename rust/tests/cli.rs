@@ -1,0 +1,97 @@
+//! CLI smoke tests: run the `ckpt-period` binary end to end.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_ckpt-period"))
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = bin().args(args).output().expect("binary runs");
+    assert!(
+        out.status.success(),
+        "args {args:?} failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let out = run_ok(&["--help"]);
+    for cmd in ["optimize", "sweep", "simulate", "figures", "train", "info"] {
+        assert!(out.contains(cmd), "missing {cmd} in: {out}");
+    }
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let out = bin().arg("bogus").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown subcommand"));
+}
+
+#[test]
+fn optimize_prints_strategies() {
+    let out = run_ok(&["optimize", "--mu", "300", "--rho", "5.5"]);
+    for s in ["AlgoT", "AlgoE", "Young", "Daly", "energy gain"] {
+        assert!(out.contains(s), "missing {s} in: {out}");
+    }
+}
+
+#[test]
+fn optimize_msk_requires_blocking() {
+    let out = run_ok(&["optimize", "--omega", "0", "--msk"]);
+    assert!(out.contains("MSK baseline"), "{out}");
+}
+
+#[test]
+fn optimize_rejects_bad_omega() {
+    let out = bin().args(["optimize", "--omega", "2.0"]).output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn sweep_writes_csv() {
+    let path = std::env::temp_dir().join("ckpt_cli_sweep.csv");
+    let _ = std::fs::remove_file(&path);
+    run_ok(&["sweep", "--points", "50", "--out", path.to_str().unwrap()]);
+    let csv = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(csv.lines().count(), 51); // header + 50 rows
+    assert!(csv.starts_with("period_min,"));
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn sweep_breakdown_adds_columns() {
+    let out = run_ok(&["sweep", "--points", "10", "--breakdown"]);
+    assert!(out.contains("energy_ckpt"), "{out}");
+    assert!(out.contains("time_fail_min"), "{out}");
+}
+
+#[test]
+fn simulate_reports_model_and_ci() {
+    let out = run_ok(&["simulate", "--replicates", "50", "--seed", "3"]);
+    assert!(out.contains("makespan_min"), "{out}");
+    assert!(out.contains("simulated (95% CI)"), "{out}");
+}
+
+#[test]
+fn figures_generates_csvs() {
+    let dir = std::env::temp_dir().join("ckpt_cli_figures");
+    let _ = std::fs::remove_dir_all(&dir);
+    let out = run_ok(&["figures", "--points", "12", "--out-dir", dir.to_str().unwrap()]);
+    assert!(out.contains("peak energy gain"));
+    for f in ["fig1.csv", "fig2.csv", "fig3a.csv", "fig3b.csv"] {
+        assert!(dir.join(f).exists(), "missing {f}");
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn info_reads_artifacts() {
+    let out = run_ok(&["info"]);
+    assert!(out.contains("470784 params") || out.contains("params"), "{out}");
+    assert!(out.contains("sweep grid"), "{out}");
+}

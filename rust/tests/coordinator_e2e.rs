@@ -1,0 +1,157 @@
+//! End-to-end coordinator runs: checkpointing + failure injection +
+//! rollback over the real PJRT workload. These are the system's acceptance
+//! tests; the quantitative experiment lives in
+//! `examples/fault_tolerant_training`.
+
+use ckpt_period::coordinator::{Coordinator, CoordinatorConfig, OverlapMode, PeriodPolicy};
+use ckpt_period::runtime::Runtime;
+
+fn base_cfg(tag: &str) -> CoordinatorConfig {
+    let ckpt_dir = std::env::temp_dir().join(format!("ckpt_e2e_{tag}"));
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+    let mut cfg = CoordinatorConfig::new("artifacts", ckpt_dir);
+    cfg.steps = 30;
+    cfg.mu_s = 6.0; // aggressive failures so short runs still see them
+    cfg.downtime_s = 0.02;
+    cfg.calibration_steps = 2;
+    cfg
+}
+
+#[test]
+fn failure_free_run_completes_and_checkpoints() {
+    let rt = Runtime::cpu().unwrap();
+    let mut cfg = base_cfg("ff");
+    cfg.inject_failures = false;
+    cfg.policy = PeriodPolicy::Fixed(0.5); // checkpoint every ~0.5 s
+    let report = Coordinator::new(&rt, cfg).unwrap().run().unwrap();
+
+    assert_eq!(report.n_failures, 0);
+    assert_eq!(report.steps_executed, 30);
+    assert_eq!(report.steps_target, 30);
+    assert_eq!(report.re_exec_fraction(), 0.0);
+    assert!(report.n_checkpoints >= 1, "report: {report:?}");
+    assert!(report.makespan_s > 0.0);
+    assert!(report.energy.total > 0.0);
+    // Loss curve recorded and decreasing overall.
+    assert_eq!(report.losses.len(), 30);
+    let first = report.losses[0].1;
+    let last = report.final_loss().unwrap();
+    assert!(last < first, "loss {first} -> {last}");
+    // Phase accounting covers the makespan (loop bookkeeping overhead is
+    // outside the tracked phases, so allow slack).
+    let tracked =
+        report.compute_s + report.checkpoint_s + report.recovery_s + report.down_s;
+    assert!(tracked <= report.makespan_s * 1.01);
+    assert!(tracked >= report.makespan_s * 0.5, "tracked {tracked} of {}", report.makespan_s);
+}
+
+#[test]
+fn failures_trigger_rollback_and_reexecution() {
+    let rt = Runtime::cpu().unwrap();
+    let mut cfg = base_cfg("fail");
+    cfg.policy = PeriodPolicy::Fixed(0.4);
+    cfg.mu_s = 2.0; // MTBF ~ a couple of seconds: several failures
+    let report = Coordinator::new(&rt, cfg).unwrap().run().unwrap();
+
+    assert!(report.n_failures >= 1, "no failures injected: {report:?}");
+    // Re-execution: more steps executed than the target.
+    assert!(
+        report.steps_executed >= report.steps_target,
+        "{} < {}",
+        report.steps_executed,
+        report.steps_target
+    );
+    assert!(report.down_s > 0.0);
+    assert!(report.recovery_s > 0.0);
+    // Downtime accounting: each failure sleeps ~downtime_s.
+    assert!(report.down_s >= 0.9 * cfg_downtime(&report) * report.n_failures as f64);
+    // The run still finished the full workload.
+    assert_eq!(report.steps_target, 30);
+    assert!(report.final_loss().unwrap().is_finite());
+}
+
+fn cfg_downtime(_r: &ckpt_period::coordinator::RunReport) -> f64 {
+    0.02
+}
+
+#[test]
+fn blocking_and_overlapped_modes_both_work() {
+    let rt = Runtime::cpu().unwrap();
+
+    let mut cfg = base_cfg("block");
+    cfg.inject_failures = false;
+    cfg.policy = PeriodPolicy::Fixed(0.3);
+    cfg.overlap = OverlapMode::Blocking;
+    let blocking = Coordinator::new(&rt, cfg).unwrap().run().unwrap();
+    assert_eq!(blocking.omega_assumed, 0.0);
+    assert!(blocking.n_checkpoints >= 1);
+
+    let mut cfg = base_cfg("olap");
+    cfg.inject_failures = false;
+    cfg.policy = PeriodPolicy::Fixed(0.3);
+    cfg.overlap = OverlapMode::Overlapped { assumed_omega: 0.9 };
+    let overlapped = Coordinator::new(&rt, cfg).unwrap().run().unwrap();
+    assert!(overlapped.n_checkpoints >= 1);
+    // Overlapped mode must actually overlap: work completed during
+    // checkpoint windows.
+    assert!(
+        overlapped.omega_measured > 0.3,
+        "omega_measured = {}",
+        overlapped.omega_measured
+    );
+}
+
+#[test]
+fn algo_t_and_algo_e_periods_ordered() {
+    // With rho = 5.5 power ratios, AlgoE must choose a longer period.
+    let rt = Runtime::cpu().unwrap();
+
+    let mut cfg = base_cfg("pt");
+    cfg.inject_failures = false;
+    cfg.steps = 12;
+    cfg.mu_s = 20.0;
+    cfg.policy = PeriodPolicy::AlgoT;
+    let rt_t = Coordinator::new(&rt, cfg).unwrap().run().unwrap();
+
+    let mut cfg = base_cfg("pe");
+    cfg.inject_failures = false;
+    cfg.steps = 12;
+    cfg.mu_s = 20.0;
+    cfg.policy = PeriodPolicy::AlgoE;
+    let rt_e = Coordinator::new(&rt, cfg).unwrap().run().unwrap();
+
+    assert!(
+        rt_e.period_s >= rt_t.period_s,
+        "AlgoE period {} < AlgoT period {}",
+        rt_e.period_s,
+        rt_t.period_s
+    );
+}
+
+#[test]
+fn adaptive_mode_completes_and_reacts() {
+    let rt = Runtime::cpu().unwrap();
+    let mut cfg = base_cfg("adaptive");
+    cfg.adaptive = true;
+    cfg.policy = PeriodPolicy::AlgoT;
+    cfg.mu_s = 3.0; // failures arrive, MTBF estimate moves
+    cfg.steps = 25;
+    let report = Coordinator::new(&rt, cfg).unwrap().run().unwrap();
+    assert_eq!(report.steps_target, 25);
+    assert!(report.final_loss().unwrap().is_finite());
+    // The adaptive run still produced checkpoints and survived failures.
+    assert!(report.n_checkpoints >= 1);
+}
+
+#[test]
+fn report_json_is_parseable() {
+    let rt = Runtime::cpu().unwrap();
+    let mut cfg = base_cfg("json");
+    cfg.inject_failures = false;
+    cfg.steps = 6;
+    cfg.policy = PeriodPolicy::Fixed(0.5);
+    let report = Coordinator::new(&rt, cfg).unwrap().run().unwrap();
+    let parsed = ckpt_period::util::json::parse(&report.to_json().to_string_pretty()).unwrap();
+    assert_eq!(parsed.req_f64("steps_target").unwrap(), 6.0);
+    assert!(parsed.get("losses").unwrap().as_arr().unwrap().len() == 6);
+}

@@ -1,0 +1,116 @@
+//! Three-layer consistency: the rust `model` implementation, the Pallas
+//! period-sweep kernel (compiled through XLA), and — transitively via
+//! pytest — the pure-jnp oracle must all agree on `T_final`/`E_final`.
+
+use ckpt_period::model::energy::e_final;
+use ckpt_period::model::params::{CheckpointParams, PowerParams, Scenario};
+use ckpt_period::model::time::t_final;
+use ckpt_period::runtime::{ArtifactDir, Runtime, SweepEvaluator};
+use ckpt_period::util::stats::rel_err;
+
+fn setup() -> (Runtime, ArtifactDir) {
+    let rt = Runtime::cpu().unwrap();
+    let dir = ArtifactDir::open("artifacts").expect("run `make artifacts` first");
+    (rt, dir)
+}
+
+fn check_scenario(evaluator: &SweepEvaluator, s: &Scenario) {
+    let grid = evaluator.uniform_grid(s);
+    let (tf, ef) = evaluator.eval(s, &grid).unwrap();
+    let mut compared = 0;
+    for (i, &t) in grid.iter().enumerate() {
+        let rust_tf = t_final(s, t as f64);
+        let rust_ef = e_final(s, t as f64);
+        if !rust_tf.is_finite() {
+            // The artifact computes in f32; domain-edge disagreement at
+            // the very last grid point is acceptable.
+            continue;
+        }
+        compared += 1;
+        // f32 kernel vs f64 rust: allow 1e-3 relative.
+        assert!(
+            rel_err(tf[i] as f64, rust_tf) < 1e-3,
+            "T_final mismatch at T={t}: xla={} rust={rust_tf}",
+            tf[i]
+        );
+        assert!(
+            rel_err(ef[i] as f64, rust_ef) < 1e-3,
+            "E_final mismatch at T={t}: xla={} rust={rust_ef}",
+            ef[i]
+        );
+    }
+    assert!(compared > grid.len() / 2, "compared only {compared} points");
+}
+
+#[test]
+fn sweep_kernel_matches_rust_model_fig1_point() {
+    let (rt, dir) = setup();
+    let evaluator = SweepEvaluator::load(&rt, &dir).unwrap();
+    let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, 0.5).unwrap();
+    let power = PowerParams::new(10.0, 10.0, 100.0, 0.0).unwrap();
+    let s = Scenario::new(ckpt, power, 300.0, 10_000.0).unwrap();
+    check_scenario(&evaluator, &s);
+}
+
+#[test]
+fn sweep_kernel_matches_rust_model_across_parameters() {
+    let (rt, dir) = setup();
+    let evaluator = SweepEvaluator::load(&rt, &dir).unwrap();
+    for (mu, rho, omega) in [
+        (120.0, 1.5, 0.0),
+        (300.0, 7.0, 1.0),
+        (1000.0, 12.0, 0.25),
+        (60.0, 3.0, 0.75),
+    ] {
+        let ckpt = CheckpointParams::new(5.0, 4.0, 0.5, omega).unwrap();
+        let power = PowerParams::from_rho(rho, 1.0, 0.0).unwrap();
+        let s = Scenario::new(ckpt, power, mu, 5000.0).unwrap();
+        check_scenario(&evaluator, &s);
+    }
+}
+
+#[test]
+fn sweep_argmin_matches_closed_forms() {
+    // The XLA-evaluated grid's argmins should bracket the closed-form
+    // optima (grid resolution tolerance).
+    let (rt, dir) = setup();
+    let evaluator = SweepEvaluator::load(&rt, &dir).unwrap();
+    let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, 0.5).unwrap();
+    let power = PowerParams::new(10.0, 10.0, 100.0, 0.0).unwrap();
+    let s = Scenario::new(ckpt, power, 300.0, 10_000.0).unwrap();
+
+    let grid = evaluator.uniform_grid(&s);
+    let (tf, ef) = evaluator.eval(&s, &grid).unwrap();
+    let argmin = |xs: &[f32]| {
+        let mut best = 0;
+        for (i, &x) in xs.iter().enumerate() {
+            if x < xs[best] {
+                best = i;
+            }
+        }
+        grid[best] as f64
+    };
+    let spacing = (grid[1] - grid[0]) as f64;
+    let t_t = ckpt_period::model::t_time_opt(&s).unwrap();
+    let t_e = ckpt_period::model::t_energy_opt(&s).unwrap();
+    assert!(
+        (argmin(&tf) - t_t).abs() <= 2.0 * spacing,
+        "xla argmin {} vs Eq.1 {t_t}",
+        argmin(&tf)
+    );
+    assert!(
+        (argmin(&ef) - t_e).abs() <= 2.0 * spacing,
+        "xla argmin {} vs quadratic {t_e}",
+        argmin(&ef)
+    );
+}
+
+#[test]
+fn sweep_rejects_wrong_grid_size() {
+    let (rt, dir) = setup();
+    let evaluator = SweepEvaluator::load(&rt, &dir).unwrap();
+    let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, 0.5).unwrap();
+    let power = PowerParams::new(10.0, 10.0, 100.0, 0.0).unwrap();
+    let s = Scenario::new(ckpt, power, 300.0, 10_000.0).unwrap();
+    assert!(evaluator.eval(&s, &[50.0; 3]).is_err());
+}
