@@ -109,6 +109,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     }
     println!("{}", t.render());
 
+    println!("=== Ablation: per-node Weibull platforms (matched MTBF) ===");
+    let wb = ablations::weibull_robustness(&[1.0, 0.7], &[1e5, 1e6, 5e6], 5.5, 120);
+    let wb_table = ablations::weibull_table(&wb);
+    println!("{}", wb_table.render());
+    figures::persist(&wb_table, &out_dir, "ablation_weibull")?;
+
     println!("=== MSK baseline comparison (omega = 0, paper §3.2 side note) ===");
     let mut t = Table::new(&[
         "mu_min",

@@ -1,24 +1,148 @@
-//! Bench for Figure 2: the (μ, ρ) ratio surfaces.
+//! Bench for Figure 2: the (μ, ρ) ratio surfaces, engine edition.
+//!
+//! Three measurements:
+//!
+//! * the closed-form surface, **cold** (memo cache cleared each
+//!   iteration — pure pool-parallel compute) and **warm** (second
+//!   invocation of an identical grid — the repeated-figure/CLI path the
+//!   cache exists for);
+//! * a Monte-Carlo (μ, ρ) grid through the engine vs the seed's
+//!   *per-call spawn/join* `monte_carlo` pattern (scoped threads forked
+//!   and joined per cell, with its serial-fallback calibration hack),
+//!   reproduced verbatim below as the baseline. The printed `speedup`
+//!   line is the acceptance number for pool reuse.
 
+use ckpt_period::config::presets::fig2_scenario;
 use ckpt_period::figures::fig2;
+use ckpt_period::model::t_time_opt;
+use ckpt_period::sim::engine::{RunResult, SimConfig, Simulator};
+use ckpt_period::sweep::{cache, GridSpec};
 use ckpt_period::util::bench::{black_box, Bench};
+use ckpt_period::util::stats::OnlineStats;
+
+/// The seed's `monte_carlo`: spawn + join scoped threads on every call,
+/// with the timing-based serial fallback. Kept here (only) as the bench
+/// baseline; the library now fans out on the persistent pool.
+fn spawn_join_monte_carlo(cfg: &SimConfig, replicates: usize, base_seed: u64, threads: usize) -> f64 {
+    let mut threads = threads.clamp(1, replicates);
+    let sim = Simulator::new(cfg.clone());
+    let mut first: Option<RunResult> = None;
+    if threads > 1 {
+        let t0 = std::time::Instant::now();
+        first = Some(sim.run(base_seed));
+        let est_total = t0.elapsed().as_secs_f64() * (replicates - 1) as f64;
+        if est_total < 1e-3 {
+            threads = 1;
+        }
+    }
+    let results: Vec<RunResult> = if threads == 1 {
+        let skip = usize::from(first.is_some());
+        let mut out: Vec<RunResult> = Vec::with_capacity(replicates);
+        out.extend(first);
+        out.extend((skip..replicates).map(|i| sim.run(base_seed + i as u64)));
+        out
+    } else {
+        let mut out: Vec<Option<RunResult>> = vec![None; replicates];
+        let chunks: Vec<Vec<usize>> =
+            (0..threads).map(|t| (t..replicates).step_by(threads).collect()).collect();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for idxs in &chunks {
+                let sim = &sim;
+                handles.push(scope.spawn(move || {
+                    idxs.iter().map(|&i| (i, sim.run(base_seed + i as u64))).collect::<Vec<_>>()
+                }));
+            }
+            for h in handles {
+                for (i, r) in h.join().expect("sim thread panicked") {
+                    out[i] = Some(r);
+                }
+            }
+        });
+        out.into_iter().map(|r| r.unwrap()).collect()
+    };
+    let mut stats = OnlineStats::new();
+    for r in &results {
+        stats.push(r.makespan);
+    }
+    stats.mean()
+}
 
 fn main() {
     let mut b = Bench::new("fig2_mu_rho_grid");
 
+    // Closed-form surfaces: cold (pool-parallel compute) vs warm (memo).
     for n in [20usize, 40, 80] {
         let mus = fig2::mu_grid(n);
         let rhos = fig2::rho_grid(n);
-        b.run_units(&format!("surface_{n}x{n}"), (n * n) as f64, || {
+        b.run_units(&format!("surface_{n}x{n}_cold"), (n * n) as f64, || {
+            cache::clear();
+            black_box(fig2::grid(&mus, &rhos))
+        });
+        cache::clear();
+        let _ = fig2::grid(&mus, &rhos); // populate
+        b.run_units(&format!("surface_{n}x{n}_warm_cached"), (n * n) as f64, || {
             black_box(fig2::grid(&mus, &rhos))
         });
     }
+
+    // Monte-Carlo grid: engine (persistent pool, cells parallel) vs the
+    // seed's per-cell spawn/join calls. Small replicate counts are the
+    // regime the seed's calibration hack forced serial.
+    const GRID_N: usize = 8;
+    const REPS: usize = 16;
+    let mus: Vec<f64> = (0..GRID_N).map(|i| 120.0 + 180.0 * i as f64 / (GRID_N - 1) as f64).collect();
+    let rhos: Vec<f64> = (0..GRID_N).map(|i| 2.0 + 10.0 * i as f64 / (GRID_N - 1) as f64).collect();
+    let cells: Vec<(SimConfig, f64)> = mus
+        .iter()
+        .flat_map(|&mu| rhos.iter().map(move |&rho| (mu, rho)))
+        .map(|(mu, rho)| {
+            let s = fig2_scenario(mu, rho);
+            let t = t_time_opt(&s).unwrap();
+            (SimConfig::paper(s, t), t)
+        })
+        .collect();
+    let n_cells = cells.len();
+
+    let engine = b
+        .run_units(&format!("mc_grid_{GRID_N}x{GRID_N}x{REPS}_engine_pool"), n_cells as f64, || {
+            let mut spec = GridSpec::new(99);
+            for (cfg, period) in &cells {
+                spec.push_sim(cfg.scenario, *period, REPS);
+            }
+            black_box(spec.without_cache().evaluate())
+        })
+        .median();
+
+    let baseline = b
+        .run_units(
+            &format!("mc_grid_{GRID_N}x{GRID_N}x{REPS}_seed_spawn_join"),
+            n_cells as f64,
+            || {
+                let mut acc = 0.0;
+                for (cfg, _) in &cells {
+                    acc += spawn_join_monte_carlo(cfg, REPS, 99, 8);
+                }
+                black_box(acc)
+            },
+        )
+        .median();
+
+    println!(
+        "fig2 mc-grid speedup: engine+pool is {:.2}x the seed spawn/join path \
+         (engine {:.3} ms vs baseline {:.3} ms)",
+        baseline / engine,
+        engine * 1e3,
+        baseline * 1e3
+    );
 
     let cells = fig2::grid(&fig2::mu_grid(40), &fig2::rho_grid(40));
     println!(
         "fig2: max energy gain over surface {:.1}% (paper: >20% at mu=300)",
         fig2::max_energy_gain_pct(&cells)
     );
+    let (hits, misses) = cache::stats();
+    println!("fig2: memo cache {hits} hits / {misses} misses this process");
     let _ = fig2::table(&cells).write_csv(std::path::Path::new("target/bench-results/fig2.csv"));
     b.finish();
 }

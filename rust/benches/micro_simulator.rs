@@ -21,10 +21,12 @@ fn main() {
         black_box(sim.run(seed))
     });
 
-    // Monte-Carlo scaling across threads.
-    for threads in [1usize, 4, 8] {
+    // Monte-Carlo: inline serial loop vs persistent-pool fan-out.
+    // (`threads` is effectively a switch now: 1 => serial, >1 => the
+    // process-wide pool, whose size is fixed at CKPT_POOL_THREADS/cores.)
+    for (threads, label) in [(1usize, "serial"), (8, "pool")] {
         let cfg = SimConfig::paper(s, t);
-        b.run_units(&format!("monte_carlo_128reps_{threads}thr"), 128.0, || {
+        b.run_units(&format!("monte_carlo_128reps_{label}"), 128.0, || {
             black_box(monte_carlo(&cfg, 128, 99, threads))
         });
     }

@@ -3,19 +3,32 @@
 use std::collections::BTreeMap;
 
 /// Errors produced while parsing a command line.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum CliError {
-    #[error("unknown flag `{0}`\n{1}")]
     UnknownFlag(String, String),
-    #[error("flag `{0}` requires a value")]
     MissingValue(String),
-    #[error("invalid value `{1}` for flag `{0}`: {2}")]
     InvalidValue(String, String, String),
-    #[error("unexpected positional argument `{0}`")]
     UnexpectedPositional(String),
-    #[error("{0}")]
     Help(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownFlag(flag, usage) => write!(f, "unknown flag `{flag}`\n{usage}"),
+            CliError::MissingValue(flag) => write!(f, "flag `{flag}` requires a value"),
+            CliError::InvalidValue(flag, value, why) => {
+                write!(f, "invalid value `{value}` for flag `{flag}`: {why}")
+            }
+            CliError::UnexpectedPositional(arg) => {
+                write!(f, "unexpected positional argument `{arg}`")
+            }
+            CliError::Help(text) => write!(f, "{text}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Specification of one flag.
 #[derive(Debug, Clone)]

@@ -1,6 +1,11 @@
-//! The paper's §4 parameter presets, verbatim.
+//! The paper's §4 parameter presets, verbatim — plus the scenario
+//! families the grid engine makes cheap to explore: per-node-Weibull
+//! Exascale platforms, I/O-contention variants, and a two-level
+//! fast/slow checkpoint-cost family (multi-level checkpointing in the
+//! spirit of VELOC).
 
 use crate::model::params::{CheckpointParams, Platform, PowerParams, Scenario};
+use crate::sim::FailureProcess;
 
 /// Default application size used when the paper does not pin one: the
 /// ratios plotted in the figures are independent of `T_base` (it scales
@@ -43,6 +48,83 @@ pub fn fig3_scenario(n_nodes: f64, rho: f64) -> Option<Scenario> {
     Scenario::new(ckpt, power, mu, DEFAULT_T_BASE_MIN).ok()
 }
 
+/// Number of per-node renewal streams used to *simulate* a Weibull
+/// platform. This is deliberately **not** the scenario's `n_nodes`: by
+/// Palm–Khintchine, the superposition of millions of independent
+/// renewal streams at fixed aggregate rate converges to Poisson, so a
+/// faithful 10⁶-stream simulation would largely wash the Weibull shape
+/// back out (besides costing O(N) setup per replicate). Keeping a fixed,
+/// modest stream count preserves per-stream burstiness — the scenario is
+/// a *bursty-hazard stress model* at the platform's MTBF, answering "how
+/// far can the exponential first-order model drift under correlated,
+/// infant-mortality-like failures", not "what would exactly N Weibull
+/// nodes do".
+pub const WEIBULL_SIM_NODES: usize = 256;
+
+/// Bursty-failure stress variant of the Fig. 3 Exascale family
+/// (`C = R = 1`, `D = 0.1`, `ω = 1/2`, `μ(N) = 120·10⁶/N` minutes).
+///
+/// `shape < 1` models the infant-mortality hazard real HPC failure logs
+/// show; the per-node Weibull scale is chosen so the *platform* MTBF
+/// matches the exponential preset exactly, isolating the effect of the
+/// hazard shape. Failures are simulated as [`WEIBULL_SIM_NODES`]
+/// superposed streams (see that constant for why the count is fixed
+/// rather than `n_nodes`). Returns the scenario plus the
+/// [`FailureProcess`] to simulate it under; `None` outside the model's
+/// domain (same clamp regime as [`fig3_scenario`]).
+pub fn weibull_platform_scenario(
+    n_nodes: f64,
+    rho: f64,
+    shape: f64,
+) -> Option<(Scenario, FailureProcess)> {
+    assert!(shape > 0.0, "Weibull shape must be positive, got {shape}");
+    let scenario = fig3_scenario(n_nodes, rho)?;
+    let n = WEIBULL_SIM_NODES;
+    // platform_mtbf = scale * Γ(1 + 1/shape) / n  ⇒  solve for scale.
+    let scale_ind =
+        scenario.mu * n as f64 / crate::sim::failure::gamma(1.0 + 1.0 / shape);
+    Some((scenario, FailureProcess::PerNodeWeibull { n, shape, scale_ind }))
+}
+
+/// I/O-contention variant of the Fig. 1 family: at contention level
+/// `x ≥ 0` the parallel file system is `1 + x` times slower **and**
+/// proportionally more power-hungry — `C` and `R` stretch by `1 + x`
+/// and `β = P_IO/P_Static` inflates by the same factor (the burst
+/// buffer is busy longer *and* draws more). `x = 0` is exactly
+/// [`fig1_scenario`].
+pub fn io_contention_scenario(mu_min: f64, rho: f64, contention: f64) -> Option<Scenario> {
+    assert!(contention >= 0.0, "contention must be >= 0, got {contention}");
+    let stretch = 1.0 + contention;
+    let ckpt = CheckpointParams::new(10.0 * stretch, 10.0 * stretch, 1.0, 0.5).ok()?;
+    let base = PowerParams::from_rho(rho, 1.0, 0.0).ok()?;
+    let power =
+        PowerParams::new(base.p_static, base.p_cal, base.p_io * stretch, base.p_down).ok()?;
+    Scenario::new(ckpt, power, mu_min, DEFAULT_T_BASE_MIN).ok()
+}
+
+/// Two-level fast/slow checkpoint family (VELOC-style multi-level
+/// checkpointing collapsed to the paper's single-`C` model): every
+/// `slow_every`-th checkpoint is flushed to the slow level (cost
+/// `c_slow`), the rest hit the fast level (cost `c_fast`), so the
+/// *steady-state average* checkpoint cost is
+/// `((slow_every−1)·c_fast + c_slow)/slow_every`. Recovery conservatively
+/// reads the slow level (`R = c_slow` — the fast tier is lost with the
+/// failed node). Fig. 1 powers at the given `ρ`.
+pub fn two_level_scenario(
+    mu_min: f64,
+    rho: f64,
+    c_fast: f64,
+    c_slow: f64,
+    slow_every: usize,
+) -> Option<Scenario> {
+    assert!(slow_every >= 1, "slow_every must be >= 1");
+    assert!(c_slow >= c_fast && c_fast > 0.0, "need 0 < c_fast <= c_slow");
+    let c_eff = ((slow_every - 1) as f64 * c_fast + c_slow) / slow_every as f64;
+    let ckpt = CheckpointParams::new(c_eff, c_slow, 1.0, 0.5).ok()?;
+    let power = PowerParams::from_rho(rho, 1.0, 0.0).ok()?;
+    Scenario::new(ckpt, power, mu_min, DEFAULT_T_BASE_MIN).ok()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -76,5 +158,58 @@ mod tests {
     fn jaguar_numbers() {
         let p = jaguar_platform(219_150.0);
         assert!((p.mu() - 297.0).abs() < 3.0);
+    }
+
+    #[test]
+    fn weibull_platform_matches_exponential_mtbf() {
+        let (s, proc_) = weibull_platform_scenario(1e6, 5.5, 0.7).unwrap();
+        assert!((s.mu - 120.0).abs() < 1e-9);
+        assert!((proc_.platform_mtbf() - s.mu).abs() / s.mu < 1e-12);
+        // shape = 1 degenerates to exponential statistics.
+        let (s1, p1) = weibull_platform_scenario(1e6, 5.5, 1.0).unwrap();
+        assert!((p1.platform_mtbf() - s1.mu).abs() / s1.mu < 1e-9);
+        // Same domain clamp as fig3.
+        assert!(weibull_platform_scenario(1e8, 5.5, 0.7).is_none());
+    }
+
+    #[test]
+    fn io_contention_zero_is_fig1() {
+        let a = io_contention_scenario(300.0, 5.5, 0.0).unwrap();
+        let b = fig1_scenario(300.0, 5.5);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn io_contention_stretches_cost_and_power() {
+        let s = io_contention_scenario(300.0, 5.5, 0.5).unwrap();
+        assert!((s.ckpt.c - 15.0).abs() < 1e-12);
+        assert!((s.ckpt.r - 15.0).abs() < 1e-12);
+        let base = fig1_scenario(300.0, 5.5);
+        assert!((s.power.p_io - base.power.p_io * 1.5).abs() < 1e-12);
+        // More contention => AlgoE's energy gain grows (costlier I/O).
+        let lo = crate::model::ratios::compare(&io_contention_scenario(300.0, 5.5, 0.0).unwrap())
+            .unwrap();
+        let hi = crate::model::ratios::compare(&s).unwrap();
+        assert!(hi.energy_ratio() > lo.energy_ratio());
+    }
+
+    #[test]
+    fn two_level_effective_cost() {
+        // 9 fast (1 min) + 1 slow (10 min) => C_eff = 1.9, R = 10.
+        let s = two_level_scenario(300.0, 5.5, 1.0, 10.0, 10).unwrap();
+        assert!((s.ckpt.c - 1.9).abs() < 1e-12);
+        assert_eq!(s.ckpt.r, 10.0);
+        // Cheaper average checkpoints than the single-level slow store.
+        let single = fig1_scenario(300.0, 5.5);
+        let two = crate::model::ratios::compare(&s).unwrap();
+        let one = crate::model::ratios::compare(&single).unwrap();
+        assert!(two.makespan_at_t < one.makespan_at_t);
+    }
+
+    #[test]
+    fn two_level_slow_every_one_is_single_level() {
+        let s = two_level_scenario(300.0, 5.5, 1.0, 10.0, 1).unwrap();
+        assert_eq!(s.ckpt.c, 10.0);
+        assert_eq!(s.ckpt.r, 10.0);
     }
 }

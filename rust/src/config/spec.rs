@@ -24,14 +24,49 @@ pub struct ScenarioSpec {
     pub n_nodes: Option<f64>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SpecError {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error(transparent)]
-    Json(#[from] JsonError),
-    #[error(transparent)]
-    Model(#[from] ModelError),
+    Io(std::io::Error),
+    Json(JsonError),
+    Model(ModelError),
+}
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpecError::Io(e) => write!(f, "io error: {e}"),
+            SpecError::Json(e) => write!(f, "{e}"),
+            SpecError::Model(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for SpecError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SpecError::Io(e) => Some(e),
+            SpecError::Json(e) => Some(e),
+            SpecError::Model(e) => Some(e),
+        }
+    }
+}
+
+impl From<std::io::Error> for SpecError {
+    fn from(e: std::io::Error) -> Self {
+        SpecError::Io(e)
+    }
+}
+
+impl From<JsonError> for SpecError {
+    fn from(e: JsonError) -> Self {
+        SpecError::Json(e)
+    }
+}
+
+impl From<ModelError> for SpecError {
+    fn from(e: ModelError) -> Self {
+        SpecError::Model(e)
+    }
 }
 
 impl ScenarioSpec {

@@ -30,19 +30,42 @@ const MAGIC: u32 = 0xC4E2_2013;
 const VERSION: u32 = 1;
 
 /// Errors from checkpoint persistence.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CheckpointError {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("corrupt checkpoint: {0}")]
+    Io(std::io::Error),
     Corrupt(String),
-    #[error("no checkpoint present at {0}")]
     Missing(PathBuf),
+}
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointError::Io(e) => write!(f, "io error: {e}"),
+            CheckpointError::Corrupt(m) => write!(f, "corrupt checkpoint: {m}"),
+            CheckpointError::Missing(p) => write!(f, "no checkpoint present at {}", p.display()),
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CheckpointError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CheckpointError {
+    fn from(e: std::io::Error) -> Self {
+        CheckpointError::Io(e)
+    }
 }
 
 /// IEEE CRC-32 (table-driven).
 pub fn crc32(data: &[u8]) -> u32 {
-    static TABLE: once_cell::sync::Lazy<[u32; 256]> = once_cell::sync::Lazy::new(|| {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
         let mut table = [0u32; 256];
         for (i, entry) in table.iter_mut().enumerate() {
             let mut c = i as u32;
@@ -55,7 +78,7 @@ pub fn crc32(data: &[u8]) -> u32 {
     });
     let mut c = !0u32;
     for &b in data {
-        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
     }
     !c
 }

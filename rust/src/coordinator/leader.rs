@@ -97,16 +97,52 @@ impl CoordinatorConfig {
 }
 
 /// Errors the coordinator can surface.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CoordinatorError {
-    #[error(transparent)]
-    Runtime(#[from] crate::runtime::RuntimeError),
-    #[error(transparent)]
-    Checkpoint(#[from] super::checkpoint::CheckpointError),
-    #[error(transparent)]
-    Model(#[from] crate::model::ModelError),
-    #[error("coordinator error: {0}")]
+    Runtime(crate::runtime::RuntimeError),
+    Checkpoint(super::checkpoint::CheckpointError),
+    Model(crate::model::ModelError),
     Other(String),
+}
+
+impl std::fmt::Display for CoordinatorError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CoordinatorError::Runtime(e) => write!(f, "{e}"),
+            CoordinatorError::Checkpoint(e) => write!(f, "{e}"),
+            CoordinatorError::Model(e) => write!(f, "{e}"),
+            CoordinatorError::Other(m) => write!(f, "coordinator error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for CoordinatorError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CoordinatorError::Runtime(e) => Some(e),
+            CoordinatorError::Checkpoint(e) => Some(e),
+            CoordinatorError::Model(e) => Some(e),
+            CoordinatorError::Other(_) => None,
+        }
+    }
+}
+
+impl From<crate::runtime::RuntimeError> for CoordinatorError {
+    fn from(e: crate::runtime::RuntimeError) -> Self {
+        CoordinatorError::Runtime(e)
+    }
+}
+
+impl From<super::checkpoint::CheckpointError> for CoordinatorError {
+    fn from(e: super::checkpoint::CheckpointError) -> Self {
+        CoordinatorError::Checkpoint(e)
+    }
+}
+
+impl From<crate::model::ModelError> for CoordinatorError {
+    fn from(e: crate::model::ModelError) -> Self {
+        CoordinatorError::Model(e)
+    }
 }
 
 /// The leader. Owns the PJRT session, the checkpoint store and the

@@ -5,7 +5,7 @@
 //! arrows in the paper's plot mark ρ = 5.5 and ρ = 7.
 
 use crate::config::presets::fig1_scenario;
-use crate::model::ratios::compare;
+use crate::sweep::GridSpec;
 use crate::util::table::{fnum, Table};
 
 /// The μ values plotted in the paper (minutes).
@@ -31,24 +31,31 @@ pub fn rho_grid(n: usize) -> Vec<f64> {
     (0..n).map(|i| 1.0 + 19.0 * i as f64 / (n - 1) as f64).collect()
 }
 
-/// Compute the full figure: every (μ, ρ) pair.
+/// Compute the full figure: every (μ, ρ) pair, as one grid-engine batch
+/// (parallel, memoised — see [`crate::sweep`]).
 pub fn series(rhos: &[f64]) -> Vec<Point> {
-    let mut out = Vec::with_capacity(rhos.len() * MUS.len());
-    for &mu in &MUS {
-        for &rho in rhos {
-            let s = fig1_scenario(mu, rho);
-            let cmp = compare(&s).expect("fig1 scenario in domain");
-            out.push(Point {
+    let axes: Vec<(f64, f64)> = MUS
+        .iter()
+        .flat_map(|&mu| rhos.iter().map(move |&rho| (mu, rho)))
+        .collect();
+    let spec = GridSpec::compare_all(
+        axes.iter().map(|&(mu, rho)| fig1_scenario(mu, rho)),
+        super::FIGURE_SEED,
+    );
+    axes.iter()
+        .zip(spec.evaluate())
+        .map(|(&(mu, rho), r)| {
+            let cmp = r.output.comparison().expect("fig1 scenario in domain");
+            Point {
                 mu,
                 rho,
                 time_ratio: cmp.time_ratio(),
                 energy_ratio: cmp.energy_ratio(),
                 t_time: cmp.t_time,
                 t_energy: cmp.t_energy,
-            });
-        }
-    }
-    out
+            }
+        })
+        .collect()
 }
 
 /// Render as a table (one row per point).

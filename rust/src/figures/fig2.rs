@@ -4,7 +4,7 @@
 //! AlgoE over AlgoT. Same C/R/D/ω parameters as Fig. 1.
 
 use crate::config::presets::fig2_scenario;
-use crate::model::ratios::compare;
+use crate::sweep::GridSpec;
 use crate::util::table::{fnum, Table};
 
 /// A grid cell of the surface.
@@ -28,22 +28,25 @@ pub fn rho_grid(n: usize) -> Vec<f64> {
     (0..n).map(|i| 1.0 + 19.0 * i as f64 / (n - 1) as f64).collect()
 }
 
-/// Compute the surface row-major (μ outer, ρ inner).
+/// Compute the surface row-major (μ outer, ρ inner) as one grid-engine
+/// batch. A full 80×80 surface is 6 400 comparison cells — exactly the
+/// shape the pool + memo cache were built for.
 pub fn grid(mus: &[f64], rhos: &[f64]) -> Vec<Cell> {
-    let mut out = Vec::with_capacity(mus.len() * rhos.len());
-    for &mu in mus {
-        for &rho in rhos {
-            let s = fig2_scenario(mu, rho);
-            let cmp = compare(&s).expect("fig2 scenario in domain");
-            out.push(Cell {
-                mu,
-                rho,
-                time_ratio: cmp.time_ratio(),
-                energy_ratio: cmp.energy_ratio(),
-            });
-        }
-    }
-    out
+    let axes: Vec<(f64, f64)> = mus
+        .iter()
+        .flat_map(|&mu| rhos.iter().map(move |&rho| (mu, rho)))
+        .collect();
+    let spec = GridSpec::compare_all(
+        axes.iter().map(|&(mu, rho)| fig2_scenario(mu, rho)),
+        super::FIGURE_SEED,
+    );
+    axes.iter()
+        .zip(spec.evaluate())
+        .map(|(&(mu, rho), r)| {
+            let cmp = r.output.comparison().expect("fig2 scenario in domain");
+            Cell { mu, rho, time_ratio: cmp.time_ratio(), energy_ratio: cmp.energy_ratio() }
+        })
+        .collect()
 }
 
 /// Long-format table (one row per cell) — ready for any surface plotter.

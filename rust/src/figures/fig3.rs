@@ -11,7 +11,7 @@
 //! with `clamped = true`.
 
 use crate::config::presets::fig3_scenario;
-use crate::model::ratios::compare;
+use crate::sweep::GridSpec;
 use crate::util::table::{fnum, Table};
 
 /// One point of Fig. 3.
@@ -35,27 +35,43 @@ pub fn node_grid(n: usize) -> Vec<f64> {
         .collect()
 }
 
-/// Compute one panel (fixed ρ).
+/// Compute one panel (fixed ρ) as a grid-engine batch. Out-of-domain
+/// node counts never enter the grid; in-domain cells whose comparison
+/// still fails (domain edge) come back as `Compare(None)` — both are
+/// reported clamped.
 pub fn series(rho: f64, nodes: &[f64]) -> Vec<Point> {
-    nodes
+    let scenarios: Vec<_> = nodes.iter().map(|&n| (n, fig3_scenario(n, rho))).collect();
+    let spec = GridSpec::compare_all(
+        scenarios.iter().filter_map(|(_, s)| *s),
+        super::FIGURE_SEED,
+    );
+    let mut results = spec.evaluate().into_iter();
+    let clamped_point = |n: f64| Point {
+        n_nodes: n,
+        mu: super::fig3_mu(n),
+        rho,
+        time_ratio: 1.0,
+        energy_ratio: 1.0,
+        clamped: true,
+    };
+    scenarios
         .iter()
-        .map(|&n| match fig3_scenario(n, rho).and_then(|s| compare(&s).ok().map(|c| (s, c))) {
-            Some((s, cmp)) => Point {
-                n_nodes: n,
-                mu: s.mu,
-                rho,
-                time_ratio: cmp.time_ratio(),
-                energy_ratio: cmp.energy_ratio(),
-                clamped: false,
-            },
-            None => Point {
-                n_nodes: n,
-                mu: super::fig3_mu(n),
-                rho,
-                time_ratio: 1.0,
-                energy_ratio: 1.0,
-                clamped: true,
-            },
+        .map(|&(n, s)| match s {
+            Some(sc) => {
+                let r = results.next().expect("one result per in-domain cell");
+                match r.output.comparison() {
+                    Some(cmp) => Point {
+                        n_nodes: n,
+                        mu: sc.mu,
+                        rho,
+                        time_ratio: cmp.time_ratio(),
+                        energy_ratio: cmp.energy_ratio(),
+                        clamped: false,
+                    },
+                    None => clamped_point(n),
+                }
+            }
+            None => clamped_point(n),
         })
         .collect()
 }

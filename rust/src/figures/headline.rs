@@ -2,7 +2,7 @@
 
 use crate::config::presets::{fig1_scenario, fig3_scenario};
 use crate::figures::fig3;
-use crate::model::ratios::compare;
+use crate::sweep::GridSpec;
 
 /// The §5 claims, computed from the model.
 #[derive(Debug, Clone, Copy)]
@@ -21,10 +21,17 @@ pub struct Headline {
     pub fig3_peak_in_expected_band: bool,
 }
 
-/// Compute every headline number.
+/// Compute every headline number. The two μ=300 comparisons share the
+/// grid engine's memo cache with Fig. 1/Fig. 2, so a full figure suite
+/// computes them once.
 pub fn compute() -> Headline {
-    let h55 = compare(&fig1_scenario(300.0, 5.5)).expect("in domain");
-    let h7 = compare(&fig1_scenario(300.0, 7.0)).expect("in domain");
+    let spec = GridSpec::compare_all(
+        [fig1_scenario(300.0, 5.5), fig1_scenario(300.0, 7.0)],
+        super::FIGURE_SEED,
+    );
+    let results = spec.evaluate();
+    let h55 = *results[0].output.comparison().expect("in domain");
+    let h7 = *results[1].output.comparison().expect("in domain");
 
     let nodes = fig3::node_grid(120);
     let pts = fig3::series(5.5, &nodes);

@@ -7,16 +7,25 @@
 //! | [`fig2::grid`]      | Fig. 2 — ratio surfaces over (μ, ρ) |
 //! | [`fig3::series`]    | Fig. 3a/3b — ratios vs node count |
 //! | [`headline::compute`] | §5 headline numbers |
-//! | [`ablations`]       | ω sweep, first-order accuracy, γ sweep, MSK |
+//! | [`ablations`]       | ω sweep, first-order accuracy, γ sweep, MSK, Weibull robustness |
 //!
-//! All series come straight from `model::ratios::compare`; the benches
-//! time them and the examples print/persist them.
+//! Every series is built as a [`crate::sweep::GridSpec`] and evaluated
+//! on the persistent thread pool with process-wide memoisation — a
+//! figure regenerated twice (or a cell shared between two figures, e.g.
+//! the Fig. 1 slice inside Fig. 2) computes once. Simulated cells
+//! (the Weibull robustness ablation) derive their seeds from
+//! [`FIGURE_SEED`] and the cell parameters, so figure data is
+//! deterministic and thread-count-independent. The benches time the
+//! same paths and the examples print/persist them.
 
 pub mod ablations;
 pub mod fig1;
 pub mod fig2;
 pub mod fig3;
 pub mod headline;
+
+/// Base seed every figure/ablation grid derives its cell seeds from.
+pub const FIGURE_SEED: u64 = 2013;
 
 use std::path::Path;
 

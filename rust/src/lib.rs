@@ -16,7 +16,22 @@
 //!   and a period-sweep evaluator) called from Layer 2.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the JAX
-//! program once, and the rust binary is self-contained afterwards.
+//! program once, and the rust binary is self-contained afterwards. The
+//! PJRT execution path is feature-gated (`pjrt`); the default build uses
+//! a std-only stub and everything except artifact execution works.
+//!
+//! # The grid engine
+//!
+//! All scenario exploration — the paper figures, the ablations, and the
+//! CLI `sweep`/`simulate`/`figures` subcommands — routes through one
+//! declarative engine, [`sweep::GridSpec`]: a flat batch of
+//! (scenario × period × failure-process) cells evaluated on a persistent
+//! work-stealing thread pool ([`util::pool::ThreadPool`]). Simulated
+//! cells derive their seeds by hashing the spec's base seed with the
+//! cell's parameter bits, so grid results are **byte-identical for every
+//! thread count** and stable under re-ordering; outputs are memoised
+//! process-wide keyed by exact parameter bit patterns
+//! ([`sweep::cache`]), so repeated invocations skip recomputation.
 
 pub mod cli;
 pub mod config;
@@ -26,5 +41,6 @@ pub mod figures;
 pub mod model;
 pub mod runtime;
 pub mod sim;
+pub mod sweep;
 pub mod util;
 pub mod workload;

@@ -22,7 +22,7 @@ use ckpt_period::model::params::{CheckpointParams, PowerParams, Scenario};
 use ckpt_period::model::ratios::compare;
 use ckpt_period::model::time::{daly, t_final, t_time_opt, young};
 use ckpt_period::runtime::{ArtifactDir, Runtime};
-use ckpt_period::sim::{monte_carlo, SimConfig};
+use ckpt_period::sweep::{CellOutput, GridSpec};
 use ckpt_period::util::table::{fnum, Table};
 
 const USAGE: &str = "ckpt-period <optimize|sweep|simulate|figures|train|info> [flags]
@@ -178,14 +178,19 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
     } else {
         &["period_min", "makespan_min", "energy_mW_min"]
     };
+    // One declarative grid: parallel on the persistent pool, memoised
+    // across repeated invocations in the same process.
+    let periods: Vec<f64> =
+        (0..n).map(|i| lo + (hi - lo) * i as f64 / (n - 1) as f64).collect();
+    let results = GridSpec::model_sweep(s, &periods, 1).evaluate();
+
     let mut t = Table::new(header);
-    for i in 0..n {
-        let period = lo + (hi - lo) * i as f64 / (n - 1) as f64;
-        let mut row = vec![
-            fnum(period, 3),
-            fnum(t_final(&s, period), 2),
-            fnum(e_final(&s, period), 2),
-        ];
+    for (&period, r) in periods.iter().zip(&results) {
+        let (tf, ef) = match r.output {
+            CellOutput::Model { t_final, e_final } => (t_final, e_final),
+            ref other => unreachable!("model sweep produced {other:?}"),
+        };
+        let mut row = vec![fnum(period, 3), fnum(tf, 2), fnum(ef, 2)];
         if breakdown {
             let w = ckpt_period::model::waste::waste_breakdown(&s, period);
             row.extend([
@@ -211,8 +216,7 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     let mut specs = SCENARIO_SPECS.to_vec();
     specs.push(ArgSpec::flag("period", "0", "period to simulate (0 = AlgoT)"));
     specs.push(ArgSpec::flag("replicates", "200", "Monte-Carlo replicates"));
-    specs.push(ArgSpec::flag("threads", "8", "worker threads"));
-    specs.push(ArgSpec::flag("seed", "1", "base seed"));
+    specs.push(ArgSpec::flag("seed", "1", "base seed (cell seeds derive from it)"));
     let args = Args::parse("simulate", "Monte-Carlo validation of the model", &specs, argv)
         .map_err(cli_err)?;
     let s = scenario_from(&args)?;
@@ -225,27 +229,32 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
         }
     };
     let reps = args.get_usize("replicates").map_err(cli_err)?;
-    let threads = args.get_usize("threads").map_err(cli_err)?;
     let seed = args.get_u64("seed").map_err(cli_err)?;
 
-    let mc = monte_carlo(&SimConfig::paper(s, period), reps, seed, threads);
+    // A single Sim cell on the grid engine: replicates fan out on the
+    // persistent pool, and re-running the same scenario in-process is a
+    // cache hit.
+    let mut spec = GridSpec::new(seed);
+    spec.push_sim(s, period, reps);
+    let results = spec.evaluate();
+    let mc = results[0].output.sim().expect("sim cell output");
     let (mk_lo, mk_hi) = mc.makespan_ci95();
     let (en_lo, en_hi) = mc.energy_ci95();
     let mut t = Table::new(&["quantity", "model", "simulated (95% CI)"]);
     t.row(&[
         "makespan_min".into(),
         fnum(t_final(&s, period), 1),
-        format!("{} [{}, {}]", fnum(mc.makespan.mean(), 1), fnum(mk_lo, 1), fnum(mk_hi, 1)),
+        format!("{} [{}, {}]", fnum(mc.makespan_mean, 1), fnum(mk_lo, 1), fnum(mk_hi, 1)),
     ]);
     t.row(&[
         "energy_mW_min".into(),
         fnum(e_final(&s, period), 1),
-        format!("{} [{}, {}]", fnum(mc.energy.mean(), 1), fnum(en_lo, 1), fnum(en_hi, 1)),
+        format!("{} [{}, {}]", fnum(mc.energy_mean, 1), fnum(en_lo, 1), fnum(en_hi, 1)),
     ]);
     t.row(&[
         "failures".into(),
         fnum(t_final(&s, period) / s.mu, 2),
-        fnum(mc.failures.mean(), 2),
+        fnum(mc.failures_mean, 2),
     ]);
     println!("period = {period:.2} min, {reps} replicates");
     println!("{}", t.render());
@@ -351,14 +360,25 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
 fn cmd_info(argv: &[String]) -> Result<(), String> {
     let specs = [ArgSpec::flag("artifacts", "artifacts", "artifacts directory")];
     let args = Args::parse("info", "artifact inventory", &specs, argv).map_err(cli_err)?;
-    let dir = ArtifactDir::open(args.get("artifacts")).map_err(|e| e.to_string())?;
-    println!("artifacts at {}", dir.root().display());
-    println!(
-        "  model: {} params, batch {} x seq {}, vocab {}, lr {}",
-        dir.n_params, dir.batch, dir.seq, dir.vocab, dir.lr
-    );
-    println!("  sweep grid: {} periods", dir.sweep_grid_n);
-    println!("  parameter manifest: {} tensors", dir.manifest.len());
+    match ArtifactDir::open(args.get("artifacts")) {
+        Ok(dir) => {
+            println!("artifacts at {}", dir.root().display());
+            println!(
+                "  model: {} params, batch {} x seq {}, vocab {}, lr {}",
+                dir.n_params, dir.batch, dir.seq, dir.vocab, dir.lr
+            );
+            println!("  sweep grid: {} periods", dir.sweep_grid_n);
+            println!("  parameter manifest: {} tensors", dir.manifest.len());
+        }
+        Err(e) => {
+            // Missing artifacts are not an error for `info`: the model /
+            // simulator / figures side of the binary is fully usable
+            // without them.
+            println!("artifacts: unavailable ({e})");
+            println!("  model: params unavailable — run `make artifacts`");
+            println!("  sweep grid: unavailable");
+        }
+    }
     // The reference scenario, for orientation.
     let cmp = compare(&fig1_scenario(300.0, 5.5)).map_err(|e| e.to_string())?;
     println!(

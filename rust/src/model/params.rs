@@ -256,13 +256,22 @@ impl Scenario {
 }
 
 /// Errors from parameter validation or out-of-domain evaluation.
-#[derive(Debug, Clone, thiserror::Error, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum ModelError {
-    #[error("invalid parameter: {0}")]
     Invalid(String),
-    #[error("out of model domain: {0}")]
     OutOfDomain(String),
 }
+
+impl std::fmt::Display for ModelError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ModelError::Invalid(m) => write!(f, "invalid parameter: {m}"),
+            ModelError::OutOfDomain(m) => write!(f, "out of model domain: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ModelError {}
 
 #[cfg(test)]
 mod tests {

@@ -7,15 +7,43 @@
 
 use std::path::Path;
 
+// Without the `pjrt` feature the vendored `xla` crate is absent; compile
+// against the std-only stub, which keeps every signature intact and
+// reports the backend as unavailable at artifact-load time.
+#[cfg(not(feature = "pjrt"))]
+use super::xla_stub as xla;
+
 /// Errors from the runtime layer.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("xla error: {0}")]
     Xla(String),
-    #[error("artifact error: {0}")]
     Artifact(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Xla(m) => write!(f, "xla error: {m}"),
+            RuntimeError::Artifact(m) => write!(f, "artifact error: {m}"),
+            RuntimeError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RuntimeError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for RuntimeError {
+    fn from(e: std::io::Error) -> Self {
+        RuntimeError::Io(e)
+    }
 }
 
 impl From<xla::Error> for RuntimeError {

@@ -9,10 +9,15 @@
 //! * [`sweep`] — typed facade over the `sweep_eval` artifact: evaluate
 //!   `(T_final, E_final)` grids through XLA (used by the three-layer
 //!   consistency test and the figure harness's `--via-xla` mode).
+//! * [`xla_stub`] (no `pjrt` feature) — std-only stand-in for the
+//!   vendored `xla` crate: literals work, execution reports the backend
+//!   as unavailable. Enable `pjrt` to link the real PJRT client.
 
 pub mod artifacts;
 pub mod client;
 pub mod sweep;
+#[cfg(not(feature = "pjrt"))]
+pub mod xla_stub;
 
 pub use artifacts::{ArtifactDir, ParamEntry};
 pub use client::{Executable, Runtime, RuntimeError};

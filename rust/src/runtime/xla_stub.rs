@@ -1,0 +1,228 @@
+//! Std-only stand-in for the vendored `xla` (PJRT) crate.
+//!
+//! The offline build image does not ship the XLA extension, so the crate
+//! compiles against this stub unless the `pjrt` feature is enabled. The
+//! stub keeps the *data* half of the API fully functional — [`Literal`]
+//! construction, reshaping and host readback, which the workload/
+//! coordinator unit tests exercise — while the *execution* half
+//! ([`HloModuleProto::from_text_file`] onwards) reports the backend as
+//! unavailable with an actionable message. Code paths that never execute
+//! an artifact (model, simulator, sweep engine, figures, CLI except
+//! `train`) behave identically with stub and real backend.
+
+use std::borrow::Borrow;
+
+/// Stub error: carries the message the real `xla::Error` would.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} requires the PJRT backend; rebuild with `--features pjrt` \
+         (and the vendored `xla` crate) to execute compiled artifacts"
+    ))
+}
+
+/// Typed storage for stub literals.
+#[derive(Debug, Clone, PartialEq)]
+#[doc(hidden)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Element types the stub can store (mirrors the subset of the real
+/// crate's `NativeType` this repo uses).
+pub trait NativeType: Copy + Sized {
+    #[doc(hidden)]
+    fn wrap(data: Vec<Self>) -> Data;
+    #[doc(hidden)]
+    fn slice(data: &Data) -> Option<&[Self]>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<Self>) -> Data {
+        Data::F32(data)
+    }
+    fn slice(data: &Data) -> Option<&[Self]> {
+        match data {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<Self>) -> Data {
+        Data::I32(data)
+    }
+    fn slice(data: &Data) -> Option<&[Self]> {
+        match data {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Host-resident typed array with a shape — functional in the stub.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(xs: &[T]) -> Literal {
+        Literal { dims: vec![xs.len() as i64], data: T::wrap(xs.to_vec()) }
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar<T: NativeType>(x: T) -> Literal {
+        Literal { dims: Vec::new(), data: T::wrap(vec![x]) }
+    }
+
+    /// Reshape without changing the element count.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape to {dims:?} ({n} elements) from {} elements",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(t) => t.len(),
+        }
+    }
+
+    /// Copy the elements out.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        T::slice(&self.data)
+            .map(<[T]>::to_vec)
+            .ok_or_else(|| Error("literal element type mismatch".into()))
+    }
+
+    /// First element (scalar readback).
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T, Error> {
+        T::slice(&self.data)
+            .and_then(|s| s.first().copied())
+            .ok_or_else(|| Error("empty or mistyped literal".into()))
+    }
+
+    /// Split a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        match self.data {
+            Data::Tuple(items) => Ok(items),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+}
+
+/// Parsed HLO module — never constructible in the stub.
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(unavailable("loading HLO text"))
+    }
+}
+
+/// Computation wrapper (only reachable with a real proto).
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Stub CPU client: constructible (so artifact-path validation and the
+/// pure-literal helpers stay testable) but unable to compile.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Ok(PjRtClient(()))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu (pjrt feature disabled)".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("compilation"))
+    }
+}
+
+/// Compiled executable — never constructible in the stub.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(
+        &self,
+        _inputs: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("execution"))
+    }
+}
+
+/// Device buffer — never constructible in the stub.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("device readback"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let lit = Literal::vec1(&[1i32, 2, 3, 4, 5, 6]);
+        assert_eq!(lit.element_count(), 6);
+        let r = lit.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+        assert!(lit.reshape(&[4, 4]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn scalar_first_element() {
+        let lit = Literal::scalar(2.5f32);
+        assert_eq!(lit.get_first_element::<f32>().unwrap(), 2.5);
+        assert_eq!(lit.element_count(), 1);
+    }
+
+    #[test]
+    fn execution_paths_report_unavailable() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.platform_name().contains("stub"));
+        let err = HloModuleProto::from_text_file("/tmp/whatever.hlo.txt").unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

@@ -19,7 +19,18 @@
 //!   paper's model), per-node exponential (superposition sanity check),
 //!   and per-node Weibull (robustness extension).
 //! * [`engine`] — the single-run event loop.
-//! * [`runner`] — seeded, multi-threaded Monte-Carlo replication.
+//! * [`runner`] — seeded Monte-Carlo replication on the persistent pool.
+//!
+//! # Seeding & determinism
+//!
+//! Replicate `i` of a [`monte_carlo`] call always simulates seed
+//! `base_seed + i` and estimates accumulate in index order, so results
+//! are byte-identical for every thread count. Grid-scale exploration
+//! should go through [`crate::sweep::GridSpec`], which derives each
+//! cell's `base_seed` by hashing the spec seed with the cell's parameter
+//! bits and memoises cell outputs process-wide; `monte_carlo` remains
+//! the single-scenario building block (and runs inline, same seeds, when
+//! invoked from a grid cell on a pool worker).
 
 pub mod engine;
 pub mod failure;

@@ -1,8 +1,17 @@
-//! Monte-Carlo replication over seeds, multi-threaded with std threads
-//! (no tokio/rayon in the offline vendor set — a scoped-thread fan-out is
-//! all this needs).
+//! Monte-Carlo replication over seeds, fanned out on the persistent
+//! work-stealing pool ([`crate::util::pool::ThreadPool`]).
+//!
+//! Replicate `i` always simulates seed `base_seed + i` and estimates are
+//! accumulated in index order, so the result is byte-identical for every
+//! `threads` value. Earlier revisions spawned + joined scoped threads on
+//! every call (~100 µs of churn that a per-call calibration hack tried to
+//! amortise); the pool made both the churn and the hack unnecessary.
+//! Inside a pool worker (e.g. when a [`crate::sweep::GridSpec`] cell runs
+//! a simulation) the fan-out degrades to an inline loop — same seeds,
+//! same results, no deadlock.
 
 use super::engine::{RunResult, SimConfig, Simulator};
+use crate::util::pool::ThreadPool;
 use crate::util::stats::{ConfidenceLevel, OnlineStats};
 
 /// Aggregated Monte-Carlo estimates.
@@ -26,9 +35,10 @@ impl MonteCarloResult {
     }
 }
 
-/// Run `replicates` independent sample paths of `cfg`, fanned out over
-/// `threads` OS threads (seeds `base_seed..base_seed+replicates` are
-/// partitioned round-robin so results are independent of thread count).
+/// Run `replicates` independent sample paths of `cfg`. Replicate `i`
+/// simulates seed `base_seed + i`; `threads > 1` fans the replicates out
+/// on the persistent pool. Results are identical for every `threads`
+/// value (the pool writes by index and aggregation is in index order).
 pub fn monte_carlo(
     cfg: &SimConfig,
     replicates: usize,
@@ -36,49 +46,12 @@ pub fn monte_carlo(
     threads: usize,
 ) -> MonteCarloResult {
     assert!(replicates > 0);
-    let mut threads = threads.clamp(1, replicates);
+    let threads = threads.clamp(1, replicates);
     let sim = Simulator::new(cfg.clone());
-    // §Perf: thread spawn + join costs ~100 µs; a replicate of a typical
-    // scenario costs ~2 µs. Calibrate on one run and only fan out when
-    // the parallel half actually amortises the fork (see EXPERIMENTS.md
-    // §Perf L3-1 for the before/after).
-    let mut first: Option<RunResult> = None;
-    if threads > 1 {
-        let t0 = std::time::Instant::now();
-        first = Some(sim.run(base_seed));
-        let est_total = t0.elapsed().as_secs_f64() * (replicates - 1) as f64;
-        if est_total < 1e-3 {
-            threads = 1;
-        }
-    }
-    let results: Vec<RunResult> = if threads == 1 {
-        let skip = usize::from(first.is_some());
-        let mut out: Vec<RunResult> = Vec::with_capacity(replicates);
-        out.extend(first);
-        out.extend((skip..replicates).map(|i| sim.run(base_seed + i as u64)));
-        out
+    let results: Vec<RunResult> = if threads == 1 || ThreadPool::in_worker() {
+        (0..replicates).map(|i| sim.run(base_seed + i as u64)).collect()
     } else {
-        let mut out: Vec<Option<RunResult>> = vec![None; replicates];
-        let chunks: Vec<Vec<usize>> = (0..threads)
-            .map(|t| (t..replicates).step_by(threads).collect())
-            .collect();
-        std::thread::scope(|scope| {
-            let mut handles = Vec::new();
-            for idxs in &chunks {
-                let sim = &sim;
-                handles.push(scope.spawn(move || {
-                    idxs.iter()
-                        .map(|&i| (i, sim.run(base_seed + i as u64)))
-                        .collect::<Vec<_>>()
-                }));
-            }
-            for h in handles {
-                for (i, r) in h.join().expect("sim thread panicked") {
-                    out[i] = Some(r);
-                }
-            }
-        });
-        out.into_iter().map(|r| r.unwrap()).collect()
+        ThreadPool::global().map(replicates, |i| sim.run(base_seed + i as u64))
     };
 
     let mut mc = MonteCarloResult {

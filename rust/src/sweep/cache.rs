@@ -1,0 +1,92 @@
+//! In-memory memo cache for grid cells.
+//!
+//! Figures, ablations and the CLI repeatedly evaluate overlapping
+//! (scenario × period × failure-process) cells — e.g. `headline::compute`
+//! re-derives two Fig. 1 comparisons, and every bench iteration re-walks
+//! the same surface. Cell evaluation is pure (seeded Monte Carlo
+//! included), so results are memoised process-wide, keyed by the **exact
+//! bit patterns** of every parameter that influences the output (scenario
+//! floats, job kind, period, replicate count, failure process, derived
+//! seed). Two cells collide only if they would compute byte-identical
+//! results, so a hit is always sound.
+//!
+//! The cache is bounded (`MAX_ENTRIES`, coarse FIFO eviction) and can be
+//! bypassed per-[`GridSpec`](super::GridSpec) or cleared/interrogated for
+//! tests and benches.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use super::grid::CellOutput;
+
+/// Exact-bits cache key: every f64 is stored as `to_bits`, discrete
+/// fields as tagged words (see `GridSpec::cell_key`).
+pub(crate) type CellKey = Vec<u64>;
+
+/// Coarse capacity bound; a full figure suite is ~10⁴ cells.
+const MAX_ENTRIES: usize = 1 << 18;
+
+struct CacheState {
+    map: HashMap<CellKey, CellOutput>,
+    /// Insertion order for FIFO eviction.
+    order: std::collections::VecDeque<CellKey>,
+}
+
+static CACHE: OnceLock<Mutex<CacheState>> = OnceLock::new();
+static HITS: AtomicU64 = AtomicU64::new(0);
+static MISSES: AtomicU64 = AtomicU64::new(0);
+
+fn cache() -> &'static Mutex<CacheState> {
+    CACHE.get_or_init(|| {
+        Mutex::new(CacheState { map: HashMap::new(), order: std::collections::VecDeque::new() })
+    })
+}
+
+pub(crate) fn get(key: &CellKey) -> Option<CellOutput> {
+    let hit = cache().lock().unwrap().map.get(key).cloned();
+    match &hit {
+        Some(_) => HITS.fetch_add(1, Ordering::Relaxed),
+        None => MISSES.fetch_add(1, Ordering::Relaxed),
+    };
+    hit
+}
+
+pub(crate) fn put(key: CellKey, value: CellOutput) {
+    let mut st = cache().lock().unwrap();
+    if st.map.len() >= MAX_ENTRIES {
+        // FIFO eviction of the oldest quarter: amortised, keeps the hot
+        // recent working set.
+        for _ in 0..MAX_ENTRIES / 4 {
+            if let Some(old) = st.order.pop_front() {
+                st.map.remove(&old);
+            }
+        }
+    }
+    if st.map.insert(key.clone(), value).is_none() {
+        st.order.push_back(key);
+    }
+}
+
+/// `(hits, misses)` since process start (or the last [`reset_stats`]).
+pub fn stats() -> (u64, u64) {
+    (HITS.load(Ordering::Relaxed), MISSES.load(Ordering::Relaxed))
+}
+
+/// Zero the hit/miss counters (benches bracket phases with this).
+pub fn reset_stats() {
+    HITS.store(0, Ordering::Relaxed);
+    MISSES.store(0, Ordering::Relaxed);
+}
+
+/// Number of memoised cells.
+pub fn len() -> usize {
+    cache().lock().unwrap().map.len()
+}
+
+/// Drop every memoised cell (tests; cold-start benchmarking).
+pub fn clear() {
+    let mut st = cache().lock().unwrap();
+    st.map.clear();
+    st.order.clear();
+}

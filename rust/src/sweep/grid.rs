@@ -1,0 +1,492 @@
+//! Declarative (scenario × period × failure-process) grids.
+//!
+//! A [`GridSpec`] is a flat list of [`Cell`]s; [`GridSpec::evaluate`]
+//! runs them on the persistent pool ([`crate::util::pool::ThreadPool`]),
+//! consults the memo cache ([`super::cache`]), and returns one
+//! [`CellResult`] per cell **in cell order** — so callers zip results
+//! with whatever axes they built the grid from.
+//!
+//! Three cell jobs cover every consumer in the crate:
+//!
+//! * [`CellJob::Model`] — closed-form `T_final`/`E_final` at a period
+//!   (the CLI `sweep` path).
+//! * [`CellJob::Compare`] — the AlgoT-vs-AlgoE [`Comparison`] every
+//!   figure plots; out-of-domain scenarios yield `None` (the Fig. 3
+//!   "clamped" tail).
+//! * [`CellJob::Sim`] — seeded Monte-Carlo estimation, optionally under a
+//!   non-paper [`FailureProcess`] (per-node Weibull platforms etc.).
+//!
+//! # Seeding
+//!
+//! Each simulated cell derives its seed by hashing the spec's `base_seed`
+//! with the cell's full parameter bit pattern (`cell_seed`). Replicate
+//! `i` inside the cell then uses `cell_seed + i`, exactly like
+//! [`monte_carlo`]. The derivation depends only on *what* the cell is —
+//! never on its position in the grid, the thread count, or the steal
+//! schedule — so results are byte-identical across thread counts and
+//! stable when a grid is re-arranged or filtered.
+
+use crate::model::params::Scenario;
+use crate::model::ratios::{compare, Comparison};
+use crate::model::{e_final, t_final};
+use crate::sim::runner::{monte_carlo, MonteCarloResult};
+use crate::sim::{FailureProcess, SimConfig};
+use crate::util::pool::ThreadPool;
+use crate::util::stats::ConfidenceLevel;
+
+use super::cache;
+use super::cache::CellKey;
+
+/// Bump when the evaluation semantics change (invalidates memo entries).
+const KEY_VERSION: u64 = 1;
+
+/// What to compute for one cell.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CellJob {
+    /// Closed-form `T_final`/`E_final` at `period`.
+    Model { period: f64 },
+    /// AlgoT-vs-AlgoE comparison (periods chosen by the policies).
+    Compare,
+    /// Monte-Carlo estimate at `period` over `replicates` sample paths.
+    Sim { period: f64, replicates: usize, failures_during_recovery: bool },
+}
+
+/// One grid cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cell {
+    pub scenario: Scenario,
+    /// `None` ⇒ the paper's aggregate-exponential process at the
+    /// scenario's `μ`. Only consulted by [`CellJob::Sim`].
+    pub failure: Option<FailureProcess>,
+    pub job: CellJob,
+}
+
+/// Compact, cacheable Monte-Carlo summary of one simulated cell.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimSummary {
+    pub replicates: usize,
+    pub makespan_mean: f64,
+    pub makespan_ci95_half: f64,
+    pub energy_mean: f64,
+    pub energy_ci95_half: f64,
+    pub failures_mean: f64,
+    pub checkpoints_mean: f64,
+    pub work_lost_mean: f64,
+}
+
+impl SimSummary {
+    pub fn from_mc(mc: &MonteCarloResult) -> Self {
+        SimSummary {
+            replicates: mc.replicates,
+            makespan_mean: mc.makespan.mean(),
+            makespan_ci95_half: mc.makespan.ci_half_width(ConfidenceLevel::P95),
+            energy_mean: mc.energy.mean(),
+            energy_ci95_half: mc.energy.ci_half_width(ConfidenceLevel::P95),
+            failures_mean: mc.failures.mean(),
+            checkpoints_mean: mc.checkpoints.mean(),
+            work_lost_mean: mc.work_lost.mean(),
+        }
+    }
+
+    /// `(lo, hi)` 95% confidence interval of the mean makespan.
+    pub fn makespan_ci95(&self) -> (f64, f64) {
+        (self.makespan_mean - self.makespan_ci95_half, self.makespan_mean + self.makespan_ci95_half)
+    }
+
+    /// `(lo, hi)` 95% confidence interval of the mean energy.
+    pub fn energy_ci95(&self) -> (f64, f64) {
+        (self.energy_mean - self.energy_ci95_half, self.energy_mean + self.energy_ci95_half)
+    }
+}
+
+/// The outcome of one cell.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CellOutput {
+    Model { t_final: f64, e_final: f64 },
+    /// `None` when the scenario left the model's domain (both strategies
+    /// collapse to `T = C`; figures report the cell as clamped).
+    Compare(Option<Comparison>),
+    Sim(SimSummary),
+}
+
+impl CellOutput {
+    /// The comparison, when this was a [`CellJob::Compare`] cell.
+    pub fn comparison(&self) -> Option<&Comparison> {
+        match self {
+            CellOutput::Compare(Some(c)) => Some(c),
+            _ => None,
+        }
+    }
+
+    /// The Monte-Carlo summary, when this was a [`CellJob::Sim`] cell.
+    pub fn sim(&self) -> Option<&SimSummary> {
+        match self {
+            CellOutput::Sim(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// One evaluated cell: the cell, the seed it derived, and its output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellResult {
+    pub cell: Cell,
+    /// Derived per-cell seed (0 for pure model/compare cells).
+    pub seed: u64,
+    pub output: CellOutput,
+}
+
+/// A declarative batch of cells.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GridSpec {
+    cells: Vec<Cell>,
+    /// Seed every simulated cell derives from.
+    pub base_seed: u64,
+    /// Consult/populate the process-wide memo cache (default on).
+    pub use_cache: bool,
+}
+
+impl Default for GridSpec {
+    fn default() -> Self {
+        GridSpec::new(1)
+    }
+}
+
+impl GridSpec {
+    pub fn new(base_seed: u64) -> Self {
+        GridSpec { cells: Vec::new(), base_seed, use_cache: true }
+    }
+
+    /// Disable the memo cache for this spec (benchmarks, soak tests).
+    pub fn without_cache(mut self) -> Self {
+        self.use_cache = false;
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    pub fn cells(&self) -> &[Cell] {
+        &self.cells
+    }
+
+    pub fn push(&mut self, cell: Cell) -> &mut Self {
+        self.cells.push(cell);
+        self
+    }
+
+    /// Append an AlgoT-vs-AlgoE comparison cell.
+    pub fn push_compare(&mut self, scenario: Scenario) -> &mut Self {
+        self.push(Cell { scenario, failure: None, job: CellJob::Compare })
+    }
+
+    /// Append a closed-form evaluation cell.
+    pub fn push_model(&mut self, scenario: Scenario, period: f64) -> &mut Self {
+        self.push(Cell { scenario, failure: None, job: CellJob::Model { period } })
+    }
+
+    /// Append a Monte-Carlo cell (paper failure process).
+    pub fn push_sim(&mut self, scenario: Scenario, period: f64, replicates: usize) -> &mut Self {
+        self.push(Cell {
+            scenario,
+            failure: None,
+            job: CellJob::Sim { period, replicates, failures_during_recovery: true },
+        })
+    }
+
+    /// Comparison grid over a scenario family (the figures' shape).
+    pub fn compare_all(scenarios: impl IntoIterator<Item = Scenario>, base_seed: u64) -> Self {
+        let mut spec = GridSpec::new(base_seed);
+        for s in scenarios {
+            spec.push_compare(s);
+        }
+        spec
+    }
+
+    /// Closed-form sweep of one scenario over a period grid (CLI `sweep`).
+    pub fn model_sweep(scenario: Scenario, periods: &[f64], base_seed: u64) -> Self {
+        let mut spec = GridSpec::new(base_seed);
+        for &t in periods {
+            spec.push_model(scenario, t);
+        }
+        spec
+    }
+
+    /// Exact-bits cache key for a cell (includes `base_seed` only where
+    /// it matters — simulated cells).
+    pub(crate) fn cell_key(&self, cell: &Cell) -> CellKey {
+        let mut k = Vec::with_capacity(20);
+        k.push(KEY_VERSION);
+        let s = &cell.scenario;
+        for v in [
+            s.ckpt.c,
+            s.ckpt.r,
+            s.ckpt.d,
+            s.ckpt.omega,
+            s.power.p_static,
+            s.power.p_cal,
+            s.power.p_io,
+            s.power.p_down,
+            s.mu,
+            s.t_base,
+        ] {
+            k.push(v.to_bits());
+        }
+        match &cell.failure {
+            None => k.push(0),
+            Some(FailureProcess::Exponential { mtbf }) => {
+                k.push(1);
+                k.push(mtbf.to_bits());
+            }
+            Some(FailureProcess::PerNodeExponential { n, mtbf_ind }) => {
+                k.push(2);
+                k.push(*n as u64);
+                k.push(mtbf_ind.to_bits());
+            }
+            Some(FailureProcess::PerNodeWeibull { n, shape, scale_ind }) => {
+                k.push(3);
+                k.push(*n as u64);
+                k.push(shape.to_bits());
+                k.push(scale_ind.to_bits());
+            }
+        }
+        match cell.job {
+            CellJob::Model { period } => {
+                k.push(10);
+                k.push(period.to_bits());
+            }
+            CellJob::Compare => k.push(11),
+            CellJob::Sim { period, replicates, failures_during_recovery } => {
+                k.push(12);
+                k.push(period.to_bits());
+                k.push(replicates as u64);
+                k.push(u64::from(failures_during_recovery));
+                k.push(self.base_seed);
+            }
+        }
+        k
+    }
+
+    /// The seed a [`CellJob::Sim`] cell derives (position-independent:
+    /// hashes `base_seed` with the cell's parameter bits).
+    pub fn cell_seed(&self, cell: &Cell) -> u64 {
+        match cell.job {
+            CellJob::Sim { .. } => derive_seed(&self.cell_key(cell)),
+            _ => 0,
+        }
+    }
+
+    /// Evaluate every cell on the persistent pool. Results are in cell
+    /// order and independent of the thread count.
+    pub fn evaluate(&self) -> Vec<CellResult> {
+        let outputs: Vec<CellOutput> = ThreadPool::global().map(self.cells.len(), |i| {
+            let cell = &self.cells[i];
+            let key = self.cell_key(cell);
+            if self.use_cache {
+                if let Some(hit) = cache::get(&key) {
+                    return hit;
+                }
+            }
+            let out = eval_cell(cell, derive_seed(&key));
+            if self.use_cache {
+                cache::put(key, out.clone());
+            }
+            out
+        });
+        self.cells
+            .iter()
+            .zip(outputs)
+            .map(|(cell, output)| CellResult {
+                cell: cell.clone(),
+                seed: self.cell_seed(cell),
+                output,
+            })
+            .collect()
+    }
+}
+
+fn eval_cell(cell: &Cell, seed: u64) -> CellOutput {
+    match cell.job {
+        CellJob::Model { period } => CellOutput::Model {
+            t_final: t_final(&cell.scenario, period),
+            e_final: e_final(&cell.scenario, period),
+        },
+        CellJob::Compare => CellOutput::Compare(compare(&cell.scenario).ok()),
+        CellJob::Sim { period, replicates, failures_during_recovery } => {
+            let cfg = SimConfig {
+                scenario: cell.scenario,
+                period,
+                failure: cell
+                    .failure
+                    .clone()
+                    .unwrap_or(FailureProcess::Exponential { mtbf: cell.scenario.mu }),
+                failures_during_recovery,
+            };
+            // `monte_carlo` degrades to an inline loop inside pool
+            // workers, so a grid of Sim cells parallelises over cells and
+            // a single Sim cell parallelises over replicates.
+            let mc = monte_carlo(&cfg, replicates, seed, replicates);
+            CellOutput::Sim(SimSummary::from_mc(&mc))
+        }
+    }
+}
+
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+pub(crate) fn derive_seed(key: &[u64]) -> u64 {
+    let mut h = 0x517CC1B727220A95u64;
+    for &w in key {
+        h = splitmix64(h ^ w);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::fig1_scenario;
+    use crate::model::{t_energy_opt, t_time_opt};
+    use crate::util::stats::rel_err;
+
+    fn scenario() -> Scenario {
+        fig1_scenario(300.0, 5.5)
+    }
+
+    #[test]
+    fn model_cells_match_direct_evaluation() {
+        let s = scenario();
+        let periods = [40.0, 80.0, 160.0];
+        let spec = GridSpec::model_sweep(s, &periods, 1).without_cache();
+        let results = spec.evaluate();
+        assert_eq!(results.len(), 3);
+        for (r, &t) in results.iter().zip(&periods) {
+            match r.output {
+                CellOutput::Model { t_final: tf, e_final: ef } => {
+                    assert_eq!(tf, t_final(&s, t));
+                    assert_eq!(ef, e_final(&s, t));
+                }
+                ref other => panic!("unexpected output {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn compare_cells_match_direct_compare() {
+        let s = scenario();
+        let spec = GridSpec::compare_all([s], 1).without_cache();
+        let results = spec.evaluate();
+        let cmp = results[0].output.comparison().expect("in domain");
+        let direct = compare(&s).unwrap();
+        assert_eq!(*cmp, direct);
+    }
+
+    #[test]
+    fn compare_out_of_domain_is_none_not_panic() {
+        // mu barely above the overheads: compare() errors => None.
+        let ckpt = crate::model::CheckpointParams::new(10.0, 10.0, 1.0, 0.5).unwrap();
+        let power = crate::model::PowerParams::from_rho(5.5, 1.0, 0.0).unwrap();
+        // b > 0 requires mu > 16; pick mu where construction succeeds but
+        // clamping fails (C >= 2*mu*b): mu = 17 => 2*mu*b = 2.0 < C = 10.
+        let s = Scenario::new(ckpt, power, 17.0, 1000.0).unwrap();
+        let spec = GridSpec::compare_all([s], 1).without_cache();
+        let out = &spec.evaluate()[0].output;
+        assert_eq!(out.comparison(), None);
+        assert!(matches!(out, CellOutput::Compare(None)));
+    }
+
+    #[test]
+    fn sim_cells_match_monte_carlo_with_derived_seed() {
+        let s = scenario();
+        let t = t_time_opt(&s).unwrap();
+        let mut spec = GridSpec::new(42);
+        spec.push_sim(s, t, 64);
+        let spec = spec.without_cache();
+        let seed = spec.cell_seed(&spec.cells()[0]);
+        let results = spec.evaluate();
+        let summary = results[0].output.sim().unwrap();
+        assert_eq!(results[0].seed, seed);
+
+        let mc = monte_carlo(&SimConfig::paper(s, t), 64, seed, 8);
+        assert_eq!(summary.makespan_mean, mc.makespan.mean());
+        assert_eq!(summary.energy_mean, mc.energy.mean());
+        assert_eq!(summary.replicates, 64);
+    }
+
+    #[test]
+    fn seeds_depend_on_cell_not_position() {
+        let s = scenario();
+        let t = t_time_opt(&s).unwrap();
+        let te = t_energy_opt(&s).unwrap();
+        let mut a = GridSpec::new(7);
+        a.push_sim(s, t, 32).push_sim(s, te, 32);
+        let mut b = GridSpec::new(7);
+        b.push_sim(s, te, 32).push_sim(s, t, 32);
+        // Same cells, swapped order: per-cell seeds are identical.
+        assert_eq!(a.cell_seed(&a.cells()[0]), b.cell_seed(&b.cells()[1]));
+        assert_eq!(a.cell_seed(&a.cells()[1]), b.cell_seed(&b.cells()[0]));
+        // Different base seed => different cell seeds.
+        let mut c = GridSpec::new(8);
+        c.push_sim(s, t, 32);
+        assert_ne!(a.cell_seed(&a.cells()[0]), c.cell_seed(&c.cells()[0]));
+    }
+
+    #[test]
+    fn cache_hits_return_identical_outputs() {
+        let s = fig1_scenario(120.0, 7.0);
+        let t = t_time_opt(&s).unwrap();
+        let mut spec = GridSpec::new(0xCACE);
+        spec.push_sim(s, t, 48);
+        spec.push_compare(s);
+
+        let first = spec.evaluate();
+        let (h_before, _) = cache::stats();
+        let second = spec.evaluate();
+        let (h_after, _) = cache::stats();
+        // Counters are process-global and other tests run concurrently,
+        // so assert only the delta our two cells must contribute.
+        assert!(h_after - h_before >= 2, "expected cache hits on re-evaluation");
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn weibull_failure_cells_run_and_stay_sane() {
+        let s = scenario();
+        let t = t_time_opt(&s).unwrap();
+        let n = 100usize;
+        let shape = 0.7;
+        let scale = 300.0 * n as f64 / crate::sim::failure::gamma(1.0 + 1.0 / shape);
+        let mut spec = GridSpec::new(3);
+        spec.push(Cell {
+            scenario: s,
+            failure: Some(FailureProcess::PerNodeWeibull { n, shape, scale_ind: scale }),
+            job: CellJob::Sim { period: t, replicates: 64, failures_during_recovery: true },
+        });
+        let out = spec.without_cache().evaluate();
+        let sim = out[0].output.sim().unwrap();
+        // Same long-run MTBF: the exponential model keeps the order of
+        // magnitude even under bursty per-node Weibull failures.
+        assert!(rel_err(sim.makespan_mean, t_final(&s, t)) < 0.2, "{}", sim.makespan_mean);
+    }
+
+    #[test]
+    fn mixed_grid_evaluates_every_job_kind() {
+        let s = scenario();
+        let t = t_time_opt(&s).unwrap();
+        let mut spec = GridSpec::new(5);
+        spec.push_model(s, t).push_compare(s).push_sim(s, t, 16);
+        let results = spec.without_cache().evaluate();
+        assert!(matches!(results[0].output, CellOutput::Model { .. }));
+        assert!(matches!(results[1].output, CellOutput::Compare(Some(_))));
+        assert!(matches!(results[2].output, CellOutput::Sim(_)));
+    }
+}

@@ -1,0 +1,41 @@
+//! Batched scenario-grid engine.
+//!
+//! Every consumer of the model/simulator — the figure harness
+//! ([`crate::figures`]), the ablations, and the CLI `sweep` / `simulate`
+//! / `figures` subcommands — needs the same thing: "evaluate this
+//! (scenario × period × failure-process) grid". This module turns that
+//! into one declarative call:
+//!
+//! ```
+//! use ckpt_period::config::presets::fig1_scenario;
+//! use ckpt_period::sweep::GridSpec;
+//!
+//! let scenarios = [30.0, 300.0]
+//!     .into_iter()
+//!     .flat_map(|mu| [5.5, 7.0].into_iter().map(move |rho| fig1_scenario(mu, rho)));
+//! let results = GridSpec::compare_all(scenarios, 1).evaluate();
+//! assert_eq!(results.len(), 4);
+//! assert!(results[0].output.comparison().unwrap().energy_ratio() >= 1.0);
+//! ```
+//!
+//! Three properties make it the crate's single grid path:
+//!
+//! * **Persistent parallelism** — cells run on the process-wide
+//!   work-stealing pool ([`crate::util::pool::ThreadPool`]); no thread
+//!   spawn/join per call (the seed's `monte_carlo` paid ~100 µs of churn
+//!   per invocation).
+//! * **Deterministic seeding** — each simulated cell hashes the spec's
+//!   `base_seed` with its own parameter bits ([`GridSpec::cell_seed`]),
+//!   so results are byte-identical for every thread count and stable
+//!   under grid re-ordering.
+//! * **Memoisation** — outputs are cached process-wide keyed by exact
+//!   parameter bit patterns ([`cache`]), so repeated figure/CLI/bench
+//!   invocations of overlapping grids skip recomputation.
+//!
+//! [`grid`] holds the `GridSpec`/`Cell`/`CellResult` API; [`cache`] the
+//! memo store and its counters.
+
+pub mod cache;
+pub mod grid;
+
+pub use grid::{Cell, CellJob, CellOutput, CellResult, GridSpec, SimSummary};

@@ -179,13 +179,22 @@ fn write_escaped(out: &mut String, s: &str) {
 }
 
 /// Parse error with byte offset.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum JsonError {
-    #[error("json parse error at byte {0}: {1}")]
     Parse(usize, String),
-    #[error("json schema error: {0}")]
     Schema(String),
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Parse(at, msg) => write!(f, "json parse error at byte {at}: {msg}"),
+            JsonError::Schema(msg) => write!(f, "json schema error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 /// Parse a JSON document (must consume all non-whitespace input).
 pub fn parse(input: &str) -> Result<Json, JsonError> {

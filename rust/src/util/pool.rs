@@ -1,0 +1,496 @@
+//! Persistent work-stealing thread pool (std-only).
+//!
+//! The seed paid a thread spawn + join (~100 µs) on **every**
+//! `monte_carlo` call, which capped grid throughput long before the
+//! simulator did. This pool spawns its workers once per process
+//! ([`ThreadPool::global`]) and then executes *batches* of indexed tasks
+//! with no per-call thread churn:
+//!
+//! * Each batch partitions indices `0..n` into contiguous per-worker
+//!   deques. Workers pop from the front of their own deque and, when
+//!   empty, **steal the back half** of a victim's deque — classic
+//!   work-stealing, so ragged cell costs (e.g. Monte-Carlo cells next to
+//!   closed-form cells) still load-balance.
+//! * The submitting thread participates in its own batch, so a
+//!   single-threaded caller never blocks behind idle workers.
+//! * Results are written by index ([`ThreadPool::map`]), so the output is
+//!   **byte-identical for every thread count** — determinism lives in the
+//!   task seeds, not the schedule.
+//! * Nested calls from inside a worker degrade to inline sequential
+//!   execution ([`ThreadPool::in_worker`]) instead of deadlocking; the
+//!   simulator's Monte-Carlo fan-out relies on this when it runs as a
+//!   grid cell.
+//!
+//! One batch runs at a time; concurrent submitters queue on a mutex.
+//! Worker panics are caught, the batch is drained, and the panic is
+//! re-raised on the submitting thread.
+
+use std::collections::VecDeque;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Type-erased `&'static dyn Fn(usize)` for the current batch. The
+/// lifetime is a lie the pool keeps honest: [`ThreadPool::run`] does not
+/// return until every task of the batch has finished, so the borrow the
+/// caller handed in outlives every use.
+#[derive(Clone, Copy)]
+struct RawTask(&'static (dyn Fn(usize) + Sync));
+
+#[derive(Clone)]
+struct BatchHandles {
+    queues: Arc<Vec<Mutex<VecDeque<usize>>>>,
+    task: RawTask,
+    remaining: Arc<AtomicUsize>,
+    panicked: Arc<AtomicBool>,
+}
+
+struct State {
+    /// Monotone batch counter: workers key their waits on it.
+    epoch: u64,
+    batch: Option<BatchHandles>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    work_ready: Condvar,
+    batch_done: Condvar,
+}
+
+/// The pool. Construct once ([`ThreadPool::global`]) and reuse.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    /// Serialises batches (one at a time).
+    batch_lock: Mutex<()>,
+}
+
+std::thread_local! {
+    static IN_POOL_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Poison-tolerant lock: a panic that unwound through a guard elsewhere
+/// must not wedge the pool (we propagate task panics explicitly).
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn wait<'a, T>(cv: &Condvar, g: std::sync::MutexGuard<'a, T>) -> std::sync::MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(|e| e.into_inner())
+}
+
+impl ThreadPool {
+    /// Pool with `threads` workers (the submitting thread always helps,
+    /// so `threads = 0` still makes progress, inline).
+    pub fn new(threads: usize) -> Self {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { epoch: 0, batch: None, shutdown: false }),
+            work_ready: Condvar::new(),
+            batch_done: Condvar::new(),
+        });
+        let mut workers = Vec::with_capacity(threads);
+        for w in 0..threads {
+            let shared = Arc::clone(&shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("ckpt-pool-{w}"))
+                .spawn(move || {
+                    IN_POOL_WORKER.with(|f| f.set(true));
+                    worker_loop(&shared, w);
+                })
+                .expect("spawn pool worker");
+            workers.push(handle);
+        }
+        ThreadPool { shared, workers, batch_lock: Mutex::new(()) }
+    }
+
+    /// The process-wide pool, created on first use with one worker per
+    /// available core (override with `CKPT_POOL_THREADS`).
+    pub fn global() -> &'static ThreadPool {
+        static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let n = std::env::var("CKPT_POOL_THREADS")
+                .ok()
+                .and_then(|s| s.parse::<usize>().ok())
+                .unwrap_or_else(|| {
+                    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+                });
+            // The submitter participates too, so n-1 workers saturate n
+            // cores — and CKPT_POOL_THREADS=1 means genuinely serial
+            // (zero workers: `run` takes the inline path).
+            ThreadPool::new(n.saturating_sub(1))
+        })
+    }
+
+    /// Worker count (excluding the submitting thread).
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// True on a pool worker thread. Nested parallel calls must run
+    /// inline (the pool executes one batch at a time).
+    pub fn in_worker() -> bool {
+        IN_POOL_WORKER.with(|f| f.get())
+    }
+
+    /// Run `f(i)` for every `i in 0..n` across the pool. Blocks until all
+    /// tasks finished. Inline when nested or trivially small.
+    pub fn run<F: Fn(usize) + Sync>(&self, n: usize, f: &F) {
+        if n == 0 {
+            return;
+        }
+        if n == 1 || self.workers.is_empty() || Self::in_worker() {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let batch_guard = lock(&self.batch_lock);
+
+        // Contiguous per-queue slices (workers + the submitting thread).
+        let n_queues = self.workers.len() + 1;
+        let mut queues: Vec<Mutex<VecDeque<usize>>> = Vec::with_capacity(n_queues);
+        let per = n / n_queues;
+        let extra = n % n_queues;
+        let mut next = 0usize;
+        for q in 0..n_queues {
+            let take = per + usize::from(q < extra);
+            queues.push(Mutex::new((next..next + take).collect()));
+            next += take;
+        }
+        debug_assert_eq!(next, n);
+
+        // SAFETY: `run` blocks below until `remaining == 0`, so the
+        // borrow of `f` outlives every task execution.
+        let task: &(dyn Fn(usize) + Sync) = f;
+        let task: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute::<&_, &'static _>(task) };
+        let handles = BatchHandles {
+            queues: Arc::new(queues),
+            task: RawTask(task),
+            remaining: Arc::new(AtomicUsize::new(n)),
+            panicked: Arc::new(AtomicBool::new(false)),
+        };
+
+        let epoch = {
+            let mut st = lock(&self.shared.state);
+            st.epoch += 1;
+            st.batch = Some(handles.clone());
+            let e = st.epoch;
+            drop(st);
+            self.shared.work_ready.notify_all();
+            e
+        };
+
+        // Participate with the last queue index. Mark this thread as a
+        // worker for the duration: a task that itself calls `run`/`map`
+        // (nested parallelism) must take the inline path rather than
+        // re-locking `batch_lock` on this same thread.
+        let was_worker = IN_POOL_WORKER.with(|f| f.replace(true));
+        work_on(&self.shared, &handles, self.workers.len(), epoch);
+        IN_POOL_WORKER.with(|f| f.set(was_worker));
+
+        // Wait for in-flight tasks on other workers.
+        let mut st = lock(&self.shared.state);
+        while st.epoch == epoch && st.batch.is_some() {
+            st = wait(&self.shared.batch_done, st);
+        }
+        drop(st);
+        drop(batch_guard);
+
+        if handles.panicked.load(Ordering::Acquire) {
+            panic!("a task submitted to the thread pool panicked");
+        }
+    }
+
+    /// Parallel map: `out[i] = f(i)`, order-stable and independent of the
+    /// thread count / steal schedule.
+    pub fn map<T: Send, F: Fn(usize) -> T + Sync>(&self, n: usize, f: F) -> Vec<T> {
+        let mut out: Vec<MaybeUninit<T>> = Vec::with_capacity(n);
+        out.resize_with(n, MaybeUninit::uninit);
+        let written: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
+
+        // If a task panics, `run` re-raises on this thread *after* the
+        // batch has fully drained (no writer is in flight), and `out`
+        // would otherwise drop as uninitialised memory, leaking every
+        // completed T. The guard drops exactly the slots whose write
+        // completed.
+        struct DropInitialised<'a, T> {
+            slots: *mut MaybeUninit<T>,
+            written: &'a [AtomicBool],
+            disarmed: bool,
+        }
+        impl<T> Drop for DropInitialised<'_, T> {
+            fn drop(&mut self) {
+                if self.disarmed {
+                    return;
+                }
+                for (i, flag) in self.written.iter().enumerate() {
+                    if flag.load(Ordering::Acquire) {
+                        // SAFETY: the flag is set (Release) only after the
+                        // slot's write completed, and no task is running.
+                        unsafe { (*self.slots.add(i)).assume_init_drop() };
+                    }
+                }
+            }
+        }
+        let mut guard =
+            DropInitialised { slots: out.as_mut_ptr(), written: &written, disarmed: false };
+
+        let slots = SendPtr(out.as_mut_ptr());
+        self.run(n, &|i| {
+            let v = f(i);
+            // SAFETY: each index is executed exactly once, and distinct
+            // indices write distinct slots.
+            unsafe { (*slots.get().add(i)).write(v) };
+            written[i].store(true, Ordering::Release);
+        });
+        guard.disarmed = true;
+
+        // SAFETY: every slot was initialised by the batch (run() panics
+        // — after draining — if any task panicked, so reaching here means
+        // all n writes happened).
+        let ptr = out.as_mut_ptr() as *mut T;
+        let (len, cap) = (out.len(), out.capacity());
+        std::mem::forget(out);
+        unsafe { Vec::from_raw_parts(ptr, len, cap) }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = lock(&self.shared.state);
+            st.shutdown = true;
+        }
+        self.shared.work_ready.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+impl<T> SendPtr<T> {
+    fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+fn worker_loop(shared: &Shared, me: usize) {
+    loop {
+        let (handles, epoch) = {
+            let mut st = lock(&shared.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(b) = &st.batch {
+                    break (b.clone(), st.epoch);
+                }
+                st = wait(&shared.work_ready, st);
+            }
+        };
+        work_on(shared, &handles, me, epoch);
+        // Queues drained; in-flight tasks may still run elsewhere. Sleep
+        // until this batch is fully retired or a new one arrives.
+        let mut st = lock(&shared.state);
+        while !st.shutdown && st.epoch == epoch && st.batch.is_some() {
+            st = wait(&shared.work_ready, st);
+        }
+    }
+}
+
+/// Execute tasks from queue `me`, stealing when empty, until the batch
+/// has no queued work left.
+fn work_on(shared: &Shared, handles: &BatchHandles, me: usize, epoch: u64) {
+    while let Some(i) = pop_task(&handles.queues, me) {
+        let task = handles.task;
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (task.0)(i)));
+        if res.is_err() {
+            handles.panicked.store(true, Ordering::Release);
+        }
+        if handles.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Last task of the batch: retire it and wake everyone.
+            let mut st = lock(&shared.state);
+            if st.epoch == epoch {
+                st.batch = None;
+            }
+            drop(st);
+            shared.batch_done.notify_all();
+            shared.work_ready.notify_all();
+        }
+    }
+}
+
+/// Pop from our own deque front; steal the back half of a victim when
+/// empty. Returns `None` when no queued work remains anywhere.
+fn pop_task(queues: &[Mutex<VecDeque<usize>>], me: usize) -> Option<usize> {
+    if let Some(i) = lock(&queues[me]).pop_front() {
+        return Some(i);
+    }
+    let n = queues.len();
+    for k in 1..n {
+        let victim = (me + k) % n;
+        let mut stolen = {
+            let mut q = lock(&queues[victim]);
+            let len = q.len();
+            if len == 0 {
+                continue;
+            }
+            q.split_off(len - (len + 1) / 2)
+        };
+        let first = stolen.pop_front();
+        if !stolen.is_empty() {
+            let mut mine = lock(&queues[me]);
+            mine.extend(stolen);
+        }
+        if first.is_some() {
+            return first;
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn map_produces_ordered_results() {
+        let pool = ThreadPool::new(4);
+        let out = pool.map(1000, |i| i * i);
+        assert_eq!(out.len(), 1000);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn map_runs_every_index_exactly_once() {
+        let pool = ThreadPool::new(3);
+        let hits: Vec<AtomicU64> = (0..500).map(|_| AtomicU64::new(0)).collect();
+        pool.run(500, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn results_independent_of_worker_count() {
+        let a = ThreadPool::new(1).map(257, |i| (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let b = ThreadPool::new(7).map(257, |i| (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn ragged_tasks_load_balance_via_stealing() {
+        // Front-loaded heavy tasks land in one queue; stealing must keep
+        // the batch finishing (and correct) regardless.
+        let pool = ThreadPool::new(4);
+        let out = pool.map(64, |i| {
+            if i < 8 {
+                // Busy work.
+                let mut x = 1u64;
+                for k in 0..50_000 {
+                    x = x.wrapping_mul(6364136223846793005).wrapping_add(k);
+                }
+                std::hint::black_box(x);
+            }
+            i
+        });
+        assert_eq!(out, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nested_map_degrades_to_inline() {
+        let pool = ThreadPool::global();
+        let out = pool.map(16, |i| {
+            // Nested call from a worker (or the submitter) must not
+            // deadlock; it runs inline.
+            let inner = ThreadPool::global().map(8, |j| i * 100 + j);
+            inner.iter().sum::<usize>()
+        });
+        assert_eq!(out[3], (0..8).map(|j| 300 + j).sum::<usize>());
+    }
+
+    #[test]
+    fn pool_is_reusable_across_batches() {
+        let pool = ThreadPool::new(2);
+        for round in 0..50 {
+            let out = pool.map(40, |i| i + round);
+            assert_eq!(out[39], 39 + round);
+        }
+    }
+
+    #[test]
+    fn task_panic_propagates_to_submitter() {
+        let pool = ThreadPool::new(2);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(32, &|i| {
+                if i == 17 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err());
+        // And the pool still works afterwards.
+        assert_eq!(pool.map(10, |i| i).len(), 10);
+    }
+
+    #[test]
+    fn map_panic_drops_completed_results() {
+        static LIVE: AtomicU64 = AtomicU64::new(0);
+        struct Counted;
+        impl Counted {
+            fn new() -> Self {
+                LIVE.fetch_add(1, Ordering::Relaxed);
+                Counted
+            }
+        }
+        impl Drop for Counted {
+            fn drop(&mut self) {
+                LIVE.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+        let pool = ThreadPool::new(2);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.map(64, |i| {
+                if i == 40 {
+                    panic!("boom");
+                }
+                Counted::new()
+            })
+        }));
+        assert!(res.is_err());
+        assert_eq!(LIVE.load(Ordering::Relaxed), 0, "completed results leaked");
+    }
+
+    #[test]
+    fn zero_and_one_sized_batches() {
+        let pool = ThreadPool::new(2);
+        assert!(pool.map(0, |i| i).is_empty());
+        assert_eq!(pool.map(1, |i| i + 41), vec![41]);
+    }
+
+    #[test]
+    fn concurrent_submitters_serialise_safely() {
+        let pool = ThreadPool::global();
+        std::thread::scope(|s| {
+            let mut joins = Vec::new();
+            for t in 0..4 {
+                joins.push(s.spawn(move || {
+                    let out = pool.map(200, move |i| i as u64 + t);
+                    out.iter().sum::<u64>()
+                }));
+            }
+            for (t, j) in joins.into_iter().enumerate() {
+                let expect: u64 = (0..200u64).map(|i| i + t as u64).sum();
+                assert_eq!(j.join().unwrap(), expect);
+            }
+        });
+    }
+}

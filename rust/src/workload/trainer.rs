@@ -2,6 +2,9 @@
 //! `train_step` artifact, one PJRT call per step.
 
 use super::data::DataGen;
+#[cfg(not(feature = "pjrt"))]
+use crate::runtime::xla_stub as xla;
+
 use crate::runtime::artifacts::ArtifactDir;
 use crate::runtime::client::{
     literal_f32, literal_i32_2d, literal_scalar_f32, to_scalar_f32, to_vec_f32, Executable,

@@ -1,0 +1,119 @@
+//! Golden-value regression tests for the figure pipeline.
+//!
+//! The fixtures below are the headline rows of Fig. 1/2/3, computed from
+//! the paper's closed forms (independently mirrored and cross-checked
+//! outside this crate). Tolerances are 1e-9 **relative** — loose enough
+//! for last-ulp evaluation-order drift, tight enough that any real
+//! change to the model, the optimal-period solvers, or the grid-engine
+//! rewiring fails loudly here.
+
+use ckpt_period::figures::{fig1, fig2, fig3, headline};
+
+const REL_TOL: f64 = 1e-9;
+
+fn assert_close(what: &str, got: f64, want: f64) {
+    let denom = want.abs().max(1e-300);
+    assert!(
+        ((got - want) / denom).abs() < REL_TOL,
+        "{what}: got {got:.15e}, golden {want:.15e}"
+    );
+}
+
+#[test]
+fn fig1_golden_rows_at_paper_arrows() {
+    // One series call covers all four μ curves at the two arrow ρ's.
+    let pts = fig1::series(&fig1::RHO_ARROWS);
+    let at = |mu: f64, rho: f64| {
+        *pts.iter().find(|p| p.mu == mu && p.rho == rho).expect("point exists")
+    };
+
+    // (μ=300, ρ=5.5): the paper's reference point.
+    let p = at(300.0, 5.5);
+    assert_close("t_time(300,5.5)", p.t_time, 53.291650377896914);
+    assert_close("t_energy(300,5.5)", p.t_energy, 128.06733820931626);
+    assert_close("time_ratio(300,5.5)", p.time_ratio, 1.1032741952337373);
+    assert_close("energy_ratio(300,5.5)", p.energy_ratio, 1.2249508155528048);
+
+    // (μ=300, ρ=7): the second arrow.
+    let p = at(300.0, 7.0);
+    assert_close("t_time(300,7)", p.t_time, 53.291650377896914);
+    assert_close("t_energy(300,7)", p.t_energy, 138.3595040792064);
+    assert_close("time_ratio(300,7)", p.time_ratio, 1.12629954034473);
+    assert_close("energy_ratio(300,7)", p.energy_ratio, 1.2911371925698878);
+
+    // (μ=120, ρ=5.5): the mid-MTBF curve.
+    let p = at(120.0, 5.5);
+    assert_close("t_time(120,5.5)", p.t_time, 32.2490309931942);
+    assert_close("t_energy(120,5.5)", p.t_energy, 64.35029533730273);
+    assert_close("time_ratio(120,5.5)", p.time_ratio, 1.1208694800730306);
+    assert_close("energy_ratio(120,5.5)", p.energy_ratio, 1.2151768198887833);
+}
+
+#[test]
+fn fig1_golden_unity_corner() {
+    // (μ=30, ρ=1): both strategies nearly coincide — the ratios' floor.
+    let pts = fig1::series(&[1.0]);
+    let p = *pts.iter().find(|p| p.mu == 30.0).unwrap();
+    assert_close("t_time(30,1)", p.t_time, 11.832159566199232);
+    assert_close("t_energy(30,1)", p.t_energy, 12.400980358030257);
+    assert_close("time_ratio(30,1)", p.time_ratio, 1.0028026209790593);
+    assert_close("energy_ratio(30,1)", p.energy_ratio, 1.0029291452638538);
+}
+
+#[test]
+fn fig2_golden_corner_cell() {
+    // The ρ=20 edge of the surface at μ=300: the largest gain plotted.
+    let cells = fig2::grid(&[300.0], &[20.0]);
+    assert_eq!(cells.len(), 1);
+    assert_close("fig2 time_ratio(300,20)", cells[0].time_ratio, 1.239118295415918);
+    assert_close("fig2 energy_ratio(300,20)", cells[0].energy_ratio, 1.6550201311848949);
+    assert_close(
+        "fig2 max gain pct",
+        fig2::max_energy_gain_pct(&cells),
+        39.57777424229516,
+    );
+}
+
+#[test]
+fn fig3_golden_points() {
+    // N = 10⁶ (μ = 120) on the ρ = 5.5 panel.
+    let pts = fig3::series(5.5, &[1e6]);
+    assert_eq!(pts.len(), 1);
+    let p = pts[0];
+    assert!(!p.clamped);
+    assert_close("fig3 mu(1e6)", p.mu, 120.0);
+    assert_close("fig3 time_ratio(1e6,5.5)", p.time_ratio, 1.062437391812873);
+    assert_close("fig3 energy_ratio(1e6,5.5)", p.energy_ratio, 1.1650187374996614);
+
+    // N = 10⁷ (μ = 12) on the ρ = 7 panel.
+    let pts = fig3::series(7.0, &[1e7]);
+    let p = pts[0];
+    assert!(!p.clamped);
+    assert_close("fig3 time_ratio(1e7,7)", p.time_ratio, 1.143544531726686);
+    assert_close("fig3 energy_ratio(1e7,7)", p.energy_ratio, 1.263902759237994);
+}
+
+#[test]
+fn headline_golden_numbers() {
+    let h = headline::compute();
+    assert_close(
+        "energy gain (300, 5.5) %",
+        h.energy_gain_mu300_rho55_pct,
+        18.3640692096921,
+    );
+    assert_close(
+        "time overhead (300, 5.5) %",
+        h.time_overhead_mu300_rho55_pct,
+        10.327419523373727,
+    );
+    assert_close(
+        "energy gain (300, 7) %",
+        h.energy_gain_mu300_rho7_pct,
+        22.548896759019588,
+    );
+    assert_close(
+        "time overhead (300, 7) %",
+        h.time_overhead_mu300_rho7_pct,
+        12.629954034473002,
+    );
+}

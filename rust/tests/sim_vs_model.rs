@@ -2,13 +2,18 @@
 //! over the paper's scenario families — the validation the paper itself
 //! could not run.
 
-use ckpt_period::config::presets::{fig1_scenario, fig3_scenario};
+use ckpt_period::config::presets::{
+    fig1_scenario, fig3_scenario, io_contention_scenario, jaguar_platform, two_level_scenario,
+    weibull_platform_scenario,
+};
 use ckpt_period::model::energy::e_final;
+use ckpt_period::model::params::Scenario;
 use ckpt_period::model::ratios::compare;
 use ckpt_period::model::time::t_final;
 use ckpt_period::model::{t_energy_opt, t_time_opt};
 use ckpt_period::sim::{monte_carlo, FailureProcess, SimConfig};
-use ckpt_period::util::stats::rel_err;
+use ckpt_period::sweep::GridSpec;
+use ckpt_period::util::stats::{ConfidenceLevel, rel_err};
 
 const REPS: usize = 300;
 const THREADS: usize = 8;
@@ -173,4 +178,127 @@ fn fig3_scenarios_validate_where_in_domain() {
         // Smaller mu => bigger first-order error; stay within 10%.
         assert!(err < 0.10, "N={n_nodes}: err {err}");
     }
+}
+
+/// CI-based agreement check for one scenario at AlgoT's period: the
+/// analytical `T_final`/`E_final` must fall within the Monte-Carlo 95%
+/// confidence band, widened by the first-order model's own truncation
+/// error (which scales like `(T/μ)²` — the neglected
+/// multi-failure-per-period terms).
+fn assert_within_ci(tag: &str, s: &Scenario, seed: u64) {
+    let period = t_time_opt(s).unwrap();
+    let mut cfg = SimConfig::paper(*s, period);
+    // The first-order model assumes failure-free recovery; match it.
+    cfg.failures_during_recovery = false;
+    let mc = monte_carlo(&cfg, REPS, seed, THREADS);
+    let tol = 0.02 + 0.5 * (period / s.mu).powi(2);
+    for (what, model, stats) in [
+        ("makespan", t_final(s, period), &mc.makespan),
+        ("energy", e_final(s, period), &mc.energy),
+    ] {
+        let half = stats.ci_half_width(ConfidenceLevel::P95);
+        let slack = 3.0 * half + tol * model;
+        assert!(
+            (model - stats.mean()).abs() <= slack,
+            "{tag}: {what} model {model} vs sim {} ± {half} (slack {slack})",
+            stats.mean()
+        );
+    }
+}
+
+#[test]
+fn all_preset_families_within_ci_of_model() {
+    // Satellite coverage: every scenario family `config::presets` can
+    // produce is validated sim-vs-model, seeded and deterministic.
+    let mut seed = 1000;
+    let mut check = |tag: String, s: Scenario| {
+        seed += 1;
+        assert_within_ci(&tag, &s, seed);
+    };
+    for mu in [120.0, 300.0] {
+        for rho in [2.0, 5.5, 7.0] {
+            check(format!("fig1 mu={mu} rho={rho}"), fig1_scenario(mu, rho));
+        }
+    }
+    for n_nodes in [1e5, 1e6] {
+        check(
+            format!("fig3 N={n_nodes}"),
+            fig3_scenario(n_nodes, 5.5).expect("in domain"),
+        );
+    }
+    // Jaguar-derived platform MTBF on the Fig. 1 family.
+    check("jaguar".into(), fig1_scenario(jaguar_platform(219_150.0).mu(), 5.5));
+    for contention in [0.5, 1.0] {
+        check(
+            format!("io-contention x={contention}"),
+            io_contention_scenario(300.0, 5.5, contention).expect("in domain"),
+        );
+    }
+    check(
+        "two-level 9f/1s".into(),
+        two_level_scenario(300.0, 5.5, 1.0, 10.0, 10).expect("in domain"),
+    );
+    check(
+        "two-level 4f/1s".into(),
+        two_level_scenario(300.0, 7.0, 2.0, 10.0, 5).expect("in domain"),
+    );
+}
+
+#[test]
+fn weibull_preset_platform_mtbf_is_calibrated() {
+    // The Weibull preset promises the same long-run platform MTBF as the
+    // exponential preset; under shape = 1 it IS exponential in law, so
+    // the model must agree within CI-level slack.
+    let (s, process) = weibull_platform_scenario(1e6, 5.5, 1.0).expect("in domain");
+    let period = t_time_opt(&s).unwrap();
+    let mut cfg = SimConfig::paper(s, period);
+    cfg.failure = process;
+    cfg.failures_during_recovery = false;
+    let mc = monte_carlo(&cfg, REPS, 77, THREADS);
+    let err = rel_err(mc.makespan.mean(), t_final(&s, period));
+    assert!(err < 0.05, "shape=1 Weibull err {err}");
+
+    // Bursty shape keeps the right order of magnitude (robustness band).
+    let (s, process) = weibull_platform_scenario(1e6, 5.5, 0.7).expect("in domain");
+    let mut cfg = SimConfig::paper(s, period);
+    cfg.failure = process;
+    let mc = monte_carlo(&cfg, REPS, 78, THREADS);
+    let err = rel_err(mc.makespan.mean(), t_final(&s, period));
+    assert!(err < 0.20, "shape=0.7 Weibull err {err}");
+}
+
+#[test]
+fn monte_carlo_and_grid_engine_identical_across_thread_counts() {
+    // Satellite determinism: same base seed => bit-identical estimates
+    // for threads ∈ {1, 2, 8}, and the grid engine returns exactly the
+    // serial reference for its derived cell seed.
+    let s = fig1_scenario(300.0, 5.5);
+    let t = t_time_opt(&s).unwrap();
+    let cfg = SimConfig::paper(s, t);
+    let reference = monte_carlo(&cfg, 96, 1234, 1);
+    for threads in [2usize, 8] {
+        let mc = monte_carlo(&cfg, 96, 1234, threads);
+        for (a, b) in [
+            (reference.makespan.mean(), mc.makespan.mean()),
+            (reference.energy.mean(), mc.energy.mean()),
+            (reference.failures.mean(), mc.failures.mean()),
+            (reference.work_lost.mean(), mc.work_lost.mean()),
+        ] {
+            assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+        }
+    }
+
+    let mut spec = GridSpec::new(1234);
+    spec.push_sim(s, t, 96);
+    let spec = spec.without_cache();
+    let cell_seed = spec.cell_seed(&spec.cells()[0]);
+    let engine = spec.evaluate();
+    let engine_sim = engine[0].output.sim().expect("sim output");
+    // Engine (pool-scheduled) == serial monte_carlo at the derived seed.
+    let serial = monte_carlo(&cfg, 96, cell_seed, 1);
+    assert_eq!(engine_sim.makespan_mean.to_bits(), serial.makespan.mean().to_bits());
+    assert_eq!(engine_sim.energy_mean.to_bits(), serial.energy.mean().to_bits());
+    // And evaluating the same spec twice is bit-stable.
+    let again = spec.evaluate();
+    assert_eq!(engine, again);
 }
