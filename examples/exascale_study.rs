@@ -87,6 +87,22 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         h.fig3_peak_energy_gain_pct, h.fig3_peak_at_nodes, h.fig3_time_overhead_at_peak_pct
     );
 
+    println!("=== Pareto frontier: the trade-off presets' knees ===");
+    let frontiers = figures::frontier::series(48);
+    println!("{}", figures::frontier::knee_table(&frontiers).render());
+    for (label, gain, overhead) in figures::frontier::knee_headlines(&frontiers) {
+        println!(
+            "  {label}: knee buys {gain:.1}% energy for {overhead:.1}% more time"
+        );
+    }
+    figures::persist(&figures::frontier::table(&frontiers), &out_dir, "frontier")?;
+    figures::persist(
+        &figures::frontier::knee_table(&frontiers),
+        &out_dir,
+        "frontier_knees",
+    )?;
+    println!();
+
     println!("=== Ablation: omega sweep (blocking -> fully overlapped) ===");
     let omega_rows = ablations::omega_sweep(11);
     println!("{}", ablations::omega_table(&omega_rows).render());

@@ -8,6 +8,9 @@ pub enum CliError {
     UnknownFlag(String, String),
     MissingValue(String),
     InvalidValue(String, String, String),
+    /// A value flag appeared more than once. Silently keeping the last
+    /// occurrence hides typos in long invocations, so it is an error.
+    DuplicateFlag(String),
     UnexpectedPositional(String),
     Help(String),
 }
@@ -19,6 +22,9 @@ impl std::fmt::Display for CliError {
             CliError::MissingValue(flag) => write!(f, "flag `{flag}` requires a value"),
             CliError::InvalidValue(flag, value, why) => {
                 write!(f, "invalid value `{value}` for flag `{flag}`: {why}")
+            }
+            CliError::DuplicateFlag(flag) => {
+                write!(f, "flag `--{flag}` given more than once")
             }
             CliError::UnexpectedPositional(arg) => {
                 write!(f, "unexpected positional argument `{arg}`")
@@ -77,6 +83,7 @@ impl Args {
             }
         }
         let usage = render_usage(command, about, specs);
+        let mut seen = std::collections::BTreeSet::new();
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];
@@ -99,6 +106,11 @@ impl Args {
                     }
                     switches.insert(name.to_string(), true);
                 } else if values.contains_key(name) {
+                    // Repeated switches are idempotent, but a repeated
+                    // value flag would silently drop the earlier value.
+                    if !seen.insert(name.to_string()) {
+                        return Err(CliError::DuplicateFlag(name.into()));
+                    }
                     let v = match inline {
                         Some(v) => v,
                         None => {
@@ -244,5 +256,27 @@ mod tests {
     fn switch_with_value_rejected() {
         let e = Args::parse("t", "test", SPECS, &argv(&["--verbose=yes"])).unwrap_err();
         assert!(matches!(e, CliError::InvalidValue(..)));
+    }
+
+    #[test]
+    fn duplicate_value_flag_rejected() {
+        let e = Args::parse("t", "test", SPECS, &argv(&["--mu", "1", "--mu", "2"]))
+            .unwrap_err();
+        assert_eq!(e, CliError::DuplicateFlag("mu".into()));
+        assert!(e.to_string().contains("--mu"), "{e}");
+        // The =-form and the space-form collide too.
+        let e = Args::parse("t", "test", SPECS, &argv(&["--mu=1", "--mu", "2"]))
+            .unwrap_err();
+        assert_eq!(e, CliError::DuplicateFlag("mu".into()));
+        // Distinct value flags are of course fine.
+        let a =
+            Args::parse("t", "test", SPECS, &argv(&["--mu", "1", "--name", "x"])).unwrap();
+        assert_eq!(a.get_f64("mu").unwrap(), 1.0);
+    }
+
+    #[test]
+    fn repeated_switch_stays_idempotent() {
+        let a = Args::parse("t", "test", SPECS, &argv(&["--verbose", "--verbose"])).unwrap();
+        assert!(a.switch("verbose"));
     }
 }

@@ -125,6 +125,84 @@ pub fn two_level_scenario(
     Scenario::new(ckpt, power, mu_min, DEFAULT_T_BASE_MIN).ok()
 }
 
+/// Explicit `(α, β, γ)` power-ratio variant of the Fig. 1 checkpoint
+/// parameters (`C = R = 10`, `D = 1`, `ω = 1/2`, `P_Static = 1`). The
+/// trade-off families sweep this over each ratio axis; `α = 1`,
+/// `β = ρ(1+α) − 1`, `γ = 0` recovers [`fig1_scenario`].
+pub fn power_ratio_scenario(mu_min: f64, alpha: f64, beta: f64, gamma: f64) -> Option<Scenario> {
+    let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, 0.5).ok()?;
+    let power = PowerParams::from_ratios(alpha, beta, gamma).ok()?;
+    Scenario::new(ckpt, power, mu_min, DEFAULT_T_BASE_MIN).ok()
+}
+
+/// Exascale I/O-heavy variant of the Fig. 3 family: checkpoint and
+/// recovery stretched by `io_factor ≥ 1` and `β` inflated by the same
+/// factor (a saturated parallel file system is busy longer *and* draws
+/// more), on the `μ(N) = 120·10⁶/N` platform. `io_factor = 1` is
+/// exactly [`fig3_scenario`]. `None` outside the model's domain or for
+/// `io_factor < 1` (like every scenario family here, out-of-range
+/// corners are skippable, not fatal).
+pub fn exascale_io_heavy_scenario(n_nodes: f64, rho: f64, io_factor: f64) -> Option<Scenario> {
+    if io_factor < 1.0 {
+        return None;
+    }
+    let mu = FIG3_MU_AT_1E6_MIN * 1e6 / n_nodes;
+    let ckpt = CheckpointParams::new(io_factor, io_factor, 0.1, 0.5).ok()?;
+    let base = PowerParams::from_rho(rho, 1.0, 0.0).ok()?;
+    let power =
+        PowerParams::new(base.p_static, base.p_cal, base.p_io * io_factor, base.p_down).ok()?;
+    Scenario::new(ckpt, power, mu, DEFAULT_T_BASE_MIN).ok()
+}
+
+/// Cartesian power-ratio sweep over `(α, β, γ)` at fixed `μ`, for
+/// frontier family grids. Out-of-domain corners are skipped.
+pub fn power_ratio_sweep(
+    mu_min: f64,
+    alphas: &[f64],
+    betas: &[f64],
+    gammas: &[f64],
+) -> Vec<(String, Scenario)> {
+    let mut out = Vec::with_capacity(alphas.len() * betas.len() * gammas.len());
+    for &alpha in alphas {
+        for &beta in betas {
+            for &gamma in gammas {
+                if let Some(s) = power_ratio_scenario(mu_min, alpha, beta, gamma) {
+                    out.push((format!("alpha{alpha}-beta{beta}-gamma{gamma}"), s));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The named trade-off scenario families the Pareto subsystem ships:
+/// the paper's two arrow points, one heavy corner per power-ratio axis,
+/// and an Exascale I/O-heavy platform. Every preset is inside the
+/// model's domain and Monte-Carlo-validated by
+/// `rust/tests/pareto_frontier.rs`.
+pub fn tradeoff_presets() -> Vec<(&'static str, Scenario)> {
+    vec![
+        ("fig1-rho5.5", fig1_scenario(300.0, 5.5)),
+        ("fig1-rho7", fig1_scenario(300.0, 7.0)),
+        (
+            "alpha-heavy",
+            power_ratio_scenario(300.0, 3.0, 10.0, 0.0).expect("in domain"),
+        ),
+        (
+            "beta-heavy",
+            power_ratio_scenario(300.0, 0.5, 15.0, 0.0).expect("in domain"),
+        ),
+        (
+            "gamma-heavy",
+            power_ratio_scenario(300.0, 1.0, 10.0, 2.0).expect("in domain"),
+        ),
+        (
+            "exascale-io-heavy",
+            exascale_io_heavy_scenario(1e6, 5.5, 2.0).expect("in domain"),
+        ),
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,5 +289,58 @@ mod tests {
         let s = two_level_scenario(300.0, 5.5, 1.0, 10.0, 1).unwrap();
         assert_eq!(s.ckpt.c, 10.0);
         assert_eq!(s.ckpt.r, 10.0);
+    }
+
+    #[test]
+    fn power_ratio_scenario_recovers_fig1() {
+        // alpha = 1, beta = rho(1+alpha) - 1, gamma = 0 == fig1 at rho.
+        let rho = 5.5;
+        let beta = rho * 2.0 - 1.0;
+        let a = power_ratio_scenario(300.0, 1.0, beta, 0.0).unwrap();
+        let b = fig1_scenario(300.0, rho);
+        assert_eq!(a, b);
+        // Negative ratios are rejected, not panicked on.
+        assert!(power_ratio_scenario(300.0, 1.0, -1.0, 0.0).is_none());
+    }
+
+    #[test]
+    fn exascale_io_heavy_stretches_cost_and_power() {
+        let base = fig3_scenario(1e6, 5.5).unwrap();
+        let unit = exascale_io_heavy_scenario(1e6, 5.5, 1.0).unwrap();
+        assert_eq!(unit, base);
+        let heavy = exascale_io_heavy_scenario(1e6, 5.5, 2.0).unwrap();
+        assert_eq!(heavy.ckpt.c, 2.0);
+        assert_eq!(heavy.ckpt.r, 2.0);
+        assert!((heavy.power.p_io - base.power.p_io * 2.0).abs() < 1e-12);
+        assert_eq!(heavy.mu, base.mu);
+        // Far enough into the breakdown regime the domain closes.
+        assert!(exascale_io_heavy_scenario(1e8, 5.5, 2.0).is_none());
+        // Out-of-range io_factor is a skippable corner, not a panic.
+        assert!(exascale_io_heavy_scenario(1e6, 5.5, 0.5).is_none());
+    }
+
+    #[test]
+    fn power_ratio_sweep_skips_invalid_corners() {
+        let fam = power_ratio_sweep(300.0, &[0.5, 2.0], &[1.0, 10.0], &[0.0, 1.0]);
+        assert_eq!(fam.len(), 8);
+        assert!(fam.iter().all(|(label, _)| label.starts_with("alpha")));
+        // A mu below the overheads empties the family instead of panicking.
+        assert!(power_ratio_sweep(10.0, &[1.0], &[10.0], &[0.0]).is_empty());
+    }
+
+    #[test]
+    fn tradeoff_presets_are_distinct_and_in_domain() {
+        let presets = tradeoff_presets();
+        assert!(presets.len() >= 6);
+        for (label, s) in &presets {
+            assert!(s.validate().is_ok(), "{label}");
+            // The trade-off is real: I/O power premium everywhere.
+            assert!(s.power.rho() > 1.0, "{label}: rho {}", s.power.rho());
+        }
+        for i in 0..presets.len() {
+            for j in i + 1..presets.len() {
+                assert_ne!(presets[i].1, presets[j].1, "{} == {}", presets[i].0, presets[j].0);
+            }
+        }
     }
 }

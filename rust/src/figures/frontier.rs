@@ -1,0 +1,148 @@
+//! Frontier figure (beyond the paper): per-scenario time–energy Pareto
+//! frontiers and their knees over the trade-off presets.
+//!
+//! The paper reports only the two endpoints of each trade-off (AlgoT
+//! and AlgoE) and their ratios; this figure renders the whole curve the
+//! §5 discussion walks along — measured trade-off curves being the
+//! artifact practitioners actually consume (cf. the cluster energy
+//! characterisation literature). Frontiers are evaluated as
+//! [`CellJob::Frontier`](crate::sweep::CellJob) cells on the persistent
+//! pool, memoised like every other grid.
+
+use crate::config::presets::tradeoff_presets;
+use crate::pareto::{family_frontiers, FamilyFrontier};
+use crate::util::table::{fnum, Table};
+
+/// The labelled trade-off presets this figure plots.
+pub fn presets() -> Vec<(String, crate::model::Scenario)> {
+    tradeoff_presets().into_iter().map(|(label, s)| (label.to_string(), s)).collect()
+}
+
+/// Compute every preset's frontier at `points` samples, as one grid
+/// batch seeded from [`super::FIGURE_SEED`].
+pub fn series(points: usize) -> Vec<FamilyFrontier> {
+    family_frontiers(presets(), points, super::FIGURE_SEED)
+}
+
+/// One row per frontier point: the full curves, CSV-ready.
+pub fn table(frontiers: &[FamilyFrontier]) -> Table {
+    let mut t = Table::new(&[
+        "scenario",
+        "period_min",
+        "makespan_min",
+        "energy_mW_min",
+        "time_overhead_pct",
+        "energy_gain_pct",
+    ]);
+    for f in frontiers {
+        let Some(sum) = &f.summary else { continue };
+        for p in &sum.points {
+            t.row(&[
+                f.label.clone(),
+                fnum(p.period, 3),
+                fnum(p.time, 2),
+                fnum(p.energy, 2),
+                fnum(sum.time_overhead_pct(p), 3),
+                fnum(sum.energy_gain_pct(p), 3),
+            ]);
+        }
+    }
+    t
+}
+
+/// One row per scenario: endpoints, hypervolume, and both knees.
+pub fn knee_table(frontiers: &[FamilyFrontier]) -> Table {
+    let mut t = Table::new(&[
+        "scenario",
+        "T_time_min",
+        "T_energy_min",
+        "hypervolume",
+        "knee_chord_period",
+        "knee_chord_time_overhead_pct",
+        "knee_chord_energy_gain_pct",
+        "knee_curv_period",
+    ]);
+    for f in frontiers {
+        let Some(sum) = &f.summary else { continue };
+        let chord = sum.knee_chord.as_ref();
+        let curv = sum.knee_curvature.as_ref();
+        t.row(&[
+            f.label.clone(),
+            fnum(sum.t_time_opt, 2),
+            fnum(sum.t_energy_opt, 2),
+            fnum(sum.hypervolume, 4),
+            chord.map(|k| fnum(k.point.period, 2)).unwrap_or_default(),
+            chord.map(|k| fnum(sum.time_overhead_pct(&k.point), 2)).unwrap_or_default(),
+            chord.map(|k| fnum(sum.energy_gain_pct(&k.point), 2)).unwrap_or_default(),
+            curv.map(|k| fnum(k.point.period, 2)).unwrap_or_default(),
+        ]);
+    }
+    t
+}
+
+/// The chord-knee headline across presets: `(label, energy_gain_pct,
+/// time_overhead_pct)` at each knee — the "most of the gain for part of
+/// the price" numbers.
+pub fn knee_headlines(frontiers: &[FamilyFrontier]) -> Vec<(String, f64, f64)> {
+    frontiers
+        .iter()
+        .filter_map(|f| {
+            let sum = f.summary.as_ref()?;
+            let k = sum.knee_chord.as_ref()?;
+            Some((
+                f.label.clone(),
+                sum.energy_gain_pct(&k.point),
+                sum.time_overhead_pct(&k.point),
+            ))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_covers_every_preset() {
+        let fr = series(17);
+        assert_eq!(fr.len(), presets().len());
+        for f in &fr {
+            assert!(f.summary.is_some(), "{} left the domain", f.label);
+        }
+    }
+
+    #[test]
+    fn tables_have_expected_shapes() {
+        let fr = series(9);
+        let pts: usize = fr
+            .iter()
+            .filter_map(|f| f.summary.as_ref().map(|s| s.points.len()))
+            .sum();
+        assert_eq!(table(&fr).n_rows(), pts);
+        assert_eq!(knee_table(&fr).n_rows(), fr.len());
+    }
+
+    #[test]
+    fn knee_headlines_beat_the_diagonal() {
+        // At every chord knee the energy-gain share exceeds the
+        // time-cost share of the full trade-off — the knee's definition,
+        // surfaced as the figure's headline.
+        let fr = series(65);
+        let heads = knee_headlines(&fr);
+        assert_eq!(heads.len(), fr.len());
+        for (label, gain, overhead) in &heads {
+            let full = fr
+                .iter()
+                .find(|f| &f.label == label)
+                .and_then(|f| f.summary.as_ref())
+                .unwrap();
+            let last = full.points.last().unwrap();
+            let full_gain = full.energy_gain_pct(last);
+            let full_overhead = full.time_overhead_pct(last);
+            assert!(
+                gain / full_gain > overhead / full_overhead,
+                "{label}: knee gain {gain}/{full_gain} vs overhead {overhead}/{full_overhead}"
+            );
+        }
+    }
+}

@@ -7,6 +7,7 @@
 //! | [`fig2::grid`]      | Fig. 2 — ratio surfaces over (μ, ρ) |
 //! | [`fig3::series`]    | Fig. 3a/3b — ratios vs node count |
 //! | [`headline::compute`] | §5 headline numbers |
+//! | [`frontier::series`] | time–energy Pareto frontiers + knees (beyond the paper) |
 //! | [`ablations`]       | ω sweep, first-order accuracy, γ sweep, MSK, Weibull robustness |
 //!
 //! Every series is built as a [`crate::sweep::GridSpec`] and evaluated
@@ -22,6 +23,7 @@ pub mod ablations;
 pub mod fig1;
 pub mod fig2;
 pub mod fig3;
+pub mod frontier;
 pub mod headline;
 
 /// Base seed every figure/ablation grid derives its cell seeds from.

@@ -32,6 +32,21 @@
 //! thread count** and stable under re-ordering; outputs are memoised
 //! process-wide keyed by exact parameter bit patterns
 //! ([`sweep::cache`]), so repeated invocations skip recomputation.
+//!
+//! # The Pareto frontier subsystem
+//!
+//! [`pareto`] characterises the *range* of time/energy trade-offs the
+//! paper's §5 discusses: the exact frontier between `T_Time_opt` and
+//! `T_Energy_opt` (dense sampling, dominance filtering, normalised
+//! hypervolume), knee-point detection (max distance to chord, max
+//! curvature), ε-constraint solves ("minimise energy subject to a time
+//! overhead ≤ x%", and the transpose), and a Monte-Carlo-validated
+//! frontier cross-checked against the analytic one through seeded
+//! grid-engine sim cells. Frontiers are themselves grid cells
+//! ([`sweep::CellJob::Frontier`]), so multi-scenario frontier families
+//! are parallel, deterministic, and memo-cached like every other grid;
+//! `figures::frontier` renders them and the CLI `pareto` subcommand
+//! exports them as JSON artifacts.
 
 pub mod cli;
 pub mod config;
@@ -39,6 +54,7 @@ pub mod coordinator;
 pub mod energy;
 pub mod figures;
 pub mod model;
+pub mod pareto;
 pub mod runtime;
 pub mod sim;
 pub mod sweep;

@@ -4,6 +4,8 @@
 //!
 //! * `optimize`  — optimal periods + time/energy trade-off for a scenario
 //! * `sweep`     — CSV of `T_final`/`E_final` over a period grid
+//! * `pareto`    — time–energy Pareto frontier: knees, ε-constraint
+//!   solves, optional Monte-Carlo validation, JSON artifact
 //! * `simulate`  — Monte-Carlo validation of the model on a scenario
 //! * `figures`   — regenerate every paper figure as CSV + JSON
 //! * `train`     — run the fault-tolerant training coordinator (PJRT)
@@ -21,12 +23,27 @@ use ckpt_period::model::msk::compare_with_msk;
 use ckpt_period::model::params::{CheckpointParams, PowerParams, Scenario};
 use ckpt_period::model::ratios::compare;
 use ckpt_period::model::time::{daly, t_final, t_time_opt, young};
-use ckpt_period::runtime::{ArtifactDir, Runtime};
+use ckpt_period::pareto::{
+    min_energy_with_time_overhead, min_time_with_energy_overhead, validate, EpsSolution,
+    Frontier, KneeMethod,
+};
+use ckpt_period::runtime::{write_json_artifact, ArtifactDir, Runtime};
 use ckpt_period::sweep::{CellOutput, GridSpec};
+use ckpt_period::util::json::Json;
 use ckpt_period::util::table::{fnum, Table};
 
-const USAGE: &str = "ckpt-period <optimize|sweep|simulate|figures|train|info> [flags]
+const USAGE: &str = "ckpt-period <optimize|sweep|pareto|simulate|figures|train|info> [flags]
 Reproduction of Aupy et al., 'Optimal Checkpointing Period: Time vs. Energy' (2013).
+
+  optimize  optimal periods + time/energy trade-off for a scenario
+  sweep     CSV of T_final/E_final over a period grid
+  pareto    time-energy Pareto frontier: knees, eps-constraint solves,
+            optional Monte-Carlo validation, JSON artifact (--out)
+  simulate  Monte-Carlo validation of the model on a scenario
+  figures   regenerate every paper figure (incl. the frontier) as CSV
+  train     fault-tolerant PJRT training run
+  info      artifact inventory
+
 Run a subcommand with --help for its flags.";
 
 fn main() {
@@ -34,6 +51,7 @@ fn main() {
     let code = match argv.first().map(|s| s.as_str()) {
         Some("optimize") => run(cmd_optimize(&argv[1..])),
         Some("sweep") => run(cmd_sweep(&argv[1..])),
+        Some("pareto") => run(cmd_pareto(&argv[1..])),
         Some("simulate") => run(cmd_simulate(&argv[1..])),
         Some("figures") => run(cmd_figures(&argv[1..])),
         Some("train") => run(cmd_train(&argv[1..])),
@@ -212,6 +230,239 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_pareto(argv: &[String]) -> Result<(), String> {
+    let mut specs = SCENARIO_SPECS.to_vec();
+    specs.push(ArgSpec::flag("points", "64", "frontier samples between the two optima"));
+    specs.push(ArgSpec::flag(
+        "eps-time",
+        "",
+        "time-overhead budget in % => minimise energy under it",
+    ));
+    specs.push(ArgSpec::flag(
+        "eps-energy",
+        "",
+        "energy-overhead budget in % => minimise time under it",
+    ));
+    specs.push(ArgSpec::switch("simulate", "Monte-Carlo-validate the frontier"));
+    specs.push(ArgSpec::flag("replicates", "200", "replicates per validated point"));
+    specs.push(ArgSpec::flag("sim-points", "6", "frontier points to validate"));
+    specs.push(ArgSpec::flag("seed", "1", "base seed for --simulate cells"));
+    specs.push(ArgSpec::flag("out", "", "write the full frontier as a JSON artifact"));
+    specs.push(ArgSpec::flag("table-rows", "12", "frontier rows printed to stdout"));
+    let args = Args::parse("pareto", "time-energy Pareto frontier of a scenario", &specs, argv)
+        .map_err(cli_err)?;
+    let s = scenario_from(&args)?;
+    let points = args.get_usize("points").map_err(cli_err)?.max(2);
+    let frontier = Frontier::compute(&s, points).map_err(|e| e.to_string())?;
+
+    let first = *frontier.time_opt_point();
+    let last = *frontier.energy_opt_point();
+    println!(
+        "frontier: {} points, T in [{:.2}, {:.2}] min, hypervolume {:.4}",
+        frontier.len(),
+        frontier.t_time_opt,
+        frontier.t_energy_opt,
+        frontier.hypervolume()
+    );
+    println!(
+        "endpoints: AlgoT ({:.1} min, {:.0} mW*min) -> AlgoE ({:.1} min, {:.0} mW*min): \
+         {:.2}% energy gain for {:.2}% more time",
+        first.time,
+        first.energy,
+        last.time,
+        last.energy,
+        (1.0 - last.energy / first.energy) * 100.0,
+        (last.time / first.time - 1.0) * 100.0
+    );
+
+    let overhead_pct = |time: f64| (time / first.time - 1.0) * 100.0;
+    let gain_pct = |energy: f64| (1.0 - energy / first.energy) * 100.0;
+
+    let knees = [
+        ("knee (max dist to chord)", frontier.knee(KneeMethod::MaxDistanceToChord)),
+        ("knee (max curvature)", frontier.knee(KneeMethod::MaxCurvature)),
+    ];
+    for (label, knee) in &knees {
+        match knee {
+            Some(k) => println!(
+                "{label}: T = {:.2} min -> {:.2}% energy gain for {:.2}% more time",
+                k.point.period,
+                gain_pct(k.point.energy),
+                overhead_pct(k.point.time)
+            ),
+            None => println!("{label}: n/a (degenerate frontier)"),
+        }
+    }
+
+    let max_rows = args.get_usize("table-rows").map_err(cli_err)?.max(2);
+    let mut t = Table::new(&[
+        "period_min",
+        "makespan_min",
+        "energy_mW_min",
+        "time_overhead_pct",
+        "energy_gain_pct",
+    ]);
+    let n = frontier.len();
+    let shown = max_rows.min(n);
+    for i in 0..shown {
+        let idx = if shown == 1 { 0 } else { i * (n - 1) / (shown - 1) };
+        let p = frontier.points()[idx];
+        t.row(&[
+            fnum(p.period, 3),
+            fnum(p.time, 2),
+            fnum(p.energy, 1),
+            fnum(overhead_pct(p.time), 3),
+            fnum(gain_pct(p.energy), 3),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let eps_json = |sol: &EpsSolution| {
+        Json::obj(vec![
+            ("period_min", Json::Num(sol.period)),
+            ("makespan_min", Json::Num(sol.time)),
+            ("energy_mW_min", Json::Num(sol.energy)),
+            ("bound", Json::Num(sol.bound)),
+            ("binding", Json::Bool(sol.binding)),
+        ])
+    };
+    let mut eps_entries: Vec<(&str, Json)> = Vec::new();
+    if !args.get("eps-time").is_empty() {
+        let eps = args.get_f64("eps-time").map_err(cli_err)?;
+        if eps < 0.0 {
+            return Err(format!("--eps-time must be >= 0, got {eps}"));
+        }
+        let sol = min_energy_with_time_overhead(&s, eps).map_err(|e| e.to_string())?;
+        println!(
+            "eps-time {eps}%: min energy {:.1} mW*min at T = {:.2} min \
+             ({:.2}% energy gain, {:.2}% time overhead, constraint {})",
+            sol.energy,
+            sol.period,
+            gain_pct(sol.energy),
+            overhead_pct(sol.time),
+            if sol.binding { "binding" } else { "slack" }
+        );
+        eps_entries.push(("min_energy_given_time", eps_json(&sol)));
+    }
+    if !args.get("eps-energy").is_empty() {
+        let eps = args.get_f64("eps-energy").map_err(cli_err)?;
+        if eps < 0.0 {
+            return Err(format!("--eps-energy must be >= 0, got {eps}"));
+        }
+        let sol = min_time_with_energy_overhead(&s, eps).map_err(|e| e.to_string())?;
+        println!(
+            "eps-energy {eps}%: min makespan {:.1} min at T = {:.2} min \
+             ({:.2}% energy gain, {:.2}% time overhead, constraint {})",
+            sol.time,
+            sol.period,
+            gain_pct(sol.energy),
+            overhead_pct(sol.time),
+            if sol.binding { "binding" } else { "slack" }
+        );
+        eps_entries.push(("min_time_given_energy", eps_json(&sol)));
+    }
+
+    let mut sim_json = Json::Null;
+    if args.switch("simulate") {
+        let replicates = args.get_usize("replicates").map_err(cli_err)?.max(2);
+        let sim_points = args.get_usize("sim-points").map_err(cli_err)?.max(2);
+        let seed = args.get_u64("seed").map_err(cli_err)?;
+        let v = validate(&frontier, sim_points, replicates, seed);
+        let mut t = Table::new(&[
+            "period_min",
+            "model_makespan",
+            "sim_makespan (95% CI half)",
+            "model_energy",
+            "sim_energy (95% CI half)",
+            "agrees",
+        ]);
+        for p in &v.points {
+            t.row(&[
+                fnum(p.point.period, 2),
+                fnum(p.point.time, 1),
+                format!("{} ({})", fnum(p.sim.makespan_mean, 1), fnum(p.sim.makespan_ci95_half, 1)),
+                fnum(p.point.energy, 1),
+                format!("{} ({})", fnum(p.sim.energy_mean, 1), fnum(p.sim.energy_ci95_half, 1)),
+                format!("{}", p.time_agrees && p.energy_agrees),
+            ]);
+        }
+        println!("simulated frontier ({replicates} replicates per point):");
+        println!("{}", t.render());
+        println!(
+            "analytic frontier {} the Monte-Carlo confidence bands",
+            if v.all_agree() { "agrees with" } else { "DISAGREES with" }
+        );
+        // An array, like `frontier.points`: entries stay in frontier
+        // order so consumers can zip the two by position.
+        sim_json = Json::Arr(
+            v.points
+                .iter()
+                .map(|p| {
+                    Json::obj(vec![
+                        ("period_min", Json::Num(p.point.period)),
+                        ("sim_makespan_mean", Json::Num(p.sim.makespan_mean)),
+                        ("sim_makespan_ci95_half", Json::Num(p.sim.makespan_ci95_half)),
+                        ("sim_energy_mean", Json::Num(p.sim.energy_mean)),
+                        ("sim_energy_ci95_half", Json::Num(p.sim.energy_ci95_half)),
+                        // u64 seeds exceed f64's integer range;
+                        // keep them exact as strings.
+                        ("seed", Json::Str(p.seed.to_string())),
+                        ("time_agrees", Json::Bool(p.time_agrees)),
+                        ("energy_agrees", Json::Bool(p.energy_agrees)),
+                    ])
+                })
+                .collect(),
+        );
+    }
+
+    let out = args.get("out");
+    if !out.is_empty() {
+        let spec = ScenarioSpec { scenario: s, n_nodes: None };
+        let points_json = Json::Arr(
+            frontier
+                .points()
+                .iter()
+                .map(|p| {
+                    Json::obj(vec![
+                        ("period_min", Json::Num(p.period)),
+                        ("makespan_min", Json::Num(p.time)),
+                        ("energy_mW_min", Json::Num(p.energy)),
+                    ])
+                })
+                .collect(),
+        );
+        let knee_json = |k: &Option<ckpt_period::pareto::Knee>| match k {
+            Some(k) => Json::obj(vec![
+                ("period_min", Json::Num(k.point.period)),
+                ("makespan_min", Json::Num(k.point.time)),
+                ("energy_mW_min", Json::Num(k.point.energy)),
+                ("score", Json::Num(k.score)),
+            ]),
+            None => Json::Null,
+        };
+        let doc = Json::obj(vec![
+            ("schema", Json::Str("ckpt-period/pareto-frontier/v1".into())),
+            ("scenario", spec.to_json()),
+            (
+                "frontier",
+                Json::obj(vec![
+                    ("t_time_opt_min", Json::Num(frontier.t_time_opt)),
+                    ("t_energy_opt_min", Json::Num(frontier.t_energy_opt)),
+                    ("hypervolume", Json::Num(frontier.hypervolume())),
+                    ("knee_chord", knee_json(&knees[0].1)),
+                    ("knee_curvature", knee_json(&knees[1].1)),
+                    ("points", points_json),
+                ]),
+            ),
+            ("eps_constraints", Json::obj(eps_entries)),
+            ("simulation", sim_json),
+        ]);
+        write_json_artifact(Path::new(out), &doc).map_err(|e| e.to_string())?;
+        println!("frontier artifact written to {out}");
+    }
+    Ok(())
+}
+
 fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     let mut specs = SCENARIO_SPECS.to_vec();
     specs.push(ArgSpec::flag("period", "0", "period to simulate (0 = AlgoT)"));
@@ -284,6 +535,15 @@ fn cmd_figures(argv: &[String]) -> Result<(), String> {
             .map_err(|e| e.to_string())?;
         let (gain, at) = figures::fig3::peak_energy_gain(&pts);
         println!("{name}: peak energy gain {gain:.1}% at N = {at:.2e}");
+    }
+
+    let fr = figures::frontier::series(n);
+    figures::persist(&figures::frontier::table(&fr), &dir, "frontier")
+        .map_err(|e| e.to_string())?;
+    figures::persist(&figures::frontier::knee_table(&fr), &dir, "frontier_knees")
+        .map_err(|e| e.to_string())?;
+    for (label, gain, overhead) in figures::frontier::knee_headlines(&fr) {
+        println!("frontier knee [{label}]: {gain:.1}% energy gain for {overhead:.1}% more time");
     }
 
     let h = figures::headline::compute();

@@ -1,0 +1,181 @@
+//! ε-constraint solves on the exact frontier.
+//!
+//! The two questions practitioners actually ask of the trade-off
+//! (Aupy et al.'s energy-aware-deadline formulation, arXiv:1302.3720,
+//! is precisely the first one):
+//!
+//! * "minimise energy subject to a time overhead of at most x%", and
+//! * "minimise time subject to an energy overhead of at most x%".
+//!
+//! Both reduce to a one-dimensional root find on the period segment
+//! between `T_Time_opt` and `T_Energy_opt`: moving from one optimum
+//! toward the other, the relaxed objective improves monotonically while
+//! the constrained one degrades monotonically (each objective is
+//! unimodal with its argmin at its own endpoint). So the constrained
+//! optimum is either the far endpoint (constraint slack) or the unique
+//! period where the constraint binds — found here by bisection to
+//! machine precision. Solutions therefore lie **on** the frontier by
+//! construction.
+
+use crate::model::energy::{e_final, t_energy_opt};
+use crate::model::params::{ModelError, Scenario};
+use crate::model::time::{t_final, t_time_opt};
+
+/// One ε-constraint solution (a frontier point plus constraint data).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EpsSolution {
+    /// The optimal period under the constraint.
+    pub period: f64,
+    pub time: f64,
+    pub energy: f64,
+    /// The absolute bound the constraint imposed (minutes or mW·min).
+    pub bound: f64,
+    /// Whether the constraint was binding. `false` means the
+    /// unconstrained optimum of the relaxed objective already satisfied
+    /// the bound.
+    pub binding: bool,
+}
+
+/// Minimise `E_final` subject to
+/// `T_final(T) <= (1 + eps_pct/100) · T_final(T_Time_opt)`.
+pub fn min_energy_with_time_overhead(
+    s: &Scenario,
+    eps_pct: f64,
+) -> Result<EpsSolution, ModelError> {
+    assert!(eps_pct >= 0.0, "overhead budget must be >= 0, got {eps_pct}%");
+    let tt = t_time_opt(s)?;
+    let te = t_energy_opt(s)?;
+    let bound = t_final(s, tt) * (1.0 + eps_pct / 100.0);
+    let feasible = |t: f64| t_final(s, t) <= bound;
+    Ok(solve(s, tt, te, bound, feasible))
+}
+
+/// Minimise `T_final` subject to
+/// `E_final(T) <= (1 + eps_pct/100) · E_final(T_Energy_opt)`.
+pub fn min_time_with_energy_overhead(
+    s: &Scenario,
+    eps_pct: f64,
+) -> Result<EpsSolution, ModelError> {
+    assert!(eps_pct >= 0.0, "overhead budget must be >= 0, got {eps_pct}%");
+    let tt = t_time_opt(s)?;
+    let te = t_energy_opt(s)?;
+    let bound = e_final(s, te) * (1.0 + eps_pct / 100.0);
+    let feasible = |t: f64| e_final(s, t) <= bound;
+    Ok(solve(s, te, tt, bound, feasible))
+}
+
+/// Walk from `from` (where the constraint holds with slack) toward
+/// `target` (the relaxed objective's own optimum); return `target` if it
+/// is feasible, else bisect to the binding period.
+fn solve(
+    s: &Scenario,
+    from: f64,
+    target: f64,
+    bound: f64,
+    feasible: impl Fn(f64) -> bool,
+) -> EpsSolution {
+    debug_assert!(feasible(from), "constraint must hold at its own optimum");
+    if feasible(target) {
+        return EpsSolution {
+            period: target,
+            time: t_final(s, target),
+            energy: e_final(s, target),
+            bound,
+            binding: false,
+        };
+    }
+    let (mut a, mut b) = (from, target);
+    // ~100 halvings: the bracket shrinks below one ulp of any f64 period.
+    for _ in 0..100 {
+        let mid = 0.5 * (a + b);
+        if feasible(mid) {
+            a = mid;
+        } else {
+            b = mid;
+        }
+    }
+    EpsSolution { period: a, time: t_final(s, a), energy: e_final(s, a), bound, binding: true }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::fig1_scenario;
+    use crate::util::stats::rel_err;
+
+    #[test]
+    fn zero_budget_returns_the_endpoint() {
+        let s = fig1_scenario(300.0, 5.5);
+        let tt = t_time_opt(&s).unwrap();
+        // The objectives are flat (quadratically) at their own optima,
+        // so the binding period is only pinned to ~sqrt(eps_machine).
+        let sol = min_energy_with_time_overhead(&s, 0.0).unwrap();
+        assert!(rel_err(sol.period, tt) < 1e-6, "period {} vs {}", sol.period, tt);
+        let te = t_energy_opt(&s).unwrap();
+        let sol = min_time_with_energy_overhead(&s, 0.0).unwrap();
+        assert!(rel_err(sol.period, te) < 1e-6, "period {} vs {}", sol.period, te);
+    }
+
+    #[test]
+    fn huge_budget_is_not_binding() {
+        let s = fig1_scenario(300.0, 5.5);
+        let sol = min_energy_with_time_overhead(&s, 1_000.0).unwrap();
+        assert!(!sol.binding);
+        assert!(rel_err(sol.period, t_energy_opt(&s).unwrap()) < 1e-12);
+        let sol = min_time_with_energy_overhead(&s, 1_000.0).unwrap();
+        assert!(!sol.binding);
+        assert!(rel_err(sol.period, t_time_opt(&s).unwrap()) < 1e-12);
+    }
+
+    #[test]
+    fn binding_solution_sits_exactly_on_the_bound() {
+        let s = fig1_scenario(300.0, 5.5);
+        for eps in [1.0, 2.0, 5.0, 8.0] {
+            let sol = min_energy_with_time_overhead(&s, eps).unwrap();
+            assert!(sol.binding, "eps={eps}%");
+            assert!(sol.time <= sol.bound * (1.0 + 1e-12));
+            assert!(rel_err(sol.time, sol.bound) < 1e-9, "eps={eps}%");
+        }
+    }
+
+    #[test]
+    fn energy_decreases_monotonically_with_budget() {
+        let s = fig1_scenario(300.0, 7.0);
+        let mut last = f64::INFINITY;
+        for eps in [0.0, 1.0, 2.0, 4.0, 8.0, 16.0] {
+            let sol = min_energy_with_time_overhead(&s, eps).unwrap();
+            assert!(sol.energy <= last * (1.0 + 1e-12), "eps={eps}%");
+            last = sol.energy;
+        }
+    }
+
+    #[test]
+    fn transposed_solve_mirrors() {
+        let s = fig1_scenario(120.0, 5.5);
+        let sol = min_time_with_energy_overhead(&s, 3.0).unwrap();
+        assert!(sol.binding);
+        assert!(rel_err(sol.energy, sol.bound) < 1e-9);
+        // Paying more energy budget must not slow us down.
+        let loose = min_time_with_energy_overhead(&s, 10.0).unwrap();
+        assert!(loose.time <= sol.time * (1.0 + 1e-12));
+    }
+
+    #[test]
+    fn solutions_lie_between_the_optima() {
+        let s = fig1_scenario(300.0, 5.5);
+        let tt = t_time_opt(&s).unwrap();
+        let te = t_energy_opt(&s).unwrap();
+        let (lo, hi) = (tt.min(te), tt.max(te));
+        for eps in [0.5, 3.0, 12.0] {
+            let a = min_energy_with_time_overhead(&s, eps).unwrap();
+            let b = min_time_with_energy_overhead(&s, eps).unwrap();
+            for sol in [a, b] {
+                assert!(
+                    (lo - 1e-9..=hi + 1e-9).contains(&sol.period),
+                    "eps={eps}%: period {} outside [{lo}, {hi}]",
+                    sol.period
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! Frontiers over whole scenario families, as one grid-engine batch.
+//!
+//! A frontier is itself a cacheable cell
+//! ([`CellJob::Frontier`](crate::sweep::CellJob)): evaluating a family
+//! (a power-ratio sweep, the trade-off presets, a μ scan) fans the
+//! per-scenario frontier computations out on the persistent pool and
+//! memoises each one process-wide — re-rendering the frontier figure or
+//! re-running the CLI recomputes nothing.
+
+use crate::model::params::Scenario;
+use crate::sweep::{CellOutput, GridSpec};
+
+use super::frontier::FrontierSummary;
+
+/// One scenario of a family with its frontier (or `None` when the
+/// scenario left the model's domain — the same clamp regime `Compare`
+/// cells report).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FamilyFrontier {
+    pub label: String,
+    pub scenario: Scenario,
+    pub summary: Option<FrontierSummary>,
+}
+
+/// Compute the frontier of every labelled scenario, `points` samples
+/// each, as one parallel, memoised grid batch. Results are in input
+/// order and independent of the thread count.
+pub fn family_frontiers(
+    scenarios: impl IntoIterator<Item = (String, Scenario)>,
+    points: usize,
+    base_seed: u64,
+) -> Vec<FamilyFrontier> {
+    let labelled: Vec<(String, Scenario)> = scenarios.into_iter().collect();
+    let mut spec = GridSpec::new(base_seed);
+    for (_, s) in &labelled {
+        spec.push_frontier(*s, points);
+    }
+    labelled
+        .into_iter()
+        .zip(spec.evaluate())
+        .map(|((label, scenario), r)| FamilyFrontier {
+            label,
+            scenario,
+            summary: match r.output {
+                CellOutput::Frontier(f) => f,
+                ref other => unreachable!("frontier cell produced {other:?}"),
+            },
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{fig1_scenario, tradeoff_presets};
+    use crate::pareto::frontier::FrontierSummary;
+
+    #[test]
+    fn family_matches_direct_computation() {
+        let family: Vec<(String, Scenario)> = [2.0, 5.5, 7.0]
+            .into_iter()
+            .map(|rho| (format!("rho{rho}"), fig1_scenario(300.0, rho)))
+            .collect();
+        let out = family_frontiers(family.clone(), 17, 1);
+        assert_eq!(out.len(), 3);
+        for (f, (label, s)) in out.iter().zip(&family) {
+            assert_eq!(&f.label, label);
+            let direct = FrontierSummary::compute(s, 17).unwrap();
+            assert_eq!(f.summary.as_ref().unwrap(), &direct);
+        }
+    }
+
+    #[test]
+    fn tradeoff_presets_all_have_frontiers() {
+        let family = tradeoff_presets()
+            .into_iter()
+            .map(|(label, s)| (label.to_string(), s));
+        let out = family_frontiers(family, 9, 1);
+        assert!(out.len() >= 4, "presets shrank to {}", out.len());
+        for f in &out {
+            let sum = f.summary.as_ref().expect("preset in domain");
+            assert!(sum.points.len() >= 2, "{}: {} points", f.label, sum.points.len());
+            assert!(sum.hypervolume >= 0.0 && sum.hypervolume < 1.0, "{}", f.label);
+        }
+    }
+
+    #[test]
+    fn family_evaluation_is_bit_stable() {
+        let family: Vec<(String, Scenario)> =
+            vec![("a".into(), fig1_scenario(120.0, 5.5)), ("b".into(), fig1_scenario(300.0, 7.0))];
+        let x = family_frontiers(family.clone(), 33, 9);
+        let y = family_frontiers(family, 33, 9);
+        assert_eq!(x, y);
+    }
+}

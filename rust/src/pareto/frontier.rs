@@ -1,0 +1,374 @@
+//! The analytic time–energy Pareto frontier of one scenario.
+//!
+//! `T_final` is unimodal with its minimum at `T_Time_opt` and `E_final`
+//! is unimodal with its minimum at `T_Energy_opt` (§3). On the period
+//! segment between the two optima the objectives are strictly
+//! conflicting — moving toward one optimum walks away from the other —
+//! so **every** period in `[min(T_T, T_E), max(T_T, T_E)]` is
+//! Pareto-optimal and the segment *is* the exact frontier. [`Frontier`]
+//! samples it densely (endpoints pinned to the optima bit-for-bit),
+//! filters numerically dominated samples, and exposes the derived
+//! quantities downstream consumers need: normalised coordinates,
+//! hypervolume, and knee points ([`super::knee`]).
+
+use crate::model::energy::{e_final, t_energy_opt};
+use crate::model::params::{ModelError, Scenario};
+use crate::model::time::{t_final, t_time_opt};
+
+use super::knee::{knee, Knee, KneeMethod};
+
+/// One point of the frontier: a checkpointing period and the two
+/// objective values the closed forms assign to it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FrontierPoint {
+    /// Checkpointing period `T` (minutes).
+    pub period: f64,
+    /// Expected makespan `T_final(T)` (minutes).
+    pub time: f64,
+    /// Expected energy `E_final(T)` (mW·min).
+    pub energy: f64,
+}
+
+impl FrontierPoint {
+    /// Pareto dominance: at least as good in both objectives, strictly
+    /// better in one.
+    pub fn dominates(&self, other: &FrontierPoint) -> bool {
+        self.time <= other.time
+            && self.energy <= other.energy
+            && (self.time < other.time || self.energy < other.energy)
+    }
+}
+
+/// A sampled exact frontier. Points are sorted by makespan ascending
+/// (equivalently energy descending): the first point is the AlgoT
+/// endpoint, the last the AlgoE endpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frontier {
+    pub scenario: Scenario,
+    /// Clamped `T_Time_opt` — the first point's period.
+    pub t_time_opt: f64,
+    /// Clamped `T_Energy_opt` — the last point's period.
+    pub t_energy_opt: f64,
+    points: Vec<FrontierPoint>,
+}
+
+impl Frontier {
+    /// Sample the frontier with `n >= 2` periods spaced uniformly
+    /// between the two optima (endpoints exact). Errors when the
+    /// scenario has no feasible period at all.
+    pub fn compute(s: &Scenario, n: usize) -> Result<Frontier, ModelError> {
+        assert!(n >= 2, "need at least the two endpoint samples, got {n}");
+        let tt = t_time_opt(s)?;
+        let te = t_energy_opt(s)?;
+        let (lo, hi) = if tt <= te { (tt, te) } else { (te, tt) };
+
+        let mut sampled = Vec::with_capacity(n);
+        if hi - lo <= 0.0 {
+            // Degenerate trade-off: both optima clamp to the same period
+            // (e.g. the Fig. 3 breakdown tail). One point, zero spread.
+            sampled.push(point_at(s, lo));
+        } else {
+            for i in 0..n {
+                // Pin the endpoints to the optima exactly; interior
+                // points are uniform in the period.
+                let period = if i == 0 {
+                    lo
+                } else if i == n - 1 {
+                    hi
+                } else {
+                    lo + (hi - lo) * i as f64 / (n - 1) as f64
+                };
+                sampled.push(point_at(s, period));
+            }
+        }
+        Ok(Frontier { scenario: *s, t_time_opt: tt, t_energy_opt: te, points: filter_dominated(sampled) })
+    }
+
+    /// The non-dominated points, sorted by makespan ascending.
+    pub fn points(&self) -> &[FrontierPoint] {
+        &self.points
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// The AlgoT endpoint (minimum makespan).
+    pub fn time_opt_point(&self) -> &FrontierPoint {
+        self.points.first().expect("frontier has at least one point")
+    }
+
+    /// The AlgoE endpoint (minimum energy).
+    pub fn energy_opt_point(&self) -> &FrontierPoint {
+        self.points.last().expect("frontier has at least one point")
+    }
+
+    /// `(time, energy)` mapped to `[0, 1]²` over the frontier's own
+    /// extremes: the AlgoT endpoint lands on `(0, 1)`, the AlgoE
+    /// endpoint on `(1, 0)`. Empty when the frontier is degenerate
+    /// (fewer than two points or zero spread in either objective).
+    pub fn normalized(&self) -> Vec<(f64, f64)> {
+        if self.points.len() < 2 {
+            return Vec::new();
+        }
+        let t_min = self.time_opt_point().time;
+        let t_max = self.energy_opt_point().time;
+        let e_min = self.energy_opt_point().energy;
+        let e_max = self.time_opt_point().energy;
+        let (t_span, e_span) = (t_max - t_min, e_max - e_min);
+        if t_span <= 0.0 || e_span <= 0.0 {
+            return Vec::new();
+        }
+        self.points
+            .iter()
+            .map(|p| ((p.time - t_min) / t_span, (p.energy - e_min) / e_span))
+            .collect()
+    }
+
+    /// Normalised hypervolume dominated by the frontier w.r.t. the
+    /// reference point `(1, 1)` in normalised coordinates. `0` for a
+    /// degenerate frontier; `0.5` for a straight-line trade-off; →`1`
+    /// for a sharply kneed one.
+    pub fn hypervolume(&self) -> f64 {
+        let norm = self.normalized();
+        if norm.len() < 2 {
+            return 0.0;
+        }
+        // Points are sorted by time ascending with energy strictly
+        // decreasing, so each point's dominated strip spans to the next
+        // point's time coordinate.
+        let mut hv = 0.0;
+        for (i, &(t, e)) in norm.iter().enumerate() {
+            let t_next = if i + 1 < norm.len() { norm[i + 1].0 } else { 1.0 };
+            hv += (t_next - t) * (1.0 - e);
+        }
+        hv
+    }
+
+    /// Knee point under the given detection method (`None` when the
+    /// frontier has no interior point).
+    pub fn knee(&self, method: KneeMethod) -> Option<Knee> {
+        knee(self, method)
+    }
+
+    /// Consume the frontier, keeping only the point list.
+    pub fn into_points(self) -> Vec<FrontierPoint> {
+        self.points
+    }
+}
+
+fn point_at(s: &Scenario, period: f64) -> FrontierPoint {
+    FrontierPoint { period, time: t_final(s, period), energy: e_final(s, period) }
+}
+
+/// Drop dominated points: sort by `(time, energy)` ascending and keep
+/// every point that strictly improves the best energy seen so far. On a
+/// cleanly sampled frontier this is the identity; it exists to absorb
+/// flat clamped stretches and last-ulp ties.
+pub fn filter_dominated(mut points: Vec<FrontierPoint>) -> Vec<FrontierPoint> {
+    points.sort_by(|a, b| {
+        (a.time, a.energy).partial_cmp(&(b.time, b.energy)).expect("finite objectives")
+    });
+    let mut kept: Vec<FrontierPoint> = Vec::with_capacity(points.len());
+    let mut best_energy = f64::INFINITY;
+    for p in points {
+        if p.energy < best_energy {
+            best_energy = p.energy;
+            kept.push(p);
+        }
+    }
+    kept
+}
+
+/// Compact, cacheable frontier record — what a
+/// [`CellJob::Frontier`](crate::sweep::CellJob) grid cell computes and
+/// the memo cache stores. `compute` returns `None` when the scenario
+/// left the model's domain (mirroring `Compare` cells).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrontierSummary {
+    pub t_time_opt: f64,
+    pub t_energy_opt: f64,
+    pub hypervolume: f64,
+    pub knee_chord: Option<Knee>,
+    pub knee_curvature: Option<Knee>,
+    pub points: Vec<FrontierPoint>,
+}
+
+impl FrontierSummary {
+    pub fn compute(s: &Scenario, points: usize) -> Option<FrontierSummary> {
+        let f = Frontier::compute(s, points.max(2)).ok()?;
+        Some(FrontierSummary {
+            t_time_opt: f.t_time_opt,
+            t_energy_opt: f.t_energy_opt,
+            hypervolume: f.hypervolume(),
+            knee_chord: f.knee(KneeMethod::MaxDistanceToChord),
+            knee_curvature: f.knee(KneeMethod::MaxCurvature),
+            points: f.into_points(),
+        })
+    }
+
+    /// Extra time paid at `point`, in percent of the AlgoT endpoint's
+    /// makespan.
+    pub fn time_overhead_pct(&self, point: &FrontierPoint) -> f64 {
+        let t0 = self.points.first().map(|p| p.time).unwrap_or(f64::NAN);
+        (point.time / t0 - 1.0) * 100.0
+    }
+
+    /// Energy saved at `point`, in percent of the AlgoT endpoint's
+    /// energy.
+    pub fn energy_gain_pct(&self, point: &FrontierPoint) -> f64 {
+        let e0 = self.points.first().map(|p| p.energy).unwrap_or(f64::NAN);
+        (1.0 - point.energy / e0) * 100.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::fig1_scenario;
+    use crate::util::stats::rel_err;
+
+    #[test]
+    fn endpoints_are_the_optima_bit_for_bit() {
+        let s = fig1_scenario(300.0, 5.5);
+        let f = Frontier::compute(&s, 33).unwrap();
+        assert_eq!(f.time_opt_point().period.to_bits(), f.t_time_opt.to_bits());
+        assert_eq!(f.energy_opt_point().period.to_bits(), f.t_energy_opt.to_bits());
+        assert_eq!(
+            f.time_opt_point().time.to_bits(),
+            t_final(&s, f.t_time_opt).to_bits()
+        );
+        assert_eq!(
+            f.energy_opt_point().energy.to_bits(),
+            e_final(&s, f.t_energy_opt).to_bits()
+        );
+    }
+
+    #[test]
+    fn no_point_dominates_another() {
+        let s = fig1_scenario(300.0, 5.5);
+        let f = Frontier::compute(&s, 65).unwrap();
+        let pts = f.points();
+        assert!(pts.len() >= 60, "kept {} of 65", pts.len());
+        for (i, p) in pts.iter().enumerate() {
+            for (j, q) in pts.iter().enumerate() {
+                if i != j {
+                    assert!(!p.dominates(q), "{p:?} dominates {q:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn monotone_trade_off_along_the_frontier() {
+        let s = fig1_scenario(120.0, 7.0);
+        let f = Frontier::compute(&s, 40).unwrap();
+        for w in f.points().windows(2) {
+            assert!(w[1].time > w[0].time);
+            assert!(w[1].energy < w[0].energy);
+            assert!(w[1].period > w[0].period);
+        }
+    }
+
+    #[test]
+    fn normalized_hits_the_unit_corners() {
+        let s = fig1_scenario(300.0, 5.5);
+        let f = Frontier::compute(&s, 17).unwrap();
+        let n = f.normalized();
+        assert_eq!(n.len(), f.len());
+        assert!((n[0].0 - 0.0).abs() < 1e-12 && (n[0].1 - 1.0).abs() < 1e-12);
+        let last = n.last().unwrap();
+        assert!((last.0 - 1.0).abs() < 1e-12 && (last.1 - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hypervolume_in_unit_band_and_convex_beats_line() {
+        let s = fig1_scenario(300.0, 5.5);
+        let f = Frontier::compute(&s, 65).unwrap();
+        let hv = f.hypervolume();
+        // The paper's trade-off curve bows below the chord (diminishing
+        // returns), so the dominated volume exceeds the triangle's 0.5.
+        assert!(hv > 0.5 && hv < 1.0, "hv={hv}");
+    }
+
+    #[test]
+    fn hypervolume_of_straight_line_is_half() {
+        // Synthetic straight frontier through filter_dominated + a fake
+        // Frontier: easiest to assert via the formula on a hand-made set.
+        let s = fig1_scenario(300.0, 5.5);
+        let mut f = Frontier::compute(&s, 2).unwrap();
+        let (t0, e0) = (f.points[0].time, f.points[0].energy);
+        let (t1, e1) = (f.points[1].time, f.points[1].energy);
+        let n = 101;
+        f.points = (0..n)
+            .map(|i| {
+                let w = i as f64 / (n - 1) as f64;
+                FrontierPoint {
+                    period: 0.0,
+                    time: t0 + (t1 - t0) * w,
+                    energy: e0 + (e1 - e0) * w,
+                }
+            })
+            .collect();
+        assert!((f.hypervolume() - 0.5).abs() < 0.02, "hv={}", f.hypervolume());
+    }
+
+    #[test]
+    fn more_points_refine_not_change_the_span() {
+        let s = fig1_scenario(300.0, 7.0);
+        let coarse = Frontier::compute(&s, 9).unwrap();
+        let fine = Frontier::compute(&s, 129).unwrap();
+        assert!(rel_err(coarse.t_time_opt, fine.t_time_opt) < 1e-15);
+        assert!(rel_err(coarse.t_energy_opt, fine.t_energy_opt) < 1e-15);
+        // Hypervolume converges: refinement moves it only slightly.
+        assert!((coarse.hypervolume() - fine.hypervolume()).abs() < 0.05);
+    }
+
+    #[test]
+    fn degenerate_scenario_collapses_to_one_point() {
+        // Fully-overlapped checkpoints (ω = 1) with free I/O power
+        // (β = 0): both makespan and energy strictly grow with the
+        // period, so AlgoT and AlgoE both clamp to T = C and the
+        // trade-off vanishes.
+        let ckpt = crate::model::CheckpointParams::new(10.0, 10.0, 1.0, 1.0).unwrap();
+        let power = crate::model::PowerParams::from_ratios(1.0, 0.0, 0.0).unwrap();
+        let s = Scenario::new(ckpt, power, 300.0, 1e4).unwrap();
+        let f = Frontier::compute(&s, 16).unwrap();
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.hypervolume(), 0.0);
+        assert!(f.knee(KneeMethod::MaxDistanceToChord).is_none());
+        assert!(f.normalized().is_empty());
+    }
+
+    #[test]
+    fn filter_drops_dominated_and_keeps_order() {
+        let mk = |t: f64, e: f64| FrontierPoint { period: 0.0, time: t, energy: e };
+        let kept = filter_dominated(vec![
+            mk(3.0, 1.0),
+            mk(1.0, 3.0),
+            mk(2.0, 2.0),
+            mk(2.5, 2.5), // dominated by (2, 2)
+            mk(1.0, 4.0), // dominated by (1, 3)
+        ]);
+        assert_eq!(kept, vec![mk(1.0, 3.0), mk(2.0, 2.0), mk(3.0, 1.0)]);
+    }
+
+    #[test]
+    fn summary_matches_frontier() {
+        let s = fig1_scenario(300.0, 5.5);
+        let f = Frontier::compute(&s, 33).unwrap();
+        let sum = FrontierSummary::compute(&s, 33).unwrap();
+        assert_eq!(sum.points, f.points().to_vec());
+        assert_eq!(sum.hypervolume.to_bits(), f.hypervolume().to_bits());
+        // Percent helpers anchor on the AlgoT endpoint.
+        assert_eq!(sum.time_overhead_pct(&sum.points[0]), 0.0);
+        assert_eq!(sum.energy_gain_pct(&sum.points[0]), 0.0);
+        let last = *sum.points.last().unwrap();
+        assert!(sum.time_overhead_pct(&last) > 0.0);
+        assert!(sum.energy_gain_pct(&last) > 0.0);
+    }
+}

@@ -1,0 +1,161 @@
+//! Knee-point detection on a normalised frontier.
+//!
+//! The knee is where the trade-off stops paying: to its left a small
+//! time concession buys a lot of energy, to its right the returns
+//! flatten. Two standard detectors, both operating on the frontier's
+//! normalised `[0, 1]²` coordinates so the choice of units cannot move
+//! the knee:
+//!
+//! * **max distance to chord** — the point farthest below the straight
+//!   line joining the AlgoT and AlgoE endpoints (the classic
+//!   "kneedle" geometry). Robust to sampling density.
+//! * **max curvature** — the point of largest discrete (Menger)
+//!   curvature over consecutive point triples. More local; agrees with
+//!   the chord detector on cleanly convex frontiers and flags genuinely
+//!   sharp bends on irregular ones.
+
+use super::frontier::{Frontier, FrontierPoint};
+
+/// Which detector produced a [`Knee`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KneeMethod {
+    MaxDistanceToChord,
+    MaxCurvature,
+}
+
+/// A detected knee point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Knee {
+    /// Index into [`Frontier::points`].
+    pub index: usize,
+    pub point: FrontierPoint,
+    /// The detector's score at the knee (chord distance in normalised
+    /// units, or Menger curvature).
+    pub score: f64,
+    pub method: KneeMethod,
+}
+
+/// Detect the knee of `frontier` with `method`. `None` when the
+/// frontier has no interior point (fewer than three samples).
+pub fn knee(frontier: &Frontier, method: KneeMethod) -> Option<Knee> {
+    let norm = frontier.normalized();
+    if norm.len() < 3 {
+        return None;
+    }
+    let scores: Vec<f64> = match method {
+        KneeMethod::MaxDistanceToChord => chord_distances(&norm),
+        KneeMethod::MaxCurvature => menger_curvatures(&norm),
+    };
+    // Interior argmax, deterministic first-wins tie-break.
+    let mut best: Option<(usize, f64)> = None;
+    for (i, &score) in scores.iter().enumerate() {
+        if i == 0 || i == norm.len() - 1 {
+            continue;
+        }
+        if best.map(|(_, b)| score > b).unwrap_or(true) {
+            best = Some((i, score));
+        }
+    }
+    best.map(|(index, score)| Knee {
+        index,
+        point: frontier.points()[index],
+        score,
+        method,
+    })
+}
+
+/// Perpendicular distance of each point to the endpoint chord.
+fn chord_distances(norm: &[(f64, f64)]) -> Vec<f64> {
+    let (x0, y0) = norm[0];
+    let (x1, y1) = *norm.last().expect("non-empty");
+    let (dx, dy) = (x1 - x0, y1 - y0);
+    let len = (dx * dx + dy * dy).sqrt();
+    if len == 0.0 {
+        return vec![0.0; norm.len()];
+    }
+    norm.iter()
+        .map(|&(x, y)| ((x - x0) * dy - (y - y0) * dx).abs() / len)
+        .collect()
+}
+
+/// Discrete Menger curvature per point (endpoints get 0): four times
+/// the triangle area over the product of the side lengths of each
+/// consecutive triple.
+fn menger_curvatures(norm: &[(f64, f64)]) -> Vec<f64> {
+    let mut out = vec![0.0; norm.len()];
+    for i in 1..norm.len() - 1 {
+        let (ax, ay) = norm[i - 1];
+        let (bx, by) = norm[i];
+        let (cx, cy) = norm[i + 1];
+        let area2 = ((bx - ax) * (cy - ay) - (by - ay) * (cx - ax)).abs();
+        let ab = ((bx - ax).powi(2) + (by - ay).powi(2)).sqrt();
+        let bc = ((cx - bx).powi(2) + (cy - by).powi(2)).sqrt();
+        let ca = ((cx - ax).powi(2) + (cy - ay).powi(2)).sqrt();
+        let denom = ab * bc * ca;
+        out[i] = if denom > 0.0 { 2.0 * area2 / denom } else { 0.0 };
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::fig1_scenario;
+    use crate::pareto::frontier::Frontier;
+
+    #[test]
+    fn both_methods_find_an_interior_knee() {
+        let s = fig1_scenario(300.0, 5.5);
+        let f = Frontier::compute(&s, 65).unwrap();
+        for method in [KneeMethod::MaxDistanceToChord, KneeMethod::MaxCurvature] {
+            let k = f.knee(method).expect("interior knee");
+            assert!(k.index > 0 && k.index < f.len() - 1, "{method:?} at {}", k.index);
+            assert!(k.score > 0.0, "{method:?} score {}", k.score);
+            assert_eq!(k.method, method);
+            // The knee is a real frontier point.
+            assert_eq!(k.point, f.points()[k.index]);
+        }
+    }
+
+    #[test]
+    fn knee_buys_most_of_the_gain_for_part_of_the_price() {
+        // The knee's raison d'être: at the chord knee the energy gain
+        // fraction (of the full AlgoT→AlgoE gain) exceeds the time cost
+        // fraction (of the full overhead).
+        let s = fig1_scenario(300.0, 5.5);
+        let f = Frontier::compute(&s, 129).unwrap();
+        let k = f.knee(KneeMethod::MaxDistanceToChord).unwrap();
+        let norm = f.normalized();
+        let (x, y) = norm[k.index];
+        // Below the chord x + y = 1 means gain fraction (1 - y) > time
+        // fraction x.
+        assert!(1.0 - y > x, "knee at ({x}, {y}) not below the chord");
+    }
+
+    #[test]
+    fn chord_knee_stable_under_refinement() {
+        let s = fig1_scenario(300.0, 7.0);
+        let coarse = Frontier::compute(&s, 33).unwrap();
+        let fine = Frontier::compute(&s, 257).unwrap();
+        let kc = coarse.knee(KneeMethod::MaxDistanceToChord).unwrap();
+        let kf = fine.knee(KneeMethod::MaxDistanceToChord).unwrap();
+        // Same knee location within one coarse step.
+        let step = (coarse.t_energy_opt - coarse.t_time_opt).abs() / 32.0;
+        assert!(
+            (kc.point.period - kf.point.period).abs() <= 1.5 * step,
+            "coarse {} vs fine {}",
+            kc.point.period,
+            kf.point.period
+        );
+        // Scores converge too.
+        assert!((kc.score - kf.score).abs() < 0.05);
+    }
+
+    #[test]
+    fn too_few_points_yield_no_knee() {
+        let s = fig1_scenario(300.0, 5.5);
+        let f = Frontier::compute(&s, 2).unwrap();
+        assert!(f.knee(KneeMethod::MaxDistanceToChord).is_none());
+        assert!(f.knee(KneeMethod::MaxCurvature).is_none());
+    }
+}

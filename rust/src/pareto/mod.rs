@@ -1,0 +1,42 @@
+//! Time–energy Pareto frontier subsystem.
+//!
+//! The paper's headline contribution is the *range* of trade-offs
+//! between the time-optimal and energy-optimal periods (§5); this
+//! module turns that range into a first-class artifact. On the period
+//! segment between `T_Time_opt` and `T_Energy_opt` the two objectives
+//! are strictly conflicting (each is unimodal with its argmin at its
+//! own endpoint), so the segment **is** the exact Pareto frontier —
+//! no multi-objective search required, just the closed forms of
+//! [`crate::model`].
+//!
+//! * [`frontier`] — dense frontier sampling between the optima
+//!   (endpoints pinned bit-for-bit), dominated-point filtering,
+//!   normalised coordinates and hypervolume.
+//! * [`knee`] — knee-point detection (max distance to chord, max
+//!   discrete curvature): where the trade-off stops paying.
+//! * [`epsilon`] — ε-constraint solves ("minimise energy subject to a
+//!   time overhead ≤ x%", and the transpose), exact by bisection along
+//!   the frontier.
+//! * [`validate`] — Monte-Carlo cross-check of the analytic frontier
+//!   through seeded grid-engine sim cells, with the truncation-aware
+//!   confidence bands `tests/sim_vs_model.rs` established.
+//! * [`family`] — frontiers over whole scenario families
+//!   ([`crate::config::presets::tradeoff_presets`], power-ratio
+//!   sweeps), evaluated as [`CellJob::Frontier`](crate::sweep::CellJob)
+//!   cells on the persistent pool with process-wide memoisation.
+//!
+//! Consumers: `figures::frontier` (per-scenario frontier + knee
+//! tables), the CLI `pareto` subcommand (tables + JSON artifact +
+//! optional simulation), and `examples/exascale_study`.
+
+pub mod epsilon;
+pub mod family;
+pub mod frontier;
+pub mod knee;
+pub mod validate;
+
+pub use epsilon::{min_energy_with_time_overhead, min_time_with_energy_overhead, EpsSolution};
+pub use family::{family_frontiers, FamilyFrontier};
+pub use frontier::{Frontier, FrontierPoint, FrontierSummary};
+pub use knee::{Knee, KneeMethod};
+pub use validate::{validate, FrontierValidation, ValidatedPoint};

@@ -1,0 +1,181 @@
+//! Monte-Carlo validation of the analytic frontier.
+//!
+//! Every validated frontier point becomes a [`CellJob::Sim`] cell on
+//! the grid engine: replicates fan out on the persistent pool, per-cell
+//! seeds derive from the spec's base seed and the cell's parameter bits
+//! (so the validated frontier is byte-identical for every thread
+//! count), and repeated validations of overlapping frontiers hit the
+//! process-wide memo cache.
+//!
+//! Agreement criterion: the analytic value must fall within the 95%
+//! confidence band of the Monte-Carlo mean, widened by the first-order
+//! model's own truncation error — the neglected multi-failure-per-period
+//! terms scale like `(T/μ)²`, the same allowance
+//! `rust/tests/sim_vs_model.rs` has validated across every preset
+//! family. Simulation matches the model's assumption that failures
+//! never strike during downtime/recovery.
+
+use crate::model::params::Scenario;
+use crate::sweep::{Cell, CellJob, GridSpec, SimSummary};
+
+use super::frontier::{Frontier, FrontierPoint};
+
+/// One frontier point with its Monte-Carlo estimate and verdicts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ValidatedPoint {
+    pub point: FrontierPoint,
+    /// The derived per-cell seed (reproduce with
+    /// `monte_carlo(cfg, replicates, seed, 1)`).
+    pub seed: u64,
+    pub sim: SimSummary,
+    pub time_agrees: bool,
+    pub energy_agrees: bool,
+}
+
+/// The validated frontier.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrontierValidation {
+    pub replicates: usize,
+    pub points: Vec<ValidatedPoint>,
+}
+
+impl FrontierValidation {
+    /// True when every validated point agrees in both objectives.
+    pub fn all_agree(&self) -> bool {
+        self.points.iter().all(|p| p.time_agrees && p.energy_agrees)
+    }
+}
+
+/// Subsample up to `max_points` frontier points (endpoints always
+/// included), simulate each as one grid cell, and compare the analytic
+/// objectives against the Monte-Carlo confidence bands.
+pub fn validate(
+    frontier: &Frontier,
+    max_points: usize,
+    replicates: usize,
+    base_seed: u64,
+) -> FrontierValidation {
+    assert!(max_points >= 2 && replicates >= 2);
+    let s = frontier.scenario;
+    let picked = subsample(frontier.points(), max_points);
+
+    let mut spec = GridSpec::new(base_seed);
+    for p in &picked {
+        spec.push(Cell {
+            scenario: s,
+            failure: None,
+            job: CellJob::Sim {
+                period: p.period,
+                replicates,
+                // The first-order closed forms assume failure-free
+                // recovery; simulate the same process.
+                failures_during_recovery: false,
+            },
+        });
+    }
+    let results = spec.evaluate();
+
+    let points = picked
+        .into_iter()
+        .zip(results)
+        .map(|(point, r)| {
+            let sim = *r.output.sim().expect("sim cell output");
+            let tol = truncation_tol(&s, point.period);
+            let time_agrees = within_band(
+                point.time,
+                sim.makespan_mean,
+                sim.makespan_ci95_half,
+                tol,
+            );
+            let energy_agrees =
+                within_band(point.energy, sim.energy_mean, sim.energy_ci95_half, tol);
+            ValidatedPoint { point, seed: r.seed, sim, time_agrees, energy_agrees }
+        })
+        .collect();
+    FrontierValidation { replicates, points }
+}
+
+/// Relative truncation allowance of the first-order model at period
+/// `t`: `2% + (T/μ)²/2` (see `rust/tests/sim_vs_model.rs`).
+pub fn truncation_tol(s: &Scenario, t: f64) -> f64 {
+    0.02 + 0.5 * (t / s.mu).powi(2)
+}
+
+fn within_band(model: f64, mean: f64, ci95_half: f64, rel_tol: f64) -> bool {
+    (model - mean).abs() <= 3.0 * ci95_half + rel_tol * model
+}
+
+/// Evenly spaced indices over `points` including both endpoints.
+fn subsample(points: &[FrontierPoint], max_points: usize) -> Vec<FrontierPoint> {
+    if points.len() <= max_points {
+        return points.to_vec();
+    }
+    let n = points.len();
+    let mut out = Vec::with_capacity(max_points);
+    let mut last = usize::MAX;
+    for i in 0..max_points {
+        let idx = (i as f64 * (n - 1) as f64 / (max_points - 1) as f64).round() as usize;
+        let idx = idx.min(n - 1);
+        if idx != last {
+            out.push(points[idx]);
+            last = idx;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::fig1_scenario;
+    use crate::sim::{monte_carlo, SimConfig};
+
+    #[test]
+    fn reference_frontier_validates() {
+        let s = fig1_scenario(300.0, 5.5);
+        let f = Frontier::compute(&s, 33).unwrap();
+        let v = validate(&f, 4, 120, 2013);
+        assert_eq!(v.points.len(), 4);
+        assert!(v.all_agree(), "{:?}", v.points.iter().map(|p| (p.time_agrees, p.energy_agrees)).collect::<Vec<_>>());
+        // Endpoints survived subsampling.
+        assert_eq!(v.points[0].point.period.to_bits(), f.t_time_opt.to_bits());
+        assert_eq!(
+            v.points.last().unwrap().point.period.to_bits(),
+            f.t_energy_opt.to_bits()
+        );
+    }
+
+    #[test]
+    fn validation_is_deterministic_and_seed_reproducible() {
+        let s = fig1_scenario(300.0, 5.5);
+        let f = Frontier::compute(&s, 17).unwrap();
+        let a = validate(&f, 3, 64, 7);
+        let b = validate(&f, 3, 64, 7);
+        assert_eq!(a, b);
+        // Each point's estimate is exactly serial monte_carlo at the
+        // derived seed (the grid engine's determinism contract).
+        for p in &a.points {
+            let mut cfg = SimConfig::paper(s, p.point.period);
+            cfg.failures_during_recovery = false;
+            let mc = monte_carlo(&cfg, 64, p.seed, 1);
+            assert_eq!(p.sim.makespan_mean.to_bits(), mc.makespan.mean().to_bits());
+            assert_eq!(p.sim.energy_mean.to_bits(), mc.energy.mean().to_bits());
+        }
+    }
+
+    #[test]
+    fn subsample_keeps_endpoints_and_order() {
+        let pts: Vec<FrontierPoint> = (0..100)
+            .map(|i| FrontierPoint { period: i as f64, time: i as f64, energy: -(i as f64) })
+            .collect();
+        let out = subsample(&pts, 7);
+        assert_eq!(out.len(), 7);
+        assert_eq!(out[0].period, 0.0);
+        assert_eq!(out[6].period, 99.0);
+        for w in out.windows(2) {
+            assert!(w[1].period > w[0].period);
+        }
+        // No subsampling needed when the frontier is small enough.
+        assert_eq!(subsample(&pts[..5], 7).len(), 5);
+    }
+}

@@ -1,10 +1,26 @@
 //! `artifacts/` directory schema — the contract between `python/compile`
-//! and the rust runtime.
+//! and the rust runtime — plus the writer for machine-readable
+//! experiment artifacts the CLI emits (`pareto --out`, run reports).
 
 use std::path::{Path, PathBuf};
 
 use super::client::RuntimeError;
 use crate::util::json::{parse, Json};
+
+/// Write a machine-readable experiment artifact as pretty-printed JSON,
+/// creating parent directories. Every JSON file the CLI emits goes
+/// through here so artifacts share one writer (stable key order via
+/// [`Json`], trailing newline, directories created on demand).
+pub fn write_json_artifact(path: &Path, doc: &Json) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let mut text = doc.to_string_pretty();
+    text.push('\n');
+    std::fs::write(path, text)
+}
 
 /// One entry of the flat-parameter manifest.
 #[derive(Debug, Clone, PartialEq)]
@@ -227,5 +243,20 @@ mod tests {
     fn missing_meta_mentions_make_artifacts() {
         let err = ArtifactDir::open("/nonexistent-dir").unwrap_err();
         assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn json_artifact_roundtrips_and_creates_dirs() {
+        let dir = std::env::temp_dir().join("ckpt_json_artifact").join("nested");
+        let path = dir.join("pareto.json");
+        let doc = Json::obj(vec![
+            ("schema", Json::Str("test/v1".into())),
+            ("values", Json::arr_f64(&[1.0, 2.5])),
+        ]);
+        write_json_artifact(&path, &doc).unwrap();
+        let raw = std::fs::read_to_string(&path).unwrap();
+        assert!(raw.ends_with('\n'));
+        assert_eq!(parse(raw.trim()).unwrap(), doc);
+        let _ = std::fs::remove_dir_all(std::env::temp_dir().join("ckpt_json_artifact"));
     }
 }

@@ -11,6 +11,7 @@
 //! same results, no deadlock.
 
 use super::engine::{RunResult, SimConfig, Simulator};
+use crate::model::optimize::golden_section;
 use crate::util::pool::ThreadPool;
 use crate::util::stats::{ConfidenceLevel, OnlineStats};
 
@@ -73,8 +74,19 @@ pub fn monte_carlo(
 }
 
 /// Empirically search the period minimising mean makespan or energy by
-/// Monte Carlo over a grid — the simulator's answer to AlgoT/AlgoE, used
-/// to validate the closed-form optima end to end.
+/// Monte Carlo — the simulator's answer to AlgoT/AlgoE, used to
+/// validate the closed-form optima end to end.
+///
+/// Every supplied `grid` period is evaluated (the grid may be
+/// non-uniform, e.g. log-spaced), then the best bracket is refined
+/// with the shared [`crate::model::optimize::golden_section`]
+/// minimiser — the same scan-then-refine shape (and tolerance
+/// convention) as `grid_then_golden`, rather than a bespoke argmin
+/// loop. The Monte-Carlo objective is deterministic per period (fixed
+/// `base_seed`), so the refinement is reproducible; it stays inside
+/// the bracket around the best grid point, with residual Monte-Carlo
+/// noise of the same order as the objective's flatness near its
+/// optimum. `grid` must be sorted ascending.
 pub fn empirical_optimal_period(
     cfg_at: impl Fn(f64) -> SimConfig,
     grid: &[f64],
@@ -84,15 +96,29 @@ pub fn empirical_optimal_period(
     objective_energy: bool,
 ) -> (f64, f64) {
     assert!(!grid.is_empty());
-    let mut best = (f64::NAN, f64::INFINITY);
-    for &t in grid {
+    debug_assert!(grid.windows(2).all(|w| w[0] <= w[1]), "grid must be sorted ascending");
+    let mut eval = |t: f64| {
         let mc = monte_carlo(&cfg_at(t), replicates, base_seed, threads);
-        let v = if objective_energy { mc.energy.mean() } else { mc.makespan.mean() };
+        if objective_energy {
+            mc.energy.mean()
+        } else {
+            mc.makespan.mean()
+        }
+    };
+    let mut best = (0usize, f64::INFINITY);
+    for (i, &t) in grid.iter().enumerate() {
+        let v = eval(t);
         if v < best.1 {
-            best = (t, v);
+            best = (i, v);
         }
     }
-    best
+    let (a, b) = (grid[best.0.saturating_sub(1)], grid[(best.0 + 1).min(grid.len() - 1)]);
+    if b <= a {
+        return (grid[best.0], best.1);
+    }
+    // Refining below a few percent of the bracket buys nothing: the MC
+    // noise floor dominates long before that.
+    golden_section(eval, a, b, (b - a) * 0.05)
 }
 
 #[cfg(test)]
@@ -166,9 +192,10 @@ mod tests {
             8,
             false,
         );
-        // Grid resolution is 20 min; the empirical argmin should land in
-        // the cell containing T_Time_opt (or an adjacent one: the
-        // objective is very flat near the optimum).
+        // Grid resolution is 20 min; the refinement stays inside the
+        // best coarse bracket, which contains T_Time_opt or a
+        // neighbouring cell (the objective is very flat near the
+        // optimum), so the argmin lands within two cells.
         assert!(
             (t_emp - topt).abs() <= 40.0,
             "empirical={t_emp} closed-form={topt}"

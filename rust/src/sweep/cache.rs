@@ -24,13 +24,16 @@ use super::grid::CellOutput;
 /// fields as tagged words (see `GridSpec::cell_key`).
 pub(crate) type CellKey = Vec<u64>;
 
-/// Coarse capacity bound; a full figure suite is ~10⁴ cells.
+/// Default capacity bound; a full figure suite is ~10⁴ cells.
 const MAX_ENTRIES: usize = 1 << 18;
 
 struct CacheState {
     map: HashMap<CellKey, CellOutput>,
     /// Insertion order for FIFO eviction.
     order: std::collections::VecDeque<CellKey>,
+    /// Current capacity bound (defaults to [`MAX_ENTRIES`]; tests and
+    /// benches shrink it via [`set_capacity`] to exercise eviction).
+    capacity: usize,
 }
 
 static CACHE: OnceLock<Mutex<CacheState>> = OnceLock::new();
@@ -39,7 +42,11 @@ static MISSES: AtomicU64 = AtomicU64::new(0);
 
 fn cache() -> &'static Mutex<CacheState> {
     CACHE.get_or_init(|| {
-        Mutex::new(CacheState { map: HashMap::new(), order: std::collections::VecDeque::new() })
+        Mutex::new(CacheState {
+            map: HashMap::new(),
+            order: std::collections::VecDeque::new(),
+            capacity: MAX_ENTRIES,
+        })
     })
 }
 
@@ -54,12 +61,14 @@ pub(crate) fn get(key: &CellKey) -> Option<CellOutput> {
 
 pub(crate) fn put(key: CellKey, value: CellOutput) {
     let mut st = cache().lock().unwrap();
-    if st.map.len() >= MAX_ENTRIES {
+    if st.map.len() >= st.capacity {
         // FIFO eviction of the oldest quarter: amortised, keeps the hot
         // recent working set.
-        for _ in 0..MAX_ENTRIES / 4 {
+        for _ in 0..(st.capacity / 4).max(1) {
             if let Some(old) = st.order.pop_front() {
                 st.map.remove(&old);
+            } else {
+                break;
             }
         }
     }
@@ -89,4 +98,25 @@ pub fn clear() {
     let mut st = cache().lock().unwrap();
     st.map.clear();
     st.order.clear();
+}
+
+/// Override the capacity bound (tests/benches exercising eviction;
+/// process-global — restore [`default_capacity`] afterwards). Shrinking
+/// below the current size evicts FIFO immediately.
+pub fn set_capacity(cap: usize) {
+    let mut st = cache().lock().unwrap();
+    st.capacity = cap.max(1);
+    while st.map.len() > st.capacity {
+        match st.order.pop_front() {
+            Some(old) => {
+                st.map.remove(&old);
+            }
+            None => break,
+        }
+    }
+}
+
+/// The default capacity bound ([`set_capacity`]'s restore value).
+pub fn default_capacity() -> usize {
+    MAX_ENTRIES
 }

@@ -29,6 +29,7 @@
 use crate::model::params::Scenario;
 use crate::model::ratios::{compare, Comparison};
 use crate::model::{e_final, t_final};
+use crate::pareto::frontier::FrontierSummary;
 use crate::sim::runner::{monte_carlo, MonteCarloResult};
 use crate::sim::{FailureProcess, SimConfig};
 use crate::util::pool::ThreadPool;
@@ -49,6 +50,9 @@ pub enum CellJob {
     Compare,
     /// Monte-Carlo estimate at `period` over `replicates` sample paths.
     Sim { period: f64, replicates: usize, failures_during_recovery: bool },
+    /// Time–energy Pareto frontier sampled at `points` periods between
+    /// the two optima ([`crate::pareto`]).
+    Frontier { points: usize },
 }
 
 /// One grid cell.
@@ -107,6 +111,8 @@ pub enum CellOutput {
     /// collapse to `T = C`; figures report the cell as clamped).
     Compare(Option<Comparison>),
     Sim(SimSummary),
+    /// `None` under the same out-of-domain clamp as `Compare`.
+    Frontier(Option<FrontierSummary>),
 }
 
 impl CellOutput {
@@ -122,6 +128,14 @@ impl CellOutput {
     pub fn sim(&self) -> Option<&SimSummary> {
         match self {
             CellOutput::Sim(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The frontier, when this was a [`CellJob::Frontier`] cell.
+    pub fn frontier(&self) -> Option<&FrontierSummary> {
+        match self {
+            CellOutput::Frontier(Some(f)) => Some(f),
             _ => None,
         }
     }
@@ -199,6 +213,12 @@ impl GridSpec {
         })
     }
 
+    /// Append a Pareto-frontier cell (`points` samples between the
+    /// optima).
+    pub fn push_frontier(&mut self, scenario: Scenario, points: usize) -> &mut Self {
+        self.push(Cell { scenario, failure: None, job: CellJob::Frontier { points } })
+    }
+
     /// Comparison grid over a scenario family (the figures' shape).
     pub fn compare_all(scenarios: impl IntoIterator<Item = Scenario>, base_seed: u64) -> Self {
         let mut spec = GridSpec::new(base_seed);
@@ -268,6 +288,10 @@ impl GridSpec {
                 k.push(u64::from(failures_during_recovery));
                 k.push(self.base_seed);
             }
+            CellJob::Frontier { points } => {
+                k.push(13);
+                k.push(points as u64);
+            }
         }
         k
     }
@@ -332,6 +356,9 @@ fn eval_cell(cell: &Cell, seed: u64) -> CellOutput {
             // a single Sim cell parallelises over replicates.
             let mc = monte_carlo(&cfg, replicates, seed, replicates);
             CellOutput::Sim(SimSummary::from_mc(&mc))
+        }
+        CellJob::Frontier { points } => {
+            CellOutput::Frontier(FrontierSummary::compute(&cell.scenario, points))
         }
     }
 }
@@ -483,10 +510,45 @@ mod tests {
         let s = scenario();
         let t = t_time_opt(&s).unwrap();
         let mut spec = GridSpec::new(5);
-        spec.push_model(s, t).push_compare(s).push_sim(s, t, 16);
+        spec.push_model(s, t).push_compare(s).push_sim(s, t, 16).push_frontier(s, 9);
         let results = spec.without_cache().evaluate();
         assert!(matches!(results[0].output, CellOutput::Model { .. }));
         assert!(matches!(results[1].output, CellOutput::Compare(Some(_))));
         assert!(matches!(results[2].output, CellOutput::Sim(_)));
+        assert!(matches!(results[3].output, CellOutput::Frontier(Some(_))));
+    }
+
+    #[test]
+    fn frontier_cells_match_direct_computation_and_memoise() {
+        let s = scenario();
+        let mut spec = GridSpec::new(1);
+        spec.push_frontier(s, 17);
+        let direct = FrontierSummary::compute(&s, 17).unwrap();
+        let first = spec.evaluate();
+        assert_eq!(first[0].output.frontier().unwrap(), &direct);
+        // Pure model cell: no seed derived.
+        assert_eq!(first[0].seed, 0);
+        let (h_before, _) = cache::stats();
+        let second = spec.evaluate();
+        let (h_after, _) = cache::stats();
+        assert!(h_after - h_before >= 1, "expected a frontier cache hit");
+        assert_eq!(first, second);
+        // A different sampling density is a different cell.
+        let mut other = GridSpec::new(1);
+        other.push_frontier(s, 33);
+        assert_ne!(spec.cell_key(&spec.cells()[0]), other.cell_key(&other.cells()[0]));
+    }
+
+    #[test]
+    fn frontier_out_of_domain_is_none() {
+        // Same breakdown scenario as the Compare clamp test.
+        let ckpt = crate::model::CheckpointParams::new(10.0, 10.0, 1.0, 0.5).unwrap();
+        let power = crate::model::PowerParams::from_rho(5.5, 1.0, 0.0).unwrap();
+        let s = Scenario::new(ckpt, power, 17.0, 1000.0).unwrap();
+        let mut spec = GridSpec::new(1);
+        spec.push_frontier(s, 9);
+        let out = spec.without_cache().evaluate();
+        assert!(matches!(out[0].output, CellOutput::Frontier(None)));
+        assert_eq!(out[0].output.frontier(), None);
     }
 }

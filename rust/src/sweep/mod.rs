@@ -1,8 +1,9 @@
 //! Batched scenario-grid engine.
 //!
 //! Every consumer of the model/simulator — the figure harness
-//! ([`crate::figures`]), the ablations, and the CLI `sweep` / `simulate`
-//! / `figures` subcommands — needs the same thing: "evaluate this
+//! ([`crate::figures`]), the ablations, the Pareto-frontier subsystem
+//! ([`crate::pareto`]), and the CLI `sweep` / `simulate` / `figures` /
+//! `pareto` subcommands — needs the same thing: "evaluate this
 //! (scenario × period × failure-process) grid". This module turns that
 //! into one declarative call:
 //!

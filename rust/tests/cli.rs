@@ -20,7 +20,7 @@ fn run_ok(args: &[&str]) -> String {
 #[test]
 fn help_lists_subcommands() {
     let out = run_ok(&["--help"]);
-    for cmd in ["optimize", "sweep", "simulate", "figures", "train", "info"] {
+    for cmd in ["optimize", "sweep", "pareto", "simulate", "figures", "train", "info"] {
         assert!(out.contains(cmd), "missing {cmd} in: {out}");
     }
 }
@@ -83,10 +83,76 @@ fn figures_generates_csvs() {
     let _ = std::fs::remove_dir_all(&dir);
     let out = run_ok(&["figures", "--points", "12", "--out-dir", dir.to_str().unwrap()]);
     assert!(out.contains("peak energy gain"));
-    for f in ["fig1.csv", "fig2.csv", "fig3a.csv", "fig3b.csv"] {
+    assert!(out.contains("frontier knee"), "{out}");
+    for f in ["fig1.csv", "fig2.csv", "fig3a.csv", "fig3b.csv", "frontier.csv", "frontier_knees.csv"]
+    {
         assert!(dir.join(f).exists(), "missing {f}");
     }
     let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn pareto_prints_frontier_and_knees() {
+    let out = run_ok(&["pareto", "--points", "32"]);
+    assert!(out.contains("hypervolume"), "{out}");
+    assert!(out.contains("knee (max dist to chord)"), "{out}");
+    assert!(out.contains("energy_gain_pct"), "{out}");
+}
+
+#[test]
+fn pareto_eps_constraints_report_solutions() {
+    let out = run_ok(&["pareto", "--points", "24", "--eps-time", "5", "--eps-energy", "5"]);
+    assert!(out.contains("eps-time 5%"), "{out}");
+    assert!(out.contains("eps-energy 5%"), "{out}");
+    assert!(out.contains("binding") || out.contains("slack"), "{out}");
+    // Negative budgets are rejected.
+    let bad = bin().args(["pareto", "--eps-time", "-1"]).output().unwrap();
+    assert!(!bad.status.success());
+}
+
+#[test]
+fn pareto_writes_json_artifact() {
+    let path = std::env::temp_dir().join("ckpt_cli_pareto.json");
+    let _ = std::fs::remove_file(&path);
+    run_ok(&[
+        "pareto",
+        "--points",
+        "16",
+        "--eps-time",
+        "10",
+        "--out",
+        path.to_str().unwrap(),
+    ]);
+    let raw = std::fs::read_to_string(&path).unwrap();
+    assert!(raw.contains("\"schema\": \"ckpt-period/pareto-frontier/v1\""), "{raw}");
+    assert!(raw.contains("\"t_time_opt_min\""), "{raw}");
+    assert!(raw.contains("\"min_energy_given_time\""), "{raw}");
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn pareto_simulate_reports_agreement() {
+    let out = run_ok(&[
+        "pareto",
+        "--points",
+        "16",
+        "--simulate",
+        "--replicates",
+        "40",
+        "--sim-points",
+        "3",
+    ]);
+    assert!(out.contains("simulated frontier"), "{out}");
+    assert!(out.contains("confidence bands"), "{out}");
+}
+
+#[test]
+fn duplicate_value_flag_is_a_clear_error() {
+    let out = bin().args(["optimize", "--mu", "300", "--mu", "120"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("more than once"), "{err}");
+    assert!(err.contains("--mu"), "{err}");
 }
 
 #[test]

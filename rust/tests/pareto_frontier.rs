@@ -1,0 +1,179 @@
+//! Acceptance tests of the Pareto-frontier subsystem (ISSUE 2):
+//!
+//! (a) frontier endpoints coincide with `T_Time_opt` / `T_Energy_opt`
+//!     to 1e-6 relative;
+//! (b) no returned point is dominated;
+//! (c) ε-constraint solutions lie on the frontier;
+//! (d) the simulated frontier agrees with the analytic one within the
+//!     (truncation-widened) 95% CIs for every trade-off preset;
+//! (e) frontier results are byte-identical across thread counts.
+
+use ckpt_period::config::presets::tradeoff_presets;
+use ckpt_period::model::energy::{e_final, t_energy_opt};
+use ckpt_period::model::time::{t_final, t_time_opt};
+use ckpt_period::pareto::{
+    family_frontiers, min_energy_with_time_overhead, min_time_with_energy_overhead, validate,
+    Frontier, FrontierSummary, KneeMethod,
+};
+use ckpt_period::sim::{monte_carlo, SimConfig};
+use ckpt_period::util::stats::rel_err;
+
+const POINTS: usize = 33;
+
+#[test]
+fn a_endpoints_coincide_with_the_optimal_periods() {
+    for (label, s) in tradeoff_presets() {
+        let f = Frontier::compute(&s, POINTS).expect(label);
+        let tt = t_time_opt(&s).unwrap();
+        let te = t_energy_opt(&s).unwrap();
+        let lo = f.time_opt_point();
+        let hi = f.energy_opt_point();
+        assert!(
+            rel_err(lo.period, tt) < 1e-6,
+            "{label}: time endpoint {} vs T_Time_opt {tt}",
+            lo.period
+        );
+        assert!(
+            rel_err(hi.period, te) < 1e-6,
+            "{label}: energy endpoint {} vs T_Energy_opt {te}",
+            hi.period
+        );
+        // And the objective values at the endpoints are the optima's.
+        assert!(rel_err(lo.time, t_final(&s, tt)) < 1e-6, "{label}");
+        assert!(rel_err(hi.energy, e_final(&s, te)) < 1e-6, "{label}");
+    }
+}
+
+#[test]
+fn b_no_returned_point_is_dominated() {
+    for (label, s) in tradeoff_presets() {
+        let f = Frontier::compute(&s, 65).expect(label);
+        let pts = f.points();
+        for (i, p) in pts.iter().enumerate() {
+            for (j, q) in pts.iter().enumerate() {
+                assert!(
+                    i == j || !p.dominates(q),
+                    "{label}: point {i} {p:?} dominates point {j} {q:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn c_eps_constraint_solutions_lie_on_the_frontier() {
+    for (label, s) in tradeoff_presets() {
+        let f = Frontier::compute(&s, 129).expect(label);
+        let (lo_p, hi_p) = (f.t_time_opt.min(f.t_energy_opt), f.t_time_opt.max(f.t_energy_opt));
+        for eps in [0.5, 2.0, 5.0, 20.0] {
+            let sols = [
+                min_energy_with_time_overhead(&s, eps).unwrap(),
+                min_time_with_energy_overhead(&s, eps).unwrap(),
+            ];
+            for sol in sols {
+                // On the frontier's period segment...
+                assert!(
+                    (lo_p - 1e-9..=hi_p + 1e-9).contains(&sol.period),
+                    "{label} eps={eps}%: period {} outside [{lo_p}, {hi_p}]",
+                    sol.period
+                );
+                // ...consistent with the closed forms...
+                assert!(rel_err(sol.time, t_final(&s, sol.period)) < 1e-12, "{label}");
+                assert!(rel_err(sol.energy, e_final(&s, sol.period)) < 1e-12, "{label}");
+                // ...and not dominated by any sampled frontier point.
+                for q in f.points() {
+                    assert!(
+                        !(q.time < sol.time * (1.0 - 1e-9)
+                            && q.energy < sol.energy * (1.0 - 1e-9)),
+                        "{label} eps={eps}%: {q:?} dominates eps-solution {sol:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn d_simulated_frontier_agrees_for_every_tradeoff_preset() {
+    for (label, s) in tradeoff_presets() {
+        let f = Frontier::compute(&s, POINTS).expect(label);
+        let v = validate(&f, 5, 160, 2013);
+        for p in &v.points {
+            assert!(
+                p.time_agrees,
+                "{label}: makespan disagrees at T={:.2} (model {:.1} vs sim {:.1} ± {:.1})",
+                p.point.period, p.point.time, p.sim.makespan_mean, p.sim.makespan_ci95_half
+            );
+            assert!(
+                p.energy_agrees,
+                "{label}: energy disagrees at T={:.2} (model {:.1} vs sim {:.1} ± {:.1})",
+                p.point.period, p.point.energy, p.sim.energy_mean, p.sim.energy_ci95_half
+            );
+        }
+        assert!(v.all_agree(), "{label}");
+    }
+}
+
+#[test]
+fn e_frontier_results_identical_across_thread_counts() {
+    // The analytic frontier is pure model evaluation fanned out on the
+    // pool; the validated frontier seeds every sim cell from the cell's
+    // own parameter bits. Both are therefore reproducible bit-for-bit
+    // by a fully serial computation — which is exactly what a
+    // one-thread pool would run, so agreement here is thread-count
+    // invariance (`util::pool` writes results by index; see also
+    // `sim_vs_model::monte_carlo_and_grid_engine_identical_across_
+    // thread_counts`).
+    let presets: Vec<(String, _)> =
+        tradeoff_presets().into_iter().map(|(l, s)| (l.to_string(), s)).collect();
+
+    // Pool-evaluated family vs direct inline computation per scenario.
+    let family = family_frontiers(presets.clone(), POINTS, 7);
+    for (f, (label, s)) in family.iter().zip(&presets) {
+        let direct = FrontierSummary::compute(s, POINTS).expect("in domain");
+        let sum = f.summary.as_ref().expect("in domain");
+        assert_eq!(sum, &direct, "{label}");
+        for (a, b) in sum.points.iter().zip(&direct.points) {
+            assert_eq!(a.time.to_bits(), b.time.to_bits(), "{label}");
+            assert_eq!(a.energy.to_bits(), b.energy.to_bits(), "{label}");
+        }
+    }
+    // Re-evaluating the family is bit-stable (memoised or not).
+    assert_eq!(family, family_frontiers(presets.clone(), POINTS, 7));
+
+    // Simulated frontier: every pool-scheduled estimate equals serial
+    // (threads = 1) Monte Carlo at the derived seed.
+    let (label, s) = &presets[0];
+    let f = Frontier::compute(s, POINTS).unwrap();
+    let v = validate(&f, 3, 64, 99);
+    for p in &v.points {
+        let mut cfg = SimConfig::paper(*s, p.point.period);
+        cfg.failures_during_recovery = false;
+        let serial = monte_carlo(&cfg, 64, p.seed, 1);
+        assert_eq!(
+            p.sim.makespan_mean.to_bits(),
+            serial.makespan.mean().to_bits(),
+            "{label}"
+        );
+        assert_eq!(p.sim.energy_mean.to_bits(), serial.energy.mean().to_bits(), "{label}");
+    }
+    assert_eq!(v, validate(&f, 3, 64, 99));
+}
+
+#[test]
+fn knees_exist_and_sit_strictly_inside_every_preset_frontier() {
+    for (label, s) in tradeoff_presets() {
+        let f = Frontier::compute(&s, 65).expect(label);
+        for method in [KneeMethod::MaxDistanceToChord, KneeMethod::MaxCurvature] {
+            let k = f.knee(method).unwrap_or_else(|| panic!("{label}: no {method:?} knee"));
+            assert!(k.index > 0 && k.index < f.len() - 1, "{label} {method:?}");
+            assert!(k.score > 0.0, "{label} {method:?}");
+            let p = k.point;
+            assert!(p.period > f.t_time_opt.min(f.t_energy_opt), "{label}");
+            assert!(p.period < f.t_time_opt.max(f.t_energy_opt), "{label}");
+        }
+        // Hypervolume sane for every preset.
+        let hv = f.hypervolume();
+        assert!(hv > 0.0 && hv < 1.0, "{label}: hv={hv}");
+    }
+}

@@ -1,0 +1,142 @@
+//! `sweep::cache` eviction and counter behaviour under concurrent hits
+//! from the pool — the paths the unit tests only exercise
+//! single-threaded.
+//!
+//! The cache is process-global, so these tests serialise on a local
+//! mutex and restore the default capacity before returning. They live
+//! in their own integration binary so the capacity games cannot perturb
+//! the unit tests' hit-count assertions.
+
+use std::sync::Mutex;
+
+use ckpt_period::config::presets::fig1_scenario;
+use ckpt_period::model::{e_final, t_final};
+use ckpt_period::sweep::{cache, CellOutput, GridSpec};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Run `f` with the cache cleared and capacity `cap`, restoring the
+/// default capacity afterwards (even on panic the next test's guard
+/// re-clears).
+fn with_capacity<T>(cap: usize, f: impl FnOnce() -> T) -> T {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    cache::clear();
+    cache::set_capacity(cap);
+    let out = f();
+    cache::set_capacity(cache::default_capacity());
+    cache::clear();
+    out
+}
+
+fn periods(offset: f64, n: usize) -> Vec<f64> {
+    // Distinct period bit patterns per caller => distinct cache keys.
+    (0..n).map(|i| 30.0 + i as f64 * 0.5 + offset).collect()
+}
+
+#[test]
+fn concurrent_fills_respect_capacity_and_stay_correct() {
+    let s = fig1_scenario(300.0, 5.5);
+    with_capacity(64, || {
+        std::thread::scope(|scope| {
+            let mut joins = Vec::new();
+            for t in 0..4u32 {
+                joins.push(scope.spawn(move || {
+                    // 4 × 100 distinct model cells against capacity 64:
+                    // eviction churns while the pool evaluates.
+                    let ps = periods(t as f64 * 1e-3, 100);
+                    let results = GridSpec::model_sweep(s, &ps, 1).evaluate();
+                    for (&p, r) in ps.iter().zip(&results) {
+                        match r.output {
+                            CellOutput::Model { t_final: tf, e_final: ef } => {
+                                assert_eq!(tf.to_bits(), t_final(&s, p).to_bits());
+                                assert_eq!(ef.to_bits(), e_final(&s, p).to_bits());
+                            }
+                            ref other => panic!("unexpected output {other:?}"),
+                        }
+                    }
+                }));
+            }
+            for j in joins {
+                j.join().unwrap();
+            }
+        });
+        assert!(
+            cache::len() <= 64,
+            "eviction failed to bound the cache: {} entries",
+            cache::len()
+        );
+        assert!(cache::len() > 0, "everything was evicted");
+    });
+}
+
+#[test]
+fn counters_account_for_every_concurrent_lookup() {
+    let s = fig1_scenario(120.0, 7.0);
+    with_capacity(4096, || {
+        let ps = periods(0.0, 50);
+        let spec = GridSpec::model_sweep(s, &ps, 1);
+
+        cache::reset_stats();
+        let cold = spec.evaluate();
+        let (h_cold, m_cold) = cache::stats();
+        // A cold fill of 50 distinct cells: one miss each, no hit.
+        assert_eq!(m_cold, 50, "cold misses {m_cold}");
+        assert_eq!(h_cold, 0, "cold hits {h_cold}");
+
+        cache::reset_stats();
+        std::thread::scope(|scope| {
+            let spec = &spec;
+            let cold = &cold;
+            let mut joins = Vec::new();
+            for _ in 0..4 {
+                joins.push(scope.spawn(move || {
+                    let warm = spec.evaluate();
+                    assert_eq!(&warm, cold, "cache hit changed a result");
+                }));
+            }
+            for j in joins {
+                j.join().unwrap();
+            }
+        });
+        let (h_warm, m_warm) = cache::stats();
+        // 4 concurrent warm evaluations of the same 50 cells: every
+        // lookup hits; nothing recomputes.
+        assert_eq!(h_warm, 200, "warm hits {h_warm}");
+        assert_eq!(m_warm, 0, "warm misses {m_warm}");
+    });
+}
+
+#[test]
+fn evicted_cells_recompute_to_identical_outputs() {
+    let s = fig1_scenario(300.0, 2.0);
+    with_capacity(32, || {
+        let early = periods(0.0, 20);
+        let spec = GridSpec::model_sweep(s, &early, 1);
+        let first = spec.evaluate();
+
+        // Push enough younger cells through to evict the early ones
+        // (capacity 32, FIFO). Disjoint period range: all inserts fresh.
+        let filler = periods(100.0, 200);
+        let _ = GridSpec::model_sweep(s, &filler, 1).evaluate();
+        assert!(cache::len() <= 32);
+
+        cache::reset_stats();
+        let second = spec.evaluate();
+        let (_, m) = cache::stats();
+        assert!(m >= 1, "expected at least one recomputation after eviction");
+        // Evaluation is pure: recomputed outputs are bit-identical.
+        assert_eq!(first, second);
+    });
+}
+
+#[test]
+fn shrinking_capacity_evicts_immediately() {
+    let s = fig1_scenario(300.0, 5.5);
+    with_capacity(4096, || {
+        let ps = periods(3.0, 100);
+        let _ = GridSpec::model_sweep(s, &ps, 1).evaluate();
+        assert!(cache::len() >= 100);
+        cache::set_capacity(10);
+        assert!(cache::len() <= 10, "shrink left {} entries", cache::len());
+    });
+}
