@@ -3,8 +3,10 @@
 //! The paper assumes `C`, `R` and `μ` are known a priori. In production
 //! none of them is: checkpoint cost drifts with model size and filesystem
 //! load, and the platform MTBF is only revealed by observed failures.
-//! [`AdaptiveController`] estimates all three online and recomputes the
-//! policy period whenever the estimates move materially:
+//! [`AdaptiveController`] estimates all three online, recomputes the
+//! policy period as the estimates move, and applies a *period-space*
+//! hysteresis band so re-estimation noise cannot thrash the checkpoint
+//! interval:
 //!
 //! * `C`, `R` — exponentially weighted moving averages of measured
 //!   save/restore durations (EWMA, α = 0.3: reactive but not jumpy);
@@ -27,8 +29,14 @@ pub struct Ewma {
 }
 
 impl Ewma {
+    /// `alpha` must lie in `(0, 1]`: `alpha = 0` would silently freeze
+    /// the estimate at its first sample forever (every later `push`
+    /// becomes a no-op), which is never what a drift tracker wants.
     pub fn new(alpha: f64) -> Self {
-        assert!((0.0..=1.0).contains(&alpha));
+        assert!(
+            alpha > 0.0 && alpha <= 1.0,
+            "EWMA alpha must be in (0, 1], got {alpha}"
+        );
         Ewma { alpha, value: None }
     }
 
@@ -61,7 +69,8 @@ pub struct AdaptiveController {
     failures: u64,
     /// Current period (recomputed lazily).
     cached_period: Option<f64>,
-    /// Relative estimate movement that invalidates the cached period.
+    /// Period-space hysteresis band: a freshly computed period within
+    /// this relative distance of the current one does not replace it.
     hysteresis: f64,
     cached_inputs: (f64, f64, f64),
 }
@@ -90,6 +99,16 @@ impl AdaptiveController {
             hysteresis: 0.05,
             cached_inputs: (0.0, 0.0, 0.0),
         }
+    }
+
+    /// Override the period-space hysteresis band (default 5%).
+    pub fn with_hysteresis(mut self, hysteresis: f64) -> Self {
+        assert!(
+            hysteresis >= 0.0 && hysteresis.is_finite(),
+            "hysteresis must be finite and >= 0, got {hysteresis}"
+        );
+        self.hysteresis = hysteresis;
+        self
     }
 
     /// Record a measured checkpoint write duration.
@@ -146,20 +165,28 @@ impl AdaptiveController {
         Scenario::new(ckpt, self.power, self.mu_estimate(), self.t_base_hint).ok()
     }
 
-    /// Current period. Recomputed only when an input estimate moved by
-    /// more than the hysteresis band — the leader can call this every
-    /// iteration without thrashing the period.
+    /// Current period, with hysteresis **in period space**: the policy
+    /// period is recomputed whenever an estimate moved, but it only
+    /// *replaces* the period in force when it differs by more than the
+    /// hysteresis band. An earlier revision banded the estimates
+    /// instead, which gets the geometry backwards — near-flat regions
+    /// of the objective let large period jumps through while steep
+    /// regions suppressed needed updates. The leader can call this
+    /// every iteration without thrashing the period; unchanged
+    /// estimates short-circuit before any model evaluation.
     pub fn period(&mut self) -> Option<f64> {
         let inputs = (self.c_estimate(), self.r_estimate(), self.mu_estimate());
-        let moved = |a: f64, b: f64| (a - b).abs() > self.hysteresis * b.abs().max(1e-12);
         if let Some(p) = self.cached_period {
-            let (c0, r0, m0) = self.cached_inputs;
-            if !moved(inputs.0, c0) && !moved(inputs.1, r0) && !moved(inputs.2, m0) {
+            if inputs == self.cached_inputs {
                 return Some(p);
             }
         }
         let s = self.scenario()?;
-        let p = self.policy.period(&s).ok()?;
+        let fresh = self.policy.period(&s).ok()?;
+        let p = match self.cached_period {
+            Some(current) if (fresh - current).abs() <= self.hysteresis * current => current,
+            _ => fresh,
+        };
         self.cached_period = Some(p);
         self.cached_inputs = inputs;
         Some(p)
@@ -228,6 +255,86 @@ mod tests {
         c.observe_checkpoint(0.101);
         let p2 = c.period().unwrap();
         assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn hysteresis_band_lives_in_period_space() {
+        // Drive the C estimate ~8% up — past the old 5% *estimate* band
+        // — but since the period scales ~sqrt(C), the fresh period moves
+        // only ~4%, inside the 5% *period* band: the period in force
+        // must not change.
+        let mut c = controller();
+        c.observe_checkpoint(0.1);
+        let p1 = c.period().unwrap();
+        for _ in 0..60 {
+            c.observe_checkpoint(0.108);
+        }
+        assert!((c.c_estimate() - 0.108).abs() < 1e-6, "EWMA converged");
+        let p2 = c.period().unwrap();
+        assert_eq!(p1, p2, "4% period move crossed the 5% band");
+        // A genuinely large move still goes through (covered again by
+        // `period_tracks_c_changes`).
+        for _ in 0..60 {
+            c.observe_checkpoint(0.2);
+        }
+        assert!(c.period().unwrap() > p1);
+    }
+
+    #[test]
+    fn zero_hysteresis_tracks_every_recompute() {
+        let mut c = controller().with_hysteresis(0.0);
+        c.observe_checkpoint(0.1);
+        let p1 = c.period().unwrap();
+        for _ in 0..60 {
+            c.observe_checkpoint(0.101);
+        }
+        let p2 = c.period().unwrap();
+        assert!(p2 > p1, "with no band the 1% C move must shift the period");
+    }
+
+    #[test]
+    fn ewma_accepts_the_full_half_open_interval() {
+        let mut e = Ewma::new(1.0);
+        e.push(3.0);
+        e.push(5.0);
+        assert_eq!(e.get(), Some(5.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "EWMA alpha")]
+    fn ewma_rejects_alpha_zero() {
+        // Regression: alpha = 0 froze C/R estimates at their first
+        // sample forever.
+        let _ = Ewma::new(0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "EWMA alpha")]
+    fn ewma_rejects_alpha_above_one() {
+        let _ = Ewma::new(1.5);
+    }
+
+    #[test]
+    fn knee_policy_period_sits_between_the_endpoint_policies() {
+        let mk = |policy| {
+            let mut c = AdaptiveController::new(
+                policy,
+                PowerParams::new(10.0, 10.0, 100.0, 0.0).unwrap(),
+                0.5,
+                0.1,
+                30.0,
+                1000.0,
+            );
+            c.observe_checkpoint(0.1);
+            c.observe_restore(0.1);
+            c.period().unwrap()
+        };
+        let t = mk(PeriodPolicy::AlgoT);
+        let e = mk(PeriodPolicy::AlgoE);
+        let k = mk(PeriodPolicy::Knee {
+            method: crate::pareto::KneeMethod::MaxDistanceToChord,
+        });
+        assert!(t < k && k < e, "knee {k} outside ({t}, {e})");
     }
 
     #[test]

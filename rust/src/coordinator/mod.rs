@@ -23,7 +23,8 @@
 //! * [`checkpoint`] — durable checkpoint store (CRC-protected binary
 //!   format, atomic rename, async writer thread).
 //! * [`policy`] — period policies: AlgoT (Eq. 1), AlgoE (quadratic),
-//!   Young, Daly, fixed.
+//!   Young, Daly, fixed, the Pareto knee, and the ε-constraint budgets
+//!   (`eps-time` / `eps-energy`, via [`crate::pareto`]).
 //! * [`injector`] — reproducible failure schedules in wall-clock seconds.
 //! * [`leader`] — the control loop.
 //! * [`report`] — structured run results (+ JSON).

@@ -3,10 +3,21 @@
 //! The coordinator treats the period as a pluggable policy so AlgoT and
 //! AlgoE (the paper's two strategies) can be compared on identical runs,
 //! with Young/Daly as classical baselines and `Fixed` for ablations.
+//! The frontier-aware policies close the loop with [`crate::pareto`]:
+//! `Knee` checkpoints at the Pareto knee (the budget-free "most of the
+//! energy gain for part of the time price" operating point), while
+//! `EnergyBudget`/`TimeBudget` solve the ε-constraint problems of
+//! Aupy et al. (arXiv:1302.3720) — an operator-supplied overhead budget
+//! instead of either endpoint. All three recompute the frontier from
+//! whatever scenario they are handed, so the adaptive controller can
+//! track a drifting `(C, R, μ)` through them (the heavy lifting is
+//! memoised in [`crate::pareto::online`]).
 
 use crate::model::energy::t_energy_opt;
 use crate::model::params::{ModelError, Scenario};
 use crate::model::time::{daly, t_time_opt, young};
+use crate::pareto::online;
+use crate::pareto::KneeMethod;
 
 /// Which period to checkpoint with.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -21,9 +32,25 @@ pub enum PeriodPolicy {
     Daly,
     /// A fixed period (same units as the scenario).
     Fixed(f64),
+    /// The knee of the time–energy Pareto frontier under the given
+    /// detector — between AlgoT and AlgoE wherever the trade-off is
+    /// non-degenerate.
+    Knee { method: KneeMethod },
+    /// Minimise energy subject to a time overhead of at most
+    /// `max_time_overhead` percent of AlgoT's makespan (ε-constraint).
+    EnergyBudget { max_time_overhead: f64 },
+    /// Minimise time subject to an energy overhead of at most
+    /// `max_energy_overhead` percent of AlgoE's consumption
+    /// (the transposed ε-constraint).
+    TimeBudget { max_energy_overhead: f64 },
 }
 
 impl PeriodPolicy {
+    /// The accepted `--policy` spellings, for CLI help and error
+    /// messages.
+    pub const PARSE_HELP: &'static str =
+        "algo-t|algo-e|young|daly|fixed:<period>|knee|knee:curvature|eps-time:<pct>|eps-energy:<pct>";
+
     pub fn name(&self) -> &'static str {
         match self {
             PeriodPolicy::AlgoT => "algo-t",
@@ -31,20 +58,47 @@ impl PeriodPolicy {
             PeriodPolicy::Young => "young",
             PeriodPolicy::Daly => "daly",
             PeriodPolicy::Fixed(_) => "fixed",
+            PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord } => "knee",
+            PeriodPolicy::Knee { method: KneeMethod::MaxCurvature } => "knee-curvature",
+            PeriodPolicy::EnergyBudget { .. } => "eps-time",
+            PeriodPolicy::TimeBudget { .. } => "eps-energy",
         }
     }
 
-    /// Parse a CLI-style name (`fixed:<value>` for fixed periods).
+    /// Parse a CLI-style name (`fixed:<value>` for fixed periods,
+    /// `knee[:curvature]` for the frontier knee, `eps-time:<pct>` /
+    /// `eps-energy:<pct>` for the budgeted trade-offs). Numeric
+    /// parameters must be finite — and positive for `fixed:`,
+    /// non-negative for the budgets — or parsing fails.
     pub fn parse(s: &str) -> Option<PeriodPolicy> {
         match s {
             "algo-t" | "algot" | "time" => Some(PeriodPolicy::AlgoT),
             "algo-e" | "algoe" | "energy" => Some(PeriodPolicy::AlgoE),
             "young" => Some(PeriodPolicy::Young),
             "daly" => Some(PeriodPolicy::Daly),
-            other => other
-                .strip_prefix("fixed:")
-                .and_then(|v| v.parse::<f64>().ok())
-                .map(PeriodPolicy::Fixed),
+            "knee" | "knee:chord" => {
+                Some(PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord })
+            }
+            "knee:curvature" => Some(PeriodPolicy::Knee { method: KneeMethod::MaxCurvature }),
+            other => {
+                if let Some(v) = other.strip_prefix("fixed:") {
+                    // `parse::<f64>` happily accepts "NaN", "inf" and
+                    // negatives; none of them is a checkpointing period.
+                    let t = v.parse::<f64>().ok()?;
+                    return (t.is_finite() && t > 0.0).then_some(PeriodPolicy::Fixed(t));
+                }
+                if let Some(v) = other.strip_prefix("eps-time:") {
+                    let x = v.parse::<f64>().ok()?;
+                    return (x.is_finite() && x >= 0.0)
+                        .then_some(PeriodPolicy::EnergyBudget { max_time_overhead: x });
+                }
+                if let Some(v) = other.strip_prefix("eps-energy:") {
+                    let x = v.parse::<f64>().ok()?;
+                    return (x.is_finite() && x >= 0.0)
+                        .then_some(PeriodPolicy::TimeBudget { max_energy_overhead: x });
+                }
+                None
+            }
         }
     }
 
@@ -57,6 +111,13 @@ impl PeriodPolicy {
             PeriodPolicy::Young => s.clamp_period(young(s)),
             PeriodPolicy::Daly => s.clamp_period(daly(s)),
             PeriodPolicy::Fixed(t) => s.clamp_period(*t),
+            PeriodPolicy::Knee { method } => online::knee_period(s, *method),
+            PeriodPolicy::EnergyBudget { max_time_overhead } => {
+                online::min_energy_period(s, *max_time_overhead)
+            }
+            PeriodPolicy::TimeBudget { max_energy_overhead } => {
+                online::min_time_period(s, *max_energy_overhead)
+            }
         }
     }
 }
@@ -65,6 +126,7 @@ impl PeriodPolicy {
 mod tests {
     use super::*;
     use crate::model::params::{CheckpointParams, PowerParams};
+    use crate::pareto::{min_energy_with_time_overhead, min_time_with_energy_overhead};
 
     fn scenario() -> Scenario {
         let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, 0.5).unwrap();
@@ -80,11 +142,29 @@ mod tests {
             ("young", PeriodPolicy::Young),
             ("daly", PeriodPolicy::Daly),
             ("fixed:42.5", PeriodPolicy::Fixed(42.5)),
+            ("knee", PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord }),
+            ("knee:chord", PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord }),
+            ("knee:curvature", PeriodPolicy::Knee { method: KneeMethod::MaxCurvature }),
+            ("eps-time:5", PeriodPolicy::EnergyBudget { max_time_overhead: 5.0 }),
+            ("eps-energy:2.5", PeriodPolicy::TimeBudget { max_energy_overhead: 2.5 }),
         ] {
             assert_eq!(PeriodPolicy::parse(s), Some(p));
         }
         assert_eq!(PeriodPolicy::parse("nope"), None);
         assert_eq!(PeriodPolicy::parse("fixed:abc"), None);
+    }
+
+    #[test]
+    fn parse_rejects_non_finite_and_non_positive_fixed_periods() {
+        for bad in ["fixed:NaN", "fixed:nan", "fixed:inf", "fixed:-inf", "fixed:-5", "fixed:0"] {
+            assert_eq!(PeriodPolicy::parse(bad), None, "{bad}");
+        }
+        // Budgets: zero is a valid (tight) budget, negatives and
+        // non-finite values are not.
+        assert!(PeriodPolicy::parse("eps-time:0").is_some());
+        for bad in ["eps-time:-1", "eps-time:NaN", "eps-energy:inf", "eps-energy:-0.5"] {
+            assert_eq!(PeriodPolicy::parse(bad), None, "{bad}");
+        }
     }
 
     #[test]
@@ -104,6 +184,30 @@ mod tests {
     }
 
     #[test]
+    fn knee_period_sits_between_the_endpoints() {
+        let s = scenario();
+        let t = PeriodPolicy::AlgoT.period(&s).unwrap();
+        let e = PeriodPolicy::AlgoE.period(&s).unwrap();
+        for method in [KneeMethod::MaxDistanceToChord, KneeMethod::MaxCurvature] {
+            let k = PeriodPolicy::Knee { method }.period(&s).unwrap();
+            assert!(k > t && k < e, "{method:?}: {k} outside ({t}, {e})");
+        }
+    }
+
+    #[test]
+    fn budget_policies_match_the_epsilon_solves() {
+        let s = scenario();
+        let sol = min_energy_with_time_overhead(&s, 5.0).unwrap();
+        let p = PeriodPolicy::EnergyBudget { max_time_overhead: 5.0 }.period(&s).unwrap();
+        assert_eq!(p.to_bits(), sol.period.to_bits());
+        let sol = min_time_with_energy_overhead(&s, 5.0).unwrap();
+        let p = PeriodPolicy::TimeBudget { max_energy_overhead: 5.0 }.period(&s).unwrap();
+        assert_eq!(p.to_bits(), sol.period.to_bits());
+        // Invalid budgets surface as errors, not panics.
+        assert!(PeriodPolicy::EnergyBudget { max_time_overhead: -1.0 }.period(&s).is_err());
+    }
+
+    #[test]
     fn fixed_clamps() {
         let s = scenario();
         assert_eq!(PeriodPolicy::Fixed(1.0).period(&s).unwrap(), s.min_period());
@@ -115,5 +219,15 @@ mod tests {
     fn names_stable() {
         assert_eq!(PeriodPolicy::AlgoT.name(), "algo-t");
         assert_eq!(PeriodPolicy::Fixed(1.0).name(), "fixed");
+        assert_eq!(
+            PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord }.name(),
+            "knee"
+        );
+        assert_eq!(
+            PeriodPolicy::Knee { method: KneeMethod::MaxCurvature }.name(),
+            "knee-curvature"
+        );
+        assert_eq!(PeriodPolicy::EnergyBudget { max_time_overhead: 5.0 }.name(), "eps-time");
+        assert_eq!(PeriodPolicy::TimeBudget { max_energy_overhead: 5.0 }.name(), "eps-energy");
     }
 }

@@ -8,6 +8,7 @@
 //! | [`fig3::series`]    | Fig. 3a/3b — ratios vs node count |
 //! | [`headline::compute`] | §5 headline numbers |
 //! | [`frontier::series`] | time–energy Pareto frontiers + knees (beyond the paper) |
+//! | [`adaptive::series`] | adaptive knee policy vs AlgoT/AlgoE/Young/Daly under injected failures (beyond the paper) |
 //! | [`ablations`]       | ω sweep, first-order accuracy, γ sweep, MSK, Weibull robustness |
 //!
 //! Every series is built as a [`crate::sweep::GridSpec`] and evaluated
@@ -20,6 +21,7 @@
 //! same paths and the examples print/persist them.
 
 pub mod ablations;
+pub mod adaptive;
 pub mod fig1;
 pub mod fig2;
 pub mod fig3;

@@ -14,7 +14,7 @@
 use std::path::Path;
 
 use ckpt_period::cli::{ArgSpec, Args, CliError};
-use ckpt_period::config::presets::fig1_scenario;
+use ckpt_period::config::presets::{fig1_scenario, power_ratio_sweep, tradeoff_presets};
 use ckpt_period::config::ScenarioSpec;
 use ckpt_period::coordinator::{Coordinator, CoordinatorConfig, OverlapMode, PeriodPolicy};
 use ckpt_period::figures;
@@ -24,8 +24,8 @@ use ckpt_period::model::params::{CheckpointParams, PowerParams, Scenario};
 use ckpt_period::model::ratios::compare;
 use ckpt_period::model::time::{daly, t_final, t_time_opt, young};
 use ckpt_period::pareto::{
-    min_energy_with_time_overhead, min_time_with_energy_overhead, validate, EpsSolution,
-    Frontier, KneeMethod,
+    family_frontiers, min_energy_with_time_overhead, min_time_with_energy_overhead, validate,
+    EpsSolution, Frontier, FrontierPoint, Knee, KneeMethod,
 };
 use ckpt_period::runtime::{write_json_artifact, ArtifactDir, Runtime};
 use ckpt_period::sweep::{CellOutput, GridSpec};
@@ -38,9 +38,13 @@ Reproduction of Aupy et al., 'Optimal Checkpointing Period: Time vs. Energy' (20
   optimize  optimal periods + time/energy trade-off for a scenario
   sweep     CSV of T_final/E_final over a period grid
   pareto    time-energy Pareto frontier: knees, eps-constraint solves,
-            optional Monte-Carlo validation, JSON artifact (--out)
-  simulate  Monte-Carlo validation of the model on a scenario
-  figures   regenerate every paper figure (incl. the frontier) as CSV
+            optional Monte-Carlo validation, JSON artifact (--out);
+            --family <presets|power-ratio> streams one artifact per scenario
+  simulate  Monte-Carlo validation of the model on a scenario;
+            --adaptive runs the online controller (any --policy,
+            including knee and eps-time:<x>/eps-energy:<x> budgets)
+  figures   regenerate every paper figure (incl. the frontier and the
+            adaptive policy comparison) as CSV
   train     fault-tolerant PJRT training run
   info      artifact inventory
 
@@ -230,9 +234,45 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// JSON shape shared by the single-scenario and family artifacts.
+fn frontier_points_json(points: &[FrontierPoint]) -> Json {
+    Json::Arr(
+        points
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("period_min", Json::Num(p.period)),
+                    ("makespan_min", Json::Num(p.time)),
+                    ("energy_mW_min", Json::Num(p.energy)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn knee_json(k: &Option<Knee>) -> Json {
+    match k {
+        Some(k) => Json::obj(vec![
+            ("period_min", Json::Num(k.point.period)),
+            ("makespan_min", Json::Num(k.point.time)),
+            ("energy_mW_min", Json::Num(k.point.energy)),
+            ("score", Json::Num(k.score)),
+        ]),
+        None => Json::Null,
+    }
+}
+
 fn cmd_pareto(argv: &[String]) -> Result<(), String> {
     let mut specs = SCENARIO_SPECS.to_vec();
     specs.push(ArgSpec::flag("points", "64", "frontier samples between the two optima"));
+    specs.push(ArgSpec::flag(
+        "family",
+        "",
+        "family mode: `presets` (the trade-off presets) or `power-ratio` \
+         (an (alpha, beta, gamma) sweep at --mu); streams one JSON artifact \
+         per scenario into --out-dir",
+    ));
+    specs.push(ArgSpec::flag("out-dir", "target/pareto", "artifact directory for --family"));
     specs.push(ArgSpec::flag(
         "eps-time",
         "",
@@ -251,6 +291,10 @@ fn cmd_pareto(argv: &[String]) -> Result<(), String> {
     specs.push(ArgSpec::flag("table-rows", "12", "frontier rows printed to stdout"));
     let args = Args::parse("pareto", "time-energy Pareto frontier of a scenario", &specs, argv)
         .map_err(cli_err)?;
+    let family = args.get("family").to_string();
+    if !family.is_empty() {
+        return cmd_pareto_family(&args, &family);
+    }
     let s = scenario_from(&args)?;
     let points = args.get_usize("points").map_err(cli_err)?.max(2);
     let frontier = Frontier::compute(&s, points).map_err(|e| e.to_string())?;
@@ -418,28 +462,7 @@ fn cmd_pareto(argv: &[String]) -> Result<(), String> {
     let out = args.get("out");
     if !out.is_empty() {
         let spec = ScenarioSpec { scenario: s, n_nodes: None };
-        let points_json = Json::Arr(
-            frontier
-                .points()
-                .iter()
-                .map(|p| {
-                    Json::obj(vec![
-                        ("period_min", Json::Num(p.period)),
-                        ("makespan_min", Json::Num(p.time)),
-                        ("energy_mW_min", Json::Num(p.energy)),
-                    ])
-                })
-                .collect(),
-        );
-        let knee_json = |k: &Option<ckpt_period::pareto::Knee>| match k {
-            Some(k) => Json::obj(vec![
-                ("period_min", Json::Num(k.point.period)),
-                ("makespan_min", Json::Num(k.point.time)),
-                ("energy_mW_min", Json::Num(k.point.energy)),
-                ("score", Json::Num(k.score)),
-            ]),
-            None => Json::Null,
-        };
+        let points_json = frontier_points_json(frontier.points());
         let doc = Json::obj(vec![
             ("schema", Json::Str("ckpt-period/pareto-frontier/v1".into())),
             ("scenario", spec.to_json()),
@@ -463,24 +486,127 @@ fn cmd_pareto(argv: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// `pareto --family`: every scenario of a named family through
+/// [`family_frontiers`] (parallel, memoised `CellJob::Frontier` cells),
+/// one JSON artifact streamed out per scenario.
+fn cmd_pareto_family(args: &Args, family: &str) -> Result<(), String> {
+    // The single-scenario extras have no meaning per family; silently
+    // dropping them would hide that the user's solve never ran.
+    for flag in ["eps-time", "eps-energy", "out"] {
+        if !args.get(flag).is_empty() {
+            return Err(format!(
+                "--{flag} applies to single-scenario mode and is not supported with --family \
+                 (run `pareto --config <scenario>` per scenario instead)"
+            ));
+        }
+    }
+    if args.switch("simulate") {
+        return Err("--simulate is not supported with --family".into());
+    }
+    let points = args.get_usize("points").map_err(cli_err)?.max(2);
+    let seed = args.get_u64("seed").map_err(cli_err)?;
+    let out_dir = Path::new(args.get("out-dir")).to_path_buf();
+    let scenarios: Vec<(String, Scenario)> = match family {
+        "presets" => {
+            tradeoff_presets().into_iter().map(|(l, s)| (l.to_string(), s)).collect()
+        }
+        "power-ratio" => {
+            let mu = args.get_f64("mu").map_err(cli_err)?;
+            power_ratio_sweep(mu, &[0.5, 1.0, 2.0], &[2.0, 6.0, 10.0, 15.0], &[0.0, 1.0])
+        }
+        other => {
+            return Err(format!(
+                "unknown family `{other}` (expected `presets` or `power-ratio`)"
+            ))
+        }
+    };
+    if scenarios.is_empty() {
+        return Err("family has no in-domain scenarios at these parameters".into());
+    }
+    let frontiers = family_frontiers(scenarios, points, seed);
+    let mut written = 0usize;
+    for f in &frontiers {
+        let Some(sum) = &f.summary else {
+            println!("{}: outside the model's domain, skipped", f.label);
+            continue;
+        };
+        let path = out_dir.join(format!("{}.json", f.label));
+        let doc = Json::obj(vec![
+            ("schema", Json::Str("ckpt-period/pareto-frontier/v1".into())),
+            ("family", Json::Str(family.to_string())),
+            ("label", Json::Str(f.label.clone())),
+            ("scenario", ScenarioSpec { scenario: f.scenario, n_nodes: None }.to_json()),
+            (
+                "frontier",
+                Json::obj(vec![
+                    ("t_time_opt_min", Json::Num(sum.t_time_opt)),
+                    ("t_energy_opt_min", Json::Num(sum.t_energy_opt)),
+                    ("hypervolume", Json::Num(sum.hypervolume)),
+                    ("knee_chord", knee_json(&sum.knee_chord)),
+                    ("knee_curvature", knee_json(&sum.knee_curvature)),
+                    ("points", frontier_points_json(&sum.points)),
+                ]),
+            ),
+        ]);
+        write_json_artifact(&path, &doc).map_err(|e| e.to_string())?;
+        written += 1;
+        match sum.knee_chord.as_ref() {
+            Some(k) => println!(
+                "{}: {} points, hv {:.4}, knee T = {:.2} min \
+                 ({:.2}% energy gain for {:.2}% more time) -> {}",
+                f.label,
+                sum.points.len(),
+                sum.hypervolume,
+                k.point.period,
+                sum.energy_gain_pct(&k.point),
+                sum.time_overhead_pct(&k.point),
+                path.display()
+            ),
+            None => println!(
+                "{}: {} points, hv {:.4}, degenerate frontier -> {}",
+                f.label,
+                sum.points.len(),
+                sum.hypervolume,
+                path.display()
+            ),
+        }
+    }
+    println!("{written} frontier artifacts written to {}", out_dir.display());
+    Ok(())
+}
+
 fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     let mut specs = SCENARIO_SPECS.to_vec();
-    specs.push(ArgSpec::flag("period", "0", "period to simulate (0 = AlgoT)"));
+    specs.push(ArgSpec::flag("period", "0", "period to simulate (0 = the policy's period)"));
+    specs.push(ArgSpec::flag(
+        "policy",
+        "algo-t",
+        "period policy: algo-t|algo-e|young|daly|fixed:<min>|knee|knee:curvature|\
+         eps-time:<pct>|eps-energy:<pct>",
+    ));
+    specs.push(ArgSpec::switch(
+        "adaptive",
+        "simulate the online controller (re-estimates C/R/mu per sample path)",
+    ));
     specs.push(ArgSpec::flag("replicates", "200", "Monte-Carlo replicates"));
     specs.push(ArgSpec::flag("seed", "1", "base seed (cell seeds derive from it)"));
     let args = Args::parse("simulate", "Monte-Carlo validation of the model", &specs, argv)
         .map_err(cli_err)?;
     let s = scenario_from(&args)?;
+    let policy = parse_policy(args.get("policy"))?;
+    let reps = args.get_usize("replicates").map_err(cli_err)?;
+    let seed = args.get_u64("seed").map_err(cli_err)?;
+    if args.switch("adaptive") {
+        return cmd_simulate_adaptive(&s, policy, reps, seed);
+    }
     let period = {
         let p = args.get_f64("period").map_err(cli_err)?;
         if p <= 0.0 {
-            t_time_opt(&s).map_err(|e| e.to_string())?
+            policy.period(&s).map_err(|e| e.to_string())?
         } else {
             p
         }
     };
-    let reps = args.get_usize("replicates").map_err(cli_err)?;
-    let seed = args.get_u64("seed").map_err(cli_err)?;
 
     // A single Sim cell on the grid engine: replicates fan out on the
     // persistent pool, and re-running the same scenario in-process is a
@@ -508,6 +634,72 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
         fnum(mc.failures_mean, 2),
     ]);
     println!("period = {period:.2} min, {reps} replicates");
+    println!("{}", t.render());
+    Ok(())
+}
+
+/// Map an unparseable `--policy` value to a [`CliError`] with the full
+/// grammar in the message.
+fn parse_policy(raw: &str) -> Result<PeriodPolicy, String> {
+    PeriodPolicy::parse(raw).ok_or_else(|| {
+        cli_err(CliError::InvalidValue(
+            "policy".into(),
+            raw.into(),
+            format!(
+                "expected {} (fixed periods must be finite and > 0, \
+                 eps budgets finite and >= 0)",
+                PeriodPolicy::PARSE_HELP
+            ),
+        ))
+    })
+}
+
+/// `simulate --adaptive`: one AdaptiveRun cell on the grid engine —
+/// the online controller re-estimates (C, R, mu) along every sample
+/// path and re-reads the policy period after each checkpoint/recovery.
+fn cmd_simulate_adaptive(
+    s: &Scenario,
+    policy: PeriodPolicy,
+    reps: usize,
+    seed: u64,
+) -> Result<(), String> {
+    let mut spec = GridSpec::new(seed);
+    spec.push_adaptive(*s, policy, reps);
+    let results = spec.evaluate();
+    let mc = results[0]
+        .output
+        .adaptive()
+        .ok_or("scenario has no feasible period (out of the model's domain)")?;
+
+    // The static reference: the policy's period on the true scenario.
+    let static_period = policy.period(s).map_err(|e| e.to_string())?;
+    let mut t = Table::new(&["quantity", "model @ static period", "adaptive sim (95% CI)"]);
+    t.row(&[
+        "period_min".into(),
+        fnum(static_period, 2),
+        format!("{} (final, mean)", fnum(mc.final_period_mean, 2)),
+    ]);
+    t.row(&[
+        "makespan_min".into(),
+        fnum(t_final(s, static_period), 1),
+        format!("{} ({})", fnum(mc.makespan_mean, 1), fnum(mc.makespan_ci95_half, 1)),
+    ]);
+    t.row(&[
+        "energy_mW_min".into(),
+        fnum(e_final(s, static_period), 1),
+        format!("{} ({})", fnum(mc.energy_mean, 1), fnum(mc.energy_ci95_half, 1)),
+    ]);
+    t.row(&[
+        "failures".into(),
+        fnum(t_final(s, static_period) / s.mu, 2),
+        fnum(mc.failures_mean, 2),
+    ]);
+    t.row(&["checkpoints".into(), String::new(), fnum(mc.checkpoints_mean, 1)]);
+    t.row(&["period_updates".into(), String::new(), fnum(mc.period_updates_mean, 1)]);
+    println!(
+        "adaptive simulation: policy {}, {reps} replicates (prior mu = scenario mu)",
+        policy.name()
+    );
     println!("{}", t.render());
     Ok(())
 }
@@ -546,6 +738,18 @@ fn cmd_figures(argv: &[String]) -> Result<(), String> {
         println!("frontier knee [{label}]: {gain:.1}% energy gain for {overhead:.1}% more time");
     }
 
+    let ad = figures::adaptive::series(64);
+    figures::persist(&figures::adaptive::table(&ad), &dir, "adaptive")
+        .map_err(|e| e.to_string())?;
+    for (label, knee_waste, algoe_waste, knee_energy, algot_energy) in
+        figures::adaptive::knee_headlines(&ad)
+    {
+        println!(
+            "adaptive knee [{label}]: waste {knee_waste:.1}% (AlgoE {algoe_waste:.1}%), \
+             energy overhead {knee_energy:.1}% (AlgoT {algot_energy:.1}%)"
+        );
+    }
+
     let h = figures::headline::compute();
     println!(
         "headline: mu=300 rho=5.5 -> {:.1}% energy gain / {:.1}% time overhead",
@@ -559,7 +763,11 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
     let specs = [
         ArgSpec::flag("artifacts", "artifacts", "artifacts directory"),
         ArgSpec::flag("ckpt-dir", "target/ckpt", "checkpoint directory"),
-        ArgSpec::flag("policy", "algo-t", "algo-t|algo-e|young|daly|fixed:<s>"),
+        ArgSpec::flag(
+            "policy",
+            "algo-t",
+            "algo-t|algo-e|young|daly|fixed:<s>|knee|knee:curvature|eps-time:<pct>|eps-energy:<pct>",
+        ),
         ArgSpec::flag("steps", "200", "training steps"),
         ArgSpec::flag("mu", "30", "MTBF in wall-clock seconds"),
         ArgSpec::flag("downtime", "0.1", "downtime in seconds"),
@@ -573,8 +781,7 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
         .map_err(cli_err)?;
 
     let mut cfg = CoordinatorConfig::new(args.get("artifacts"), args.get("ckpt-dir"));
-    cfg.policy = PeriodPolicy::parse(args.get("policy"))
-        .ok_or_else(|| format!("bad policy `{}`", args.get("policy")))?;
+    cfg.policy = parse_policy(args.get("policy"))?;
     cfg.steps = args.get_u64("steps").map_err(cli_err)?;
     cfg.mu_s = args.get_f64("mu").map_err(cli_err)?;
     cfg.downtime_s = args.get_f64("downtime").map_err(cli_err)?;

@@ -24,15 +24,21 @@
 //!   ([`crate::config::presets::tradeoff_presets`], power-ratio
 //!   sweeps), evaluated as [`CellJob::Frontier`](crate::sweep::CellJob)
 //!   cells on the persistent pool with process-wide memoisation.
+//! * [`online`] — frontier-derived periods for the *online* policies
+//!   (knee, ε-constraint budgets) behind a quantised-key memo, so the
+//!   adaptive controller's per-event re-reads stay cheap and
+//!   deterministic.
 //!
 //! Consumers: `figures::frontier` (per-scenario frontier + knee
 //! tables), the CLI `pareto` subcommand (tables + JSON artifact +
-//! optional simulation), and `examples/exascale_study`.
+//! optional simulation), `coordinator::policy` (the knee/budget period
+//! policies), and `examples/exascale_study`.
 
 pub mod epsilon;
 pub mod family;
 pub mod frontier;
 pub mod knee;
+pub mod online;
 pub mod validate;
 
 pub use epsilon::{min_energy_with_time_overhead, min_time_with_energy_overhead, EpsSolution};

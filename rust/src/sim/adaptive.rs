@@ -1,0 +1,584 @@
+//! Adaptive-period discrete-event simulation: the online controller in
+//! the loop.
+//!
+//! [`super::engine`] simulates a *fixed* checkpointing period. This
+//! module closes the loop the coordinator runs in production: an
+//! [`AdaptiveController`] rides along the sample path, re-estimating
+//! `C` and `R` from the (simulated) measured durations and `μ` from the
+//! exposure estimator, and the period in force is re-read from its
+//! [`PeriodPolicy`] after every completed checkpoint and every
+//! recovery. With the frontier-aware policies (knee, ε-budgets) this is
+//! the end-to-end test bed for "checkpoint at the Pareto knee online":
+//! VELOC-style drifting parameters meet the paper's closed forms.
+//!
+//! Semantics are exactly [`super::engine`]'s (same phase structure,
+//! power states, and energy integration); the only addition is the
+//! controller. The event loop deliberately mirrors the engine's rather
+//! than threading callbacks through its hot path — any change to the
+//! engine's phase or recovery semantics MUST be applied to both
+//! (`deterministic_per_seed` + the engine's tests guard each side, and
+//! `failure_free_run_stretches_the_period` ties the two together).
+//! Measured durations equal the scenario's true `C`/`R`
+//! (the simulator has no measurement noise), so the estimates converge
+//! from the controller's prior toward the truth and the applied period
+//! converges — modulo the period-space hysteresis band — to the
+//! policy's period on the true scenario.
+//!
+//! Runs are a pure function of `(config, seed)`: the controller is
+//! deterministic (the frontier memo in [`crate::pareto::online`] caches
+//! pure values keyed on quantised estimates), so Monte-Carlo estimates
+//! are byte-identical for every thread count, exactly like
+//! [`super::runner::monte_carlo`].
+
+use super::failure::{Failure, FailureProcess, FailureStream};
+use crate::coordinator::adaptive::AdaptiveController;
+use crate::coordinator::policy::PeriodPolicy;
+use crate::model::params::Scenario;
+use crate::model::time::young;
+use crate::util::pool::ThreadPool;
+use crate::util::rng::Pcg64;
+use crate::util::stats::OnlineStats;
+
+/// Configuration of an adaptive simulation.
+#[derive(Debug, Clone)]
+pub struct AdaptiveSimConfig {
+    /// Ground truth: the platform the sample paths execute on.
+    pub scenario: Scenario,
+    /// The policy the controller recomputes the period with.
+    pub policy: PeriodPolicy,
+    pub failure: FailureProcess,
+    /// See [`super::engine::SimConfig::failures_during_recovery`].
+    pub failures_during_recovery: bool,
+    /// The controller's MTBF prior. The leader seeds it with the
+    /// configured μ; pass something else to model a mis-calibrated
+    /// prior the controller has to estimate its way out of.
+    pub prior_mu: f64,
+    /// Period-space hysteresis band handed to the controller.
+    pub hysteresis: f64,
+}
+
+impl AdaptiveSimConfig {
+    /// The paper's aggregate-exponential failure process, a correct
+    /// prior, and the controller's default hysteresis.
+    pub fn paper(scenario: Scenario, policy: PeriodPolicy) -> Self {
+        AdaptiveSimConfig {
+            scenario,
+            policy,
+            failure: FailureProcess::Exponential { mtbf: scenario.mu },
+            failures_during_recovery: true,
+            prior_mu: scenario.mu,
+            hysteresis: 0.05,
+        }
+    }
+}
+
+/// Outcome of one adaptive sample path. The phase/energy fields mirror
+/// [`super::engine::RunResult`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptiveRunResult {
+    pub makespan: f64,
+    pub energy: f64,
+    pub n_failures: u64,
+    pub n_checkpoints: u64,
+    pub work_lost: f64,
+    pub time_compute: f64,
+    pub time_checkpoint: f64,
+    pub time_recovery: f64,
+    pub time_down: f64,
+    /// How many times the applied period actually changed (hysteresis
+    /// band crossings; the initial period does not count).
+    pub n_period_updates: u64,
+    /// The period in force when the run finished.
+    pub final_period: f64,
+}
+
+/// What ended a phase (mirrors the engine).
+enum PhaseEnd {
+    Ran,
+    Finished(f64),
+    Failed(f64),
+}
+
+/// Phase outcome for a phase of `len` wall time during which `need`
+/// work remains and work accrues at `rate`.
+fn phase_end(now: f64, len: f64, need: f64, rate: f64, fail_at: f64) -> PhaseEnd {
+    let finish = if rate > 0.0 && need / rate <= len { Some(need / rate) } else { None };
+    let fail = if fail_at < now + len { Some(fail_at - now) } else { None };
+    match (finish, fail) {
+        (Some(f), Some(x)) if f <= x => PhaseEnd::Finished(f),
+        (_, Some(x)) => PhaseEnd::Failed(x),
+        (Some(f), None) => PhaseEnd::Finished(f),
+        (None, None) => PhaseEnd::Ran,
+    }
+}
+
+/// The adaptive simulator. Construct once, run many seeds.
+#[derive(Debug, Clone)]
+pub struct AdaptiveSimulator {
+    cfg: AdaptiveSimConfig,
+}
+
+impl AdaptiveSimulator {
+    pub fn new(cfg: AdaptiveSimConfig) -> Self {
+        assert!(
+            cfg.scenario.clamp_period(cfg.scenario.min_period()).is_ok(),
+            "scenario has no feasible period"
+        );
+        AdaptiveSimulator { cfg }
+    }
+
+    pub fn config(&self) -> &AdaptiveSimConfig {
+        &self.cfg
+    }
+
+    /// Execute one sample path.
+    pub fn run(&self, seed: u64) -> AdaptiveRunResult {
+        let s = &self.cfg.scenario;
+        let c = s.ckpt.c;
+        let (d, r) = (s.ckpt.d, s.ckpt.r);
+        let omega = s.ckpt.omega;
+
+        let mut ctl = AdaptiveController::new(
+            self.cfg.policy,
+            s.power,
+            omega,
+            d,
+            self.cfg.prior_mu,
+            s.t_base,
+        )
+        .with_hysteresis(self.cfg.hysteresis);
+        // Calibration, as the leader does before its run: one measured
+        // checkpoint and restore seed the C/R estimators.
+        ctl.observe_checkpoint(c);
+        ctl.observe_restore(r);
+
+        // When the controller's estimates leave the model's domain the
+        // period in force stays what it was; before the first successful
+        // recompute that is a clamped Young period (classical, policy-
+        // agnostic, always feasible here).
+        let fallback = s.clamp_period(young(s)).expect("feasible by construction");
+        let mut period = match ctl.period() {
+            Some(p) => s.clamp_period(p).unwrap_or(fallback),
+            None => fallback,
+        };
+
+        let mut rng = Pcg64::seeded(seed);
+        let mut stream = self.cfg.failure.stream(&mut rng);
+
+        let mut res = AdaptiveRunResult {
+            makespan: 0.0,
+            energy: 0.0,
+            n_failures: 0,
+            n_checkpoints: 0,
+            work_lost: 0.0,
+            time_compute: 0.0,
+            time_checkpoint: 0.0,
+            time_recovery: 0.0,
+            time_down: 0.0,
+            n_period_updates: 0,
+            final_period: period,
+        };
+
+        let mut now = 0.0f64;
+        // Work captured by the last completed checkpoint.
+        let mut saved = 0.0f64;
+        // Work done during that checkpoint (not yet covered).
+        let mut overlap = 0.0f64;
+        let mut next_fail = stream.next_after(0.0);
+
+        loop {
+            let compute_len = period - c;
+
+            // ---- compute phase (rate 1, power static+cal) ----
+            let base_progress = saved + overlap;
+            let need = s.t_base - base_progress;
+            debug_assert!(need > 0.0);
+            match phase_end(now, compute_len, need, 1.0, next_fail.at) {
+                PhaseEnd::Finished(dt) => {
+                    res.time_compute += dt;
+                    now += dt;
+                    break;
+                }
+                PhaseEnd::Failed(dt) => {
+                    res.time_compute += dt;
+                    now += dt;
+                    ctl.observe_uptime(dt);
+                    res.work_lost += overlap + dt;
+                    overlap = 0.0;
+                    self.fail_and_recover(
+                        &mut ctl,
+                        &mut res,
+                        &mut now,
+                        &mut next_fail,
+                        &mut stream,
+                    );
+                    self.reread_period(&mut ctl, &mut res, &mut period);
+                    continue;
+                }
+                PhaseEnd::Ran => {
+                    res.time_compute += compute_len;
+                    now += compute_len;
+                    ctl.observe_uptime(compute_len);
+                }
+            }
+
+            // ---- checkpoint phase (rate ω, power static+ω·cal+io) ----
+            let at_ckpt_start = base_progress + compute_len;
+            let need = s.t_base - at_ckpt_start;
+            match phase_end(now, c, need, omega, next_fail.at) {
+                PhaseEnd::Finished(dt) => {
+                    res.time_checkpoint += dt;
+                    now += dt;
+                    break;
+                }
+                PhaseEnd::Failed(dt) => {
+                    res.time_checkpoint += dt;
+                    now += dt;
+                    ctl.observe_uptime(dt);
+                    res.work_lost += overlap + compute_len + omega * dt;
+                    overlap = 0.0;
+                    self.fail_and_recover(
+                        &mut ctl,
+                        &mut res,
+                        &mut now,
+                        &mut next_fail,
+                        &mut stream,
+                    );
+                    self.reread_period(&mut ctl, &mut res, &mut period);
+                    continue;
+                }
+                PhaseEnd::Ran => {
+                    res.time_checkpoint += c;
+                    now += c;
+                    ctl.observe_uptime(c);
+                    res.n_checkpoints += 1;
+                    saved = at_ckpt_start;
+                    overlap = omega * c;
+                    // The "measured" write duration is the true C.
+                    ctl.observe_checkpoint(c);
+                    self.reread_period(&mut ctl, &mut res, &mut period);
+                }
+            }
+        }
+
+        res.makespan = now;
+        res.final_period = period;
+        let p = &s.power;
+        res.energy = p.p_static * res.makespan
+            + p.p_cal * (res.time_compute + omega * res.time_checkpoint)
+            + p.p_io * (res.time_checkpoint + res.time_recovery)
+            + p.p_down * res.time_down;
+        res
+    }
+
+    /// Re-read the controller's period; adopt it (clamped to the true
+    /// scenario's feasible range) when it changed.
+    fn reread_period(
+        &self,
+        ctl: &mut AdaptiveController,
+        res: &mut AdaptiveRunResult,
+        period: &mut f64,
+    ) {
+        let fresh = match ctl.period() {
+            Some(p) => self.cfg.scenario.clamp_period(p).unwrap_or(*period),
+            None => *period,
+        };
+        if fresh != *period {
+            res.n_period_updates += 1;
+            *period = fresh;
+        }
+    }
+
+    /// Downtime + recovery after a failure, mirroring the engine, with
+    /// the controller observing every failure, the exposure time, and
+    /// the restore duration.
+    fn fail_and_recover(
+        &self,
+        ctl: &mut AdaptiveController,
+        res: &mut AdaptiveRunResult,
+        now: &mut f64,
+        next_fail: &mut Failure,
+        stream: &mut FailureStream,
+    ) {
+        let (d, r) = (self.cfg.scenario.ckpt.d, self.cfg.scenario.ckpt.r);
+        res.n_failures += 1;
+        ctl.observe_failure();
+        *next_fail = stream.next_after(*now);
+        loop {
+            let d_end = *now + d;
+            let r_end = d_end + r;
+            if self.cfg.failures_during_recovery && next_fail.at < r_end {
+                // Failure mid-downtime or mid-recovery: account the
+                // partial phases, then restart D + R.
+                let fail_at = next_fail.at;
+                if fail_at < d_end {
+                    res.time_down += fail_at - *now;
+                } else {
+                    res.time_down += d;
+                    res.time_recovery += fail_at - d_end;
+                }
+                ctl.observe_uptime(fail_at - *now);
+                *now = fail_at;
+                res.n_failures += 1;
+                ctl.observe_failure();
+                *next_fail = stream.next_after(*now);
+                continue;
+            }
+            res.time_down += d;
+            res.time_recovery += r;
+            if self.cfg.failures_during_recovery {
+                // D + R is failure exposure only when failures can
+                // actually strike there; with the clock suspended it
+                // must not inflate the μ estimate.
+                ctl.observe_uptime(r_end - *now);
+            }
+            *now = r_end;
+            // Mirror the engine: a suspended failure process cannot fire
+            // retroactively out of the D + R window.
+            if !self.cfg.failures_during_recovery && next_fail.at < *now {
+                *next_fail = stream.next_after(*now);
+            }
+            // The "measured" restore duration is the true R.
+            ctl.observe_restore(r);
+            return;
+        }
+    }
+}
+
+/// Aggregated Monte-Carlo estimates of adaptive runs.
+#[derive(Debug, Clone)]
+pub struct AdaptiveMonteCarloResult {
+    pub replicates: usize,
+    pub makespan: OnlineStats,
+    pub energy: OnlineStats,
+    pub failures: OnlineStats,
+    pub checkpoints: OnlineStats,
+    pub work_lost: OnlineStats,
+    pub period_updates: OnlineStats,
+    pub final_period: OnlineStats,
+}
+
+/// Run `replicates` independent adaptive sample paths. Replicate `i`
+/// simulates seed `base_seed + i`; results are byte-identical for every
+/// `threads` value (same contract as [`super::runner::monte_carlo`]).
+pub fn adaptive_monte_carlo(
+    cfg: &AdaptiveSimConfig,
+    replicates: usize,
+    base_seed: u64,
+    threads: usize,
+) -> AdaptiveMonteCarloResult {
+    assert!(replicates > 0);
+    let threads = threads.clamp(1, replicates);
+    let sim = AdaptiveSimulator::new(cfg.clone());
+    let results: Vec<AdaptiveRunResult> = if threads == 1 || ThreadPool::in_worker() {
+        (0..replicates).map(|i| sim.run(base_seed + i as u64)).collect()
+    } else {
+        ThreadPool::global().map(replicates, |i| sim.run(base_seed + i as u64))
+    };
+
+    let mut mc = AdaptiveMonteCarloResult {
+        replicates,
+        makespan: OnlineStats::new(),
+        energy: OnlineStats::new(),
+        failures: OnlineStats::new(),
+        checkpoints: OnlineStats::new(),
+        work_lost: OnlineStats::new(),
+        period_updates: OnlineStats::new(),
+        final_period: OnlineStats::new(),
+    };
+    for r in &results {
+        mc.makespan.push(r.makespan);
+        mc.energy.push(r.energy);
+        mc.failures.push(r.n_failures as f64);
+        mc.checkpoints.push(r.n_checkpoints as f64);
+        mc.work_lost.push(r.work_lost);
+        mc.period_updates.push(r.n_period_updates as f64);
+        mc.final_period.push(r.final_period);
+    }
+    mc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::fig1_scenario;
+    use crate::model::energy::t_energy_opt;
+    use crate::model::time::t_time_opt;
+    use crate::pareto::KneeMethod;
+    use crate::sim::engine::{SimConfig, Simulator};
+    use crate::util::stats::rel_err;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let s = fig1_scenario(300.0, 5.5);
+        let sim = AdaptiveSimulator::new(AdaptiveSimConfig::paper(s, PeriodPolicy::AlgoT));
+        let a = sim.run(42);
+        let b = sim.run(42);
+        assert_eq!(a, b);
+        assert_ne!(a, sim.run(43));
+    }
+
+    #[test]
+    fn correct_prior_tracks_the_static_policy() {
+        // With the prior equal to the true μ and exact C/R measurements,
+        // the adaptive run should land near the fixed-period simulation
+        // at the policy's true period.
+        let s = fig1_scenario(300.0, 5.5);
+        let t = t_time_opt(&s).unwrap();
+        let adaptive = adaptive_monte_carlo(
+            &AdaptiveSimConfig::paper(s, PeriodPolicy::AlgoT),
+            120,
+            7,
+            8,
+        );
+        let fixed = crate::sim::runner::monte_carlo(&SimConfig::paper(s, t), 120, 7, 8);
+        assert!(
+            rel_err(adaptive.makespan.mean(), fixed.makespan.mean()) < 0.03,
+            "adaptive {} vs fixed {}",
+            adaptive.makespan.mean(),
+            fixed.makespan.mean()
+        );
+        assert!(
+            rel_err(adaptive.energy.mean(), fixed.energy.mean()) < 0.03,
+            "adaptive {} vs fixed {}",
+            adaptive.energy.mean(),
+            fixed.energy.mean()
+        );
+        // And the final period is near the true policy period.
+        assert!(
+            rel_err(adaptive.final_period.mean(), t) < 0.2,
+            "final period {} vs T_Time_opt {t}",
+            adaptive.final_period.mean()
+        );
+    }
+
+    #[test]
+    fn wrong_prior_is_estimated_away() {
+        // Prior μ 5x too large: the controller must shrink the period
+        // toward the true policy period as failures are observed.
+        let s = fig1_scenario(300.0, 5.5);
+        let mut cfg = AdaptiveSimConfig::paper(s, PeriodPolicy::AlgoT);
+        cfg.prior_mu = s.mu * 5.0;
+        let mc = adaptive_monte_carlo(&cfg, 80, 11, 8);
+        let t = t_time_opt(&s).unwrap();
+        assert!(
+            rel_err(mc.final_period.mean(), t) < 0.25,
+            "final period {} vs T_Time_opt {t}",
+            mc.final_period.mean()
+        );
+        assert!(mc.period_updates.mean() >= 1.0, "period never adapted");
+    }
+
+    #[test]
+    fn suspended_recovery_time_is_not_failure_exposure() {
+        // μ comparable to D + R: counting the suspended D + R window as
+        // exposure would inflate the μ estimate by ~(D+R)/μ = 20% and
+        // the applied period by ~half that. The final period must track
+        // the true policy period instead.
+        let ckpt = crate::model::CheckpointParams::new(2.0, 2.0, 1.0, 0.5).unwrap();
+        let power = crate::model::PowerParams::from_rho(5.5, 1.0, 0.0).unwrap();
+        let s = Scenario::new(ckpt, power, 15.0, 2000.0).unwrap();
+        let mut cfg = AdaptiveSimConfig::paper(s, PeriodPolicy::AlgoT);
+        cfg.failures_during_recovery = false;
+        let mc = adaptive_monte_carlo(&cfg, 80, 13, 8);
+        let t = t_time_opt(&s).unwrap();
+        assert!(
+            rel_err(mc.final_period.mean(), t) < 0.06,
+            "final period {} vs T_Time_opt {t} (phantom D+R exposure would land ~10% high)",
+            mc.final_period.mean()
+        );
+    }
+
+    #[test]
+    fn knee_policy_lands_between_the_endpoints() {
+        let s = fig1_scenario(300.0, 5.5);
+        let reps = 120;
+        let seed = 5;
+        let mc_of = |policy| {
+            adaptive_monte_carlo(&AdaptiveSimConfig::paper(s, policy), reps, seed, 8)
+        };
+        let t = mc_of(PeriodPolicy::AlgoT);
+        let e = mc_of(PeriodPolicy::AlgoE);
+        let k = mc_of(PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord });
+        assert!(
+            k.makespan.mean() < e.makespan.mean(),
+            "knee makespan {} !< AlgoE {}",
+            k.makespan.mean(),
+            e.makespan.mean()
+        );
+        assert!(
+            k.energy.mean() < t.energy.mean(),
+            "knee energy {} !< AlgoT {}",
+            k.energy.mean(),
+            t.energy.mean()
+        );
+        // The knee's final period sits inside the optimal-period range.
+        let tt = t_time_opt(&s).unwrap();
+        let te = t_energy_opt(&s).unwrap();
+        let kp = k.final_period.mean();
+        assert!(kp > tt && kp < te, "knee period {kp} outside ({tt}, {te})");
+    }
+
+    #[test]
+    fn energy_identity_holds_per_path() {
+        let s = fig1_scenario(120.0, 7.0);
+        let sim = AdaptiveSimulator::new(AdaptiveSimConfig::paper(s, PeriodPolicy::AlgoE));
+        for seed in 0..10 {
+            let res = sim.run(seed);
+            let p = &s.power;
+            let manual = p.p_static * res.makespan
+                + p.p_cal * (res.time_compute + s.ckpt.omega * res.time_checkpoint)
+                + p.p_io * (res.time_checkpoint + res.time_recovery)
+                + p.p_down * res.time_down;
+            assert!(rel_err(res.energy, manual) < 1e-12, "seed={seed}");
+            let total =
+                res.time_compute + res.time_checkpoint + res.time_recovery + res.time_down;
+            assert!(rel_err(res.makespan, total) < 1e-12, "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_estimates() {
+        let s = fig1_scenario(300.0, 5.5);
+        let cfg = AdaptiveSimConfig::paper(
+            s,
+            PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord },
+        );
+        let a = adaptive_monte_carlo(&cfg, 48, 7, 1);
+        let b = adaptive_monte_carlo(&cfg, 48, 7, 8);
+        assert_eq!(a.makespan.mean().to_bits(), b.makespan.mean().to_bits());
+        assert_eq!(a.energy.mean().to_bits(), b.energy.mean().to_bits());
+        assert_eq!(a.final_period.mean().to_bits(), b.final_period.mean().to_bits());
+    }
+
+    #[test]
+    fn failure_free_run_stretches_the_period() {
+        // With no failures the exposure estimator's μ grows with the
+        // observed uptime, so the controller checkpoints progressively
+        // less often — and beats the fixed T_Time_opt schedule, which
+        // keeps paying checkpoint overhead for failures that never come.
+        let s = fig1_scenario(300.0, 5.5);
+        let mut cfg = AdaptiveSimConfig::paper(s, PeriodPolicy::AlgoT);
+        cfg.failure = FailureProcess::Exponential { mtbf: 1e18 };
+        let sim = AdaptiveSimulator::new(cfg);
+        let res = sim.run(1);
+        assert_eq!(res.n_failures, 0);
+        let t = t_time_opt(&s).unwrap();
+        assert!(res.n_period_updates > 0, "period never adapted to the quiet platform");
+        assert!(res.final_period > t, "final {} !> initial {t}", res.final_period);
+        let fixed = Simulator::new(SimConfig {
+            scenario: s,
+            period: t,
+            failure: FailureProcess::Exponential { mtbf: 1e18 },
+            failures_during_recovery: true,
+        })
+        .run(1);
+        assert!(res.makespan >= s.t_base);
+        assert!(
+            res.makespan < fixed.makespan,
+            "adaptive {} !< fixed {} on a failure-free platform",
+            res.makespan,
+            fixed.makespan
+        );
+    }
+}

@@ -260,6 +260,15 @@ impl Simulator {
             res.time_down += d;
             res.time_recovery += r;
             *now = r_end;
+            // With failures disabled during D + R, an event that landed
+            // inside the window would otherwise fire *retroactively* in
+            // the next phase (a negative in-phase offset: time ran
+            // backwards and the failure struck anyway). The process is
+            // suspended during recovery instead, so redraw past the
+            // recovery end (exact for the memoryless exponential).
+            if !self.cfg.failures_during_recovery && next_fail.at < *now {
+                *next_fail = stream.next_after(*now);
+            }
             return;
         }
     }
@@ -400,6 +409,40 @@ mod tests {
         cfg.failures_during_recovery = true;
         let with = Simulator::new(cfg).run(3);
         assert!(with.n_failures >= without.n_failures);
+    }
+
+    #[test]
+    fn suspended_recovery_failures_do_not_fire_retroactively() {
+        // Regression: with failures_during_recovery = false, an event
+        // landing inside the D + R window used to fire at a *negative*
+        // in-phase offset in the next phase — time ran backwards and
+        // the failure struck anyway, so the failure count tracked the
+        // full makespan instead of the exposed (up) time. At μ = 40 and
+        // D + R = 11 that inflates the count by ~25%.
+        let s = scenario(40.0, 0.5, 2000.0);
+        let mut cfg = SimConfig::paper(s, 50.0);
+        cfg.failures_during_recovery = false;
+        let sim = Simulator::new(cfg);
+        let mut failures = 0.0;
+        let mut exposed = 0.0;
+        for seed in 0..20 {
+            let res = sim.run(seed);
+            failures += res.n_failures as f64;
+            exposed += res.time_compute + res.time_checkpoint;
+            // Work conservation still holds in this mode.
+            let executed = res.time_compute + 0.5 * res.time_checkpoint;
+            assert!(
+                rel_err(executed, 2000.0 + res.work_lost) < 1e-9,
+                "seed={seed}: executed={executed} vs {}",
+                2000.0 + res.work_lost
+            );
+        }
+        // Failures accrue only over exposed time: E[n] = exposed / μ.
+        let expect = exposed / 40.0;
+        assert!(
+            rel_err(failures, expect) < 0.1,
+            "failures={failures} expected≈{expect} (retroactive firing would give ~25% more)"
+        );
     }
 
     #[test]

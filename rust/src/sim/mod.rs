@@ -20,6 +20,10 @@
 //!   and per-node Weibull (robustness extension).
 //! * [`engine`] — the single-run event loop.
 //! * [`runner`] — seeded Monte-Carlo replication on the persistent pool.
+//! * [`adaptive`] — the engine with the online
+//!   [`AdaptiveController`](crate::coordinator::AdaptiveController) in
+//!   the loop: `C`/`R`/`μ` re-estimated along the sample path and the
+//!   period re-read from the policy after every checkpoint/recovery.
 //!
 //! # Seeding & determinism
 //!
@@ -32,10 +36,15 @@
 //! the single-scenario building block (and runs inline, same seeds, when
 //! invoked from a grid cell on a pool worker).
 
+pub mod adaptive;
 pub mod engine;
 pub mod failure;
 pub mod runner;
 
+pub use adaptive::{
+    adaptive_monte_carlo, AdaptiveMonteCarloResult, AdaptiveRunResult, AdaptiveSimConfig,
+    AdaptiveSimulator,
+};
 pub use engine::{RunResult, SimConfig, Simulator};
 pub use failure::FailureProcess;
 pub use runner::{monte_carlo, MonteCarloResult};

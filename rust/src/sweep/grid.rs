@@ -6,7 +6,7 @@
 //! [`CellResult`] per cell **in cell order** — so callers zip results
 //! with whatever axes they built the grid from.
 //!
-//! Three cell jobs cover every consumer in the crate:
+//! The cell jobs cover every consumer in the crate:
 //!
 //! * [`CellJob::Model`] — closed-form `T_final`/`E_final` at a period
 //!   (the CLI `sweep` path).
@@ -15,6 +15,13 @@
 //!   "clamped" tail).
 //! * [`CellJob::Sim`] — seeded Monte-Carlo estimation, optionally under a
 //!   non-paper [`FailureProcess`] (per-node Weibull platforms etc.).
+//! * [`CellJob::Frontier`] — the time–energy Pareto frontier between the
+//!   two optima ([`crate::pareto`]).
+//! * [`CellJob::AdaptiveRun`] — Monte-Carlo of the *adaptive* simulator
+//!   ([`crate::sim::adaptive`]): an online controller re-estimates
+//!   `(C, R, μ)` along each sample path and re-reads its
+//!   [`PeriodPolicy`] — policy comparisons across scenario grids run
+//!   parallel and memo-cached like everything else.
 //!
 //! # Seeding
 //!
@@ -26,10 +33,13 @@
 //! schedule — so results are byte-identical across thread counts and
 //! stable when a grid is re-arranged or filtered.
 
+use crate::coordinator::policy::PeriodPolicy;
 use crate::model::params::Scenario;
 use crate::model::ratios::{compare, Comparison};
 use crate::model::{e_final, t_final};
 use crate::pareto::frontier::FrontierSummary;
+use crate::pareto::KneeMethod;
+use crate::sim::adaptive::{adaptive_monte_carlo, AdaptiveMonteCarloResult, AdaptiveSimConfig};
 use crate::sim::runner::{monte_carlo, MonteCarloResult};
 use crate::sim::{FailureProcess, SimConfig};
 use crate::util::pool::ThreadPool;
@@ -53,6 +63,12 @@ pub enum CellJob {
     /// Time–energy Pareto frontier sampled at `points` periods between
     /// the two optima ([`crate::pareto`]).
     Frontier { points: usize },
+    /// Monte-Carlo estimate of `replicates` *adaptive* sample paths:
+    /// the period is re-estimated online by an
+    /// [`AdaptiveController`](crate::coordinator::AdaptiveController)
+    /// running `policy`, seeded with the scenario's μ as its prior
+    /// ([`crate::sim::adaptive`]).
+    AdaptiveRun { policy: PeriodPolicy, replicates: usize, failures_during_recovery: bool },
 }
 
 /// One grid cell.
@@ -103,6 +119,41 @@ impl SimSummary {
     }
 }
 
+/// Compact, cacheable Monte-Carlo summary of one adaptive cell.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptiveSummary {
+    pub replicates: usize,
+    pub makespan_mean: f64,
+    pub makespan_ci95_half: f64,
+    pub energy_mean: f64,
+    pub energy_ci95_half: f64,
+    pub failures_mean: f64,
+    pub checkpoints_mean: f64,
+    pub work_lost_mean: f64,
+    /// Mean number of applied-period changes per run (hysteresis-band
+    /// crossings).
+    pub period_updates_mean: f64,
+    /// Mean period in force at the end of a run.
+    pub final_period_mean: f64,
+}
+
+impl AdaptiveSummary {
+    pub fn from_mc(mc: &AdaptiveMonteCarloResult) -> Self {
+        AdaptiveSummary {
+            replicates: mc.replicates,
+            makespan_mean: mc.makespan.mean(),
+            makespan_ci95_half: mc.makespan.ci_half_width(ConfidenceLevel::P95),
+            energy_mean: mc.energy.mean(),
+            energy_ci95_half: mc.energy.ci_half_width(ConfidenceLevel::P95),
+            failures_mean: mc.failures.mean(),
+            checkpoints_mean: mc.checkpoints.mean(),
+            work_lost_mean: mc.work_lost.mean(),
+            period_updates_mean: mc.period_updates.mean(),
+            final_period_mean: mc.final_period.mean(),
+        }
+    }
+}
+
 /// The outcome of one cell.
 #[derive(Debug, Clone, PartialEq)]
 pub enum CellOutput {
@@ -113,6 +164,9 @@ pub enum CellOutput {
     Sim(SimSummary),
     /// `None` under the same out-of-domain clamp as `Compare`.
     Frontier(Option<FrontierSummary>),
+    /// `None` when the scenario has no feasible period at all (the same
+    /// clamp regime as `Compare`/`Frontier`).
+    Adaptive(Option<AdaptiveSummary>),
 }
 
 impl CellOutput {
@@ -136,6 +190,15 @@ impl CellOutput {
     pub fn frontier(&self) -> Option<&FrontierSummary> {
         match self {
             CellOutput::Frontier(Some(f)) => Some(f),
+            _ => None,
+        }
+    }
+
+    /// The adaptive summary, when this was a [`CellJob::AdaptiveRun`]
+    /// cell.
+    pub fn adaptive(&self) -> Option<&AdaptiveSummary> {
+        match self {
+            CellOutput::Adaptive(Some(a)) => Some(a),
             _ => None,
         }
     }
@@ -219,6 +282,21 @@ impl GridSpec {
         self.push(Cell { scenario, failure: None, job: CellJob::Frontier { points } })
     }
 
+    /// Append an adaptive-controller Monte-Carlo cell (paper failure
+    /// process).
+    pub fn push_adaptive(
+        &mut self,
+        scenario: Scenario,
+        policy: PeriodPolicy,
+        replicates: usize,
+    ) -> &mut Self {
+        self.push(Cell {
+            scenario,
+            failure: None,
+            job: CellJob::AdaptiveRun { policy, replicates, failures_during_recovery: true },
+        })
+    }
+
     /// Comparison grid over a scenario family (the figures' shape).
     pub fn compare_all(scenarios: impl IntoIterator<Item = Scenario>, base_seed: u64) -> Self {
         let mut spec = GridSpec::new(base_seed);
@@ -292,15 +370,27 @@ impl GridSpec {
                 k.push(13);
                 k.push(points as u64);
             }
+            CellJob::AdaptiveRun { policy, replicates, failures_during_recovery } => {
+                k.push(14);
+                let (tag, word) = policy_key(policy);
+                k.push(tag);
+                k.push(word);
+                k.push(replicates as u64);
+                k.push(u64::from(failures_during_recovery));
+                k.push(self.base_seed);
+            }
         }
         k
     }
 
-    /// The seed a [`CellJob::Sim`] cell derives (position-independent:
-    /// hashes `base_seed` with the cell's parameter bits).
+    /// The seed a simulated ([`CellJob::Sim`] / [`CellJob::AdaptiveRun`])
+    /// cell derives (position-independent: hashes `base_seed` with the
+    /// cell's parameter bits).
     pub fn cell_seed(&self, cell: &Cell) -> u64 {
         match cell.job {
-            CellJob::Sim { .. } => derive_seed(&self.cell_key(cell)),
+            CellJob::Sim { .. } | CellJob::AdaptiveRun { .. } => {
+                derive_seed(&self.cell_key(cell))
+            }
             _ => 0,
         }
     }
@@ -360,6 +450,34 @@ fn eval_cell(cell: &Cell, seed: u64) -> CellOutput {
         CellJob::Frontier { points } => {
             CellOutput::Frontier(FrontierSummary::compute(&cell.scenario, points))
         }
+        CellJob::AdaptiveRun { policy, replicates, failures_during_recovery } => {
+            if cell.scenario.clamp_period(cell.scenario.min_period()).is_err() {
+                return CellOutput::Adaptive(None);
+            }
+            let mut cfg = AdaptiveSimConfig::paper(cell.scenario, policy);
+            if let Some(f) = cell.failure.clone() {
+                cfg.failure = f;
+            }
+            cfg.failures_during_recovery = failures_during_recovery;
+            let mc = adaptive_monte_carlo(&cfg, replicates, seed, replicates);
+            CellOutput::Adaptive(Some(AdaptiveSummary::from_mc(&mc)))
+        }
+    }
+}
+
+/// Stable `(tag, parameter-bits)` encoding of a [`PeriodPolicy`] for
+/// cache keys and seed derivation.
+fn policy_key(p: PeriodPolicy) -> (u64, u64) {
+    match p {
+        PeriodPolicy::AlgoT => (0, 0),
+        PeriodPolicy::AlgoE => (1, 0),
+        PeriodPolicy::Young => (2, 0),
+        PeriodPolicy::Daly => (3, 0),
+        PeriodPolicy::Fixed(t) => (4, t.to_bits()),
+        PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord } => (5, 0),
+        PeriodPolicy::Knee { method: KneeMethod::MaxCurvature } => (5, 1),
+        PeriodPolicy::EnergyBudget { max_time_overhead } => (6, max_time_overhead.to_bits()),
+        PeriodPolicy::TimeBudget { max_energy_overhead } => (7, max_energy_overhead.to_bits()),
     }
 }
 
@@ -550,5 +668,74 @@ mod tests {
         let out = spec.without_cache().evaluate();
         assert!(matches!(out[0].output, CellOutput::Frontier(None)));
         assert_eq!(out[0].output.frontier(), None);
+    }
+
+    #[test]
+    fn adaptive_cells_match_direct_monte_carlo_with_derived_seed() {
+        let s = scenario();
+        let policy = PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord };
+        let mut spec = GridSpec::new(77);
+        spec.push_adaptive(s, policy, 32);
+        let spec = spec.without_cache();
+        let seed = spec.cell_seed(&spec.cells()[0]);
+        assert_ne!(seed, 0, "adaptive cells derive a seed");
+        let results = spec.evaluate();
+        assert_eq!(results[0].seed, seed);
+        let summary = results[0].output.adaptive().unwrap();
+
+        let cfg = AdaptiveSimConfig::paper(s, policy);
+        let mc = adaptive_monte_carlo(&cfg, 32, seed, 1);
+        assert_eq!(summary.makespan_mean.to_bits(), mc.makespan.mean().to_bits());
+        assert_eq!(summary.energy_mean.to_bits(), mc.energy.mean().to_bits());
+        assert_eq!(summary.final_period_mean.to_bits(), mc.final_period.mean().to_bits());
+        assert_eq!(summary.replicates, 32);
+    }
+
+    #[test]
+    fn adaptive_cell_keys_distinguish_policies() {
+        let s = scenario();
+        let mut a = GridSpec::new(1);
+        a.push_adaptive(s, PeriodPolicy::AlgoT, 32);
+        let mut b = GridSpec::new(1);
+        b.push_adaptive(s, PeriodPolicy::AlgoE, 32);
+        assert_ne!(a.cell_key(&a.cells()[0]), b.cell_key(&b.cells()[0]));
+        assert_ne!(a.cell_seed(&a.cells()[0]), b.cell_seed(&b.cells()[0]));
+        let mut c = GridSpec::new(1);
+        c.push_adaptive(s, PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord }, 32);
+        let mut d = GridSpec::new(1);
+        d.push_adaptive(s, PeriodPolicy::Knee { method: KneeMethod::MaxCurvature }, 32);
+        assert_ne!(c.cell_key(&c.cells()[0]), d.cell_key(&d.cells()[0]));
+        // Budget parameter is part of the key.
+        let mut e = GridSpec::new(1);
+        e.push_adaptive(s, PeriodPolicy::EnergyBudget { max_time_overhead: 2.0 }, 32);
+        let mut f = GridSpec::new(1);
+        f.push_adaptive(s, PeriodPolicy::EnergyBudget { max_time_overhead: 5.0 }, 32);
+        assert_ne!(e.cell_key(&e.cells()[0]), f.cell_key(&f.cells()[0]));
+    }
+
+    #[test]
+    fn adaptive_out_of_domain_is_none() {
+        // mu barely above the overheads: no feasible period at all.
+        let ckpt = crate::model::CheckpointParams::new(10.0, 10.0, 1.0, 0.5).unwrap();
+        let power = crate::model::PowerParams::from_rho(5.5, 1.0, 0.0).unwrap();
+        let s = Scenario::new(ckpt, power, 17.0, 1000.0).unwrap();
+        let mut spec = GridSpec::new(1);
+        spec.push_adaptive(s, PeriodPolicy::AlgoT, 8);
+        let out = spec.without_cache().evaluate();
+        assert!(matches!(out[0].output, CellOutput::Adaptive(None)));
+        assert_eq!(out[0].output.adaptive(), None);
+    }
+
+    #[test]
+    fn adaptive_cells_memoise_and_stay_bit_stable() {
+        let s = fig1_scenario(120.0, 5.5);
+        let mut spec = GridSpec::new(0xADA7);
+        spec.push_adaptive(s, PeriodPolicy::AlgoE, 24);
+        let first = spec.evaluate();
+        let (h_before, _) = cache::stats();
+        let second = spec.evaluate();
+        let (h_after, _) = cache::stats();
+        assert!(h_after - h_before >= 1, "expected an adaptive cache hit");
+        assert_eq!(first, second);
     }
 }

@@ -39,4 +39,4 @@
 pub mod cache;
 pub mod grid;
 
-pub use grid::{Cell, CellJob, CellOutput, CellResult, GridSpec, SimSummary};
+pub use grid::{AdaptiveSummary, Cell, CellJob, CellOutput, CellResult, GridSpec, SimSummary};

@@ -1,0 +1,154 @@
+//! Acceptance tests of the frontier-aware adaptive policy (ISSUE 3):
+//!
+//! (a) on every trade-off preset the knee policy's Monte-Carlo
+//!     (time, energy) lands between the AlgoT and AlgoE endpoints under
+//!     injected failures — time overhead ≤ AlgoE's, energy ≤ AlgoT's,
+//!     and strictly between wherever the frontier is non-degenerate;
+//! (b) the budget policies respect their ε-constraints end to end;
+//! (c) adaptive results are byte-identical across thread counts, both
+//!     through `adaptive_monte_carlo` directly and through
+//!     `CellJob::AdaptiveRun` grid cells;
+//! (d) the policy-level periods sit inside the optimal-period interval.
+
+use ckpt_period::config::presets::tradeoff_presets;
+use ckpt_period::coordinator::PeriodPolicy;
+use ckpt_period::model::energy::t_energy_opt;
+use ckpt_period::model::time::t_time_opt;
+use ckpt_period::pareto::KneeMethod;
+use ckpt_period::sim::adaptive::{
+    adaptive_monte_carlo, AdaptiveMonteCarloResult, AdaptiveSimConfig,
+};
+use ckpt_period::sweep::GridSpec;
+
+const REPLICATES: usize = 200;
+const SEED: u64 = 2013;
+
+const KNEE: PeriodPolicy = PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord };
+
+/// Same base seed for every policy: common random numbers correlate the
+/// failure processes across the compared runs, so mean differences
+/// reflect the policies, not sampling noise.
+fn mc(s: ckpt_period::model::Scenario, policy: PeriodPolicy) -> AdaptiveMonteCarloResult {
+    adaptive_monte_carlo(&AdaptiveSimConfig::paper(s, policy), REPLICATES, SEED, 8)
+}
+
+#[test]
+fn a_knee_policy_lands_between_the_endpoints_on_every_preset() {
+    for (label, s) in tradeoff_presets() {
+        let algo_t = mc(s, PeriodPolicy::AlgoT);
+        let algo_e = mc(s, PeriodPolicy::AlgoE);
+        let knee = mc(s, KNEE);
+
+        // The acceptance bound: no worse than the wrong endpoint on
+        // either axis.
+        assert!(
+            knee.makespan.mean() <= algo_e.makespan.mean(),
+            "{label}: knee makespan {} > AlgoE {}",
+            knee.makespan.mean(),
+            algo_e.makespan.mean()
+        );
+        assert!(
+            knee.energy.mean() <= algo_t.energy.mean(),
+            "{label}: knee energy {} > AlgoT {}",
+            knee.energy.mean(),
+            algo_t.energy.mean()
+        );
+
+        // Strictly between the endpoints wherever the frontier is
+        // non-degenerate (it is, on every preset: the model-level knee
+        // sits ≥1.2% above AlgoT in time and ≥2.2% above AlgoE in
+        // energy, far beyond the Monte-Carlo standard error here).
+        let tt = t_time_opt(&s).unwrap();
+        let te = t_energy_opt(&s).unwrap();
+        if te > tt {
+            assert!(
+                knee.makespan.mean() > algo_t.makespan.mean(),
+                "{label}: knee makespan {} not above AlgoT {}",
+                knee.makespan.mean(),
+                algo_t.makespan.mean()
+            );
+            assert!(
+                knee.energy.mean() > algo_e.energy.mean(),
+                "{label}: knee energy {} not above AlgoE {}",
+                knee.energy.mean(),
+                algo_e.energy.mean()
+            );
+            let kp = knee.final_period.mean();
+            assert!(kp > tt && kp < te, "{label}: knee period {kp} outside ({tt}, {te})");
+        }
+    }
+}
+
+#[test]
+fn b_budget_policies_respect_their_constraints() {
+    let (_, s) = tradeoff_presets().into_iter().next().unwrap();
+    let algo_t = mc(s, PeriodPolicy::AlgoT);
+    let algo_e = mc(s, PeriodPolicy::AlgoE);
+
+    // A 5% time budget: cheaper than AlgoT in energy, and the measured
+    // time overhead over AlgoT stays in the budget's neighbourhood
+    // (the budget constrains the *model* makespan; Monte-Carlo noise
+    // and online estimation add a little slack either way).
+    let eps_t = mc(s, PeriodPolicy::EnergyBudget { max_time_overhead: 5.0 });
+    assert!(eps_t.energy.mean() < algo_t.energy.mean());
+    let overhead = eps_t.makespan.mean() / algo_t.makespan.mean() - 1.0;
+    assert!(overhead < 0.07, "measured time overhead {overhead} far above the 5% budget");
+
+    // The transpose: a 5% energy budget beats AlgoE on time and stays
+    // near its energy bound.
+    let eps_e = mc(s, PeriodPolicy::TimeBudget { max_energy_overhead: 5.0 });
+    assert!(eps_e.makespan.mean() < algo_e.makespan.mean());
+    let overhead = eps_e.energy.mean() / algo_e.energy.mean() - 1.0;
+    assert!(overhead < 0.07, "measured energy overhead {overhead} far above the 5% budget");
+}
+
+#[test]
+fn c_adaptive_results_identical_across_thread_counts() {
+    let (_, s) = tradeoff_presets().into_iter().next().unwrap();
+    let cfg = AdaptiveSimConfig::paper(s, KNEE);
+
+    // Direct Monte-Carlo: serial vs pooled.
+    let serial = adaptive_monte_carlo(&cfg, 64, 7, 1);
+    let pooled = adaptive_monte_carlo(&cfg, 64, 7, 8);
+    assert_eq!(serial.makespan.mean().to_bits(), pooled.makespan.mean().to_bits());
+    assert_eq!(serial.energy.mean().to_bits(), pooled.energy.mean().to_bits());
+    assert_eq!(serial.final_period.mean().to_bits(), pooled.final_period.mean().to_bits());
+
+    // Grid cells: the pooled cell equals serial Monte-Carlo at the
+    // cell's derived seed, and re-evaluation is bit-stable.
+    let mut spec = GridSpec::new(42);
+    spec.push_adaptive(s, KNEE, 64);
+    let seed = spec.cell_seed(&spec.cells()[0]);
+    let results = spec.evaluate();
+    let summary = results[0].output.adaptive().expect("in domain");
+    let direct = adaptive_monte_carlo(&cfg, 64, seed, 1);
+    assert_eq!(summary.makespan_mean.to_bits(), direct.makespan.mean().to_bits());
+    assert_eq!(summary.energy_mean.to_bits(), direct.energy.mean().to_bits());
+    assert_eq!(results, spec.evaluate());
+}
+
+#[test]
+fn d_policy_periods_sit_inside_the_optimal_interval() {
+    for (label, s) in tradeoff_presets() {
+        let tt = t_time_opt(&s).unwrap();
+        let te = t_energy_opt(&s).unwrap();
+        let knee = KNEE.period(&s).expect(label);
+        assert!(knee > tt && knee < te, "{label}: knee {knee} outside ({tt}, {te})");
+        for eps in [0.5, 2.0, 10.0] {
+            let p = PeriodPolicy::EnergyBudget { max_time_overhead: eps }
+                .period(&s)
+                .expect(label);
+            assert!(
+                (tt - 1e-9..=te + 1e-9).contains(&p),
+                "{label} eps-time:{eps}: period {p} outside [{tt}, {te}]"
+            );
+            let p = PeriodPolicy::TimeBudget { max_energy_overhead: eps }
+                .period(&s)
+                .expect(label);
+            assert!(
+                (tt - 1e-9..=te + 1e-9).contains(&p),
+                "{label} eps-energy:{eps}: period {p} outside [{tt}, {te}]"
+            );
+        }
+    }
+}

@@ -84,8 +84,16 @@ fn figures_generates_csvs() {
     let out = run_ok(&["figures", "--points", "12", "--out-dir", dir.to_str().unwrap()]);
     assert!(out.contains("peak energy gain"));
     assert!(out.contains("frontier knee"), "{out}");
-    for f in ["fig1.csv", "fig2.csv", "fig3a.csv", "fig3b.csv", "frontier.csv", "frontier_knees.csv"]
-    {
+    assert!(out.contains("adaptive knee"), "{out}");
+    for f in [
+        "fig1.csv",
+        "fig2.csv",
+        "fig3a.csv",
+        "fig3b.csv",
+        "frontier.csv",
+        "frontier_knees.csv",
+        "adaptive.csv",
+    ] {
         assert!(dir.join(f).exists(), "missing {f}");
     }
     let _ = std::fs::remove_dir_all(dir);
@@ -144,6 +152,92 @@ fn pareto_simulate_reports_agreement() {
     ]);
     assert!(out.contains("simulated frontier"), "{out}");
     assert!(out.contains("confidence bands"), "{out}");
+}
+
+#[test]
+fn pareto_family_presets_streams_one_artifact_per_scenario() {
+    let dir = std::env::temp_dir().join("ckpt_cli_pareto_family");
+    let _ = std::fs::remove_dir_all(&dir);
+    let out = run_ok(&[
+        "pareto",
+        "--family",
+        "presets",
+        "--points",
+        "9",
+        "--out-dir",
+        dir.to_str().unwrap(),
+    ]);
+    assert!(out.contains("fig1-rho5.5"), "{out}");
+    assert!(out.contains("frontier artifacts written"), "{out}");
+    for label in [
+        "fig1-rho5.5",
+        "fig1-rho7",
+        "alpha-heavy",
+        "beta-heavy",
+        "gamma-heavy",
+        "exascale-io-heavy",
+    ] {
+        let path = dir.join(format!("{label}.json"));
+        assert!(path.exists(), "missing {label}.json");
+        let raw = std::fs::read_to_string(&path).unwrap();
+        assert!(raw.contains("\"schema\": \"ckpt-period/pareto-frontier/v1\""), "{label}");
+        assert!(raw.contains("\"hypervolume\""), "{label}");
+        assert!(raw.contains("\"knee_chord\""), "{label}");
+    }
+    // Unknown families are rejected with a clear message.
+    let bad = bin().args(["pareto", "--family", "bogus"]).output().unwrap();
+    assert!(!bad.status.success());
+    assert!(String::from_utf8_lossy(&bad.stderr).contains("unknown family"));
+    // Single-scenario extras are rejected rather than silently dropped.
+    let bad = bin()
+        .args(["pareto", "--family", "presets", "--eps-time", "5"])
+        .output()
+        .unwrap();
+    assert!(!bad.status.success());
+    assert!(String::from_utf8_lossy(&bad.stderr).contains("not supported with --family"));
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn simulate_adaptive_knee_runs_end_to_end() {
+    let out = run_ok(&[
+        "simulate",
+        "--adaptive",
+        "--policy",
+        "knee",
+        "--replicates",
+        "24",
+        "--seed",
+        "3",
+    ]);
+    assert!(out.contains("adaptive simulation: policy knee"), "{out}");
+    assert!(out.contains("makespan_min"), "{out}");
+    assert!(out.contains("period_updates"), "{out}");
+    // The budget policies parse and run through the same path.
+    let out = run_ok(&[
+        "simulate",
+        "--adaptive",
+        "--policy",
+        "eps-time:5",
+        "--replicates",
+        "16",
+    ]);
+    assert!(out.contains("policy eps-time"), "{out}");
+}
+
+#[test]
+fn bad_policies_are_rejected_with_the_grammar() {
+    for bad in ["fixed:-5", "fixed:NaN", "fixed:inf", "eps-time:-1", "bogus"] {
+        let out = bin().args(["simulate", "--policy", bad]).output().unwrap();
+        assert!(!out.status.success(), "{bad} accepted");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("policy"), "{bad}: {err}");
+        assert!(err.contains("knee"), "{bad}: grammar missing from {err}");
+    }
+    // train surfaces the same CliError path before touching any runtime.
+    let out = bin().args(["train", "--policy", "fixed:-5"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("invalid value"), "train policy error");
 }
 
 #[test]

@@ -7,7 +7,9 @@
 //! change to the model, the optimal-period solvers, or the grid-engine
 //! rewiring fails loudly here.
 
+use ckpt_period::config::presets::tradeoff_presets;
 use ckpt_period::figures::{fig1, fig2, fig3, headline};
+use ckpt_period::pareto::{Frontier, KneeMethod};
 
 const REL_TOL: f64 = 1e-9;
 
@@ -91,6 +93,78 @@ fn fig3_golden_points() {
     assert!(!p.clamped);
     assert_close("fig3 time_ratio(1e7,7)", p.time_ratio, 1.143544531726686);
     assert_close("fig3 energy_ratio(1e7,7)", p.energy_ratio, 1.263902759237994);
+}
+
+#[test]
+fn frontier_golden_hypervolume_and_knee_rows() {
+    // One golden row per trade-off preset at the 65-point sampling the
+    // frontier figure uses: normalised hypervolume plus the chord knee's
+    // (period, makespan, energy). Computed from the paper's closed forms
+    // (independently mirrored and cross-checked outside this crate,
+    // like the Fig. 1/2/3 fixtures above). This is the regression gate
+    // for the Pareto subsystem: any change to the optimal-period
+    // solvers, the frontier sampling, the dominance filter, the
+    // normalisation, or the knee geometry fails loudly here.
+    const N: usize = 65;
+    // (label, hypervolume, knee_period, knee_makespan, knee_energy)
+    let golden = [
+        (
+            "fig1-rho5.5",
+            0.8468027928654311,
+            83.66927355941102,
+            13175.590452351636,
+            42585.14151061798,
+        ),
+        (
+            "fig1-rho7",
+            0.8502537757827617,
+            86.52128072997093,
+            13225.92632743352,
+            47350.02147479943,
+        ),
+        (
+            "alpha-heavy",
+            0.8381306720787302,
+            73.5608078084129,
+            13019.938295432235,
+            67636.03672145416,
+        ),
+        (
+            "beta-heavy",
+            0.8561030239219451,
+            93.3043959320106,
+            13355.36685344219,
+            43521.35042490259,
+        ),
+        (
+            "gamma-heavy",
+            0.846761578077717,
+            83.61911034875286,
+            13174.728295224146,
+            42678.83124771653,
+        ),
+        (
+            "exascale-io-heavy",
+            0.8586450677879421,
+            28.67042581392691,
+            12122.753205453675,
+            42306.16662215283,
+        ),
+    ];
+    let presets = tradeoff_presets();
+    assert_eq!(presets.len(), golden.len(), "preset set changed; regenerate the goldens");
+    for (label, hv, knee_period, knee_time, knee_energy) in golden {
+        let (_, s) = presets
+            .iter()
+            .find(|(l, _)| *l == label)
+            .unwrap_or_else(|| panic!("preset {label} disappeared"));
+        let f = Frontier::compute(s, N).expect(label);
+        assert_close(&format!("{label} hypervolume"), f.hypervolume(), hv);
+        let k = f.knee(KneeMethod::MaxDistanceToChord).expect(label);
+        assert_close(&format!("{label} knee period"), k.point.period, knee_period);
+        assert_close(&format!("{label} knee makespan"), k.point.time, knee_time);
+        assert_close(&format!("{label} knee energy"), k.point.energy, knee_energy);
+    }
 }
 
 #[test]
