@@ -333,6 +333,7 @@ mod tests {
         let e = mk(PeriodPolicy::AlgoE);
         let k = mk(PeriodPolicy::Knee {
             method: crate::pareto::KneeMethod::MaxDistanceToChord,
+            backend: crate::model::Backend::FirstOrder,
         });
         assert!(t < k && k < e, "knee {k} outside ({t}, {e})");
     }

@@ -12,10 +12,19 @@
 //! whatever scenario they are handed, so the adaptive controller can
 //! track a drifting `(C, R, μ)` through them (the heavy lifting is
 //! memoised in [`crate::pareto::online`]).
+//!
+//! The frontier-aware policies additionally carry an objective-model
+//! [`Backend`]: with `Backend::Exact(..)` (CLI `--model exact`) the
+//! knee/budget periods come from the exact renewal objectives instead
+//! of the paper's first-order forms — the difference is 5–40% of the
+//! period at small μ (see `figures::knee_drift`). AlgoT/AlgoE/Young/
+//! Daly are *defined* by their closed forms, so
+//! [`PeriodPolicy::with_backend`] leaves them untouched.
 
-use crate::model::energy::t_energy_opt;
+use crate::model::backend::Backend;
 use crate::model::params::{ModelError, Scenario};
-use crate::model::time::{daly, t_time_opt, young};
+use crate::model::time::{daly, young};
+use crate::model::{t_energy_opt, t_time_opt};
 use crate::pareto::online;
 use crate::pareto::KneeMethod;
 
@@ -33,21 +42,24 @@ pub enum PeriodPolicy {
     /// A fixed period (same units as the scenario).
     Fixed(f64),
     /// The knee of the time–energy Pareto frontier under the given
-    /// detector — between AlgoT and AlgoE wherever the trade-off is
-    /// non-degenerate.
-    Knee { method: KneeMethod },
+    /// detector and objective backend — between the backend's AlgoT and
+    /// AlgoE endpoints wherever the trade-off is non-degenerate.
+    Knee { method: KneeMethod, backend: Backend },
     /// Minimise energy subject to a time overhead of at most
-    /// `max_time_overhead` percent of AlgoT's makespan (ε-constraint).
-    EnergyBudget { max_time_overhead: f64 },
+    /// `max_time_overhead` percent of AlgoT's makespan (ε-constraint),
+    /// under the given objective backend.
+    EnergyBudget { max_time_overhead: f64, backend: Backend },
     /// Minimise time subject to an energy overhead of at most
     /// `max_energy_overhead` percent of AlgoE's consumption
-    /// (the transposed ε-constraint).
-    TimeBudget { max_energy_overhead: f64 },
+    /// (the transposed ε-constraint), under the given objective backend.
+    TimeBudget { max_energy_overhead: f64, backend: Backend },
 }
 
 impl PeriodPolicy {
     /// The accepted `--policy` spellings, for CLI help and error
-    /// messages.
+    /// messages. The objective backend is orthogonal (the `--model`
+    /// flag, [`Backend::PARSE_HELP`]); parsing always yields
+    /// `Backend::FirstOrder`, which [`Self::with_backend`] overrides.
     pub const PARSE_HELP: &'static str =
         "algo-t|algo-e|young|daly|fixed:<period>|knee|knee:curvature|eps-time:<pct>|eps-energy:<pct>";
 
@@ -58,10 +70,38 @@ impl PeriodPolicy {
             PeriodPolicy::Young => "young",
             PeriodPolicy::Daly => "daly",
             PeriodPolicy::Fixed(_) => "fixed",
-            PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord } => "knee",
-            PeriodPolicy::Knee { method: KneeMethod::MaxCurvature } => "knee-curvature",
+            PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord, .. } => "knee",
+            PeriodPolicy::Knee { method: KneeMethod::MaxCurvature, .. } => "knee-curvature",
             PeriodPolicy::EnergyBudget { .. } => "eps-time",
             PeriodPolicy::TimeBudget { .. } => "eps-energy",
+        }
+    }
+
+    /// The objective backend this policy evaluates through, when it has
+    /// one (the frontier-aware policies; the closed-form policies are
+    /// backend-less by definition).
+    pub fn backend(&self) -> Option<Backend> {
+        match self {
+            PeriodPolicy::Knee { backend, .. }
+            | PeriodPolicy::EnergyBudget { backend, .. }
+            | PeriodPolicy::TimeBudget { backend, .. } => Some(*backend),
+            _ => None,
+        }
+    }
+
+    /// Re-target the frontier-aware policies at `backend`
+    /// (no-op for the closed-form policies, which have no backend to
+    /// swap — see the module docs).
+    pub fn with_backend(self, backend: Backend) -> PeriodPolicy {
+        match self {
+            PeriodPolicy::Knee { method, .. } => PeriodPolicy::Knee { method, backend },
+            PeriodPolicy::EnergyBudget { max_time_overhead, .. } => {
+                PeriodPolicy::EnergyBudget { max_time_overhead, backend }
+            }
+            PeriodPolicy::TimeBudget { max_energy_overhead, .. } => {
+                PeriodPolicy::TimeBudget { max_energy_overhead, backend }
+            }
+            other => other,
         }
     }
 
@@ -69,17 +109,22 @@ impl PeriodPolicy {
     /// `knee[:curvature]` for the frontier knee, `eps-time:<pct>` /
     /// `eps-energy:<pct>` for the budgeted trade-offs). Numeric
     /// parameters must be finite — and positive for `fixed:`,
-    /// non-negative for the budgets — or parsing fails.
+    /// non-negative for the budgets — or parsing fails. Frontier-aware
+    /// policies parse with the first-order backend; apply
+    /// [`Self::with_backend`] for the exact one.
     pub fn parse(s: &str) -> Option<PeriodPolicy> {
+        let backend = Backend::FirstOrder;
         match s {
             "algo-t" | "algot" | "time" => Some(PeriodPolicy::AlgoT),
             "algo-e" | "algoe" | "energy" => Some(PeriodPolicy::AlgoE),
             "young" => Some(PeriodPolicy::Young),
             "daly" => Some(PeriodPolicy::Daly),
             "knee" | "knee:chord" => {
-                Some(PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord })
+                Some(PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord, backend })
             }
-            "knee:curvature" => Some(PeriodPolicy::Knee { method: KneeMethod::MaxCurvature }),
+            "knee:curvature" => {
+                Some(PeriodPolicy::Knee { method: KneeMethod::MaxCurvature, backend })
+            }
             other => {
                 if let Some(v) = other.strip_prefix("fixed:") {
                     // `parse::<f64>` happily accepts "NaN", "inf" and
@@ -89,13 +134,17 @@ impl PeriodPolicy {
                 }
                 if let Some(v) = other.strip_prefix("eps-time:") {
                     let x = v.parse::<f64>().ok()?;
-                    return (x.is_finite() && x >= 0.0)
-                        .then_some(PeriodPolicy::EnergyBudget { max_time_overhead: x });
+                    return (x.is_finite() && x >= 0.0).then_some(PeriodPolicy::EnergyBudget {
+                        max_time_overhead: x,
+                        backend,
+                    });
                 }
                 if let Some(v) = other.strip_prefix("eps-energy:") {
                     let x = v.parse::<f64>().ok()?;
-                    return (x.is_finite() && x >= 0.0)
-                        .then_some(PeriodPolicy::TimeBudget { max_energy_overhead: x });
+                    return (x.is_finite() && x >= 0.0).then_some(PeriodPolicy::TimeBudget {
+                        max_energy_overhead: x,
+                        backend,
+                    });
                 }
                 None
             }
@@ -111,12 +160,12 @@ impl PeriodPolicy {
             PeriodPolicy::Young => s.clamp_period(young(s)),
             PeriodPolicy::Daly => s.clamp_period(daly(s)),
             PeriodPolicy::Fixed(t) => s.clamp_period(*t),
-            PeriodPolicy::Knee { method } => online::knee_period(s, *method),
-            PeriodPolicy::EnergyBudget { max_time_overhead } => {
-                online::min_energy_period(s, *max_time_overhead)
+            PeriodPolicy::Knee { method, backend } => online::knee_period(s, *method, *backend),
+            PeriodPolicy::EnergyBudget { max_time_overhead, backend } => {
+                online::min_energy_period(s, *max_time_overhead, *backend)
             }
-            PeriodPolicy::TimeBudget { max_energy_overhead } => {
-                online::min_time_period(s, *max_energy_overhead)
+            PeriodPolicy::TimeBudget { max_energy_overhead, backend } => {
+                online::min_time_period(s, *max_energy_overhead, *backend)
             }
         }
     }
@@ -125,8 +174,12 @@ impl PeriodPolicy {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::exact::RecoveryModel;
     use crate::model::params::{CheckpointParams, PowerParams};
     use crate::pareto::{min_energy_with_time_overhead, min_time_with_energy_overhead};
+
+    const FO: Backend = Backend::FirstOrder;
+    const EXACT: Backend = Backend::Exact(RecoveryModel::Ideal);
 
     fn scenario() -> Scenario {
         let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, 0.5).unwrap();
@@ -142,11 +195,26 @@ mod tests {
             ("young", PeriodPolicy::Young),
             ("daly", PeriodPolicy::Daly),
             ("fixed:42.5", PeriodPolicy::Fixed(42.5)),
-            ("knee", PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord }),
-            ("knee:chord", PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord }),
-            ("knee:curvature", PeriodPolicy::Knee { method: KneeMethod::MaxCurvature }),
-            ("eps-time:5", PeriodPolicy::EnergyBudget { max_time_overhead: 5.0 }),
-            ("eps-energy:2.5", PeriodPolicy::TimeBudget { max_energy_overhead: 2.5 }),
+            (
+                "knee",
+                PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord, backend: FO },
+            ),
+            (
+                "knee:chord",
+                PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord, backend: FO },
+            ),
+            (
+                "knee:curvature",
+                PeriodPolicy::Knee { method: KneeMethod::MaxCurvature, backend: FO },
+            ),
+            (
+                "eps-time:5",
+                PeriodPolicy::EnergyBudget { max_time_overhead: 5.0, backend: FO },
+            ),
+            (
+                "eps-energy:2.5",
+                PeriodPolicy::TimeBudget { max_energy_overhead: 2.5, backend: FO },
+            ),
         ] {
             assert_eq!(PeriodPolicy::parse(s), Some(p));
         }
@@ -164,6 +232,37 @@ mod tests {
         assert!(PeriodPolicy::parse("eps-time:0").is_some());
         for bad in ["eps-time:-1", "eps-time:NaN", "eps-energy:inf", "eps-energy:-0.5"] {
             assert_eq!(PeriodPolicy::parse(bad), None, "{bad}");
+        }
+    }
+
+    #[test]
+    fn with_backend_retargets_only_the_frontier_policies() {
+        let knee = PeriodPolicy::parse("knee").unwrap().with_backend(EXACT);
+        assert_eq!(
+            knee,
+            PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord, backend: EXACT }
+        );
+        assert_eq!(knee.backend(), Some(EXACT));
+        let eps = PeriodPolicy::parse("eps-time:5").unwrap().with_backend(EXACT);
+        assert_eq!(
+            eps,
+            PeriodPolicy::EnergyBudget { max_time_overhead: 5.0, backend: EXACT }
+        );
+        let eps = PeriodPolicy::parse("eps-energy:5").unwrap().with_backend(EXACT);
+        assert_eq!(
+            eps,
+            PeriodPolicy::TimeBudget { max_energy_overhead: 5.0, backend: EXACT }
+        );
+        // Closed-form policies are untouched and report no backend.
+        for p in [
+            PeriodPolicy::AlgoT,
+            PeriodPolicy::AlgoE,
+            PeriodPolicy::Young,
+            PeriodPolicy::Daly,
+            PeriodPolicy::Fixed(7.0),
+        ] {
+            assert_eq!(p.with_backend(EXACT), p);
+            assert_eq!(p.backend(), None);
         }
     }
 
@@ -189,22 +288,48 @@ mod tests {
         let t = PeriodPolicy::AlgoT.period(&s).unwrap();
         let e = PeriodPolicy::AlgoE.period(&s).unwrap();
         for method in [KneeMethod::MaxDistanceToChord, KneeMethod::MaxCurvature] {
-            let k = PeriodPolicy::Knee { method }.period(&s).unwrap();
+            let k = PeriodPolicy::Knee { method, backend: FO }.period(&s).unwrap();
             assert!(k > t && k < e, "{method:?}: {k} outside ({t}, {e})");
         }
     }
 
     #[test]
+    fn exact_knee_sits_between_the_exact_optima_and_above_the_first_order_knee() {
+        let s = scenario();
+        let fo_knee = PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord, backend: FO }
+            .period(&s)
+            .unwrap();
+        let ex_knee =
+            PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord, backend: EXACT }
+                .period(&s)
+                .unwrap();
+        let tt = EXACT.t_time_opt(&s).unwrap();
+        let te = EXACT.t_energy_opt(&s).unwrap();
+        assert!(ex_knee > tt && ex_knee < te, "{ex_knee} outside ({tt}, {te})");
+        // At mu=300 the exact knee runs ~10% longer than the first-order
+        // one (the knee-drift headline).
+        assert!(ex_knee > fo_knee * 1.05, "exact {ex_knee} !> first-order {fo_knee}");
+    }
+
+    #[test]
     fn budget_policies_match_the_epsilon_solves() {
         let s = scenario();
-        let sol = min_energy_with_time_overhead(&s, 5.0).unwrap();
-        let p = PeriodPolicy::EnergyBudget { max_time_overhead: 5.0 }.period(&s).unwrap();
-        assert_eq!(p.to_bits(), sol.period.to_bits());
-        let sol = min_time_with_energy_overhead(&s, 5.0).unwrap();
-        let p = PeriodPolicy::TimeBudget { max_energy_overhead: 5.0 }.period(&s).unwrap();
-        assert_eq!(p.to_bits(), sol.period.to_bits());
+        for backend in [FO, EXACT] {
+            let sol = min_energy_with_time_overhead(&s, 5.0, backend).unwrap();
+            let p = PeriodPolicy::EnergyBudget { max_time_overhead: 5.0, backend }
+                .period(&s)
+                .unwrap();
+            assert_eq!(p.to_bits(), sol.period.to_bits(), "{}", backend.name());
+            let sol = min_time_with_energy_overhead(&s, 5.0, backend).unwrap();
+            let p = PeriodPolicy::TimeBudget { max_energy_overhead: 5.0, backend }
+                .period(&s)
+                .unwrap();
+            assert_eq!(p.to_bits(), sol.period.to_bits(), "{}", backend.name());
+        }
         // Invalid budgets surface as errors, not panics.
-        assert!(PeriodPolicy::EnergyBudget { max_time_overhead: -1.0 }.period(&s).is_err());
+        assert!(PeriodPolicy::EnergyBudget { max_time_overhead: -1.0, backend: FO }
+            .period(&s)
+            .is_err());
     }
 
     #[test]
@@ -220,14 +345,26 @@ mod tests {
         assert_eq!(PeriodPolicy::AlgoT.name(), "algo-t");
         assert_eq!(PeriodPolicy::Fixed(1.0).name(), "fixed");
         assert_eq!(
-            PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord }.name(),
+            PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord, backend: FO }.name(),
             "knee"
         );
         assert_eq!(
-            PeriodPolicy::Knee { method: KneeMethod::MaxCurvature }.name(),
+            PeriodPolicy::Knee { method: KneeMethod::MaxCurvature, backend: EXACT }.name(),
             "knee-curvature"
         );
-        assert_eq!(PeriodPolicy::EnergyBudget { max_time_overhead: 5.0 }.name(), "eps-time");
-        assert_eq!(PeriodPolicy::TimeBudget { max_energy_overhead: 5.0 }.name(), "eps-energy");
+        assert_eq!(
+            PeriodPolicy::EnergyBudget { max_time_overhead: 5.0, backend: FO }.name(),
+            "eps-time"
+        );
+        assert_eq!(
+            PeriodPolicy::TimeBudget { max_energy_overhead: 5.0, backend: EXACT }.name(),
+            "eps-energy"
+        );
+        // The name is backend-independent (CSV/figure join keys); the
+        // backend is reported separately.
+        assert_eq!(
+            PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord, backend: EXACT }.name(),
+            "knee"
+        );
     }
 }

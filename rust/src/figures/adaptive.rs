@@ -17,6 +17,7 @@
 
 use crate::config::presets::tradeoff_presets;
 use crate::coordinator::policy::PeriodPolicy;
+use crate::model::Backend;
 use crate::pareto::KneeMethod;
 use crate::sweep::{CellOutput, GridSpec};
 use crate::util::table::{fnum, Table};
@@ -28,7 +29,10 @@ pub fn policies() -> Vec<PeriodPolicy> {
         PeriodPolicy::AlgoE,
         PeriodPolicy::Young,
         PeriodPolicy::Daly,
-        PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord },
+        PeriodPolicy::Knee {
+            method: KneeMethod::MaxDistanceToChord,
+            backend: Backend::FirstOrder,
+        },
     ]
 }
 

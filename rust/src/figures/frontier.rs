@@ -10,6 +10,7 @@
 //! pool, memoised like every other grid.
 
 use crate::config::presets::tradeoff_presets;
+use crate::model::Backend;
 use crate::pareto::{family_frontiers, FamilyFrontier};
 use crate::util::table::{fnum, Table};
 
@@ -18,10 +19,11 @@ pub fn presets() -> Vec<(String, crate::model::Scenario)> {
     tradeoff_presets().into_iter().map(|(label, s)| (label.to_string(), s)).collect()
 }
 
-/// Compute every preset's frontier at `points` samples, as one grid
-/// batch seeded from [`super::FIGURE_SEED`].
+/// Compute every preset's first-order frontier at `points` samples, as
+/// one grid batch seeded from [`super::FIGURE_SEED`]. (The first-order
+/// vs exact comparison lives in [`super::knee_drift`].)
 pub fn series(points: usize) -> Vec<FamilyFrontier> {
-    family_frontiers(presets(), points, super::FIGURE_SEED)
+    family_frontiers(presets(), points, super::FIGURE_SEED, Backend::FirstOrder)
 }
 
 /// One row per frontier point: the full curves, CSV-ready.
@@ -35,7 +37,7 @@ pub fn table(frontiers: &[FamilyFrontier]) -> Table {
         "energy_gain_pct",
     ]);
     for f in frontiers {
-        let Some(sum) = &f.summary else { continue };
+        let Ok(sum) = &f.summary else { continue };
         for p in &sum.points {
             t.row(&[
                 f.label.clone(),
@@ -63,7 +65,7 @@ pub fn knee_table(frontiers: &[FamilyFrontier]) -> Table {
         "knee_curv_period",
     ]);
     for f in frontiers {
-        let Some(sum) = &f.summary else { continue };
+        let Ok(sum) = &f.summary else { continue };
         let chord = sum.knee_chord.as_ref();
         let curv = sum.knee_curvature.as_ref();
         t.row(&[
@@ -87,7 +89,7 @@ pub fn knee_headlines(frontiers: &[FamilyFrontier]) -> Vec<(String, f64, f64)> {
     frontiers
         .iter()
         .filter_map(|f| {
-            let sum = f.summary.as_ref()?;
+            let sum = f.summary.as_ref().ok()?;
             let k = sum.knee_chord.as_ref()?;
             Some((
                 f.label.clone(),
@@ -107,7 +109,7 @@ mod tests {
         let fr = series(17);
         assert_eq!(fr.len(), presets().len());
         for f in &fr {
-            assert!(f.summary.is_some(), "{} left the domain", f.label);
+            assert!(f.summary.is_ok(), "{} left the domain", f.label);
         }
     }
 
@@ -116,7 +118,7 @@ mod tests {
         let fr = series(9);
         let pts: usize = fr
             .iter()
-            .filter_map(|f| f.summary.as_ref().map(|s| s.points.len()))
+            .filter_map(|f| f.summary.as_ref().ok().map(|s| s.points.len()))
             .sum();
         assert_eq!(table(&fr).n_rows(), pts);
         assert_eq!(knee_table(&fr).n_rows(), fr.len());
@@ -134,7 +136,7 @@ mod tests {
             let full = fr
                 .iter()
                 .find(|f| &f.label == label)
-                .and_then(|f| f.summary.as_ref())
+                .and_then(|f| f.summary.as_ref().ok())
                 .unwrap();
             let last = full.points.last().unwrap();
             let full_gain = full.energy_gain_pct(last);

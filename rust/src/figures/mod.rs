@@ -8,6 +8,7 @@
 //! | [`fig3::series`]    | Fig. 3a/3b — ratios vs node count |
 //! | [`headline::compute`] | §5 headline numbers |
 //! | [`frontier::series`] | time–energy Pareto frontiers + knees (beyond the paper) |
+//! | [`knee_drift::series`] | first-order vs exact knee drift per preset + small-μ stress rows (beyond the paper) |
 //! | [`adaptive::series`] | adaptive knee policy vs AlgoT/AlgoE/Young/Daly under injected failures (beyond the paper) |
 //! | [`ablations`]       | ω sweep, first-order accuracy, γ sweep, MSK, Weibull robustness |
 //!
@@ -27,6 +28,7 @@ pub mod fig2;
 pub mod fig3;
 pub mod frontier;
 pub mod headline;
+pub mod knee_drift;
 
 /// Base seed every figure/ablation grid derives its cell seeds from.
 pub const FIGURE_SEED: u64 = 2013;

@@ -46,7 +46,11 @@
 //! ([`sweep::CellJob::Frontier`]), so multi-scenario frontier families
 //! are parallel, deterministic, and memo-cached like every other grid;
 //! `figures::frontier` renders them and the CLI `pareto` subcommand
-//! exports them as JSON artifacts.
+//! exports them as JSON artifacts. The whole stack is generic over the
+//! objective-model backend ([`model::Backend`]): the paper's
+//! first-order closed forms by default, or the exact renewal model
+//! (`--model exact`) whose knee sits 6–44% above the first-order one in
+//! the frequent-failure regime (`figures::knee_drift`).
 
 pub mod cli;
 pub mod config;

@@ -23,12 +23,13 @@ use ckpt_period::model::msk::compare_with_msk;
 use ckpt_period::model::params::{CheckpointParams, PowerParams, Scenario};
 use ckpt_period::model::ratios::compare;
 use ckpt_period::model::time::{daly, t_final, t_time_opt, young};
+use ckpt_period::model::{Backend, RecoveryModel};
 use ckpt_period::pareto::{
     family_frontiers, min_energy_with_time_overhead, min_time_with_energy_overhead, validate,
     EpsSolution, Frontier, FrontierPoint, Knee, KneeMethod,
 };
 use ckpt_period::runtime::{write_json_artifact, ArtifactDir, Runtime};
-use ckpt_period::sweep::{CellOutput, GridSpec};
+use ckpt_period::sweep::{Cell, CellJob, CellOutput, GridSpec};
 use ckpt_period::util::json::Json;
 use ckpt_period::util::table::{fnum, Table};
 
@@ -39,13 +40,18 @@ Reproduction of Aupy et al., 'Optimal Checkpointing Period: Time vs. Energy' (20
   sweep     CSV of T_final/E_final over a period grid
   pareto    time-energy Pareto frontier: knees, eps-constraint solves,
             optional Monte-Carlo validation, JSON artifact (--out);
-            --family <presets|power-ratio> streams one artifact per scenario
+            --family <presets|power-ratio> streams one artifact per scenario;
+            --model first-order|exact[:ideal|:restarting] picks the
+            objective backend (exact renewal vs the paper's closed forms)
   simulate  Monte-Carlo validation of the model on a scenario;
             --adaptive runs the online controller (any --policy,
-            including knee and eps-time:<x>/eps-energy:<x> budgets)
-  figures   regenerate every paper figure (incl. the frontier and the
-            adaptive policy comparison) as CSV
-  train     fault-tolerant PJRT training run
+            including knee and eps-time:<x>/eps-energy:<x> budgets);
+            --model retargets the frontier-aware policies and the
+            model reference columns at the exact backend
+  figures   regenerate every paper figure (incl. the frontier, the
+            first-order-vs-exact knee drift, and the adaptive policy
+            comparison) as CSV
+  train     fault-tolerant PJRT training run (--model as in simulate)
   info      artifact inventory
 
 Run a subcommand with --help for its flags.";
@@ -289,21 +295,24 @@ fn cmd_pareto(argv: &[String]) -> Result<(), String> {
     specs.push(ArgSpec::flag("seed", "1", "base seed for --simulate cells"));
     specs.push(ArgSpec::flag("out", "", "write the full frontier as a JSON artifact"));
     specs.push(ArgSpec::flag("table-rows", "12", "frontier rows printed to stdout"));
+    specs.push(MODEL_SPEC);
     let args = Args::parse("pareto", "time-energy Pareto frontier of a scenario", &specs, argv)
         .map_err(cli_err)?;
+    let backend = parse_model(args.get("model"))?;
     let family = args.get("family").to_string();
     if !family.is_empty() {
-        return cmd_pareto_family(&args, &family);
+        return cmd_pareto_family(&args, &family, backend);
     }
     let s = scenario_from(&args)?;
     let points = args.get_usize("points").map_err(cli_err)?.max(2);
-    let frontier = Frontier::compute(&s, points).map_err(|e| e.to_string())?;
+    let frontier = Frontier::compute(&s, points, backend).map_err(|e| e.to_string())?;
 
     let first = *frontier.time_opt_point();
     let last = *frontier.energy_opt_point();
     println!(
-        "frontier: {} points, T in [{:.2}, {:.2}] min, hypervolume {:.4}",
+        "frontier: {} points (model {}), T in [{:.2}, {:.2}] min, hypervolume {:.4}",
         frontier.len(),
+        backend.name(),
         frontier.t_time_opt,
         frontier.t_energy_opt,
         frontier.hypervolume()
@@ -376,7 +385,7 @@ fn cmd_pareto(argv: &[String]) -> Result<(), String> {
         if eps < 0.0 {
             return Err(format!("--eps-time must be >= 0, got {eps}"));
         }
-        let sol = min_energy_with_time_overhead(&s, eps).map_err(|e| e.to_string())?;
+        let sol = min_energy_with_time_overhead(&s, eps, backend).map_err(|e| e.to_string())?;
         println!(
             "eps-time {eps}%: min energy {:.1} mW*min at T = {:.2} min \
              ({:.2}% energy gain, {:.2}% time overhead, constraint {})",
@@ -393,7 +402,7 @@ fn cmd_pareto(argv: &[String]) -> Result<(), String> {
         if eps < 0.0 {
             return Err(format!("--eps-energy must be >= 0, got {eps}"));
         }
-        let sol = min_time_with_energy_overhead(&s, eps).map_err(|e| e.to_string())?;
+        let sol = min_time_with_energy_overhead(&s, eps, backend).map_err(|e| e.to_string())?;
         println!(
             "eps-energy {eps}%: min makespan {:.1} min at T = {:.2} min \
              ({:.2}% energy gain, {:.2}% time overhead, constraint {})",
@@ -465,6 +474,7 @@ fn cmd_pareto(argv: &[String]) -> Result<(), String> {
         let points_json = frontier_points_json(frontier.points());
         let doc = Json::obj(vec![
             ("schema", Json::Str("ckpt-period/pareto-frontier/v1".into())),
+            ("model", Json::Str(backend.name().into())),
             ("scenario", spec.to_json()),
             (
                 "frontier",
@@ -489,7 +499,7 @@ fn cmd_pareto(argv: &[String]) -> Result<(), String> {
 /// `pareto --family`: every scenario of a named family through
 /// [`family_frontiers`] (parallel, memoised `CellJob::Frontier` cells),
 /// one JSON artifact streamed out per scenario.
-fn cmd_pareto_family(args: &Args, family: &str) -> Result<(), String> {
+fn cmd_pareto_family(args: &Args, family: &str, backend: Backend) -> Result<(), String> {
     // The single-scenario extras have no meaning per family; silently
     // dropping them would hide that the user's solve never ran.
     for flag in ["eps-time", "eps-energy", "out"] {
@@ -523,16 +533,22 @@ fn cmd_pareto_family(args: &Args, family: &str) -> Result<(), String> {
     if scenarios.is_empty() {
         return Err("family has no in-domain scenarios at these parameters".into());
     }
-    let frontiers = family_frontiers(scenarios, points, seed);
+    let frontiers = family_frontiers(scenarios, points, seed, backend);
     let mut written = 0usize;
     for f in &frontiers {
-        let Some(sum) = &f.summary else {
-            println!("{}: outside the model's domain, skipped", f.label);
-            continue;
+        let sum = match &f.summary {
+            Ok(sum) => sum,
+            // Surface the model error (out-of-domain reason) instead of
+            // silently dropping the row.
+            Err(e) => {
+                println!("{}: skipped ({e})", f.label);
+                continue;
+            }
         };
         let path = out_dir.join(format!("{}.json", f.label));
         let doc = Json::obj(vec![
             ("schema", Json::Str("ckpt-period/pareto-frontier/v1".into())),
+            ("model", Json::Str(backend.name().into())),
             ("family", Json::Str(family.to_string())),
             ("label", Json::Str(f.label.clone())),
             ("scenario", ScenarioSpec { scenario: f.scenario, n_nodes: None }.to_json()),
@@ -590,14 +606,16 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     ));
     specs.push(ArgSpec::flag("replicates", "200", "Monte-Carlo replicates"));
     specs.push(ArgSpec::flag("seed", "1", "base seed (cell seeds derive from it)"));
+    specs.push(MODEL_SPEC);
     let args = Args::parse("simulate", "Monte-Carlo validation of the model", &specs, argv)
         .map_err(cli_err)?;
     let s = scenario_from(&args)?;
-    let policy = parse_policy(args.get("policy"))?;
+    let backend = parse_model(args.get("model"))?;
+    let policy = parse_policy(args.get("policy"))?.with_backend(backend);
     let reps = args.get_usize("replicates").map_err(cli_err)?;
     let seed = args.get_u64("seed").map_err(cli_err)?;
     if args.switch("adaptive") {
-        return cmd_simulate_adaptive(&s, policy, reps, seed);
+        return cmd_simulate_adaptive(&s, policy, backend, reps, seed);
     }
     let period = {
         let p = args.get_f64("period").map_err(cli_err)?;
@@ -610,9 +628,19 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
 
     // A single Sim cell on the grid engine: replicates fan out on the
     // persistent pool, and re-running the same scenario in-process is a
-    // cache hit.
+    // cache hit. Simulate the failure process the selected model
+    // actually assumes — the first-order forms and exact:ideal model
+    // failure-free recovery, plain exact (restarting) models failures
+    // striking during D + R — so the table is an apples-to-apples
+    // validation (the convention `tests/sim_vs_model.rs` and
+    // `pareto::validate` use).
+    let failures_during_recovery = matches!(backend, Backend::Exact(RecoveryModel::Restarting));
     let mut spec = GridSpec::new(seed);
-    spec.push_sim(s, period, reps);
+    spec.push(Cell {
+        scenario: s,
+        failure: None,
+        job: CellJob::Sim { period, replicates: reps, failures_during_recovery },
+    });
     let results = spec.evaluate();
     let mc = results[0].output.sim().expect("sim cell output");
     let (mk_lo, mk_hi) = mc.makespan_ci95();
@@ -620,20 +648,20 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     let mut t = Table::new(&["quantity", "model", "simulated (95% CI)"]);
     t.row(&[
         "makespan_min".into(),
-        fnum(t_final(&s, period), 1),
+        fnum(backend.t_final(&s, period), 1),
         format!("{} [{}, {}]", fnum(mc.makespan_mean, 1), fnum(mk_lo, 1), fnum(mk_hi, 1)),
     ]);
     t.row(&[
         "energy_mW_min".into(),
-        fnum(e_final(&s, period), 1),
+        fnum(backend.e_final(&s, period), 1),
         format!("{} [{}, {}]", fnum(mc.energy_mean, 1), fnum(en_lo, 1), fnum(en_hi, 1)),
     ]);
     t.row(&[
         "failures".into(),
-        fnum(t_final(&s, period) / s.mu, 2),
+        fnum(backend.expected_failures(&s, period), 2),
         fnum(mc.failures_mean, 2),
     ]);
-    println!("period = {period:.2} min, {reps} replicates");
+    println!("period = {period:.2} min, {reps} replicates, model {}", backend.name());
     println!("{}", t.render());
     Ok(())
 }
@@ -654,24 +682,56 @@ fn parse_policy(raw: &str) -> Result<PeriodPolicy, String> {
     })
 }
 
+/// The shared `--model` flag: which objective backend evaluates
+/// `T_final`/`E_final` and their optima.
+const MODEL_SPEC: ArgSpec = ArgSpec::flag(
+    "model",
+    "first-order",
+    "objective model: first-order (paper closed forms) | exact (renewal, \
+     failures during recovery) | exact:ideal | exact:restarting",
+);
+
+/// Map an unparseable `--model` value to a [`CliError`] with the full
+/// grammar in the message, mirroring the `--policy` error path.
+fn parse_model(raw: &str) -> Result<Backend, String> {
+    Backend::parse(raw).ok_or_else(|| {
+        cli_err(CliError::InvalidValue(
+            "model".into(),
+            raw.into(),
+            format!("expected {}", Backend::PARSE_HELP),
+        ))
+    })
+}
+
 /// `simulate --adaptive`: one AdaptiveRun cell on the grid engine —
 /// the online controller re-estimates (C, R, mu) along every sample
 /// path and re-reads the policy period after each checkpoint/recovery.
 fn cmd_simulate_adaptive(
     s: &Scenario,
     policy: PeriodPolicy,
+    backend: Backend,
     reps: usize,
     seed: u64,
 ) -> Result<(), String> {
+    // Match the failure process to the selected model's recovery
+    // assumption, exactly like the non-adaptive path: the static-model
+    // reference columns below come from `backend`, so the sample paths
+    // must play by the same rules for the table to be comparable.
+    let failures_during_recovery = matches!(backend, Backend::Exact(RecoveryModel::Restarting));
     let mut spec = GridSpec::new(seed);
-    spec.push_adaptive(*s, policy, reps);
+    spec.push(Cell {
+        scenario: *s,
+        failure: None,
+        job: CellJob::AdaptiveRun { policy, replicates: reps, failures_during_recovery },
+    });
     let results = spec.evaluate();
     let mc = results[0]
         .output
         .adaptive()
         .ok_or("scenario has no feasible period (out of the model's domain)")?;
 
-    // The static reference: the policy's period on the true scenario.
+    // The static reference: the policy's period on the true scenario,
+    // with the model columns evaluated by the selected backend.
     let static_period = policy.period(s).map_err(|e| e.to_string())?;
     let mut t = Table::new(&["quantity", "model @ static period", "adaptive sim (95% CI)"]);
     t.row(&[
@@ -681,24 +741,25 @@ fn cmd_simulate_adaptive(
     ]);
     t.row(&[
         "makespan_min".into(),
-        fnum(t_final(s, static_period), 1),
+        fnum(backend.t_final(s, static_period), 1),
         format!("{} ({})", fnum(mc.makespan_mean, 1), fnum(mc.makespan_ci95_half, 1)),
     ]);
     t.row(&[
         "energy_mW_min".into(),
-        fnum(e_final(s, static_period), 1),
+        fnum(backend.e_final(s, static_period), 1),
         format!("{} ({})", fnum(mc.energy_mean, 1), fnum(mc.energy_ci95_half, 1)),
     ]);
     t.row(&[
         "failures".into(),
-        fnum(t_final(s, static_period) / s.mu, 2),
+        fnum(backend.expected_failures(s, static_period), 2),
         fnum(mc.failures_mean, 2),
     ]);
     t.row(&["checkpoints".into(), String::new(), fnum(mc.checkpoints_mean, 1)]);
     t.row(&["period_updates".into(), String::new(), fnum(mc.period_updates_mean, 1)]);
     println!(
-        "adaptive simulation: policy {}, {reps} replicates (prior mu = scenario mu)",
-        policy.name()
+        "adaptive simulation: policy {}, model {}, {reps} replicates (prior mu = scenario mu)",
+        policy.name(),
+        backend.name()
     );
     println!("{}", t.render());
     Ok(())
@@ -736,6 +797,13 @@ fn cmd_figures(argv: &[String]) -> Result<(), String> {
         .map_err(|e| e.to_string())?;
     for (label, gain, overhead) in figures::frontier::knee_headlines(&fr) {
         println!("frontier knee [{label}]: {gain:.1}% energy gain for {overhead:.1}% more time");
+    }
+
+    let kd = figures::knee_drift::series();
+    figures::persist(&figures::knee_drift::table(&kd), &dir, "knee_drift")
+        .map_err(|e| e.to_string())?;
+    for (label, drift) in figures::knee_drift::headlines(&kd, 5.0) {
+        println!("knee drift [{label}]: exact knee {drift:+.1}% vs first-order");
     }
 
     let ad = figures::adaptive::series(64);
@@ -776,12 +844,14 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
         ArgSpec::switch("no-failures", "disable failure injection"),
         ArgSpec::switch("adaptive", "re-estimate C/R/mu online and adapt the period"),
         ArgSpec::flag("report", "", "write the JSON run report here"),
+        MODEL_SPEC,
     ];
     let args = Args::parse("train", "fault-tolerant PJRT training run", &specs, argv)
         .map_err(cli_err)?;
 
     let mut cfg = CoordinatorConfig::new(args.get("artifacts"), args.get("ckpt-dir"));
-    cfg.policy = parse_policy(args.get("policy"))?;
+    cfg.policy = parse_policy(args.get("policy"))?
+        .with_backend(parse_model(args.get("model"))?);
     cfg.steps = args.get_u64("steps").map_err(cli_err)?;
     cfg.mu_s = args.get_f64("mu").map_err(cli_err)?;
     cfg.downtime_s = args.get_f64("downtime").map_err(cli_err)?;

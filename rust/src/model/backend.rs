@@ -1,0 +1,403 @@
+//! The objective-model backend: first-order closed forms vs the exact
+//! renewal model, behind one dispatch point.
+//!
+//! Everything downstream of the model — the Pareto frontier
+//! ([`crate::pareto`]), the ε-constraint solves, the online knee/budget
+//! policies ([`crate::coordinator::policy`]), grid cells
+//! ([`crate::sweep`]), figures and the CLI — evaluates the two
+//! objectives through a [`Backend`] instead of calling
+//! [`time::t_final`]/[`energy::e_final`] directly:
+//!
+//! * [`Backend::FirstOrder`] — the paper's §3 closed forms and their
+//!   algebraic optima (Eq. 1 and the stationarity quadratic). The
+//!   default everywhere; exactly the pre-backend behaviour.
+//! * [`Backend::Exact`] — the exact renewal expectations of
+//!   [`super::exact`] (no `T/μ` truncation), parameterised by how
+//!   recovery interacts with further failures
+//!   ([`RecoveryModel::Ideal`] or [`RecoveryModel::Restarting`]).
+//!   The optima have no closed form; they are computed by
+//!   [`grid_then_golden`](super::optimize::grid_then_golden) and
+//!   **memoised process-wide** keyed on the scenario's exact parameter
+//!   bits — the cached value is a pure function of its key, so grid
+//!   sweeps stay fast and results are byte-identical across thread
+//!   counts, exactly like the [`crate::sweep`] memo cache.
+//!
+//! At large `μ` the two backends agree (the truncation error scales
+//! like `1/μ`; see `rust/tests/model_backend.rs` for the property
+//! test); at small `μ` — the Exascale regime where the time–energy
+//! trade-off is widest — they drift 5–40% apart, which is why the knee
+//! policy and the frontier accept a backend at all
+//! (`figures::knee_drift` quantifies the drift per preset).
+//!
+//! # Domain
+//!
+//! The exact objectives are finite for every period `T > a`, but the
+//! backend deliberately inherits the first-order feasibility gate
+//! (`C < 2μb`, i.e. [`Scenario::clamp_period`] succeeds at `T = C`):
+//! a scenario is either usable under *both* backends or under neither,
+//! so swapping backends can never change which grid cells clamp to
+//! `None`.
+
+use super::exact::{
+    e_final_exact, exact_breakdown, t_energy_opt_exact, t_final_exact, t_time_opt_exact,
+    RecoveryModel,
+};
+use super::params::{ModelError, Scenario};
+use super::{energy, time};
+use crate::util::memo::PureMemo;
+
+/// Which objective model evaluates `T_final`/`E_final` and their
+/// optimal periods.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// The paper's first-order closed forms (§3). The default.
+    #[default]
+    FirstOrder,
+    /// The exact renewal model of [`super::exact`].
+    Exact(RecoveryModel),
+}
+
+impl Backend {
+    /// The accepted `--model` spellings, for CLI help and error
+    /// messages. Plain `exact` is `exact:restarting` — the simulator's
+    /// realistic default, where failures can strike during D + R;
+    /// `exact:ideal` matches the paper's implicit failure-free-recovery
+    /// assumption (and the first-order forms' own).
+    pub const PARSE_HELP: &'static str = "first-order|exact|exact:ideal|exact:restarting";
+
+    /// Parse a CLI-style backend name (see [`Self::PARSE_HELP`]).
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "first-order" | "first_order" => Some(Backend::FirstOrder),
+            "exact" | "exact:restarting" => Some(Backend::Exact(RecoveryModel::Restarting)),
+            "exact:ideal" => Some(Backend::Exact(RecoveryModel::Ideal)),
+            _ => None,
+        }
+    }
+
+    /// Stable display name; round-trips through [`Self::parse`].
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::FirstOrder => "first-order",
+            Backend::Exact(RecoveryModel::Restarting) => "exact",
+            Backend::Exact(RecoveryModel::Ideal) => "exact:ideal",
+        }
+    }
+
+    /// Stable encoding for cache keys and seed derivation (grid cells,
+    /// the online-policy memo). Distinct per variant, never reused.
+    pub fn key_word(&self) -> u64 {
+        match self {
+            Backend::FirstOrder => 0,
+            Backend::Exact(RecoveryModel::Ideal) => 1,
+            Backend::Exact(RecoveryModel::Restarting) => 2,
+        }
+    }
+
+    /// Expected makespan at period `t`. `+inf` outside the backend's
+    /// domain (first-order: `t ∉ (a, 2μb)`; exact: `t ≤ a`).
+    pub fn t_final(&self, s: &Scenario, t: f64) -> f64 {
+        match self {
+            Backend::FirstOrder => time::t_final(s, t),
+            Backend::Exact(m) => {
+                if t <= s.a() {
+                    f64::INFINITY
+                } else {
+                    t_final_exact(s, t, *m)
+                }
+            }
+        }
+    }
+
+    /// Expected energy at period `t` (same domain convention as
+    /// [`Self::t_final`]).
+    pub fn e_final(&self, s: &Scenario, t: f64) -> f64 {
+        match self {
+            Backend::FirstOrder => energy::e_final(s, t),
+            Backend::Exact(m) => {
+                if t <= s.a() {
+                    f64::INFINITY
+                } else {
+                    e_final_exact(s, t, *m)
+                }
+            }
+        }
+    }
+
+    /// Both objectives at period `t` in one evaluation, `(time,
+    /// energy)`. Bit-identical to calling [`Self::t_final`] and
+    /// [`Self::e_final`] — but for the exact backend it computes the
+    /// renewal breakdown once instead of twice, halving the cost of
+    /// frontier sampling (the hot path of the online-policy memo).
+    pub fn objectives(&self, s: &Scenario, t: f64) -> (f64, f64) {
+        match self {
+            Backend::FirstOrder => (time::t_final(s, t), energy::e_final(s, t)),
+            Backend::Exact(m) => {
+                if t <= s.a() {
+                    (f64::INFINITY, f64::INFINITY)
+                } else {
+                    let b = exact_breakdown(s, t, *m);
+                    (b.makespan, b.energy)
+                }
+            }
+        }
+    }
+
+    /// Expected number of failures over the whole execution at `t`, as
+    /// the simulator counts them.
+    pub fn expected_failures(&self, s: &Scenario, t: f64) -> f64 {
+        match self {
+            Backend::FirstOrder => time::expected_failures(s, t),
+            Backend::Exact(m) => {
+                if t <= s.a() {
+                    return f64::INFINITY;
+                }
+                // `exact_breakdown.failures` counts *primary* (up-time)
+                // failures — the episode starts. Under Restarting,
+                // failures also strike during D + R and the simulator
+                // counts each restart too: restarts per episode are
+                // geometric, e^{(D+R)/μ} − 1 in expectation, so the
+                // observed total is primary · e^{(D+R)/μ}.
+                let primary = exact_breakdown(s, t, *m).failures;
+                match m {
+                    RecoveryModel::Ideal => primary,
+                    RecoveryModel::Restarting => {
+                        primary * ((s.ckpt.d + s.ckpt.r) / s.mu).exp()
+                    }
+                }
+            }
+        }
+    }
+
+    /// The backend's time-optimal period, clamped to `T ≥ C`. Errors
+    /// exactly when the first-order model has no feasible period (see
+    /// the module docs on the shared domain gate).
+    pub fn t_time_opt(&self, s: &Scenario) -> Result<f64, ModelError> {
+        match self {
+            Backend::FirstOrder => time::t_time_opt(s),
+            Backend::Exact(m) => {
+                s.clamp_period(s.min_period())?;
+                Ok(cached_opt(OPT_TIME_TAG, *m, s, || t_time_opt_exact(s, *m)))
+            }
+        }
+    }
+
+    /// The backend's energy-optimal period (same contract as
+    /// [`Self::t_time_opt`]).
+    pub fn t_energy_opt(&self, s: &Scenario) -> Result<f64, ModelError> {
+        match self {
+            Backend::FirstOrder => energy::t_energy_opt(s),
+            Backend::Exact(m) => {
+                s.clamp_period(s.min_period())?;
+                Ok(cached_opt(OPT_ENERGY_TAG, *m, s, || t_energy_opt_exact(s, *m)))
+            }
+        }
+    }
+}
+
+const OPT_TIME_TAG: u64 = 1;
+const OPT_ENERGY_TAG: u64 = 2;
+
+type OptKey = [u64; 12];
+
+/// One entry per (optimum, recovery model, scenario) triple; see
+/// [`PureMemo`] for the clearing/concurrency contract.
+static OPT_MEMO: PureMemo<OptKey> = PureMemo::new(8192);
+
+fn opt_key(tag: u64, model: RecoveryModel, s: &Scenario) -> OptKey {
+    let mut k = [0u64; 12];
+    k[0] = tag;
+    k[1] = match model {
+        RecoveryModel::Ideal => 1,
+        RecoveryModel::Restarting => 2,
+    };
+    k[2..12].copy_from_slice(&s.key_bits());
+    k
+}
+
+/// Memoised numeric optimum: pure function of the key, so which thread
+/// (or concurrently running grid cell) fills the entry first cannot
+/// change the value anyone reads.
+fn cached_opt(tag: u64, model: RecoveryModel, s: &Scenario, compute: impl FnOnce() -> f64) -> f64 {
+    OPT_MEMO.get_or_compute(opt_key(tag, model, s), compute)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{fig1_scenario, tradeoff_presets};
+    use crate::model::params::{CheckpointParams, PowerParams};
+    use crate::util::stats::rel_err;
+
+    #[test]
+    fn parse_roundtrips_through_name() {
+        for b in [
+            Backend::FirstOrder,
+            Backend::Exact(RecoveryModel::Ideal),
+            Backend::Exact(RecoveryModel::Restarting),
+        ] {
+            assert_eq!(Backend::parse(b.name()), Some(b), "{}", b.name());
+        }
+        assert_eq!(
+            Backend::parse("exact:restarting"),
+            Some(Backend::Exact(RecoveryModel::Restarting))
+        );
+        for bad in ["", "exact:", "exact:lazy", "firstorder", "EXACT", "second-order"] {
+            assert_eq!(Backend::parse(bad), None, "{bad}");
+        }
+        assert_eq!(Backend::default(), Backend::FirstOrder);
+    }
+
+    #[test]
+    fn key_words_are_distinct() {
+        let words = [
+            Backend::FirstOrder.key_word(),
+            Backend::Exact(RecoveryModel::Ideal).key_word(),
+            Backend::Exact(RecoveryModel::Restarting).key_word(),
+        ];
+        for i in 0..words.len() {
+            for j in i + 1..words.len() {
+                assert_ne!(words[i], words[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn first_order_backend_is_bit_identical_to_the_closed_forms() {
+        let s = fig1_scenario(300.0, 5.5);
+        let b = Backend::FirstOrder;
+        for t in [20.0, 53.0, 100.0, 200.0] {
+            assert_eq!(b.t_final(&s, t).to_bits(), time::t_final(&s, t).to_bits());
+            assert_eq!(b.e_final(&s, t).to_bits(), energy::e_final(&s, t).to_bits());
+        }
+        assert_eq!(
+            b.t_time_opt(&s).unwrap().to_bits(),
+            time::t_time_opt(&s).unwrap().to_bits()
+        );
+        assert_eq!(
+            b.t_energy_opt(&s).unwrap().to_bits(),
+            energy::t_energy_opt(&s).unwrap().to_bits()
+        );
+    }
+
+    #[test]
+    fn exact_backend_matches_the_exact_module() {
+        let s = fig1_scenario(120.0, 5.5);
+        for m in [RecoveryModel::Ideal, RecoveryModel::Restarting] {
+            let b = Backend::Exact(m);
+            for t in [30.0, 60.0, 120.0] {
+                assert_eq!(b.t_final(&s, t).to_bits(), t_final_exact(&s, t, m).to_bits());
+                assert_eq!(b.e_final(&s, t).to_bits(), e_final_exact(&s, t, m).to_bits());
+            }
+            assert_eq!(b.t_time_opt(&s).unwrap(), t_time_opt_exact(&s, m));
+            assert_eq!(b.t_energy_opt(&s).unwrap(), t_energy_opt_exact(&s, m));
+        }
+    }
+
+    #[test]
+    fn exact_optima_are_memoised_bit_stably() {
+        let s = fig1_scenario(60.0, 5.5);
+        let b = Backend::Exact(RecoveryModel::Ideal);
+        let a1 = b.t_time_opt(&s).unwrap();
+        let a2 = b.t_time_opt(&s).unwrap();
+        assert_eq!(a1.to_bits(), a2.to_bits());
+        let e1 = b.t_energy_opt(&s).unwrap();
+        let e2 = b.t_energy_opt(&s).unwrap();
+        assert_eq!(e1.to_bits(), e2.to_bits());
+        // Time and energy optima do not alias in the memo.
+        assert_ne!(a1.to_bits(), e1.to_bits());
+    }
+
+    #[test]
+    fn out_of_first_order_domain_errors_under_every_backend() {
+        // C >= 2*mu*b: the shared feasibility gate rejects the scenario
+        // for first-order AND exact, keeping clamp regimes aligned.
+        let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, 0.5).unwrap();
+        let power = PowerParams::from_rho(5.5, 1.0, 0.0).unwrap();
+        let s = Scenario::new(ckpt, power, 17.0, 1000.0).unwrap();
+        for b in [
+            Backend::FirstOrder,
+            Backend::Exact(RecoveryModel::Ideal),
+            Backend::Exact(RecoveryModel::Restarting),
+        ] {
+            assert!(b.t_time_opt(&s).is_err(), "{}", b.name());
+            assert!(b.t_energy_opt(&s).is_err(), "{}", b.name());
+        }
+    }
+
+    #[test]
+    fn sub_domain_periods_are_infinite_not_panics() {
+        let s = fig1_scenario(300.0, 5.5);
+        let b = Backend::Exact(RecoveryModel::Ideal);
+        // t <= a = 5: the exact forms would assert; the backend returns
+        // +inf like the first-order forms do outside their domain.
+        assert!(b.t_final(&s, 5.0).is_infinite());
+        assert!(b.e_final(&s, 2.0).is_infinite());
+        assert!(b.expected_failures(&s, 5.0).is_infinite());
+    }
+
+    #[test]
+    fn backends_converge_at_large_mu_and_drift_at_small_mu() {
+        let quiet = fig1_scenario(1e5, 5.5);
+        let b = Backend::Exact(RecoveryModel::Ideal);
+        assert!(
+            rel_err(
+                b.t_time_opt(&quiet).unwrap(),
+                Backend::FirstOrder.t_time_opt(&quiet).unwrap()
+            ) < 0.01
+        );
+        let stressed = fig1_scenario(60.0, 5.5);
+        assert!(
+            rel_err(
+                b.t_time_opt(&stressed).unwrap(),
+                Backend::FirstOrder.t_time_opt(&stressed).unwrap()
+            ) > 0.1
+        );
+    }
+
+    #[test]
+    fn objectives_are_bit_identical_to_the_separate_evaluations() {
+        let s = fig1_scenario(120.0, 5.5);
+        for b in [
+            Backend::FirstOrder,
+            Backend::Exact(RecoveryModel::Ideal),
+            Backend::Exact(RecoveryModel::Restarting),
+        ] {
+            for t in [2.0, 30.0, 60.0, 120.0] {
+                let (time, energy) = b.objectives(&s, t);
+                assert_eq!(time.to_bits(), b.t_final(&s, t).to_bits(), "{} t={t}", b.name());
+                assert_eq!(energy.to_bits(), b.e_final(&s, t).to_bits(), "{} t={t}", b.name());
+            }
+        }
+    }
+
+    #[test]
+    fn expected_failures_match_the_underlying_models() {
+        for (label, s) in tradeoff_presets() {
+            let t = time::t_time_opt(&s).expect(label);
+            assert_eq!(
+                Backend::FirstOrder.expected_failures(&s, t).to_bits(),
+                time::expected_failures(&s, t).to_bits(),
+                "{label}"
+            );
+            // Ideal: exactly the primary (up-time) failure count.
+            let primary = exact_breakdown(&s, t, RecoveryModel::Ideal).failures;
+            assert_eq!(
+                Backend::Exact(RecoveryModel::Ideal).expected_failures(&s, t).to_bits(),
+                primary.to_bits(),
+                "{label}"
+            );
+            // Restarting: the simulator also counts the geometric
+            // restarts during D + R, so the observed total exceeds the
+            // primary count by exactly e^{(D+R)/mu}.
+            let total = Backend::Exact(RecoveryModel::Restarting).expected_failures(&s, t);
+            let scale = ((s.ckpt.d + s.ckpt.r) / s.mu).exp();
+            assert!(total > primary, "{label}");
+            assert!(
+                rel_err(total, primary * scale) < 1e-12,
+                "{label}: {total} vs {} * {scale}",
+                primary
+            );
+        }
+    }
+}

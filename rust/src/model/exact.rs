@@ -58,6 +58,11 @@ pub enum RecoveryModel {
 pub struct ExactBreakdown {
     pub makespan: f64,
     pub energy: f64,
+    /// Expected *primary* (up-time) failures — episode starts. Under
+    /// [`RecoveryModel::Restarting`] the simulator additionally counts
+    /// the geometric restarts during D + R
+    /// ([`Backend::expected_failures`](super::backend::Backend) folds
+    /// them in).
     pub failures: f64,
     pub compute_wall: f64,
     pub checkpoint_wall: f64,

@@ -8,9 +8,26 @@
 //!   stationarity quadratic of `E_final`).
 //! * [`optimize`] — golden-section minimiser used to cross-validate the
 //!   closed forms and to optimise models with no closed form (MSK).
+//! * [`exact`] — the exact renewal expectations for exponential failures
+//!   (no first-order truncation), with numeric optima.
+//! * [`backend`] — the [`Backend`] dispatch point every downstream
+//!   consumer (frontier, policies, grid cells, figures, CLI) evaluates
+//!   the objectives through: `Backend::FirstOrder` is the paper's
+//!   closed forms, `Backend::Exact(RecoveryModel)` the exact renewal
+//!   model with memoised numeric optima. Select it on the CLI with
+//!   `--model first-order|exact|exact:ideal|exact:restarting`.
 //! * [`msk`] — the Meneses–Sarood–Kalé baseline of [6], with the
 //!   per-failure loss terms the paper's §3.2 side note attributes to it.
 //! * [`ratios`] — the AlgoT-vs-AlgoE comparisons all figures are built on.
+//!
+//! # When the exact backend matters
+//!
+//! The first-order forms neglect multi-failure-per-period terms that
+//! scale like `(T/μ)²`; at small `μ` — frequent failures, exactly where
+//! the time/energy trade-off is widest — their optimal periods drift
+//! 5–40% from the exact ones (`figures::knee_drift` tabulates the
+//! drift; EXPERIMENTS.md records the headline numbers). At `μ ≫ C+R+D`
+//! the backends agree to well under a percent.
 //!
 //! # Conventions
 //!
@@ -18,6 +35,7 @@
 //! node** (the paper's 20 MW / 10⁶ nodes budget); energies are mW·min.
 //! The model is agnostic to units as long as they are consistent.
 
+pub mod backend;
 pub mod energy;
 pub mod exact;
 pub mod msk;
@@ -27,7 +45,9 @@ pub mod ratios;
 pub mod time;
 pub mod waste;
 
+pub use backend::Backend;
 pub use energy::{e_final, t_energy_opt};
+pub use exact::RecoveryModel;
 pub use params::{CheckpointParams, ModelError, Platform, PowerParams, Scenario};
 pub use ratios::{compare, Comparison};
 pub use time::{t_final, t_time_opt};

@@ -253,6 +253,29 @@ impl Scenario {
         let worst = self.ckpt.c.max(self.ckpt.d).max(self.ckpt.r);
         worst * 10.0 <= self.mu
     }
+
+    /// Exact-bits encoding of every scenario parameter, for memo/cache
+    /// keys (the grid engine's cell keys, the online-policy memo, the
+    /// exact-optima memo). One canonical listing: the exhaustive
+    /// destructuring below makes adding a field a compile error here —
+    /// rather than a silent memo alias at whichever key site forgot it.
+    pub fn key_bits(&self) -> [u64; 10] {
+        let Scenario { ckpt, power, mu, t_base } = *self;
+        let CheckpointParams { c, r, d, omega } = ckpt;
+        let PowerParams { p_static, p_cal, p_io, p_down } = power;
+        [
+            c.to_bits(),
+            r.to_bits(),
+            d.to_bits(),
+            omega.to_bits(),
+            p_static.to_bits(),
+            p_cal.to_bits(),
+            p_io.to_bits(),
+            p_down.to_bits(),
+            mu.to_bits(),
+            t_base.to_bits(),
+        ]
+    }
 }
 
 /// Errors from parameter validation or out-of-domain evaluation.
@@ -373,5 +396,27 @@ mod tests {
     fn first_order_flag() {
         assert!(paper_fig1_scenario(300.0, 5.5).first_order_ok());
         assert!(!paper_fig1_scenario(50.0, 5.5).first_order_ok());
+    }
+
+    #[test]
+    fn key_bits_cover_every_field() {
+        let base = paper_fig1_scenario(300.0, 5.5);
+        let bits = base.key_bits();
+        assert_eq!(bits, base.key_bits(), "deterministic");
+        // Changing any single parameter changes the key.
+        let mut variants = [base; 10];
+        variants[0].ckpt.c += 1.0;
+        variants[1].ckpt.r += 1.0;
+        variants[2].ckpt.d += 1.0;
+        variants[3].ckpt.omega += 0.1;
+        variants[4].power.p_static += 1.0;
+        variants[5].power.p_cal += 1.0;
+        variants[6].power.p_io += 1.0;
+        variants[7].power.p_down += 1.0;
+        variants[8].mu += 1.0;
+        variants[9].t_base += 1.0;
+        for (i, v) in variants.iter().enumerate() {
+            assert_ne!(v.key_bits(), bits, "field {i} not covered by key_bits");
+        }
     }
 }

@@ -16,10 +16,13 @@
 //! period where the constraint binds — found here by bisection to
 //! machine precision. Solutions therefore lie **on** the frontier by
 //! construction.
+//!
+//! The monotonicity argument only needs unimodality, which both
+//! objective backends satisfy, so the solves are generic over the
+//! [`Backend`] like the rest of the frontier stack.
 
-use crate::model::energy::{e_final, t_energy_opt};
+use crate::model::backend::Backend;
 use crate::model::params::{ModelError, Scenario};
-use crate::model::time::{t_final, t_time_opt};
 
 /// One ε-constraint solution (a frontier point plus constraint data).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -37,31 +40,35 @@ pub struct EpsSolution {
 }
 
 /// Minimise `E_final` subject to
-/// `T_final(T) <= (1 + eps_pct/100) · T_final(T_Time_opt)`.
+/// `T_final(T) <= (1 + eps_pct/100) · T_final(T_Time_opt)`, under
+/// `backend`'s objectives.
 pub fn min_energy_with_time_overhead(
     s: &Scenario,
     eps_pct: f64,
+    backend: Backend,
 ) -> Result<EpsSolution, ModelError> {
     assert!(eps_pct >= 0.0, "overhead budget must be >= 0, got {eps_pct}%");
-    let tt = t_time_opt(s)?;
-    let te = t_energy_opt(s)?;
-    let bound = t_final(s, tt) * (1.0 + eps_pct / 100.0);
-    let feasible = |t: f64| t_final(s, t) <= bound;
-    Ok(solve(s, tt, te, bound, feasible))
+    let tt = backend.t_time_opt(s)?;
+    let te = backend.t_energy_opt(s)?;
+    let bound = backend.t_final(s, tt) * (1.0 + eps_pct / 100.0);
+    let feasible = |t: f64| backend.t_final(s, t) <= bound;
+    Ok(solve(s, tt, te, bound, backend, feasible))
 }
 
 /// Minimise `T_final` subject to
-/// `E_final(T) <= (1 + eps_pct/100) · E_final(T_Energy_opt)`.
+/// `E_final(T) <= (1 + eps_pct/100) · E_final(T_Energy_opt)`, under
+/// `backend`'s objectives.
 pub fn min_time_with_energy_overhead(
     s: &Scenario,
     eps_pct: f64,
+    backend: Backend,
 ) -> Result<EpsSolution, ModelError> {
     assert!(eps_pct >= 0.0, "overhead budget must be >= 0, got {eps_pct}%");
-    let tt = t_time_opt(s)?;
-    let te = t_energy_opt(s)?;
-    let bound = e_final(s, te) * (1.0 + eps_pct / 100.0);
-    let feasible = |t: f64| e_final(s, t) <= bound;
-    Ok(solve(s, te, tt, bound, feasible))
+    let tt = backend.t_time_opt(s)?;
+    let te = backend.t_energy_opt(s)?;
+    let bound = backend.e_final(s, te) * (1.0 + eps_pct / 100.0);
+    let feasible = |t: f64| backend.e_final(s, t) <= bound;
+    Ok(solve(s, te, tt, bound, backend, feasible))
 }
 
 /// Walk from `from` (where the constraint holds with slack) toward
@@ -72,14 +79,15 @@ fn solve(
     from: f64,
     target: f64,
     bound: f64,
+    backend: Backend,
     feasible: impl Fn(f64) -> bool,
 ) -> EpsSolution {
     debug_assert!(feasible(from), "constraint must hold at its own optimum");
     if feasible(target) {
         return EpsSolution {
             period: target,
-            time: t_final(s, target),
-            energy: e_final(s, target),
+            time: backend.t_final(s, target),
+            energy: backend.e_final(s, target),
             bound,
             binding: false,
         };
@@ -94,47 +102,73 @@ fn solve(
             b = mid;
         }
     }
-    EpsSolution { period: a, time: t_final(s, a), energy: e_final(s, a), bound, binding: true }
+    EpsSolution {
+        period: a,
+        time: backend.t_final(s, a),
+        energy: backend.e_final(s, a),
+        bound,
+        binding: true,
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::presets::fig1_scenario;
+    use crate::model::exact::RecoveryModel;
     use crate::util::stats::rel_err;
+
+    const FO: Backend = Backend::FirstOrder;
 
     #[test]
     fn zero_budget_returns_the_endpoint() {
         let s = fig1_scenario(300.0, 5.5);
-        let tt = t_time_opt(&s).unwrap();
+        let tt = FO.t_time_opt(&s).unwrap();
         // The objectives are flat (quadratically) at their own optima,
         // so the binding period is only pinned to ~sqrt(eps_machine).
-        let sol = min_energy_with_time_overhead(&s, 0.0).unwrap();
+        let sol = min_energy_with_time_overhead(&s, 0.0, FO).unwrap();
         assert!(rel_err(sol.period, tt) < 1e-6, "period {} vs {}", sol.period, tt);
-        let te = t_energy_opt(&s).unwrap();
-        let sol = min_time_with_energy_overhead(&s, 0.0).unwrap();
+        let te = FO.t_energy_opt(&s).unwrap();
+        let sol = min_time_with_energy_overhead(&s, 0.0, FO).unwrap();
         assert!(rel_err(sol.period, te) < 1e-6, "period {} vs {}", sol.period, te);
     }
 
     #[test]
     fn huge_budget_is_not_binding() {
         let s = fig1_scenario(300.0, 5.5);
-        let sol = min_energy_with_time_overhead(&s, 1_000.0).unwrap();
+        let sol = min_energy_with_time_overhead(&s, 1_000.0, FO).unwrap();
         assert!(!sol.binding);
-        assert!(rel_err(sol.period, t_energy_opt(&s).unwrap()) < 1e-12);
-        let sol = min_time_with_energy_overhead(&s, 1_000.0).unwrap();
+        assert!(rel_err(sol.period, FO.t_energy_opt(&s).unwrap()) < 1e-12);
+        let sol = min_time_with_energy_overhead(&s, 1_000.0, FO).unwrap();
         assert!(!sol.binding);
-        assert!(rel_err(sol.period, t_time_opt(&s).unwrap()) < 1e-12);
+        assert!(rel_err(sol.period, FO.t_time_opt(&s).unwrap()) < 1e-12);
     }
 
     #[test]
     fn binding_solution_sits_exactly_on_the_bound() {
         let s = fig1_scenario(300.0, 5.5);
         for eps in [1.0, 2.0, 5.0, 8.0] {
-            let sol = min_energy_with_time_overhead(&s, eps).unwrap();
+            let sol = min_energy_with_time_overhead(&s, eps, FO).unwrap();
             assert!(sol.binding, "eps={eps}%");
             assert!(sol.time <= sol.bound * (1.0 + 1e-12));
             assert!(rel_err(sol.time, sol.bound) < 1e-9, "eps={eps}%");
+        }
+    }
+
+    #[test]
+    fn binding_solution_on_the_bound_under_the_exact_backend() {
+        let s = fig1_scenario(120.0, 5.5);
+        let b = Backend::Exact(RecoveryModel::Ideal);
+        for eps in [1.0, 3.0] {
+            let sol = min_energy_with_time_overhead(&s, eps, b).unwrap();
+            assert!(sol.binding, "eps={eps}%");
+            assert!(rel_err(sol.time, sol.bound) < 1e-9, "eps={eps}%");
+            // Solution values come from the exact objectives.
+            assert!(rel_err(sol.time, b.t_final(&s, sol.period)) < 1e-12);
+            assert!(rel_err(sol.energy, b.e_final(&s, sol.period)) < 1e-12);
+            // And the period sits between the exact optima.
+            let (lo, hi) = (b.t_time_opt(&s).unwrap(), b.t_energy_opt(&s).unwrap());
+            assert!((lo - 1e-9..=hi + 1e-9).contains(&sol.period), "eps={eps}%");
         }
     }
 
@@ -143,7 +177,7 @@ mod tests {
         let s = fig1_scenario(300.0, 7.0);
         let mut last = f64::INFINITY;
         for eps in [0.0, 1.0, 2.0, 4.0, 8.0, 16.0] {
-            let sol = min_energy_with_time_overhead(&s, eps).unwrap();
+            let sol = min_energy_with_time_overhead(&s, eps, FO).unwrap();
             assert!(sol.energy <= last * (1.0 + 1e-12), "eps={eps}%");
             last = sol.energy;
         }
@@ -152,23 +186,23 @@ mod tests {
     #[test]
     fn transposed_solve_mirrors() {
         let s = fig1_scenario(120.0, 5.5);
-        let sol = min_time_with_energy_overhead(&s, 3.0).unwrap();
+        let sol = min_time_with_energy_overhead(&s, 3.0, FO).unwrap();
         assert!(sol.binding);
         assert!(rel_err(sol.energy, sol.bound) < 1e-9);
         // Paying more energy budget must not slow us down.
-        let loose = min_time_with_energy_overhead(&s, 10.0).unwrap();
+        let loose = min_time_with_energy_overhead(&s, 10.0, FO).unwrap();
         assert!(loose.time <= sol.time * (1.0 + 1e-12));
     }
 
     #[test]
     fn solutions_lie_between_the_optima() {
         let s = fig1_scenario(300.0, 5.5);
-        let tt = t_time_opt(&s).unwrap();
-        let te = t_energy_opt(&s).unwrap();
+        let tt = FO.t_time_opt(&s).unwrap();
+        let te = FO.t_energy_opt(&s).unwrap();
         let (lo, hi) = (tt.min(te), tt.max(te));
         for eps in [0.5, 3.0, 12.0] {
-            let a = min_energy_with_time_overhead(&s, eps).unwrap();
-            let b = min_time_with_energy_overhead(&s, eps).unwrap();
+            let a = min_energy_with_time_overhead(&s, eps, FO).unwrap();
+            let b = min_time_with_energy_overhead(&s, eps, FO).unwrap();
             for sol in [a, b] {
                 assert!(
                     (lo - 1e-9..=hi + 1e-9).contains(&sol.period),

@@ -5,35 +5,40 @@
 //! (a power-ratio sweep, the trade-off presets, a μ scan) fans the
 //! per-scenario frontier computations out on the persistent pool and
 //! memoises each one process-wide — re-rendering the frontier figure or
-//! re-running the CLI recomputes nothing.
+//! re-running the CLI recomputes nothing. The objective [`Backend`] is
+//! part of the cell (and so of the memo key), so first-order and exact
+//! families coexist in the cache without aliasing.
 
-use crate::model::params::Scenario;
+use crate::model::backend::Backend;
+use crate::model::params::{ModelError, Scenario};
 use crate::sweep::{CellOutput, GridSpec};
 
 use super::frontier::FrontierSummary;
 
-/// One scenario of a family with its frontier (or `None` when the
-/// scenario left the model's domain — the same clamp regime `Compare`
-/// cells report).
+/// One scenario of a family with its frontier, or the [`ModelError`]
+/// explaining why the scenario has none (the same clamp regime
+/// `Compare` cells report as `None` — surfaced instead of dropped so
+/// figure/CLI callers can print the reason).
 #[derive(Debug, Clone, PartialEq)]
 pub struct FamilyFrontier {
     pub label: String,
     pub scenario: Scenario,
-    pub summary: Option<FrontierSummary>,
+    pub summary: Result<FrontierSummary, ModelError>,
 }
 
-/// Compute the frontier of every labelled scenario, `points` samples
-/// each, as one parallel, memoised grid batch. Results are in input
-/// order and independent of the thread count.
+/// Compute the frontier of every labelled scenario under `backend`,
+/// `points` samples each, as one parallel, memoised grid batch. Results
+/// are in input order and independent of the thread count.
 pub fn family_frontiers(
     scenarios: impl IntoIterator<Item = (String, Scenario)>,
     points: usize,
     base_seed: u64,
+    backend: Backend,
 ) -> Vec<FamilyFrontier> {
     let labelled: Vec<(String, Scenario)> = scenarios.into_iter().collect();
     let mut spec = GridSpec::new(base_seed);
     for (_, s) in &labelled {
-        spec.push_frontier(*s, points);
+        spec.push_frontier_with(*s, points, backend);
     }
     labelled
         .into_iter()
@@ -42,7 +47,8 @@ pub fn family_frontiers(
             label,
             scenario,
             summary: match r.output {
-                CellOutput::Frontier(f) => f,
+                // The cell stores the full Result, error and all.
+                CellOutput::Frontier(res) => res,
                 ref other => unreachable!("frontier cell produced {other:?}"),
             },
         })
@@ -53,6 +59,8 @@ pub fn family_frontiers(
 mod tests {
     use super::*;
     use crate::config::presets::{fig1_scenario, tradeoff_presets};
+    use crate::model::exact::RecoveryModel;
+    use crate::model::params::{CheckpointParams, PowerParams};
     use crate::pareto::frontier::FrontierSummary;
 
     #[test]
@@ -61,12 +69,14 @@ mod tests {
             .into_iter()
             .map(|rho| (format!("rho{rho}"), fig1_scenario(300.0, rho)))
             .collect();
-        let out = family_frontiers(family.clone(), 17, 1);
-        assert_eq!(out.len(), 3);
-        for (f, (label, s)) in out.iter().zip(&family) {
-            assert_eq!(&f.label, label);
-            let direct = FrontierSummary::compute(s, 17).unwrap();
-            assert_eq!(f.summary.as_ref().unwrap(), &direct);
+        for backend in [Backend::FirstOrder, Backend::Exact(RecoveryModel::Ideal)] {
+            let out = family_frontiers(family.clone(), 17, 1, backend);
+            assert_eq!(out.len(), 3);
+            for (f, (label, s)) in out.iter().zip(&family) {
+                assert_eq!(&f.label, label);
+                let direct = FrontierSummary::compute(s, 17, backend).unwrap();
+                assert_eq!(f.summary.as_ref().unwrap(), &direct, "{}", backend.name());
+            }
         }
     }
 
@@ -75,7 +85,7 @@ mod tests {
         let family = tradeoff_presets()
             .into_iter()
             .map(|(label, s)| (label.to_string(), s));
-        let out = family_frontiers(family, 9, 1);
+        let out = family_frontiers(family, 9, 1, Backend::FirstOrder);
         assert!(out.len() >= 4, "presets shrank to {}", out.len());
         for f in &out {
             let sum = f.summary.as_ref().expect("preset in domain");
@@ -88,8 +98,28 @@ mod tests {
     fn family_evaluation_is_bit_stable() {
         let family: Vec<(String, Scenario)> =
             vec![("a".into(), fig1_scenario(120.0, 5.5)), ("b".into(), fig1_scenario(300.0, 7.0))];
-        let x = family_frontiers(family.clone(), 33, 9);
-        let y = family_frontiers(family, 33, 9);
+        let x = family_frontiers(family.clone(), 33, 9, Backend::FirstOrder);
+        let y = family_frontiers(family, 33, 9, Backend::FirstOrder);
         assert_eq!(x, y);
+    }
+
+    #[test]
+    fn out_of_domain_scenarios_carry_their_error() {
+        // C >= 2*mu*b: no feasible period under any backend.
+        let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, 0.5).unwrap();
+        let power = PowerParams::from_rho(5.5, 1.0, 0.0).unwrap();
+        let s = Scenario::new(ckpt, power, 17.0, 1000.0).unwrap();
+        let out = family_frontiers(
+            vec![("edge".to_string(), s)],
+            9,
+            1,
+            Backend::Exact(RecoveryModel::Restarting),
+        );
+        match &out[0].summary {
+            Err(ModelError::OutOfDomain(msg)) => {
+                assert!(msg.contains("feasible"), "{msg}");
+            }
+            other => panic!("expected OutOfDomain, got {other:?}"),
+        }
     }
 }

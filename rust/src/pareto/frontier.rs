@@ -10,15 +10,20 @@
 //! filters numerically dominated samples, and exposes the derived
 //! quantities downstream consumers need: normalised coordinates,
 //! hypervolume, and knee points ([`super::knee`]).
+//!
+//! The unimodal/conflicting structure holds for **both** objective
+//! backends ([`Backend::FirstOrder`] and [`Backend::Exact`]), so the
+//! whole construction is generic over the [`Backend`]: the exact
+//! backend moves the optima (and with them the knee) by 5–40% at small
+//! `μ` while the geometry of the frontier machinery is unchanged.
 
-use crate::model::energy::{e_final, t_energy_opt};
+use crate::model::backend::Backend;
 use crate::model::params::{ModelError, Scenario};
-use crate::model::time::{t_final, t_time_opt};
 
 use super::knee::{knee, Knee, KneeMethod};
 
 /// One point of the frontier: a checkpointing period and the two
-/// objective values the closed forms assign to it.
+/// objective values the selected backend assigns to it.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FrontierPoint {
     /// Checkpointing period `T` (minutes).
@@ -45,6 +50,8 @@ impl FrontierPoint {
 #[derive(Debug, Clone, PartialEq)]
 pub struct Frontier {
     pub scenario: Scenario,
+    /// The objective model the points were evaluated under.
+    pub backend: Backend,
     /// Clamped `T_Time_opt` — the first point's period.
     pub t_time_opt: f64,
     /// Clamped `T_Energy_opt` — the last point's period.
@@ -54,19 +61,21 @@ pub struct Frontier {
 
 impl Frontier {
     /// Sample the frontier with `n >= 2` periods spaced uniformly
-    /// between the two optima (endpoints exact). Errors when the
-    /// scenario has no feasible period at all.
-    pub fn compute(s: &Scenario, n: usize) -> Result<Frontier, ModelError> {
+    /// between the two optima of `backend`'s objectives (endpoints
+    /// exact). Errors when the scenario has no feasible period at all
+    /// (the same gate under every backend; see
+    /// [`Backend::t_time_opt`]).
+    pub fn compute(s: &Scenario, n: usize, backend: Backend) -> Result<Frontier, ModelError> {
         assert!(n >= 2, "need at least the two endpoint samples, got {n}");
-        let tt = t_time_opt(s)?;
-        let te = t_energy_opt(s)?;
+        let tt = backend.t_time_opt(s)?;
+        let te = backend.t_energy_opt(s)?;
         let (lo, hi) = if tt <= te { (tt, te) } else { (te, tt) };
 
         let mut sampled = Vec::with_capacity(n);
         if hi - lo <= 0.0 {
             // Degenerate trade-off: both optima clamp to the same period
             // (e.g. the Fig. 3 breakdown tail). One point, zero spread.
-            sampled.push(point_at(s, lo));
+            sampled.push(point_at(s, lo, backend));
         } else {
             for i in 0..n {
                 // Pin the endpoints to the optima exactly; interior
@@ -78,10 +87,16 @@ impl Frontier {
                 } else {
                     lo + (hi - lo) * i as f64 / (n - 1) as f64
                 };
-                sampled.push(point_at(s, period));
+                sampled.push(point_at(s, period, backend));
             }
         }
-        Ok(Frontier { scenario: *s, t_time_opt: tt, t_energy_opt: te, points: filter_dominated(sampled) })
+        Ok(Frontier {
+            scenario: *s,
+            backend,
+            t_time_opt: tt,
+            t_energy_opt: te,
+            points: filter_dominated(sampled),
+        })
     }
 
     /// The non-dominated points, sorted by makespan ascending.
@@ -161,8 +176,11 @@ impl Frontier {
     }
 }
 
-fn point_at(s: &Scenario, period: f64) -> FrontierPoint {
-    FrontierPoint { period, time: t_final(s, period), energy: e_final(s, period) }
+fn point_at(s: &Scenario, period: f64, backend: Backend) -> FrontierPoint {
+    // One evaluation for both objectives: under the exact backend this
+    // computes the renewal breakdown once per sample instead of twice.
+    let (time, energy) = backend.objectives(s, period);
+    FrontierPoint { period, time, energy }
 }
 
 /// Drop dominated points: sort by `(time, energy)` ascending and keep
@@ -186,10 +204,14 @@ pub fn filter_dominated(mut points: Vec<FrontierPoint>) -> Vec<FrontierPoint> {
 
 /// Compact, cacheable frontier record — what a
 /// [`CellJob::Frontier`](crate::sweep::CellJob) grid cell computes and
-/// the memo cache stores. `compute` returns `None` when the scenario
-/// left the model's domain (mirroring `Compare` cells).
+/// the memo cache stores. Unlike the pre-backend revision, `compute`
+/// returns `Result` (matching [`Frontier::compute`]) so figure and CLI
+/// callers can surface the domain error instead of silently dropping
+/// the row; grid cells map the error to `None` at the cell boundary
+/// (their clamp regime is unchanged).
 #[derive(Debug, Clone, PartialEq)]
 pub struct FrontierSummary {
+    pub backend: Backend,
     pub t_time_opt: f64,
     pub t_energy_opt: f64,
     pub hypervolume: f64,
@@ -199,9 +221,14 @@ pub struct FrontierSummary {
 }
 
 impl FrontierSummary {
-    pub fn compute(s: &Scenario, points: usize) -> Option<FrontierSummary> {
-        let f = Frontier::compute(s, points.max(2)).ok()?;
-        Some(FrontierSummary {
+    pub fn compute(
+        s: &Scenario,
+        points: usize,
+        backend: Backend,
+    ) -> Result<FrontierSummary, ModelError> {
+        let f = Frontier::compute(s, points.max(2), backend)?;
+        Ok(FrontierSummary {
+            backend,
             t_time_opt: f.t_time_opt,
             t_energy_opt: f.t_energy_opt,
             hypervolume: f.hypervolume(),
@@ -230,12 +257,14 @@ impl FrontierSummary {
 mod tests {
     use super::*;
     use crate::config::presets::fig1_scenario;
+    use crate::model::exact::RecoveryModel;
+    use crate::model::{e_final, t_final};
     use crate::util::stats::rel_err;
 
     #[test]
     fn endpoints_are_the_optima_bit_for_bit() {
         let s = fig1_scenario(300.0, 5.5);
-        let f = Frontier::compute(&s, 33).unwrap();
+        let f = Frontier::compute(&s, 33, Backend::FirstOrder).unwrap();
         assert_eq!(f.time_opt_point().period.to_bits(), f.t_time_opt.to_bits());
         assert_eq!(f.energy_opt_point().period.to_bits(), f.t_energy_opt.to_bits());
         assert_eq!(
@@ -249,9 +278,26 @@ mod tests {
     }
 
     #[test]
+    fn exact_endpoints_are_the_exact_optima() {
+        let s = fig1_scenario(120.0, 5.5);
+        let b = Backend::Exact(RecoveryModel::Ideal);
+        let f = Frontier::compute(&s, 33, b).unwrap();
+        assert_eq!(f.backend, b);
+        assert_eq!(f.time_opt_point().period.to_bits(), b.t_time_opt(&s).unwrap().to_bits());
+        assert_eq!(
+            f.energy_opt_point().period.to_bits(),
+            b.t_energy_opt(&s).unwrap().to_bits()
+        );
+        assert_eq!(
+            f.time_opt_point().time.to_bits(),
+            b.t_final(&s, f.t_time_opt).to_bits()
+        );
+    }
+
+    #[test]
     fn no_point_dominates_another() {
         let s = fig1_scenario(300.0, 5.5);
-        let f = Frontier::compute(&s, 65).unwrap();
+        let f = Frontier::compute(&s, 65, Backend::FirstOrder).unwrap();
         let pts = f.points();
         assert!(pts.len() >= 60, "kept {} of 65", pts.len());
         for (i, p) in pts.iter().enumerate() {
@@ -264,20 +310,22 @@ mod tests {
     }
 
     #[test]
-    fn monotone_trade_off_along_the_frontier() {
+    fn monotone_trade_off_along_the_frontier_under_both_backends() {
         let s = fig1_scenario(120.0, 7.0);
-        let f = Frontier::compute(&s, 40).unwrap();
-        for w in f.points().windows(2) {
-            assert!(w[1].time > w[0].time);
-            assert!(w[1].energy < w[0].energy);
-            assert!(w[1].period > w[0].period);
+        for backend in [Backend::FirstOrder, Backend::Exact(RecoveryModel::Restarting)] {
+            let f = Frontier::compute(&s, 40, backend).unwrap();
+            for w in f.points().windows(2) {
+                assert!(w[1].time > w[0].time, "{}", backend.name());
+                assert!(w[1].energy < w[0].energy, "{}", backend.name());
+                assert!(w[1].period > w[0].period, "{}", backend.name());
+            }
         }
     }
 
     #[test]
     fn normalized_hits_the_unit_corners() {
         let s = fig1_scenario(300.0, 5.5);
-        let f = Frontier::compute(&s, 17).unwrap();
+        let f = Frontier::compute(&s, 17, Backend::FirstOrder).unwrap();
         let n = f.normalized();
         assert_eq!(n.len(), f.len());
         assert!((n[0].0 - 0.0).abs() < 1e-12 && (n[0].1 - 1.0).abs() < 1e-12);
@@ -288,7 +336,7 @@ mod tests {
     #[test]
     fn hypervolume_in_unit_band_and_convex_beats_line() {
         let s = fig1_scenario(300.0, 5.5);
-        let f = Frontier::compute(&s, 65).unwrap();
+        let f = Frontier::compute(&s, 65, Backend::FirstOrder).unwrap();
         let hv = f.hypervolume();
         // The paper's trade-off curve bows below the chord (diminishing
         // returns), so the dominated volume exceeds the triangle's 0.5.
@@ -300,7 +348,7 @@ mod tests {
         // Synthetic straight frontier through filter_dominated + a fake
         // Frontier: easiest to assert via the formula on a hand-made set.
         let s = fig1_scenario(300.0, 5.5);
-        let mut f = Frontier::compute(&s, 2).unwrap();
+        let mut f = Frontier::compute(&s, 2, Backend::FirstOrder).unwrap();
         let (t0, e0) = (f.points[0].time, f.points[0].energy);
         let (t1, e1) = (f.points[1].time, f.points[1].energy);
         let n = 101;
@@ -320,8 +368,8 @@ mod tests {
     #[test]
     fn more_points_refine_not_change_the_span() {
         let s = fig1_scenario(300.0, 7.0);
-        let coarse = Frontier::compute(&s, 9).unwrap();
-        let fine = Frontier::compute(&s, 129).unwrap();
+        let coarse = Frontier::compute(&s, 9, Backend::FirstOrder).unwrap();
+        let fine = Frontier::compute(&s, 129, Backend::FirstOrder).unwrap();
         assert!(rel_err(coarse.t_time_opt, fine.t_time_opt) < 1e-15);
         assert!(rel_err(coarse.t_energy_opt, fine.t_energy_opt) < 1e-15);
         // Hypervolume converges: refinement moves it only slightly.
@@ -337,7 +385,7 @@ mod tests {
         let ckpt = crate::model::CheckpointParams::new(10.0, 10.0, 1.0, 1.0).unwrap();
         let power = crate::model::PowerParams::from_ratios(1.0, 0.0, 0.0).unwrap();
         let s = Scenario::new(ckpt, power, 300.0, 1e4).unwrap();
-        let f = Frontier::compute(&s, 16).unwrap();
+        let f = Frontier::compute(&s, 16, Backend::FirstOrder).unwrap();
         assert_eq!(f.len(), 1);
         assert_eq!(f.hypervolume(), 0.0);
         assert!(f.knee(KneeMethod::MaxDistanceToChord).is_none());
@@ -360,8 +408,9 @@ mod tests {
     #[test]
     fn summary_matches_frontier() {
         let s = fig1_scenario(300.0, 5.5);
-        let f = Frontier::compute(&s, 33).unwrap();
-        let sum = FrontierSummary::compute(&s, 33).unwrap();
+        let f = Frontier::compute(&s, 33, Backend::FirstOrder).unwrap();
+        let sum = FrontierSummary::compute(&s, 33, Backend::FirstOrder).unwrap();
+        assert_eq!(sum.backend, Backend::FirstOrder);
         assert_eq!(sum.points, f.points().to_vec());
         assert_eq!(sum.hypervolume.to_bits(), f.hypervolume().to_bits());
         // Percent helpers anchor on the AlgoT endpoint.
@@ -370,5 +419,36 @@ mod tests {
         let last = *sum.points.last().unwrap();
         assert!(sum.time_overhead_pct(&last) > 0.0);
         assert!(sum.energy_gain_pct(&last) > 0.0);
+    }
+
+    #[test]
+    fn summary_surfaces_the_domain_error() {
+        // C >= 2*mu*b: no feasible period. The summary now reports WHY
+        // (OutOfDomain) instead of a bare None.
+        let ckpt = crate::model::CheckpointParams::new(10.0, 10.0, 1.0, 0.5).unwrap();
+        let power = crate::model::PowerParams::from_rho(5.5, 1.0, 0.0).unwrap();
+        let s = Scenario::new(ckpt, power, 17.0, 1000.0).unwrap();
+        for backend in [Backend::FirstOrder, Backend::Exact(RecoveryModel::Ideal)] {
+            match FrontierSummary::compute(&s, 9, backend) {
+                Err(ModelError::OutOfDomain(_)) => {}
+                other => panic!("{}: expected OutOfDomain, got {other:?}", backend.name()),
+            }
+        }
+    }
+
+    #[test]
+    fn exact_frontier_shifts_toward_longer_periods_at_small_mu() {
+        // The exact objectives are better balanced by longer periods in
+        // the frequent-failure regime (the knee-drift headline).
+        let s = fig1_scenario(60.0, 5.5);
+        let fo = Frontier::compute(&s, 33, Backend::FirstOrder).unwrap();
+        let ex = Frontier::compute(&s, 33, Backend::Exact(RecoveryModel::Ideal)).unwrap();
+        assert!(ex.t_time_opt > fo.t_time_opt * 1.1, "{} vs {}", ex.t_time_opt, fo.t_time_opt);
+        assert!(
+            ex.t_energy_opt > fo.t_energy_opt * 1.1,
+            "{} vs {}",
+            ex.t_energy_opt,
+            fo.t_energy_opt
+        );
     }
 }

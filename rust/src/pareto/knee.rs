@@ -101,12 +101,13 @@ fn menger_curvatures(norm: &[(f64, f64)]) -> Vec<f64> {
 mod tests {
     use super::*;
     use crate::config::presets::fig1_scenario;
+    use crate::model::backend::Backend;
     use crate::pareto::frontier::Frontier;
 
     #[test]
     fn both_methods_find_an_interior_knee() {
         let s = fig1_scenario(300.0, 5.5);
-        let f = Frontier::compute(&s, 65).unwrap();
+        let f = Frontier::compute(&s, 65, Backend::FirstOrder).unwrap();
         for method in [KneeMethod::MaxDistanceToChord, KneeMethod::MaxCurvature] {
             let k = f.knee(method).expect("interior knee");
             assert!(k.index > 0 && k.index < f.len() - 1, "{method:?} at {}", k.index);
@@ -123,7 +124,7 @@ mod tests {
         // fraction (of the full AlgoT→AlgoE gain) exceeds the time cost
         // fraction (of the full overhead).
         let s = fig1_scenario(300.0, 5.5);
-        let f = Frontier::compute(&s, 129).unwrap();
+        let f = Frontier::compute(&s, 129, Backend::FirstOrder).unwrap();
         let k = f.knee(KneeMethod::MaxDistanceToChord).unwrap();
         let norm = f.normalized();
         let (x, y) = norm[k.index];
@@ -135,8 +136,8 @@ mod tests {
     #[test]
     fn chord_knee_stable_under_refinement() {
         let s = fig1_scenario(300.0, 7.0);
-        let coarse = Frontier::compute(&s, 33).unwrap();
-        let fine = Frontier::compute(&s, 257).unwrap();
+        let coarse = Frontier::compute(&s, 33, Backend::FirstOrder).unwrap();
+        let fine = Frontier::compute(&s, 257, Backend::FirstOrder).unwrap();
         let kc = coarse.knee(KneeMethod::MaxDistanceToChord).unwrap();
         let kf = fine.knee(KneeMethod::MaxDistanceToChord).unwrap();
         // Same knee location within one coarse step.
@@ -154,7 +155,7 @@ mod tests {
     #[test]
     fn too_few_points_yield_no_knee() {
         let s = fig1_scenario(300.0, 5.5);
-        let f = Frontier::compute(&s, 2).unwrap();
+        let f = Frontier::compute(&s, 2, Backend::FirstOrder).unwrap();
         assert!(f.knee(KneeMethod::MaxDistanceToChord).is_none());
         assert!(f.knee(KneeMethod::MaxCurvature).is_none());
     }

@@ -6,8 +6,25 @@
 //! segment between `T_Time_opt` and `T_Energy_opt` the two objectives
 //! are strictly conflicting (each is unimodal with its argmin at its
 //! own endpoint), so the segment **is** the exact Pareto frontier —
-//! no multi-objective search required, just the closed forms of
+//! no multi-objective search required, just the objectives of
 //! [`crate::model`].
+//!
+//! # Backend selection
+//!
+//! The whole stack is generic over the objective-model
+//! [`Backend`](crate::model::Backend): `Backend::FirstOrder` evaluates
+//! the paper's closed forms (the default, and bit-identical to the
+//! pre-backend behaviour), `Backend::Exact(RecoveryModel)` the exact
+//! renewal expectations of [`crate::model::exact`] with memoised
+//! numeric optima. The unimodal/conflicting structure every module
+//! below relies on holds under both, so frontiers, knees, ε-solves,
+//! validation, families and the online policies all take the backend as
+//! a parameter (CLI: `--model first-order|exact|exact:ideal|
+//! exact:restarting`). Exact matters in the frequent-failure (small-μ)
+//! regime, where the first-order knee sits 6–44% below the exact one —
+//! `figures::knee_drift` tabulates the drift and EXPERIMENTS.md records
+//! the headlines; at large μ the backends agree to well under a
+//! percent.
 //!
 //! * [`frontier`] — dense frontier sampling between the optima
 //!   (endpoints pinned bit-for-bit), dominated-point filtering,
@@ -25,9 +42,9 @@
 //!   sweeps), evaluated as [`CellJob::Frontier`](crate::sweep::CellJob)
 //!   cells on the persistent pool with process-wide memoisation.
 //! * [`online`] — frontier-derived periods for the *online* policies
-//!   (knee, ε-constraint budgets) behind a quantised-key memo, so the
-//!   adaptive controller's per-event re-reads stay cheap and
-//!   deterministic.
+//!   (knee, ε-constraint budgets) behind a quantised-key memo (the
+//!   backend is part of the key), so the adaptive controller's
+//!   per-event re-reads stay cheap and deterministic.
 //!
 //! Consumers: `figures::frontier` (per-scenario frontier + knee
 //! tables), the CLI `pareto` subcommand (tables + JSON artifact +

@@ -14,11 +14,13 @@
 //!   re-estimation noise below ~0.1% maps to the same key (the
 //!   controller's period-space hysteresis absorbs what remains);
 //! * the period is computed **from the quantised scenario** and memoised
-//!   process-wide keyed on the quantised parameter bits. The cached
-//!   value is therefore a pure function of its key — results cannot
-//!   depend on which thread (or which concurrently-running grid cell)
-//!   computed the entry first, which keeps adaptive grid cells
-//!   byte-identical across thread counts.
+//!   process-wide keyed on the quantised parameter bits **and the
+//!   objective backend** ([`Backend::key_word`]). The cached value is
+//!   therefore a pure function of its key — results cannot depend on
+//!   which thread (or which concurrently-running grid cell) computed
+//!   the entry first, which keeps adaptive grid cells byte-identical
+//!   across thread counts; a first-order and an exact policy tracking
+//!   the same estimates can never alias each other's entries.
 //!
 //! The non-estimated configuration (`D`, `ω`, the power draws, `T_base`)
 //! is keyed by exact bits: it does not drift online, so quantising it
@@ -26,10 +28,9 @@
 //! and `μ` also quantises the paper's headline knob `ρ`-family of
 //! derived ratios as far as the frontier is concerned.
 
-use std::collections::HashMap;
-use std::sync::{Mutex, OnceLock};
-
+use crate::model::backend::Backend;
 use crate::model::params::{CheckpointParams, ModelError, Scenario};
+use crate::util::memo::PureMemo;
 
 use super::epsilon::{min_energy_with_time_overhead, min_time_with_energy_overhead};
 use super::frontier::Frontier;
@@ -40,19 +41,12 @@ use super::knee::KneeMethod;
 /// cost a non-issue.
 pub const ONLINE_FRONTIER_POINTS: usize = 129;
 
-/// Memo bound: one entry per distinct quantised `(C, R, μ)` visited by a
-/// controller trajectory (plus one per preset/budget). Cleared wholesale
-/// on overflow — entries are pure functions of their key, so losing them
-/// only costs recomputation.
-const MEMO_CAPACITY: usize = 8192;
+type MemoKey = [u64; 14];
 
-type MemoKey = [u64; 13];
-
-static MEMO: OnceLock<Mutex<HashMap<MemoKey, f64>>> = OnceLock::new();
-
-fn memo() -> &'static Mutex<HashMap<MemoKey, f64>> {
-    MEMO.get_or_init(|| Mutex::new(HashMap::new()))
-}
+/// One entry per distinct quantised `(C, R, μ)` visited by a controller
+/// trajectory (plus one per preset/budget/backend); see [`PureMemo`]
+/// for the clearing/concurrency contract.
+static MEMO: PureMemo<MemoKey> = PureMemo::new(8192);
 
 /// Round a positive finite value to three significant decimal digits.
 /// Non-finite and non-positive inputs pass through (scenario validation
@@ -63,7 +57,7 @@ pub fn quantize(x: f64) -> f64 {
     }
     let mut exp = x.log10().floor() as i32;
     // Guard the edge where log10 of an exact power of ten lands one ulp
-    // low: the decimal mantissa below must sit in [100, 1000].
+    // low: the decimal mantissa below must sit in [100, 1000).
     if pow10(exp + 1) <= x {
         exp += 1;
     }
@@ -94,56 +88,32 @@ fn quantized_scenario(s: &Scenario) -> Result<Scenario, ModelError> {
     Scenario::new(ckpt, s.power, quantize(s.mu), s.t_base)
 }
 
-/// Exact-bits key of a (policy, quantised scenario) pair. `tag`
-/// distinguishes the policy kind, `param` its budget (0 for knees).
-fn memo_key(tag: u64, param: f64, q: &Scenario) -> MemoKey {
-    [
-        tag,
-        param.to_bits(),
-        q.ckpt.c.to_bits(),
-        q.ckpt.r.to_bits(),
-        q.mu.to_bits(),
-        q.ckpt.d.to_bits(),
-        q.ckpt.omega.to_bits(),
-        q.power.p_static.to_bits(),
-        q.power.p_cal.to_bits(),
-        q.power.p_io.to_bits(),
-        q.power.p_down.to_bits(),
-        q.t_base.to_bits(),
-        ONLINE_FRONTIER_POINTS as u64,
-    ]
-}
-
-fn cached(
-    key: MemoKey,
-    compute: impl FnOnce() -> Result<f64, ModelError>,
-) -> Result<f64, ModelError> {
-    if let Some(&p) = memo().lock().unwrap().get(&key) {
-        return Ok(p);
-    }
-    // Compute outside the lock: a concurrent miss on the same key just
-    // recomputes the same pure value.
-    let p = compute()?;
-    let mut m = memo().lock().unwrap();
-    if m.len() >= MEMO_CAPACITY {
-        m.clear();
-    }
-    m.insert(key, p);
-    Ok(p)
+/// Exact-bits key of a (policy, backend, quantised scenario) triple.
+/// `tag` distinguishes the policy kind, `param` its budget (0 for
+/// knees), `backend` the objective model; the scenario enters through
+/// the canonical [`Scenario::key_bits`] listing.
+fn memo_key(tag: u64, param: f64, backend: Backend, q: &Scenario) -> MemoKey {
+    let mut k = [0u64; 14];
+    k[0] = tag;
+    k[1] = param.to_bits();
+    k[2] = backend.key_word();
+    k[3..13].copy_from_slice(&q.key_bits());
+    k[13] = ONLINE_FRONTIER_POINTS as u64;
+    k
 }
 
 /// The knee period of the scenario's time–energy frontier under
-/// `method`. Falls back to the (clamped) time-optimal endpoint when the
-/// frontier is degenerate — both optima clamp together, so there is no
-/// interior knee and no trade-off to split.
-pub fn knee_period(s: &Scenario, method: KneeMethod) -> Result<f64, ModelError> {
+/// `method` and `backend`. Falls back to the (clamped) time-optimal
+/// endpoint when the frontier is degenerate — both optima clamp
+/// together, so there is no interior knee and no trade-off to split.
+pub fn knee_period(s: &Scenario, method: KneeMethod, backend: Backend) -> Result<f64, ModelError> {
     let q = quantized_scenario(s)?;
     let tag = match method {
         KneeMethod::MaxDistanceToChord => 1,
         KneeMethod::MaxCurvature => 2,
     };
-    cached(memo_key(tag, 0.0, &q), || {
-        let f = Frontier::compute(&q, ONLINE_FRONTIER_POINTS)?;
+    MEMO.get_or_try_compute(memo_key(tag, 0.0, backend, &q), || {
+        let f = Frontier::compute(&q, ONLINE_FRONTIER_POINTS, backend)?;
         Ok(match f.knee(method) {
             Some(k) => k.point.period,
             None => f.t_time_opt,
@@ -154,22 +124,30 @@ pub fn knee_period(s: &Scenario, method: KneeMethod) -> Result<f64, ModelError> 
 /// The period minimising energy subject to a time overhead of at most
 /// `max_time_overhead_pct` percent of the time-optimal makespan
 /// ([`min_energy_with_time_overhead`], memoised).
-pub fn min_energy_period(s: &Scenario, max_time_overhead_pct: f64) -> Result<f64, ModelError> {
+pub fn min_energy_period(
+    s: &Scenario,
+    max_time_overhead_pct: f64,
+    backend: Backend,
+) -> Result<f64, ModelError> {
     validate_budget(max_time_overhead_pct)?;
     let q = quantized_scenario(s)?;
-    cached(memo_key(3, max_time_overhead_pct, &q), || {
-        Ok(min_energy_with_time_overhead(&q, max_time_overhead_pct)?.period)
+    MEMO.get_or_try_compute(memo_key(3, max_time_overhead_pct, backend, &q), || {
+        Ok(min_energy_with_time_overhead(&q, max_time_overhead_pct, backend)?.period)
     })
 }
 
 /// The period minimising time subject to an energy overhead of at most
 /// `max_energy_overhead_pct` percent of the energy-optimal consumption
 /// ([`min_time_with_energy_overhead`], memoised).
-pub fn min_time_period(s: &Scenario, max_energy_overhead_pct: f64) -> Result<f64, ModelError> {
+pub fn min_time_period(
+    s: &Scenario,
+    max_energy_overhead_pct: f64,
+    backend: Backend,
+) -> Result<f64, ModelError> {
     validate_budget(max_energy_overhead_pct)?;
     let q = quantized_scenario(s)?;
-    cached(memo_key(4, max_energy_overhead_pct, &q), || {
-        Ok(min_time_with_energy_overhead(&q, max_energy_overhead_pct)?.period)
+    MEMO.get_or_try_compute(memo_key(4, max_energy_overhead_pct, backend, &q), || {
+        Ok(min_time_with_energy_overhead(&q, max_energy_overhead_pct, backend)?.period)
     })
 }
 
@@ -186,9 +164,11 @@ fn validate_budget(pct: f64) -> Result<(), ModelError> {
 mod tests {
     use super::*;
     use crate::config::presets::{fig1_scenario, tradeoff_presets};
-    use crate::model::energy::t_energy_opt;
-    use crate::model::time::t_time_opt;
+    use crate::model::exact::RecoveryModel;
     use crate::model::PowerParams;
+
+    const FO: Backend = Backend::FirstOrder;
+    const EXACT: Backend = Backend::Exact(RecoveryModel::Ideal);
 
     #[test]
     fn quantize_rounds_to_three_significant_digits() {
@@ -214,49 +194,90 @@ mod tests {
     #[test]
     fn knee_period_matches_direct_frontier_on_quantisation_fixed_points() {
         // Every preset's (C, R, μ) is exact at three significant digits,
-        // so the memoised policy must agree with the direct computation.
-        for (label, s) in tradeoff_presets() {
-            let f = Frontier::compute(&s, ONLINE_FRONTIER_POINTS).expect(label);
-            for method in [KneeMethod::MaxDistanceToChord, KneeMethod::MaxCurvature] {
-                let direct = f.knee(method).expect(label).point.period;
-                let got = knee_period(&s, method).expect(label);
-                assert_eq!(got.to_bits(), direct.to_bits(), "{label} {method:?}");
+        // so the memoised policy must agree with the direct computation —
+        // under both backends.
+        for backend in [FO, EXACT] {
+            for (label, s) in tradeoff_presets() {
+                let f = Frontier::compute(&s, ONLINE_FRONTIER_POINTS, backend).expect(label);
+                for method in [KneeMethod::MaxDistanceToChord, KneeMethod::MaxCurvature] {
+                    let direct = f.knee(method).expect(label).point.period;
+                    let got = knee_period(&s, method, backend).expect(label);
+                    assert_eq!(
+                        got.to_bits(),
+                        direct.to_bits(),
+                        "{label} {method:?} {}",
+                        backend.name()
+                    );
+                }
             }
         }
     }
 
     #[test]
     fn knee_period_lies_strictly_between_the_optima() {
-        for (label, s) in tradeoff_presets() {
-            let tt = t_time_opt(&s).unwrap();
-            let te = t_energy_opt(&s).unwrap();
-            let (lo, hi) = (tt.min(te), tt.max(te));
-            let p = knee_period(&s, KneeMethod::MaxDistanceToChord).expect(label);
-            assert!(p > lo && p < hi, "{label}: knee {p} outside ({lo}, {hi})");
+        for backend in [FO, EXACT] {
+            for (label, s) in tradeoff_presets() {
+                let tt = backend.t_time_opt(&s).unwrap();
+                let te = backend.t_energy_opt(&s).unwrap();
+                let (lo, hi) = (tt.min(te), tt.max(te));
+                let p = knee_period(&s, KneeMethod::MaxDistanceToChord, backend).expect(label);
+                assert!(
+                    p > lo && p < hi,
+                    "{label} {}: knee {p} outside ({lo}, {hi})",
+                    backend.name()
+                );
+            }
         }
+    }
+
+    #[test]
+    fn backends_do_not_alias_in_the_memo() {
+        let s = fig1_scenario(120.0, 5.5);
+        let fo = knee_period(&s, KneeMethod::MaxDistanceToChord, FO).unwrap();
+        let ex = knee_period(&s, KneeMethod::MaxDistanceToChord, EXACT).unwrap();
+        // At mu=120 the knee drift is >20%: if the entries aliased the
+        // two reads would be equal.
+        assert!((ex / fo - 1.0) > 0.05, "fo={fo} ex={ex}");
+        // Re-reads stay bit-stable per backend.
+        assert_eq!(
+            fo.to_bits(),
+            knee_period(&s, KneeMethod::MaxDistanceToChord, FO).unwrap().to_bits()
+        );
+        assert_eq!(
+            ex.to_bits(),
+            knee_period(&s, KneeMethod::MaxDistanceToChord, EXACT).unwrap().to_bits()
+        );
     }
 
     #[test]
     fn eps_periods_match_the_epsilon_module() {
         let s = fig1_scenario(300.0, 5.5);
-        for eps in [0.5, 2.0, 5.0] {
-            let direct = min_energy_with_time_overhead(&s, eps).unwrap().period;
-            assert_eq!(min_energy_period(&s, eps).unwrap().to_bits(), direct.to_bits());
-            let direct = min_time_with_energy_overhead(&s, eps).unwrap().period;
-            assert_eq!(min_time_period(&s, eps).unwrap().to_bits(), direct.to_bits());
+        for backend in [FO, EXACT] {
+            for eps in [0.5, 2.0, 5.0] {
+                let direct = min_energy_with_time_overhead(&s, eps, backend).unwrap().period;
+                assert_eq!(
+                    min_energy_period(&s, eps, backend).unwrap().to_bits(),
+                    direct.to_bits()
+                );
+                let direct = min_time_with_energy_overhead(&s, eps, backend).unwrap().period;
+                assert_eq!(
+                    min_time_period(&s, eps, backend).unwrap().to_bits(),
+                    direct.to_bits()
+                );
+            }
         }
     }
 
     #[test]
     fn memoised_reads_are_bit_stable() {
         let s = fig1_scenario(120.0, 7.0);
-        let a = knee_period(&s, KneeMethod::MaxDistanceToChord).unwrap();
-        let b = knee_period(&s, KneeMethod::MaxDistanceToChord).unwrap();
+        let a = knee_period(&s, KneeMethod::MaxDistanceToChord, FO).unwrap();
+        let b = knee_period(&s, KneeMethod::MaxDistanceToChord, FO).unwrap();
         assert_eq!(a.to_bits(), b.to_bits());
         // A sub-quantum estimate wobble hits the same memo entry.
         let mut wobble = s;
         wobble.mu = s.mu * (1.0 + 2e-4);
-        let c = knee_period(&wobble, KneeMethod::MaxDistanceToChord).unwrap();
+        let c = knee_period(&wobble, KneeMethod::MaxDistanceToChord, FO).unwrap();
         assert_eq!(a.to_bits(), c.to_bits());
     }
 
@@ -267,7 +288,7 @@ mod tests {
         let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, 1.0).unwrap();
         let power = PowerParams::from_ratios(1.0, 0.0, 0.0).unwrap();
         let s = Scenario::new(ckpt, power, 300.0, 1e4).unwrap();
-        let p = knee_period(&s, KneeMethod::MaxDistanceToChord).unwrap();
+        let p = knee_period(&s, KneeMethod::MaxDistanceToChord, FO).unwrap();
         assert_eq!(p, s.ckpt.c);
     }
 
@@ -278,16 +299,18 @@ mod tests {
         let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, 0.5).unwrap();
         let power = PowerParams::from_rho(5.5, 1.0, 0.0).unwrap();
         let s = Scenario { ckpt, power, mu: 10.0, t_base: 1000.0 };
-        assert!(knee_period(&s, KneeMethod::MaxDistanceToChord).is_err());
-        assert!(min_energy_period(&s, 5.0).is_err());
+        for backend in [FO, EXACT] {
+            assert!(knee_period(&s, KneeMethod::MaxDistanceToChord, backend).is_err());
+            assert!(min_energy_period(&s, 5.0, backend).is_err());
+        }
     }
 
     #[test]
     fn budgets_are_validated() {
         let s = fig1_scenario(300.0, 5.5);
-        assert!(min_energy_period(&s, -1.0).is_err());
-        assert!(min_energy_period(&s, f64::NAN).is_err());
-        assert!(min_time_period(&s, f64::INFINITY).is_err());
-        assert!(min_energy_period(&s, 0.0).is_ok());
+        assert!(min_energy_period(&s, -1.0, FO).is_err());
+        assert!(min_energy_period(&s, f64::NAN, FO).is_err());
+        assert!(min_time_period(&s, f64::INFINITY, EXACT).is_err());
+        assert!(min_energy_period(&s, 0.0, FO).is_ok());
     }
 }

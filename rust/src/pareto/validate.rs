@@ -7,14 +7,26 @@
 //! count), and repeated validations of overlapping frontiers hit the
 //! process-wide memo cache.
 //!
-//! Agreement criterion: the analytic value must fall within the 95%
-//! confidence band of the Monte-Carlo mean, widened by the first-order
-//! model's own truncation error — the neglected multi-failure-per-period
-//! terms scale like `(T/μ)²`, the same allowance
-//! `rust/tests/sim_vs_model.rs` has validated across every preset
-//! family. Simulation matches the model's assumption that failures
-//! never strike during downtime/recovery.
+//! The simulation and the agreement band follow the frontier's
+//! [`Backend`]:
+//!
+//! * **first-order** — the closed forms assume failure-free recovery,
+//!   so the cells simulate with `failures_during_recovery = false`, and
+//!   the analytic value must fall within the 95% confidence band of the
+//!   Monte-Carlo mean widened by the model's own truncation error —
+//!   the neglected multi-failure-per-period terms scale like `(T/μ)²`,
+//!   the same allowance `rust/tests/sim_vs_model.rs` has validated
+//!   across every preset family.
+//! * **exact** — the renewal model carries no truncation error, so the
+//!   band stays at a flat 2% sampling allowance (what
+//!   `sim_vs_model::exact_model_matches_simulation_at_small_mu`
+//!   established); `RecoveryModel::Ideal` simulates with suspended
+//!   recovery, `RecoveryModel::Restarting` with failures striking
+//!   during D + R — each exact variant validates against the process it
+//!   models.
 
+use crate::model::backend::Backend;
+use crate::model::exact::RecoveryModel;
 use crate::model::params::Scenario;
 use crate::sweep::{Cell, CellJob, GridSpec, SimSummary};
 
@@ -47,8 +59,9 @@ impl FrontierValidation {
 }
 
 /// Subsample up to `max_points` frontier points (endpoints always
-/// included), simulate each as one grid cell, and compare the analytic
-/// objectives against the Monte-Carlo confidence bands.
+/// included), simulate each as one grid cell under the failure process
+/// matching the frontier's backend, and compare the analytic objectives
+/// against the Monte-Carlo confidence bands.
 pub fn validate(
     frontier: &Frontier,
     max_points: usize,
@@ -57,20 +70,21 @@ pub fn validate(
 ) -> FrontierValidation {
     assert!(max_points >= 2 && replicates >= 2);
     let s = frontier.scenario;
+    let backend = frontier.backend;
     let picked = subsample(frontier.points(), max_points);
 
+    let failures_during_recovery = match backend {
+        // The first-order forms assume failure-free recovery; so does
+        // the exact Ideal variant.
+        Backend::FirstOrder | Backend::Exact(RecoveryModel::Ideal) => false,
+        Backend::Exact(RecoveryModel::Restarting) => true,
+    };
     let mut spec = GridSpec::new(base_seed);
     for p in &picked {
         spec.push(Cell {
             scenario: s,
             failure: None,
-            job: CellJob::Sim {
-                period: p.period,
-                replicates,
-                // The first-order closed forms assume failure-free
-                // recovery; simulate the same process.
-                failures_during_recovery: false,
-            },
+            job: CellJob::Sim { period: p.period, replicates, failures_during_recovery },
         });
     }
     let results = spec.evaluate();
@@ -80,7 +94,7 @@ pub fn validate(
         .zip(results)
         .map(|(point, r)| {
             let sim = *r.output.sim().expect("sim cell output");
-            let tol = truncation_tol(&s, point.period);
+            let tol = model_tol(&s, point.period, backend);
             let time_agrees = within_band(
                 point.time,
                 sim.makespan_mean,
@@ -99,6 +113,15 @@ pub fn validate(
 /// `t`: `2% + (T/μ)²/2` (see `rust/tests/sim_vs_model.rs`).
 pub fn truncation_tol(s: &Scenario, t: f64) -> f64 {
     0.02 + 0.5 * (t / s.mu).powi(2)
+}
+
+/// The agreement allowance for `backend` at period `t`: the first-order
+/// truncation band, or a flat 2% for the truncation-free exact model.
+pub fn model_tol(s: &Scenario, t: f64, backend: Backend) -> f64 {
+    match backend {
+        Backend::FirstOrder => truncation_tol(s, t),
+        Backend::Exact(_) => 0.02,
+    }
 }
 
 fn within_band(model: f64, mean: f64, ci95_half: f64, rel_tol: f64) -> bool {
@@ -133,7 +156,7 @@ mod tests {
     #[test]
     fn reference_frontier_validates() {
         let s = fig1_scenario(300.0, 5.5);
-        let f = Frontier::compute(&s, 33).unwrap();
+        let f = Frontier::compute(&s, 33, Backend::FirstOrder).unwrap();
         let v = validate(&f, 4, 120, 2013);
         assert_eq!(v.points.len(), 4);
         assert!(v.all_agree(), "{:?}", v.points.iter().map(|p| (p.time_agrees, p.energy_agrees)).collect::<Vec<_>>());
@@ -146,9 +169,30 @@ mod tests {
     }
 
     #[test]
+    fn exact_frontier_validates_where_first_order_would_need_the_wide_band() {
+        // mu=120: AlgoE periods reach ~0.5*mu, where the first-order
+        // forms need their (T/mu)^2 allowance. The exact backend's
+        // frontier must agree within the flat 2% band, in both recovery
+        // modes.
+        let s = fig1_scenario(120.0, 5.5);
+        for m in [RecoveryModel::Ideal, RecoveryModel::Restarting] {
+            let f = Frontier::compute(&s, 17, Backend::Exact(m)).unwrap();
+            let v = validate(&f, 3, 200, 2013);
+            assert!(
+                v.all_agree(),
+                "{m:?}: {:?}",
+                v.points
+                    .iter()
+                    .map(|p| (p.point.period, p.time_agrees, p.energy_agrees))
+                    .collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
     fn validation_is_deterministic_and_seed_reproducible() {
         let s = fig1_scenario(300.0, 5.5);
-        let f = Frontier::compute(&s, 17).unwrap();
+        let f = Frontier::compute(&s, 17, Backend::FirstOrder).unwrap();
         let a = validate(&f, 3, 64, 7);
         let b = validate(&f, 3, 64, 7);
         assert_eq!(a, b);

@@ -499,7 +499,10 @@ mod tests {
         };
         let t = mc_of(PeriodPolicy::AlgoT);
         let e = mc_of(PeriodPolicy::AlgoE);
-        let k = mc_of(PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord });
+        let k = mc_of(PeriodPolicy::Knee {
+            method: KneeMethod::MaxDistanceToChord,
+            backend: crate::model::Backend::FirstOrder,
+        });
         assert!(
             k.makespan.mean() < e.makespan.mean(),
             "knee makespan {} !< AlgoE {}",
@@ -542,7 +545,10 @@ mod tests {
         let s = fig1_scenario(300.0, 5.5);
         let cfg = AdaptiveSimConfig::paper(
             s,
-            PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord },
+            PeriodPolicy::Knee {
+                method: KneeMethod::MaxDistanceToChord,
+                backend: crate::model::Backend::FirstOrder,
+            },
         );
         let a = adaptive_monte_carlo(&cfg, 48, 7, 1);
         let b = adaptive_monte_carlo(&cfg, 48, 7, 8);

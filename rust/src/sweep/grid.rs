@@ -16,7 +16,8 @@
 //! * [`CellJob::Sim`] — seeded Monte-Carlo estimation, optionally under a
 //!   non-paper [`FailureProcess`] (per-node Weibull platforms etc.).
 //! * [`CellJob::Frontier`] — the time–energy Pareto frontier between the
-//!   two optima ([`crate::pareto`]).
+//!   two optima ([`crate::pareto`]), under a selectable objective-model
+//!   [`Backend`] (part of the cache key).
 //! * [`CellJob::AdaptiveRun`] — Monte-Carlo of the *adaptive* simulator
 //!   ([`crate::sim::adaptive`]): an online controller re-estimates
 //!   `(C, R, μ)` along each sample path and re-reads its
@@ -34,7 +35,8 @@
 //! stable when a grid is re-arranged or filtered.
 
 use crate::coordinator::policy::PeriodPolicy;
-use crate::model::params::Scenario;
+use crate::model::backend::Backend;
+use crate::model::params::{ModelError, Scenario};
 use crate::model::ratios::{compare, Comparison};
 use crate::model::{e_final, t_final};
 use crate::pareto::frontier::FrontierSummary;
@@ -49,7 +51,9 @@ use super::cache;
 use super::cache::CellKey;
 
 /// Bump when the evaluation semantics change (invalidates memo entries).
-const KEY_VERSION: u64 = 1;
+/// v2: the objective-model backend joined the Frontier cell and the
+/// policy encoding.
+const KEY_VERSION: u64 = 2;
 
 /// What to compute for one cell.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -61,8 +65,8 @@ pub enum CellJob {
     /// Monte-Carlo estimate at `period` over `replicates` sample paths.
     Sim { period: f64, replicates: usize, failures_during_recovery: bool },
     /// Time–energy Pareto frontier sampled at `points` periods between
-    /// the two optima ([`crate::pareto`]).
-    Frontier { points: usize },
+    /// the two optima of `backend`'s objectives ([`crate::pareto`]).
+    Frontier { points: usize, backend: Backend },
     /// Monte-Carlo estimate of `replicates` *adaptive* sample paths:
     /// the period is re-estimated online by an
     /// [`AdaptiveController`](crate::coordinator::AdaptiveController)
@@ -162,8 +166,11 @@ pub enum CellOutput {
     /// collapse to `T = C`; figures report the cell as clamped).
     Compare(Option<Comparison>),
     Sim(SimSummary),
-    /// `None` under the same out-of-domain clamp as `Compare`.
-    Frontier(Option<FrontierSummary>),
+    /// The frontier, or the [`ModelError`] explaining why the scenario
+    /// has none — the same out-of-domain clamp regime as `Compare`,
+    /// with the reason preserved so family/CLI consumers can surface it
+    /// instead of silently dropping the row.
+    Frontier(Result<FrontierSummary, ModelError>),
     /// `None` when the scenario has no feasible period at all (the same
     /// clamp regime as `Compare`/`Frontier`).
     Adaptive(Option<AdaptiveSummary>),
@@ -186,10 +193,11 @@ impl CellOutput {
         }
     }
 
-    /// The frontier, when this was a [`CellJob::Frontier`] cell.
+    /// The frontier, when this was an in-domain [`CellJob::Frontier`]
+    /// cell.
     pub fn frontier(&self) -> Option<&FrontierSummary> {
         match self {
-            CellOutput::Frontier(Some(f)) => Some(f),
+            CellOutput::Frontier(Ok(f)) => Some(f),
             _ => None,
         }
     }
@@ -277,9 +285,21 @@ impl GridSpec {
     }
 
     /// Append a Pareto-frontier cell (`points` samples between the
-    /// optima).
+    /// first-order optima).
     pub fn push_frontier(&mut self, scenario: Scenario, points: usize) -> &mut Self {
-        self.push(Cell { scenario, failure: None, job: CellJob::Frontier { points } })
+        self.push_frontier_with(scenario, points, Backend::FirstOrder)
+    }
+
+    /// Append a Pareto-frontier cell under an explicit objective-model
+    /// backend (part of the cache key and, were the cell simulated, the
+    /// seed derivation).
+    pub fn push_frontier_with(
+        &mut self,
+        scenario: Scenario,
+        points: usize,
+        backend: Backend,
+    ) -> &mut Self {
+        self.push(Cell { scenario, failure: None, job: CellJob::Frontier { points, backend } })
     }
 
     /// Append an adaptive-controller Monte-Carlo cell (paper failure
@@ -318,23 +338,9 @@ impl GridSpec {
     /// Exact-bits cache key for a cell (includes `base_seed` only where
     /// it matters — simulated cells).
     pub(crate) fn cell_key(&self, cell: &Cell) -> CellKey {
-        let mut k = Vec::with_capacity(20);
+        let mut k = Vec::with_capacity(24);
         k.push(KEY_VERSION);
-        let s = &cell.scenario;
-        for v in [
-            s.ckpt.c,
-            s.ckpt.r,
-            s.ckpt.d,
-            s.ckpt.omega,
-            s.power.p_static,
-            s.power.p_cal,
-            s.power.p_io,
-            s.power.p_down,
-            s.mu,
-            s.t_base,
-        ] {
-            k.push(v.to_bits());
-        }
+        k.extend_from_slice(&cell.scenario.key_bits());
         match &cell.failure {
             None => k.push(0),
             Some(FailureProcess::Exponential { mtbf }) => {
@@ -366,15 +372,14 @@ impl GridSpec {
                 k.push(u64::from(failures_during_recovery));
                 k.push(self.base_seed);
             }
-            CellJob::Frontier { points } => {
+            CellJob::Frontier { points, backend } => {
                 k.push(13);
                 k.push(points as u64);
+                k.push(backend.key_word());
             }
             CellJob::AdaptiveRun { policy, replicates, failures_during_recovery } => {
                 k.push(14);
-                let (tag, word) = policy_key(policy);
-                k.push(tag);
-                k.push(word);
+                k.extend_from_slice(&policy_key(policy));
                 k.push(replicates as u64);
                 k.push(u64::from(failures_during_recovery));
                 k.push(self.base_seed);
@@ -447,8 +452,8 @@ fn eval_cell(cell: &Cell, seed: u64) -> CellOutput {
             let mc = monte_carlo(&cfg, replicates, seed, replicates);
             CellOutput::Sim(SimSummary::from_mc(&mc))
         }
-        CellJob::Frontier { points } => {
-            CellOutput::Frontier(FrontierSummary::compute(&cell.scenario, points))
+        CellJob::Frontier { points, backend } => {
+            CellOutput::Frontier(FrontierSummary::compute(&cell.scenario, points, backend))
         }
         CellJob::AdaptiveRun { policy, replicates, failures_during_recovery } => {
             if cell.scenario.clamp_period(cell.scenario.min_period()).is_err() {
@@ -465,19 +470,28 @@ fn eval_cell(cell: &Cell, seed: u64) -> CellOutput {
     }
 }
 
-/// Stable `(tag, parameter-bits)` encoding of a [`PeriodPolicy`] for
-/// cache keys and seed derivation.
-fn policy_key(p: PeriodPolicy) -> (u64, u64) {
+/// Stable `[tag, parameter-bits, backend]` encoding of a
+/// [`PeriodPolicy`] for cache keys and seed derivation. The backend
+/// word keeps a first-order and an exact run of the same policy from
+/// aliasing in the cache (and gives them distinct seeds).
+fn policy_key(p: PeriodPolicy) -> [u64; 3] {
+    let backend_word = p.backend().map(|b| b.key_word()).unwrap_or(0);
     match p {
-        PeriodPolicy::AlgoT => (0, 0),
-        PeriodPolicy::AlgoE => (1, 0),
-        PeriodPolicy::Young => (2, 0),
-        PeriodPolicy::Daly => (3, 0),
-        PeriodPolicy::Fixed(t) => (4, t.to_bits()),
-        PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord } => (5, 0),
-        PeriodPolicy::Knee { method: KneeMethod::MaxCurvature } => (5, 1),
-        PeriodPolicy::EnergyBudget { max_time_overhead } => (6, max_time_overhead.to_bits()),
-        PeriodPolicy::TimeBudget { max_energy_overhead } => (7, max_energy_overhead.to_bits()),
+        PeriodPolicy::AlgoT => [0, 0, 0],
+        PeriodPolicy::AlgoE => [1, 0, 0],
+        PeriodPolicy::Young => [2, 0, 0],
+        PeriodPolicy::Daly => [3, 0, 0],
+        PeriodPolicy::Fixed(t) => [4, t.to_bits(), 0],
+        PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord, .. } => {
+            [5, 0, backend_word]
+        }
+        PeriodPolicy::Knee { method: KneeMethod::MaxCurvature, .. } => [5, 1, backend_word],
+        PeriodPolicy::EnergyBudget { max_time_overhead, .. } => {
+            [6, max_time_overhead.to_bits(), backend_word]
+        }
+        PeriodPolicy::TimeBudget { max_energy_overhead, .. } => {
+            [7, max_energy_overhead.to_bits(), backend_word]
+        }
     }
 }
 
@@ -633,7 +647,7 @@ mod tests {
         assert!(matches!(results[0].output, CellOutput::Model { .. }));
         assert!(matches!(results[1].output, CellOutput::Compare(Some(_))));
         assert!(matches!(results[2].output, CellOutput::Sim(_)));
-        assert!(matches!(results[3].output, CellOutput::Frontier(Some(_))));
+        assert!(matches!(results[3].output, CellOutput::Frontier(Ok(_))));
     }
 
     #[test]
@@ -641,7 +655,7 @@ mod tests {
         let s = scenario();
         let mut spec = GridSpec::new(1);
         spec.push_frontier(s, 17);
-        let direct = FrontierSummary::compute(&s, 17).unwrap();
+        let direct = FrontierSummary::compute(&s, 17, Backend::FirstOrder).unwrap();
         let first = spec.evaluate();
         assert_eq!(first[0].output.frontier().unwrap(), &direct);
         // Pure model cell: no seed derived.
@@ -655,25 +669,45 @@ mod tests {
         let mut other = GridSpec::new(1);
         other.push_frontier(s, 33);
         assert_ne!(spec.cell_key(&spec.cells()[0]), other.cell_key(&other.cells()[0]));
+        // And so is a different objective backend.
+        let mut exact = GridSpec::new(1);
+        exact.push_frontier_with(s, 17, Backend::Exact(crate::model::RecoveryModel::Ideal));
+        assert_ne!(spec.cell_key(&spec.cells()[0]), exact.cell_key(&exact.cells()[0]));
     }
 
     #[test]
-    fn frontier_out_of_domain_is_none() {
-        // Same breakdown scenario as the Compare clamp test.
+    fn exact_frontier_cells_match_direct_computation() {
+        let s = fig1_scenario(120.0, 5.5);
+        let backend = Backend::Exact(crate::model::RecoveryModel::Restarting);
+        let mut spec = GridSpec::new(1);
+        spec.push_frontier_with(s, 17, backend);
+        let direct = FrontierSummary::compute(&s, 17, backend).unwrap();
+        let out = spec.evaluate();
+        assert_eq!(out[0].output.frontier().unwrap(), &direct);
+        assert_eq!(out[0].output.frontier().unwrap().backend, backend);
+    }
+
+    #[test]
+    fn frontier_out_of_domain_carries_the_error() {
+        // Same breakdown scenario as the Compare clamp test; the cell
+        // preserves the ModelError instead of flattening it to None.
         let ckpt = crate::model::CheckpointParams::new(10.0, 10.0, 1.0, 0.5).unwrap();
         let power = crate::model::PowerParams::from_rho(5.5, 1.0, 0.0).unwrap();
         let s = Scenario::new(ckpt, power, 17.0, 1000.0).unwrap();
         let mut spec = GridSpec::new(1);
         spec.push_frontier(s, 9);
         let out = spec.without_cache().evaluate();
-        assert!(matches!(out[0].output, CellOutput::Frontier(None)));
+        assert!(matches!(out[0].output, CellOutput::Frontier(Err(ModelError::OutOfDomain(_)))));
         assert_eq!(out[0].output.frontier(), None);
     }
 
     #[test]
     fn adaptive_cells_match_direct_monte_carlo_with_derived_seed() {
         let s = scenario();
-        let policy = PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord };
+        let policy = PeriodPolicy::Knee {
+            method: KneeMethod::MaxDistanceToChord,
+            backend: Backend::FirstOrder,
+        };
         let mut spec = GridSpec::new(77);
         spec.push_adaptive(s, policy, 32);
         let spec = spec.without_cache();
@@ -700,17 +734,34 @@ mod tests {
         b.push_adaptive(s, PeriodPolicy::AlgoE, 32);
         assert_ne!(a.cell_key(&a.cells()[0]), b.cell_key(&b.cells()[0]));
         assert_ne!(a.cell_seed(&a.cells()[0]), b.cell_seed(&b.cells()[0]));
+        let knee = |backend| PeriodPolicy::Knee {
+            method: KneeMethod::MaxDistanceToChord,
+            backend,
+        };
         let mut c = GridSpec::new(1);
-        c.push_adaptive(s, PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord }, 32);
+        c.push_adaptive(s, knee(Backend::FirstOrder), 32);
         let mut d = GridSpec::new(1);
-        d.push_adaptive(s, PeriodPolicy::Knee { method: KneeMethod::MaxCurvature }, 32);
+        d.push_adaptive(
+            s,
+            PeriodPolicy::Knee {
+                method: KneeMethod::MaxCurvature,
+                backend: Backend::FirstOrder,
+            },
+            32,
+        );
         assert_ne!(c.cell_key(&c.cells()[0]), d.cell_key(&d.cells()[0]));
         // Budget parameter is part of the key.
+        let fo = Backend::FirstOrder;
         let mut e = GridSpec::new(1);
-        e.push_adaptive(s, PeriodPolicy::EnergyBudget { max_time_overhead: 2.0 }, 32);
+        e.push_adaptive(s, PeriodPolicy::EnergyBudget { max_time_overhead: 2.0, backend: fo }, 32);
         let mut f = GridSpec::new(1);
-        f.push_adaptive(s, PeriodPolicy::EnergyBudget { max_time_overhead: 5.0 }, 32);
+        f.push_adaptive(s, PeriodPolicy::EnergyBudget { max_time_overhead: 5.0, backend: fo }, 32);
         assert_ne!(e.cell_key(&e.cells()[0]), f.cell_key(&f.cells()[0]));
+        // And so is the objective backend of a frontier-aware policy.
+        let mut g = GridSpec::new(1);
+        g.push_adaptive(s, knee(Backend::Exact(crate::model::RecoveryModel::Ideal)), 32);
+        assert_ne!(c.cell_key(&c.cells()[0]), g.cell_key(&g.cells()[0]));
+        assert_ne!(c.cell_seed(&c.cells()[0]), g.cell_seed(&g.cells()[0]));
     }
 
     #[test]

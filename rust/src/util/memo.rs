@@ -1,0 +1,123 @@
+//! Process-wide memo for pure scalar functions of an exact-bits key.
+//!
+//! Two subsystems memoise `f64` values that are pure functions of a
+//! small fixed-size key: the exact backend's numeric optima
+//! ([`crate::model::backend`]) and the online policy periods
+//! ([`crate::pareto::online`]). Both need the same contract — lazily
+//! initialised process-wide storage, compute-outside-the-lock (a
+//! concurrent miss on the same key just recomputes the same pure
+//! value), and wholesale clearing at a capacity bound (entries are pure
+//! functions of their key, so losing them only costs recomputation).
+//! [`PureMemo`] is that contract, once, instead of a hand-rolled copy
+//! per call site. (The grid engine's [`crate::sweep::cache`] is the
+//! heavyweight sibling: structured values, hit/miss counters, tunable
+//! capacity.)
+//!
+//! Because values are pure functions of their keys, which thread (or
+//! concurrently running grid cell) fills an entry first cannot change
+//! the value anyone reads — the property every thread-count-invariance
+//! test in the crate leans on.
+
+use std::collections::HashMap;
+use std::convert::Infallible;
+use std::hash::Hash;
+use std::sync::{Mutex, OnceLock};
+
+/// A capacity-bounded memo for a pure `K -> f64` function.
+pub struct PureMemo<K> {
+    map: OnceLock<Mutex<HashMap<K, f64>>>,
+    capacity: usize,
+}
+
+impl<K: Eq + Hash + Copy> PureMemo<K> {
+    /// Const-constructible so instances can live in `static`s.
+    pub const fn new(capacity: usize) -> Self {
+        PureMemo { map: OnceLock::new(), capacity }
+    }
+
+    fn map(&self) -> &Mutex<HashMap<K, f64>> {
+        self.map.get_or_init(|| Mutex::new(HashMap::new()))
+    }
+
+    /// Cached value for `key`, computing (and caching) it on a miss.
+    /// `compute` errors pass through and nothing is cached.
+    pub fn get_or_try_compute<E>(
+        &self,
+        key: K,
+        compute: impl FnOnce() -> Result<f64, E>,
+    ) -> Result<f64, E> {
+        if let Some(&v) = self.map().lock().unwrap().get(&key) {
+            return Ok(v);
+        }
+        // Compute outside the lock: a concurrent miss on the same key
+        // just recomputes the same pure value.
+        let v = compute()?;
+        let mut m = self.map().lock().unwrap();
+        if m.len() >= self.capacity {
+            m.clear();
+        }
+        m.insert(key, v);
+        Ok(v)
+    }
+
+    /// Infallible variant of [`Self::get_or_try_compute`].
+    pub fn get_or_compute(&self, key: K, compute: impl FnOnce() -> f64) -> f64 {
+        self.get_or_try_compute::<Infallible>(key, || Ok(compute()))
+            .unwrap_or_else(|e| match e {})
+    }
+
+    /// Number of live entries (test/diagnostic use).
+    pub fn len(&self) -> usize {
+        self.map().lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn caches_and_reuses_values() {
+        static MEMO: PureMemo<u64> = PureMemo::new(16);
+        let mut calls = 0;
+        let a = MEMO.get_or_compute(1, || {
+            calls += 1;
+            42.0
+        });
+        let b = MEMO.get_or_compute(1, || {
+            calls += 1;
+            99.0 // must not be observed: the entry is already cached
+        });
+        assert_eq!(a.to_bits(), b.to_bits());
+        assert_eq!(a, 42.0);
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn errors_pass_through_and_cache_nothing() {
+        static MEMO: PureMemo<u64> = PureMemo::new(16);
+        let r: Result<f64, &str> = MEMO.get_or_try_compute(7, || Err("nope"));
+        assert_eq!(r, Err("nope"));
+        // The failed key is not cached; a later success fills it.
+        let v = MEMO.get_or_try_compute::<&str>(7, || Ok(3.5)).unwrap();
+        assert_eq!(v, 3.5);
+    }
+
+    #[test]
+    fn capacity_overflow_clears_wholesale() {
+        static MEMO: PureMemo<u64> = PureMemo::new(4);
+        for k in 0..4 {
+            MEMO.get_or_compute(k, || k as f64);
+        }
+        assert_eq!(MEMO.len(), 4);
+        // At capacity the next insert clears first.
+        MEMO.get_or_compute(100, || 100.0);
+        assert_eq!(MEMO.len(), 1);
+        // Cleared entries simply recompute.
+        assert_eq!(MEMO.get_or_compute(0, || -1.0), -1.0);
+    }
+}

@@ -7,12 +7,14 @@
 //! ([`rng`]), streaming statistics and confidence intervals ([`stats`]),
 //! a minimal JSON reader/writer ([`json`]), a tiny property-based testing
 //! harness ([`proptest`]), a timing harness for the `harness = false`
-//! benches ([`bench`]), an ASCII table printer ([`table`]), and a
-//! persistent work-stealing thread pool ([`pool`]) that the Monte-Carlo
-//! runner and the scenario-grid engine fan out on.
+//! benches ([`bench`]), an ASCII table printer ([`table`]), a
+//! process-wide pure-function memo ([`memo`]), and a persistent
+//! work-stealing thread pool ([`pool`]) that the Monte-Carlo runner and
+//! the scenario-grid engine fan out on.
 
 pub mod bench;
 pub mod json;
+pub mod memo;
 pub mod pool;
 pub mod proptest;
 pub mod rng;

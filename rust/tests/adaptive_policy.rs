@@ -14,6 +14,7 @@ use ckpt_period::config::presets::tradeoff_presets;
 use ckpt_period::coordinator::PeriodPolicy;
 use ckpt_period::model::energy::t_energy_opt;
 use ckpt_period::model::time::t_time_opt;
+use ckpt_period::model::{Backend, RecoveryModel};
 use ckpt_period::pareto::KneeMethod;
 use ckpt_period::sim::adaptive::{
     adaptive_monte_carlo, AdaptiveMonteCarloResult, AdaptiveSimConfig,
@@ -23,7 +24,14 @@ use ckpt_period::sweep::GridSpec;
 const REPLICATES: usize = 200;
 const SEED: u64 = 2013;
 
-const KNEE: PeriodPolicy = PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord };
+const KNEE: PeriodPolicy = PeriodPolicy::Knee {
+    method: KneeMethod::MaxDistanceToChord,
+    backend: Backend::FirstOrder,
+};
+const KNEE_EXACT: PeriodPolicy = PeriodPolicy::Knee {
+    method: KneeMethod::MaxDistanceToChord,
+    backend: Backend::Exact(RecoveryModel::Ideal),
+};
 
 /// Same base seed for every policy: common random numbers correlate the
 /// failure processes across the compared runs, so mean differences
@@ -89,14 +97,20 @@ fn b_budget_policies_respect_their_constraints() {
     // time overhead over AlgoT stays in the budget's neighbourhood
     // (the budget constrains the *model* makespan; Monte-Carlo noise
     // and online estimation add a little slack either way).
-    let eps_t = mc(s, PeriodPolicy::EnergyBudget { max_time_overhead: 5.0 });
+    let eps_t = mc(
+        s,
+        PeriodPolicy::EnergyBudget { max_time_overhead: 5.0, backend: Backend::FirstOrder },
+    );
     assert!(eps_t.energy.mean() < algo_t.energy.mean());
     let overhead = eps_t.makespan.mean() / algo_t.makespan.mean() - 1.0;
     assert!(overhead < 0.07, "measured time overhead {overhead} far above the 5% budget");
 
     // The transpose: a 5% energy budget beats AlgoE on time and stays
     // near its energy bound.
-    let eps_e = mc(s, PeriodPolicy::TimeBudget { max_energy_overhead: 5.0 });
+    let eps_e = mc(
+        s,
+        PeriodPolicy::TimeBudget { max_energy_overhead: 5.0, backend: Backend::FirstOrder },
+    );
     assert!(eps_e.makespan.mean() < algo_e.makespan.mean());
     let overhead = eps_e.energy.mean() / algo_e.energy.mean() - 1.0;
     assert!(overhead < 0.07, "measured energy overhead {overhead} far above the 5% budget");
@@ -135,20 +149,64 @@ fn d_policy_periods_sit_inside_the_optimal_interval() {
         let knee = KNEE.period(&s).expect(label);
         assert!(knee > tt && knee < te, "{label}: knee {knee} outside ({tt}, {te})");
         for eps in [0.5, 2.0, 10.0] {
-            let p = PeriodPolicy::EnergyBudget { max_time_overhead: eps }
-                .period(&s)
-                .expect(label);
+            let p = PeriodPolicy::EnergyBudget {
+                max_time_overhead: eps,
+                backend: Backend::FirstOrder,
+            }
+            .period(&s)
+            .expect(label);
             assert!(
                 (tt - 1e-9..=te + 1e-9).contains(&p),
                 "{label} eps-time:{eps}: period {p} outside [{tt}, {te}]"
             );
-            let p = PeriodPolicy::TimeBudget { max_energy_overhead: eps }
-                .period(&s)
-                .expect(label);
+            let p = PeriodPolicy::TimeBudget {
+                max_energy_overhead: eps,
+                backend: Backend::FirstOrder,
+            }
+            .period(&s)
+            .expect(label);
             assert!(
                 (tt - 1e-9..=te + 1e-9).contains(&p),
                 "{label} eps-energy:{eps}: period {p} outside [{tt}, {te}]"
             );
         }
     }
+}
+
+#[test]
+fn e_exact_knee_policy_runs_longer_periods_and_stays_deterministic() {
+    // `simulate --policy knee --model exact` acceptance: the exact-knee
+    // controller adopts a visibly longer period than the first-order
+    // knee (>5% at mu=300, the knee-drift headline), lands between the
+    // exact optima, and is byte-identical across thread counts.
+    let (_, s) = tradeoff_presets().into_iter().next().unwrap();
+    let fo = mc(s, KNEE);
+    let ex = mc(s, KNEE_EXACT);
+    let (fo_p, ex_p) = (fo.final_period.mean(), ex.final_period.mean());
+    assert!(ex_p > fo_p * 1.05, "exact knee period {ex_p} !> first-order {fo_p}");
+    let exact = Backend::Exact(RecoveryModel::Ideal);
+    let tt = exact.t_time_opt(&s).unwrap();
+    let te = exact.t_energy_opt(&s).unwrap();
+    assert!(ex_p > tt && ex_p < te, "exact knee period {ex_p} outside ({tt}, {te})");
+
+    // Thread-count invariance, directly and through a grid cell.
+    let cfg = AdaptiveSimConfig::paper(s, KNEE_EXACT);
+    let serial = adaptive_monte_carlo(&cfg, 64, 7, 1);
+    let pooled = adaptive_monte_carlo(&cfg, 64, 7, 8);
+    assert_eq!(serial.makespan.mean().to_bits(), pooled.makespan.mean().to_bits());
+    assert_eq!(serial.energy.mean().to_bits(), pooled.energy.mean().to_bits());
+    assert_eq!(serial.final_period.mean().to_bits(), pooled.final_period.mean().to_bits());
+    let mut spec = GridSpec::new(42);
+    spec.push_adaptive(s, KNEE_EXACT, 64);
+    let seed = spec.cell_seed(&spec.cells()[0]);
+    let results = spec.evaluate();
+    let summary = results[0].output.adaptive().expect("in domain");
+    let direct = adaptive_monte_carlo(&cfg, 64, seed, 1);
+    assert_eq!(summary.makespan_mean.to_bits(), direct.makespan.mean().to_bits());
+    assert_eq!(summary.energy_mean.to_bits(), direct.energy.mean().to_bits());
+    // The exact and first-order knee cells must not share seeds (the
+    // backend is part of the key derivation).
+    let mut fo_spec = GridSpec::new(42);
+    fo_spec.push_adaptive(s, KNEE, 64);
+    assert_ne!(seed, fo_spec.cell_seed(&fo_spec.cells()[0]));
 }

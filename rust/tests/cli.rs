@@ -84,6 +84,7 @@ fn figures_generates_csvs() {
     let out = run_ok(&["figures", "--points", "12", "--out-dir", dir.to_str().unwrap()]);
     assert!(out.contains("peak energy gain"));
     assert!(out.contains("frontier knee"), "{out}");
+    assert!(out.contains("knee drift"), "{out}");
     assert!(out.contains("adaptive knee"), "{out}");
     for f in [
         "fig1.csv",
@@ -92,6 +93,7 @@ fn figures_generates_csvs() {
         "fig3b.csv",
         "frontier.csv",
         "frontier_knees.csv",
+        "knee_drift.csv",
         "adaptive.csv",
     ] {
         assert!(dir.join(f).exists(), "missing {f}");
@@ -103,8 +105,42 @@ fn figures_generates_csvs() {
 fn pareto_prints_frontier_and_knees() {
     let out = run_ok(&["pareto", "--points", "32"]);
     assert!(out.contains("hypervolume"), "{out}");
+    assert!(out.contains("model first-order"), "{out}");
     assert!(out.contains("knee (max dist to chord)"), "{out}");
     assert!(out.contains("energy_gain_pct"), "{out}");
+}
+
+#[test]
+fn pareto_exact_model_shifts_the_frontier() {
+    // Small mu: the exact window sits visibly above the first-order one
+    // (the knee-drift regime), and the artifact records the backend.
+    let first = run_ok(&["pareto", "--points", "16", "--mu", "60"]);
+    let exact = run_ok(&["pareto", "--points", "16", "--mu", "60", "--model", "exact"]);
+    assert!(exact.contains("model exact"), "{exact}");
+    let t_lo = |out: &str| {
+        let tail = out.split("T in [").nth(1).expect("frontier line").to_string();
+        tail.split(',').next().unwrap().trim().parse::<f64>().unwrap()
+    };
+    let (fo_lo, ex_lo) = (t_lo(&first), t_lo(&exact));
+    assert!(ex_lo > fo_lo * 1.2, "exact T_Time_opt {ex_lo} !>> first-order {fo_lo}");
+    // exact:ideal is accepted too.
+    let out = run_ok(&["pareto", "--points", "16", "--model", "exact:ideal"]);
+    assert!(out.contains("model exact:ideal"), "{out}");
+}
+
+#[test]
+fn bad_model_values_are_rejected_with_the_grammar() {
+    for cmd in [
+        vec!["pareto", "--model", "bogus"],
+        vec!["simulate", "--model", "exact:lazy", "--replicates", "4"],
+        vec!["train", "--model", "second-order"],
+    ] {
+        let out = bin().args(&cmd).output().unwrap();
+        assert!(!out.status.success(), "{cmd:?} accepted");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("model"), "{cmd:?}: {err}");
+        assert!(err.contains("first-order|exact"), "{cmd:?}: grammar missing from {err}");
+    }
 }
 
 #[test]
@@ -213,6 +249,20 @@ fn simulate_adaptive_knee_runs_end_to_end() {
     assert!(out.contains("adaptive simulation: policy knee"), "{out}");
     assert!(out.contains("makespan_min"), "{out}");
     assert!(out.contains("period_updates"), "{out}");
+    // The knee policy re-targets at the exact backend through --model.
+    let out = run_ok(&[
+        "simulate",
+        "--adaptive",
+        "--policy",
+        "knee",
+        "--model",
+        "exact",
+        "--replicates",
+        "16",
+        "--seed",
+        "3",
+    ]);
+    assert!(out.contains("policy knee, model exact"), "{out}");
     // The budget policies parse and run through the same path.
     let out = run_ok(&[
         "simulate",

@@ -8,15 +8,27 @@
 //! rewiring fails loudly here.
 
 use ckpt_period::config::presets::tradeoff_presets;
-use ckpt_period::figures::{fig1, fig2, fig3, headline};
+use ckpt_period::figures::{fig1, fig2, fig3, headline, knee_drift};
+use ckpt_period::model::{Backend, RecoveryModel};
 use ckpt_period::pareto::{Frontier, KneeMethod};
 
 const REL_TOL: f64 = 1e-9;
 
+/// Tolerance for goldens that pass through the exact backend's numeric
+/// optimisers: `grid_then_golden` pins the argmin only to ~1e-10·hi
+/// absolute (~3e-9 relative on these scenarios), so a 1e-9 gate would
+/// flake on last-ulp libm drift. 1e-6 still fails loudly on any real
+/// change to the exact model, the optimiser, or the frontier geometry.
+const EXACT_REL_TOL: f64 = 1e-6;
+
 fn assert_close(what: &str, got: f64, want: f64) {
+    assert_close_tol(what, got, want, REL_TOL);
+}
+
+fn assert_close_tol(what: &str, got: f64, want: f64, tol: f64) {
     let denom = want.abs().max(1e-300);
     assert!(
-        ((got - want) / denom).abs() < REL_TOL,
+        ((got - want) / denom).abs() < tol,
         "{what}: got {got:.15e}, golden {want:.15e}"
     );
 }
@@ -158,12 +170,121 @@ fn frontier_golden_hypervolume_and_knee_rows() {
             .iter()
             .find(|(l, _)| *l == label)
             .unwrap_or_else(|| panic!("preset {label} disappeared"));
-        let f = Frontier::compute(s, N).expect(label);
+        let f = Frontier::compute(s, N, Backend::FirstOrder).expect(label);
         assert_close(&format!("{label} hypervolume"), f.hypervolume(), hv);
         let k = f.knee(KneeMethod::MaxDistanceToChord).expect(label);
         assert_close(&format!("{label} knee period"), k.point.period, knee_period);
         assert_close(&format!("{label} knee makespan"), k.point.time, knee_time);
         assert_close(&format!("{label} knee energy"), k.point.energy, knee_energy);
+    }
+}
+
+#[test]
+fn exact_frontier_golden_hypervolume_and_knee_rows() {
+    // The exact-backend counterparts of the rows above: one golden row
+    // per trade-off preset under Backend::Exact(Ideal) at the same
+    // 65-point sampling — the regression gate for the exact renewal
+    // objectives, the memoised numeric optima, and the backend-generic
+    // frontier plumbing. Values from the same independently mirrored
+    // closed/renewal forms as every other fixture here. Note the exact
+    // knees run 6-11% longer than the first-order ones even at the
+    // paper's mu = 300 reference point.
+    const N: usize = 65;
+    // (label, hypervolume, knee_period, knee_makespan, knee_energy)
+    let golden = [
+        (
+            "fig1-rho5.5",
+            0.8469065887275516,
+            92.10684702052407,
+            13028.462894955712,
+            41046.16129881349,
+        ),
+        (
+            "fig1-rho7",
+            0.8503965943599592,
+            95.67146115457088,
+            13080.612777286706,
+            45399.03206022526,
+        ),
+        (
+            "alpha-heavy",
+            0.838165259387657,
+            80.915287849,
+            12883.676880847172,
+            65875.76172017591,
+        ),
+        (
+            "beta-heavy",
+            0.8563332522220954,
+            104.27802424666791,
+            13216.362985644537,
+            41299.68467926749,
+        ),
+        (
+            "gamma-heavy",
+            0.8468664280302014,
+            92.04775997699443,
+            13027.620592377396,
+            41135.680911641655,
+        ),
+        (
+            "exascale-io-heavy",
+            0.8586865790320234,
+            30.60256359158587,
+            12073.448755249814,
+            41281.24041631975,
+        ),
+    ];
+    let backend = Backend::Exact(RecoveryModel::Ideal);
+    let presets = tradeoff_presets();
+    assert_eq!(presets.len(), golden.len(), "preset set changed; regenerate the goldens");
+    for (label, hv, knee_period, knee_time, knee_energy) in golden {
+        let (_, s) = presets
+            .iter()
+            .find(|(l, _)| *l == label)
+            .unwrap_or_else(|| panic!("preset {label} disappeared"));
+        let f = Frontier::compute(s, N, backend).expect(label);
+        let what = |q: &str| format!("{label} exact {q}");
+        assert_close_tol(&what("hypervolume"), f.hypervolume(), hv, EXACT_REL_TOL);
+        let k = f.knee(KneeMethod::MaxDistanceToChord).expect(label);
+        assert_close_tol(&what("knee period"), k.point.period, knee_period, EXACT_REL_TOL);
+        assert_close_tol(&what("knee makespan"), k.point.time, knee_time, EXACT_REL_TOL);
+        assert_close_tol(&what("knee energy"), k.point.energy, knee_energy, EXACT_REL_TOL);
+    }
+}
+
+#[test]
+fn knee_drift_golden_rows() {
+    // The knee-drift figure's golden rows (KNEE_DRIFT_POINTS = 129
+    // sampling): first-order knee, exact knee, and the drift between
+    // them, per trade-off preset plus the two small-mu stress rows.
+    // This pins the acceptance headline: >5% drift everywhere, >20% at
+    // mu = 120 and >40% at mu = 60.
+    // (label, knee_first_order, knee_exact, drift_pct)
+    let golden = [
+        ("fig1-rho5.5", 83.66927355941102, 92.10684702052407, 10.084434945071896),
+        ("fig1-rho7", 87.18587333701242, 96.46946602590738, 10.648046906647046),
+        ("alpha-heavy", 73.93616257564467, 80.47921265421145, 8.849593826123359),
+        ("beta-heavy", 93.3043959320106, 103.30071597757939, 10.71366460895684),
+        ("gamma-heavy", 83.61911034875286, 92.04775997699443, 10.079812608730165),
+        ("exascale-io-heavy", 28.391677774862558, 30.28419348972647, 6.665741031125361),
+        ("fig1-rho5.5-mu120", 46.04254301605333, 55.98356156163236, 21.59094153881327),
+        ("fig1-rho5.5-mu60", 26.894138670118732, 38.64212304509, 43.682322453494685),
+    ];
+    let rows = knee_drift::series();
+    assert_eq!(rows.len(), golden.len(), "drift preset set changed; regenerate the goldens");
+    for (label, knee_first, knee_exact, drift_pct) in golden {
+        let r = rows
+            .iter()
+            .find(|r| r.label == label)
+            .unwrap_or_else(|| panic!("drift row {label} disappeared"));
+        let what = |q: &str| format!("{label} {q}");
+        // The first-order knee is closed-form all the way down; the
+        // exact one (and the drift) go through the numeric optimiser.
+        assert_close(&what("first-order knee"), r.knee_first_order, knee_first);
+        assert_close_tol(&what("exact knee"), r.knee_exact, knee_exact, EXACT_REL_TOL);
+        assert_close_tol(&what("drift"), r.drift_pct, drift_pct, EXACT_REL_TOL);
+        assert!(r.drift_pct > 5.0, "{label}: drift {} below the 5% headline", r.drift_pct);
     }
 }
 

@@ -1,0 +1,120 @@
+//! Acceptance tests of the objective-model backend abstraction
+//! (ISSUE 4):
+//!
+//! (a) the exact backend converges to the paper's first-order forms as
+//!     failures become rare — optima and knee agree within tolerance as
+//!     μ grows (property test over random scenarios);
+//! (b) the documented knee drift appears in the frequent-failure
+//!     regime: >5% at the paper's reference point, >40% at μ = 60;
+//! (c) backend dispatch is consistent end to end: the online policy
+//!     memo returns the same knees the frontier computes directly.
+
+use ckpt_period::config::presets::fig1_scenario;
+use ckpt_period::model::params::{CheckpointParams, PowerParams, Scenario};
+use ckpt_period::model::{Backend, RecoveryModel};
+use ckpt_period::pareto::online::knee_period;
+use ckpt_period::pareto::{Frontier, KneeMethod};
+use ckpt_period::prop_assert;
+use ckpt_period::util::proptest::{check, Gen};
+use ckpt_period::util::stats::rel_err;
+
+const FO: Backend = Backend::FirstOrder;
+const EXACT: Backend = Backend::Exact(RecoveryModel::Ideal);
+
+#[test]
+fn prop_exact_backend_converges_to_first_order_as_failures_become_rare() {
+    // mu >= 2000 * (C + R + D): the truncation error of the first-order
+    // forms scales like overheads/mu, so the backends' optimal periods
+    // must agree to a few percent. Calibration: across the default
+    // seed's 60 cases the worst drifts are 0.5% (T_Time_opt), 1.2%
+    // (T_Energy_opt) and 1.9% (knee); the worst *corner* of the sampled
+    // space (all overheads maxed, mu at its floor) reaches ~2.4% on the
+    // energy optimum, so the bounds below hold over the whole space
+    // (for replayed CKPT_PROPTEST_SEED overrides too), not just the
+    // default draw.
+    check("exact backend converges to first-order", 60, |g: &mut Gen| {
+        let c = g.f64_in(0.5, 20.0);
+        let r = g.f64_in(0.5, 20.0);
+        let d = g.f64_in(0.0, 5.0);
+        let omega = g.f64_in(0.0, 1.0);
+        let mu = g.f64_log_in(2000.0 * (c + r + d), 1e7);
+        let alpha = g.f64_in(0.1, 4.0);
+        let rho = g.f64_in(1.5, 20.0);
+        let ckpt = CheckpointParams::new(c, r, d, omega).unwrap();
+        let power = PowerParams::from_rho(rho, alpha, 0.0).unwrap();
+        let s = Scenario::new(ckpt, power, mu, 10_000.0).unwrap();
+
+        let tt_f = FO.t_time_opt(&s).unwrap();
+        let tt_e = EXACT.t_time_opt(&s).unwrap();
+        prop_assert!(
+            g,
+            rel_err(tt_e, tt_f) < 0.03,
+            "T_Time_opt: exact {tt_e} vs first-order {tt_f} (mu={mu})"
+        );
+        let te_f = FO.t_energy_opt(&s).unwrap();
+        let te_e = EXACT.t_energy_opt(&s).unwrap();
+        prop_assert!(
+            g,
+            rel_err(te_e, te_f) < 0.04,
+            "T_Energy_opt: exact {te_e} vs first-order {te_f} (mu={mu})"
+        );
+
+        // Knees agree too wherever both frontiers have one.
+        let kf = Frontier::compute(&s, 65, FO)
+            .unwrap()
+            .knee(KneeMethod::MaxDistanceToChord);
+        let ke = Frontier::compute(&s, 65, EXACT)
+            .unwrap()
+            .knee(KneeMethod::MaxDistanceToChord);
+        if let (Some(kf), Some(ke)) = (kf, ke) {
+            prop_assert!(
+                g,
+                rel_err(ke.point.period, kf.point.period) < 0.04,
+                "knee: exact {} vs first-order {} (mu={mu})",
+                ke.point.period,
+                kf.point.period
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn knee_drift_exceeds_five_percent_in_the_frequent_failure_regime() {
+    // The acceptance headline, through the same online-policy path the
+    // adaptive controller uses. Drift grows monotonically as mu shrinks
+    // along the Fig. 1 family.
+    let mut last = 0.0;
+    for (mu, min_drift) in [(300.0, 0.05), (120.0, 0.20), (60.0, 0.40)] {
+        let s = fig1_scenario(mu, 5.5);
+        let fo = knee_period(&s, KneeMethod::MaxDistanceToChord, FO).unwrap();
+        let ex = knee_period(&s, KneeMethod::MaxDistanceToChord, EXACT).unwrap();
+        let drift = ex / fo - 1.0;
+        assert!(drift > min_drift, "mu={mu}: drift {drift} below {min_drift}");
+        assert!(drift > last, "mu={mu}: drift {drift} not above {last}");
+        last = drift;
+    }
+    // And at large mu the same path agrees within 2%.
+    let s = fig1_scenario(1e5, 5.5);
+    let fo = knee_period(&s, KneeMethod::MaxDistanceToChord, FO).unwrap();
+    let ex = knee_period(&s, KneeMethod::MaxDistanceToChord, EXACT).unwrap();
+    assert!(rel_err(ex, fo) < 0.02, "mu=1e5: {ex} vs {fo}");
+}
+
+#[test]
+fn online_memo_agrees_with_direct_frontier_knees_under_the_exact_backend() {
+    // fig1 parameters are quantisation fixed points, so the memoised
+    // online read must equal the direct frontier computation bit for
+    // bit — the determinism contract adaptive grid cells rely on.
+    for mu in [300.0, 120.0, 60.0] {
+        let s = fig1_scenario(mu, 5.5);
+        let direct = Frontier::compute(&s, 129, EXACT)
+            .unwrap()
+            .knee(KneeMethod::MaxDistanceToChord)
+            .unwrap()
+            .point
+            .period;
+        let online = knee_period(&s, KneeMethod::MaxDistanceToChord, EXACT).unwrap();
+        assert_eq!(online.to_bits(), direct.to_bits(), "mu={mu}");
+    }
+}

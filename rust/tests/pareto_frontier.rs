@@ -11,6 +11,7 @@
 use ckpt_period::config::presets::tradeoff_presets;
 use ckpt_period::model::energy::{e_final, t_energy_opt};
 use ckpt_period::model::time::{t_final, t_time_opt};
+use ckpt_period::model::{Backend, RecoveryModel};
 use ckpt_period::pareto::{
     family_frontiers, min_energy_with_time_overhead, min_time_with_energy_overhead, validate,
     Frontier, FrontierSummary, KneeMethod,
@@ -19,11 +20,13 @@ use ckpt_period::sim::{monte_carlo, SimConfig};
 use ckpt_period::util::stats::rel_err;
 
 const POINTS: usize = 33;
+const FO: Backend = Backend::FirstOrder;
+const EXACT: Backend = Backend::Exact(RecoveryModel::Ideal);
 
 #[test]
 fn a_endpoints_coincide_with_the_optimal_periods() {
     for (label, s) in tradeoff_presets() {
-        let f = Frontier::compute(&s, POINTS).expect(label);
+        let f = Frontier::compute(&s, POINTS, FO).expect(label);
         let tt = t_time_opt(&s).unwrap();
         let te = t_energy_opt(&s).unwrap();
         let lo = f.time_opt_point();
@@ -47,7 +50,7 @@ fn a_endpoints_coincide_with_the_optimal_periods() {
 #[test]
 fn b_no_returned_point_is_dominated() {
     for (label, s) in tradeoff_presets() {
-        let f = Frontier::compute(&s, 65).expect(label);
+        let f = Frontier::compute(&s, 65, FO).expect(label);
         let pts = f.points();
         for (i, p) in pts.iter().enumerate() {
             for (j, q) in pts.iter().enumerate() {
@@ -63,12 +66,12 @@ fn b_no_returned_point_is_dominated() {
 #[test]
 fn c_eps_constraint_solutions_lie_on_the_frontier() {
     for (label, s) in tradeoff_presets() {
-        let f = Frontier::compute(&s, 129).expect(label);
+        let f = Frontier::compute(&s, 129, FO).expect(label);
         let (lo_p, hi_p) = (f.t_time_opt.min(f.t_energy_opt), f.t_time_opt.max(f.t_energy_opt));
         for eps in [0.5, 2.0, 5.0, 20.0] {
             let sols = [
-                min_energy_with_time_overhead(&s, eps).unwrap(),
-                min_time_with_energy_overhead(&s, eps).unwrap(),
+                min_energy_with_time_overhead(&s, eps, FO).unwrap(),
+                min_time_with_energy_overhead(&s, eps, FO).unwrap(),
             ];
             for sol in sols {
                 // On the frontier's period segment...
@@ -96,7 +99,7 @@ fn c_eps_constraint_solutions_lie_on_the_frontier() {
 #[test]
 fn d_simulated_frontier_agrees_for_every_tradeoff_preset() {
     for (label, s) in tradeoff_presets() {
-        let f = Frontier::compute(&s, POINTS).expect(label);
+        let f = Frontier::compute(&s, POINTS, FO).expect(label);
         let v = validate(&f, 5, 160, 2013);
         for p in &v.points {
             assert!(
@@ -128,9 +131,9 @@ fn e_frontier_results_identical_across_thread_counts() {
         tradeoff_presets().into_iter().map(|(l, s)| (l.to_string(), s)).collect();
 
     // Pool-evaluated family vs direct inline computation per scenario.
-    let family = family_frontiers(presets.clone(), POINTS, 7);
+    let family = family_frontiers(presets.clone(), POINTS, 7, FO);
     for (f, (label, s)) in family.iter().zip(&presets) {
-        let direct = FrontierSummary::compute(s, POINTS).expect("in domain");
+        let direct = FrontierSummary::compute(s, POINTS, FO).expect("in domain");
         let sum = f.summary.as_ref().expect("in domain");
         assert_eq!(sum, &direct, "{label}");
         for (a, b) in sum.points.iter().zip(&direct.points) {
@@ -139,12 +142,12 @@ fn e_frontier_results_identical_across_thread_counts() {
         }
     }
     // Re-evaluating the family is bit-stable (memoised or not).
-    assert_eq!(family, family_frontiers(presets.clone(), POINTS, 7));
+    assert_eq!(family, family_frontiers(presets.clone(), POINTS, 7, FO));
 
     // Simulated frontier: every pool-scheduled estimate equals serial
     // (threads = 1) Monte Carlo at the derived seed.
     let (label, s) = &presets[0];
-    let f = Frontier::compute(s, POINTS).unwrap();
+    let f = Frontier::compute(s, POINTS, FO).unwrap();
     let v = validate(&f, 3, 64, 99);
     for p in &v.points {
         let mut cfg = SimConfig::paper(*s, p.point.period);
@@ -163,7 +166,7 @@ fn e_frontier_results_identical_across_thread_counts() {
 #[test]
 fn knees_exist_and_sit_strictly_inside_every_preset_frontier() {
     for (label, s) in tradeoff_presets() {
-        let f = Frontier::compute(&s, 65).expect(label);
+        let f = Frontier::compute(&s, 65, FO).expect(label);
         for method in [KneeMethod::MaxDistanceToChord, KneeMethod::MaxCurvature] {
             let k = f.knee(method).unwrap_or_else(|| panic!("{label}: no {method:?} knee"));
             assert!(k.index > 0 && k.index < f.len() - 1, "{label} {method:?}");
@@ -175,5 +178,108 @@ fn knees_exist_and_sit_strictly_inside_every_preset_frontier() {
         // Hypervolume sane for every preset.
         let hv = f.hypervolume();
         assert!(hv > 0.0 && hv < 1.0, "{label}: hv={hv}");
+    }
+}
+
+// ---- exact-backend acceptance (ISSUE 4) ----
+
+#[test]
+fn exact_endpoints_are_the_exact_optima_on_every_preset() {
+    for (label, s) in tradeoff_presets() {
+        let f = Frontier::compute(&s, POINTS, EXACT).expect(label);
+        let tt = EXACT.t_time_opt(&s).unwrap();
+        let te = EXACT.t_energy_opt(&s).unwrap();
+        assert!(rel_err(f.time_opt_point().period, tt) < 1e-6, "{label}");
+        assert!(rel_err(f.energy_opt_point().period, te) < 1e-6, "{label}");
+        // The exact trade-off is real on every preset (rho > 1) and its
+        // window sits strictly above the first-order one.
+        assert!(te > tt, "{label}");
+        assert!(tt > t_time_opt(&s).unwrap(), "{label}");
+        assert!(te > t_energy_opt(&s).unwrap(), "{label}");
+    }
+}
+
+#[test]
+fn exact_frontier_has_no_dominated_points_and_interior_knees() {
+    for (label, s) in tradeoff_presets() {
+        let f = Frontier::compute(&s, 65, EXACT).expect(label);
+        let pts = f.points();
+        assert!(pts.len() >= 60, "{label}: kept {} of 65", pts.len());
+        for (i, p) in pts.iter().enumerate() {
+            for (j, q) in pts.iter().enumerate() {
+                assert!(i == j || !p.dominates(q), "{label}: {p:?} dominates {q:?}");
+            }
+        }
+        let k = f.knee(KneeMethod::MaxDistanceToChord).expect(label);
+        assert!(k.index > 0 && k.index < f.len() - 1, "{label}");
+        let hv = f.hypervolume();
+        assert!(hv > 0.5 && hv < 1.0, "{label}: hv={hv}");
+    }
+}
+
+#[test]
+fn exact_eps_solutions_obey_their_bounds_under_the_exact_objectives() {
+    for (label, s) in tradeoff_presets() {
+        for eps in [0.5, 2.0, 5.0] {
+            let sol = min_energy_with_time_overhead(&s, eps, EXACT).expect(label);
+            assert!(
+                sol.time <= sol.bound * (1.0 + 1e-9),
+                "{label} eps={eps}%: {} > bound {}",
+                sol.time,
+                sol.bound
+            );
+            assert!(rel_err(sol.time, EXACT.t_final(&s, sol.period)) < 1e-12, "{label}");
+            let sol = min_time_with_energy_overhead(&s, eps, EXACT).expect(label);
+            assert!(
+                sol.energy <= sol.bound * (1.0 + 1e-9),
+                "{label} eps={eps}%: {} > bound {}",
+                sol.energy,
+                sol.bound
+            );
+        }
+    }
+}
+
+#[test]
+fn exact_frontier_identical_across_thread_counts_and_to_direct_computation() {
+    // `pareto --model exact` acceptance: pool-evaluated exact frontier
+    // cells equal the direct inline computation bit-for-bit (the memo
+    // caches pure values), and re-evaluation is bit-stable.
+    let presets: Vec<(String, _)> =
+        tradeoff_presets().into_iter().map(|(l, s)| (l.to_string(), s)).collect();
+    let family = family_frontiers(presets.clone(), POINTS, 7, EXACT);
+    for (f, (label, s)) in family.iter().zip(&presets) {
+        let direct = FrontierSummary::compute(s, POINTS, EXACT).expect("in domain");
+        let sum = f.summary.as_ref().expect("in domain");
+        assert_eq!(sum, &direct, "{label}");
+        for (a, b) in sum.points.iter().zip(&direct.points) {
+            assert_eq!(a.time.to_bits(), b.time.to_bits(), "{label}");
+            assert_eq!(a.energy.to_bits(), b.energy.to_bits(), "{label}");
+        }
+    }
+    assert_eq!(family, family_frontiers(presets, POINTS, 7, EXACT));
+}
+
+#[test]
+fn exact_frontier_simulates_within_the_flat_band_at_small_mu() {
+    // The small-mu acceptance: at mu=120 the exact frontier must track
+    // Monte Carlo inside the flat 2% allowance (no truncation widening),
+    // including the long-period AlgoE end where the first-order forms
+    // are 5-10% off.
+    let s = ckpt_period::config::presets::fig1_scenario(120.0, 5.5);
+    let f = Frontier::compute(&s, POINTS, EXACT).unwrap();
+    let v = validate(&f, 4, 200, 2013);
+    for p in &v.points {
+        assert!(
+            p.time_agrees && p.energy_agrees,
+            "T={:.2}: model ({:.1}, {:.1}) vs sim ({:.1}±{:.1}, {:.1}±{:.1})",
+            p.point.period,
+            p.point.time,
+            p.point.energy,
+            p.sim.makespan_mean,
+            p.sim.makespan_ci95_half,
+            p.sim.energy_mean,
+            p.sim.energy_ci95_half
+        );
     }
 }
