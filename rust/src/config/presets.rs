@@ -4,6 +4,7 @@
 //! fast/slow checkpoint-cost family (multi-level checkpointing in the
 //! spirit of VELOC).
 
+use crate::drift::{DriftProcess, DriftTargets};
 use crate::model::params::{CheckpointParams, Platform, PowerParams, Scenario};
 use crate::sim::FailureProcess;
 
@@ -175,6 +176,64 @@ pub fn power_ratio_sweep(
     out
 }
 
+/// The named drift families ([`crate::drift`]) the non-stationary
+/// experiments ship, timed against [`DEFAULT_T_BASE_MIN`] (compress
+/// them with [`DriftProcess::time_scaled`] for the drift-speed axis):
+///
+/// * `io-ramp` — parallel-file-system contention builds over the first
+///   half of the run: `C` and `R` stretch to 2× and the I/O draw
+///   inflates with them (the drifting twin of
+///   [`io_contention_scenario`]).
+/// * `mu-decay` — wear-out: the platform MTBF decays linearly to 40%
+///   over the whole run (the μ-side of the VELOC motivation; tracked
+///   by the exposure estimator, not the C/R EWMA).
+/// * `step-reconfig` — malleable reconfiguration at one third of the
+///   run: the checkpoint halves in cost (smaller partition, smaller
+///   state), recovery with it.
+/// * `contention-burst` — periodic co-scheduled I/O bursts: 2× `C`/`R`
+///   and I/O draw during 40% of every 2 500-minute window.
+///
+/// Every family stays inside the model's domain on every
+/// [`tradeoff_presets`] scenario (asserted by the preset tests).
+pub fn drift_presets() -> Vec<(&'static str, DriftProcess)> {
+    let contention = DriftTargets { c: 2.0, r: 2.0, mu: 1.0, p_io: 2.0 };
+    vec![
+        (
+            "io-ramp",
+            DriftProcess::Ramp {
+                from_t: 0.0,
+                to_t: DEFAULT_T_BASE_MIN / 2.0,
+                to: contention,
+            },
+        ),
+        (
+            "mu-decay",
+            DriftProcess::Ramp {
+                from_t: 0.0,
+                to_t: DEFAULT_T_BASE_MIN,
+                to: DriftTargets { c: 1.0, r: 1.0, mu: 0.4, p_io: 1.0 },
+            },
+        ),
+        (
+            "step-reconfig",
+            DriftProcess::Step {
+                at: DEFAULT_T_BASE_MIN / 3.0,
+                to: DriftTargets { c: 0.5, r: 0.5, mu: 1.0, p_io: 1.0 },
+            },
+        ),
+        (
+            "contention-burst",
+            DriftProcess::Contention { period: 2500.0, duty: 0.4, to: contention },
+        ),
+    ]
+}
+
+/// Look up a [`drift_presets`] family by name (the CLI accepts these on
+/// top of the raw [`DriftProcess::parse`] grammar).
+pub fn drift_preset(name: &str) -> Option<DriftProcess> {
+    drift_presets().into_iter().find(|(n, _)| *n == name).map(|(_, d)| d)
+}
+
 /// The named trade-off scenario families the Pareto subsystem ships:
 /// the paper's two arrow points, one heavy corner per power-ratio axis,
 /// and an Exascale I/O-heavy platform. Every preset is inside the
@@ -326,6 +385,29 @@ mod tests {
         assert!(fam.iter().all(|(label, _)| label.starts_with("alpha")));
         // A mu below the overheads empties the family instead of panicking.
         assert!(power_ratio_sweep(10.0, &[1.0], &[10.0], &[0.0]).is_empty());
+    }
+
+    #[test]
+    fn drift_presets_are_valid_on_every_tradeoff_preset() {
+        use crate::drift::EnvTrajectory;
+        let families = drift_presets();
+        assert!(families.len() >= 4);
+        for (name, d) in &families {
+            assert!(d.validate().is_ok(), "{name}");
+            assert!(!d.is_stationary(), "{name} drifts nothing");
+            assert_eq!(drift_preset(name), Some(*d));
+            // Valid (worst corner in domain) on every trade-off preset,
+            // at unit speed and the figure's fast speed.
+            for (label, s) in tradeoff_presets() {
+                for speed in [1.0, 4.0] {
+                    assert!(
+                        EnvTrajectory::new(s, d.time_scaled(speed)).is_ok(),
+                        "{name} x{speed} leaves the domain on {label}"
+                    );
+                }
+            }
+        }
+        assert_eq!(drift_preset("bogus"), None);
     }
 
     #[test]

@@ -21,6 +21,13 @@
 use super::policy::PeriodPolicy;
 use crate::model::params::{CheckpointParams, PowerParams, Scenario};
 
+/// The controller's default C/R EWMA smoothing factor — the single
+/// source every constructor (and the CLI's default-detection) reads.
+pub const DEFAULT_EWMA_ALPHA: f64 = 0.3;
+
+/// The controller's default period-space hysteresis band.
+pub const DEFAULT_HYSTERESIS: f64 = 0.05;
+
 /// EWMA with configurable smoothing.
 #[derive(Debug, Clone, Copy)]
 pub struct Ewma {
@@ -91,14 +98,30 @@ impl AdaptiveController {
             downtime,
             t_base_hint,
             prior_mu,
-            c_est: Ewma::new(0.3),
-            r_est: Ewma::new(0.3),
+            c_est: Ewma::new(DEFAULT_EWMA_ALPHA),
+            r_est: Ewma::new(DEFAULT_EWMA_ALPHA),
             uptime: 0.0,
             failures: 0,
             cached_period: None,
-            hysteresis: 0.05,
+            hysteresis: DEFAULT_HYSTERESIS,
             cached_inputs: (0.0, 0.0, 0.0),
         }
+    }
+
+    /// Override the C/R EWMA smoothing factor (default `0.3`), the
+    /// knob that trades reactivity against noise-chasing when the
+    /// environment drifts (see `figures::drift`). Must be called
+    /// before any observation — swapping the smoothing mid-stream
+    /// would silently discard the accumulated estimate. `alpha` must
+    /// satisfy [`Ewma::new`]'s α ∈ (0, 1] contract.
+    pub fn with_ewma_alpha(mut self, alpha: f64) -> Self {
+        assert!(
+            self.c_est.get().is_none() && self.r_est.get().is_none(),
+            "set the EWMA alpha before the first observation"
+        );
+        self.c_est = Ewma::new(alpha);
+        self.r_est = Ewma::new(alpha);
+        self
     }
 
     /// Override the period-space hysteresis band (default 5%).
@@ -312,6 +335,40 @@ mod tests {
     #[should_panic(expected = "EWMA alpha")]
     fn ewma_rejects_alpha_above_one() {
         let _ = Ewma::new(1.5);
+    }
+
+    #[test]
+    fn ewma_alpha_is_configurable_before_observations() {
+        // alpha = 1: the estimate snaps to the latest sample, so a C
+        // jump moves the period immediately (no smoothing lag).
+        let mut snappy = controller().with_ewma_alpha(1.0);
+        snappy.observe_checkpoint(0.1);
+        let p1 = snappy.period().unwrap();
+        snappy.observe_checkpoint(1.6);
+        let p2 = snappy.period().unwrap();
+        assert!(p2 > 2.5 * p1, "alpha=1 must track instantly: {p1} -> {p2}");
+        // The default (0.3) needs several samples for the same move.
+        let mut smooth = controller();
+        smooth.observe_checkpoint(0.1);
+        let q1 = smooth.period().unwrap();
+        smooth.observe_checkpoint(1.6);
+        let q2 = smooth.period().unwrap();
+        assert!(q2 < p2, "default alpha moved as fast as alpha=1: {q2} vs {p2}");
+        assert!(q2 >= q1);
+    }
+
+    #[test]
+    #[should_panic(expected = "EWMA alpha")]
+    fn with_ewma_alpha_rejects_out_of_contract_values() {
+        let _ = controller().with_ewma_alpha(0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "before the first observation")]
+    fn with_ewma_alpha_rejects_late_reconfiguration() {
+        let mut c = controller();
+        c.observe_checkpoint(0.1);
+        let _ = c.with_ewma_alpha(0.5);
     }
 
     #[test]

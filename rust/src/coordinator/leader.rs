@@ -71,6 +71,18 @@ pub struct CoordinatorConfig {
     /// prior) and recompute the policy period after every event
     /// ([`super::adaptive::AdaptiveController`]).
     pub adaptive: bool,
+    /// C/R EWMA smoothing factor for the adaptive controller
+    /// (α ∈ (0, 1]; `0.3` = the historical default).
+    pub ewma_alpha: f64,
+    /// Period-space hysteresis band for the adaptive controller.
+    pub hysteresis: f64,
+    /// Environment drift schedule, in wall-clock **seconds** (the
+    /// coordinator's units). Only the `μ` component applies here: the
+    /// failure injector's rate follows the trajectory via the thinned
+    /// sampler, while `C`/`R` are *measured* wall-clock durations that
+    /// cannot be scripted. C/R/IO components are ignored with the
+    /// schedule's μ left intact.
+    pub drift: crate::drift::DriftProcess,
 }
 
 impl CoordinatorConfig {
@@ -92,6 +104,9 @@ impl CoordinatorConfig {
             verify_on_restore: true,
             inject_failures: true,
             adaptive: false,
+            ewma_alpha: super::adaptive::DEFAULT_EWMA_ALPHA,
+            hysteresis: super::adaptive::DEFAULT_HYSTERESIS,
+            drift: crate::drift::DriftProcess::Stationary,
         }
     }
 }
@@ -222,7 +237,9 @@ impl Coordinator {
                 cfg.downtime_s,
                 cfg.mu_s,
                 t_base_s,
-            );
+            )
+            .with_ewma_alpha(cfg.ewma_alpha)
+            .with_hysteresis(cfg.hysteresis);
             ctl.observe_checkpoint(c_s);
             ctl.observe_restore(r_s);
             Some(ctl)
@@ -236,11 +253,18 @@ impl Coordinator {
         // ---- failure schedule --------------------------------------------
         let horizon = (predicted_makespan.max(t_base_s) * 4.0).max(60.0);
         let mut schedule = if cfg.inject_failures {
-            FailureSchedule::generate(
-                &FailureProcess::Exponential { mtbf: cfg.mu_s },
-                horizon,
-                cfg.failure_seed,
-            )
+            // Only the schedule's μ component is injectable on a real
+            // run (see `CoordinatorConfig::drift`); a μ-stationary
+            // schedule keeps the historical homogeneous process
+            // bit-for-bit.
+            let drift = cfg.drift.mu_only();
+            let process = if drift.is_stationary() {
+                FailureProcess::Exponential { mtbf: cfg.mu_s }
+            } else {
+                let trajectory = crate::drift::EnvTrajectory::new(scenario, drift)?;
+                FailureProcess::DriftingExponential { trajectory }
+            };
+            FailureSchedule::generate(&process, horizon, cfg.failure_seed)
         } else {
             FailureSchedule::none()
         };

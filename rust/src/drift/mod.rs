@@ -1,0 +1,824 @@
+//! Non-stationary environments: time-varying drift over [`Scenario`]
+//! parameters.
+//!
+//! The paper fixes `(C, R, μ, P_IO)` for the whole execution. The
+//! Exascale reality its adaptive descendants target — and the reason
+//! runtimes like VELOC re-estimate online — is that these parameters
+//! *drift* over a run: parallel-file-system contention ramps checkpoint
+//! cost up, component wear-out decays the platform MTBF, malleable
+//! reconfiguration steps the checkpoint size. This module is the
+//! crate's model of that reality:
+//!
+//! * [`DriftProcess`] — a deterministic schedule of multiplicative
+//!   drift over a subset of the scenario's fields ([`DriftTargets`]):
+//!   step change, linear ramp, periodic contention (square wave), or a
+//!   two-segment piecewise schedule. [`DriftProcess::Stationary`] is
+//!   the identity — the paper's world.
+//! * [`EnvTrajectory`] — a scenario bound to a drift process: the
+//!   deterministic *scenario-at-time* view every consumer reads.
+//!   `scenario_at(t)` returns the base scenario **bit-for-bit** when
+//!   the process is (effectively) stationary, which is what the
+//!   zero-regression guarantee of the whole drift stack rests on; the
+//!   trajectory views are quantisable downstream exactly like static
+//!   scenarios (the online-policy memo quantises `(C, R, μ)` to three
+//!   significant digits per [`crate::pareto::online`]).
+//!
+//! Consumers:
+//!
+//! * [`crate::sim::failure`] samples non-homogeneous exponential
+//!   failures by thinning against the trajectory's rate envelope
+//!   ([`EnvTrajectory::min_mu`]).
+//! * [`crate::sim::adaptive`] drives drift sample paths and records
+//!   how well the online controller tracks the moving policy period
+//!   (tracking lag, oracle regret).
+//! * [`crate::sweep`] runs drift grids as
+//!   [`CellJob::DriftRun`](crate::sweep::CellJob::DriftRun) cells —
+//!   parallel, memo-cached, drift encoded in the cache key.
+//! * [`crate::figures::drift`] sweeps EWMA α × hysteresis band × drift
+//!   speed per drift family into `drift.csv`.
+//! * The CLI accepts the [`DriftProcess::parse`] grammar via
+//!   `--drift` on `simulate --adaptive` and `train`.
+//!
+//! Drift is *deterministic* (a schedule, not a stochastic process):
+//! sample-path randomness stays where it always was — in the failure
+//! draws — so drift runs inherit the crate's seeding contract
+//! unchanged and stay byte-identical across thread counts.
+
+use crate::model::params::{ModelError, Scenario};
+
+/// Multiplicative drift targets: one multiplier per driftable scenario
+/// field. `1.0` leaves a field untouched, so "any subset of fields" is
+/// expressed by setting the rest to the identity. Only the fields an
+/// environment can physically drift are exposed: the checkpoint write
+/// cost `C`, the recovery read cost `R`, the platform MTBF `μ`, and the
+/// I/O power draw `P_IO` (a saturated file system is busy longer *and*
+/// draws more). `D`, `ω`, the CPU powers and `T_base` are configuration,
+/// not environment.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftTargets {
+    /// Multiplier on the checkpoint duration `C`.
+    pub c: f64,
+    /// Multiplier on the recovery duration `R`.
+    pub r: f64,
+    /// Multiplier on the platform MTBF `μ` (`< 1` = wear-out).
+    pub mu: f64,
+    /// Multiplier on the I/O power draw `P_IO`.
+    pub p_io: f64,
+}
+
+impl DriftTargets {
+    /// The identity: no field drifts.
+    pub const ONE: DriftTargets = DriftTargets { c: 1.0, r: 1.0, mu: 1.0, p_io: 1.0 };
+
+    pub fn is_identity(&self) -> bool {
+        *self == Self::ONE
+    }
+
+    /// Multipliers must be finite and strictly positive (a zero `C` or
+    /// `μ` multiplier is not a drift, it is a different model).
+    pub fn validate(&self) -> Result<(), ModelError> {
+        for (name, v) in [("c", self.c), ("r", self.r), ("mu", self.mu), ("io", self.p_io)] {
+            if !(v.is_finite() && v > 0.0) {
+                return Err(ModelError::Invalid(format!(
+                    "drift multiplier `{name}` must be finite and > 0, got {v}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Componentwise linear interpolation from the identity toward
+    /// `self`: `w = 0` is the identity, `w = 1` is `self`.
+    fn lerp_from_one(&self, w: f64) -> DriftTargets {
+        let lerp = |to: f64| 1.0 + (to - 1.0) * w;
+        DriftTargets { c: lerp(self.c), r: lerp(self.r), mu: lerp(self.mu), p_io: lerp(self.p_io) }
+    }
+
+    /// Componentwise envelope of two target sets in the direction that
+    /// *shrinks* the model's domain: larger `C`/`R`, smaller `μ`. Used
+    /// to validate the worst corner a schedule can reach.
+    fn domain_worst(a: DriftTargets, b: DriftTargets) -> DriftTargets {
+        DriftTargets {
+            c: a.c.max(b.c),
+            r: a.r.max(b.r),
+            mu: a.mu.min(b.mu),
+            p_io: a.p_io.max(b.p_io),
+        }
+    }
+
+    fn key_bits(&self) -> [u64; 4] {
+        [self.c.to_bits(), self.r.to_bits(), self.mu.to_bits(), self.p_io.to_bits()]
+    }
+
+    /// Parse a `c=2,r=2,mu=0.5,io=2` field list (each field at most
+    /// once, at least one field, every multiplier finite and > 0).
+    fn parse(s: &str) -> Option<DriftTargets> {
+        let mut t = DriftTargets::ONE;
+        let mut seen = [false; 4];
+        for item in s.split(',') {
+            let (field, value) = item.split_once('=')?;
+            let v = value.parse::<f64>().ok()?;
+            let slot = match field {
+                "c" => {
+                    t.c = v;
+                    0
+                }
+                "r" => {
+                    t.r = v;
+                    1
+                }
+                "mu" => {
+                    t.mu = v;
+                    2
+                }
+                "io" => {
+                    t.p_io = v;
+                    3
+                }
+                _ => return None,
+            };
+            if seen[slot] {
+                return None;
+            }
+            seen[slot] = true;
+        }
+        if !seen.iter().any(|&s| s) {
+            return None;
+        }
+        t.validate().ok()?;
+        Some(t)
+    }
+
+    fn render(&self) -> String {
+        let mut parts = Vec::new();
+        if self.c != 1.0 {
+            parts.push(format!("c={}", self.c));
+        }
+        if self.r != 1.0 {
+            parts.push(format!("r={}", self.r));
+        }
+        if self.mu != 1.0 {
+            parts.push(format!("mu={}", self.mu));
+        }
+        if self.p_io != 1.0 {
+            parts.push(format!("io={}", self.p_io));
+        }
+        if parts.is_empty() {
+            "c=1".into()
+        } else {
+            parts.join(",")
+        }
+    }
+}
+
+/// A deterministic drift schedule: the multiplier set in force at each
+/// absolute run time `t ≥ 0` (minutes, the scenario's units).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DriftProcess {
+    /// No drift — the paper's stationary world. The identity of the
+    /// whole layer: every consumer must behave **bit-identically** to
+    /// the pre-drift code under `Stationary`.
+    Stationary,
+    /// Multipliers jump from the identity to `to` at time `at`
+    /// (inclusive) and stay there — malleable reconfiguration.
+    Step { at: f64, to: DriftTargets },
+    /// Multipliers ramp linearly from the identity at `from_t` to `to`
+    /// at `to_t` and hold afterwards — I/O contention building up,
+    /// gradual wear-out.
+    Ramp { from_t: f64, to_t: f64, to: DriftTargets },
+    /// Square-wave contention: multipliers are `to` during the first
+    /// `duty` fraction of every window of length `period`, identity for
+    /// the rest — periodic bursts from co-scheduled jobs.
+    Contention { period: f64, duty: f64, to: DriftTargets },
+    /// Two-segment piecewise-constant schedule: identity before `t1`,
+    /// `first` on `[t1, t2)`, `second` from `t2` on.
+    Piecewise { t1: f64, first: DriftTargets, t2: f64, second: DriftTargets },
+}
+
+impl DriftProcess {
+    /// The accepted `--drift` spellings, for CLI help and error
+    /// messages (named presets from
+    /// [`crate::config::presets::drift_presets`] are accepted on top).
+    pub const PARSE_HELP: &'static str = "stationary|step:<at>:<f=m,..>|ramp:<t0>:<t1>:<f=m,..>|\
+         contention:<period>:<duty>:<f=m,..>|piecewise:<t1>:<f=m,..>:<t2>:<f=m,..> \
+         with fields c|r|mu|io and finite multipliers > 0";
+
+    /// Stable display name of the schedule shape.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DriftProcess::Stationary => "stationary",
+            DriftProcess::Step { .. } => "step",
+            DriftProcess::Ramp { .. } => "ramp",
+            DriftProcess::Contention { .. } => "contention",
+            DriftProcess::Piecewise { .. } => "piecewise",
+        }
+    }
+
+    /// Validate the schedule's shape parameters and targets.
+    pub fn validate(&self) -> Result<(), ModelError> {
+        let time_ok = |name: &str, t: f64| {
+            if t.is_finite() && t >= 0.0 {
+                Ok(())
+            } else {
+                Err(ModelError::Invalid(format!(
+                    "drift time `{name}` must be finite and >= 0, got {t}"
+                )))
+            }
+        };
+        match self {
+            DriftProcess::Stationary => Ok(()),
+            DriftProcess::Step { at, to } => {
+                time_ok("at", *at)?;
+                to.validate()
+            }
+            DriftProcess::Ramp { from_t, to_t, to } => {
+                time_ok("from_t", *from_t)?;
+                time_ok("to_t", *to_t)?;
+                if to_t <= from_t {
+                    return Err(ModelError::Invalid(format!(
+                        "ramp needs to_t > from_t, got [{from_t}, {to_t}]"
+                    )));
+                }
+                to.validate()
+            }
+            DriftProcess::Contention { period, duty, to } => {
+                if !(period.is_finite() && *period > 0.0) {
+                    return Err(ModelError::Invalid(format!(
+                        "contention period must be finite and > 0, got {period}"
+                    )));
+                }
+                if !(duty.is_finite() && (0.0..=1.0).contains(duty)) {
+                    return Err(ModelError::Invalid(format!(
+                        "contention duty must be in [0, 1], got {duty}"
+                    )));
+                }
+                to.validate()
+            }
+            DriftProcess::Piecewise { t1, first, t2, second } => {
+                time_ok("t1", *t1)?;
+                time_ok("t2", *t2)?;
+                if t2 < t1 {
+                    return Err(ModelError::Invalid(format!(
+                        "piecewise needs t2 >= t1, got t1={t1} t2={t2}"
+                    )));
+                }
+                first.validate()?;
+                second.validate()
+            }
+        }
+    }
+
+    /// The multiplier set in force at time `t`.
+    pub fn targets_at(&self, t: f64) -> DriftTargets {
+        match self {
+            DriftProcess::Stationary => DriftTargets::ONE,
+            DriftProcess::Step { at, to } => {
+                if t >= *at {
+                    *to
+                } else {
+                    DriftTargets::ONE
+                }
+            }
+            DriftProcess::Ramp { from_t, to_t, to } => {
+                if t <= *from_t {
+                    DriftTargets::ONE
+                } else if t >= *to_t {
+                    *to
+                } else {
+                    to.lerp_from_one((t - from_t) / (to_t - from_t))
+                }
+            }
+            DriftProcess::Contention { period, duty, to } => {
+                if t.rem_euclid(*period) < duty * period {
+                    *to
+                } else {
+                    DriftTargets::ONE
+                }
+            }
+            DriftProcess::Piecewise { t1, first, t2, second } => {
+                if t >= *t2 {
+                    *second
+                } else if t >= *t1 {
+                    *first
+                } else {
+                    DriftTargets::ONE
+                }
+            }
+        }
+    }
+
+    /// Whether the schedule is the identity for all `t` — either
+    /// `Stationary` itself, or a shape whose reachable targets are all
+    /// the identity. Consumers use this to route onto the exact
+    /// pre-drift code paths (bit-identical output).
+    pub fn is_stationary(&self) -> bool {
+        match self {
+            DriftProcess::Stationary => true,
+            DriftProcess::Step { to, .. } | DriftProcess::Ramp { to, .. } => to.is_identity(),
+            DriftProcess::Contention { duty, to, .. } => to.is_identity() || *duty == 0.0,
+            DriftProcess::Piecewise { first, second, .. } => {
+                first.is_identity() && second.is_identity()
+            }
+        }
+    }
+
+    /// The componentwise worst multipliers the schedule can reach, in
+    /// the direction that shrinks the model's domain (max `C`/`R`
+    /// stretch, min `μ`). Every reachable target set lies componentwise
+    /// between the identity and this envelope, so validating the
+    /// scenario at this corner validates the whole trajectory.
+    pub fn domain_worst_targets(&self) -> DriftTargets {
+        match self {
+            DriftProcess::Stationary => DriftTargets::ONE,
+            DriftProcess::Step { to, .. }
+            | DriftProcess::Ramp { to, .. }
+            | DriftProcess::Contention { to, .. } => {
+                DriftTargets::domain_worst(DriftTargets::ONE, *to)
+            }
+            DriftProcess::Piecewise { first, second, .. } => DriftTargets::domain_worst(
+                DriftTargets::ONE,
+                DriftTargets::domain_worst(*first, *second),
+            ),
+        }
+    }
+
+    /// The same schedule restricted to its `μ` component (identity on
+    /// every other field). The wall-clock coordinator uses this: it
+    /// can drive the failure injector's rate, but `C`/`R` are real
+    /// measured durations it cannot script.
+    pub fn mu_only(&self) -> DriftProcess {
+        let strip = |t: DriftTargets| DriftTargets { mu: t.mu, ..DriftTargets::ONE };
+        match *self {
+            DriftProcess::Stationary => DriftProcess::Stationary,
+            DriftProcess::Step { at, to } => DriftProcess::Step { at, to: strip(to) },
+            DriftProcess::Ramp { from_t, to_t, to } => {
+                DriftProcess::Ramp { from_t, to_t, to: strip(to) }
+            }
+            DriftProcess::Contention { period, duty, to } => {
+                DriftProcess::Contention { period, duty, to: strip(to) }
+            }
+            DriftProcess::Piecewise { t1, first, t2, second } => DriftProcess::Piecewise {
+                t1,
+                first: strip(first),
+                t2,
+                second: strip(second),
+            },
+        }
+    }
+
+    /// The same schedule with its time axis compressed by `speed` (> 1
+    /// = the environment drifts faster). The figure's "drift speed"
+    /// axis.
+    pub fn time_scaled(&self, speed: f64) -> DriftProcess {
+        assert!(speed.is_finite() && speed > 0.0, "speed must be finite and > 0, got {speed}");
+        match *self {
+            DriftProcess::Stationary => DriftProcess::Stationary,
+            DriftProcess::Step { at, to } => DriftProcess::Step { at: at / speed, to },
+            DriftProcess::Ramp { from_t, to_t, to } => {
+                DriftProcess::Ramp { from_t: from_t / speed, to_t: to_t / speed, to }
+            }
+            DriftProcess::Contention { period, duty, to } => {
+                DriftProcess::Contention { period: period / speed, duty, to }
+            }
+            DriftProcess::Piecewise { t1, first, t2, second } => {
+                DriftProcess::Piecewise { t1: t1 / speed, first, t2: t2 / speed, second }
+            }
+        }
+    }
+
+    /// Stable exact-bits encoding for cache keys and seed derivation
+    /// (tag word + shape parameters + target bits; distinct per
+    /// variant, never reused).
+    pub fn key_words(&self) -> Vec<u64> {
+        match self {
+            DriftProcess::Stationary => vec![0],
+            DriftProcess::Step { at, to } => {
+                let mut k = vec![1, at.to_bits()];
+                k.extend_from_slice(&to.key_bits());
+                k
+            }
+            DriftProcess::Ramp { from_t, to_t, to } => {
+                let mut k = vec![2, from_t.to_bits(), to_t.to_bits()];
+                k.extend_from_slice(&to.key_bits());
+                k
+            }
+            DriftProcess::Contention { period, duty, to } => {
+                let mut k = vec![3, period.to_bits(), duty.to_bits()];
+                k.extend_from_slice(&to.key_bits());
+                k
+            }
+            DriftProcess::Piecewise { t1, first, t2, second } => {
+                let mut k = vec![4, t1.to_bits()];
+                k.extend_from_slice(&first.key_bits());
+                k.push(t2.to_bits());
+                k.extend_from_slice(&second.key_bits());
+                k
+            }
+        }
+    }
+
+    /// Parse a CLI-style drift spec (see [`Self::PARSE_HELP`]). Shape
+    /// parameters and multipliers are validated; `None` on any
+    /// syntactic or semantic error (the CLI maps it to
+    /// `CliError::InvalidValue` with the full grammar, mirroring
+    /// `--policy`/`--model`).
+    pub fn parse(s: &str) -> Option<DriftProcess> {
+        let parsed = if s == "stationary" {
+            DriftProcess::Stationary
+        } else if let Some(rest) = s.strip_prefix("step:") {
+            let (at, fields) = rest.split_once(':')?;
+            DriftProcess::Step { at: at.parse().ok()?, to: DriftTargets::parse(fields)? }
+        } else if let Some(rest) = s.strip_prefix("ramp:") {
+            let (t0, rest) = rest.split_once(':')?;
+            let (t1, fields) = rest.split_once(':')?;
+            DriftProcess::Ramp {
+                from_t: t0.parse().ok()?,
+                to_t: t1.parse().ok()?,
+                to: DriftTargets::parse(fields)?,
+            }
+        } else if let Some(rest) = s.strip_prefix("contention:") {
+            let (period, rest) = rest.split_once(':')?;
+            let (duty, fields) = rest.split_once(':')?;
+            DriftProcess::Contention {
+                period: period.parse().ok()?,
+                duty: duty.parse().ok()?,
+                to: DriftTargets::parse(fields)?,
+            }
+        } else if let Some(rest) = s.strip_prefix("piecewise:") {
+            let (t1, rest) = rest.split_once(':')?;
+            let (f1, rest) = rest.split_once(':')?;
+            let (t2, f2) = rest.split_once(':')?;
+            DriftProcess::Piecewise {
+                t1: t1.parse().ok()?,
+                first: DriftTargets::parse(f1)?,
+                t2: t2.parse().ok()?,
+                second: DriftTargets::parse(f2)?,
+            }
+        } else {
+            return None;
+        };
+        parsed.validate().ok()?;
+        Some(parsed)
+    }
+
+    /// A parseable rendering (round-trips through [`Self::parse`] up to
+    /// float formatting); used by figure/CSV labels.
+    pub fn render(&self) -> String {
+        match self {
+            DriftProcess::Stationary => "stationary".into(),
+            DriftProcess::Step { at, to } => format!("step:{at}:{}", to.render()),
+            DriftProcess::Ramp { from_t, to_t, to } => {
+                format!("ramp:{from_t}:{to_t}:{}", to.render())
+            }
+            DriftProcess::Contention { period, duty, to } => {
+                format!("contention:{period}:{duty}:{}", to.render())
+            }
+            DriftProcess::Piecewise { t1, first, t2, second } => {
+                format!("piecewise:{t1}:{}:{t2}:{}", first.render(), second.render())
+            }
+        }
+    }
+}
+
+/// A scenario bound to a drift schedule: the deterministic
+/// scenario-at-time view of a non-stationary environment.
+///
+/// Construction validates the schedule *and* that the domain-worst
+/// corner of the trajectory still admits a feasible period, so
+/// [`Self::scenario_at`] can hand out plain `Scenario` values on the
+/// hot path without re-validating (every reachable parameter set lies
+/// componentwise between the base and the validated worst corner, and
+/// the model's domain gate `b > 0` is monotone in each drifted field).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnvTrajectory {
+    base: Scenario,
+    drift: DriftProcess,
+    /// Cached [`DriftProcess::is_stationary`] — read per phase in the
+    /// simulator's hot loop.
+    stationary: bool,
+}
+
+impl EnvTrajectory {
+    pub fn new(base: Scenario, drift: DriftProcess) -> Result<Self, ModelError> {
+        drift.validate()?;
+        base.validate()?;
+        let worst = apply_targets(&base, drift.domain_worst_targets());
+        worst.validate()?;
+        // The whole trajectory must keep a feasible period, not just a
+        // positive-b domain: C(t) < 2 μ(t) b(t) at the worst corner.
+        worst.clamp_period(worst.min_period())?;
+        Ok(EnvTrajectory { base, drift, stationary: drift.is_stationary() })
+    }
+
+    pub fn base(&self) -> &Scenario {
+        &self.base
+    }
+
+    pub fn drift(&self) -> &DriftProcess {
+        &self.drift
+    }
+
+    /// Whether every scenario-at-time view equals the base scenario.
+    pub fn is_stationary(&self) -> bool {
+        self.stationary
+    }
+
+    /// The scenario in force at time `t`. Returns the base scenario
+    /// **bit-for-bit** when the trajectory is stationary or the
+    /// schedule is at the identity at `t` — the zero-regression
+    /// contract every consumer's stationary path relies on.
+    pub fn scenario_at(&self, t: f64) -> Scenario {
+        if self.stationary {
+            return self.base;
+        }
+        let m = self.drift.targets_at(t);
+        if m.is_identity() {
+            return self.base;
+        }
+        apply_targets(&self.base, m)
+    }
+
+    /// The platform MTBF in force at time `t`.
+    pub fn mu_at(&self, t: f64) -> f64 {
+        if self.stationary {
+            return self.base.mu;
+        }
+        self.base.mu * self.drift.targets_at(t).mu
+    }
+
+    /// The infimum of `μ(t)` over the whole trajectory — the failure
+    /// *rate envelope* `λ_max = 1/min_mu` the thinning sampler
+    /// proposes at ([`crate::sim::failure`]).
+    pub fn min_mu(&self) -> f64 {
+        self.base.mu * self.drift.domain_worst_targets().mu
+    }
+
+    /// Whether `μ(t)` is constant over the trajectory (the other fields
+    /// may still drift). The failure sampler uses this to fall back to
+    /// the plain homogeneous stream — bit-identical draws, no thinning
+    /// acceptance draws consumed.
+    pub fn mu_is_stationary(&self) -> bool {
+        self.stationary || self.drift.mu_only().is_stationary()
+    }
+
+    /// Exact-bits encoding: the base scenario's canonical
+    /// [`Scenario::key_bits`] listing followed by the drift schedule's
+    /// [`DriftProcess::key_words`].
+    pub fn key_words(&self) -> Vec<u64> {
+        let mut k = Vec::with_capacity(24);
+        k.extend_from_slice(&self.base.key_bits());
+        k.extend_from_slice(&self.drift.key_words());
+        k
+    }
+}
+
+/// Apply a multiplier set to a scenario. Plain struct construction —
+/// validity is guaranteed by [`EnvTrajectory::new`]'s worst-corner
+/// check (the domain gate is monotone in every drifted field).
+fn apply_targets(base: &Scenario, m: DriftTargets) -> Scenario {
+    let mut s = *base;
+    s.ckpt.c = base.ckpt.c * m.c;
+    s.ckpt.r = base.ckpt.r * m.r;
+    s.mu = base.mu * m.mu;
+    s.power.p_io = base.power.p_io * m.p_io;
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::fig1_scenario;
+
+    const RAMP_TO: DriftTargets = DriftTargets { c: 2.0, r: 2.0, mu: 1.0, p_io: 2.0 };
+    const DECAY_TO: DriftTargets = DriftTargets { c: 1.0, r: 1.0, mu: 0.4, p_io: 1.0 };
+
+    #[test]
+    fn stationary_views_are_bitwise_base() {
+        let s = fig1_scenario(300.0, 5.5);
+        let traj = EnvTrajectory::new(s, DriftProcess::Stationary).unwrap();
+        assert!(traj.is_stationary());
+        for t in [0.0, 1.0, 5000.0, 1e9] {
+            assert_eq!(traj.scenario_at(t), s);
+            assert_eq!(traj.scenario_at(t).key_bits(), s.key_bits());
+        }
+        assert_eq!(traj.min_mu(), s.mu);
+        // Identity targets on a non-trivial shape are stationary too.
+        let identity_ramp =
+            DriftProcess::Ramp { from_t: 0.0, to_t: 100.0, to: DriftTargets::ONE };
+        let traj = EnvTrajectory::new(s, identity_ramp).unwrap();
+        assert!(traj.is_stationary());
+        assert_eq!(traj.scenario_at(42.0), s);
+    }
+
+    #[test]
+    fn step_switches_at_the_step_time() {
+        let s = fig1_scenario(300.0, 5.5);
+        let d = DriftProcess::Step { at: 100.0, to: RAMP_TO };
+        let traj = EnvTrajectory::new(s, d).unwrap();
+        assert!(!traj.is_stationary());
+        assert_eq!(traj.scenario_at(99.9), s);
+        let after = traj.scenario_at(100.0);
+        assert_eq!(after.ckpt.c, 20.0);
+        assert_eq!(after.ckpt.r, 20.0);
+        assert_eq!(after.power.p_io, s.power.p_io * 2.0);
+        assert_eq!(after.mu, s.mu);
+    }
+
+    #[test]
+    fn ramp_interpolates_and_holds() {
+        let s = fig1_scenario(300.0, 5.5);
+        let d = DriftProcess::Ramp { from_t: 1000.0, to_t: 2000.0, to: RAMP_TO };
+        let traj = EnvTrajectory::new(s, d).unwrap();
+        assert_eq!(traj.scenario_at(0.0), s);
+        assert_eq!(traj.scenario_at(1000.0), s);
+        let mid = traj.scenario_at(1500.0);
+        assert!((mid.ckpt.c - 15.0).abs() < 1e-12, "c={}", mid.ckpt.c);
+        let end = traj.scenario_at(2000.0);
+        assert_eq!(end.ckpt.c, 20.0);
+        assert_eq!(traj.scenario_at(1e6), end);
+    }
+
+    #[test]
+    fn contention_square_wave() {
+        let s = fig1_scenario(300.0, 5.5);
+        let d = DriftProcess::Contention { period: 100.0, duty: 0.3, to: RAMP_TO };
+        let traj = EnvTrajectory::new(s, d).unwrap();
+        assert_eq!(traj.scenario_at(0.0).ckpt.c, 20.0);
+        assert_eq!(traj.scenario_at(29.9).ckpt.c, 20.0);
+        assert_eq!(traj.scenario_at(30.0), s);
+        assert_eq!(traj.scenario_at(99.9), s);
+        assert_eq!(traj.scenario_at(100.0).ckpt.c, 20.0);
+    }
+
+    #[test]
+    fn piecewise_two_segments() {
+        let s = fig1_scenario(300.0, 5.5);
+        let half = DriftTargets { c: 0.5, r: 0.5, mu: 1.0, p_io: 1.0 };
+        let d = DriftProcess::Piecewise { t1: 100.0, first: RAMP_TO, t2: 200.0, second: half };
+        let traj = EnvTrajectory::new(s, d).unwrap();
+        assert_eq!(traj.scenario_at(50.0), s);
+        assert_eq!(traj.scenario_at(150.0).ckpt.c, 20.0);
+        assert_eq!(traj.scenario_at(250.0).ckpt.c, 5.0);
+    }
+
+    #[test]
+    fn mu_drift_and_envelope() {
+        let s = fig1_scenario(300.0, 5.5);
+        let d = DriftProcess::Ramp { from_t: 0.0, to_t: 1000.0, to: DECAY_TO };
+        let traj = EnvTrajectory::new(s, d).unwrap();
+        assert!((traj.mu_at(500.0) - 300.0 * 0.7).abs() < 1e-9);
+        assert!((traj.min_mu() - 120.0).abs() < 1e-12);
+        assert!(!traj.mu_is_stationary());
+        // C-only drift keeps mu stationary.
+        let c_only = DriftProcess::Step {
+            at: 10.0,
+            to: DriftTargets { c: 2.0, r: 1.0, mu: 1.0, p_io: 1.0 },
+        };
+        let traj = EnvTrajectory::new(s, c_only).unwrap();
+        assert!(traj.mu_is_stationary());
+        assert_eq!(traj.min_mu(), s.mu);
+    }
+
+    #[test]
+    fn trajectory_rejects_domain_breaking_drift() {
+        // mu decaying to 4% of 300 = 12 < D + R + wC = 16: b < 0 at the
+        // worst corner.
+        let s = fig1_scenario(300.0, 5.5);
+        let d = DriftProcess::Step {
+            at: 100.0,
+            to: DriftTargets { c: 1.0, r: 1.0, mu: 0.04, p_io: 1.0 },
+        };
+        assert!(EnvTrajectory::new(s, d).is_err());
+        // A C stretch past the feasible-period gate fails too.
+        let d = DriftProcess::Step {
+            at: 100.0,
+            to: DriftTargets { c: 60.0, r: 1.0, mu: 0.1, p_io: 1.0 },
+        };
+        assert!(EnvTrajectory::new(s, d).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_shapes_and_targets() {
+        let bad = DriftTargets { c: 0.0, r: 1.0, mu: 1.0, p_io: 1.0 };
+        assert!(bad.validate().is_err());
+        assert!(DriftProcess::Step { at: f64::NAN, to: RAMP_TO }.validate().is_err());
+        assert!(DriftProcess::Ramp { from_t: 10.0, to_t: 10.0, to: RAMP_TO }
+            .validate()
+            .is_err());
+        assert!(DriftProcess::Contention { period: 0.0, duty: 0.5, to: RAMP_TO }
+            .validate()
+            .is_err());
+        assert!(DriftProcess::Contention { period: 10.0, duty: 1.5, to: RAMP_TO }
+            .validate()
+            .is_err());
+        assert!(
+            DriftProcess::Piecewise { t1: 10.0, first: RAMP_TO, t2: 5.0, second: RAMP_TO }
+                .validate()
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn parse_roundtrips_the_grammar() {
+        for (raw, want) in [
+            ("stationary", DriftProcess::Stationary),
+            (
+                "step:3000:c=0.5,r=0.5",
+                DriftProcess::Step {
+                    at: 3000.0,
+                    to: DriftTargets { c: 0.5, r: 0.5, mu: 1.0, p_io: 1.0 },
+                },
+            ),
+            (
+                "ramp:0:5000:c=2,r=2,io=2",
+                DriftProcess::Ramp { from_t: 0.0, to_t: 5000.0, to: RAMP_TO },
+            ),
+            (
+                "contention:2500:0.4:c=2,r=2,io=2",
+                DriftProcess::Contention { period: 2500.0, duty: 0.4, to: RAMP_TO },
+            ),
+            (
+                "piecewise:1000:mu=0.5:2000:mu=0.4",
+                DriftProcess::Piecewise {
+                    t1: 1000.0,
+                    first: DriftTargets { c: 1.0, r: 1.0, mu: 0.5, p_io: 1.0 },
+                    t2: 2000.0,
+                    second: DECAY_TO,
+                },
+            ),
+        ] {
+            assert_eq!(DriftProcess::parse(raw), Some(want), "{raw}");
+            let rendered = want.render();
+            assert_eq!(DriftProcess::parse(&rendered), Some(want), "{rendered}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_and_invalid_specs() {
+        for bad in [
+            "",
+            "bogus",
+            "step:100",
+            "step:100:",
+            "step:100:x=2",
+            "step:100:c=0",
+            "step:100:c=-2",
+            "step:100:c=NaN",
+            "step:NaN:c=2",
+            "step:100:c=2,c=3",
+            "ramp:100:50:c=2",
+            "ramp:100:c=2",
+            "contention:0:0.5:c=2",
+            "contention:100:2:c=2",
+            "piecewise:100:c=2:50:c=3",
+        ] {
+            assert_eq!(DriftProcess::parse(bad), None, "{bad}");
+        }
+    }
+
+    #[test]
+    fn mu_only_strips_the_measured_fields() {
+        let mixed = DriftProcess::Ramp {
+            from_t: 0.0,
+            to_t: 100.0,
+            to: DriftTargets { c: 2.0, r: 2.0, mu: 0.5, p_io: 2.0 },
+        };
+        assert_eq!(
+            mixed.mu_only(),
+            DriftProcess::Ramp {
+                from_t: 0.0,
+                to_t: 100.0,
+                to: DriftTargets { c: 1.0, r: 1.0, mu: 0.5, p_io: 1.0 },
+            }
+        );
+        // A schedule with no μ component strips to (effectively)
+        // stationary.
+        let c_only = DriftProcess::Step { at: 10.0, to: RAMP_TO };
+        assert!(c_only.mu_only().is_stationary());
+        assert!(DriftProcess::Stationary.mu_only().is_stationary());
+    }
+
+    #[test]
+    fn time_scaling_compresses_the_schedule() {
+        let d = DriftProcess::Ramp { from_t: 1000.0, to_t: 5000.0, to: RAMP_TO };
+        let fast = d.time_scaled(4.0);
+        assert_eq!(fast, DriftProcess::Ramp { from_t: 250.0, to_t: 1250.0, to: RAMP_TO });
+        let s = fig1_scenario(300.0, 5.5);
+        let slow = EnvTrajectory::new(s, d).unwrap();
+        let quick = EnvTrajectory::new(s, fast).unwrap();
+        assert_eq!(slow.scenario_at(4000.0), quick.scenario_at(1000.0));
+    }
+
+    #[test]
+    fn key_words_distinguish_schedules() {
+        let a = DriftProcess::Step { at: 100.0, to: RAMP_TO };
+        let b = DriftProcess::Step { at: 200.0, to: RAMP_TO };
+        let c = DriftProcess::Ramp { from_t: 0.0, to_t: 100.0, to: RAMP_TO };
+        assert_ne!(a.key_words(), b.key_words());
+        assert_ne!(a.key_words(), c.key_words());
+        assert_ne!(DriftProcess::Stationary.key_words(), a.key_words());
+        // Targets enter the key.
+        let d = DriftProcess::Step { at: 100.0, to: DECAY_TO };
+        assert_ne!(a.key_words(), d.key_words());
+    }
+}

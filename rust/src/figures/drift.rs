@@ -1,0 +1,303 @@
+//! Drift tracking: how well the online knee controller follows a
+//! non-stationary environment (beyond the paper).
+//!
+//! For every [`drift_presets`] family the figure sweeps the
+//! controller's two knobs — the C/R EWMA smoothing α and the
+//! period-space hysteresis band — crossed with the drift speed
+//! ([`DriftProcess::time_scaled`]), on the Fig. 1 reference scenario
+//! under the first-order knee policy, plus one exact-backend reference
+//! row per family at the default knobs. Each cell is a
+//! [`CellJob::DriftRun`](crate::sweep::CellJob::DriftRun): the
+//! estimating controller and its clairvoyant oracle twin run on the
+//! same seeds, and the cell reports
+//!
+//! * **tracking lag** — mean relative distance between the period in
+//!   force and the instantaneous knee of the *true* drifting scenario,
+//!   split into the raw gap (`tracking_lag_pct`, which folds in the μ
+//!   exposure-estimator's sampling noise — α-independent by
+//!   construction) and the noise-cancelled component the EWMA α
+//!   actually controls (`drift_lag_pct`: both periods evaluated at the
+//!   controller's own μ estimate, so only the C/R tracking error
+//!   remains);
+//! * **%-waste regret** — the waste gap to the oracle (and its energy
+//!   twin), i.e. what estimation lag actually costs. Near the knee the
+//!   frontier is flat to first order, so regret is small even where
+//!   lag is large — the knee is a forgiving operating point, which is
+//!   itself a finding.
+//!
+//! The α × band sweep shares seeds per schedule (the grid engine
+//! derives `DriftRun` seeds without the controller knobs), so "lag
+//! decreases monotonically in α at a fixed band" is a paired
+//! comparison, gated in `tests/figure_golden.rs`. For the `mu-decay`
+//! family α is expected to be flat: μ is tracked by the exposure
+//! estimator, which the EWMA knob does not touch.
+
+use crate::config::presets::{drift_presets, fig1_scenario};
+use crate::coordinator::policy::PeriodPolicy;
+use crate::drift::DriftProcess;
+use crate::model::{Backend, RecoveryModel};
+use crate::pareto::KneeMethod;
+use crate::sweep::{CellOutput, DriftSummary, GridSpec};
+use crate::util::table::{fnum, Table};
+
+/// EWMA smoothing grid. Spread toward the low end where the tracking
+/// lag of a ramp (`Δ·(1−α)/α` per observation) changes fastest.
+pub const ALPHAS: [f64; 4] = [0.05, 0.2, 0.5, 0.9];
+
+/// Hysteresis-band grid (`0.05` is the controller default).
+pub const BANDS: [f64; 3] = [0.0, 0.05, 0.1];
+
+/// Drift-speed grid: the preset schedules as-is and compressed 4×.
+pub const SPEEDS: [f64; 2] = [1.0, 4.0];
+
+/// The reference knobs the per-family headline and the exact-backend
+/// rows use: `(alpha, hysteresis)`.
+pub const REFERENCE_KNOBS: (f64, f64) = (0.2, 0.05);
+
+fn knee(backend: Backend) -> PeriodPolicy {
+    PeriodPolicy::Knee { method: KneeMethod::MaxDistanceToChord, backend }
+}
+
+/// One (family, model, speed, α, band) row of `drift.csv`.
+#[derive(Debug, Clone)]
+pub struct DriftRow {
+    pub family: &'static str,
+    /// Objective backend of the knee policy (`first-order` for the
+    /// main grid, `exact:ideal` for the reference rows).
+    pub model: &'static str,
+    pub speed: f64,
+    pub alpha: f64,
+    pub hysteresis: f64,
+    /// Raw gap to the true instantaneous knee (folds in the
+    /// α-independent μ-estimator sampling noise).
+    pub tracking_lag_pct: f64,
+    /// μ-noise-cancelled drift-tracking lag — the component α controls
+    /// (the monotonicity gate reads this column).
+    pub drift_lag_pct: f64,
+    /// `(makespan/T_base − 1)·100` of the estimating controller.
+    pub waste_pct: f64,
+    /// The oracle twin's waste.
+    pub oracle_waste_pct: f64,
+    pub waste_regret_pct: f64,
+    pub energy_regret_pct: f64,
+    pub final_period_mean: f64,
+    pub period_updates_mean: f64,
+    pub failures_mean: f64,
+}
+
+impl DriftRow {
+    fn from_summary(
+        family: &'static str,
+        model: &'static str,
+        speed: f64,
+        alpha: f64,
+        hysteresis: f64,
+        t_base: f64,
+        sum: &DriftSummary,
+    ) -> Self {
+        DriftRow {
+            family,
+            model,
+            speed,
+            alpha,
+            hysteresis,
+            tracking_lag_pct: sum.adaptive.tracking_lag_pct_mean,
+            drift_lag_pct: sum.adaptive.drift_lag_pct_mean,
+            waste_pct: (sum.adaptive.makespan_mean / t_base - 1.0) * 100.0,
+            oracle_waste_pct: (sum.oracle_makespan_mean / t_base - 1.0) * 100.0,
+            waste_regret_pct: sum.waste_regret_pct,
+            energy_regret_pct: sum.energy_regret_pct,
+            final_period_mean: sum.adaptive.final_period_mean,
+            period_updates_mean: sum.adaptive.period_updates_mean,
+            failures_mean: sum.adaptive.failures_mean,
+        }
+    }
+}
+
+/// Run the full drift grid, `replicates` sample paths per cell (each
+/// cell also runs its oracle twin), as one batch seeded from
+/// [`super::FIGURE_SEED`]: every family × speed × α × band under the
+/// first-order knee, plus one exact-backend row per family at
+/// [`REFERENCE_KNOBS`] and unit speed.
+pub fn series(replicates: usize) -> Vec<DriftRow> {
+    let s = fig1_scenario(300.0, 5.5);
+    let families = drift_presets();
+    let (ref_alpha, ref_band) = REFERENCE_KNOBS;
+    let exact = Backend::Exact(RecoveryModel::Ideal);
+
+    let mut spec = GridSpec::new(super::FIGURE_SEED);
+    // (family, model, speed, alpha, band) in push order.
+    let mut plan: Vec<(&'static str, &'static str, f64, f64, f64)> = Vec::new();
+    for &(family, drift) in &families {
+        for speed in SPEEDS {
+            let schedule = drift.time_scaled(speed);
+            for alpha in ALPHAS {
+                for band in BANDS {
+                    spec.push_drift(
+                        s,
+                        knee(Backend::FirstOrder),
+                        replicates,
+                        schedule,
+                        alpha,
+                        band,
+                    );
+                    plan.push((family, Backend::FirstOrder.name(), speed, alpha, band));
+                }
+            }
+        }
+        spec.push_drift(s, knee(exact), replicates, drift, ref_alpha, ref_band);
+        plan.push((family, exact.name(), 1.0, ref_alpha, ref_band));
+    }
+
+    let results = spec.evaluate();
+    plan.into_iter()
+        .zip(results)
+        .filter_map(|((family, model, speed, alpha, band), r)| match r.output {
+            CellOutput::Drift(Some(sum)) => Some(DriftRow::from_summary(
+                family, model, speed, alpha, band, s.t_base, &sum,
+            )),
+            // A schedule at the domain edge is skipped, like the other
+            // figures' clamped cells, not a crash.
+            CellOutput::Drift(None) => None,
+            ref other => unreachable!("drift cell produced {other:?}"),
+        })
+        .collect()
+}
+
+/// `drift.csv`: one row per (family, model, speed, α, band).
+pub fn table(rows: &[DriftRow]) -> Table {
+    let mut t = Table::new(&[
+        "family",
+        "model",
+        "speed",
+        "alpha",
+        "hysteresis",
+        "tracking_lag_pct",
+        "drift_lag_pct",
+        "waste_pct",
+        "oracle_waste_pct",
+        "waste_regret_pct",
+        "energy_regret_pct",
+        "final_period_min",
+        "period_updates",
+        "failures",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.family.to_string(),
+            r.model.to_string(),
+            fnum(r.speed, 2),
+            fnum(r.alpha, 2),
+            fnum(r.hysteresis, 2),
+            fnum(r.tracking_lag_pct, 3),
+            fnum(r.drift_lag_pct, 3),
+            fnum(r.waste_pct, 3),
+            fnum(r.oracle_waste_pct, 3),
+            fnum(r.waste_regret_pct, 3),
+            fnum(r.energy_regret_pct, 3),
+            fnum(r.final_period_mean, 2),
+            fnum(r.period_updates_mean, 1),
+            fnum(r.failures_mean, 1),
+        ]);
+    }
+    t
+}
+
+/// The first-order `(α, lag)` profile of one family at a fixed band
+/// and speed, sorted by α ascending. `raw = false` reads the
+/// μ-noise-cancelled [`DriftRow::drift_lag_pct`] (the monotonicity
+/// acceptance); `raw = true` the headline [`DriftRow::tracking_lag_pct`].
+pub fn lag_by_alpha(
+    rows: &[DriftRow],
+    family: &str,
+    speed: f64,
+    band: f64,
+    raw: bool,
+) -> Vec<(f64, f64)> {
+    let mut out: Vec<(f64, f64)> = rows
+        .iter()
+        .filter(|r| {
+            r.family == family
+                && r.model == Backend::FirstOrder.name()
+                && r.speed == speed
+                && r.hysteresis == band
+        })
+        .map(|r| (r.alpha, if raw { r.tracking_lag_pct } else { r.drift_lag_pct }))
+        .collect();
+    out.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite alphas"));
+    out
+}
+
+/// Per-family headline at [`REFERENCE_KNOBS`], unit speed,
+/// first-order: `(family, tracking_lag_pct, waste_regret_pct)`.
+pub fn headlines(rows: &[DriftRow]) -> Vec<(&'static str, f64, f64)> {
+    let (ref_alpha, ref_band) = REFERENCE_KNOBS;
+    rows.iter()
+        .filter(|r| {
+            r.model == Backend::FirstOrder.name()
+                && r.speed == 1.0
+                && r.alpha == ref_alpha
+                && r.hysteresis == ref_band
+        })
+        .map(|r| (r.family, r.tracking_lag_pct, r.waste_regret_pct))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_covers_the_grid_and_the_exact_reference_rows() {
+        let rows = series(6);
+        let families = drift_presets();
+        let per_family = SPEEDS.len() * ALPHAS.len() * BANDS.len() + 1;
+        assert_eq!(rows.len(), families.len() * per_family);
+        for (family, _) in &families {
+            let fo = rows
+                .iter()
+                .filter(|r| r.family == *family && r.model == "first-order")
+                .count();
+            assert_eq!(fo, per_family - 1, "{family}");
+            let exact =
+                rows.iter().filter(|r| r.family == *family && r.model == "exact:ideal").count();
+            assert_eq!(exact, 1, "{family}");
+        }
+        assert_eq!(table(&rows).n_rows(), rows.len());
+        // Headlines: one per family.
+        assert_eq!(headlines(&rows).len(), families.len());
+        // The α profile is complete at every (speed, band).
+        for speed in SPEEDS {
+            for band in BANDS {
+                let prof = lag_by_alpha(&rows, "io-ramp", speed, band, false);
+                assert_eq!(prof.len(), ALPHAS.len(), "speed={speed} band={band}");
+            }
+        }
+    }
+
+    #[test]
+    fn series_is_deterministic() {
+        let a = series(4);
+        let b = series(4);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tracking_lag_pct.to_bits(), y.tracking_lag_pct.to_bits());
+            assert_eq!(x.waste_regret_pct.to_bits(), y.waste_regret_pct.to_bits());
+        }
+    }
+
+    #[test]
+    fn oracle_waste_is_positive_and_lag_is_real() {
+        let rows = series(6);
+        for r in &rows {
+            assert!(r.oracle_waste_pct > 0.0, "{}: oracle waste {}", r.family, r.oracle_waste_pct);
+            assert!(r.failures_mean > 0.0, "{}: no failures", r.family);
+            assert!(
+                r.tracking_lag_pct >= 0.0 && r.tracking_lag_pct < 100.0,
+                "{}: lag {} out of range",
+                r.family,
+                r.tracking_lag_pct
+            );
+        }
+    }
+}

@@ -10,6 +10,7 @@
 //! | [`frontier::series`] | time–energy Pareto frontiers + knees (beyond the paper) |
 //! | [`knee_drift::series`] | first-order vs exact knee drift per preset + small-μ stress rows (beyond the paper) |
 //! | [`adaptive::series`] | adaptive knee policy vs AlgoT/AlgoE/Young/Daly under injected failures (beyond the paper) |
+//! | [`drift::series`] | drift tracking: lag + oracle regret vs EWMA α × hysteresis band × drift speed per drift family (beyond the paper) |
 //! | [`ablations`]       | ω sweep, first-order accuracy, γ sweep, MSK, Weibull robustness |
 //!
 //! Every series is built as a [`crate::sweep::GridSpec`] and evaluated
@@ -23,6 +24,7 @@
 
 pub mod ablations;
 pub mod adaptive;
+pub mod drift;
 pub mod fig1;
 pub mod fig2;
 pub mod fig3;

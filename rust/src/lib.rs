@@ -51,10 +51,27 @@
 //! first-order closed forms by default, or the exact renewal model
 //! (`--model exact`) whose knee sits 6–44% above the first-order one in
 //! the frequent-failure regime (`figures::knee_drift`).
+//!
+//! # Non-stationary environments
+//!
+//! [`drift`] lifts the whole stack from "one static scenario" to
+//! time-varying environments: a [`drift::DriftProcess`] (step / ramp /
+//! periodic contention / piecewise schedules over any subset of the
+//! scenario's `C`, `R`, `μ`, `P_IO`) bound to a base scenario yields an
+//! [`drift::EnvTrajectory`] of deterministic scenario-at-time views.
+//! The failure sampler thins non-homogeneous exponential arrivals
+//! against the trajectory's rate envelope, `sim::adaptive` drives drift
+//! sample paths and records how well the online controller tracks the
+//! moving knee (tracking lag, clairvoyant-oracle regret),
+//! [`sweep::CellJob::DriftRun`] cells run drift grids parallel and
+//! memo-cached, and `figures::drift` sweeps EWMA α × hysteresis band ×
+//! drift speed per drift family into `drift.csv`. With a stationary
+//! process every consumer is bit-identical to the static path.
 
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod drift;
 pub mod energy;
 pub mod figures;
 pub mod model;

@@ -14,9 +14,12 @@
 use std::path::Path;
 
 use ckpt_period::cli::{ArgSpec, Args, CliError};
-use ckpt_period::config::presets::{fig1_scenario, power_ratio_sweep, tradeoff_presets};
+use ckpt_period::config::presets::{
+    drift_preset, drift_presets, fig1_scenario, power_ratio_sweep, tradeoff_presets,
+};
 use ckpt_period::config::ScenarioSpec;
 use ckpt_period::coordinator::{Coordinator, CoordinatorConfig, OverlapMode, PeriodPolicy};
+use ckpt_period::drift::DriftProcess;
 use ckpt_period::figures;
 use ckpt_period::model::energy::{e_final, t_energy_opt};
 use ckpt_period::model::msk::compare_with_msk;
@@ -45,14 +48,23 @@ Reproduction of Aupy et al., 'Optimal Checkpointing Period: Time vs. Energy' (20
             objective backend (exact renewal vs the paper's closed forms)
   simulate  Monte-Carlo validation of the model on a scenario;
             --adaptive runs the online controller (any --policy,
-            including knee and eps-time:<x>/eps-energy:<x> budgets);
+            including knee and eps-time:<x>/eps-energy:<x> budgets,
+            with --alpha/--hysteresis controller knobs);
             --model retargets the frontier-aware policies and the
-            model reference columns at the exact backend
+            model reference columns at the exact backend — note the
+            simulated failure process is MODEL-MATCHED, not the
+            realistic default: failures strike during D+R only under
+            `--model exact` (= exact:restarting), so the table is an
+            apples-to-apples validation of the selected objectives;
+            --drift <spec|preset> runs the controller on a
+            non-stationary environment (requires --adaptive)
   figures   regenerate every paper figure (incl. the frontier, the
-            first-order-vs-exact knee drift, and the adaptive policy
-            comparison) as CSV
-  train     fault-tolerant PJRT training run (--model as in simulate)
-  info      artifact inventory
+            first-order-vs-exact knee drift, the adaptive policy
+            comparison, and the drift-tracking sweep) as CSV
+  train     fault-tolerant PJRT training run (--model as in simulate;
+            --adaptive takes --alpha/--hysteresis, and --drift scales
+            the failure injector's MTBF along the schedule)
+  info      artifact inventory + memo-cache counters
 
 Run a subcommand with --help for its flags.";
 
@@ -604,6 +616,23 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
         "adaptive",
         "simulate the online controller (re-estimates C/R/mu per sample path)",
     ));
+    specs.push(ArgSpec::flag(
+        "drift",
+        "stationary",
+        "environment drift schedule (adaptive only): a preset \
+         (io-ramp|mu-decay|step-reconfig|contention-burst) or \
+         step:...|ramp:...|contention:...|piecewise:...",
+    ));
+    specs.push(ArgSpec::flag(
+        "alpha",
+        ALPHA_FLAG_DEFAULT,
+        "controller C/R EWMA smoothing in (0,1] (adaptive only)",
+    ));
+    specs.push(ArgSpec::flag(
+        "hysteresis",
+        HYSTERESIS_FLAG_DEFAULT,
+        "controller period-space hysteresis band, >= 0 (adaptive only)",
+    ));
     specs.push(ArgSpec::flag("replicates", "200", "Monte-Carlo replicates"));
     specs.push(ArgSpec::flag("seed", "1", "base seed (cell seeds derive from it)"));
     specs.push(MODEL_SPEC);
@@ -614,8 +643,14 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     let policy = parse_policy(args.get("policy"))?.with_backend(backend);
     let reps = args.get_usize("replicates").map_err(cli_err)?;
     let seed = args.get_u64("seed").map_err(cli_err)?;
+    let knobs = ControllerKnobs::from_args(&args)?;
     if args.switch("adaptive") {
-        return cmd_simulate_adaptive(&s, policy, backend, reps, seed);
+        return cmd_simulate_adaptive(&s, policy, backend, reps, seed, knobs);
+    }
+    if !knobs.is_default() {
+        return Err(
+            "--drift/--alpha/--hysteresis drive the online controller; pass --adaptive".into()
+        );
     }
     let period = {
         let p = args.get_f64("period").map_err(cli_err)?;
@@ -703,21 +738,134 @@ fn parse_model(raw: &str) -> Result<Backend, String> {
     })
 }
 
+/// The `--alpha`/`--hysteresis` flag defaults. These must render the
+/// controller's `DEFAULT_EWMA_ALPHA`/`DEFAULT_HYSTERESIS` (a
+/// `debug_assert` in [`ControllerKnobs::is_default`] ties the three
+/// sources together in every test build); `is_default` parses these
+/// same strings, so the default-detection — which routes between the
+/// plain `AdaptiveRun` cell and the drift/oracle path — can never
+/// drift from the declared flag defaults.
+const ALPHA_FLAG_DEFAULT: &str = "0.3";
+const HYSTERESIS_FLAG_DEFAULT: &str = "0.05";
+
+/// The online controller's CLI knobs: the drift schedule and the
+/// estimator tuning, validated once and passed as one unit (they only
+/// mean something on the adaptive paths).
+#[derive(Debug, Clone, Copy)]
+struct ControllerKnobs {
+    drift: DriftProcess,
+    alpha: f64,
+    hysteresis: f64,
+}
+
+impl ControllerKnobs {
+    /// Parse the knobs for `simulate`: drift times in the scenario's
+    /// minutes, named presets allowed.
+    fn from_args(args: &Args) -> Result<Self, String> {
+        Self::parse(args, true)
+    }
+
+    /// Parse the knobs for `train`: schedule times are wall-clock
+    /// **seconds** there, so the minute-authored presets (timed against
+    /// the simulation's `T_base` = 10 000 min) are rejected rather than
+    /// silently running ~60x too fast — spell the schedule explicitly.
+    fn from_args_seconds(args: &Args) -> Result<Self, String> {
+        Self::parse(args, false)
+    }
+
+    fn parse(args: &Args, allow_presets: bool) -> Result<Self, String> {
+        let raw_drift = args.get("drift");
+        if !allow_presets && raw_drift != "stationary" && drift_preset(raw_drift).is_some() {
+            return Err(cli_err(CliError::InvalidValue(
+                "drift".into(),
+                raw_drift.into(),
+                "drift presets are authored in simulation minutes; `train` schedules \
+                 run in wall-clock seconds — spell the schedule explicitly \
+                 (e.g. ramp:0:600:mu=0.5)"
+                    .into(),
+            )));
+        }
+        let drift = parse_drift(raw_drift)?;
+        let alpha = args.get_f64("alpha").map_err(cli_err)?;
+        if !(alpha.is_finite() && alpha > 0.0 && alpha <= 1.0) {
+            return Err(cli_err(CliError::InvalidValue(
+                "alpha".into(),
+                args.get("alpha").into(),
+                "EWMA alpha must be finite and in (0, 1]".into(),
+            )));
+        }
+        let hysteresis = args.get_f64("hysteresis").map_err(cli_err)?;
+        if !(hysteresis.is_finite() && hysteresis >= 0.0) {
+            return Err(cli_err(CliError::InvalidValue(
+                "hysteresis".into(),
+                args.get("hysteresis").into(),
+                "hysteresis band must be finite and >= 0".into(),
+            )));
+        }
+        Ok(ControllerKnobs { drift, alpha, hysteresis })
+    }
+
+    /// Whether every knob is at the `AdaptiveRun` default (stationary
+    /// schedule, the controller's default α and band).
+    fn is_default(&self) -> bool {
+        let alpha_default: f64 = ALPHA_FLAG_DEFAULT.parse().expect("const parses");
+        let hyst_default: f64 = HYSTERESIS_FLAG_DEFAULT.parse().expect("const parses");
+        debug_assert_eq!(
+            alpha_default,
+            ckpt_period::coordinator::adaptive::DEFAULT_EWMA_ALPHA,
+            "--alpha flag default diverged from the controller default"
+        );
+        debug_assert_eq!(
+            hyst_default,
+            ckpt_period::coordinator::adaptive::DEFAULT_HYSTERESIS,
+            "--hysteresis flag default diverged from the controller default"
+        );
+        self.drift.is_stationary()
+            && self.alpha == alpha_default
+            && self.hysteresis == hyst_default
+    }
+}
+
+/// Map an unparseable `--drift` value to a [`CliError`] with the full
+/// grammar (and the preset names) in the message, mirroring
+/// `--policy`/`--model`.
+fn parse_drift(raw: &str) -> Result<DriftProcess, String> {
+    if let Some(preset) = drift_preset(raw) {
+        return Ok(preset);
+    }
+    DriftProcess::parse(raw).ok_or_else(|| {
+        let presets: Vec<&str> = drift_presets().iter().map(|(n, _)| *n).collect();
+        cli_err(CliError::InvalidValue(
+            "drift".into(),
+            raw.into(),
+            format!("expected {} or a preset ({})", DriftProcess::PARSE_HELP, presets.join("|")),
+        ))
+    })
+}
+
 /// `simulate --adaptive`: one AdaptiveRun cell on the grid engine —
 /// the online controller re-estimates (C, R, mu) along every sample
 /// path and re-reads the policy period after each checkpoint/recovery.
+/// With a drift schedule or non-default controller knobs the cell
+/// becomes a DriftRun: the environment follows the trajectory and the
+/// clairvoyant-oracle twin runs on the same seeds for the regret
+/// columns.
 fn cmd_simulate_adaptive(
     s: &Scenario,
     policy: PeriodPolicy,
     backend: Backend,
     reps: usize,
     seed: u64,
+    knobs: ControllerKnobs,
 ) -> Result<(), String> {
     // Match the failure process to the selected model's recovery
     // assumption, exactly like the non-adaptive path: the static-model
     // reference columns below come from `backend`, so the sample paths
     // must play by the same rules for the table to be comparable.
     let failures_during_recovery = matches!(backend, Backend::Exact(RecoveryModel::Restarting));
+    if !knobs.is_default() {
+        return cmd_simulate_drift(s, policy, backend, reps, seed, knobs);
+    }
     let mut spec = GridSpec::new(seed);
     spec.push(Cell {
         scenario: *s,
@@ -765,6 +913,88 @@ fn cmd_simulate_adaptive(
     Ok(())
 }
 
+/// `simulate --adaptive` with a drift schedule (or tuned controller
+/// knobs): one DriftRun cell — the controller tracks the drifting
+/// environment, the oracle twin pins the clairvoyant baseline.
+fn cmd_simulate_drift(
+    s: &Scenario,
+    policy: PeriodPolicy,
+    backend: Backend,
+    reps: usize,
+    seed: u64,
+    knobs: ControllerKnobs,
+) -> Result<(), String> {
+    // Drift tables simulate the *realistic* process (failures can
+    // strike during D + R) regardless of --model — the same process
+    // `figures drift` / drift.csv and its mirror-calibrated golden
+    // bands use, so a CLI cell measures the same thing as a figure
+    // cell. (--model still retargets the frontier-aware policy and the
+    // indicative model reference column.)
+    let failures_during_recovery = true;
+    let mut spec = GridSpec::new(seed);
+    spec.push(Cell {
+        scenario: *s,
+        failure: None,
+        job: CellJob::DriftRun {
+            policy,
+            replicates: reps,
+            failures_during_recovery,
+            drift: knobs.drift,
+            alpha: knobs.alpha,
+            hysteresis: knobs.hysteresis,
+        },
+    });
+    let results = spec.evaluate();
+    let sum = results[0].output.drift().ok_or(
+        "no feasible period: either the scenario is out of the model's domain \
+         already, or the drift schedule's worst corner leaves it",
+    )?;
+    let mc = &sum.adaptive;
+
+    // The static reference: the policy's period on the base (t = 0)
+    // scenario, model columns from the selected backend.
+    let static_period = policy.period(s).map_err(|e| e.to_string())?;
+    let mut t = Table::new(&["quantity", "model @ base scenario", "adaptive sim (95% CI)"]);
+    t.row(&[
+        "period_min".into(),
+        fnum(static_period, 2),
+        format!("{} (final, mean)", fnum(mc.final_period_mean, 2)),
+    ]);
+    t.row(&[
+        "makespan_min".into(),
+        fnum(backend.t_final(s, static_period), 1),
+        format!("{} ({})", fnum(mc.makespan_mean, 1), fnum(mc.makespan_ci95_half, 1)),
+    ]);
+    t.row(&[
+        "energy_mW_min".into(),
+        fnum(backend.e_final(s, static_period), 1),
+        format!("{} ({})", fnum(mc.energy_mean, 1), fnum(mc.energy_ci95_half, 1)),
+    ]);
+    t.row(&["failures".into(), String::new(), fnum(mc.failures_mean, 2)]);
+    t.row(&["checkpoints".into(), String::new(), fnum(mc.checkpoints_mean, 1)]);
+    t.row(&["period_updates".into(), String::new(), fnum(mc.period_updates_mean, 1)]);
+    t.row(&["tracking_lag_pct".into(), String::new(), fnum(mc.tracking_lag_pct_mean, 3)]);
+    t.row(&["drift_lag_pct".into(), String::new(), fnum(mc.drift_lag_pct_mean, 3)]);
+    t.row(&[
+        "oracle_makespan_min".into(),
+        String::new(),
+        fnum(sum.oracle_makespan_mean, 1),
+    ]);
+    t.row(&["waste_regret_pct".into(), String::new(), fnum(sum.waste_regret_pct, 3)]);
+    t.row(&["energy_regret_pct".into(), String::new(), fnum(sum.energy_regret_pct, 3)]);
+    println!(
+        "adaptive drift simulation: policy {}, model {}, drift {}, alpha {}, band {}, \
+         {reps} replicates (oracle twin on the same seeds)",
+        policy.name(),
+        backend.name(),
+        knobs.drift.render(),
+        knobs.alpha,
+        knobs.hysteresis
+    );
+    println!("{}", t.render());
+    Ok(())
+}
+
 fn cmd_figures(argv: &[String]) -> Result<(), String> {
     let specs = [
         ArgSpec::flag("out-dir", "target/figures", "output directory"),
@@ -806,6 +1036,15 @@ fn cmd_figures(argv: &[String]) -> Result<(), String> {
         println!("knee drift [{label}]: exact knee {drift:+.1}% vs first-order");
     }
 
+    let dr = figures::drift::series(24);
+    figures::persist(&figures::drift::table(&dr), &dir, "drift").map_err(|e| e.to_string())?;
+    for (family, lag, regret) in figures::drift::headlines(&dr) {
+        println!(
+            "drift tracking [{family}]: lag {lag:.2}% vs the moving knee, \
+             waste regret {regret:+.3}% of T_base vs the oracle"
+        );
+    }
+
     let ad = figures::adaptive::series(64);
     figures::persist(&figures::adaptive::table(&ad), &dir, "adaptive")
         .map_err(|e| e.to_string())?;
@@ -823,8 +1062,43 @@ fn cmd_figures(argv: &[String]) -> Result<(), String> {
         "headline: mu=300 rho=5.5 -> {:.1}% energy gain / {:.1}% time overhead",
         h.energy_gain_mu300_rho55_pct, h.time_overhead_mu300_rho55_pct
     );
+    // Counters are process-local, so this is where the drift grid's
+    // memo churn is actually observable (a fresh `info` process would
+    // report zeros).
+    print_memo_stats();
     println!("figures written to {}", dir.display());
     Ok(())
+}
+
+/// Memo-cache counter report (process-local): the grid-cell cache plus
+/// the two pure-function memos. Drift runs re-key the online memo once
+/// per distinct quantised estimate, so the clear counter is the churn
+/// signal to watch.
+fn print_memo_stats() {
+    let (grid_hits, grid_misses) = ckpt_period::sweep::cache::stats();
+    println!("memo caches (this process):");
+    println!(
+        "  grid cells: {} entries, {grid_hits} hits / {grid_misses} misses",
+        ckpt_period::sweep::cache::len()
+    );
+    let (online, online_len) = ckpt_period::pareto::online::memo_stats();
+    println!(
+        "  online policy memo: {online_len} entries, {} hits / {} misses, {} clears \
+         (hit rate {:.1}%)",
+        online.hits,
+        online.misses,
+        online.clears,
+        online.hit_rate() * 100.0
+    );
+    let (opt, opt_len) = ckpt_period::model::backend::opt_memo_stats();
+    println!(
+        "  exact optima memo: {opt_len} entries, {} hits / {} misses, {} clears \
+         (hit rate {:.1}%)",
+        opt.hits,
+        opt.misses,
+        opt.clears,
+        opt.hit_rate() * 100.0
+    );
 }
 
 fn cmd_train(argv: &[String]) -> Result<(), String> {
@@ -843,12 +1117,30 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
         ArgSpec::switch("blocking", "blocking checkpoints (omega = 0)"),
         ArgSpec::switch("no-failures", "disable failure injection"),
         ArgSpec::switch("adaptive", "re-estimate C/R/mu online and adapt the period"),
+        ArgSpec::flag(
+            "drift",
+            "stationary",
+            "failure-rate drift schedule (mu component only; times in \
+             wall-clock SECONDS, so the minute-authored presets are \
+             rejected): the --drift grammar, e.g. ramp:0:600:mu=0.5",
+        ),
+        ArgSpec::flag(
+            "alpha",
+            ALPHA_FLAG_DEFAULT,
+            "controller C/R EWMA smoothing in (0,1] (adaptive)",
+        ),
+        ArgSpec::flag(
+            "hysteresis",
+            HYSTERESIS_FLAG_DEFAULT,
+            "controller hysteresis band, >= 0 (adaptive)",
+        ),
         ArgSpec::flag("report", "", "write the JSON run report here"),
         MODEL_SPEC,
     ];
     let args = Args::parse("train", "fault-tolerant PJRT training run", &specs, argv)
         .map_err(cli_err)?;
 
+    let knobs = ControllerKnobs::from_args_seconds(&args)?;
     let mut cfg = CoordinatorConfig::new(args.get("artifacts"), args.get("ckpt-dir"));
     cfg.policy = parse_policy(args.get("policy"))?
         .with_backend(parse_model(args.get("model"))?);
@@ -862,6 +1154,9 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
     }
     cfg.inject_failures = !args.switch("no-failures");
     cfg.adaptive = args.switch("adaptive");
+    cfg.drift = knobs.drift;
+    cfg.ewma_alpha = knobs.alpha;
+    cfg.hysteresis = knobs.hysteresis;
 
     let rt = Runtime::cpu().map_err(|e| e.to_string())?;
     let coord = Coordinator::new(&rt, cfg).map_err(|e| e.to_string())?;
@@ -922,5 +1217,6 @@ fn cmd_info(argv: &[String]) -> Result<(), String> {
         "reference scenario (mu=300, rho=5.5): AlgoT {:.1} min, AlgoE {:.1} min",
         cmp.t_time, cmp.t_energy
     );
+    print_memo_stats();
     Ok(())
 }

@@ -201,8 +201,10 @@ const OPT_ENERGY_TAG: u64 = 2;
 type OptKey = [u64; 12];
 
 /// One entry per (optimum, recovery model, scenario) triple; see
-/// [`PureMemo`] for the clearing/concurrency contract.
-static OPT_MEMO: PureMemo<OptKey> = PureMemo::new(8192);
+/// [`PureMemo`] for the clearing/concurrency contract. Sized for drift
+/// sweeps, which visit one scenario per distinct quantised trajectory
+/// view ([`opt_memo_stats`] reports the churn).
+static OPT_MEMO: PureMemo<OptKey> = PureMemo::new(32_768);
 
 fn opt_key(tag: u64, model: RecoveryModel, s: &Scenario) -> OptKey {
     let mut k = [0u64; 12];
@@ -220,6 +222,14 @@ fn opt_key(tag: u64, model: RecoveryModel, s: &Scenario) -> OptKey {
 /// change the value anyone reads.
 fn cached_opt(tag: u64, model: RecoveryModel, s: &Scenario, compute: impl FnOnce() -> f64) -> f64 {
     OPT_MEMO.get_or_compute(opt_key(tag, model, s), compute)
+}
+
+/// Counter snapshot of the exact-optima memo (hits/misses/wholesale
+/// clears since process start) plus its live entry count — the `info`
+/// subcommand's churn report (drift trajectories re-key this memo once
+/// per distinct scenario view).
+pub fn opt_memo_stats() -> (crate::util::memo::MemoStats, usize) {
+    (OPT_MEMO.stats(), OPT_MEMO.len())
 }
 
 #[cfg(test)]

@@ -45,8 +45,12 @@ type MemoKey = [u64; 14];
 
 /// One entry per distinct quantised `(C, R, μ)` visited by a controller
 /// trajectory (plus one per preset/budget/backend); see [`PureMemo`]
-/// for the clearing/concurrency contract.
-static MEMO: PureMemo<MemoKey> = PureMemo::new(8192);
+/// for the clearing/concurrency contract. Sized for drift sweeps: a
+/// non-stationary trajectory re-keys this once per distinct quantised
+/// view (true-scenario targets × estimate paths × α grid), an order of
+/// magnitude more than stationary runs — [`memo_stats`] reports the
+/// churn.
+static MEMO: PureMemo<MemoKey> = PureMemo::new(32_768);
 
 /// Round a positive finite value to three significant decimal digits.
 /// Non-finite and non-positive inputs pass through (scenario validation
@@ -149,6 +153,15 @@ pub fn min_time_period(
     MEMO.get_or_try_compute(memo_key(4, max_energy_overhead_pct, backend, &q), || {
         Ok(min_time_with_energy_overhead(&q, max_energy_overhead_pct, backend)?.period)
     })
+}
+
+/// Counter snapshot of the online-policy memo (hits/misses/wholesale
+/// clears since process start) plus its live entry count. Drift
+/// trajectories re-key this memo far more often than stationary runs —
+/// one entry per distinct quantised `(C, R, μ)` along the schedule —
+/// and the `info` subcommand surfaces the churn through this.
+pub fn memo_stats() -> (crate::util::memo::MemoStats, usize) {
+    (MEMO.stats(), MEMO.len())
 }
 
 fn validate_budget(pct: f64) -> Result<(), ModelError> {

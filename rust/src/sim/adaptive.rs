@@ -1,5 +1,5 @@
 //! Adaptive-period discrete-event simulation: the online controller in
-//! the loop.
+//! the loop, on stationary **or drifting** environments.
 //!
 //! [`super::engine`] simulates a *fixed* checkpointing period. This
 //! module closes the loop the coordinator runs in production: an
@@ -11,6 +11,37 @@
 //! the end-to-end test bed for "checkpoint at the Pareto knee online":
 //! VELOC-style drifting parameters meet the paper's closed forms.
 //!
+//! # Drift
+//!
+//! [`AdaptiveSimConfig::drift`] binds the scenario to a
+//! [`DriftProcess`]: the *true* environment then follows the
+//! [`EnvTrajectory`] — checkpoint and recovery durations are read from
+//! the scenario-at-time view at each phase start, the I/O power draw
+//! integrates at its instantaneous value, and (with
+//! [`AdaptiveSimConfig::paper_drifting`]) failures arrive from the
+//! non-homogeneous thinned sampler. Two drift-tracking metrics ride
+//! along every run:
+//!
+//! * **tracking lag** — at every period re-read point, the relative
+//!   distance between the period in force and the policy's period on
+//!   the *true instantaneous* scenario (the moving knee), averaged over
+//!   the run ([`AdaptiveRunResult::tracking_lag_pct`]);
+//! * **oracle regret** — [`AdaptiveSimConfig::oracle`] replaces the
+//!   controller with a clairvoyant tracker that reads the true
+//!   instantaneous policy period at the same decision points; the
+//!   waste/energy gap between the paired runs (same seeds, same
+//!   failure draws where μ is stationary) is the price of estimating
+//!   instead of knowing ([`crate::sweep::DriftSummary`]).
+//!
+//! With [`DriftProcess::Stationary`] every code path below reduces to
+//! the exact pre-drift behaviour **bit-for-bit**: `scenario_at` returns
+//! the base scenario's bits, the failure stream falls back to the
+//! homogeneous sampler with the same split tag, and the energy integral
+//! is evaluated by the original end-of-run formula (the incremental
+//! accumulation drift needs would reassociate the floating-point sums).
+//! `tests/drift_tracking.rs` pins this zero-regression guarantee across
+//! every trade-off preset and thread count.
+//!
 //! Semantics are exactly [`super::engine`]'s (same phase structure,
 //! power states, and energy integration); the only addition is the
 //! controller. The event loop deliberately mirrors the engine's rather
@@ -18,7 +49,7 @@
 //! engine's phase or recovery semantics MUST be applied to both
 //! (`deterministic_per_seed` + the engine's tests guard each side, and
 //! `failure_free_run_stretches_the_period` ties the two together).
-//! Measured durations equal the scenario's true `C`/`R`
+//! Measured durations equal the trajectory's true `C(t)`/`R(t)`
 //! (the simulator has no measurement noise), so the estimates converge
 //! from the controller's prior toward the truth and the applied period
 //! converges — modulo the period-space hysteresis band — to the
@@ -26,14 +57,15 @@
 //!
 //! Runs are a pure function of `(config, seed)`: the controller is
 //! deterministic (the frontier memo in [`crate::pareto::online`] caches
-//! pure values keyed on quantised estimates), so Monte-Carlo estimates
-//! are byte-identical for every thread count, exactly like
-//! [`super::runner::monte_carlo`].
+//! pure values keyed on quantised estimates), drift schedules are
+//! deterministic, so Monte-Carlo estimates are byte-identical for every
+//! thread count, exactly like [`super::runner::monte_carlo`].
 
 use super::failure::{Failure, FailureProcess, FailureStream};
 use crate::coordinator::adaptive::AdaptiveController;
 use crate::coordinator::policy::PeriodPolicy;
-use crate::model::params::Scenario;
+use crate::drift::{DriftProcess, EnvTrajectory};
+use crate::model::params::{ModelError, Scenario};
 use crate::model::time::young;
 use crate::util::pool::ThreadPool;
 use crate::util::rng::Pcg64;
@@ -42,7 +74,8 @@ use crate::util::stats::OnlineStats;
 /// Configuration of an adaptive simulation.
 #[derive(Debug, Clone)]
 pub struct AdaptiveSimConfig {
-    /// Ground truth: the platform the sample paths execute on.
+    /// Ground truth at `t = 0`: the base scenario the drift schedule
+    /// multiplies.
     pub scenario: Scenario,
     /// The policy the controller recomputes the period with.
     pub policy: PeriodPolicy,
@@ -55,11 +88,24 @@ pub struct AdaptiveSimConfig {
     pub prior_mu: f64,
     /// Period-space hysteresis band handed to the controller.
     pub hysteresis: f64,
+    /// C/R EWMA smoothing factor handed to the controller
+    /// ([`AdaptiveController::with_ewma_alpha`]; default `0.3`).
+    pub alpha: f64,
+    /// How the true environment drifts over the run
+    /// ([`DriftProcess::Stationary`] = the paper's world).
+    pub drift: DriftProcess,
+    /// Replace the controller with a clairvoyant tracker: the period is
+    /// re-read from the policy on the *true instantaneous* scenario at
+    /// the same decision points (after every completed checkpoint and
+    /// recovery). The baseline the drift figure's regret is measured
+    /// against.
+    pub oracle: bool,
 }
 
 impl AdaptiveSimConfig {
     /// The paper's aggregate-exponential failure process, a correct
-    /// prior, and the controller's default hysteresis.
+    /// prior, the controller's default smoothing/hysteresis, and a
+    /// stationary environment.
     pub fn paper(scenario: Scenario, policy: PeriodPolicy) -> Self {
         AdaptiveSimConfig {
             scenario,
@@ -67,8 +113,28 @@ impl AdaptiveSimConfig {
             failure: FailureProcess::Exponential { mtbf: scenario.mu },
             failures_during_recovery: true,
             prior_mu: scenario.mu,
-            hysteresis: 0.05,
+            hysteresis: crate::coordinator::adaptive::DEFAULT_HYSTERESIS,
+            alpha: crate::coordinator::adaptive::DEFAULT_EWMA_ALPHA,
+            drift: DriftProcess::Stationary,
+            oracle: false,
         }
+    }
+
+    /// [`Self::paper`] on a drifting environment: the failure process
+    /// becomes the non-homogeneous thinned sampler over the trajectory
+    /// (bit-identical to the paper process when the schedule leaves μ
+    /// alone). Errors when the schedule is invalid or drives the
+    /// scenario out of the model's domain.
+    pub fn paper_drifting(
+        scenario: Scenario,
+        policy: PeriodPolicy,
+        drift: DriftProcess,
+    ) -> Result<Self, ModelError> {
+        let trajectory = EnvTrajectory::new(scenario, drift)?;
+        let mut cfg = AdaptiveSimConfig::paper(scenario, policy);
+        cfg.failure = FailureProcess::DriftingExponential { trajectory };
+        cfg.drift = drift;
+        Ok(cfg)
     }
 }
 
@@ -90,6 +156,27 @@ pub struct AdaptiveRunResult {
     pub n_period_updates: u64,
     /// The period in force when the run finished.
     pub final_period: f64,
+    /// Mean over the run's period re-read points of
+    /// `|applied − target|/target · 100`, where `target` is the
+    /// policy's period on the true instantaneous scenario — how far
+    /// the controller trails the moving knee. `0` when the run ended
+    /// before the first re-read. Note this raw gap folds in the μ
+    /// exposure-estimator's sampling noise, which no EWMA knob
+    /// controls; [`Self::drift_lag_pct`] is the noise-cancelled
+    /// component.
+    pub tracking_lag_pct: f64,
+    /// The component of the lag attributable to *tracking the drifting
+    /// C/R*: the same mean, but measured against the period the
+    /// controller would compute with exact C/R — its own scenario view
+    /// (base powers, its μ estimate) with the true `C(t)`/`R(t)`
+    /// substituted. Evaluating both periods at the controller's μ
+    /// estimate cancels the μ-sampling noise, so this is the metric
+    /// that decreases monotonically as the EWMA α grows (the drift
+    /// figure's acceptance gate). `0` in oracle mode and for μ-only
+    /// drift (the EWMA tracks C/R exactly there).
+    pub drift_lag_pct: f64,
+    /// Number of re-read points the lags were sampled at.
+    pub tracking_samples: u64,
 }
 
 /// What ended a phase (mirrors the engine).
@@ -116,6 +203,11 @@ fn phase_end(now: f64, len: f64, need: f64, rate: f64, fail_at: f64) -> PhaseEnd
 #[derive(Debug, Clone)]
 pub struct AdaptiveSimulator {
     cfg: AdaptiveSimConfig,
+    /// The scenario-at-time view of `cfg.scenario` under `cfg.drift`.
+    traj: EnvTrajectory,
+    /// Cached `!traj.is_stationary()`: gates every drift-only branch so
+    /// the stationary path stays bit-identical to the pre-drift code.
+    drifting: bool,
 }
 
 impl AdaptiveSimulator {
@@ -124,7 +216,10 @@ impl AdaptiveSimulator {
             cfg.scenario.clamp_period(cfg.scenario.min_period()).is_ok(),
             "scenario has no feasible period"
         );
-        AdaptiveSimulator { cfg }
+        let traj = EnvTrajectory::new(cfg.scenario, cfg.drift)
+            .expect("drift schedule leaves the model's domain");
+        let drifting = !traj.is_stationary();
+        AdaptiveSimulator { cfg, traj, drifting }
     }
 
     pub fn config(&self) -> &AdaptiveSimConfig {
@@ -135,8 +230,9 @@ impl AdaptiveSimulator {
     pub fn run(&self, seed: u64) -> AdaptiveRunResult {
         let s = &self.cfg.scenario;
         let c = s.ckpt.c;
-        let (d, r) = (s.ckpt.d, s.ckpt.r);
+        let d = s.ckpt.d;
         let omega = s.ckpt.omega;
+        let pw = s.power;
 
         let mut ctl = AdaptiveController::new(
             self.cfg.policy,
@@ -146,20 +242,27 @@ impl AdaptiveSimulator {
             self.cfg.prior_mu,
             s.t_base,
         )
+        .with_ewma_alpha(self.cfg.alpha)
         .with_hysteresis(self.cfg.hysteresis);
         // Calibration, as the leader does before its run: one measured
-        // checkpoint and restore seed the C/R estimators.
-        ctl.observe_checkpoint(c);
-        ctl.observe_restore(r);
+        // checkpoint and restore seed the C/R estimators (at the
+        // trajectory's t = 0 values).
+        let s0 = self.traj.scenario_at(0.0);
+        ctl.observe_checkpoint(s0.ckpt.c);
+        ctl.observe_restore(s0.ckpt.r);
 
         // When the controller's estimates leave the model's domain the
         // period in force stays what it was; before the first successful
         // recompute that is a clamped Young period (classical, policy-
         // agnostic, always feasible here).
         let fallback = s.clamp_period(young(s)).expect("feasible by construction");
-        let mut period = match ctl.period() {
-            Some(p) => s.clamp_period(p).unwrap_or(fallback),
-            None => fallback,
+        let mut period = if self.cfg.oracle {
+            self.instantaneous_target(0.0).unwrap_or(fallback)
+        } else {
+            match ctl.period() {
+                Some(p) => s.clamp_period(p).unwrap_or(fallback),
+                None => fallback,
+            }
         };
 
         let mut rng = Pcg64::seeded(seed);
@@ -177,6 +280,9 @@ impl AdaptiveSimulator {
             time_down: 0.0,
             n_period_updates: 0,
             final_period: period,
+            tracking_lag_pct: 0.0,
+            drift_lag_pct: 0.0,
+            tracking_samples: 0,
         };
 
         let mut now = 0.0f64;
@@ -187,7 +293,17 @@ impl AdaptiveSimulator {
         let mut next_fail = stream.next_after(0.0);
 
         loop {
-            let compute_len = period - c;
+            // Under drift, the compute slice is planned against the
+            // checkpoint cost in force at the period's start; a
+            // stretched C(t) can exceed the period the controller still
+            // has in force, so floor the slice (progress per period
+            // stays positive — the trajectory's worst corner is
+            // validated feasible, this only guards the transient).
+            let compute_len = if self.drifting {
+                (period - self.traj.scenario_at(now).ckpt.c).max(1e-3 * c)
+            } else {
+                period - c
+            };
 
             // ---- compute phase (rate 1, power static+cal) ----
             let base_progress = saved + overlap;
@@ -196,11 +312,17 @@ impl AdaptiveSimulator {
             match phase_end(now, compute_len, need, 1.0, next_fail.at) {
                 PhaseEnd::Finished(dt) => {
                     res.time_compute += dt;
+                    if self.drifting {
+                        res.energy += (pw.p_static + pw.p_cal) * dt;
+                    }
                     now += dt;
                     break;
                 }
                 PhaseEnd::Failed(dt) => {
                     res.time_compute += dt;
+                    if self.drifting {
+                        res.energy += (pw.p_static + pw.p_cal) * dt;
+                    }
                     now += dt;
                     ctl.observe_uptime(dt);
                     res.work_lost += overlap + dt;
@@ -212,27 +334,45 @@ impl AdaptiveSimulator {
                         &mut next_fail,
                         &mut stream,
                     );
-                    self.reread_period(&mut ctl, &mut res, &mut period);
+                    self.reread_period(&mut ctl, &mut res, &mut period, now);
                     continue;
                 }
                 PhaseEnd::Ran => {
                     res.time_compute += compute_len;
+                    if self.drifting {
+                        res.energy += (pw.p_static + pw.p_cal) * compute_len;
+                    }
                     now += compute_len;
                     ctl.observe_uptime(compute_len);
                 }
             }
 
             // ---- checkpoint phase (rate ω, power static+ω·cal+io) ----
+            // The write cost and the I/O draw are the trajectory's
+            // values at the checkpoint's start.
+            let (c_ckpt, p_io_ckpt) = if self.drifting {
+                let s_ck = self.traj.scenario_at(now);
+                (s_ck.ckpt.c, s_ck.power.p_io)
+            } else {
+                (c, pw.p_io)
+            };
+            let ckpt_rate = pw.p_static + omega * pw.p_cal + p_io_ckpt;
             let at_ckpt_start = base_progress + compute_len;
             let need = s.t_base - at_ckpt_start;
-            match phase_end(now, c, need, omega, next_fail.at) {
+            match phase_end(now, c_ckpt, need, omega, next_fail.at) {
                 PhaseEnd::Finished(dt) => {
                     res.time_checkpoint += dt;
+                    if self.drifting {
+                        res.energy += ckpt_rate * dt;
+                    }
                     now += dt;
                     break;
                 }
                 PhaseEnd::Failed(dt) => {
                     res.time_checkpoint += dt;
+                    if self.drifting {
+                        res.energy += ckpt_rate * dt;
+                    }
                     now += dt;
                     ctl.observe_uptime(dt);
                     res.work_lost += overlap + compute_len + omega * dt;
@@ -244,54 +384,119 @@ impl AdaptiveSimulator {
                         &mut next_fail,
                         &mut stream,
                     );
-                    self.reread_period(&mut ctl, &mut res, &mut period);
+                    self.reread_period(&mut ctl, &mut res, &mut period, now);
                     continue;
                 }
                 PhaseEnd::Ran => {
-                    res.time_checkpoint += c;
-                    now += c;
-                    ctl.observe_uptime(c);
+                    res.time_checkpoint += c_ckpt;
+                    if self.drifting {
+                        res.energy += ckpt_rate * c_ckpt;
+                    }
+                    now += c_ckpt;
+                    ctl.observe_uptime(c_ckpt);
                     res.n_checkpoints += 1;
                     saved = at_ckpt_start;
-                    overlap = omega * c;
-                    // The "measured" write duration is the true C.
-                    ctl.observe_checkpoint(c);
-                    self.reread_period(&mut ctl, &mut res, &mut period);
+                    overlap = omega * c_ckpt;
+                    // The "measured" write duration is the true C(t).
+                    ctl.observe_checkpoint(c_ckpt);
+                    self.reread_period(&mut ctl, &mut res, &mut period, now);
                 }
             }
         }
 
         res.makespan = now;
         res.final_period = period;
-        let p = &s.power;
-        res.energy = p.p_static * res.makespan
-            + p.p_cal * (res.time_compute + omega * res.time_checkpoint)
-            + p.p_io * (res.time_checkpoint + res.time_recovery)
-            + p.p_down * res.time_down;
+        if res.tracking_samples > 0 {
+            res.tracking_lag_pct /= res.tracking_samples as f64;
+            res.drift_lag_pct /= res.tracking_samples as f64;
+        }
+        if !self.drifting {
+            // Stationary: the original end-of-run integral, evaluated in
+            // the original association order (bit-identical to the
+            // pre-drift code; the incremental sums above would not be).
+            let p = &s.power;
+            res.energy = p.p_static * res.makespan
+                + p.p_cal * (res.time_compute + omega * res.time_checkpoint)
+                + p.p_io * (res.time_checkpoint + res.time_recovery)
+                + p.p_down * res.time_down;
+        }
         res
     }
 
-    /// Re-read the controller's period; adopt it (clamped to the true
-    /// scenario's feasible range) when it changed.
+    /// The policy's period on the true instantaneous scenario at `now`
+    /// (clamped to that scenario's feasible range) — the moving target
+    /// the tracking metrics measure against and the oracle applies.
+    fn instantaneous_target(&self, now: f64) -> Option<f64> {
+        let s_now = if self.drifting { self.traj.scenario_at(now) } else { self.cfg.scenario };
+        let p = self.cfg.policy.period(&s_now).ok()?;
+        s_now.clamp_period(p).ok()
+    }
+
+    /// The period the controller would compute with exact C/R: its own
+    /// scenario view (base powers, its μ estimate) with the true
+    /// `C(t)`/`R(t)` substituted — the μ-noise-cancelled reference
+    /// behind [`AdaptiveRunResult::drift_lag_pct`].
+    fn estimator_target(&self, ctl: &AdaptiveController, now: f64) -> Option<f64> {
+        let s = &self.cfg.scenario;
+        let s_now = if self.drifting { self.traj.scenario_at(now) } else { *s };
+        let ckpt = crate::model::params::CheckpointParams::new(
+            s_now.ckpt.c,
+            s_now.ckpt.r,
+            s.ckpt.d,
+            s.ckpt.omega,
+        )
+        .ok()?;
+        let view = Scenario::new(ckpt, s.power, ctl.mu_estimate(), s.t_base).ok()?;
+        let p = self.cfg.policy.period(&view).ok()?;
+        view.clamp_period(p).ok()
+    }
+
+    /// Re-read the period in force at a decision point (after a
+    /// completed checkpoint or a recovery): from the controller —
+    /// clamped to the *instantaneous* scenario's feasible range — or,
+    /// in oracle mode, from the true instantaneous policy period. Also
+    /// samples the tracking-lag metric against the instantaneous
+    /// target.
     fn reread_period(
         &self,
         ctl: &mut AdaptiveController,
         res: &mut AdaptiveRunResult,
         period: &mut f64,
+        now: f64,
     ) {
-        let fresh = match ctl.period() {
-            Some(p) => self.cfg.scenario.clamp_period(p).unwrap_or(*period),
-            None => *period,
+        let target = self.instantaneous_target(now);
+        let fresh = if self.cfg.oracle {
+            target.unwrap_or(*period)
+        } else {
+            let clamp_to =
+                if self.drifting { self.traj.scenario_at(now) } else { self.cfg.scenario };
+            match ctl.period() {
+                Some(p) => clamp_to.clamp_period(p).unwrap_or(*period),
+                None => *period,
+            }
         };
         if fresh != *period {
             res.n_period_updates += 1;
             *period = fresh;
         }
+        if let Some(t_star) = target {
+            res.tracking_lag_pct += ((*period - t_star) / t_star).abs() * 100.0;
+            res.tracking_samples += 1;
+            if !self.cfg.oracle {
+                // An out-of-domain estimator view (collapsing μ
+                // estimate) contributes zero gap rather than dropping
+                // the sample.
+                if let Some(t_est) = self.estimator_target(ctl, now) {
+                    res.drift_lag_pct += ((*period - t_est) / t_est).abs() * 100.0;
+                }
+            }
+        }
     }
 
     /// Downtime + recovery after a failure, mirroring the engine, with
     /// the controller observing every failure, the exposure time, and
-    /// the restore duration.
+    /// the restore duration. Under drift the recovery cost and the I/O
+    /// draw are the trajectory's values at the recovery's start.
     fn fail_and_recover(
         &self,
         ctl: &mut AdaptiveController,
@@ -300,22 +505,37 @@ impl AdaptiveSimulator {
         next_fail: &mut Failure,
         stream: &mut FailureStream,
     ) {
-        let (d, r) = (self.cfg.scenario.ckpt.d, self.cfg.scenario.ckpt.r);
+        let s = &self.cfg.scenario;
+        let (d, r_base) = (s.ckpt.d, s.ckpt.r);
+        let pw = s.power;
         res.n_failures += 1;
         ctl.observe_failure();
         *next_fail = stream.next_after(*now);
         loop {
             let d_end = *now + d;
-            let r_end = d_end + r;
+            let (r_now, p_io_rec) = if self.drifting {
+                let s_rec = self.traj.scenario_at(d_end);
+                (s_rec.ckpt.r, s_rec.power.p_io)
+            } else {
+                (r_base, pw.p_io)
+            };
+            let r_end = d_end + r_now;
             if self.cfg.failures_during_recovery && next_fail.at < r_end {
                 // Failure mid-downtime or mid-recovery: account the
                 // partial phases, then restart D + R.
                 let fail_at = next_fail.at;
                 if fail_at < d_end {
                     res.time_down += fail_at - *now;
+                    if self.drifting {
+                        res.energy += (pw.p_static + pw.p_down) * (fail_at - *now);
+                    }
                 } else {
                     res.time_down += d;
                     res.time_recovery += fail_at - d_end;
+                    if self.drifting {
+                        res.energy += (pw.p_static + pw.p_down) * d
+                            + (pw.p_static + p_io_rec) * (fail_at - d_end);
+                    }
                 }
                 ctl.observe_uptime(fail_at - *now);
                 *now = fail_at;
@@ -325,7 +545,10 @@ impl AdaptiveSimulator {
                 continue;
             }
             res.time_down += d;
-            res.time_recovery += r;
+            res.time_recovery += r_now;
+            if self.drifting {
+                res.energy += (pw.p_static + pw.p_down) * d + (pw.p_static + p_io_rec) * r_now;
+            }
             if self.cfg.failures_during_recovery {
                 // D + R is failure exposure only when failures can
                 // actually strike there; with the clock suspended it
@@ -338,8 +561,8 @@ impl AdaptiveSimulator {
             if !self.cfg.failures_during_recovery && next_fail.at < *now {
                 *next_fail = stream.next_after(*now);
             }
-            // The "measured" restore duration is the true R.
-            ctl.observe_restore(r);
+            // The "measured" restore duration is the true R(t).
+            ctl.observe_restore(r_now);
             return;
         }
     }
@@ -356,6 +579,12 @@ pub struct AdaptiveMonteCarloResult {
     pub work_lost: OnlineStats,
     pub period_updates: OnlineStats,
     pub final_period: OnlineStats,
+    /// Per-run mean tracking lag (see
+    /// [`AdaptiveRunResult::tracking_lag_pct`]).
+    pub tracking_lag: OnlineStats,
+    /// Per-run mean μ-noise-cancelled drift lag (see
+    /// [`AdaptiveRunResult::drift_lag_pct`]).
+    pub drift_lag: OnlineStats,
 }
 
 /// Run `replicates` independent adaptive sample paths. Replicate `i`
@@ -385,6 +614,8 @@ pub fn adaptive_monte_carlo(
         work_lost: OnlineStats::new(),
         period_updates: OnlineStats::new(),
         final_period: OnlineStats::new(),
+        tracking_lag: OnlineStats::new(),
+        drift_lag: OnlineStats::new(),
     };
     for r in &results {
         mc.makespan.push(r.makespan);
@@ -394,6 +625,8 @@ pub fn adaptive_monte_carlo(
         mc.work_lost.push(r.work_lost);
         mc.period_updates.push(r.n_period_updates as f64);
         mc.final_period.push(r.final_period);
+        mc.tracking_lag.push(r.tracking_lag_pct);
+        mc.drift_lag.push(r.drift_lag_pct);
     }
     mc
 }
@@ -402,6 +635,7 @@ pub fn adaptive_monte_carlo(
 mod tests {
     use super::*;
     use crate::config::presets::fig1_scenario;
+    use crate::drift::DriftTargets;
     use crate::model::energy::t_energy_opt;
     use crate::model::time::t_time_opt;
     use crate::pareto::KneeMethod;
@@ -586,5 +820,225 @@ mod tests {
             res.makespan,
             fixed.makespan
         );
+    }
+
+    // ---- drift ----------------------------------------------------------
+
+    const KNEE: PeriodPolicy = PeriodPolicy::Knee {
+        method: KneeMethod::MaxDistanceToChord,
+        backend: crate::model::Backend::FirstOrder,
+    };
+
+    fn io_ramp() -> DriftProcess {
+        DriftProcess::Ramp {
+            from_t: 0.0,
+            to_t: 5000.0,
+            to: DriftTargets { c: 2.0, r: 2.0, mu: 1.0, p_io: 2.0 },
+        }
+    }
+
+    #[test]
+    fn stationary_drift_config_is_bit_identical_to_paper() {
+        // The zero-regression contract at the config level: an explicit
+        // Stationary drift (or an identity-target shape) routes onto
+        // the exact static code path.
+        let s = fig1_scenario(300.0, 5.5);
+        let base = AdaptiveSimulator::new(AdaptiveSimConfig::paper(s, KNEE));
+        let via_drifting = AdaptiveSimulator::new(
+            AdaptiveSimConfig::paper_drifting(s, KNEE, DriftProcess::Stationary).unwrap(),
+        );
+        let identity_ramp = AdaptiveSimulator::new(
+            AdaptiveSimConfig::paper_drifting(
+                s,
+                KNEE,
+                DriftProcess::Ramp { from_t: 0.0, to_t: 100.0, to: DriftTargets::ONE },
+            )
+            .unwrap(),
+        );
+        for seed in [1u64, 42, 2013] {
+            let want = base.run(seed);
+            assert_eq!(via_drifting.run(seed), want, "seed={seed}");
+            assert_eq!(identity_ramp.run(seed), want, "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn drifting_c_grows_the_applied_period() {
+        // C ramps 10 → 20: the knee period scales ~sqrt(C), so the
+        // final period must exceed the stationary one, and the measured
+        // checkpoint time per checkpoint must reflect the stretch.
+        let s = fig1_scenario(300.0, 5.5);
+        let stationary = adaptive_monte_carlo(&AdaptiveSimConfig::paper(s, KNEE), 40, 3, 8);
+        let cfg = AdaptiveSimConfig::paper_drifting(s, KNEE, io_ramp()).unwrap();
+        let drifted = adaptive_monte_carlo(&cfg, 40, 3, 8);
+        assert!(
+            drifted.final_period.mean() > 1.2 * stationary.final_period.mean(),
+            "drifted {} !> stationary {}",
+            drifted.final_period.mean(),
+            stationary.final_period.mean()
+        );
+        // Makespan and energy both pay for the contention.
+        assert!(drifted.makespan.mean() > stationary.makespan.mean());
+        assert!(drifted.energy.mean() > stationary.energy.mean());
+    }
+
+    #[test]
+    fn drift_energy_integral_matches_phase_decomposition() {
+        // Under a C/R-only drift (P_IO untouched) the incremental
+        // energy integral must agree with the aggregate formula over
+        // the recorded phase times (association differences only).
+        let s = fig1_scenario(300.0, 5.5);
+        let drift = DriftProcess::Ramp {
+            from_t: 0.0,
+            to_t: 5000.0,
+            to: DriftTargets { c: 2.0, r: 2.0, mu: 1.0, p_io: 1.0 },
+        };
+        let cfg = AdaptiveSimConfig::paper_drifting(s, KNEE, drift).unwrap();
+        let sim = AdaptiveSimulator::new(cfg);
+        for seed in 0..8 {
+            let res = sim.run(seed);
+            let p = &s.power;
+            let manual = p.p_static * res.makespan
+                + p.p_cal * (res.time_compute + s.ckpt.omega * res.time_checkpoint)
+                + p.p_io * (res.time_checkpoint + res.time_recovery)
+                + p.p_down * res.time_down;
+            assert!(
+                rel_err(res.energy, manual) < 1e-9,
+                "seed={seed}: {} vs {manual}",
+                res.energy
+            );
+            let total =
+                res.time_compute + res.time_checkpoint + res.time_recovery + res.time_down;
+            assert!(rel_err(res.makespan, total) < 1e-9, "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn mu_decay_raises_the_failure_count() {
+        // μ ramps 300 → 120 over the run: more failures than the
+        // stationary platform, and the controller shortens the period
+        // relative to its own start (the target knee shrinks ~sqrt μ).
+        let s = fig1_scenario(300.0, 5.5);
+        let drift = DriftProcess::Ramp {
+            from_t: 0.0,
+            to_t: 5000.0,
+            to: DriftTargets { c: 1.0, r: 1.0, mu: 0.4, p_io: 1.0 },
+        };
+        let cfg = AdaptiveSimConfig::paper_drifting(s, KNEE, drift).unwrap();
+        let drifted = adaptive_monte_carlo(&cfg, 40, 9, 8);
+        let stationary = adaptive_monte_carlo(&AdaptiveSimConfig::paper(s, KNEE), 40, 9, 8);
+        assert!(
+            drifted.failures.mean() > 1.5 * stationary.failures.mean(),
+            "decaying μ must fail more: {} vs {}",
+            drifted.failures.mean(),
+            stationary.failures.mean()
+        );
+        assert!(drifted.final_period.mean() < stationary.final_period.mean());
+    }
+
+    #[test]
+    fn oracle_tracks_tighter_than_the_controller_under_drift() {
+        // The clairvoyant oracle reads the true instantaneous policy
+        // period: its tracking lag collapses to (numerically) zero and
+        // its waste is no worse than the estimating controller's, on
+        // the same seeds.
+        let s = fig1_scenario(300.0, 5.5);
+        let cfg = AdaptiveSimConfig::paper_drifting(s, KNEE, io_ramp()).unwrap();
+        let mut oracle_cfg = cfg.clone();
+        oracle_cfg.oracle = true;
+        let reps = 48;
+        let adaptive = adaptive_monte_carlo(&cfg, reps, 17, 8);
+        let oracle = adaptive_monte_carlo(&oracle_cfg, reps, 17, 8);
+        assert!(
+            oracle.tracking_lag.mean() < 1e-9,
+            "oracle lag {} != 0",
+            oracle.tracking_lag.mean()
+        );
+        assert!(
+            adaptive.tracking_lag.mean() > 0.5,
+            "controller lag {} suspiciously small under drift",
+            adaptive.tracking_lag.mean()
+        );
+        // Near the knee the frontier objectives are flat to first
+        // order, so single-axis regret is small (and can carry either
+        // sign: a low-lagging period trades time against energy). The
+        // paired runs must stay within a tight band of each other.
+        let waste_gap =
+            (adaptive.makespan.mean() - oracle.makespan.mean()) / s.t_base * 100.0;
+        assert!(waste_gap.abs() < 2.0, "waste regret {waste_gap}% out of band");
+    }
+
+    #[test]
+    fn drift_lag_shrinks_with_a_snappier_ewma() {
+        // Higher α tracks the ramped C faster; with the hysteresis band
+        // off and common random numbers (same seeds, μ-stationary drift
+        // ⇒ identical failure draws) the μ-noise-cancelled drift lag
+        // must decrease. (The *raw* tracking lag vs the true knee is
+        // dominated by the exposure estimator's sampling noise, which
+        // is α-independent — the drift figure documents the split.)
+        let s = fig1_scenario(300.0, 5.5);
+        let lag_at = |alpha: f64| {
+            let mut cfg = AdaptiveSimConfig::paper_drifting(s, KNEE, io_ramp()).unwrap();
+            cfg.alpha = alpha;
+            cfg.hysteresis = 0.0;
+            adaptive_monte_carlo(&cfg, 24, 29, 8).drift_lag.mean()
+        };
+        let slow = lag_at(0.05);
+        let mid = lag_at(0.3);
+        let fast = lag_at(0.9);
+        assert!(slow > mid && mid > fast, "drift lag not monotone: {slow} {mid} {fast}");
+        assert!(slow > 1.5 * fast, "α barely matters: {slow} vs {fast}");
+    }
+
+    #[test]
+    fn mu_only_drift_has_zero_drift_lag() {
+        // μ-only drift: C/R are stationary, the EWMA tracks them
+        // exactly, so the noise-cancelled drift lag collapses to the
+        // hysteresis floor (0 with the band off) while the raw lag
+        // stays large (the exposure estimator trails the decay).
+        let s = fig1_scenario(300.0, 5.5);
+        let drift = DriftProcess::Ramp {
+            from_t: 0.0,
+            to_t: 10_000.0,
+            to: DriftTargets { c: 1.0, r: 1.0, mu: 0.4, p_io: 1.0 },
+        };
+        let mut cfg = AdaptiveSimConfig::paper_drifting(s, KNEE, drift).unwrap();
+        cfg.hysteresis = 0.0;
+        let mc = adaptive_monte_carlo(&cfg, 24, 31, 8);
+        assert!(
+            mc.drift_lag.mean() < 1e-9,
+            "μ-only drift lag {} != 0 with the band off",
+            mc.drift_lag.mean()
+        );
+        assert!(
+            mc.tracking_lag.mean() > 5.0,
+            "raw lag {} should stay large under μ decay",
+            mc.tracking_lag.mean()
+        );
+    }
+
+    #[test]
+    fn drift_runs_are_deterministic_and_thread_invariant() {
+        let s = fig1_scenario(300.0, 5.5);
+        let cfg = AdaptiveSimConfig::paper_drifting(s, KNEE, io_ramp()).unwrap();
+        let sim = AdaptiveSimulator::new(cfg.clone());
+        assert_eq!(sim.run(7), sim.run(7));
+        let a = adaptive_monte_carlo(&cfg, 32, 7, 1);
+        let b = adaptive_monte_carlo(&cfg, 32, 7, 8);
+        assert_eq!(a.makespan.mean().to_bits(), b.makespan.mean().to_bits());
+        assert_eq!(a.energy.mean().to_bits(), b.energy.mean().to_bits());
+        assert_eq!(a.tracking_lag.mean().to_bits(), b.tracking_lag.mean().to_bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "domain")]
+    fn domain_breaking_drift_panics_at_construction() {
+        let s = fig1_scenario(300.0, 5.5);
+        let mut cfg = AdaptiveSimConfig::paper(s, PeriodPolicy::AlgoT);
+        cfg.drift = DriftProcess::Step {
+            at: 100.0,
+            to: DriftTargets { c: 1.0, r: 1.0, mu: 0.04, p_io: 1.0 },
+        };
+        let _ = AdaptiveSimulator::new(cfg);
     }
 }

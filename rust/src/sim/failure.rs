@@ -4,10 +4,16 @@
 //! (exponential inter-arrivals — §2.1). We provide that process directly
 //! (`Exponential`), the equivalent superposition of `N` per-node
 //! exponential streams (`PerNodeExponential` — used to *test* the
-//! `μ = μ_ind/N` aggregation the paper asserts), and per-node Weibull
+//! `μ = μ_ind/N` aggregation the paper asserts), per-node Weibull
 //! renewals (`PerNodeWeibull` — a robustness extension: real HPC failure
-//! logs show shape < 1, i.e. infant mortality).
+//! logs show shape < 1, i.e. infant mortality), and a **non-homogeneous
+//! exponential** process driven by a drifting environment
+//! (`DriftingExponential` — the rate `λ(t) = 1/μ(t)` follows an
+//! [`EnvTrajectory`], sampled exactly by Lewis–Shedler thinning against
+//! the trajectory's rate envelope; a μ-stationary trajectory falls back
+//! to the homogeneous sampler **bit-for-bit**).
 
+use crate::drift::EnvTrajectory;
 use crate::util::rng::Pcg64;
 
 /// Specification of a failure process.
@@ -23,6 +29,12 @@ pub enum FailureProcess {
     /// (bursty, infant-mortality-like); `shape = 1` ⇒ exponential.
     /// `scale_ind` is each node's Weibull scale parameter.
     PerNodeWeibull { n: usize, shape: f64, scale_ind: f64 },
+    /// Platform-aggregate exponential whose MTBF follows the
+    /// trajectory's `μ(t)` (wear-out decay, reconfiguration steps, …).
+    /// Sampled exactly by thinning; when the trajectory's `μ` component
+    /// is stationary this degenerates to `Exponential` at the base MTBF
+    /// with **bit-identical** draws (no acceptance draws are consumed).
+    DriftingExponential { trajectory: EnvTrajectory },
 }
 
 impl FailureProcess {
@@ -36,6 +48,9 @@ impl FailureProcess {
                 // Node mean = scale * Γ(1 + 1/shape); platform rate = n/node-mean.
                 scale_ind * gamma(1.0 + 1.0 / shape) / *n as f64
             }
+            // The *base* (t = 0 schedule-identity) MTBF; the
+            // instantaneous rate varies along the trajectory.
+            FailureProcess::DriftingExponential { trajectory } => trajectory.base().mu,
         }
     }
 
@@ -71,6 +86,24 @@ impl FailureProcess {
                     scale: *scale_ind,
                     heap,
                     streams,
+                }
+            }
+            FailureProcess::DriftingExponential { trajectory } => {
+                if trajectory.mu_is_stationary() {
+                    // Same stream tag, same draw sequence: a μ-stationary
+                    // drift run consumes failure times bit-identical to
+                    // the paper process (the common-random-numbers
+                    // contract the drift acceptance tests lean on).
+                    FailureStream::Exponential {
+                        mtbf: trajectory.base().mu,
+                        rng: rng.split(0xFA11),
+                    }
+                } else {
+                    FailureStream::Thinned {
+                        trajectory: *trajectory,
+                        mu_floor: trajectory.min_mu(),
+                        rng: rng.split(0xFA11),
+                    }
                 }
             }
         }
@@ -130,6 +163,17 @@ pub enum FailureStream {
         heap: std::collections::BinaryHeap<NextEvent>,
         streams: Vec<Pcg64>,
     },
+    /// Lewis–Shedler thinning for a non-homogeneous exponential with
+    /// rate `λ(t) = 1/μ(t)`: propose at the envelope rate `1/mu_floor`
+    /// (`mu_floor = inf_t μ(t)`, validated > 0 by [`EnvTrajectory`]),
+    /// accept each proposal at `t` with probability
+    /// `λ(t)/λ_max = mu_floor/μ(t) ∈ (0, 1]` — an exact sampler for
+    /// the inhomogeneous process, not an approximation.
+    Thinned {
+        trajectory: EnvTrajectory,
+        mu_floor: f64,
+        rng: Pcg64,
+    },
 }
 
 impl FailureStream {
@@ -160,6 +204,17 @@ impl FailureStream {
                     // Event at or before `now` (can happen after the engine
                     // fast-forwards across downtime): drop it and keep the
                     // renewal ticking.
+                }
+            }
+            FailureStream::Thinned { trajectory, mu_floor, rng } => {
+                let mut t = now;
+                loop {
+                    t += rng.exponential(*mu_floor);
+                    // Accept with λ(t)/λ_max = mu_floor/μ(t); uniform()
+                    // ∈ [0, 1) so acceptance probability 1 never rejects.
+                    if rng.uniform() < *mu_floor / trajectory.mu_at(t) {
+                        return Failure { at: t, node: 0 };
+                    }
                 }
             }
         }
@@ -286,6 +341,108 @@ mod tests {
                 now = f.at;
             }
         }
+    }
+
+    #[test]
+    fn drifting_process_with_stationary_mu_is_bit_identical_to_exponential() {
+        use crate::config::presets::fig1_scenario;
+        use crate::drift::{DriftProcess, DriftTargets, EnvTrajectory};
+        let s = fig1_scenario(300.0, 5.5);
+        // C drifts, μ does not: the sampler must fall back to the plain
+        // homogeneous stream with the same split tag.
+        let drift = DriftProcess::Ramp {
+            from_t: 0.0,
+            to_t: 5000.0,
+            to: DriftTargets { c: 2.0, r: 2.0, mu: 1.0, p_io: 2.0 },
+        };
+        let traj = EnvTrajectory::new(s, drift).unwrap();
+        let drifting = FailureProcess::DriftingExponential { trajectory: traj };
+        let paper = FailureProcess::Exponential { mtbf: s.mu };
+        let mut rng_a = Pcg64::seeded(9);
+        let mut rng_b = Pcg64::seeded(9);
+        let mut a = drifting.stream(&mut rng_a);
+        let mut b = paper.stream(&mut rng_b);
+        let mut now = 0.0;
+        for _ in 0..200 {
+            let fa = a.next_after(now);
+            let fb = b.next_after(now);
+            assert_eq!(fa.at.to_bits(), fb.at.to_bits());
+            now = fa.at;
+        }
+        assert_eq!(drifting.platform_mtbf(), 300.0);
+    }
+
+    #[test]
+    fn thinned_sampler_matches_piecewise_constant_rates() {
+        use crate::config::presets::fig1_scenario;
+        use crate::drift::{DriftProcess, DriftTargets, EnvTrajectory};
+        // μ steps from 300 to 150 at t = 50_000: the empirical rate on
+        // each side must match the local exponential rate.
+        let s = fig1_scenario(300.0, 5.5);
+        let drift = DriftProcess::Step {
+            at: 50_000.0,
+            to: DriftTargets { c: 1.0, r: 1.0, mu: 0.5, p_io: 1.0 },
+        };
+        let traj = EnvTrajectory::new(s, drift).unwrap();
+        let p = FailureProcess::DriftingExponential { trajectory: traj };
+        let mut rng = Pcg64::seeded(11);
+        let mut stream = p.stream(&mut rng);
+        let (mut before, mut after) = (0u64, 0u64);
+        let mut now = 0.0;
+        while now < 100_000.0 {
+            let f = stream.next_after(now);
+            assert!(f.at > now);
+            now = f.at;
+            if now < 50_000.0 {
+                before += 1;
+            } else if now < 100_000.0 {
+                after += 1;
+            }
+        }
+        // Expected ≈ 50_000/300 ≈ 167 and 50_000/150 ≈ 333.
+        let (b, a) = (before as f64, after as f64);
+        assert!((b - 166.7).abs() < 40.0, "before={before}");
+        assert!((a - 333.3).abs() < 60.0, "after={after}");
+        assert!(a > 1.5 * b, "rate did not double: {before} -> {after}");
+    }
+
+    #[test]
+    fn thinned_sampler_tracks_a_ramp_in_law() {
+        use crate::config::presets::fig1_scenario;
+        use crate::drift::{DriftProcess, DriftTargets, EnvTrajectory};
+        // μ ramps 300 → 120 over [0, 20_000], then holds: the total
+        // count over [0, 40_000] must match ∫ λ(t) dt.
+        let s = fig1_scenario(300.0, 5.5);
+        let drift = DriftProcess::Ramp {
+            from_t: 0.0,
+            to_t: 20_000.0,
+            to: DriftTargets { c: 1.0, r: 1.0, mu: 0.4, p_io: 1.0 },
+        };
+        let traj = EnvTrajectory::new(s, drift).unwrap();
+        let p = FailureProcess::DriftingExponential { trajectory: traj };
+        // ∫λ over the ramp: ∫ dt/μ(t), μ(t) = 300 − 9t/1000 for t in
+        // [0, 20_000] → (1000/9)·ln(300/120) ≈ 101.8; plus 20_000/120.
+        let expect = 1000.0 / 9.0 * (300.0f64 / 120.0).ln() + 20_000.0 / 120.0;
+        let mut total = 0.0f64;
+        let replicates = 40;
+        for seed in 0..replicates {
+            let mut rng = Pcg64::seeded(100 + seed);
+            let mut stream = p.stream(&mut rng);
+            let mut now = 0.0;
+            loop {
+                let f = stream.next_after(now);
+                if f.at >= 40_000.0 {
+                    break;
+                }
+                now = f.at;
+                total += 1.0;
+            }
+        }
+        let mean = total / replicates as f64;
+        assert!(
+            (mean - expect).abs() / expect < 0.05,
+            "mean={mean} expect={expect}"
+        );
     }
 
     #[test]

@@ -17,13 +17,31 @@
 //!
 //! * [`failure`] — failure processes: platform-aggregate exponential (the
 //!   paper's model), per-node exponential (superposition sanity check),
-//!   and per-node Weibull (robustness extension).
+//!   per-node Weibull (robustness extension), and the non-homogeneous
+//!   exponential over a drifting environment
+//!   ([`crate::drift::EnvTrajectory`], thinned sampling).
 //! * [`engine`] — the single-run event loop.
 //! * [`runner`] — seeded Monte-Carlo replication on the persistent pool.
 //! * [`adaptive`] — the engine with the online
 //!   [`AdaptiveController`](crate::coordinator::AdaptiveController) in
 //!   the loop: `C`/`R`/`μ` re-estimated along the sample path and the
-//!   period re-read from the policy after every checkpoint/recovery.
+//!   period re-read from the policy after every checkpoint/recovery;
+//!   drives time-varying [`crate::drift`] trajectories and records
+//!   tracking lag / clairvoyant-oracle regret.
+//!
+//! # Which failure process does the CLI simulate?
+//!
+//! Since the objective-model backend landed (PR 4), `simulate` (both
+//! the fixed-period and the `--adaptive` path) matches its failure
+//! process to the selected `--model` rather than defaulting to the
+//! *realistic* process: failures strike during the D + R window only
+//! under `--model exact` (= `exact:restarting`), while `first-order`
+//! and `exact:ideal` suspend the failure clock there — the convention
+//! `tests/sim_vs_model.rs` and [`crate::pareto::validate`] use, so the
+//! printed model columns and the Monte-Carlo columns describe the same
+//! stochastic process. Pass
+//! [`SimConfig::failures_during_recovery`] `= true` directly for the
+//! realistic process regardless of the model.
 //!
 //! # Seeding & determinism
 //!

@@ -23,6 +23,14 @@
 //!   `(C, R, μ)` along each sample path and re-reads its
 //!   [`PeriodPolicy`] — policy comparisons across scenario grids run
 //!   parallel and memo-cached like everything else.
+//! * [`CellJob::DriftRun`] — the adaptive simulator on a *drifting*
+//!   environment ([`crate::drift`]): each cell runs the estimating
+//!   controller **and** its clairvoyant oracle twin on the same seeds,
+//!   and reports tracking lag plus the oracle-relative waste/energy
+//!   regret ([`DriftSummary`]). The drift schedule and the controller
+//!   knobs (EWMA α, hysteresis band) are part of the cache key; the
+//!   seed deliberately ignores the controller knobs so an α × band
+//!   sweep is a paired (common-random-numbers) comparison.
 //!
 //! # Seeding
 //!
@@ -35,6 +43,7 @@
 //! stable when a grid is re-arranged or filtered.
 
 use crate::coordinator::policy::PeriodPolicy;
+use crate::drift::DriftProcess;
 use crate::model::backend::Backend;
 use crate::model::params::{ModelError, Scenario};
 use crate::model::ratios::{compare, Comparison};
@@ -52,8 +61,9 @@ use super::cache::CellKey;
 
 /// Bump when the evaluation semantics change (invalidates memo entries).
 /// v2: the objective-model backend joined the Frontier cell and the
-/// policy encoding.
-const KEY_VERSION: u64 = 2;
+/// policy encoding. v3: the drift layer joined the cell space (the
+/// `DriftRun` job, drifting failure processes in the key).
+const KEY_VERSION: u64 = 3;
 
 /// What to compute for one cell.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -73,6 +83,29 @@ pub enum CellJob {
     /// running `policy`, seeded with the scenario's μ as its prior
     /// ([`crate::sim::adaptive`]).
     AdaptiveRun { policy: PeriodPolicy, replicates: usize, failures_during_recovery: bool },
+    /// [`CellJob::AdaptiveRun`] on a *drifting* environment: the true
+    /// `(C, R, μ, P_IO)` follow `drift`, failures arrive from the
+    /// thinned non-homogeneous sampler (unless the cell supplies its
+    /// own [`Cell::failure`], which overrides the matched sampler — a
+    /// deliberate escape hatch for e.g. bursty per-node Weibull
+    /// failures on a drifting cost environment), and the controller
+    /// runs with the given EWMA smoothing and hysteresis band. Each
+    /// cell also runs the clairvoyant-oracle twin on the same seeds
+    /// and reports the regret ([`DriftSummary`]). With `drift =
+    /// DriftProcess::Stationary` and the default knobs the adaptive
+    /// half is **bit-identical** to `AdaptiveRun` at the same seed.
+    DriftRun {
+        policy: PeriodPolicy,
+        replicates: usize,
+        failures_during_recovery: bool,
+        drift: DriftProcess,
+        /// Controller C/R EWMA smoothing factor (`0.3` = the
+        /// `AdaptiveRun` default).
+        alpha: f64,
+        /// Controller period-space hysteresis band (`0.05` = the
+        /// `AdaptiveRun` default).
+        hysteresis: f64,
+    },
 }
 
 /// One grid cell.
@@ -139,6 +172,14 @@ pub struct AdaptiveSummary {
     pub period_updates_mean: f64,
     /// Mean period in force at the end of a run.
     pub final_period_mean: f64,
+    /// Mean per-run tracking lag against the instantaneous policy
+    /// period on the true scenario
+    /// ([`AdaptiveRunResult::tracking_lag_pct`](crate::sim::adaptive::AdaptiveRunResult)).
+    pub tracking_lag_pct_mean: f64,
+    /// Mean per-run μ-noise-cancelled drift lag
+    /// ([`AdaptiveRunResult::drift_lag_pct`](crate::sim::adaptive::AdaptiveRunResult))
+    /// — the component the EWMA α controls.
+    pub drift_lag_pct_mean: f64,
 }
 
 impl AdaptiveSummary {
@@ -154,8 +195,34 @@ impl AdaptiveSummary {
             work_lost_mean: mc.work_lost.mean(),
             period_updates_mean: mc.period_updates.mean(),
             final_period_mean: mc.final_period.mean(),
+            tracking_lag_pct_mean: mc.tracking_lag.mean(),
+            drift_lag_pct_mean: mc.drift_lag.mean(),
         }
     }
+}
+
+/// Compact, cacheable summary of one drift cell: the estimating
+/// controller's Monte-Carlo summary plus the clairvoyant-oracle twin
+/// (same seeds) and the regret between them.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftSummary {
+    /// The estimating controller's runs.
+    pub adaptive: AdaptiveSummary,
+    /// Mean makespan of the oracle twin (period re-read from the true
+    /// instantaneous scenario at the same decision points, same seeds).
+    pub oracle_makespan_mean: f64,
+    /// Mean energy of the oracle twin.
+    pub oracle_energy_mean: f64,
+    /// `(makespan − oracle_makespan)/T_base · 100`: the waste the
+    /// controller's estimation lag costs over clairvoyance. Near the
+    /// knee the frontier is flat to first order, so this is small and
+    /// can carry either sign (a low-lagging period trades time against
+    /// energy).
+    pub waste_regret_pct: f64,
+    /// `(energy − oracle_energy)/(T_base·(P_Static+P_Cal)) · 100`: the
+    /// energy-side twin of [`Self::waste_regret_pct`], normalised to
+    /// the failure-free, checkpoint-free floor.
+    pub energy_regret_pct: f64,
 }
 
 /// The outcome of one cell.
@@ -174,6 +241,11 @@ pub enum CellOutput {
     /// `None` when the scenario has no feasible period at all (the same
     /// clamp regime as `Compare`/`Frontier`).
     Adaptive(Option<AdaptiveSummary>),
+    /// `None` when the scenario has no feasible period or the drift
+    /// schedule drives it out of the model's domain (the
+    /// [`EnvTrajectory`](crate::drift::EnvTrajectory) worst-corner
+    /// gate).
+    Drift(Option<DriftSummary>),
 }
 
 impl CellOutput {
@@ -207,6 +279,15 @@ impl CellOutput {
     pub fn adaptive(&self) -> Option<&AdaptiveSummary> {
         match self {
             CellOutput::Adaptive(Some(a)) => Some(a),
+            _ => None,
+        }
+    }
+
+    /// The drift summary, when this was an in-domain
+    /// [`CellJob::DriftRun`] cell.
+    pub fn drift(&self) -> Option<&DriftSummary> {
+        match self {
+            CellOutput::Drift(Some(d)) => Some(d),
             _ => None,
         }
     }
@@ -317,6 +398,31 @@ impl GridSpec {
         })
     }
 
+    /// Append a drift cell (paper base failure process lifted onto the
+    /// trajectory's thinned sampler; see [`CellJob::DriftRun`]).
+    pub fn push_drift(
+        &mut self,
+        scenario: Scenario,
+        policy: PeriodPolicy,
+        replicates: usize,
+        drift: DriftProcess,
+        alpha: f64,
+        hysteresis: f64,
+    ) -> &mut Self {
+        self.push(Cell {
+            scenario,
+            failure: None,
+            job: CellJob::DriftRun {
+                policy,
+                replicates,
+                failures_during_recovery: true,
+                drift,
+                alpha,
+                hysteresis,
+            },
+        })
+    }
+
     /// Comparison grid over a scenario family (the figures' shape).
     pub fn compare_all(scenarios: impl IntoIterator<Item = Scenario>, base_seed: u64) -> Self {
         let mut spec = GridSpec::new(base_seed);
@@ -338,6 +444,18 @@ impl GridSpec {
     /// Exact-bits cache key for a cell (includes `base_seed` only where
     /// it matters — simulated cells).
     pub(crate) fn cell_key(&self, cell: &Cell) -> CellKey {
+        self.key_for(cell, false)
+    }
+
+    /// Shared key builder. `for_seed` builds the *seed* key: identical
+    /// to the cache key except that a [`CellJob::DriftRun`]'s controller
+    /// knobs (EWMA α, hysteresis band) are omitted — an α × band sweep
+    /// over one drift schedule then reuses the same sample paths
+    /// (common random numbers), which is what makes the drift figure's
+    /// "tracking lag decreases in α" comparison a paired one instead of
+    /// noise. Environment parameters (scenario, drift, failure process,
+    /// policy, replicate count) always enter both keys.
+    fn key_for(&self, cell: &Cell, for_seed: bool) -> CellKey {
         let mut k = Vec::with_capacity(24);
         k.push(KEY_VERSION);
         k.extend_from_slice(&cell.scenario.key_bits());
@@ -357,6 +475,10 @@ impl GridSpec {
                 k.push(*n as u64);
                 k.push(shape.to_bits());
                 k.push(scale_ind.to_bits());
+            }
+            Some(FailureProcess::DriftingExponential { trajectory }) => {
+                k.push(4);
+                k.extend_from_slice(&trajectory.key_words());
             }
         }
         match cell.job {
@@ -384,17 +506,37 @@ impl GridSpec {
                 k.push(u64::from(failures_during_recovery));
                 k.push(self.base_seed);
             }
+            CellJob::DriftRun {
+                policy,
+                replicates,
+                failures_during_recovery,
+                drift,
+                alpha,
+                hysteresis,
+            } => {
+                k.push(15);
+                k.extend_from_slice(&policy_key(policy));
+                k.push(replicates as u64);
+                k.push(u64::from(failures_during_recovery));
+                k.extend_from_slice(&drift.key_words());
+                if !for_seed {
+                    k.push(alpha.to_bits());
+                    k.push(hysteresis.to_bits());
+                }
+                k.push(self.base_seed);
+            }
         }
         k
     }
 
-    /// The seed a simulated ([`CellJob::Sim`] / [`CellJob::AdaptiveRun`])
-    /// cell derives (position-independent: hashes `base_seed` with the
-    /// cell's parameter bits).
+    /// The seed a simulated ([`CellJob::Sim`] / [`CellJob::AdaptiveRun`]
+    /// / [`CellJob::DriftRun`]) cell derives (position-independent:
+    /// hashes `base_seed` with the cell's parameter bits; see
+    /// [`Self::key_for`] for the `DriftRun` knob exclusion).
     pub fn cell_seed(&self, cell: &Cell) -> u64 {
         match cell.job {
-            CellJob::Sim { .. } | CellJob::AdaptiveRun { .. } => {
-                derive_seed(&self.cell_key(cell))
+            CellJob::Sim { .. } | CellJob::AdaptiveRun { .. } | CellJob::DriftRun { .. } => {
+                derive_seed(&self.key_for(cell, true))
             }
             _ => 0,
         }
@@ -411,7 +553,7 @@ impl GridSpec {
                     return hit;
                 }
             }
-            let out = eval_cell(cell, derive_seed(&key));
+            let out = eval_cell(cell, self.cell_seed(cell));
             if self.use_cache {
                 cache::put(key, out.clone());
             }
@@ -466,6 +608,49 @@ fn eval_cell(cell: &Cell, seed: u64) -> CellOutput {
             cfg.failures_during_recovery = failures_during_recovery;
             let mc = adaptive_monte_carlo(&cfg, replicates, seed, replicates);
             CellOutput::Adaptive(Some(AdaptiveSummary::from_mc(&mc)))
+        }
+        CellJob::DriftRun {
+            policy,
+            replicates,
+            failures_during_recovery,
+            drift,
+            alpha,
+            hysteresis,
+        } => {
+            if cell.scenario.clamp_period(cell.scenario.min_period()).is_err() {
+                return CellOutput::Drift(None);
+            }
+            // The worst-corner gate: a schedule that drives the
+            // scenario out of the model's domain clamps the cell, like
+            // every other out-of-domain regime here.
+            let mut cfg = match AdaptiveSimConfig::paper_drifting(cell.scenario, policy, drift)
+            {
+                Ok(cfg) => cfg,
+                Err(_) => return CellOutput::Drift(None),
+            };
+            if let Some(f) = cell.failure.clone() {
+                cfg.failure = f;
+            }
+            cfg.failures_during_recovery = failures_during_recovery;
+            cfg.alpha = alpha;
+            cfg.hysteresis = hysteresis;
+            let mc = adaptive_monte_carlo(&cfg, replicates, seed, replicates);
+            // The clairvoyant twin: same seeds (and, for μ-stationary
+            // schedules, bit-identical failure draws), period re-read
+            // from the true instantaneous scenario.
+            let mut oracle_cfg = cfg.clone();
+            oracle_cfg.oracle = true;
+            let omc = adaptive_monte_carlo(&oracle_cfg, replicates, seed, replicates);
+            let s = &cell.scenario;
+            let e_floor = s.t_base * (s.power.p_static + s.power.p_cal);
+            CellOutput::Drift(Some(DriftSummary {
+                adaptive: AdaptiveSummary::from_mc(&mc),
+                oracle_makespan_mean: omc.makespan.mean(),
+                oracle_energy_mean: omc.energy.mean(),
+                waste_regret_pct: (mc.makespan.mean() - omc.makespan.mean()) / s.t_base
+                    * 100.0,
+                energy_regret_pct: (mc.energy.mean() - omc.energy.mean()) / e_floor * 100.0,
+            }))
         }
     }
 }
@@ -762,6 +947,124 @@ mod tests {
         g.push_adaptive(s, knee(Backend::Exact(crate::model::RecoveryModel::Ideal)), 32);
         assert_ne!(c.cell_key(&c.cells()[0]), g.cell_key(&g.cells()[0]));
         assert_ne!(c.cell_seed(&c.cells()[0]), g.cell_seed(&g.cells()[0]));
+    }
+
+    fn knee() -> PeriodPolicy {
+        PeriodPolicy::Knee {
+            method: KneeMethod::MaxDistanceToChord,
+            backend: Backend::FirstOrder,
+        }
+    }
+
+    fn io_ramp() -> crate::drift::DriftProcess {
+        crate::drift::DriftProcess::Ramp {
+            from_t: 0.0,
+            to_t: 5000.0,
+            to: crate::drift::DriftTargets { c: 2.0, r: 2.0, mu: 1.0, p_io: 2.0 },
+        }
+    }
+
+    #[test]
+    fn stationary_drift_cells_match_adaptive_run_bitwise() {
+        // The grid-level zero-regression guarantee: a DriftRun cell
+        // with a Stationary schedule and the AdaptiveRun defaults
+        // produces the same adaptive summary fields as the plain
+        // adaptive Monte-Carlo at the drift cell's own seed.
+        let s = scenario();
+        let mut spec = GridSpec::new(91);
+        spec.push_drift(s, knee(), 24, DriftProcess::Stationary, 0.3, 0.05);
+        let spec = spec.without_cache();
+        let seed = spec.cell_seed(&spec.cells()[0]);
+        assert_ne!(seed, 0);
+        let results = spec.evaluate();
+        let sum = results[0].output.drift().expect("in domain");
+
+        let cfg = AdaptiveSimConfig::paper(s, knee());
+        let direct = adaptive_monte_carlo(&cfg, 24, seed, 1);
+        assert_eq!(sum.adaptive.makespan_mean.to_bits(), direct.makespan.mean().to_bits());
+        assert_eq!(sum.adaptive.energy_mean.to_bits(), direct.energy.mean().to_bits());
+        assert_eq!(
+            sum.adaptive.final_period_mean.to_bits(),
+            direct.final_period.mean().to_bits()
+        );
+        assert_eq!(sum.adaptive.replicates, 24);
+    }
+
+    #[test]
+    fn drift_cell_keys_distinguish_schedule_and_knobs_but_seed_ignores_knobs() {
+        let s = scenario();
+        let mk = |drift, alpha, hyst| {
+            let mut g = GridSpec::new(5);
+            g.push_drift(s, knee(), 16, drift, alpha, hyst);
+            g
+        };
+        let base = mk(io_ramp(), 0.3, 0.05);
+        let other_drift = mk(io_ramp().time_scaled(4.0), 0.3, 0.05);
+        let other_alpha = mk(io_ramp(), 0.9, 0.05);
+        let other_band = mk(io_ramp(), 0.3, 0.0);
+        let key = |g: &GridSpec| g.cell_key(&g.cells()[0]);
+        let seed = |g: &GridSpec| g.cell_seed(&g.cells()[0]);
+        // The schedule is environment: different cache key AND seed.
+        assert_ne!(key(&base), key(&other_drift));
+        assert_ne!(seed(&base), seed(&other_drift));
+        // The controller knobs are not environment: different cache
+        // key, same seed (paired α × band sweeps).
+        assert_ne!(key(&base), key(&other_alpha));
+        assert_ne!(key(&base), key(&other_band));
+        assert_eq!(seed(&base), seed(&other_alpha));
+        assert_eq!(seed(&base), seed(&other_band));
+        // And a DriftRun never aliases an AdaptiveRun cell.
+        let mut adaptive = GridSpec::new(5);
+        adaptive.push_adaptive(s, knee(), 16);
+        assert_ne!(key(&base), adaptive.cell_key(&adaptive.cells()[0]));
+    }
+
+    #[test]
+    fn drift_cells_report_lag_and_bounded_regret() {
+        let s = scenario();
+        let mut spec = GridSpec::new(7);
+        spec.push_drift(s, knee(), 24, io_ramp(), 0.3, 0.05);
+        let out = spec.evaluate();
+        let sum = out[0].output.drift().expect("in domain");
+        assert!(
+            sum.adaptive.tracking_lag_pct_mean > 0.5,
+            "lag {} suspiciously small under a 2x C ramp",
+            sum.adaptive.tracking_lag_pct_mean
+        );
+        assert!(sum.waste_regret_pct.abs() < 3.0, "waste regret {}", sum.waste_regret_pct);
+        // Energy regret on the io-heavy ramp is genuinely large: the
+        // estimator's period wobble keeps paying the doubled I/O draw
+        // (the mirror puts it ~+20pp of the energy floor).
+        assert!(
+            sum.energy_regret_pct > -10.0 && sum.energy_regret_pct < 45.0,
+            "energy regret {}",
+            sum.energy_regret_pct
+        );
+        assert!(
+            sum.adaptive.drift_lag_pct_mean > 0.1,
+            "drift lag {} suspiciously small under a 2x C ramp",
+            sum.adaptive.drift_lag_pct_mean
+        );
+        assert!(sum.oracle_makespan_mean > s.t_base);
+        // Memoised like everything else.
+        let again = spec.evaluate();
+        assert_eq!(out, again);
+    }
+
+    #[test]
+    fn drift_out_of_domain_schedule_is_none() {
+        // μ decaying to 4%: the trajectory's worst corner leaves the
+        // domain, so the cell clamps instead of panicking.
+        let s = scenario();
+        let bad = crate::drift::DriftProcess::Step {
+            at: 100.0,
+            to: crate::drift::DriftTargets { c: 1.0, r: 1.0, mu: 0.04, p_io: 1.0 },
+        };
+        let mut spec = GridSpec::new(1);
+        spec.push_drift(s, PeriodPolicy::AlgoT, 8, bad, 0.3, 0.05);
+        let out = spec.without_cache().evaluate();
+        assert!(matches!(out[0].output, CellOutput::Drift(None)));
+        assert_eq!(out[0].output.drift(), None);
     }
 
     #[test]

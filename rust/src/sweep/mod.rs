@@ -39,4 +39,6 @@
 pub mod cache;
 pub mod grid;
 
-pub use grid::{AdaptiveSummary, Cell, CellJob, CellOutput, CellResult, GridSpec, SimSummary};
+pub use grid::{
+    AdaptiveSummary, Cell, CellJob, CellOutput, CellResult, DriftSummary, GridSpec, SimSummary,
+};

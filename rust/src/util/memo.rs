@@ -13,6 +13,13 @@
 //! heavyweight sibling: structured values, hit/miss counters, tunable
 //! capacity.)
 //!
+//! Each memo carries hit/miss/clear counters ([`PureMemo::stats`],
+//! mirroring `sweep::cache::stats`): drift trajectories re-key the
+//! online memo far more often than stationary runs (every distinct
+//! quantised `(C, R, μ)` along the schedule is an entry), and the
+//! `info` subcommand surfaces the churn instead of leaving it
+//! invisible.
+//!
 //! Because values are pure functions of their keys, which thread (or
 //! concurrently running grid cell) fills an entry first cannot change
 //! the value anyone reads — the property every thread-count-invariance
@@ -21,18 +28,51 @@
 use std::collections::HashMap;
 use std::convert::Infallible;
 use std::hash::Hash;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
+
+/// Counter snapshot of one [`PureMemo`] (since process start).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct MemoStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// Wholesale capacity clears — the churn signal: a non-zero count
+    /// means the working set outgrew the memo and entries are being
+    /// recomputed.
+    pub clears: u64,
+}
+
+impl MemoStats {
+    /// Hit fraction in `[0, 1]` (`0` before any lookup).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
 
 /// A capacity-bounded memo for a pure `K -> f64` function.
 pub struct PureMemo<K> {
     map: OnceLock<Mutex<HashMap<K, f64>>>,
     capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    clears: AtomicU64,
 }
 
 impl<K: Eq + Hash + Copy> PureMemo<K> {
     /// Const-constructible so instances can live in `static`s.
     pub const fn new(capacity: usize) -> Self {
-        PureMemo { map: OnceLock::new(), capacity }
+        PureMemo {
+            map: OnceLock::new(),
+            capacity,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            clears: AtomicU64::new(0),
+        }
     }
 
     fn map(&self) -> &Mutex<HashMap<K, f64>> {
@@ -40,21 +80,26 @@ impl<K: Eq + Hash + Copy> PureMemo<K> {
     }
 
     /// Cached value for `key`, computing (and caching) it on a miss.
-    /// `compute` errors pass through and nothing is cached.
+    /// `compute` errors pass through and nothing is cached (errors do
+    /// not count as misses either: the counters track memo behaviour,
+    /// not domain validity).
     pub fn get_or_try_compute<E>(
         &self,
         key: K,
         compute: impl FnOnce() -> Result<f64, E>,
     ) -> Result<f64, E> {
         if let Some(&v) = self.map().lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(v);
         }
         // Compute outside the lock: a concurrent miss on the same key
         // just recomputes the same pure value.
         let v = compute()?;
+        self.misses.fetch_add(1, Ordering::Relaxed);
         let mut m = self.map().lock().unwrap();
         if m.len() >= self.capacity {
             m.clear();
+            self.clears.fetch_add(1, Ordering::Relaxed);
         }
         m.insert(key, v);
         Ok(v)
@@ -73,6 +118,15 @@ impl<K: Eq + Hash + Copy> PureMemo<K> {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Hit/miss/clear counters since process start.
+    pub fn stats(&self) -> MemoStats {
+        MemoStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            clears: self.clears.load(Ordering::Relaxed),
+        }
     }
 }
 
@@ -95,6 +149,9 @@ mod tests {
         assert_eq!(a.to_bits(), b.to_bits());
         assert_eq!(a, 42.0);
         assert_eq!(calls, 1);
+        let st = MEMO.stats();
+        assert_eq!((st.hits, st.misses, st.clears), (1, 1, 0));
+        assert!((st.hit_rate() - 0.5).abs() < 1e-12);
     }
 
     #[test]
@@ -102,22 +159,28 @@ mod tests {
         static MEMO: PureMemo<u64> = PureMemo::new(16);
         let r: Result<f64, &str> = MEMO.get_or_try_compute(7, || Err("nope"));
         assert_eq!(r, Err("nope"));
+        // Errors are neither hits nor misses.
+        assert_eq!(MEMO.stats(), MemoStats::default());
         // The failed key is not cached; a later success fills it.
         let v = MEMO.get_or_try_compute::<&str>(7, || Ok(3.5)).unwrap();
         assert_eq!(v, 3.5);
+        assert_eq!(MEMO.stats().misses, 1);
     }
 
     #[test]
-    fn capacity_overflow_clears_wholesale() {
+    fn capacity_overflow_clears_wholesale_and_counts() {
         static MEMO: PureMemo<u64> = PureMemo::new(4);
         for k in 0..4 {
             MEMO.get_or_compute(k, || k as f64);
         }
         assert_eq!(MEMO.len(), 4);
+        assert_eq!(MEMO.stats().clears, 0);
         // At capacity the next insert clears first.
         MEMO.get_or_compute(100, || 100.0);
         assert_eq!(MEMO.len(), 1);
+        assert_eq!(MEMO.stats().clears, 1);
         // Cleared entries simply recompute.
         assert_eq!(MEMO.get_or_compute(0, || -1.0), -1.0);
+        assert_eq!(MEMO.stats().misses, 6);
     }
 }

@@ -86,6 +86,7 @@ fn figures_generates_csvs() {
     assert!(out.contains("frontier knee"), "{out}");
     assert!(out.contains("knee drift"), "{out}");
     assert!(out.contains("adaptive knee"), "{out}");
+    assert!(out.contains("drift tracking"), "{out}");
     for f in [
         "fig1.csv",
         "fig2.csv",
@@ -95,6 +96,7 @@ fn figures_generates_csvs() {
         "frontier_knees.csv",
         "knee_drift.csv",
         "adaptive.csv",
+        "drift.csv",
     ] {
         assert!(dir.join(f).exists(), "missing {f}");
     }
@@ -273,6 +275,97 @@ fn simulate_adaptive_knee_runs_end_to_end() {
         "16",
     ]);
     assert!(out.contains("policy eps-time"), "{out}");
+}
+
+#[test]
+fn simulate_drift_runs_end_to_end() {
+    // A preset name and the raw grammar both drive the drift path, and
+    // the table carries the tracking/regret rows.
+    let out = run_ok(&[
+        "simulate",
+        "--adaptive",
+        "--policy",
+        "knee",
+        "--drift",
+        "ramp:0:5000:c=2,r=2,io=2",
+        "--replicates",
+        "16",
+        "--seed",
+        "3",
+    ]);
+    assert!(out.contains("adaptive drift simulation: policy knee"), "{out}");
+    assert!(out.contains("drift ramp:0:5000"), "{out}");
+    assert!(out.contains("tracking_lag_pct"), "{out}");
+    assert!(out.contains("waste_regret_pct"), "{out}");
+    let out = run_ok(&[
+        "simulate",
+        "--adaptive",
+        "--policy",
+        "knee",
+        "--drift",
+        "io-ramp",
+        "--alpha",
+        "0.5",
+        "--hysteresis",
+        "0.02",
+        "--replicates",
+        "12",
+    ]);
+    assert!(out.contains("alpha 0.5, band 0.02"), "{out}");
+}
+
+#[test]
+fn drift_and_knob_flags_are_validated() {
+    // Bad drift specs surface the full grammar, like --policy/--model.
+    for bad in ["bogus-preset", "ramp:5000:0:c=2", "step:100:c=0", "contention:0:0.5:c=2"] {
+        let out = bin()
+            .args(["simulate", "--adaptive", "--drift", bad])
+            .output()
+            .unwrap();
+        assert!(!out.status.success(), "{bad} accepted");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("drift"), "{bad}: {err}");
+        assert!(err.contains("stationary|step:"), "{bad}: grammar missing from {err}");
+        assert!(err.contains("io-ramp"), "{bad}: presets missing from {err}");
+    }
+    // The knobs obey the Ewma / hysteresis contracts.
+    for (flag, bad) in [("--alpha", "0"), ("--alpha", "1.5"), ("--hysteresis", "-0.1")] {
+        let out = bin()
+            .args(["simulate", "--adaptive", flag, bad, "--replicates", "4"])
+            .output()
+            .unwrap();
+        assert!(!out.status.success(), "{flag} {bad} accepted");
+        assert!(
+            String::from_utf8_lossy(&out.stderr).contains("invalid value"),
+            "{flag} {bad}"
+        );
+    }
+    // Controller knobs without --adaptive are a clear error, not a
+    // silent no-op.
+    let out = bin()
+        .args(["simulate", "--drift", "io-ramp", "--replicates", "4"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--adaptive"));
+    // train validates the same knobs before touching any runtime.
+    let out = bin().args(["train", "--drift", "nope"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("drift"));
+    // train runs in wall-clock seconds: the minute-authored presets
+    // are rejected with a units hint, not silently run ~60x too fast.
+    let out = bin().args(["train", "--drift", "mu-decay"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("seconds"), "{err}");
+}
+
+#[test]
+fn info_reports_memo_counters() {
+    let out = run_ok(&["info"]);
+    assert!(out.contains("memo caches"), "{out}");
+    assert!(out.contains("online policy memo"), "{out}");
+    assert!(out.contains("exact optima memo"), "{out}");
 }
 
 #[test]

@@ -1,0 +1,246 @@
+//! Acceptance tests of the non-stationary drift layer (ISSUE 5):
+//!
+//! (a) **zero regression** — with a `Stationary` drift process the
+//!     adaptive simulator and `CellJob::DriftRun` grid cells are
+//!     **bit-identical** to the static path, across thread counts, for
+//!     every trade-off preset;
+//! (b) drift runs are deterministic and byte-identical across thread
+//!     counts, directly and through grid cells;
+//! (c) the α × band sweep is seed-paired (common random numbers): the
+//!     drift-cell seed ignores the controller knobs but not the
+//!     schedule;
+//! (d) the oracle twin pins the tracking metrics: zero lag for the
+//!     clairvoyant period, bounded regret for the estimating
+//!     controller.
+
+use ckpt_period::config::presets::{drift_preset, tradeoff_presets};
+use ckpt_period::coordinator::PeriodPolicy;
+use ckpt_period::drift::{DriftProcess, DriftTargets, EnvTrajectory};
+use ckpt_period::model::Backend;
+use ckpt_period::pareto::KneeMethod;
+use ckpt_period::sim::adaptive::{adaptive_monte_carlo, AdaptiveSimConfig, AdaptiveSimulator};
+use ckpt_period::sweep::GridSpec;
+
+const KNEE: PeriodPolicy = PeriodPolicy::Knee {
+    method: KneeMethod::MaxDistanceToChord,
+    backend: Backend::FirstOrder,
+};
+
+fn io_ramp() -> DriftProcess {
+    drift_preset("io-ramp").expect("preset exists")
+}
+
+#[test]
+fn a_stationary_trajectory_is_bit_identical_on_every_preset() {
+    // The tentpole's zero-regression guarantee, per trade-off preset:
+    // the drift machinery with a Stationary schedule produces the same
+    // bits as the static path — for single runs, Monte-Carlo
+    // aggregates at both thread counts, and grid cells.
+    for (label, s) in tradeoff_presets() {
+        let static_cfg = AdaptiveSimConfig::paper(s, KNEE);
+        let drift_cfg =
+            AdaptiveSimConfig::paper_drifting(s, KNEE, DriftProcess::Stationary).unwrap();
+
+        // Single sample paths.
+        let a = AdaptiveSimulator::new(static_cfg.clone());
+        let b = AdaptiveSimulator::new(drift_cfg.clone());
+        for seed in [1u64, 2013] {
+            assert_eq!(a.run(seed), b.run(seed), "{label} seed={seed}");
+        }
+
+        // Monte-Carlo, serial vs pooled, static vs drifting config.
+        let mc_static = adaptive_monte_carlo(&static_cfg, 24, 7, 1);
+        for (what, mc) in [
+            ("drift serial", adaptive_monte_carlo(&drift_cfg, 24, 7, 1)),
+            ("drift pooled", adaptive_monte_carlo(&drift_cfg, 24, 7, 8)),
+            ("static pooled", adaptive_monte_carlo(&static_cfg, 24, 7, 8)),
+        ] {
+            assert_eq!(
+                mc.makespan.mean().to_bits(),
+                mc_static.makespan.mean().to_bits(),
+                "{label}: {what} makespan"
+            );
+            assert_eq!(
+                mc.energy.mean().to_bits(),
+                mc_static.energy.mean().to_bits(),
+                "{label}: {what} energy"
+            );
+            assert_eq!(
+                mc.final_period.mean().to_bits(),
+                mc_static.final_period.mean().to_bits(),
+                "{label}: {what} final period"
+            );
+        }
+
+        // Grid cells: a Stationary DriftRun's adaptive half equals the
+        // plain adaptive Monte-Carlo at the drift cell's own seed.
+        let mut spec = GridSpec::new(42);
+        spec.push_drift(s, KNEE, 24, DriftProcess::Stationary, 0.3, 0.05);
+        let seed = spec.cell_seed(&spec.cells()[0]);
+        let results = spec.evaluate();
+        let sum = results[0].output.drift().unwrap_or_else(|| panic!("{label}: out of domain"));
+        let direct = adaptive_monte_carlo(&static_cfg, 24, seed, 1);
+        assert_eq!(
+            sum.adaptive.makespan_mean.to_bits(),
+            direct.makespan.mean().to_bits(),
+            "{label}: grid cell makespan"
+        );
+        assert_eq!(
+            sum.adaptive.energy_mean.to_bits(),
+            direct.energy.mean().to_bits(),
+            "{label}: grid cell energy"
+        );
+        assert_eq!(
+            sum.adaptive.final_period_mean.to_bits(),
+            direct.final_period.mean().to_bits(),
+            "{label}: grid cell final period"
+        );
+        // Bit-stable on re-evaluation (memo) too.
+        assert_eq!(results, spec.evaluate(), "{label}");
+    }
+}
+
+#[test]
+fn b_drift_runs_are_thread_count_invariant() {
+    let (_, s) = tradeoff_presets().into_iter().next().unwrap();
+    for (name, drift) in [
+        ("io-ramp", io_ramp()),
+        ("mu-decay", drift_preset("mu-decay").unwrap()),
+        ("contention-burst", drift_preset("contention-burst").unwrap()),
+    ] {
+        let cfg = AdaptiveSimConfig::paper_drifting(s, KNEE, drift).unwrap();
+        let serial = adaptive_monte_carlo(&cfg, 32, 7, 1);
+        let pooled = adaptive_monte_carlo(&cfg, 32, 7, 8);
+        assert_eq!(
+            serial.makespan.mean().to_bits(),
+            pooled.makespan.mean().to_bits(),
+            "{name}"
+        );
+        assert_eq!(serial.energy.mean().to_bits(), pooled.energy.mean().to_bits(), "{name}");
+        assert_eq!(
+            serial.tracking_lag.mean().to_bits(),
+            pooled.tracking_lag.mean().to_bits(),
+            "{name}"
+        );
+        assert_eq!(
+            serial.drift_lag.mean().to_bits(),
+            pooled.drift_lag.mean().to_bits(),
+            "{name}"
+        );
+
+        // And through a grid cell at its derived seed.
+        let mut spec = GridSpec::new(2013);
+        spec.push_drift(s, KNEE, 32, drift, 0.3, 0.05);
+        let seed = spec.cell_seed(&spec.cells()[0]);
+        let sum = *spec.evaluate()[0].output.drift().expect("in domain");
+        let direct = adaptive_monte_carlo(&cfg, 32, seed, 1);
+        assert_eq!(
+            sum.adaptive.makespan_mean.to_bits(),
+            direct.makespan.mean().to_bits(),
+            "{name}: cell vs direct"
+        );
+        assert_eq!(
+            sum.adaptive.tracking_lag_pct_mean.to_bits(),
+            direct.tracking_lag.mean().to_bits(),
+            "{name}: cell vs direct lag"
+        );
+    }
+}
+
+#[test]
+fn c_alpha_band_sweep_is_seed_paired_but_schedules_are_not() {
+    let (_, s) = tradeoff_presets().into_iter().next().unwrap();
+    let seed_of = |drift, alpha, hysteresis| {
+        let mut spec = GridSpec::new(5);
+        spec.push_drift(s, KNEE, 16, drift, alpha, hysteresis);
+        spec.cell_seed(&spec.cells()[0])
+    };
+    // The knob axes reuse the seed (paired comparisons)…
+    let s1 = seed_of(io_ramp(), 0.05, 0.0);
+    assert_eq!(s1, seed_of(io_ramp(), 0.9, 0.0));
+    assert_eq!(s1, seed_of(io_ramp(), 0.05, 0.1));
+    // …while the schedule is environment: a fresh seed.
+    assert_ne!(s1, seed_of(io_ramp().time_scaled(4.0), 0.05, 0.0));
+    // (Cache-key distinctness across the knob axes is covered by the
+    // grid module's unit tests — the key is crate-private.)
+    // Seed-pairing is what makes the α axis a CRN comparison: the two
+    // cells below share failure randomness, so their drift-lag gap is
+    // the EWMA effect, not noise.
+    let run = |alpha: f64| {
+        let mut cfg = AdaptiveSimConfig::paper_drifting(s, KNEE, io_ramp()).unwrap();
+        cfg.alpha = alpha;
+        cfg.hysteresis = 0.0;
+        adaptive_monte_carlo(&cfg, 24, s1, 1)
+    };
+    let slow = run(0.05);
+    let fast = run(0.9);
+    assert!(
+        slow.drift_lag.mean() > fast.drift_lag.mean(),
+        "paired drift lag not ordered: {} vs {}",
+        slow.drift_lag.mean(),
+        fast.drift_lag.mean()
+    );
+    // Same environment, same seeds: the failure counts stay close (the
+    // paths diverge only through the period feedback).
+    let (a, b) = (slow.failures.mean(), fast.failures.mean());
+    assert!((a - b).abs() / a < 0.25, "CRN failure counts far apart: {a} vs {b}");
+}
+
+#[test]
+fn d_oracle_pins_the_tracking_metrics_per_family() {
+    let (_, s) = tradeoff_presets().into_iter().next().unwrap();
+    for (name, drift) in [
+        ("io-ramp", io_ramp()),
+        ("mu-decay", drift_preset("mu-decay").unwrap()),
+        ("step-reconfig", drift_preset("step-reconfig").unwrap()),
+    ] {
+        let cfg = AdaptiveSimConfig::paper_drifting(s, KNEE, drift).unwrap();
+        let mut oracle_cfg = cfg.clone();
+        oracle_cfg.oracle = true;
+        let adaptive = adaptive_monte_carlo(&cfg, 32, 11, 8);
+        let oracle = adaptive_monte_carlo(&oracle_cfg, 32, 11, 8);
+        assert!(
+            oracle.tracking_lag.mean() < 1e-9,
+            "{name}: oracle lag {}",
+            oracle.tracking_lag.mean()
+        );
+        assert!(
+            adaptive.tracking_lag.mean() > 1.0,
+            "{name}: controller lag {} suspiciously small",
+            adaptive.tracking_lag.mean()
+        );
+        // The paired waste gap stays in a tight band (the knee is a
+        // forgiving operating point; μ-decay pays the most because the
+        // estimator trails the rising failure rate).
+        let regret =
+            (adaptive.makespan.mean() - oracle.makespan.mean()) / s.t_base * 100.0;
+        assert!((-2.0..10.0).contains(&regret), "{name}: waste regret {regret}%");
+    }
+}
+
+#[test]
+fn e_drift_trajectory_views_are_quantisable_like_static_scenarios() {
+    // The scenario-at-time views feed the same quantised online memo
+    // as static scenarios: sub-0.1% neighbours on the trajectory map
+    // to the same knee period, bitwise.
+    use ckpt_period::pareto::online::knee_period;
+    let (_, s) = tradeoff_presets().into_iter().next().unwrap();
+    let traj = EnvTrajectory::new(
+        s,
+        DriftProcess::Ramp {
+            from_t: 0.0,
+            to_t: 10_000.0,
+            to: DriftTargets { c: 2.0, r: 2.0, mu: 1.0, p_io: 1.0 },
+        },
+    )
+    .unwrap();
+    let a = traj.scenario_at(5000.0);
+    let b = traj.scenario_at(5001.0); // C moves by 0.01% — same quantum
+    let ka = knee_period(&a, KneeMethod::MaxDistanceToChord, Backend::FirstOrder).unwrap();
+    let kb = knee_period(&b, KneeMethod::MaxDistanceToChord, Backend::FirstOrder).unwrap();
+    assert_eq!(ka.to_bits(), kb.to_bits());
+    // A full-quantum step lands on a different knee.
+    let c = traj.scenario_at(7500.0);
+    let kc = knee_period(&c, KneeMethod::MaxDistanceToChord, Backend::FirstOrder).unwrap();
+    assert!(kc > ka, "knee must grow with C: {kc} vs {ka}");
+}
