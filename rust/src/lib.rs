@@ -67,6 +67,29 @@
 //! memo-cached, and `figures::drift` sweeps EWMA α × hysteresis band ×
 //! drift speed per drift family into `drift.csv`. With a stationary
 //! process every consumer is bit-identical to the static path.
+//!
+//! # Policy-as-a-service
+//!
+//! [`serve`] turns the solver into a long-lived query service. Clients
+//! stream JSON-lines queries — one object per line naming a scenario
+//! (trade-off preset or inline [`config::ScenarioSpec`] params), a
+//! policy, a model backend, and optionally a drift schedule plus a
+//! trajectory time `at` — into `ckpt-period batch` (stdin, a file, or
+//! a Unix socket); answers come back one JSON line each, in input
+//! order, carrying the chosen period, both objective columns, the
+//! backend's per-objective optima and the knee's overhead/gain
+//! metadata. Malformed lines become structured `{"line", "error"}`
+//! records on stderr without killing the stream or shifting line
+//! numbers; batches deduplicate by exact solve-key bits, fan out on
+//! the grid engine's thread pool, and serve repeats from a
+//! process-wide answer cache, so batch answers are **bit-identical to
+//! sequential policy calls at every thread count**. Batches can also
+//! be written as a fixed-offset binary artifact ([`serve::wire`]) for
+//! zero-copy consumers. `ckpt-period bench` runs the standardised
+//! serving workload (cold/warm memo latency, queries/sec at 1/4/8
+//! threads, grid cell throughput) and emits the repo-root
+//! `BENCH_<n>.json` perf trajectory; see the [`serve`] module docs for
+//! the full protocol (grammar, error records, backpressure).
 
 pub mod cli;
 pub mod config;
@@ -77,6 +100,7 @@ pub mod figures;
 pub mod model;
 pub mod pareto;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod sweep;
 pub mod util;

@@ -9,9 +9,12 @@
 //! * `simulate`  — Monte-Carlo validation of the model on a scenario
 //! * `figures`   — regenerate every paper figure as CSV + JSON
 //! * `train`     — run the fault-tolerant training coordinator (PJRT)
+//! * `batch`     — answer a JSON-lines stream of scenario queries
+//!   (stdin, file, or Unix socket) through the batched serve engine
+//! * `bench`     — standardised serving benchmark -> `BENCH_<n>.json`
 //! * `info`      — artifact inventory
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use ckpt_period::cli::{ArgSpec, Args, CliError};
 use ckpt_period::config::presets::{
@@ -31,12 +34,14 @@ use ckpt_period::pareto::{
     family_frontiers, min_energy_with_time_overhead, min_time_with_energy_overhead, validate,
     EpsSolution, Frontier, FrontierPoint, Knee, KneeMethod,
 };
-use ckpt_period::runtime::{write_json_artifact, ArtifactDir, Runtime};
+use ckpt_period::runtime::{write_binary_artifact, write_json_artifact, ArtifactDir, Runtime};
+use ckpt_period::serve::{Answer, BatchEngine, ErrorRecord, Query};
 use ckpt_period::sweep::{Cell, CellJob, CellOutput, GridSpec};
 use ckpt_period::util::json::Json;
 use ckpt_period::util::table::{fnum, Table};
 
-const USAGE: &str = "ckpt-period <optimize|sweep|pareto|simulate|figures|train|info> [flags]
+const USAGE: &str =
+    "ckpt-period <optimize|sweep|pareto|simulate|figures|train|batch|bench|info> [flags]
 Reproduction of Aupy et al., 'Optimal Checkpointing Period: Time vs. Energy' (2013).
 
   optimize  optimal periods + time/energy trade-off for a scenario
@@ -64,6 +69,16 @@ Reproduction of Aupy et al., 'Optimal Checkpointing Period: Time vs. Energy' (20
   train     fault-tolerant PJRT training run (--model as in simulate;
             --adaptive takes --alpha/--hysteresis, and --drift scales
             the failure injector's MTBF along the schedule)
+  batch     answer a JSON-lines stream of scenario queries (stdin via
+            --in -, a file, or --socket <path>): each line names a
+            scenario (preset or inline params), a policy, a model
+            backend, optional drift and a trajectory time `at`; answers
+            stream to stdout in input order, malformed lines become
+            {\"line\",\"error\"} records on stderr without killing the
+            stream (see the serve module docs for the full protocol)
+  bench     standardised serving benchmark (cold/warm memo latency,
+            queries/sec at 1/4/8 threads, grid-engine cell throughput)
+            -> BENCH_<n>.json at the repo root (--quick for CI)
   info      artifact inventory + memo-cache counters
 
 Run a subcommand with --help for its flags.";
@@ -77,6 +92,8 @@ fn main() {
         Some("simulate") => run(cmd_simulate(&argv[1..])),
         Some("figures") => run(cmd_figures(&argv[1..])),
         Some("train") => run(cmd_train(&argv[1..])),
+        Some("batch") => run(cmd_batch(&argv[1..])),
+        Some("bench") => run(cmd_bench(&argv[1..])),
         Some("info") => run(cmd_info(&argv[1..])),
         Some("--help") | Some("-h") | None => {
             println!("{USAGE}");
@@ -1099,6 +1116,11 @@ fn print_memo_stats() {
         opt.clears,
         opt.hit_rate() * 100.0
     );
+    let (serve_hits, serve_misses) = ckpt_period::serve::answer_cache_stats();
+    println!(
+        "  serve answer cache: {} entries, {serve_hits} hits / {serve_misses} misses",
+        ckpt_period::serve::answer_cache_len()
+    );
 }
 
 fn cmd_train(argv: &[String]) -> Result<(), String> {
@@ -1186,6 +1208,235 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
         std::fs::write(out, report.to_json().to_string_pretty()).map_err(|e| e.to_string())?;
         println!("report written to {out}");
     }
+    Ok(())
+}
+
+/// One answered batch, ready for any transport: answer/error JSON lines
+/// tagged with their input line numbers, plus the binary wire encoding.
+struct BatchOutcome {
+    answers: Vec<(usize, Json)>,
+    errors: Vec<(usize, Json)>,
+    unique: usize,
+    wire: Vec<u8>,
+}
+
+/// Parse + dedup + solve one JSON-lines batch. Parse errors and solve
+/// errors land in the same per-line record stream; answers keep input
+/// order. Never fails: an unanswerable batch is all error records.
+fn run_batch(input: &str) -> BatchOutcome {
+    let (tagged, parse_errors) = ckpt_period::serve::parse_lines(input);
+    let queries: Vec<Query> = tagged.iter().map(|(_, q)| q.clone()).collect();
+    let unique = BatchEngine::unique_count(&queries);
+    let results = BatchEngine::new().answer_all(&queries);
+    let wire = ckpt_period::serve::wire::encode(&results);
+    let mut answers = Vec::with_capacity(queries.len());
+    let mut errors: Vec<(usize, Json)> =
+        parse_errors.iter().map(|r| (r.line, r.to_json())).collect();
+    for ((line, q), res) in tagged.iter().zip(&results) {
+        match res {
+            Ok(a) => answers.push((*line, answer_json(*line, q, a))),
+            Err(e) => {
+                let rec = ErrorRecord { line: *line, error: e.to_string() };
+                errors.push((*line, rec.to_json()));
+            }
+        }
+    }
+    errors.sort_by_key(|(l, _)| *l);
+    BatchOutcome { answers, errors, unique, wire }
+}
+
+/// One answer line: correlation fields first (line, id, the echoed
+/// query spellings), then the solved columns in the `optimize` table's
+/// units.
+fn answer_json(line: usize, q: &Query, a: &Answer) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![("line", Json::Num(line as f64))];
+    if let Some(id) = &q.id {
+        fields.push(("id", Json::Str(id.clone())));
+    }
+    if let Some(label) = &q.label {
+        fields.push(("scenario", Json::Str(label.clone())));
+    }
+    fields.push(("policy", Json::Str(q.policy_spec())));
+    fields.push(("model", Json::Str(q.backend.name().into())));
+    if !q.drift.is_stationary() {
+        fields.push(("drift", Json::Str(q.drift.render())));
+        fields.push(("at", Json::Num(q.at)));
+    }
+    fields.push(("period_min", Json::Num(a.period)));
+    fields.push(("makespan_min", Json::Num(a.t_final)));
+    fields.push(("energy_mW_min", Json::Num(a.e_final)));
+    fields.push(("t_time_opt_min", Json::Num(a.t_time_opt)));
+    fields.push(("t_energy_opt_min", Json::Num(a.t_energy_opt)));
+    fields.push(("time_overhead_pct", Json::Num(a.time_overhead_pct)));
+    fields.push(("energy_gain_pct", Json::Num(a.energy_gain_pct)));
+    Json::obj(fields)
+}
+
+fn cmd_batch(argv: &[String]) -> Result<(), String> {
+    let specs = [
+        ArgSpec::flag("in", "-", "query stream: '-' for stdin, else a file path"),
+        ArgSpec::flag(
+            "socket",
+            "",
+            "long-lived mode: serve batches from a Unix socket at this \
+             path, one JSON-lines batch per connection (overrides --in)",
+        ),
+        ArgSpec::flag("out", "", "also write answers + error records as a JSON artifact"),
+        ArgSpec::flag(
+            "bin-out",
+            "",
+            "also write the answers as a CKPTSRV1 fixed-offset binary artifact",
+        ),
+    ];
+    let args = Args::parse("batch", "answer a JSON-lines query batch", &specs, argv)
+        .map_err(cli_err)?;
+    let socket = args.get("socket");
+    if !socket.is_empty() {
+        return serve_socket(socket);
+    }
+    let input = match args.get("in") {
+        "-" => {
+            use std::io::Read;
+            let mut buf = String::new();
+            std::io::stdin()
+                .read_to_string(&mut buf)
+                .map_err(|e| format!("reading stdin: {e}"))?;
+            buf
+        }
+        path => std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?,
+    };
+    let outcome = run_batch(&input);
+    // stdout carries only answer lines (input order); stderr only error
+    // records plus the summary — the two streams consume independently.
+    for (_, doc) in &outcome.answers {
+        println!("{}", doc.to_string_compact());
+    }
+    for (_, rec) in &outcome.errors {
+        eprintln!("{}", rec.to_string_compact());
+    }
+    eprintln!(
+        "answered {} queries ({} unique solves), {} errors",
+        outcome.answers.len(),
+        outcome.unique,
+        outcome.errors.len()
+    );
+    let out = args.get("out");
+    if !out.is_empty() {
+        let doc = Json::obj(vec![
+            ("schema", Json::Str("ckpt-period/serve-batch/v1".into())),
+            ("answered", Json::Num(outcome.answers.len() as f64)),
+            ("unique_solves", Json::Num(outcome.unique as f64)),
+            ("answers", Json::Arr(outcome.answers.iter().map(|(_, j)| j.clone()).collect())),
+            ("errors", Json::Arr(outcome.errors.iter().map(|(_, j)| j.clone()).collect())),
+        ]);
+        write_json_artifact(Path::new(out), &doc).map_err(|e| e.to_string())?;
+        eprintln!("batch artifact written to {out}");
+    }
+    let bin_out = args.get("bin-out");
+    if !bin_out.is_empty() {
+        write_binary_artifact(Path::new(bin_out), &outcome.wire).map_err(|e| e.to_string())?;
+        eprintln!("binary answers written to {bin_out}");
+    }
+    Ok(())
+}
+
+/// The long-lived serving loop: one JSON-lines batch per connection,
+/// answers and error records merged back by line number on the same
+/// stream (error records are the objects carrying an `error` key).
+/// Caches stay warm across connections — that is the point of the
+/// long-lived process.
+#[cfg(unix)]
+fn serve_socket(path: &str) -> Result<(), String> {
+    use std::io::{Read, Write};
+    use std::os::unix::net::UnixListener;
+    // A stale socket file from a previous run would make bind fail.
+    let _ = std::fs::remove_file(path);
+    let listener = UnixListener::bind(path).map_err(|e| format!("bind {path}: {e}"))?;
+    eprintln!("serving on {path} (one JSON-lines batch per connection; ctrl-c to stop)");
+    for conn in listener.incoming() {
+        let mut stream = match conn {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("accept: {e}");
+                continue;
+            }
+        };
+        let mut input = String::new();
+        if let Err(e) = stream.read_to_string(&mut input) {
+            eprintln!("read: {e}");
+            continue;
+        }
+        let outcome = run_batch(&input);
+        let (answered, unique, n_errors) =
+            (outcome.answers.len(), outcome.unique, outcome.errors.len());
+        let mut lines = outcome.answers;
+        lines.extend(outcome.errors);
+        lines.sort_by_key(|(l, _)| *l);
+        let mut reply = String::new();
+        for (_, doc) in &lines {
+            reply.push_str(&doc.to_string_compact());
+            reply.push('\n');
+        }
+        if let Err(e) = stream.write_all(reply.as_bytes()) {
+            eprintln!("write: {e}");
+        }
+        eprintln!("answered {answered} queries ({unique} unique solves), {n_errors} errors");
+    }
+    Ok(())
+}
+
+#[cfg(not(unix))]
+fn serve_socket(_path: &str) -> Result<(), String> {
+    Err("--socket requires a Unix platform (use --in on this one)".into())
+}
+
+/// The git work-tree root, so `bench` lands `BENCH_<n>.json` next to
+/// the previous entries of the trajectory no matter the cwd; falls back
+/// to `.` outside a work tree.
+fn repo_root() -> PathBuf {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--show-toplevel"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| PathBuf::from(s.trim()))
+        .filter(|p| p.is_dir())
+        .unwrap_or_else(|| PathBuf::from("."))
+}
+
+fn cmd_bench(argv: &[String]) -> Result<(), String> {
+    let specs = [
+        ArgSpec::switch("quick", "shrink every workload (sets CKPT_BENCH_QUICK; CI mode)"),
+        ArgSpec::flag(
+            "out-dir",
+            "",
+            "directory for BENCH_<n>.json (default: the git work-tree root, else `.`)",
+        ),
+    ];
+    let args =
+        Args::parse("bench", "standardised serving benchmark -> BENCH_<n>.json", &specs, argv)
+            .map_err(cli_err)?;
+    if args.switch("quick") {
+        std::env::set_var("CKPT_BENCH_QUICK", "1");
+    }
+    let dir = match args.get("out-dir") {
+        "" => repo_root(),
+        d => PathBuf::from(d),
+    };
+    let doc = ckpt_period::serve::bench::run_bench();
+    // First unused index: the perf trajectory appends, never overwrites.
+    let mut n = 0u32;
+    let path = loop {
+        let p = dir.join(format!("BENCH_{n}.json"));
+        if !p.exists() {
+            break p;
+        }
+        n += 1;
+    };
+    write_json_artifact(&path, &doc).map_err(|e| e.to_string())?;
+    print_memo_stats();
+    println!("bench results written to {}", path.display());
     Ok(())
 }
 

@@ -22,6 +22,18 @@ pub fn write_json_artifact(path: &Path, doc: &Json) -> std::io::Result<()> {
     std::fs::write(path, text)
 }
 
+/// Binary sibling of [`write_json_artifact`]: same parent-directory
+/// behaviour, raw bytes instead of JSON (the serve layer's fixed-offset
+/// answer encoding, [`crate::serve::wire`], goes through here).
+pub fn write_binary_artifact(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, bytes)
+}
+
 /// One entry of the flat-parameter manifest.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParamEntry {

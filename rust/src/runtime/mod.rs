@@ -19,6 +19,6 @@ pub mod sweep;
 #[cfg(not(feature = "pjrt"))]
 pub mod xla_stub;
 
-pub use artifacts::{write_json_artifact, ArtifactDir, ParamEntry};
+pub use artifacts::{write_binary_artifact, write_json_artifact, ArtifactDir, ParamEntry};
 pub use client::{Executable, Runtime, RuntimeError};
 pub use sweep::SweepEvaluator;

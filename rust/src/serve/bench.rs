@@ -1,0 +1,206 @@
+//! The standardised serving benchmark behind `ckpt-period bench`.
+//!
+//! One workload, four numbers, every PR (the repo-root `BENCH_<n>.json`
+//! trajectory):
+//!
+//! * **cold vs warm memo latency** — nanoseconds per knee solve on
+//!   never-seen scenarios vs memo-resident repeats, measured directly
+//!   on [`knee_period`] (the serving hot path);
+//! * **queries/sec at 1, 4 and 8 threads** — [`BatchEngine`] end to
+//!   end, cold (fresh scenarios, answer cache bypassed) and warm
+//!   (answer-cache hits), on a per-thread-count local pool;
+//! * **grid-engine cell throughput** — closed-form model cells per
+//!   second through `GridSpec::evaluate` with the cell cache off, via
+//!   the shared [`Bench`] harness (so quick mode and the
+//!   `target/bench-results` dump behave like the `benches/` suites).
+//!
+//! Freshness is load-bearing: the online-policy memo quantises `(C, R,
+//! μ)` to 3 significant digits, so "fresh" scenarios must differ by
+//! more than 0.1% relative to miss. The generator walks μ
+//! *multiplicatively* (0.45% per step — always a new quantum) off a
+//! process-wide counter, so no two benchmark phases, reps, or calls
+//! ever re-touch a quantised key by accident.
+
+use std::sync::atomic::{AtomicI32, Ordering};
+use std::time::Instant;
+
+use super::engine::BatchEngine;
+use super::query::Query;
+use crate::config::presets::fig1_scenario;
+use crate::coordinator::PeriodPolicy;
+use crate::model::params::Scenario;
+use crate::model::Backend;
+use crate::pareto::online::knee_period;
+use crate::pareto::KneeMethod;
+use crate::sweep::GridSpec;
+use crate::util::bench::{black_box, Bench};
+use crate::util::json::Json;
+use crate::util::pool::ThreadPool;
+use crate::util::stats::percentile;
+
+const KNEE: PeriodPolicy = PeriodPolicy::Knee {
+    method: KneeMethod::MaxDistanceToChord,
+    backend: Backend::FirstOrder,
+};
+
+/// 0.45% per step: always more than the online memo's 0.1% quantum,
+/// small enough that tens of thousands of steps stay in domain.
+const MU_GROWTH: f64 = 1.0045;
+
+static FRESH: AtomicI32 = AtomicI32::new(0);
+
+/// `k` scenarios no prior phase of this process has solved: the μ walk
+/// advances a process-wide counter, and consecutive μ values differ by
+/// 0.45% relative — a fresh online-memo quantum each.
+fn fresh_scenarios(k: usize) -> Vec<Scenario> {
+    let start = FRESH.fetch_add(k as i32, Ordering::Relaxed);
+    (0..k as i32).map(|i| fig1_scenario(120.0 * MU_GROWTH.powi(start + i), 5.5)).collect()
+}
+
+/// (cold_ns, warm_ns) per knee solve over `k` fresh scenarios.
+fn memo_latency(k: usize) -> (f64, f64) {
+    let scenarios = fresh_scenarios(k);
+    let solve = |s: &Scenario| {
+        black_box(
+            knee_period(s, KneeMethod::MaxDistanceToChord, Backend::FirstOrder)
+                .expect("bench scenarios stay in domain"),
+        )
+    };
+    let t0 = Instant::now();
+    for s in &scenarios {
+        solve(s);
+    }
+    let cold = t0.elapsed().as_secs_f64();
+    const PASSES: usize = 10;
+    let t1 = Instant::now();
+    for _ in 0..PASSES {
+        for s in &scenarios {
+            solve(s);
+        }
+    }
+    let warm = t1.elapsed().as_secs_f64();
+    (cold / k as f64 * 1e9, warm / (k * PASSES) as f64 * 1e9)
+}
+
+/// (cold, warm) queries/sec through the batch engine on a pool with
+/// `threads` participants (the submitter plus `threads - 1` workers).
+/// Median over `reps` disjoint fresh batches of `batch` queries.
+fn queries_per_sec(threads: usize, batch: usize, reps: usize) -> (f64, f64) {
+    let pool = ThreadPool::new(threads - 1);
+    let mut cold_s = Vec::with_capacity(reps);
+    let mut warm_s = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let queries: Vec<Query> = fresh_scenarios(batch)
+            .into_iter()
+            .map(|s| Query::new(s, KNEE, Backend::FirstOrder))
+            .collect();
+        let t0 = Instant::now();
+        black_box(BatchEngine::without_cache().answer_all_on(&pool, &queries));
+        cold_s.push(t0.elapsed().as_secs_f64());
+        // Fill the answer cache untimed, then time the pure-hit pass.
+        let engine = BatchEngine::new();
+        black_box(engine.answer_all_on(&pool, &queries));
+        let t1 = Instant::now();
+        black_box(engine.answer_all_on(&pool, &queries));
+        warm_s.push(t1.elapsed().as_secs_f64());
+    }
+    let b = batch as f64;
+    (b / percentile(&cold_s, 0.5), b / percentile(&warm_s, 0.5))
+}
+
+/// `git describe --always --dirty`, or `"unknown"` outside a work tree
+/// (the bench must run anywhere the binary does).
+pub fn git_describe() -> String {
+    std::process::Command::new("git")
+        .args(["describe", "--always", "--dirty"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
+}
+
+/// Run the standardised workload and return the `BENCH_<n>.json`
+/// document. Quick mode (the `--quick` flag sets `CKPT_BENCH_QUICK`)
+/// shrinks every batch so CI finishes in seconds; the schema is
+/// identical either way — `tests/bench_schema.rs` holds it fixed.
+pub fn run_bench() -> Json {
+    let quick = std::env::var("CKPT_BENCH_QUICK").is_ok();
+    let memo_scenarios = if quick { 128 } else { 512 };
+    let batch = if quick { 256 } else { 1024 };
+    let reps = if quick { 3 } else { 5 };
+    let cells = if quick { 2048usize } else { 8192 };
+
+    println!("serve bench ({}): memo latency …", if quick { "quick" } else { "full" });
+    let (cold_ns, warm_ns) = memo_latency(memo_scenarios);
+    println!("  cold {cold_ns:.0} ns/solve, warm {warm_ns:.0} ns/solve");
+
+    let mut qps = Vec::new();
+    for threads in [1usize, 4, 8] {
+        let (cold, warm) = queries_per_sec(threads, batch, reps);
+        println!("  {threads} thread(s): {cold:.0} cold q/s, {warm:.0} warm q/s");
+        qps.push((
+            threads.to_string(),
+            Json::obj(vec![("cold", Json::Num(cold)), ("warm", Json::Num(warm))]),
+        ));
+    }
+
+    // Grid-engine cell throughput through the shared harness (prints
+    // its own report line and lands in target/bench-results/serve.json).
+    let s = fig1_scenario(300.0, 5.5);
+    let periods: Vec<f64> = (0..cells).map(|i| 15.0 + 0.02 * i as f64).collect();
+    let spec = GridSpec::model_sweep(s, &periods, 1).without_cache();
+    let mut bench = Bench::new("serve");
+    let cell_throughput = {
+        let m = bench.run_units("grid_model_cells", cells as f64, || spec.evaluate());
+        cells as f64 / m.median()
+    };
+    bench.finish();
+
+    Json::obj(vec![
+        ("schema", Json::Str("ckpt-period/bench/v1".into())),
+        ("suite", Json::Str("serve".into())),
+        ("quick", Json::Bool(quick)),
+        ("git_describe", Json::Str(git_describe())),
+        ("pool_threads", Json::Num((ThreadPool::global().n_workers() + 1) as f64)),
+        ("memo_scenarios", Json::Num(memo_scenarios as f64)),
+        ("batch", Json::Num(batch as f64)),
+        ("cold_memo_ns", Json::Num(cold_ns)),
+        ("warm_memo_ns", Json::Num(warm_ns)),
+        ("queries_per_sec", Json::Obj(qps.into_iter().collect())),
+        ("cells", Json::Num(cells as f64)),
+        ("cell_throughput_per_sec", Json::Num(cell_throughput)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_scenarios_never_collide_even_across_calls() {
+        let a = fresh_scenarios(16);
+        let b = fresh_scenarios(16);
+        let mut keys: Vec<[u64; 10]> = Vec::new();
+        for s in a.iter().chain(&b) {
+            keys.push(s.key_bits());
+        }
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), 32, "duplicate scenario bits");
+        // Consecutive μ steps exceed the online memo's 0.1% quantum.
+        for w in a.windows(2) {
+            let rel = (w[1].mu - w[0].mu) / w[0].mu;
+            assert!(rel > 0.002, "step {rel} too small for the quantiser");
+        }
+        // And the scenarios are solvable.
+        assert!(knee_period(&a[0], KneeMethod::MaxDistanceToChord, Backend::FirstOrder).is_ok());
+    }
+
+    #[test]
+    fn git_describe_always_yields_a_label() {
+        assert!(!git_describe().is_empty());
+    }
+}

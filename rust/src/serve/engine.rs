@@ -1,0 +1,296 @@
+//! The batched solve path: dedup → pooled solve → scatter.
+//!
+//! [`solve`] answers one [`Query`] — policy period plus both objective
+//! columns and the backend's per-objective optima — entirely through
+//! pure functions of the query's [`Query::solve_key`], so an answer is
+//! bit-identical no matter which thread, batch, or process computes it.
+//! On top of that purity:
+//!
+//! * a process-wide **answer cache** (the serve-path sibling of the
+//!   online-policy [`PureMemo`](crate::util::memo::PureMemo), but
+//!   holding whole [`Answer`] records rather than one scalar) serves
+//!   repeat queries without re-entering the solver at all;
+//! * [`BatchEngine`] answers a query *vector*: it deduplicates by solve
+//!   key first, fans the unique solves out on the [`ThreadPool`] (the
+//!   same work-stealing pool the grid engine uses, so exact-backend
+//!   bracketing amortises across the batch), then scatters results back
+//!   into input order. Results are written by unique-index, so the
+//!   output is byte-identical for every thread count — the same
+//!   determinism contract as [`ThreadPool::map`].
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use super::query::Query;
+use crate::model::params::ModelError;
+use crate::util::pool::ThreadPool;
+
+/// One solved query: the policy's period and where it lands on both
+/// objectives, plus the backend's per-objective optima for context.
+/// All fields are minutes except the two percentages.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Answer {
+    /// The period the policy chose (minutes).
+    pub period: f64,
+    /// Expected makespan at that period, under the query's backend.
+    pub t_final: f64,
+    /// Expected energy at that period (mW·min), same backend.
+    pub e_final: f64,
+    /// The backend's time-optimal period (minutes).
+    pub t_time_opt: f64,
+    /// The backend's energy-optimal period (minutes).
+    pub t_energy_opt: f64,
+    /// Makespan overhead vs running at `t_time_opt`, in percent — the
+    /// knee metadata: how much time the chosen period gives up.
+    pub time_overhead_pct: f64,
+    /// Energy saved vs running at `t_time_opt`, in percent — what that
+    /// time buys.
+    pub energy_gain_pct: f64,
+}
+
+/// Answer one query. Pure function of [`Query::solve_key`]: the
+/// effective scenario is read off the drift trajectory at `at`, the
+/// policy picks its period through the online memo, and both objective
+/// columns (plus the two optima anchoring the overhead/gain
+/// percentages) evaluate through the query's backend.
+pub fn solve(q: &Query) -> Result<Answer, ModelError> {
+    let s = q.effective_scenario()?;
+    let period = q.policy.period(&s)?;
+    let (t_final, e_final) = q.backend.objectives(&s, period);
+    let t_time_opt = q.backend.t_time_opt(&s)?;
+    let t_energy_opt = q.backend.t_energy_opt(&s)?;
+    let (t_at_topt, e_at_topt) = q.backend.objectives(&s, t_time_opt);
+    Ok(Answer {
+        period,
+        t_final,
+        e_final,
+        t_time_opt,
+        t_energy_opt,
+        time_overhead_pct: (t_final / t_at_topt - 1.0) * 100.0,
+        energy_gain_pct: (1.0 - e_final / e_at_topt) * 100.0,
+    })
+}
+
+/// Capacity bound of the process-wide answer cache; overflow clears
+/// wholesale, like [`PureMemo`](crate::util::memo::PureMemo) (entries
+/// are pure functions of their key, so losing them only costs
+/// recomputation).
+const ANSWER_CACHE_CAPACITY: usize = 1 << 16;
+
+static ANSWER_CACHE: OnceLock<Mutex<HashMap<Vec<u64>, Answer>>> = OnceLock::new();
+static CACHE_HITS: AtomicU64 = AtomicU64::new(0);
+static CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
+
+fn cache() -> &'static Mutex<HashMap<Vec<u64>, Answer>> {
+    ANSWER_CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Cached [`solve`]: repeats of a key are served without re-entering
+/// the solver. Only `Ok` answers are cached — errors pass through
+/// uncached and uncounted, the [`PureMemo`] convention
+/// (counters track cache behaviour, not domain validity).
+pub fn solve_cached(q: &Query) -> Result<Answer, ModelError> {
+    let key = q.solve_key();
+    if let Some(&a) = cache().lock().unwrap().get(&key) {
+        CACHE_HITS.fetch_add(1, Ordering::Relaxed);
+        return Ok(a);
+    }
+    // Compute outside the lock: a concurrent miss on the same key just
+    // recomputes the same pure value.
+    let a = solve(q)?;
+    CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
+    let mut m = cache().lock().unwrap();
+    if m.len() >= ANSWER_CACHE_CAPACITY {
+        m.clear();
+    }
+    m.insert(key, a);
+    Ok(a)
+}
+
+/// Hit/miss counters of the serve answer cache since process start
+/// (the `info` subcommand's serve-path line, mirroring
+/// `sweep::cache::stats`).
+pub fn answer_cache_stats() -> (u64, u64) {
+    (CACHE_HITS.load(Ordering::Relaxed), CACHE_MISSES.load(Ordering::Relaxed))
+}
+
+/// Live entry count of the serve answer cache.
+pub fn answer_cache_len() -> usize {
+    cache().lock().unwrap().len()
+}
+
+/// Batch query engine: dedup by solve key, solve each unique query once
+/// on a thread pool, scatter answers back into input order.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BatchEngine {
+    use_cache: bool,
+}
+
+impl BatchEngine {
+    /// Engine backed by the process-wide answer cache (the serving
+    /// default: repeats across batches are hits).
+    pub fn new() -> BatchEngine {
+        BatchEngine { use_cache: true }
+    }
+
+    /// Engine that bypasses the answer cache — every unique key solves
+    /// fresh. Benchmarks use this for cold-path numbers; the underlying
+    /// policy/optima memos still apply.
+    pub fn without_cache() -> BatchEngine {
+        BatchEngine { use_cache: false }
+    }
+
+    /// Answer a batch on the process-wide pool.
+    pub fn answer_all(&self, queries: &[Query]) -> Vec<Result<Answer, ModelError>> {
+        self.answer_all_on(ThreadPool::global(), queries)
+    }
+
+    /// Answer a batch on a caller-supplied pool. Answers come back in
+    /// input order, one per query, bit-identical to calling [`solve`]
+    /// on each query sequentially — at any worker count.
+    pub fn answer_all_on(
+        &self,
+        pool: &ThreadPool,
+        queries: &[Query],
+    ) -> Vec<Result<Answer, ModelError>> {
+        // Dedup pass: first occurrence of each solve key claims a slot.
+        let keys: Vec<Vec<u64>> = queries.iter().map(Query::solve_key).collect();
+        let mut first: HashMap<&[u64], usize> = HashMap::with_capacity(queries.len());
+        let mut unique: Vec<usize> = Vec::new(); // query index of each unique key
+        let mut slot: Vec<usize> = Vec::with_capacity(queries.len());
+        for (i, key) in keys.iter().enumerate() {
+            let u = *first.entry(key.as_slice()).or_insert_with(|| {
+                unique.push(i);
+                unique.len() - 1
+            });
+            slot.push(u);
+        }
+        // Pooled solve of the unique queries; results land by index, so
+        // the scatter below is schedule-independent.
+        let use_cache = self.use_cache;
+        let solved: Vec<Result<Answer, ModelError>> = pool.map(unique.len(), |u| {
+            let q = &queries[unique[u]];
+            if use_cache {
+                solve_cached(q)
+            } else {
+                solve(q)
+            }
+        });
+        slot.into_iter().map(|u| solved[u].clone()).collect()
+    }
+
+    /// Number of unique solve keys in a batch (diagnostics: the batch
+    /// summary line reports `answered N (U unique solves)`).
+    pub fn unique_count(queries: &[Query]) -> usize {
+        let keys: std::collections::HashSet<Vec<u64>> =
+            queries.iter().map(Query::solve_key).collect();
+        keys.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::tradeoff_presets;
+    use crate::coordinator::PeriodPolicy;
+    use crate::model::Backend;
+
+    fn preset_query(label: &str) -> Query {
+        let line = format!("{{\"scenario\": \"{label}\"}}");
+        Query::parse_line(&line).unwrap()
+    }
+
+    #[test]
+    fn solve_matches_the_sequential_policy_call() {
+        for (label, s) in tradeoff_presets() {
+            let q = preset_query(label);
+            let a = solve(&q).unwrap();
+            assert_eq!(
+                a.period.to_bits(),
+                q.policy.period(&s).unwrap().to_bits(),
+                "{label}"
+            );
+            let (t, e) = q.backend.objectives(&s, a.period);
+            assert_eq!(a.t_final.to_bits(), t.to_bits(), "{label}");
+            assert_eq!(a.e_final.to_bits(), e.to_bits(), "{label}");
+            // The knee trades a small time overhead for an energy gain.
+            assert!(a.time_overhead_pct >= 0.0, "{label}: {}", a.time_overhead_pct);
+            assert!(a.energy_gain_pct > 0.0, "{label}: {}", a.energy_gain_pct);
+            assert!(a.t_time_opt > 0.0 && a.t_energy_opt > 0.0, "{label}");
+        }
+    }
+
+    #[test]
+    fn solve_errors_on_out_of_domain_scenarios_without_caching() {
+        // C >= 2*mu*b: infeasible under every backend.
+        let mut q = preset_query("fig1-rho5.5");
+        q.scenario.mu = 6.0;
+        let (_, misses_before) = answer_cache_stats();
+        assert!(solve(&q).is_err());
+        assert!(solve_cached(&q).is_err());
+        let (_, misses_after) = answer_cache_stats();
+        assert_eq!(misses_before, misses_after);
+    }
+
+    #[test]
+    fn cached_solve_is_bit_identical_and_counts_hits() {
+        let q = preset_query("alpha-heavy");
+        let fresh = solve(&q).unwrap();
+        let (h0, _) = answer_cache_stats();
+        let first = solve_cached(&q).unwrap();
+        let second = solve_cached(&q).unwrap();
+        assert_eq!(first, fresh);
+        assert_eq!(second, fresh);
+        let (h1, _) = answer_cache_stats();
+        assert!(h1 > h0, "repeat lookup must count a hit");
+        assert!(answer_cache_len() >= 1);
+    }
+
+    #[test]
+    fn batch_deduplicates_and_preserves_input_order() {
+        let a = preset_query("fig1-rho5.5");
+        let b = preset_query("fig1-rho7");
+        let mut c = preset_query("fig1-rho5.5");
+        c.policy = PeriodPolicy::AlgoT;
+        let batch = vec![a.clone(), b.clone(), a.clone(), c.clone(), b.clone(), a.clone()];
+        assert_eq!(BatchEngine::unique_count(&batch), 3);
+        let answers = BatchEngine::without_cache().answer_all_on(&ThreadPool::new(0), &batch);
+        assert_eq!(answers.len(), batch.len());
+        // Duplicates answer identically; distinct queries differ.
+        let get = |i: usize| answers[i].clone().unwrap();
+        assert_eq!(get(0), get(2));
+        assert_eq!(get(0), get(5));
+        assert_eq!(get(1), get(4));
+        assert_ne!(get(0).period.to_bits(), get(3).period.to_bits());
+        // And each slot matches the direct sequential solve.
+        for (i, q) in batch.iter().enumerate() {
+            assert_eq!(get(i), solve(q).unwrap(), "slot {i}");
+        }
+    }
+
+    #[test]
+    fn batch_errors_scatter_to_every_duplicate() {
+        let good = preset_query("fig1-rho5.5");
+        let mut bad = preset_query("fig1-rho5.5");
+        bad.scenario.mu = 6.0; // infeasible
+        let batch = vec![good.clone(), bad.clone(), bad.clone(), good.clone()];
+        let answers = BatchEngine::without_cache().answer_all_on(&ThreadPool::new(0), &batch);
+        assert!(answers[0].is_ok() && answers[3].is_ok());
+        assert!(answers[1].is_err() && answers[2].is_err());
+        assert_eq!(answers[1], answers[2]);
+    }
+
+    #[test]
+    fn exact_backend_batches_answer_like_sequential_solves() {
+        let line = r#"{"scenario": "fig1-rho5.5", "model": "exact", "policy": "knee"}"#;
+        let q = Query::parse_line(line).unwrap();
+        assert_ne!(q.backend, Backend::FirstOrder);
+        let direct = solve(&q).unwrap();
+        let pooled =
+            BatchEngine::without_cache().answer_all_on(&ThreadPool::new(3), &[q.clone(), q]);
+        for a in pooled {
+            assert_eq!(a.unwrap(), direct);
+        }
+    }
+}

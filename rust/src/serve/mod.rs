@@ -1,0 +1,89 @@
+//! Policy-as-a-service: the batched scenario-query engine behind
+//! `ckpt-period batch` and `ckpt-period bench`.
+//!
+//! The rest of the crate answers *one* scenario per CLI invocation.
+//! This module turns the solver into a long-lived service: a stream of
+//! JSON-lines queries in, a stream of answers out, with exact-bits
+//! deduplication and process-wide caching between them.
+//!
+//! # Query protocol (JSON lines)
+//!
+//! One JSON object per line; blank lines are ignored. Fields:
+//!
+//! ```json
+//! {"id": "q1", "scenario": "fig1-rho5.5", "policy": "knee",
+//!  "model": "exact", "drift": "io-ramp", "at": 2500}
+//! ```
+//!
+//! * `scenario` (**required**) — a trade-off preset name
+//!   (`fig1-rho5.5`, `exascale-io-heavy`, …) or an inline object in the
+//!   [`ScenarioSpec`](crate::config::ScenarioSpec) grammar
+//!   (`checkpoint{c,r,d,omega}`, `power{…}`, `mu_minutes`,
+//!   `t_base_minutes`);
+//! * `policy` — `algo-t|algo-e|young|daly|fixed:<T>|knee|knee:curvature|
+//!   eps-time:<pct>|eps-energy:<pct>` (default `knee`);
+//! * `model` — `first-order|exact|exact:ideal|exact:restarting`
+//!   (default `first-order`); frontier-aware policies are retargeted at
+//!   this backend;
+//! * `drift` — a drift preset (`io-ramp`, `mu-decay`, …) or the
+//!   [`DriftProcess`](crate::drift::DriftProcess) grammar (default
+//!   stationary);
+//! * `at` — the trajectory time (minutes) the answer is read at
+//!   (default `0`);
+//! * `id` — opaque correlation string, echoed back.
+//!
+//! Unknown fields are rejected. Each answer is one JSON line on stdout,
+//! in **input order**, carrying the line number, the echoed `id`, the
+//! canonical policy/model spellings, the chosen period, both objective
+//! columns, the backend's per-objective optima and the knee metadata
+//! (time overhead vs `t_time_opt`, energy gain).
+//!
+//! # Error records
+//!
+//! A malformed or unanswerable line never kills the stream: it becomes
+//! a structured record `{"line": <n>, "error": "<reason>"}` on stderr,
+//! and the stream position is preserved — line numbers of subsequent
+//! answers are unaffected (see [`parse_lines`]). Exit status stays `0`;
+//! a non-zero exit means the *stream itself* could not be read.
+//!
+//! # Backpressure
+//!
+//! `batch` mode reads the whole stream (stdin/file/one socket
+//! connection) before answering: dedup and the pooled solve want the
+//! full vector, and answers must come back in input order. Backpressure
+//! is therefore at stream granularity — a client pipelining batches
+//! over the Unix socket gets one connection per batch, served
+//! sequentially from the accept loop, while the answer caches stay warm
+//! across connections (that is the point of the long-lived process).
+//! Within a batch, stdout carries only answer lines and stderr only
+//! error records plus a final `answered N queries (U unique solves), E
+//! errors` summary, so the two streams can be consumed independently.
+//!
+//! # Engine
+//!
+//! [`BatchEngine`] deduplicates queries by [`Query::solve_key`]
+//! (scenario [`key_bits`](crate::model::params::Scenario::key_bits) +
+//! the grid engine's policy encoding + backend + drift + `at`), solves
+//! each unique key once on the [`ThreadPool`](crate::util::pool::ThreadPool)
+//! work-stealing pool, and scatters answers back — bit-identical to
+//! sequential [`solve`] calls at every thread count
+//! (`tests/serve_equivalence.rs` gates this). Repeats across batches
+//! are served from a process-wide answer cache
+//! ([`answer_cache_stats`]; surfaced by `ckpt-period info`). Batches
+//! can additionally be written as a compact fixed-offset binary
+//! artifact ([`wire`]) via `runtime::artifacts` for zero-copy
+//! consumers.
+//!
+//! [`bench`] packages the standardised serving workload behind
+//! `ckpt-period bench`, emitting the repo-root `BENCH_<n>.json` perf
+//! trajectory.
+
+pub mod bench;
+pub mod engine;
+pub mod query;
+pub mod wire;
+
+pub use engine::{
+    answer_cache_len, answer_cache_stats, solve, solve_cached, Answer, BatchEngine,
+};
+pub use query::{parse_lines, policy_spec, ErrorRecord, Query};

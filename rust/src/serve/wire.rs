@@ -1,0 +1,193 @@
+//! Compact binary answer encoding (zero-copy friendly).
+//!
+//! A batch of `Result<Answer, _>` serialises to a fixed-layout
+//! little-endian buffer:
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic  b"CKPTSRV1"
+//! 8       8     record count, u64 LE
+//! 16      64*n  records (8 u64 words each, LE)
+//! ```
+//!
+//! Each record is eight 8-byte words: word 0 is the status (`0` = ok,
+//! `1` = error), words 1–7 are the `f64` bit patterns of the
+//! [`Answer`] fields in declaration order (`period`, `t_final`,
+//! `e_final`, `t_time_opt`, `t_energy_opt`, `time_overhead_pct`,
+//! `energy_gain_pct`), zeroed for error records. Fixed offsets mean a
+//! consumer can `mmap` the artifact and read any record without
+//! parsing — the encoding never needs a scan, and every `f64` survives
+//! bit-exactly (unlike any decimal text form with less care than
+//! [`crate::util::json`] takes).
+
+use super::engine::Answer;
+use crate::model::params::ModelError;
+
+/// File magic: protocol name + version in 8 bytes.
+pub const MAGIC: &[u8; 8] = b"CKPTSRV1";
+/// Header: magic + record count.
+pub const HEADER_BYTES: usize = 16;
+/// Words per record (status + 7 answer fields).
+pub const RECORD_WORDS: usize = 8;
+/// Bytes per record.
+pub const RECORD_BYTES: usize = RECORD_WORDS * 8;
+
+fn answer_words(a: &Answer) -> [u64; 7] {
+    [
+        a.period.to_bits(),
+        a.t_final.to_bits(),
+        a.e_final.to_bits(),
+        a.t_time_opt.to_bits(),
+        a.t_energy_opt.to_bits(),
+        a.time_overhead_pct.to_bits(),
+        a.energy_gain_pct.to_bits(),
+    ]
+}
+
+/// Encode a batch of results. Error records carry status 1 and zeroed
+/// payload words (the textual reason travels on the JSON error stream,
+/// not the binary artifact).
+pub fn encode(results: &[Result<Answer, ModelError>]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(HEADER_BYTES + results.len() * RECORD_BYTES);
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&(results.len() as u64).to_le_bytes());
+    for r in results {
+        match r {
+            Ok(a) => {
+                buf.extend_from_slice(&0u64.to_le_bytes());
+                for w in answer_words(a) {
+                    buf.extend_from_slice(&w.to_le_bytes());
+                }
+            }
+            Err(_) => {
+                buf.extend_from_slice(&1u64.to_le_bytes());
+                buf.extend_from_slice(&[0u8; (RECORD_WORDS - 1) * 8]);
+            }
+        }
+    }
+    buf
+}
+
+fn word_at(buf: &[u8], offset: usize) -> u64 {
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&buf[offset..offset + 8]);
+    u64::from_le_bytes(b)
+}
+
+/// Validate the header and return the record count.
+pub fn record_count(buf: &[u8]) -> Result<usize, String> {
+    if buf.len() < HEADER_BYTES {
+        return Err(format!("buffer too short for header: {} bytes", buf.len()));
+    }
+    if &buf[..8] != MAGIC {
+        return Err("bad magic: not a CKPTSRV1 buffer".into());
+    }
+    let n = word_at(buf, 8) as usize;
+    let want = HEADER_BYTES + n * RECORD_BYTES;
+    if buf.len() != want {
+        return Err(format!("length mismatch: {} bytes for {n} records (want {want})", buf.len()));
+    }
+    Ok(n)
+}
+
+/// Decode record `i` (0-based) without touching the others: `Ok(None)`
+/// is an error record, `Ok(Some(a))` a bit-exact [`Answer`].
+pub fn decode_record(buf: &[u8], i: usize) -> Result<Option<Answer>, String> {
+    let n = record_count(buf)?;
+    if i >= n {
+        return Err(format!("record {i} out of range (count {n})"));
+    }
+    let base = HEADER_BYTES + i * RECORD_BYTES;
+    match word_at(buf, base) {
+        0 => Ok(Some(Answer {
+            period: f64::from_bits(word_at(buf, base + 8)),
+            t_final: f64::from_bits(word_at(buf, base + 16)),
+            e_final: f64::from_bits(word_at(buf, base + 24)),
+            t_time_opt: f64::from_bits(word_at(buf, base + 32)),
+            t_energy_opt: f64::from_bits(word_at(buf, base + 40)),
+            time_overhead_pct: f64::from_bits(word_at(buf, base + 48)),
+            energy_gain_pct: f64::from_bits(word_at(buf, base + 56)),
+        })),
+        1 => Ok(None),
+        s => Err(format!("record {i}: unknown status {s}")),
+    }
+}
+
+/// Decode a whole buffer (`None` slots are error records).
+pub fn decode(buf: &[u8]) -> Result<Vec<Option<Answer>>, String> {
+    (0..record_count(buf)?).map(|i| decode_record(buf, i)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn answer(seed: f64) -> Answer {
+        Answer {
+            period: 53.0 + seed,
+            t_final: 11_000.0 * (1.0 + seed / 97.0),
+            e_final: 1.0e8 / (1.0 + seed),
+            t_time_opt: 48.25 + seed,
+            t_energy_opt: 91.0 - seed,
+            time_overhead_pct: 0.1 * seed,
+            energy_gain_pct: 7.5 + 0.3 * seed,
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact_including_errors() {
+        let results: Vec<Result<Answer, ModelError>> = vec![
+            Ok(answer(0.0)),
+            Err(ModelError::Invalid("x".into())),
+            Ok(answer(1.0 / 3.0)), // non-terminating decimal: bits must survive
+        ];
+        let buf = encode(&results);
+        assert_eq!(buf.len(), HEADER_BYTES + 3 * RECORD_BYTES);
+        assert_eq!(record_count(&buf).unwrap(), 3);
+        let back = decode(&buf).unwrap();
+        assert_eq!(back.len(), 3);
+        let a0 = back[0].unwrap();
+        let a2 = back[2].unwrap();
+        let want0 = answer(0.0);
+        let want2 = answer(1.0 / 3.0);
+        for (got, want) in [(a0, want0), (a2, want2)] {
+            assert_eq!(got.period.to_bits(), want.period.to_bits());
+            assert_eq!(got.t_final.to_bits(), want.t_final.to_bits());
+            assert_eq!(got.e_final.to_bits(), want.e_final.to_bits());
+            assert_eq!(got.t_time_opt.to_bits(), want.t_time_opt.to_bits());
+            assert_eq!(got.t_energy_opt.to_bits(), want.t_energy_opt.to_bits());
+            assert_eq!(got.time_overhead_pct.to_bits(), want.time_overhead_pct.to_bits());
+            assert_eq!(got.energy_gain_pct.to_bits(), want.energy_gain_pct.to_bits());
+        }
+        assert!(back[1].is_none());
+        // Random access without a scan.
+        assert_eq!(decode_record(&buf, 2).unwrap(), Some(want2));
+    }
+
+    #[test]
+    fn empty_batch_is_a_valid_header() {
+        let buf = encode(&[]);
+        assert_eq!(buf.len(), HEADER_BYTES);
+        assert_eq!(record_count(&buf).unwrap(), 0);
+        assert_eq!(decode(&buf).unwrap(), Vec::new());
+    }
+
+    #[test]
+    fn corrupt_buffers_are_rejected_with_reasons() {
+        let good = encode(&[Ok(answer(2.0))]);
+        // Truncated header.
+        assert!(record_count(&good[..10]).unwrap_err().contains("too short"));
+        // Wrong magic.
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        assert!(record_count(&bad_magic).unwrap_err().contains("bad magic"));
+        // Truncated payload.
+        assert!(record_count(&good[..good.len() - 1]).unwrap_err().contains("length mismatch"));
+        // Unknown status word.
+        let mut bad_status = good.clone();
+        bad_status[HEADER_BYTES] = 7;
+        assert!(decode_record(&bad_status, 0).unwrap_err().contains("unknown status"));
+        // Out-of-range index.
+        assert!(decode_record(&good, 1).unwrap_err().contains("out of range"));
+    }
+}

@@ -658,8 +658,10 @@ fn eval_cell(cell: &Cell, seed: u64) -> CellOutput {
 /// Stable `[tag, parameter-bits, backend]` encoding of a
 /// [`PeriodPolicy`] for cache keys and seed derivation. The backend
 /// word keeps a first-order and an exact run of the same policy from
-/// aliasing in the cache (and gives them distinct seeds).
-fn policy_key(p: PeriodPolicy) -> [u64; 3] {
+/// aliasing in the cache (and gives them distinct seeds). The serve
+/// layer ([`crate::serve`]) reuses this encoding for its query dedup
+/// keys, so a policy is keyed identically everywhere in the process.
+pub(crate) fn policy_key(p: PeriodPolicy) -> [u64; 3] {
     let backend_word = p.backend().map(|b| b.key_word()).unwrap_or(0);
     match p {
         PeriodPolicy::AlgoT => [0, 0, 0],

@@ -1,0 +1,74 @@
+//! Bench-harness self-test (ISSUE 6 satellite): `bench --quick` must
+//! emit a `BENCH_<n>.json` that validates against the fixed schema —
+//! every future PR's perf trajectory depends on these keys staying
+//! put — and the warm memo path must be strictly faster than cold.
+
+use std::process::Command;
+
+use ckpt_period::util::json::{parse, Json};
+
+fn req_num(doc: &Json, key: &str) -> f64 {
+    doc.req_f64(key).unwrap_or_else(|e| panic!("{key}: {e}"))
+}
+
+#[test]
+fn bench_quick_emits_a_schema_valid_trajectory_point() {
+    let dir = std::env::temp_dir().join(format!("ckpt_bench_schema_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let out = Command::new(env!("CARGO_BIN_EXE_ckpt-period"))
+        .args(["bench", "--quick", "--out-dir", dir.to_str().unwrap()])
+        .output()
+        .expect("binary runs");
+    assert!(
+        out.status.success(),
+        "bench failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // An empty --out-dir starts the trajectory at index 0.
+    let path = dir.join("BENCH_0.json");
+    let raw = std::fs::read_to_string(&path).expect("BENCH_0.json exists");
+    let doc = parse(&raw).expect("valid JSON");
+
+    // Required keys, exactly as EXPERIMENTS.md and CI consume them.
+    assert_eq!(doc.req_str("schema").unwrap(), "ckpt-period/bench/v1");
+    assert_eq!(doc.req_str("suite").unwrap(), "serve");
+    assert_eq!(doc.get("quick").and_then(|q| q.as_bool()), Some(true));
+    assert!(!doc.req_str("git_describe").unwrap().is_empty(), "git describe label");
+    assert!(req_num(&doc, "pool_threads") >= 1.0);
+    assert!(req_num(&doc, "memo_scenarios") >= 1.0);
+    assert!(req_num(&doc, "batch") >= 1.0);
+    assert!(req_num(&doc, "cells") >= 1.0);
+    assert!(req_num(&doc, "cell_throughput_per_sec") > 0.0);
+
+    // Cold/warm memo latency: both positive, warm strictly below cold
+    // (the memo hit path must never regress to a recompute).
+    let cold = req_num(&doc, "cold_memo_ns");
+    let warm = req_num(&doc, "warm_memo_ns");
+    assert!(cold > 0.0 && warm > 0.0, "latencies: cold {cold} warm {warm}");
+    assert!(warm < cold, "warm memo {warm}ns not strictly below cold {cold}ns");
+
+    // Queries/sec at each standard thread count, cold and warm.
+    let qps = doc.get("queries_per_sec").expect("queries_per_sec object");
+    for threads in ["1", "4", "8"] {
+        let t = qps.get(threads).unwrap_or_else(|| panic!("missing thread count {threads}"));
+        let cold_qps = req_num(t, "cold");
+        let warm_qps = req_num(t, "warm");
+        assert!(cold_qps > 0.0, "{threads} threads cold qps");
+        assert!(warm_qps > 0.0, "{threads} threads warm qps");
+    }
+
+    // A second run appends the next index instead of overwriting.
+    let out = Command::new(env!("CARGO_BIN_EXE_ckpt-period"))
+        .args(["bench", "--quick", "--out-dir", dir.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    assert!(dir.join("BENCH_1.json").exists(), "trajectory must append");
+    assert_eq!(std::fs::read_to_string(dir.join("BENCH_0.json")).unwrap(), raw);
+
+    let _ = std::fs::remove_dir_all(dir);
+}

@@ -20,7 +20,9 @@ fn run_ok(args: &[&str]) -> String {
 #[test]
 fn help_lists_subcommands() {
     let out = run_ok(&["--help"]);
-    for cmd in ["optimize", "sweep", "pareto", "simulate", "figures", "train", "info"] {
+    for cmd in
+        ["optimize", "sweep", "pareto", "simulate", "figures", "train", "batch", "bench", "info"]
+    {
         assert!(out.contains(cmd), "missing {cmd} in: {out}");
     }
 }
@@ -366,6 +368,10 @@ fn info_reports_memo_counters() {
     assert!(out.contains("memo caches"), "{out}");
     assert!(out.contains("online policy memo"), "{out}");
     assert!(out.contains("exact optima memo"), "{out}");
+    // The serve-path answer cache reports alongside the older memos
+    // (zero counters in a fresh process, but the line is always there).
+    assert!(out.contains("serve answer cache"), "{out}");
+    assert!(out.contains("0 hits / 0 misses"), "{out}");
 }
 
 #[test]

@@ -1,0 +1,128 @@
+//! ISSUE 6 acceptance gate: the batch engine is a pure reordering of
+//! sequential solves. A shuffled 1k-query vector full of duplicates,
+//! answered through dedup + the work-stealing pool, must be
+//! bit-identical to one-at-a-time `PeriodPolicy::period` calls — at 1
+//! and 8 pool participants, with and without the answer cache. This
+//! extends the CRN/determinism contract of `tests/drift_tracking.rs`
+//! from grid cells to the serve path.
+
+use ckpt_period::config::presets::{drift_preset, tradeoff_presets};
+use ckpt_period::coordinator::PeriodPolicy;
+use ckpt_period::drift::DriftProcess;
+use ckpt_period::model::Backend;
+use ckpt_period::serve::{solve, Answer, BatchEngine, Query};
+use ckpt_period::util::pool::ThreadPool;
+use ckpt_period::util::rng::Pcg64;
+
+/// The distinct (scenario × policy × backend × drift × at) combos the
+/// 1k vector is drawn from. Exact-backend combos are kept to the knee
+/// (one numeric bracketing per preset) so the test stays fast.
+fn combos() -> Vec<Query> {
+    let policies = [
+        "algo-t",
+        "algo-e",
+        "young",
+        "daly",
+        "fixed:37.5",
+        "knee",
+        "knee:curvature",
+        "eps-time:5",
+        "eps-energy:5",
+    ];
+    let drifts: [(DriftProcess, &[f64]); 3] = [
+        (DriftProcess::Stationary, &[0.0]),
+        (drift_preset("io-ramp").unwrap(), &[0.0, 2500.0, 5000.0]),
+        (drift_preset("mu-decay").unwrap(), &[1000.0]),
+    ];
+    let mut out = Vec::new();
+    for (_, s) in tradeoff_presets() {
+        for raw in policies {
+            let policy = PeriodPolicy::parse(raw).unwrap();
+            for (drift, ats) in &drifts {
+                for &at in *ats {
+                    let mut q = Query::new(s, policy, Backend::FirstOrder);
+                    q.drift = *drift;
+                    q.at = at;
+                    out.push(q);
+                }
+            }
+        }
+        // One exact-backend combo per preset, stationary.
+        out.push(Query::new(
+            s,
+            PeriodPolicy::parse("knee").unwrap(),
+            Backend::parse("exact").unwrap(),
+        ));
+    }
+    // Drop the rare drift × preset corner that leaves the feasible
+    // domain: the equivalence gate wants a fully solvable vector (error
+    // scatter has its own test in the engine's unit suite).
+    out.retain(|q| solve(q).is_ok());
+    out
+}
+
+/// Deterministic Fisher–Yates expansion: 1000 draws with duplicates.
+fn shuffled_vector(combos: &[Query], n: usize, seed: u64) -> Vec<Query> {
+    let mut rng = Pcg64::new(seed, 0);
+    let mut v: Vec<Query> =
+        (0..n).map(|_| combos[rng.below(combos.len() as u64) as usize].clone()).collect();
+    for i in (1..v.len()).rev() {
+        let j = rng.below((i + 1) as u64) as usize;
+        v.swap(i, j);
+    }
+    v
+}
+
+fn assert_bits_eq(a: &Answer, b: &Answer, what: &str) {
+    for (name, x, y) in [
+        ("period", a.period, b.period),
+        ("t_final", a.t_final, b.t_final),
+        ("e_final", a.e_final, b.e_final),
+        ("t_time_opt", a.t_time_opt, b.t_time_opt),
+        ("t_energy_opt", a.t_energy_opt, b.t_energy_opt),
+        ("time_overhead_pct", a.time_overhead_pct, b.time_overhead_pct),
+        ("energy_gain_pct", a.energy_gain_pct, b.energy_gain_pct),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: {name} {x} != {y}");
+    }
+}
+
+#[test]
+fn batch_answers_are_bit_identical_to_sequential_policy_calls() {
+    let combos = combos();
+    assert!(combos.len() >= 40, "combo pool too small: {}", combos.len());
+    let queries = shuffled_vector(&combos, 1000, 2013);
+
+    // Sequential reference: one PeriodPolicy::period call per query on
+    // its effective (drift-advanced) scenario, no batch machinery.
+    let reference: Vec<Result<Answer, _>> = queries.iter().map(solve).collect();
+    for (q, r) in queries.iter().zip(&reference) {
+        let s = q.effective_scenario().expect("combos stay in domain");
+        let direct = q.policy.period(&s).expect("combos are solvable");
+        let a = r.as_ref().expect("combos are solvable");
+        assert_eq!(a.period.to_bits(), direct.to_bits(), "solve vs direct policy call");
+    }
+
+    // Batch at 1 and 8 participants, cache off then on: every variant
+    // must reproduce the sequential bits slot for slot.
+    let serial_pool = ThreadPool::new(0);
+    let wide_pool = ThreadPool::new(7);
+    for (what, answers) in [
+        ("1-thread uncached", BatchEngine::without_cache().answer_all_on(&serial_pool, &queries)),
+        ("8-thread uncached", BatchEngine::without_cache().answer_all_on(&wide_pool, &queries)),
+        ("1-thread cached", BatchEngine::new().answer_all_on(&serial_pool, &queries)),
+        ("8-thread cached", BatchEngine::new().answer_all_on(&wide_pool, &queries)),
+    ] {
+        assert_eq!(answers.len(), queries.len(), "{what}");
+        for (i, (got, want)) in answers.iter().zip(&reference).enumerate() {
+            let got = got.as_ref().expect("batch answer ok");
+            let want = want.as_ref().unwrap();
+            assert_bits_eq(got, want, &format!("{what} slot {i}"));
+        }
+    }
+
+    // Sanity on the dedup premise: far fewer unique solves than slots.
+    let unique = BatchEngine::unique_count(&queries);
+    assert!(unique <= combos.len(), "{unique} unique > {} combos", combos.len());
+    assert!(unique >= combos.len() / 2, "shuffle under-covered the combos: {unique}");
+}
