@@ -80,6 +80,11 @@ pub struct AdaptiveController {
     /// this relative distance of the current one does not replace it.
     hysteresis: f64,
     cached_inputs: (f64, f64, f64),
+    /// The most recent *pre-hysteresis* policy period — what the last
+    /// [`period`](Self::period) recompute produced before the band was
+    /// applied. Decision traces read this to tell a recomputed change
+    /// from a hysteresis-suppressed one.
+    cached_fresh: Option<f64>,
 }
 
 impl AdaptiveController {
@@ -105,6 +110,7 @@ impl AdaptiveController {
             cached_period: None,
             hysteresis: DEFAULT_HYSTERESIS,
             cached_inputs: (0.0, 0.0, 0.0),
+            cached_fresh: None,
         }
     }
 
@@ -212,7 +218,17 @@ impl AdaptiveController {
         };
         self.cached_period = Some(p);
         self.cached_inputs = inputs;
+        self.cached_fresh = Some(fresh);
         Some(p)
+    }
+
+    /// The pre-hysteresis period from the most recent recompute inside
+    /// [`period`](Self::period), or `None` before the first one.
+    /// Observational only (decision traces): comparing it with the
+    /// period in force shows whether the last recompute was adopted or
+    /// suppressed by the hysteresis band.
+    pub fn fresh_period(&self) -> Option<f64> {
+        self.cached_fresh
     }
 }
 

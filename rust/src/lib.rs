@@ -90,6 +90,29 @@
 //! threads, grid cell throughput) and emits the repo-root
 //! `BENCH_<n>.json` perf trajectory; see the [`serve`] module docs for
 //! the full protocol (grammar, error records, backpressure).
+//!
+//! # Observability
+//!
+//! [`telemetry`] is the one instrumentation surface for the whole
+//! stack: a process-wide registry of named counters, gauges and
+//! log2-bucket histograms (relaxed atomics, lock-free on the hot
+//! path), RAII span timers over the serve engine's
+//! parse/dedup/solve/scatter stages, per-job pool latency, grid-cell
+//! evaluation and frontier solves, and an opt-in JSONL decision-trace
+//! sink for the adaptive controller (`simulate --adaptive --trace`).
+//! Rendered as a Prometheus text exposition (a `GET /metrics` request
+//! line on the `batch --socket` path, or `info --metrics`) and
+//! embedded as percentile snapshots in `bench` v2 artifacts.
+//!
+//! Naming conventions: families are prefixed `ckpt_`, counters end in
+//! `_total`, duration histograms in `_ns`; multi-instance concepts
+//! (caches, serve stages, pool workers) are one labelled family each.
+//! **Adding a metric must not break determinism**: telemetry is
+//! observational only — record into it freely, but never read a
+//! telemetry value back into a cache key, memo key, seed derivation
+//! or any computed result. `tests/telemetry.rs` enforces the contract
+//! by pinning instrumented runs bit-identical across thread counts
+//! with tracing on and off.
 
 pub mod cli;
 pub mod config;
@@ -103,5 +126,6 @@ pub mod runtime;
 pub mod serve;
 pub mod sim;
 pub mod sweep;
+pub mod telemetry;
 pub mod util;
 pub mod workload;

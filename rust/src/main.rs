@@ -54,7 +54,8 @@ Reproduction of Aupy et al., 'Optimal Checkpointing Period: Time vs. Energy' (20
   simulate  Monte-Carlo validation of the model on a scenario;
             --adaptive runs the online controller (any --policy,
             including knee and eps-time:<x>/eps-energy:<x> budgets,
-            with --alpha/--hysteresis controller knobs);
+            with --alpha/--hysteresis controller knobs, and
+            --trace <path> writing a JSONL decision trace);
             --model retargets the frontier-aware policies and the
             model reference columns at the exact backend — note the
             simulated failure process is MODEL-MATCHED, not the
@@ -75,11 +76,14 @@ Reproduction of Aupy et al., 'Optimal Checkpointing Period: Time vs. Energy' (20
             backend, optional drift and a trajectory time `at`; answers
             stream to stdout in input order, malformed lines become
             {\"line\",\"error\"} records on stderr without killing the
-            stream (see the serve module docs for the full protocol)
+            stream (see the serve module docs for the full protocol);
+            a socket connection sending `GET /metrics` gets the
+            Prometheus text exposition instead of a batch reply
   bench     standardised serving benchmark (cold/warm memo latency,
             queries/sec at 1/4/8 threads, grid-engine cell throughput)
             -> BENCH_<n>.json at the repo root (--quick for CI)
-  info      artifact inventory + memo-cache counters
+  info      artifact inventory + the unified cache/memo counter table
+            (--metrics prints the full Prometheus text exposition)
 
 Run a subcommand with --help for its flags.";
 
@@ -652,6 +656,13 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     ));
     specs.push(ArgSpec::flag("replicates", "200", "Monte-Carlo replicates"));
     specs.push(ArgSpec::flag("seed", "1", "base seed (cell seeds derive from it)"));
+    specs.push(ArgSpec::flag(
+        "trace",
+        "",
+        "write a JSONL decision trace (observe/period/failure/recovery \
+         events per sample path) to this path (adaptive only; bypasses \
+         the grid cell memo so every decision is re-emitted)",
+    ));
     specs.push(MODEL_SPEC);
     let args = Args::parse("simulate", "Monte-Carlo validation of the model", &specs, argv)
         .map_err(cli_err)?;
@@ -661,8 +672,24 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     let reps = args.get_usize("replicates").map_err(cli_err)?;
     let seed = args.get_u64("seed").map_err(cli_err)?;
     let knobs = ControllerKnobs::from_args(&args)?;
+    let trace_path = args.get("trace");
     if args.switch("adaptive") {
-        return cmd_simulate_adaptive(&s, policy, backend, reps, seed, knobs);
+        let tracing = !trace_path.is_empty();
+        if tracing {
+            ckpt_period::telemetry::trace::install(Path::new(trace_path))
+                .map_err(|e| format!("installing trace {trace_path}: {e}"))?;
+        }
+        let out = cmd_simulate_adaptive(&s, policy, backend, reps, seed, knobs, tracing);
+        if tracing {
+            ckpt_period::telemetry::trace::finish();
+            eprintln!("decision trace written to {trace_path}");
+        }
+        return out;
+    }
+    if !trace_path.is_empty() {
+        return Err(
+            "--trace records the online controller's decisions; pass --adaptive".into()
+        );
     }
     if !knobs.is_default() {
         return Err(
@@ -874,6 +901,7 @@ fn cmd_simulate_adaptive(
     reps: usize,
     seed: u64,
     knobs: ControllerKnobs,
+    tracing: bool,
 ) -> Result<(), String> {
     // Match the failure process to the selected model's recovery
     // assumption, exactly like the non-adaptive path: the static-model
@@ -881,9 +909,13 @@ fn cmd_simulate_adaptive(
     // must play by the same rules for the table to be comparable.
     let failures_during_recovery = matches!(backend, Backend::Exact(RecoveryModel::Restarting));
     if !knobs.is_default() {
-        return cmd_simulate_drift(s, policy, backend, reps, seed, knobs);
+        return cmd_simulate_drift(s, policy, backend, reps, seed, knobs, tracing);
     }
     let mut spec = GridSpec::new(seed);
+    if tracing {
+        // A memo-cached cell replays no decisions; tracing re-runs it.
+        spec = spec.without_cache();
+    }
     spec.push(Cell {
         scenario: *s,
         failure: None,
@@ -940,6 +972,7 @@ fn cmd_simulate_drift(
     reps: usize,
     seed: u64,
     knobs: ControllerKnobs,
+    tracing: bool,
 ) -> Result<(), String> {
     // Drift tables simulate the *realistic* process (failures can
     // strike during D + R) regardless of --model — the same process
@@ -949,6 +982,10 @@ fn cmd_simulate_drift(
     // indicative model reference column.)
     let failures_during_recovery = true;
     let mut spec = GridSpec::new(seed);
+    if tracing {
+        // A memo-cached cell replays no decisions; tracing re-runs it.
+        spec = spec.without_cache();
+    }
     spec.push(Cell {
         scenario: *s,
         failure: None,
@@ -1087,40 +1124,26 @@ fn cmd_figures(argv: &[String]) -> Result<(), String> {
     Ok(())
 }
 
-/// Memo-cache counter report (process-local): the grid-cell cache plus
-/// the two pure-function memos. Drift runs re-key the online memo once
-/// per distinct quantised estimate, so the clear counter is the churn
-/// signal to watch.
+/// The unified cache/memo counter table (process-local), registry-
+/// driven: every cache surface — grid cells, the two pure-function
+/// memos, the serve answer cache — reports the same columns through
+/// [`ckpt_period::telemetry::cache_rows`]. Drift runs re-key the
+/// online memo once per distinct quantised estimate, so the clears
+/// column is the churn signal to watch.
 fn print_memo_stats() {
-    let (grid_hits, grid_misses) = ckpt_period::sweep::cache::stats();
     println!("memo caches (this process):");
-    println!(
-        "  grid cells: {} entries, {grid_hits} hits / {grid_misses} misses",
-        ckpt_period::sweep::cache::len()
-    );
-    let (online, online_len) = ckpt_period::pareto::online::memo_stats();
-    println!(
-        "  online policy memo: {online_len} entries, {} hits / {} misses, {} clears \
-         (hit rate {:.1}%)",
-        online.hits,
-        online.misses,
-        online.clears,
-        online.hit_rate() * 100.0
-    );
-    let (opt, opt_len) = ckpt_period::model::backend::opt_memo_stats();
-    println!(
-        "  exact optima memo: {opt_len} entries, {} hits / {} misses, {} clears \
-         (hit rate {:.1}%)",
-        opt.hits,
-        opt.misses,
-        opt.clears,
-        opt.hit_rate() * 100.0
-    );
-    let (serve_hits, serve_misses) = ckpt_period::serve::answer_cache_stats();
-    println!(
-        "  serve answer cache: {} entries, {serve_hits} hits / {serve_misses} misses",
-        ckpt_period::serve::answer_cache_len()
-    );
+    let mut t = Table::new(&["cache", "entries", "hits", "misses", "clears", "hit rate"]);
+    for r in ckpt_period::telemetry::cache_rows() {
+        t.row(&[
+            r.name.into(),
+            format!("{}", r.entries),
+            format!("{}", r.hits),
+            format!("{}", r.misses),
+            format!("{}", r.clears),
+            format!("{:.1}%", r.hit_rate() * 100.0),
+        ]);
+    }
+    println!("{}", t.render());
 }
 
 fn cmd_train(argv: &[String]) -> Result<(), String> {
@@ -1224,7 +1247,15 @@ struct BatchOutcome {
 /// errors land in the same per-line record stream; answers keep input
 /// order. Never fails: an unanswerable batch is all error records.
 fn run_batch(input: &str) -> BatchOutcome {
-    let (tagged, parse_errors) = ckpt_period::serve::parse_lines(input);
+    use ckpt_period::telemetry::registry::metrics::{
+        SERVE_BATCHES_TOTAL, SERVE_PARSE_NS, SERVE_QUERIES_REJECTED_TOTAL,
+    };
+    SERVE_BATCHES_TOTAL.inc();
+    let (tagged, parse_errors) = {
+        let _span = ckpt_period::telemetry::Span::start(&SERVE_PARSE_NS);
+        ckpt_period::serve::parse_lines(input)
+    };
+    SERVE_QUERIES_REJECTED_TOTAL.add(parse_errors.len() as u64);
     let queries: Vec<Query> = tagged.iter().map(|(_, q)| q.clone()).collect();
     let unique = BatchEngine::unique_count(&queries);
     let results = BatchEngine::new().answer_all(&queries);
@@ -1279,7 +1310,9 @@ fn cmd_batch(argv: &[String]) -> Result<(), String> {
             "socket",
             "",
             "long-lived mode: serve batches from a Unix socket at this \
-             path, one JSON-lines batch per connection (overrides --in)",
+             path, one JSON-lines batch per connection (overrides --in); \
+             a connection sending `GET /metrics` gets the Prometheus \
+             text exposition",
         ),
         ArgSpec::flag("out", "", "also write answers + error records as a JSON artifact"),
         ArgSpec::flag(
@@ -1352,7 +1385,10 @@ fn serve_socket(path: &str) -> Result<(), String> {
     // A stale socket file from a previous run would make bind fail.
     let _ = std::fs::remove_file(path);
     let listener = UnixListener::bind(path).map_err(|e| format!("bind {path}: {e}"))?;
-    eprintln!("serving on {path} (one JSON-lines batch per connection; ctrl-c to stop)");
+    eprintln!(
+        "serving on {path} (one JSON-lines batch per connection; \
+         `GET /metrics` for the exposition; ctrl-c to stop)"
+    );
     for conn in listener.incoming() {
         let mut stream = match conn {
             Ok(s) => s,
@@ -1364,6 +1400,18 @@ fn serve_socket(path: &str) -> Result<(), String> {
         let mut input = String::new();
         if let Err(e) = stream.read_to_string(&mut input) {
             eprintln!("read: {e}");
+            continue;
+        }
+        // A metrics scrape: an HTTP-style request line instead of a
+        // batch. The reply is the bare text exposition (no HTTP
+        // framing — the transport is a one-shot Unix socket, so the
+        // scraper reads to EOF like every batch client).
+        if input.trim_start().starts_with("GET /metrics") {
+            let body = ckpt_period::telemetry::render::prometheus();
+            if let Err(e) = stream.write_all(body.as_bytes()) {
+                eprintln!("write: {e}");
+            }
+            eprintln!("served metrics exposition ({} bytes)", body.len());
             continue;
         }
         let outcome = run_batch(&input);
@@ -1441,8 +1489,19 @@ fn cmd_bench(argv: &[String]) -> Result<(), String> {
 }
 
 fn cmd_info(argv: &[String]) -> Result<(), String> {
-    let specs = [ArgSpec::flag("artifacts", "artifacts", "artifacts directory")];
+    let specs = [
+        ArgSpec::flag("artifacts", "artifacts", "artifacts directory"),
+        ArgSpec::switch(
+            "metrics",
+            "print the full Prometheus text exposition of the telemetry \
+             registry instead of the summary view",
+        ),
+    ];
     let args = Args::parse("info", "artifact inventory", &specs, argv).map_err(cli_err)?;
+    if args.switch("metrics") {
+        print!("{}", ckpt_period::telemetry::render::prometheus());
+        return Ok(());
+    }
     match ArtifactDir::open(args.get("artifacts")) {
         Ok(dir) => {
             println!("artifacts at {}", dir.root().display());

@@ -67,6 +67,8 @@ impl Frontier {
     /// [`Backend::t_time_opt`]).
     pub fn compute(s: &Scenario, n: usize, backend: Backend) -> Result<Frontier, ModelError> {
         assert!(n >= 2, "need at least the two endpoint samples, got {n}");
+        let _span =
+            crate::telemetry::Span::start(&crate::telemetry::registry::metrics::FRONTIER_SOLVE_NS);
         let tt = backend.t_time_opt(s)?;
         let te = backend.t_energy_opt(s)?;
         let (lo, hi) = if tt <= te { (tt, te) } else { (te, tt) };

@@ -34,6 +34,20 @@ pub fn write_binary_artifact(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
     std::fs::write(path, bytes)
 }
 
+/// Streaming sibling of the writers above: create (truncate) an
+/// artifact file for incremental appends, with the same
+/// parent-directory behaviour. The JSONL decision-trace sink
+/// ([`crate::telemetry::trace`]) writes through this — a trace is an
+/// artifact like any other, it just grows line by line.
+pub fn create_artifact_file(path: &Path) -> std::io::Result<std::fs::File> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::File::create(path)
+}
+
 /// One entry of the flat-parameter manifest.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParamEntry {

@@ -20,6 +20,13 @@
 //! *multiplicatively* (0.45% per step — always a new quantum) off a
 //! process-wide counter, so no two benchmark phases, reps, or calls
 //! ever re-touch a quantised key by accident.
+//!
+//! Since schema v2 the document also carries tail latency: cold memo
+//! p50/p95/p99 (per-solve timing), per-thread-count serve-stage
+//! percentiles (windowed [`telemetry`](crate::telemetry) histogram
+//! snapshots around each queries/sec leg, so each window holds exactly
+//! that leg's batches), the pool thread count each measurement
+//! actually used, and a full registry snapshot under `"telemetry"`.
 
 use std::sync::atomic::{AtomicI32, Ordering};
 use std::time::Instant;
@@ -33,6 +40,9 @@ use crate::model::Backend;
 use crate::pareto::online::knee_period;
 use crate::pareto::KneeMethod;
 use crate::sweep::GridSpec;
+use crate::telemetry::histogram::HistogramSnapshot;
+use crate::telemetry::registry::metrics::{SERVE_DEDUP_NS, SERVE_SCATTER_NS, SERVE_SOLVE_NS};
+use crate::telemetry::render;
 use crate::util::bench::{black_box, Bench};
 use crate::util::json::Json;
 use crate::util::pool::ThreadPool;
@@ -57,8 +67,17 @@ fn fresh_scenarios(k: usize) -> Vec<Scenario> {
     (0..k as i32).map(|i| fig1_scenario(120.0 * MU_GROWTH.powi(start + i), 5.5)).collect()
 }
 
-/// (cold_ns, warm_ns) per knee solve over `k` fresh scenarios.
-fn memo_latency(k: usize) -> (f64, f64) {
+/// Per-knee-solve latency over `k` fresh scenarios: cold mean +
+/// percentiles, warm bulk mean.
+struct MemoLatency {
+    cold_ns: f64,
+    cold_p50_ns: f64,
+    cold_p95_ns: f64,
+    cold_p99_ns: f64,
+    warm_ns: f64,
+}
+
+fn memo_latency(k: usize) -> MemoLatency {
     let scenarios = fresh_scenarios(k);
     let solve = |s: &Scenario| {
         black_box(
@@ -66,11 +85,17 @@ fn memo_latency(k: usize) -> (f64, f64) {
                 .expect("bench scenarios stay in domain"),
         )
     };
-    let t0 = Instant::now();
+    // Cold: per-solve timing so the trajectory records the tail, not
+    // just the mean (the per-call `Instant` cost is tens of ns against
+    // a ~tens-of-µs solve).
+    let mut cold_each = Vec::with_capacity(k);
     for s in &scenarios {
+        let t0 = Instant::now();
         solve(s);
+        cold_each.push(t0.elapsed().as_secs_f64() * 1e9);
     }
-    let cold = t0.elapsed().as_secs_f64();
+    // Warm hits are ~100 ns — comparable to the timer itself — so the
+    // warm figure stays a bulk mean over many passes.
     const PASSES: usize = 10;
     let t1 = Instant::now();
     for _ in 0..PASSES {
@@ -79,14 +104,21 @@ fn memo_latency(k: usize) -> (f64, f64) {
         }
     }
     let warm = t1.elapsed().as_secs_f64();
-    (cold / k as f64 * 1e9, warm / (k * PASSES) as f64 * 1e9)
+    MemoLatency {
+        cold_ns: cold_each.iter().sum::<f64>() / k as f64,
+        cold_p50_ns: percentile(&cold_each, 0.50),
+        cold_p95_ns: percentile(&cold_each, 0.95),
+        cold_p99_ns: percentile(&cold_each, 0.99),
+        warm_ns: warm / (k * PASSES) as f64 * 1e9,
+    }
 }
 
 /// (cold, warm) queries/sec through the batch engine on a pool with
 /// `threads` participants (the submitter plus `threads - 1` workers).
 /// Median over `reps` disjoint fresh batches of `batch` queries.
-fn queries_per_sec(threads: usize, batch: usize, reps: usize) -> (f64, f64) {
+fn queries_per_sec(threads: usize, batch: usize, reps: usize) -> (f64, f64, usize) {
     let pool = ThreadPool::new(threads - 1);
+    let pool_threads = pool.n_workers() + 1;
     let mut cold_s = Vec::with_capacity(reps);
     let mut warm_s = Vec::with_capacity(reps);
     for _ in 0..reps {
@@ -105,7 +137,28 @@ fn queries_per_sec(threads: usize, batch: usize, reps: usize) -> (f64, f64) {
         warm_s.push(t1.elapsed().as_secs_f64());
     }
     let b = batch as f64;
-    (b / percentile(&cold_s, 0.5), b / percentile(&warm_s, 0.5))
+    (b / percentile(&cold_s, 0.5), b / percentile(&warm_s, 0.5), pool_threads)
+}
+
+/// The serve-stage percentile block for one queries/sec leg: the
+/// windowed histogram deltas (`after.since(before)`) for the engine's
+/// dedup/solve/scatter spans, so each leg reports exactly its own
+/// batches. (Parse never runs here — the bench constructs queries
+/// directly.)
+fn stage_stats_json(before: &[HistogramSnapshot; 3], after: &[HistogramSnapshot; 3]) -> Json {
+    let stages = ["dedup", "solve", "scatter"];
+    Json::obj(
+        stages
+            .iter()
+            .enumerate()
+            .map(|(i, name)| (*name, render::hist_stats_json(&after[i].since(&before[i]))))
+            .collect(),
+    )
+}
+
+/// The three serve-stage histograms the bench windows, snapshotted now.
+fn stage_snapshots() -> [HistogramSnapshot; 3] {
+    [SERVE_DEDUP_NS.snapshot(), SERVE_SOLVE_NS.snapshot(), SERVE_SCATTER_NS.snapshot()]
 }
 
 /// `git describe --always --dirty`, or `"unknown"` outside a work tree
@@ -134,16 +187,26 @@ pub fn run_bench() -> Json {
     let cells = if quick { 2048usize } else { 8192 };
 
     println!("serve bench ({}): memo latency …", if quick { "quick" } else { "full" });
-    let (cold_ns, warm_ns) = memo_latency(memo_scenarios);
-    println!("  cold {cold_ns:.0} ns/solve, warm {warm_ns:.0} ns/solve");
+    let memo = memo_latency(memo_scenarios);
+    println!(
+        "  cold {:.0} ns/solve (p99 {:.0}), warm {:.0} ns/solve",
+        memo.cold_ns, memo.cold_p99_ns, memo.warm_ns
+    );
 
     let mut qps = Vec::new();
     for threads in [1usize, 4, 8] {
-        let (cold, warm) = queries_per_sec(threads, batch, reps);
+        let before = stage_snapshots();
+        let (cold, warm, pool_threads) = queries_per_sec(threads, batch, reps);
+        let stages = stage_stats_json(&before, &stage_snapshots());
         println!("  {threads} thread(s): {cold:.0} cold q/s, {warm:.0} warm q/s");
         qps.push((
             threads.to_string(),
-            Json::obj(vec![("cold", Json::Num(cold)), ("warm", Json::Num(warm))]),
+            Json::obj(vec![
+                ("cold", Json::Num(cold)),
+                ("warm", Json::Num(warm)),
+                ("pool_threads", Json::Num(pool_threads as f64)),
+                ("stages", stages),
+            ]),
         ));
     }
 
@@ -160,18 +223,24 @@ pub fn run_bench() -> Json {
     bench.finish();
 
     Json::obj(vec![
-        ("schema", Json::Str("ckpt-period/bench/v1".into())),
+        ("schema", Json::Str("ckpt-period/bench/v2".into())),
         ("suite", Json::Str("serve".into())),
         ("quick", Json::Bool(quick)),
         ("git_describe", Json::Str(git_describe())),
         ("pool_threads", Json::Num((ThreadPool::global().n_workers() + 1) as f64)),
         ("memo_scenarios", Json::Num(memo_scenarios as f64)),
         ("batch", Json::Num(batch as f64)),
-        ("cold_memo_ns", Json::Num(cold_ns)),
-        ("warm_memo_ns", Json::Num(warm_ns)),
+        ("cold_memo_ns", Json::Num(memo.cold_ns)),
+        ("cold_memo_p50_ns", Json::Num(memo.cold_p50_ns)),
+        ("cold_memo_p95_ns", Json::Num(memo.cold_p95_ns)),
+        ("cold_memo_p99_ns", Json::Num(memo.cold_p99_ns)),
+        ("warm_memo_ns", Json::Num(memo.warm_ns)),
         ("queries_per_sec", Json::Obj(qps.into_iter().collect())),
         ("cells", Json::Num(cells as f64)),
         ("cell_throughput_per_sec", Json::Num(cell_throughput)),
+        // The whole-registry snapshot: counters, cache rows, histogram
+        // percentiles — everything the run touched, not just the legs.
+        ("telemetry", render::snapshot_json()),
     ])
 }
 

@@ -19,11 +19,16 @@
 //!   determinism contract as [`ThreadPool::map`].
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
 
 use super::query::Query;
 use crate::model::params::ModelError;
+use crate::telemetry::registry::metrics::{
+    SERVE_ANSWER_CACHE_CLEARS_TOTAL, SERVE_ANSWER_CACHE_HITS_TOTAL,
+    SERVE_ANSWER_CACHE_MISSES_TOTAL, SERVE_DEDUP_NS, SERVE_QUERIES_TOTAL, SERVE_SCATTER_NS,
+    SERVE_SOLVE_NS,
+};
+use crate::telemetry::Span;
 use crate::util::pool::ThreadPool;
 
 /// One solved query: the policy's period and where it lands on both
@@ -79,8 +84,6 @@ pub fn solve(q: &Query) -> Result<Answer, ModelError> {
 const ANSWER_CACHE_CAPACITY: usize = 1 << 16;
 
 static ANSWER_CACHE: OnceLock<Mutex<HashMap<Vec<u64>, Answer>>> = OnceLock::new();
-static CACHE_HITS: AtomicU64 = AtomicU64::new(0);
-static CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
 
 fn cache() -> &'static Mutex<HashMap<Vec<u64>, Answer>> {
     ANSWER_CACHE.get_or_init(|| Mutex::new(HashMap::new()))
@@ -93,15 +96,16 @@ fn cache() -> &'static Mutex<HashMap<Vec<u64>, Answer>> {
 pub fn solve_cached(q: &Query) -> Result<Answer, ModelError> {
     let key = q.solve_key();
     if let Some(&a) = cache().lock().unwrap().get(&key) {
-        CACHE_HITS.fetch_add(1, Ordering::Relaxed);
+        SERVE_ANSWER_CACHE_HITS_TOTAL.inc();
         return Ok(a);
     }
     // Compute outside the lock: a concurrent miss on the same key just
     // recomputes the same pure value.
     let a = solve(q)?;
-    CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
+    SERVE_ANSWER_CACHE_MISSES_TOTAL.inc();
     let mut m = cache().lock().unwrap();
     if m.len() >= ANSWER_CACHE_CAPACITY {
+        SERVE_ANSWER_CACHE_CLEARS_TOTAL.inc();
         m.clear();
     }
     m.insert(key, a);
@@ -112,7 +116,10 @@ pub fn solve_cached(q: &Query) -> Result<Answer, ModelError> {
 /// (the `info` subcommand's serve-path line, mirroring
 /// `sweep::cache::stats`).
 pub fn answer_cache_stats() -> (u64, u64) {
-    (CACHE_HITS.load(Ordering::Relaxed), CACHE_MISSES.load(Ordering::Relaxed))
+    (
+        SERVE_ANSWER_CACHE_HITS_TOTAL.get(),
+        SERVE_ANSWER_CACHE_MISSES_TOTAL.get(),
+    )
 }
 
 /// Live entry count of the serve answer cache.
@@ -154,29 +161,38 @@ impl BatchEngine {
         pool: &ThreadPool,
         queries: &[Query],
     ) -> Vec<Result<Answer, ModelError>> {
+        SERVE_QUERIES_TOTAL.add(queries.len() as u64);
         // Dedup pass: first occurrence of each solve key claims a slot.
-        let keys: Vec<Vec<u64>> = queries.iter().map(Query::solve_key).collect();
-        let mut first: HashMap<&[u64], usize> = HashMap::with_capacity(queries.len());
-        let mut unique: Vec<usize> = Vec::new(); // query index of each unique key
-        let mut slot: Vec<usize> = Vec::with_capacity(queries.len());
-        for (i, key) in keys.iter().enumerate() {
-            let u = *first.entry(key.as_slice()).or_insert_with(|| {
-                unique.push(i);
-                unique.len() - 1
-            });
-            slot.push(u);
-        }
+        let (unique, slot) = {
+            let _span = Span::start(&SERVE_DEDUP_NS);
+            let keys: Vec<Vec<u64>> = queries.iter().map(Query::solve_key).collect();
+            let mut first: HashMap<&[u64], usize> = HashMap::with_capacity(queries.len());
+            let mut unique: Vec<usize> = Vec::new(); // query index of each unique key
+            let mut slot: Vec<usize> = Vec::with_capacity(queries.len());
+            for (i, key) in keys.iter().enumerate() {
+                let u = *first.entry(key.as_slice()).or_insert_with(|| {
+                    unique.push(i);
+                    unique.len() - 1
+                });
+                slot.push(u);
+            }
+            (unique, slot)
+        };
         // Pooled solve of the unique queries; results land by index, so
         // the scatter below is schedule-independent.
         let use_cache = self.use_cache;
-        let solved: Vec<Result<Answer, ModelError>> = pool.map(unique.len(), |u| {
-            let q = &queries[unique[u]];
-            if use_cache {
-                solve_cached(q)
-            } else {
-                solve(q)
-            }
-        });
+        let solved: Vec<Result<Answer, ModelError>> = {
+            let _span = Span::start(&SERVE_SOLVE_NS);
+            pool.map(unique.len(), |u| {
+                let q = &queries[unique[u]];
+                if use_cache {
+                    solve_cached(q)
+                } else {
+                    solve(q)
+                }
+            })
+        };
+        let _span = Span::start(&SERVE_SCATTER_NS);
         slot.into_iter().map(|u| solved[u].clone()).collect()
     }
 

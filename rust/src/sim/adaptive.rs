@@ -60,6 +60,19 @@
 //! pure values keyed on quantised estimates), drift schedules are
 //! deterministic, so Monte-Carlo estimates are byte-identical for every
 //! thread count, exactly like [`super::runner::monte_carlo`].
+//!
+//! # Decision traces
+//!
+//! When a JSONL sink is installed ([`crate::telemetry::trace`], wired
+//! to `simulate --adaptive --trace <path>`), every sample path emits
+//! its decision log: `observe` events with the post-update estimates,
+//! a `period` event at every re-read point (`current` vs `fresh`,
+//! `changed`, and `suppressed` when the controller's pre-hysteresis
+//! recompute is being held back by the band), plus `failure` /
+//! `recovery` events. Oracle runs carry `"oracle": true`. Tracing is
+//! observational: every emit site is guarded on [`trace::enabled`]
+//! (one relaxed load when off), and results are bit-identical with
+//! the sink installed or not (`tests/telemetry.rs`).
 
 use super::failure::{Failure, FailureProcess, FailureStream};
 use crate::coordinator::adaptive::AdaptiveController;
@@ -67,6 +80,8 @@ use crate::coordinator::policy::PeriodPolicy;
 use crate::drift::{DriftProcess, EnvTrajectory};
 use crate::model::params::{ModelError, Scenario};
 use crate::model::time::young;
+use crate::telemetry::trace;
+use crate::util::json::Json;
 use crate::util::pool::ThreadPool;
 use crate::util::rng::Pcg64;
 use crate::util::stats::OnlineStats;
@@ -250,6 +265,19 @@ impl AdaptiveSimulator {
         let s0 = self.traj.scenario_at(0.0);
         ctl.observe_checkpoint(s0.ckpt.c);
         ctl.observe_restore(s0.ckpt.r);
+        if trace::enabled() {
+            trace::emit(&trace::event(
+                "observe",
+                seed,
+                0.0,
+                vec![
+                    ("c_est", Json::Num(ctl.c_estimate())),
+                    ("r_est", Json::Num(ctl.r_estimate())),
+                    ("mu_est", Json::Num(ctl.mu_estimate())),
+                    ("oracle", Json::Bool(self.cfg.oracle)),
+                ],
+            ));
+        }
 
         // When the controller's estimates leave the model's domain the
         // period in force stays what it was; before the first successful
@@ -264,6 +292,22 @@ impl AdaptiveSimulator {
                 None => fallback,
             }
         };
+        if trace::enabled() {
+            // The initial period: a decision point that never counts as
+            // an update (`changed` is false by definition).
+            trace::emit(&trace::event(
+                "period",
+                seed,
+                0.0,
+                vec![
+                    ("current", Json::Null),
+                    ("fresh", Json::Num(period)),
+                    ("changed", Json::Bool(false)),
+                    ("suppressed", Json::Bool(false)),
+                    ("oracle", Json::Bool(self.cfg.oracle)),
+                ],
+            ));
+        }
 
         let mut rng = Pcg64::seeded(seed);
         let mut stream = self.cfg.failure.stream(&mut rng);
@@ -333,8 +377,9 @@ impl AdaptiveSimulator {
                         &mut now,
                         &mut next_fail,
                         &mut stream,
+                        seed,
                     );
-                    self.reread_period(&mut ctl, &mut res, &mut period, now);
+                    self.reread_period(&mut ctl, &mut res, &mut period, now, seed);
                     continue;
                 }
                 PhaseEnd::Ran => {
@@ -383,8 +428,9 @@ impl AdaptiveSimulator {
                         &mut now,
                         &mut next_fail,
                         &mut stream,
+                        seed,
                     );
-                    self.reread_period(&mut ctl, &mut res, &mut period, now);
+                    self.reread_period(&mut ctl, &mut res, &mut period, now, seed);
                     continue;
                 }
                 PhaseEnd::Ran => {
@@ -399,7 +445,20 @@ impl AdaptiveSimulator {
                     overlap = omega * c_ckpt;
                     // The "measured" write duration is the true C(t).
                     ctl.observe_checkpoint(c_ckpt);
-                    self.reread_period(&mut ctl, &mut res, &mut period, now);
+                    if trace::enabled() {
+                        trace::emit(&trace::event(
+                            "observe",
+                            seed,
+                            now,
+                            vec![
+                                ("c_est", Json::Num(ctl.c_estimate())),
+                                ("r_est", Json::Num(ctl.r_estimate())),
+                                ("mu_est", Json::Num(ctl.mu_estimate())),
+                                ("oracle", Json::Bool(self.cfg.oracle)),
+                            ],
+                        ));
+                    }
+                    self.reread_period(&mut ctl, &mut res, &mut period, now, seed);
                 }
             }
         }
@@ -463,21 +522,46 @@ impl AdaptiveSimulator {
         res: &mut AdaptiveRunResult,
         period: &mut f64,
         now: f64,
+        seed: u64,
     ) {
         let target = self.instantaneous_target(now);
+        // The controller's raw (pre-clamp) answer, kept for the trace's
+        // hysteresis-suppression diagnosis; `None` in oracle mode.
+        let mut ctl_raw: Option<f64> = None;
         let fresh = if self.cfg.oracle {
             target.unwrap_or(*period)
         } else {
             let clamp_to =
                 if self.drifting { self.traj.scenario_at(now) } else { self.cfg.scenario };
-            match ctl.period() {
+            ctl_raw = ctl.period();
+            match ctl_raw {
                 Some(p) => clamp_to.clamp_period(p).unwrap_or(*period),
                 None => *period,
             }
         };
-        if fresh != *period {
+        let before = *period;
+        let changed = fresh != *period;
+        if changed {
             res.n_period_updates += 1;
             *period = fresh;
+        }
+        if trace::enabled() {
+            // Suppressed: the controller's latest pre-hysteresis
+            // recompute differs from the period it keeps in force —
+            // the band is holding a move back.
+            let suppressed =
+                matches!((ctl_raw, ctl.fresh_period()), (Some(p), Some(f)) if f != p);
+            let mut fields = vec![
+                ("current", Json::Num(before)),
+                ("fresh", Json::Num(fresh)),
+                ("changed", Json::Bool(changed)),
+                ("suppressed", Json::Bool(suppressed)),
+                ("oracle", Json::Bool(self.cfg.oracle)),
+            ];
+            if let Some(t_star) = target {
+                fields.push(("target", Json::Num(t_star)));
+            }
+            trace::emit(&trace::event("period", seed, now, fields));
         }
         if let Some(t_star) = target {
             res.tracking_lag_pct += ((*period - t_star) / t_star).abs() * 100.0;
@@ -504,12 +588,24 @@ impl AdaptiveSimulator {
         now: &mut f64,
         next_fail: &mut Failure,
         stream: &mut FailureStream,
+        seed: u64,
     ) {
         let s = &self.cfg.scenario;
         let (d, r_base) = (s.ckpt.d, s.ckpt.r);
         let pw = s.power;
         res.n_failures += 1;
         ctl.observe_failure();
+        if trace::enabled() {
+            trace::emit(&trace::event(
+                "failure",
+                seed,
+                *now,
+                vec![
+                    ("mu_est", Json::Num(ctl.mu_estimate())),
+                    ("oracle", Json::Bool(self.cfg.oracle)),
+                ],
+            ));
+        }
         *next_fail = stream.next_after(*now);
         loop {
             let d_end = *now + d;
@@ -541,6 +637,17 @@ impl AdaptiveSimulator {
                 *now = fail_at;
                 res.n_failures += 1;
                 ctl.observe_failure();
+                if trace::enabled() {
+                    trace::emit(&trace::event(
+                        "failure",
+                        seed,
+                        *now,
+                        vec![
+                            ("mu_est", Json::Num(ctl.mu_estimate())),
+                            ("oracle", Json::Bool(self.cfg.oracle)),
+                        ],
+                    ));
+                }
                 *next_fail = stream.next_after(*now);
                 continue;
             }
@@ -563,6 +670,20 @@ impl AdaptiveSimulator {
             }
             // The "measured" restore duration is the true R(t).
             ctl.observe_restore(r_now);
+            if trace::enabled() {
+                trace::emit(&trace::event(
+                    "recovery",
+                    seed,
+                    *now,
+                    vec![
+                        ("r", Json::Num(r_now)),
+                        ("c_est", Json::Num(ctl.c_estimate())),
+                        ("r_est", Json::Num(ctl.r_estimate())),
+                        ("mu_est", Json::Num(ctl.mu_estimate())),
+                        ("oracle", Json::Bool(self.cfg.oracle)),
+                    ],
+                ));
+            }
             return;
         }
     }

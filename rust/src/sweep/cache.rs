@@ -13,12 +13,19 @@
 //! The cache is bounded (`MAX_ENTRIES`, coarse FIFO eviction) and can be
 //! bypassed per-[`GridSpec`](super::GridSpec) or cleared/interrogated for
 //! tests and benches.
+//!
+//! Hit/miss/eviction counters live in the telemetry registry
+//! ([`crate::telemetry::registry::metrics`]) so the grid cache reports
+//! through the same unified surface as every other cache; [`stats`]
+//! keeps its historical `(hits, misses)` shape on top of them.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
 
 use super::grid::CellOutput;
+use crate::telemetry::registry::metrics::{
+    GRID_CACHE_EVICTIONS_TOTAL, GRID_CACHE_HITS_TOTAL, GRID_CACHE_MISSES_TOTAL,
+};
 
 /// Exact-bits cache key: every f64 is stored as `to_bits`, discrete
 /// fields as tagged words (see `GridSpec::cell_key`).
@@ -37,8 +44,6 @@ struct CacheState {
 }
 
 static CACHE: OnceLock<Mutex<CacheState>> = OnceLock::new();
-static HITS: AtomicU64 = AtomicU64::new(0);
-static MISSES: AtomicU64 = AtomicU64::new(0);
 
 fn cache() -> &'static Mutex<CacheState> {
     CACHE.get_or_init(|| {
@@ -53,8 +58,8 @@ fn cache() -> &'static Mutex<CacheState> {
 pub(crate) fn get(key: &CellKey) -> Option<CellOutput> {
     let hit = cache().lock().unwrap().map.get(key).cloned();
     match &hit {
-        Some(_) => HITS.fetch_add(1, Ordering::Relaxed),
-        None => MISSES.fetch_add(1, Ordering::Relaxed),
+        Some(_) => GRID_CACHE_HITS_TOTAL.inc(),
+        None => GRID_CACHE_MISSES_TOTAL.inc(),
     };
     hit
 }
@@ -64,6 +69,7 @@ pub(crate) fn put(key: CellKey, value: CellOutput) {
     if st.map.len() >= st.capacity {
         // FIFO eviction of the oldest quarter: amortised, keeps the hot
         // recent working set.
+        GRID_CACHE_EVICTIONS_TOTAL.inc();
         for _ in 0..(st.capacity / 4).max(1) {
             if let Some(old) = st.order.pop_front() {
                 st.map.remove(&old);
@@ -79,13 +85,13 @@ pub(crate) fn put(key: CellKey, value: CellOutput) {
 
 /// `(hits, misses)` since process start (or the last [`reset_stats`]).
 pub fn stats() -> (u64, u64) {
-    (HITS.load(Ordering::Relaxed), MISSES.load(Ordering::Relaxed))
+    (GRID_CACHE_HITS_TOTAL.get(), GRID_CACHE_MISSES_TOTAL.get())
 }
 
 /// Zero the hit/miss counters (benches bracket phases with this).
 pub fn reset_stats() {
-    HITS.store(0, Ordering::Relaxed);
-    MISSES.store(0, Ordering::Relaxed);
+    GRID_CACHE_HITS_TOTAL.reset();
+    GRID_CACHE_MISSES_TOTAL.reset();
 }
 
 /// Number of memoised cells.

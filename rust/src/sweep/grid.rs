@@ -553,7 +553,14 @@ impl GridSpec {
                     return hit;
                 }
             }
-            let out = eval_cell(cell, self.cell_seed(cell));
+            let out = {
+                // Cache hits skip the span: the histogram measures cell
+                // *evaluation*, not lookup.
+                let _span = crate::telemetry::Span::start(
+                    &crate::telemetry::registry::metrics::GRID_CELL_NS,
+                );
+                eval_cell(cell, self.cell_seed(cell))
+            };
             if self.use_cache {
                 cache::put(key, out.clone());
             }

@@ -1,0 +1,234 @@
+//! Fixed-bucket log2 histograms on relaxed atomics.
+//!
+//! A [`Histogram`] is a static-friendly array of power-of-two buckets
+//! (`le = 2^i` nanoseconds) plus a running sum. Observation is two
+//! relaxed `fetch_add`s and a `leading_zeros` — no locks, no
+//! allocation — so the hot paths (per pool job, per grid cell) can
+//! record unconditionally. Reads go through [`Histogram::snapshot`];
+//! snapshots subtract ([`HistogramSnapshot::since`]) so callers can
+//! attribute traffic to one measurement window, and merge by plain
+//! bucket-wise addition — the layout makes merging associative and
+//! commutative, which is why totals cannot depend on how many worker
+//! threads recorded them (`tests/telemetry.rs` pins this).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of buckets: `le = 2^0 .. 2^(BUCKETS-1)` ns, with the last
+/// bucket absorbing everything larger (2^42 ns ≈ 73 min — far beyond
+/// any span this crate times).
+pub const BUCKETS: usize = 43;
+
+/// Bucket index for an observed value: the smallest `i` with
+/// `v <= 2^i`, clamped to the top catch-all bucket.
+fn bucket_index(v: u64) -> usize {
+    if v <= 1 {
+        0
+    } else {
+        ((64 - (v - 1).leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+}
+
+/// A lock-free log2-bucket histogram (values in nanoseconds).
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    /// Const-constructible so histograms can live in `static`s.
+    pub const fn new() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Histogram { buckets: [ZERO; BUCKETS], sum: AtomicU64::new(0) }
+    }
+
+    /// Record one observation (nanoseconds).
+    pub fn observe(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of the bucket counts and sum.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut buckets = [0u64; BUCKETS];
+        for (b, a) in buckets.iter_mut().zip(&self.buckets) {
+            *b = a.load(Ordering::Relaxed);
+        }
+        HistogramSnapshot { buckets, sum: self.sum.load(Ordering::Relaxed) }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+/// An owned copy of a [`Histogram`]'s state; all readout lives here.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub buckets: [u64; BUCKETS],
+    /// Sum of all observed values (ns).
+    pub sum: u64,
+}
+
+impl HistogramSnapshot {
+    pub fn empty() -> Self {
+        HistogramSnapshot { buckets: [0; BUCKETS], sum: 0 }
+    }
+
+    /// Total number of observations.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Mean observed value (ns); 0 with no observations.
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum as f64 / n as f64
+        }
+    }
+
+    /// The traffic recorded since `earlier` (bucket-wise difference).
+    /// Counters are monotone, so on the same histogram this is always
+    /// well-defined; saturates defensively anyway.
+    pub fn since(&self, earlier: &HistogramSnapshot) -> HistogramSnapshot {
+        let mut buckets = [0u64; BUCKETS];
+        for i in 0..BUCKETS {
+            buckets[i] = self.buckets[i].saturating_sub(earlier.buckets[i]);
+        }
+        HistogramSnapshot { buckets, sum: self.sum.saturating_sub(earlier.sum) }
+    }
+
+    /// Bucket-wise merge (associative + commutative).
+    pub fn merge(&self, other: &HistogramSnapshot) -> HistogramSnapshot {
+        let mut buckets = [0u64; BUCKETS];
+        for i in 0..BUCKETS {
+            buckets[i] = self.buckets[i] + other.buckets[i];
+        }
+        HistogramSnapshot { buckets, sum: self.sum + other.sum }
+    }
+
+    /// Estimated `q`-quantile (`q` in `[0, 1]`), linearly interpolated
+    /// inside the bucket that crosses the target rank (the standard
+    /// Prometheus `histogram_quantile` estimate). 0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q), "quantile out of range: {q}");
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = q * total as f64;
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = cum + c;
+            if next as f64 >= rank {
+                let lower = if i == 0 { 0.0 } else { (1u64 << (i - 1)) as f64 };
+                let upper = (1u64 << i) as f64;
+                let frac = (rank - cum as f64) / c as f64;
+                return lower + (upper - lower) * frac.clamp(0.0, 1.0);
+            }
+            cum = next;
+        }
+        (1u64 << (BUCKETS - 1)) as f64
+    }
+
+    /// Upper bound (`le`, ns) of bucket `i`.
+    pub fn upper_bound(i: usize) -> u64 {
+        1u64 << i
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_smallest_covering_power() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index(1024), 10);
+        assert_eq!(bucket_index(1025), 11);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn observe_and_snapshot_roundtrip() {
+        let h = Histogram::new();
+        for v in [1, 2, 3, 1000, 100_000] {
+            h.observe(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), 5);
+        assert_eq!(s.sum, 1 + 2 + 3 + 1000 + 100_000);
+        assert!((s.mean() - s.sum as f64 / 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn since_isolates_a_window() {
+        let h = Histogram::new();
+        h.observe(10);
+        let before = h.snapshot();
+        h.observe(20);
+        h.observe(30);
+        let d = h.snapshot().since(&before);
+        assert_eq!(d.count(), 2);
+        assert_eq!(d.sum, 50);
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let mk = |vals: &[u64]| {
+            let h = Histogram::new();
+            for &v in vals {
+                h.observe(v);
+            }
+            h.snapshot()
+        };
+        let a = mk(&[1, 5, 9]);
+        let b = mk(&[100, 200]);
+        let c = mk(&[3_000_000]);
+        assert_eq!(a.merge(&b), b.merge(&a));
+        assert_eq!(a.merge(&b).merge(&c), a.merge(&b.merge(&c)));
+        assert_eq!(a.merge(&b).merge(&c).count(), 6);
+    }
+
+    #[test]
+    fn quantiles_interpolate_within_buckets() {
+        let h = Histogram::new();
+        // 100 observations all in the (512, 1024] bucket.
+        for _ in 0..100 {
+            h.observe(800);
+        }
+        let s = h.snapshot();
+        let p50 = s.quantile(0.5);
+        assert!((512.0..=1024.0).contains(&p50), "{p50}");
+        // Median of a single bucket lands mid-bucket.
+        assert!((p50 - 768.0).abs() < 16.0, "{p50}");
+        assert!(s.quantile(0.99) > p50);
+        assert_eq!(HistogramSnapshot::empty().quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn quantile_orders_across_buckets() {
+        let h = Histogram::new();
+        for _ in 0..90 {
+            h.observe(100);
+        }
+        for _ in 0..10 {
+            h.observe(1_000_000);
+        }
+        let s = h.snapshot();
+        assert!(s.quantile(0.5) <= 128.0);
+        assert!(s.quantile(0.99) > 500_000.0);
+    }
+}

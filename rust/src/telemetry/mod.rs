@@ -1,0 +1,55 @@
+//! Unified telemetry: metrics registry, scoped span timers, and
+//! opt-in decision traces.
+//!
+//! The serving and simulation stack is a long-lived process (the
+//! `batch --socket` server, drift sweeps, the bench harness); this
+//! module is its one observability surface, with three pillars:
+//!
+//! * **Metrics registry** ([`registry`]) — process-wide named
+//!   counters, gauges and log2-bucket histograms ([`histogram`]),
+//!   all plain relaxed atomics: lock-free on the hot path, cheap
+//!   enough to leave on, and *observational only*. Every pre-existing
+//!   ad-hoc stat surface (the [`PureMemo`](crate::util::memo)
+//!   hit/miss/clear counters, the grid-cell cache, the serve answer
+//!   cache) reports through the same snapshot ([`registry::cache_rows`]).
+//! * **Spans** ([`span`]) — RAII timers recording elapsed nanoseconds
+//!   into a histogram on drop. They instrument the serve engine's
+//!   parse/dedup/solve/scatter stages, per-job pool latency, grid-cell
+//!   evaluation, and frontier solves, so the bench trajectory carries
+//!   p50/p95/p99 tails instead of single means.
+//! * **Decision traces** ([`trace`]) — an opt-in JSONL sink recording
+//!   the adaptive controller's estimate updates, recomputed vs
+//!   hysteresis-suppressed period changes, and failure/recovery
+//!   events (`simulate --adaptive ... --trace <path>`). Disabled it
+//!   costs one relaxed load per would-be event.
+//!
+//! Rendering: [`render::prometheus`] emits the Prometheus text
+//! exposition (served on the `batch --socket` path for a
+//! `GET /metrics` request line, and printed by `info --metrics`);
+//! [`render::snapshot_json`] embeds the same data in `bench` output.
+//!
+//! # Naming conventions
+//!
+//! Families are prefixed `ckpt_`; counters end in `_total`, duration
+//! histograms in `_ns`. Labelled families (`{cache=...}`,
+//! `{memo=...}`, `{stage=...}`, `{worker=...}`) keep one family per
+//! concept rather than one per instance.
+//!
+//! # Determinism contract
+//!
+//! Telemetry values never feed a cache key, a memo key, or a seed
+//! derivation — `Scenario::key_bits`, `sweep::grid` cell keys/seeds
+//! and `serve::Query::solve_key` are all computed from model
+//! parameters alone. Adding a metric must preserve that: observe,
+//! never steer. `tests/telemetry.rs` pins instrumented runs
+//! bit-identical to uninstrumented expectations at 1 and 8 threads.
+
+pub mod histogram;
+pub mod registry;
+pub mod render;
+pub mod span;
+pub mod trace;
+
+pub use histogram::{Histogram, HistogramSnapshot};
+pub use registry::{cache_rows, timing_enabled, CacheRow, Counter, Gauge};
+pub use span::Span;

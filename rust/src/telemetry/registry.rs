@@ -1,0 +1,274 @@
+//! The process-wide metric registry: named counters, gauges and
+//! histograms as `static`s, plus the unified cache-statistics view.
+//!
+//! Everything here is a relaxed atomic — observation never takes a
+//! lock and never feeds back into computation (see the determinism
+//! contract in the [module docs](crate::telemetry)). The families are
+//! declared centrally in [`metrics`] so the Prometheus rendering
+//! ([`crate::telemetry::render`]) and the `info --metrics` view always
+//! agree on the full inventory; hot paths hold `&'static` handles, so
+//! recording is a single `fetch_add`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use super::histogram::Histogram;
+
+/// A monotone counter (`_total` families).
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Reset to zero. Diagnostic/test use only (Prometheus counters
+    /// are nominally monotone; scrapers treat a drop as a restart).
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Counter::new()
+    }
+}
+
+/// A last-write-wins gauge (u64 values).
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Gauge(AtomicU64::new(0))
+    }
+
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge::new()
+    }
+}
+
+/// Span timing on/off (default on). `CKPT_TELEMETRY=0` (or `off`)
+/// disables the `Instant::now` pairs on the per-job/per-cell hot
+/// paths; counters stay on — they are single relaxed adds and the
+/// cache/memo stat surfaces depend on them.
+pub fn timing_enabled() -> bool {
+    static ENABLED: OnceLock<bool> = OnceLock::new();
+    *ENABLED.get_or_init(|| {
+        !matches!(
+            std::env::var("CKPT_TELEMETRY").as_deref(),
+            Ok("0") | Ok("off") | Ok("false")
+        )
+    })
+}
+
+/// Upper bound on per-worker busy-time slots ([`metrics::POOL_WORKER_BUSY_NS`]).
+/// The pool sizes itself to the machine (or `CKPT_POOL_THREADS`);
+/// workers beyond the last slot fold into it.
+pub const MAX_WORKER_SLOTS: usize = 64;
+
+/// Central declaration of every metric family in the process.
+pub mod metrics {
+    use super::{Counter, Gauge, MAX_WORKER_SLOTS};
+    use crate::telemetry::histogram::Histogram;
+
+    // --- serve: the batched query engine -------------------------------
+    /// Queries answered by `BatchEngine` (after dedup scatter: one per
+    /// input query, not per unique solve).
+    pub static SERVE_QUERIES_TOTAL: Counter = Counter::new();
+    /// JSON-lines inputs rejected at parse/validate time (the per-line
+    /// `{"line","error"}` records, now countable without scraping stderr).
+    pub static SERVE_QUERIES_REJECTED_TOTAL: Counter = Counter::new();
+    /// Batches run end-to-end (`run_batch`: stdin, file or one socket
+    /// connection each).
+    pub static SERVE_BATCHES_TOTAL: Counter = Counter::new();
+    /// Serve answer-cache counters (migrated from `serve::engine`'s
+    /// private atomics; `serve::answer_cache_stats` reads these).
+    pub static SERVE_ANSWER_CACHE_HITS_TOTAL: Counter = Counter::new();
+    pub static SERVE_ANSWER_CACHE_MISSES_TOTAL: Counter = Counter::new();
+    pub static SERVE_ANSWER_CACHE_CLEARS_TOTAL: Counter = Counter::new();
+    /// Per-stage batch latency (whole stage per batch, ns):
+    /// parse / dedup / solve / scatter.
+    pub static SERVE_PARSE_NS: Histogram = Histogram::new();
+    pub static SERVE_DEDUP_NS: Histogram = Histogram::new();
+    pub static SERVE_SOLVE_NS: Histogram = Histogram::new();
+    pub static SERVE_SCATTER_NS: Histogram = Histogram::new();
+
+    // --- grid engine ----------------------------------------------------
+    /// Grid memo-cache counters (migrated from `sweep::cache`'s private
+    /// atomics; `sweep::cache::stats` reads these).
+    pub static GRID_CACHE_HITS_TOTAL: Counter = Counter::new();
+    pub static GRID_CACHE_MISSES_TOTAL: Counter = Counter::new();
+    /// FIFO eviction events (oldest quarter dropped at capacity).
+    pub static GRID_CACHE_EVICTIONS_TOTAL: Counter = Counter::new();
+    /// Per-cell evaluation latency (cache misses only — actual evals).
+    pub static GRID_CELL_NS: Histogram = Histogram::new();
+
+    // --- pareto ---------------------------------------------------------
+    /// Dense frontier solves (`Frontier::compute`: figures, the pareto
+    /// CLI, and every online-policy memo miss).
+    pub static FRONTIER_SOLVE_NS: Histogram = Histogram::new();
+
+    // --- thread pool ----------------------------------------------------
+    /// Successful steals from another participant's queue.
+    pub static POOL_STEALS_TOTAL: Counter = Counter::new();
+    /// Jobs executed (counted even with span timing disabled).
+    pub static POOL_JOBS_TOTAL: Counter = Counter::new();
+    /// Batches submitted to the pool.
+    pub static POOL_BATCHES_TOTAL: Counter = Counter::new();
+    /// Tasks enqueued by the most recent batch (set at submit time —
+    /// the depth the queues start the batch at).
+    pub static POOL_QUEUE_DEPTH: Gauge = Gauge::new();
+    /// Per-job latency (ns).
+    pub static POOL_JOB_NS: Histogram = Histogram::new();
+    /// Busy nanoseconds per participant (worker index; the submitting
+    /// thread records under its participation index `n_workers`).
+    pub static POOL_WORKER_BUSY_NS: [Counter; MAX_WORKER_SLOTS] = {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: Counter = Counter::new();
+        [ZERO; MAX_WORKER_SLOTS]
+    };
+}
+
+/// One row of the unified cache/memo statistics table: the four
+/// process-wide caches, one schema (`info` renders this; the
+/// Prometheus exposition emits the same numbers as labelled families).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheRow {
+    /// Stable row label (`grid cell cache`, `online policy memo`, ...).
+    pub name: &'static str,
+    pub entries: usize,
+    pub hits: u64,
+    pub misses: u64,
+    /// Wholesale clears (memos, answer cache) or FIFO eviction events
+    /// (grid cache) — either way the churn signal.
+    pub clears: u64,
+}
+
+impl CacheRow {
+    /// Hit fraction in `[0, 1]` (`0` before any lookup).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Snapshot of every cache/memo stat surface in the process, in stable
+/// order. This is the single source for `info`'s table, the
+/// `ckpt_cache_*` Prometheus families, and the bench telemetry block.
+pub fn cache_rows() -> Vec<CacheRow> {
+    let (grid_hits, grid_misses) = crate::sweep::cache::stats();
+    let (online, online_len) = crate::pareto::online::memo_stats();
+    let (opt, opt_len) = crate::model::backend::opt_memo_stats();
+    let (serve_hits, serve_misses) = crate::serve::answer_cache_stats();
+    vec![
+        CacheRow {
+            name: "grid cell cache",
+            entries: crate::sweep::cache::len(),
+            hits: grid_hits,
+            misses: grid_misses,
+            clears: metrics::GRID_CACHE_EVICTIONS_TOTAL.get(),
+        },
+        CacheRow {
+            name: "online policy memo",
+            entries: online_len,
+            hits: online.hits,
+            misses: online.misses,
+            clears: online.clears,
+        },
+        CacheRow {
+            name: "exact optima memo",
+            entries: opt_len,
+            hits: opt.hits,
+            misses: opt.misses,
+            clears: opt.clears,
+        },
+        CacheRow {
+            name: "serve answer cache",
+            entries: crate::serve::answer_cache_len(),
+            hits: serve_hits,
+            misses: serve_misses,
+            clears: metrics::SERVE_ANSWER_CACHE_CLEARS_TOTAL.get(),
+        },
+    ]
+}
+
+/// The histogram families by (family name, optional `stage` label),
+/// for rendering and the bench snapshot. Order is stable.
+pub fn histogram_families() -> Vec<(&'static str, Option<&'static str>, &'static Histogram)> {
+    vec![
+        ("ckpt_serve_stage_ns", Some("parse"), &metrics::SERVE_PARSE_NS),
+        ("ckpt_serve_stage_ns", Some("dedup"), &metrics::SERVE_DEDUP_NS),
+        ("ckpt_serve_stage_ns", Some("solve"), &metrics::SERVE_SOLVE_NS),
+        ("ckpt_serve_stage_ns", Some("scatter"), &metrics::SERVE_SCATTER_NS),
+        ("ckpt_pool_job_ns", None, &metrics::POOL_JOB_NS),
+        ("ckpt_grid_cell_ns", None, &metrics::GRID_CELL_NS),
+        ("ckpt_frontier_solve_ns", None, &metrics::FRONTIER_SOLVE_NS),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        static C: Counter = Counter::new();
+        static G: Gauge = Gauge::new();
+        C.inc();
+        C.add(4);
+        assert_eq!(C.get(), 5);
+        C.reset();
+        assert_eq!(C.get(), 0);
+        G.set(17);
+        assert_eq!(G.get(), 17);
+    }
+
+    #[test]
+    fn cache_rows_schema_is_stable() {
+        let rows = cache_rows();
+        let names: Vec<&str> = rows.iter().map(|r| r.name).collect();
+        assert_eq!(
+            names,
+            ["grid cell cache", "online policy memo", "exact optima memo", "serve answer cache"]
+        );
+        let empty = CacheRow { name: "x", entries: 0, hits: 0, misses: 0, clears: 0 };
+        assert_eq!(empty.hit_rate(), 0.0);
+        let half = CacheRow { hits: 1, misses: 1, ..empty };
+        assert!((half.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_families_cover_every_stage() {
+        let fams = histogram_families();
+        let stages: Vec<_> =
+            fams.iter().filter(|(n, _, _)| *n == "ckpt_serve_stage_ns").collect();
+        assert_eq!(stages.len(), 4);
+    }
+}

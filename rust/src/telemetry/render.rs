@@ -1,0 +1,272 @@
+//! Rendering the registry: Prometheus text exposition and a JSON
+//! snapshot for bench artifacts.
+
+use crate::util::json::Json;
+
+use super::histogram::{HistogramSnapshot, BUCKETS};
+use super::registry::{self, metrics};
+
+/// The full Prometheus text-format exposition of every family in the
+/// registry — served for a `GET /metrics` request line on the
+/// `batch --socket` path and printed by `info --metrics`. All families
+/// are always present (zero-valued before traffic) so scrapers and
+/// the CI greps see a stable inventory.
+pub fn prometheus() -> String {
+    let mut out = String::new();
+
+    let counters: &[(&str, &str, u64)] = &[
+        (
+            "ckpt_serve_queries_total",
+            "Queries answered by the batch engine",
+            metrics::SERVE_QUERIES_TOTAL.get(),
+        ),
+        (
+            "ckpt_serve_queries_rejected_total",
+            "Input lines rejected at parse/validate time",
+            metrics::SERVE_QUERIES_REJECTED_TOTAL.get(),
+        ),
+        (
+            "ckpt_serve_batches_total",
+            "Batches run end-to-end (stdin, file or socket connection)",
+            metrics::SERVE_BATCHES_TOTAL.get(),
+        ),
+        (
+            "ckpt_pool_steals_total",
+            "Successful work-steals between pool participants",
+            metrics::POOL_STEALS_TOTAL.get(),
+        ),
+        (
+            "ckpt_pool_jobs_total",
+            "Jobs executed on the thread pool",
+            metrics::POOL_JOBS_TOTAL.get(),
+        ),
+        (
+            "ckpt_pool_batches_total",
+            "Batches submitted to the thread pool",
+            metrics::POOL_BATCHES_TOTAL.get(),
+        ),
+    ];
+    for (name, help, v) in counters {
+        header(&mut out, name, help, "counter");
+        out.push_str(&format!("{name} {v}\n"));
+    }
+
+    header(
+        &mut out,
+        "ckpt_pool_queue_depth",
+        "Tasks enqueued by the most recent pool batch",
+        "gauge",
+    );
+    out.push_str(&format!("ckpt_pool_queue_depth {}\n", metrics::POOL_QUEUE_DEPTH.get()));
+
+    // Per-worker busy time: one family, worker-labelled; only slots
+    // that have recorded anything (the inventory line stays via HELP).
+    header(
+        &mut out,
+        "ckpt_pool_worker_busy_ns_total",
+        "Busy nanoseconds per pool participant",
+        "counter",
+    );
+    for (w, c) in metrics::POOL_WORKER_BUSY_NS.iter().enumerate() {
+        let v = c.get();
+        if v > 0 {
+            out.push_str(&format!("ckpt_pool_worker_busy_ns_total{{worker=\"{w}\"}} {v}\n"));
+        }
+    }
+
+    // The unified cache view, as labelled families.
+    header(&mut out, "ckpt_cache_entries", "Live entries per cache/memo", "gauge");
+    let rows = registry::cache_rows();
+    for r in &rows {
+        out.push_str(&format!(
+            "ckpt_cache_entries{{cache=\"{}\"}} {}\n",
+            slug(r.name),
+            r.entries
+        ));
+    }
+    for (name, help, pick) in [
+        ("ckpt_cache_hits_total", "Cache/memo hits", 0usize),
+        ("ckpt_cache_misses_total", "Cache/memo misses", 1),
+        ("ckpt_cache_clears_total", "Cache/memo wholesale clears or evictions", 2),
+    ] {
+        header(&mut out, name, help, "counter");
+        for r in &rows {
+            let v = match pick {
+                0 => r.hits,
+                1 => r.misses,
+                _ => r.clears,
+            };
+            out.push_str(&format!("{name}{{cache=\"{}\"}} {v}\n", slug(r.name)));
+        }
+    }
+
+    // Histograms: cumulative buckets, +Inf, _sum and _count per the
+    // text-format convention. Consecutive same-name families share one
+    // header.
+    let mut last_family = "";
+    for (family, stage, hist) in registry::histogram_families() {
+        if family != last_family {
+            header(&mut out, family, "Span latency histogram (ns)", "histogram");
+            last_family = family;
+        }
+        let snap = hist.snapshot();
+        write_histogram(&mut out, family, stage, &snap);
+    }
+    out
+}
+
+fn header(out: &mut String, name: &str, help: &str, kind: &str) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+}
+
+/// Prometheus label values for cache rows (`grid cell cache` →
+/// `grid-cell-cache`).
+fn slug(name: &str) -> String {
+    name.replace(' ', "-")
+}
+
+fn write_histogram(out: &mut String, family: &str, stage: Option<&str>, snap: &HistogramSnapshot) {
+    let label = |extra: &str| match stage {
+        Some(s) if extra.is_empty() => format!("{{stage=\"{s}\"}}"),
+        Some(s) => format!("{{stage=\"{s}\",{extra}}}"),
+        None if extra.is_empty() => String::new(),
+        None => format!("{{{extra}}}"),
+    };
+    // Trim trailing empty buckets but keep the full cumulative ramp up
+    // to the last observation; +Inf always closes the series.
+    let last = snap
+        .buckets
+        .iter()
+        .rposition(|&c| c > 0)
+        .map(|i| i + 1)
+        .unwrap_or(0)
+        .min(BUCKETS);
+    let mut cum = 0u64;
+    for i in 0..last {
+        cum += snap.buckets[i];
+        out.push_str(&format!(
+            "{family}_bucket{} {cum}\n",
+            label(&format!("le=\"{}\"", HistogramSnapshot::upper_bound(i)))
+        ));
+    }
+    out.push_str(&format!("{family}_bucket{} {cum}\n", label("le=\"+Inf\"")));
+    out.push_str(&format!("{family}_sum{} {}\n", label(""), snap.sum));
+    out.push_str(&format!("{family}_count{} {}\n", label(""), snap.count()));
+}
+
+/// Percentile block for one histogram snapshot — the shape embedded
+/// per-stage in `bench` v2 artifacts.
+pub fn hist_stats_json(snap: &HistogramSnapshot) -> Json {
+    Json::obj(vec![
+        ("count", Json::Num(snap.count() as f64)),
+        ("sum_ns", Json::Num(snap.sum as f64)),
+        ("mean_ns", Json::Num(snap.mean())),
+        ("p50_ns", Json::Num(snap.quantile(0.50))),
+        ("p95_ns", Json::Num(snap.quantile(0.95))),
+        ("p99_ns", Json::Num(snap.quantile(0.99))),
+    ])
+}
+
+/// JSON snapshot of the whole registry (counters + cache rows +
+/// histogram percentiles) — the `telemetry` block of `bench` v2
+/// output, and anything else that wants machine-readable metrics.
+pub fn snapshot_json() -> Json {
+    let counters = Json::obj(vec![
+        ("serve_queries_total", Json::Num(metrics::SERVE_QUERIES_TOTAL.get() as f64)),
+        (
+            "serve_queries_rejected_total",
+            Json::Num(metrics::SERVE_QUERIES_REJECTED_TOTAL.get() as f64),
+        ),
+        ("serve_batches_total", Json::Num(metrics::SERVE_BATCHES_TOTAL.get() as f64)),
+        ("pool_steals_total", Json::Num(metrics::POOL_STEALS_TOTAL.get() as f64)),
+        ("pool_jobs_total", Json::Num(metrics::POOL_JOBS_TOTAL.get() as f64)),
+        ("pool_batches_total", Json::Num(metrics::POOL_BATCHES_TOTAL.get() as f64)),
+    ]);
+    let caches = Json::Obj(
+        registry::cache_rows()
+            .into_iter()
+            .map(|r| {
+                (
+                    slug(r.name),
+                    Json::obj(vec![
+                        ("entries", Json::Num(r.entries as f64)),
+                        ("hits", Json::Num(r.hits as f64)),
+                        ("misses", Json::Num(r.misses as f64)),
+                        ("clears", Json::Num(r.clears as f64)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    let hists = Json::Obj(
+        registry::histogram_families()
+            .into_iter()
+            .map(|(family, stage, hist)| {
+                let key = match stage {
+                    Some(s) => format!("{family}/{s}"),
+                    None => family.to_string(),
+                };
+                (key, hist_stats_json(&hist.snapshot()))
+            })
+            .collect(),
+    );
+    Json::obj(vec![("counters", counters), ("caches", caches), ("histograms", hists)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::histogram::Histogram;
+
+    #[test]
+    fn exposition_lists_every_family() {
+        let text = prometheus();
+        for family in [
+            "ckpt_serve_queries_total",
+            "ckpt_serve_queries_rejected_total",
+            "ckpt_serve_batches_total",
+            "ckpt_pool_steals_total",
+            "ckpt_pool_jobs_total",
+            "ckpt_pool_queue_depth",
+            "ckpt_pool_worker_busy_ns_total",
+            "ckpt_cache_entries",
+            "ckpt_cache_hits_total",
+            "ckpt_serve_stage_ns",
+            "ckpt_pool_job_ns",
+            "ckpt_grid_cell_ns",
+            "ckpt_frontier_solve_ns",
+        ] {
+            assert!(text.contains(&format!("# TYPE {family}")), "missing {family}\n{text}");
+        }
+        // Every stage label appears on the serve histogram.
+        for stage in ["parse", "dedup", "solve", "scatter"] {
+            assert!(text.contains(&format!("stage=\"{stage}\"")), "missing {stage}");
+        }
+    }
+
+    #[test]
+    fn histogram_rendering_is_cumulative_with_inf() {
+        let h = Histogram::new();
+        h.observe(3);
+        h.observe(3);
+        h.observe(1000);
+        let mut out = String::new();
+        write_histogram(&mut out, "x_ns", None, &h.snapshot());
+        assert!(out.contains("x_ns_bucket{le=\"4\"} 2\n"), "{out}");
+        assert!(out.contains("x_ns_bucket{le=\"1024\"} 3\n"), "{out}");
+        assert!(out.contains("x_ns_bucket{le=\"+Inf\"} 3\n"), "{out}");
+        assert!(out.contains("x_ns_sum 1006\n"), "{out}");
+        assert!(out.contains("x_ns_count 3\n"), "{out}");
+    }
+
+    #[test]
+    fn snapshot_json_has_the_three_sections() {
+        let doc = snapshot_json();
+        assert!(doc.get("counters").is_some());
+        assert!(doc.get("caches").is_some());
+        let hists = doc.get("histograms").unwrap();
+        let solve = hists.get("ckpt_serve_stage_ns/solve").unwrap();
+        assert!(solve.req_f64("count").unwrap() >= 0.0);
+        assert!(solve.get("p99_ns").is_some());
+    }
+}

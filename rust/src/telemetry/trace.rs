@@ -1,0 +1,120 @@
+//! Opt-in JSONL decision traces.
+//!
+//! A trace is a line-per-event JSON artifact recording *why* the
+//! adaptive controller did what it did along each sample path: EWMA
+//! estimate updates, recomputed vs hysteresis-suppressed period
+//! changes, failures and recoveries, and the clairvoyant oracle's
+//! concurrent decisions. `simulate --adaptive ... --trace <path>`
+//! installs the sink; nothing is written (and nothing is allocated)
+//! unless one is installed — the hot-path guard is a single relaxed
+//! load, so the simulator's bit-identical determinism contract holds
+//! with tracing on or off (`tests/telemetry.rs`).
+//!
+//! Event schema: every line is a JSON object with at least
+//! `{"kind": ..., "seed": ..., "t": ...}` (`t` in simulated minutes).
+//! Kinds: `observe` (an estimator update, with the post-update
+//! estimates), `period` (a decision point: `fresh` vs `current`,
+//! `changed`, and `suppressed` when hysteresis held a recomputed
+//! move back), `failure`, `recovery`. Oracle-twin events carry
+//! `"oracle": true`. Replicates may interleave when the Monte-Carlo
+//! driver runs on the pool; lines are written atomically and each
+//! carries its seed, so per-path traces are a filter away.
+
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static SINK: Mutex<Option<BufWriter<std::fs::File>>> = Mutex::new(None);
+
+/// Install a JSONL sink at `path` (truncating; parent directories
+/// created). Replaces any previous sink after flushing it.
+pub fn install(path: &Path) -> std::io::Result<()> {
+    let file = crate::runtime::artifacts::create_artifact_file(path)?;
+    let mut sink = SINK.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(mut old) = sink.take() {
+        let _ = old.flush();
+    }
+    *sink = Some(BufWriter::new(file));
+    ACTIVE.store(true, Ordering::Release);
+    Ok(())
+}
+
+/// Whether a sink is installed. Callers must guard event construction
+/// on this so a disabled trace costs one relaxed load and nothing else.
+#[inline]
+pub fn enabled() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Write one event as a compact JSON line. Silently a no-op when no
+/// sink is installed (the guard belongs at the call site; this is the
+/// backstop).
+pub fn emit(event: &Json) {
+    if !enabled() {
+        return;
+    }
+    let line = event.to_string_compact();
+    let mut sink = SINK.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(w) = sink.as_mut() {
+        let _ = writeln!(w, "{line}");
+    }
+}
+
+/// Flush and uninstall the sink (the writer is a process-lifetime
+/// static, so `Drop` never runs — callers must finish explicitly).
+/// Returns whether a sink was installed.
+pub fn finish() -> bool {
+    ACTIVE.store(false, Ordering::Release);
+    let mut sink = SINK.lock().unwrap_or_else(|e| e.into_inner());
+    match sink.take() {
+        Some(mut w) => {
+            let _ = w.flush();
+            true
+        }
+        None => false,
+    }
+}
+
+/// Convenience constructor for the common event envelope.
+pub fn event(kind: &str, seed: u64, t: f64, fields: Vec<(&str, Json)>) -> Json {
+    let mut all: Vec<(&str, Json)> = vec![
+        ("kind", Json::Str(kind.to_string())),
+        ("seed", Json::Num(seed as f64)),
+        ("t", Json::Num(t)),
+    ];
+    all.extend(fields);
+    Json::obj(all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn install_emit_finish_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("ckpt_trace_{}", std::process::id()));
+        let path = dir.join("t.jsonl");
+        install(&path).unwrap();
+        assert!(enabled());
+        emit(&event("period", 7, 1.5, vec![("changed", Json::Bool(true))]));
+        emit(&event("failure", 7, 2.0, vec![]));
+        assert!(finish());
+        assert!(!enabled());
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = crate::util::json::parse(lines[0]).unwrap();
+        assert_eq!(first.req_str("kind").unwrap(), "period");
+        assert_eq!(first.req_f64("seed").unwrap(), 7.0);
+        assert_eq!(first.get("changed").and_then(|j| j.as_bool()), Some(true));
+        // With no sink, emit is a no-op and finish reports it.
+        emit(&event("failure", 1, 0.0, vec![]));
+        assert!(!finish());
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), text);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -24,11 +24,23 @@
 //! One batch runs at a time; concurrent submitters queue on a mutex.
 //! Worker panics are caught, the batch is drained, and the panic is
 //! re-raised on the submitting thread.
+//!
+//! The pool reports saturation through the telemetry registry: batch
+//! queue depth at submit, steal count, a per-job latency histogram and
+//! per-participant busy time (`ckpt_pool_*` families). All of it is
+//! observational — the scheduler never reads a metric back, so results
+//! stay byte-identical with telemetry on or off.
 
 use std::collections::VecDeque;
 use std::mem::MaybeUninit;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use crate::telemetry::registry::metrics::{
+    POOL_BATCHES_TOTAL, POOL_JOBS_TOTAL, POOL_JOB_NS, POOL_QUEUE_DEPTH, POOL_STEALS_TOTAL,
+    POOL_WORKER_BUSY_NS,
+};
+use crate::telemetry::registry::{timing_enabled, MAX_WORKER_SLOTS};
 
 /// Type-erased `&'static dyn Fn(usize)` for the current batch. The
 /// lifetime is a lie the pool keeps honest: [`ThreadPool::run`] does not
@@ -171,6 +183,10 @@ impl ThreadPool {
             remaining: Arc::new(AtomicUsize::new(n)),
             panicked: Arc::new(AtomicBool::new(false)),
         };
+        // Telemetry (observational only — never read back into
+        // scheduling): the depth the queues start this batch at.
+        POOL_BATCHES_TOTAL.inc();
+        POOL_QUEUE_DEPTH.set(n as u64);
 
         let epoch = {
             let mut st = lock(&self.shared.state);
@@ -308,7 +324,14 @@ fn worker_loop(shared: &Shared, me: usize) {
 fn work_on(shared: &Shared, handles: &BatchHandles, me: usize, epoch: u64) {
     while let Some(i) = pop_task(&handles.queues, me) {
         let task = handles.task;
+        POOL_JOBS_TOTAL.inc();
+        let t0 = if timing_enabled() { Some(std::time::Instant::now()) } else { None };
         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (task.0)(i)));
+        if let Some(t0) = t0 {
+            let ns = u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX);
+            POOL_JOB_NS.observe(ns);
+            POOL_WORKER_BUSY_NS[me.min(MAX_WORKER_SLOTS - 1)].add(ns);
+        }
         if res.is_err() {
             handles.panicked.store(true, Ordering::Release);
         }
@@ -348,6 +371,7 @@ fn pop_task(queues: &[Mutex<VecDeque<usize>>], me: usize) -> Option<usize> {
             mine.extend(stolen);
         }
         if first.is_some() {
+            POOL_STEALS_TOTAL.inc();
             return first;
         }
     }

@@ -1,14 +1,98 @@
-//! Bench-harness self-test (ISSUE 6 satellite): `bench --quick` must
-//! emit a `BENCH_<n>.json` that validates against the fixed schema —
-//! every future PR's perf trajectory depends on these keys staying
-//! put — and the warm memo path must be strictly faster than cold.
+//! Bench-harness self-test (ISSUE 6 satellite, extended by ISSUE 7):
+//! `bench --quick` must emit a `BENCH_<n>.json` that validates against
+//! the current schema (`ckpt-period/bench/v2` — tail latency, per-leg
+//! serve-stage percentiles, a telemetry snapshot), and the committed
+//! repo-root trajectory must stay readable: every historical point
+//! validates under its own declared version, v1 or v2, with the shared
+//! key set intact. Every future PR's perf trajectory depends on these
+//! keys staying put.
 
+use std::path::Path;
 use std::process::Command;
 
 use ckpt_period::util::json::{parse, Json};
 
 fn req_num(doc: &Json, key: &str) -> f64 {
     doc.req_f64(key).unwrap_or_else(|e| panic!("{key}: {e}"))
+}
+
+/// The v1 key set — shared by every schema version since.
+fn validate_common(doc: &Json, origin: &str) {
+    assert_eq!(doc.req_str("suite").unwrap(), "serve", "{origin}");
+    assert!(doc.get("quick").and_then(|q| q.as_bool()).is_some(), "{origin}: quick flag");
+    assert!(!doc.req_str("git_describe").unwrap().is_empty(), "{origin}: git describe label");
+    assert!(req_num(doc, "pool_threads") >= 1.0, "{origin}");
+    assert!(req_num(doc, "memo_scenarios") >= 1.0, "{origin}");
+    assert!(req_num(doc, "batch") >= 1.0, "{origin}");
+    assert!(req_num(doc, "cells") >= 1.0, "{origin}");
+    assert!(req_num(doc, "cell_throughput_per_sec") > 0.0, "{origin}");
+
+    // Cold/warm memo latency: both positive, warm strictly below cold
+    // (the memo hit path must never regress to a recompute).
+    let cold = req_num(doc, "cold_memo_ns");
+    let warm = req_num(doc, "warm_memo_ns");
+    assert!(cold > 0.0 && warm > 0.0, "{origin}: latencies cold {cold} warm {warm}");
+    assert!(warm < cold, "{origin}: warm memo {warm}ns not strictly below cold {cold}ns");
+
+    // Queries/sec at each standard thread count, cold and warm.
+    let qps = doc.get("queries_per_sec").expect("queries_per_sec object");
+    for threads in ["1", "4", "8"] {
+        let t = qps
+            .get(threads)
+            .unwrap_or_else(|| panic!("{origin}: missing thread count {threads}"));
+        assert!(req_num(t, "cold") > 0.0, "{origin}: {threads} threads cold qps");
+        assert!(req_num(t, "warm") > 0.0, "{origin}: {threads} threads warm qps");
+    }
+}
+
+/// The percentile block `render::hist_stats_json` emits, as embedded
+/// per stage in each v2 queries/sec leg.
+fn validate_stage_stats(stats: &Json, origin: &str) {
+    assert!(req_num(stats, "count") >= 1.0, "{origin}: stage never recorded");
+    let p50 = req_num(stats, "p50_ns");
+    let p95 = req_num(stats, "p95_ns");
+    let p99 = req_num(stats, "p99_ns");
+    assert!(p50 > 0.0, "{origin}: p50");
+    assert!(p50 <= p95 && p95 <= p99, "{origin}: percentiles out of order {p50}/{p95}/{p99}");
+}
+
+/// v2 additions: cold-memo tail, per-leg pool_threads + stage
+/// percentiles, and the whole-registry telemetry snapshot.
+fn validate_v2(doc: &Json, origin: &str) {
+    let p50 = req_num(doc, "cold_memo_p50_ns");
+    let p95 = req_num(doc, "cold_memo_p95_ns");
+    let p99 = req_num(doc, "cold_memo_p99_ns");
+    assert!(p50 > 0.0, "{origin}: cold p50");
+    assert!(p50 <= p95 && p95 <= p99, "{origin}: cold tail out of order {p50}/{p95}/{p99}");
+
+    let qps = doc.get("queries_per_sec").expect("queries_per_sec object");
+    for threads in ["1", "4", "8"] {
+        let t = qps.get(threads).unwrap();
+        let origin = format!("{origin} @{threads}t");
+        assert!(req_num(t, "pool_threads") >= 1.0, "{origin}: pool_threads");
+        let stages = t.get("stages").unwrap_or_else(|| panic!("{origin}: stages block"));
+        for stage in ["dedup", "solve", "scatter"] {
+            let s = stages.get(stage).unwrap_or_else(|| panic!("{origin}: stage {stage}"));
+            validate_stage_stats(s, &format!("{origin}/{stage}"));
+        }
+    }
+
+    let telemetry = doc.get("telemetry").unwrap_or_else(|| panic!("{origin}: telemetry block"));
+    for section in ["counters", "caches", "histograms"] {
+        assert!(telemetry.get(section).is_some(), "{origin}: telemetry.{section}");
+    }
+}
+
+/// Dispatch on the declared schema version. Every version validates
+/// the common key set; v2 adds the observability payload.
+fn validate(doc: &Json, origin: &str) {
+    let schema = doc.req_str("schema").unwrap_or_else(|e| panic!("{origin}: {e}")).to_string();
+    validate_common(doc, origin);
+    match schema.as_str() {
+        "ckpt-period/bench/v1" => {}
+        "ckpt-period/bench/v2" => validate_v2(doc, origin),
+        other => panic!("{origin}: unknown bench schema {other}"),
+    }
 }
 
 #[test]
@@ -33,33 +117,10 @@ fn bench_quick_emits_a_schema_valid_trajectory_point() {
     let raw = std::fs::read_to_string(&path).expect("BENCH_0.json exists");
     let doc = parse(&raw).expect("valid JSON");
 
-    // Required keys, exactly as EXPERIMENTS.md and CI consume them.
-    assert_eq!(doc.req_str("schema").unwrap(), "ckpt-period/bench/v1");
-    assert_eq!(doc.req_str("suite").unwrap(), "serve");
+    // A fresh run must declare the current schema and fully validate.
+    assert_eq!(doc.req_str("schema").unwrap(), "ckpt-period/bench/v2");
     assert_eq!(doc.get("quick").and_then(|q| q.as_bool()), Some(true));
-    assert!(!doc.req_str("git_describe").unwrap().is_empty(), "git describe label");
-    assert!(req_num(&doc, "pool_threads") >= 1.0);
-    assert!(req_num(&doc, "memo_scenarios") >= 1.0);
-    assert!(req_num(&doc, "batch") >= 1.0);
-    assert!(req_num(&doc, "cells") >= 1.0);
-    assert!(req_num(&doc, "cell_throughput_per_sec") > 0.0);
-
-    // Cold/warm memo latency: both positive, warm strictly below cold
-    // (the memo hit path must never regress to a recompute).
-    let cold = req_num(&doc, "cold_memo_ns");
-    let warm = req_num(&doc, "warm_memo_ns");
-    assert!(cold > 0.0 && warm > 0.0, "latencies: cold {cold} warm {warm}");
-    assert!(warm < cold, "warm memo {warm}ns not strictly below cold {cold}ns");
-
-    // Queries/sec at each standard thread count, cold and warm.
-    let qps = doc.get("queries_per_sec").expect("queries_per_sec object");
-    for threads in ["1", "4", "8"] {
-        let t = qps.get(threads).unwrap_or_else(|| panic!("missing thread count {threads}"));
-        let cold_qps = req_num(t, "cold");
-        let warm_qps = req_num(t, "warm");
-        assert!(cold_qps > 0.0, "{threads} threads cold qps");
-        assert!(warm_qps > 0.0, "{threads} threads warm qps");
-    }
+    validate(&doc, "fresh quick run");
 
     // A second run appends the next index instead of overwriting.
     let out = Command::new(env!("CARGO_BIN_EXE_ckpt-period"))
@@ -71,4 +132,22 @@ fn bench_quick_emits_a_schema_valid_trajectory_point() {
     assert_eq!(std::fs::read_to_string(dir.join("BENCH_0.json")).unwrap(), raw);
 
     let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn committed_trajectory_validates_under_each_declared_version() {
+    // Tests run with CWD = rust/; the trajectory lives at the repo root.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("repo root").to_path_buf();
+    let mut found = 0usize;
+    for i in 0.. {
+        let path = root.join(format!("BENCH_{i}.json"));
+        if !path.exists() {
+            break;
+        }
+        let raw = std::fs::read_to_string(&path).unwrap();
+        let doc = parse(&raw).unwrap_or_else(|e| panic!("BENCH_{i}.json: {e}"));
+        validate(&doc, &format!("BENCH_{i}.json"));
+        found += 1;
+    }
+    assert!(found >= 1, "no committed BENCH_<n>.json trajectory at the repo root");
 }

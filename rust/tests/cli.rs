@@ -366,12 +366,84 @@ fn drift_and_knob_flags_are_validated() {
 fn info_reports_memo_counters() {
     let out = run_ok(&["info"]);
     assert!(out.contains("memo caches"), "{out}");
-    assert!(out.contains("online policy memo"), "{out}");
-    assert!(out.contains("exact optima memo"), "{out}");
-    // The serve-path answer cache reports alongside the older memos
-    // (zero counters in a fresh process, but the line is always there).
-    assert!(out.contains("serve answer cache"), "{out}");
-    assert!(out.contains("0 hits / 0 misses"), "{out}");
+    // One registry-driven table, every cached surface a row (zero
+    // counters in a fresh process, but every row is always there).
+    for row in
+        ["grid cell cache", "online policy memo", "exact optima memo", "serve answer cache"]
+    {
+        assert!(out.contains(row), "missing cache row {row}: {out}");
+    }
+    for col in ["entries", "hits", "misses", "clears", "hit rate"] {
+        assert!(out.contains(col), "missing column {col}: {out}");
+    }
+}
+
+#[test]
+fn info_metrics_prints_the_prometheus_exposition() {
+    let out = run_ok(&["info", "--metrics"]);
+    assert!(out.contains("# TYPE ckpt_cache_hits_total counter"), "{out}");
+    assert!(out.contains("# TYPE ckpt_serve_stage_ns histogram"), "{out}");
+    assert!(out.contains("ckpt_cache_entries{cache=\"grid-cell-cache\"}"), "{out}");
+    assert!(out.contains("ckpt_serve_stage_ns_bucket{stage=\"solve\",le=\"+Inf\"}"), "{out}");
+    // Exposition-only mode: no summary tables mixed into the scrape.
+    assert!(!out.contains("memo caches"), "{out}");
+}
+
+#[test]
+fn simulate_trace_writes_a_replayable_jsonl_decision_log() {
+    let dir = std::env::temp_dir().join(format!("ckpt_cli_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.jsonl");
+    let out = bin()
+        .args([
+            "simulate",
+            "--adaptive",
+            "--policy",
+            "knee",
+            "--drift",
+            "ramp:0:5000:c=2,r=2,io=2",
+            "--replicates",
+            "4",
+            "--seed",
+            "3",
+            "--trace",
+            path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("decision trace written"), "{err}");
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut kinds = std::collections::BTreeSet::new();
+    let mut oracle_seen = false;
+    for line in text.lines() {
+        // Every line is one standalone JSON event with the envelope.
+        let doc = ckpt_period::util::json::parse(line)
+            .unwrap_or_else(|e| panic!("bad trace line {line}: {e}"));
+        let kind = doc.req_str("kind").unwrap().to_string();
+        assert!(
+            ["observe", "period", "failure", "recovery"].contains(&kind.as_str()),
+            "unknown kind {kind}"
+        );
+        doc.req_f64("seed").unwrap();
+        doc.req_f64("t").unwrap();
+        if doc.get("oracle").and_then(|j| j.as_bool()) == Some(true) {
+            oracle_seen = true;
+        }
+        kinds.insert(kind);
+    }
+    assert!(kinds.contains("observe"), "kinds: {kinds:?}");
+    assert!(kinds.contains("period"), "kinds: {kinds:?}");
+    assert!(oracle_seen, "the oracle twin's decisions must be traced too");
+    std::fs::remove_dir_all(&dir).unwrap();
+
+    // --trace is an adaptive-run concept; anything else is an error.
+    let out =
+        bin().args(["simulate", "--trace", "x.jsonl", "--replicates", "2"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--adaptive"));
 }
 
 #[test]
