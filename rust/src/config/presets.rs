@@ -7,6 +7,7 @@
 use crate::drift::{DriftProcess, DriftTargets};
 use crate::model::params::{CheckpointParams, Platform, PowerParams, Scenario};
 use crate::sim::FailureProcess;
+use crate::storage::{TierHierarchy, TierSpec};
 
 /// Default application size used when the paper does not pin one: the
 /// ratios plotted in the figures are independent of `T_base` (it scales
@@ -104,13 +105,11 @@ pub fn io_contention_scenario(mu_min: f64, rho: f64, contention: f64) -> Option<
 }
 
 /// Two-level fast/slow checkpoint family (VELOC-style multi-level
-/// checkpointing collapsed to the paper's single-`C` model): every
-/// `slow_every`-th checkpoint is flushed to the slow level (cost
-/// `c_slow`), the rest hit the fast level (cost `c_fast`), so the
-/// *steady-state average* checkpoint cost is
-/// `((slow_every−1)·c_fast + c_slow)/slow_every`. Recovery conservatively
-/// reads the slow level (`R = c_slow` — the fast tier is lost with the
-/// failed node). Fig. 1 powers at the given `ρ`.
+/// checkpointing collapsed to the paper's single-`C` model): a thin
+/// wrapper over the [`crate::storage`] hierarchy that builds the
+/// fast/slow [`TierHierarchy`] this family always modelled implicitly,
+/// then flattens it with [`flatten_two_level`] at cadence `slow_every`.
+/// Fig. 1 powers at the given `ρ`.
 pub fn two_level_scenario(
     mu_min: f64,
     rho: f64,
@@ -120,10 +119,29 @@ pub fn two_level_scenario(
 ) -> Option<Scenario> {
     assert!(slow_every >= 1, "slow_every must be >= 1");
     assert!(c_slow >= c_fast && c_fast > 0.0, "need 0 < c_fast <= c_slow");
-    let c_eff = ((slow_every - 1) as f64 * c_fast + c_slow) / slow_every as f64;
-    let ckpt = CheckpointParams::new(c_eff, c_slow, 1.0, 0.5).ok()?;
     let power = PowerParams::from_rho(rho, 1.0, 0.0).ok()?;
+    let h = TierHierarchy::new(&[
+        TierSpec::new(c_fast, c_fast, power.p_io),
+        TierSpec::new(c_slow, c_slow, power.p_io),
+    ])
+    .ok()?;
+    let (c_eff, r_eff) = flatten_two_level(&h, slow_every);
+    let ckpt = CheckpointParams::new(c_eff, r_eff, 1.0, 0.5).ok()?;
     Scenario::new(ckpt, power, mu_min, DEFAULT_T_BASE_MIN).ok()
+}
+
+/// Collapse a 2-level hierarchy to the paper's scalar model at drain
+/// cadence `slow_every`: every `slow_every`-th checkpoint pays the slow
+/// level (cost `C_1`), the rest hit the fast level (cost `C_0`), so the
+/// *steady-state average* write cost is
+/// `((slow_every−1)·C_0 + C_1)/slow_every`. Recovery conservatively
+/// reads the slow level (`R = R_1` — the fast tier is lost with the
+/// failed node). Returns `(c_eff, r_eff)`.
+pub fn flatten_two_level(h: &TierHierarchy, slow_every: usize) -> (f64, f64) {
+    assert!(h.len() == 2, "flatten_two_level takes a 2-level hierarchy");
+    assert!(slow_every >= 1, "slow_every must be >= 1");
+    let c_eff = ((slow_every - 1) as f64 * h.tier(0).c + h.tier(1).c) / slow_every as f64;
+    (c_eff, h.tier(1).r)
 }
 
 /// Explicit `(α, β, γ)` power-ratio variant of the Fig. 1 checkpoint
@@ -232,6 +250,32 @@ pub fn drift_presets() -> Vec<(&'static str, DriftProcess)> {
 /// top of the raw [`DriftProcess::parse`] grammar).
 pub fn drift_preset(name: &str) -> Option<DriftProcess> {
     drift_presets().into_iter().find(|(n, _)| *n == name).map(|(_, d)| d)
+}
+
+/// The named storage-hierarchy presets behind `--tiers` and the tiers
+/// figure, fastest first, in the Fig. 1 unit system (`P_Static = 1`,
+/// minutes for costs):
+///
+/// * `tiers-1` — the flattened baseline: everything on the parallel
+///   file system (`C = R = 10`, `P_IO = 10`). A single level
+///   canonicalises to the scalar model, so on the Fig. 1 powers this
+///   reproduces the paper's single-`C` scenarios bit-for-bit.
+/// * `tiers-2` — node-local SSD in front of the PFS: cheap, low-draw
+///   synchronous writes (`C = 1`, `P_IO = 3`) with background drains
+///   to the surviving level.
+/// * `tiers-3` — SSD → burst buffer (`C = 2`, `R = 3`, `P_IO = 6`) →
+///   PFS.
+pub fn tier_presets() -> Vec<(&'static str, Vec<TierSpec>)> {
+    let ssd = TierSpec::new(1.0, 1.0, 3.0);
+    let bb = TierSpec::new(2.0, 3.0, 6.0);
+    let pfs = TierSpec::new(10.0, 10.0, 10.0);
+    vec![("tiers-1", vec![pfs]), ("tiers-2", vec![ssd, pfs]), ("tiers-3", vec![ssd, bb, pfs])]
+}
+
+/// Look up a [`tier_presets`] hierarchy by name (the CLI accepts these
+/// on top of the raw [`crate::storage::parse_tiers`] grammar).
+pub fn tier_preset(name: &str) -> Option<Vec<TierSpec>> {
+    tier_presets().into_iter().find(|(n, _)| *n == name).map(|(_, t)| t)
 }
 
 /// The named trade-off scenario families the Pareto subsystem ships:
@@ -348,6 +392,61 @@ mod tests {
         let s = two_level_scenario(300.0, 5.5, 1.0, 10.0, 1).unwrap();
         assert_eq!(s.ckpt.c, 10.0);
         assert_eq!(s.ckpt.r, 10.0);
+    }
+
+    #[test]
+    fn two_level_wrapper_matches_legacy_flatten_bit_for_bit() {
+        // The hierarchy-backed wrapper must reproduce the pre-refactor
+        // inline expression exactly, not just to tolerance.
+        for &(c_fast, c_slow, every) in
+            &[(1.0, 10.0, 10usize), (0.7, 9.3, 3), (2.5, 2.5, 1), (1.0, 10.0, 7)]
+        {
+            let s = two_level_scenario(300.0, 5.5, c_fast, c_slow, every).unwrap();
+            let legacy = ((every - 1) as f64 * c_fast + c_slow) / every as f64;
+            assert_eq!(s.ckpt.c.to_bits(), legacy.to_bits(), "({c_fast},{c_slow},{every})");
+            assert_eq!(s.ckpt.r.to_bits(), c_slow.to_bits());
+            // Flattening drops the hierarchy: the family stays scalar.
+            assert!(s.tiers.is_scalar());
+            let h = TierHierarchy::new(&[
+                TierSpec::new(c_fast, c_fast, s.power.p_io),
+                TierSpec::new(c_slow, c_slow, s.power.p_io),
+            ])
+            .unwrap();
+            assert_eq!(flatten_two_level(&h, every), (legacy, c_slow));
+        }
+    }
+
+    #[test]
+    fn tier_presets_are_valid_and_layered() {
+        let presets = tier_presets();
+        assert_eq!(presets.len(), 3);
+        assert_eq!(presets[0].0, "tiers-1");
+        assert_eq!(presets[1].0, "tiers-2");
+        assert_eq!(presets[2].0, "tiers-3");
+        for (i, (name, tiers)) in presets.iter().enumerate() {
+            assert_eq!(tiers.len(), i + 1, "{name}");
+            // Fastest-first: synchronous writes must not get slower
+            // than the flattened PFS baseline.
+            assert!(tiers[0].c <= tiers[tiers.len() - 1].c, "{name}");
+            // Every preset applies cleanly to every trade-off scenario.
+            for (label, s) in tradeoff_presets() {
+                let t = Scenario::with_tier_specs(s.ckpt, s.power, s.mu, s.t_base, tiers)
+                    .unwrap_or_else(|e| panic!("{name} on {label}: {e:?}"));
+                assert_eq!(t.hierarchy().is_some(), tiers.len() > 1, "{name} on {label}");
+            }
+        }
+        // tiers-1 on the Fig. 1 powers *is* the Fig. 1 scenario.
+        let fig1 = fig1_scenario(300.0, 5.5);
+        let flat = Scenario::with_tier_specs(
+            fig1.ckpt,
+            fig1.power,
+            fig1.mu,
+            fig1.t_base,
+            &tier_preset("tiers-1").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(flat, fig1);
+        assert!(tier_preset("bogus").is_none());
     }
 
     #[test]

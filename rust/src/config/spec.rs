@@ -5,15 +5,26 @@
 //!   "checkpoint": {"c": 10.0, "r": 10.0, "d": 1.0, "omega": 0.5},
 //!   "power": {"p_static": 10.0, "p_cal": 10.0, "p_io": 100.0, "p_down": 0.0},
 //!   "platform": {"n_nodes": 1e6, "mu_ind_minutes": 65700000.0},
-//!   "t_base_minutes": 10000.0
+//!   "t_base_minutes": 10000.0,
+//!   "tiers": [
+//!     {"c": 1.0, "r": 1.0, "p_io": 30.0},
+//!     {"c": 10.0, "r": 10.0, "p_io": 100.0, "retention": 4}
+//!   ]
 //! }
 //! ```
 //!
-//! `platform` may be replaced by a direct `"mu_minutes": 120.0`.
+//! `platform` may be replaced by a direct `"mu_minutes": 120.0`. The
+//! optional `tiers` array (innermost first) attaches a storage
+//! hierarchy; a one-element array canonicalises to the scalar model
+//! with that tier's costs ([`Scenario::with_tier_specs`]). Unknown keys
+//! — at the top level and inside each tier — are rejected rather than
+//! silently ignored: a typo'd `tires` must not quietly produce a scalar
+//! scenario on the wire (the serve protocol's strictness contract).
 
 use std::path::Path;
 
 use crate::model::params::{CheckpointParams, ModelError, Platform, PowerParams, Scenario};
+use crate::storage::TierSpec;
 use crate::util::json::{parse, Json, JsonError};
 
 /// Parsed + validated scenario file.
@@ -76,6 +87,26 @@ impl ScenarioSpec {
 
     pub fn from_str(raw: &str) -> Result<Self, SpecError> {
         let doc = parse(raw)?;
+        if let Json::Obj(m) = &doc {
+            for key in m.keys() {
+                if !matches!(
+                    key.as_str(),
+                    "checkpoint"
+                        | "power"
+                        | "platform"
+                        | "mu_minutes"
+                        | "t_base_minutes"
+                        | "n_nodes"
+                        | "tiers"
+                ) {
+                    return Err(JsonError::Schema(format!(
+                        "unknown scenario field `{key}` (expected checkpoint|power|platform|\
+                         mu_minutes|t_base_minutes|n_nodes|tiers)"
+                    ))
+                    .into());
+                }
+            }
+        }
         let ck = doc
             .get("checkpoint")
             .ok_or_else(|| JsonError::Schema("missing `checkpoint`".into()))?;
@@ -102,10 +133,21 @@ impl ScenarioSpec {
             (doc.req_f64("mu_minutes")?, None)
         };
         let t_base = doc.req_f64("t_base_minutes")?;
-        Ok(ScenarioSpec { scenario: Scenario::new(ckpt, power, mu, t_base)?, n_nodes })
+        let scenario = match doc.get("tiers") {
+            None => Scenario::new(ckpt, power, mu, t_base)?,
+            Some(node) => {
+                let specs = parse_tier_array(node)?;
+                Scenario::with_tier_specs(ckpt, power, mu, t_base, &specs)?
+            }
+        };
+        Ok(ScenarioSpec { scenario, n_nodes })
     }
 
     /// Serialise back to JSON (round-trip support for tooling).
+    ///
+    /// Tiered scenarios emit their `tiers` array, so a serve
+    /// [`crate::serve::query::Query`] carrying a hierarchy survives the
+    /// wire round-trip with identical solve keys.
     pub fn to_json(&self) -> Json {
         let s = &self.scenario;
         let mut fields = vec![
@@ -133,8 +175,77 @@ impl ScenarioSpec {
         if let Some(n) = self.n_nodes {
             fields.push(("n_nodes", Json::Num(n)));
         }
+        if let Some(h) = s.hierarchy() {
+            let tiers: Vec<Json> = h
+                .iter()
+                .map(|t| {
+                    let mut tf = vec![
+                        ("c", Json::Num(t.c)),
+                        ("r", Json::Num(t.r)),
+                        ("p_io", Json::Num(t.p_io)),
+                    ];
+                    if t.capacity > 0 {
+                        tf.push(("capacity", Json::Num(t.capacity as f64)));
+                    }
+                    if t.retention > 0 {
+                        tf.push(("retention", Json::Num(t.retention as f64)));
+                    }
+                    Json::obj(tf)
+                })
+                .collect();
+            fields.push(("tiers", Json::Arr(tiers)));
+        }
         Json::obj(fields)
     }
+}
+
+/// Parse the `tiers` array: each element is an object with required
+/// `c`/`r`/`p_io` and optional integer `capacity`/`retention` (0 =
+/// unbounded). Unknown per-tier keys are rejected.
+fn parse_tier_array(node: &Json) -> Result<Vec<TierSpec>, SpecError> {
+    let items = match node {
+        Json::Arr(v) => v,
+        _ => return Err(JsonError::Schema("`tiers` must be an array".into()).into()),
+    };
+    let mut specs = Vec::with_capacity(items.len());
+    for (i, item) in items.iter().enumerate() {
+        let obj = match item {
+            Json::Obj(m) => m,
+            _ => {
+                return Err(
+                    JsonError::Schema(format!("tiers[{i}] must be an object")).into()
+                )
+            }
+        };
+        for key in obj.keys() {
+            if !matches!(key.as_str(), "c" | "r" | "p_io" | "capacity" | "retention") {
+                return Err(JsonError::Schema(format!(
+                    "tiers[{i}]: unknown field `{key}` (expected c|r|p_io|capacity|retention)"
+                ))
+                .into());
+            }
+        }
+        let bound = |key: &str| -> Result<u32, SpecError> {
+            match item.get(key) {
+                None => Ok(0),
+                Some(Json::Num(n)) if *n >= 0.0 && n.fract() == 0.0 && *n <= u32::MAX as f64 => {
+                    Ok(*n as u32)
+                }
+                Some(other) => Err(JsonError::Schema(format!(
+                    "tiers[{i}]: `{key}` must be a non-negative integer, got {other}"
+                ))
+                .into()),
+            }
+        };
+        specs.push(TierSpec::with_limits(
+            item.req_f64("c").map_err(|e| JsonError::Schema(format!("tiers[{i}]: {e}")))?,
+            item.req_f64("r").map_err(|e| JsonError::Schema(format!("tiers[{i}]: {e}")))?,
+            item.req_f64("p_io").map_err(|e| JsonError::Schema(format!("tiers[{i}]: {e}")))?,
+            bound("capacity")?,
+            bound("retention")?,
+        ));
+    }
+    Ok(specs)
 }
 
 #[cfg(test)]
@@ -196,5 +307,73 @@ mod tests {
         let spec = ScenarioSpec::from_file(&path).unwrap();
         assert_eq!(spec.scenario.t_base, 10_000.0);
         let _ = std::fs::remove_file(path);
+    }
+
+    const TIERED: &str = r#"{
+        "checkpoint": {"c": 10.0, "r": 10.0, "d": 1.0, "omega": 0.5},
+        "power": {"p_static": 10, "p_cal": 10, "p_io": 100, "p_down": 0},
+        "mu_minutes": 300.0,
+        "t_base_minutes": 10000.0,
+        "tiers": [
+            {"c": 1.0, "r": 1.0, "p_io": 30.0},
+            {"c": 10.0, "r": 10.0, "p_io": 100.0, "retention": 4}
+        ]
+    }"#;
+
+    #[test]
+    fn tiered_spec_parses_and_projects_effective_scalars() {
+        let spec = ScenarioSpec::from_str(TIERED).unwrap();
+        let s = spec.scenario;
+        let h = s.hierarchy().expect("hierarchy attached");
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.tier(1).retention, 4);
+        // Effective scalars are the tier projections, not the raw
+        // checkpoint block: C = C_0, R = R_1, P_IO = P_IO_0.
+        assert_eq!(s.ckpt.c, 1.0);
+        assert_eq!(s.ckpt.r, 10.0);
+        assert_eq!(s.power.p_io, 30.0);
+        // D and ω pass through.
+        assert_eq!(s.ckpt.d, 1.0);
+        assert_eq!(s.ckpt.omega, 0.5);
+    }
+
+    #[test]
+    fn single_tier_spec_is_scalar() {
+        let one = TIERED.replace(
+            r#"{"c": 1.0, "r": 1.0, "p_io": 30.0},
+            "#,
+            "",
+        );
+        let spec = ScenarioSpec::from_str(&one).unwrap();
+        assert!(spec.scenario.hierarchy().is_none());
+        assert_eq!(spec.scenario.ckpt.c, 10.0);
+        assert_eq!(spec.scenario.power.p_io, 100.0);
+    }
+
+    #[test]
+    fn tiered_roundtrip_preserves_solve_identity() {
+        let spec = ScenarioSpec::from_str(TIERED).unwrap();
+        let back = ScenarioSpec::from_str(&spec.to_json().to_string_pretty()).unwrap();
+        assert_eq!(spec.scenario, back.scenario);
+        assert_eq!(spec.scenario.key_words(), back.scenario.key_words());
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected_everywhere() {
+        // Top level: a typo'd `tires` must not produce a scalar scenario.
+        let top = GOOD.replace("\"mu_minutes\"", "\"tires\": [], \"mu_minutes\"");
+        let err = ScenarioSpec::from_str(&top).unwrap_err().to_string();
+        assert!(err.contains("unknown scenario field `tires`"), "{err}");
+        // Per tier: `io` is the CLI grammar's spelling, not the JSON one.
+        let tier = TIERED.replace(r#""p_io": 30.0"#, r#""io": 30.0"#);
+        let err = ScenarioSpec::from_str(&tier).unwrap_err().to_string();
+        assert!(err.contains("tiers[0]"), "{err}");
+        // Invalid tier values surface as model errors.
+        let bad = TIERED.replace(r#""c": 1.0"#, r#""c": -1.0"#);
+        assert!(ScenarioSpec::from_str(&bad).is_err());
+        // Bounds must be non-negative integers.
+        let frac = TIERED.replace(r#""retention": 4"#, r#""retention": 1.5"#);
+        let err = ScenarioSpec::from_str(&frac).unwrap_err().to_string();
+        assert!(err.contains("non-negative integer"), "{err}");
     }
 }

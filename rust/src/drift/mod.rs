@@ -562,11 +562,11 @@ impl EnvTrajectory {
     }
 
     /// Exact-bits encoding: the base scenario's canonical
-    /// [`Scenario::key_bits`] listing followed by the drift schedule's
-    /// [`DriftProcess::key_words`].
+    /// [`Scenario::key_words`] listing (tier-aware; identical to the
+    /// historical `key_bits` prefix for scalar scenarios) followed by
+    /// the drift schedule's [`DriftProcess::key_words`].
     pub fn key_words(&self) -> Vec<u64> {
-        let mut k = Vec::with_capacity(24);
-        k.extend_from_slice(&self.base.key_bits());
+        let mut k = self.base.key_words();
         k.extend_from_slice(&self.drift.key_words());
         k
     }

@@ -11,6 +11,7 @@
 //! | [`knee_drift::series`] | first-order vs exact knee drift per preset + small-μ stress rows (beyond the paper) |
 //! | [`adaptive::series`] | adaptive knee policy vs AlgoT/AlgoE/Young/Daly under injected failures (beyond the paper) |
 //! | [`drift::series`] | drift tracking: lag + oracle regret vs EWMA α × hysteresis band × drift speed per drift family (beyond the paper) |
+//! | [`tiers::series`] | multi-level storage: 1/2/3-level hierarchy frontiers + knee shifts per preset (beyond the paper) |
 //! | [`ablations`]       | ω sweep, first-order accuracy, γ sweep, MSK, Weibull robustness |
 //!
 //! Every series is built as a [`crate::sweep::GridSpec`] and evaluated
@@ -31,6 +32,7 @@ pub mod fig3;
 pub mod frontier;
 pub mod headline;
 pub mod knee_drift;
+pub mod tiers;
 
 /// Base seed every figure/ablation grid derives its cell seeds from.
 pub const FIGURE_SEED: u64 = 2013;

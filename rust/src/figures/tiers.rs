@@ -1,0 +1,157 @@
+//! Tiers figure (beyond the paper): the time–energy trade-off of a
+//! multi-level checkpoint hierarchy, compared level-by-level.
+//!
+//! Every trade-off preset is evaluated under each of the
+//! [`tier_presets`] storage stacks — the flattened PFS baseline
+//! (`tiers-1`, which canonicalises to the paper's scalar model), a
+//! 2-level SSD→PFS hierarchy, and a 3-level SSD→BB→PFS hierarchy —
+//! and the full frontier plus both knees is emitted per combination.
+//! The headline is the knee shift: how much of the synchronous-write
+//! cost a drained hierarchy converts into simultaneous time *and*
+//! energy savings at the sweet spot of the curve.
+
+use crate::config::presets::{tier_presets, tradeoff_presets};
+use crate::model::{Backend, Scenario};
+use crate::pareto::{family_frontiers, FamilyFrontier};
+use crate::util::table::{fnum, Table};
+
+/// Label separator between the base preset and the tier preset
+/// (`fig1-rho5.5+tiers-2`). `+` keeps the label CSV- and shell-safe.
+pub const LABEL_SEP: char = '+';
+
+/// The labelled (base preset × tier preset) scenarios this figure
+/// plots. Out-of-domain combinations are skipped, like every preset
+/// family; the tier presets are chosen so none are today (asserted by
+/// the preset tests).
+pub fn presets() -> Vec<(String, Scenario)> {
+    let mut out = Vec::new();
+    for (base, s) in tradeoff_presets() {
+        for (tname, tiers) in tier_presets() {
+            if let Ok(t) = Scenario::with_tier_specs(s.ckpt, s.power, s.mu, s.t_base, &tiers) {
+                out.push((format!("{base}{LABEL_SEP}{tname}"), t));
+            }
+        }
+    }
+    out
+}
+
+/// Compute every combination's first-order frontier at `points`
+/// samples, as one grid batch seeded from [`super::FIGURE_SEED`].
+pub fn series(points: usize) -> Vec<FamilyFrontier> {
+    family_frontiers(presets(), points, super::FIGURE_SEED, Backend::FirstOrder)
+}
+
+/// One row per (scenario, tier preset): endpoints, hypervolume, and
+/// the chord knee in both absolute and relative coordinates — the
+/// `tiers.csv` artifact. Comparing a `tiers-2`/`tiers-3` row with the
+/// `tiers-1` row of the same base preset is the level-by-level story.
+pub fn table(frontiers: &[FamilyFrontier]) -> Table {
+    let mut t = Table::new(&[
+        "scenario",
+        "tiers",
+        "levels",
+        "T_time_min",
+        "T_energy_min",
+        "time_at_T_time_min",
+        "energy_at_T_energy",
+        "hypervolume",
+        "knee_period_min",
+        "knee_time_min",
+        "knee_energy",
+        "knee_time_overhead_pct",
+        "knee_energy_gain_pct",
+    ]);
+    for f in frontiers {
+        let Ok(sum) = &f.summary else { continue };
+        let (base, tname) = split_label(&f.label);
+        let levels = f.scenario.hierarchy().map(|h| h.len()).unwrap_or(1);
+        let first = sum.points.first();
+        let last = sum.points.last();
+        let knee = sum.knee_chord.as_ref();
+        t.row(&[
+            base.to_string(),
+            tname.to_string(),
+            format!("{levels}"),
+            fnum(sum.t_time_opt, 3),
+            fnum(sum.t_energy_opt, 3),
+            first.map(|p| fnum(p.time, 2)).unwrap_or_default(),
+            last.map(|p| fnum(p.energy, 2)).unwrap_or_default(),
+            fnum(sum.hypervolume, 4),
+            knee.map(|k| fnum(k.point.period, 2)).unwrap_or_default(),
+            knee.map(|k| fnum(k.point.time, 2)).unwrap_or_default(),
+            knee.map(|k| fnum(k.point.energy, 2)).unwrap_or_default(),
+            knee.map(|k| fnum(sum.time_overhead_pct(&k.point), 2)).unwrap_or_default(),
+            knee.map(|k| fnum(sum.energy_gain_pct(&k.point), 2)).unwrap_or_default(),
+        ]);
+    }
+    t
+}
+
+/// The knee shift of every multi-level stack against the flattened
+/// `tiers-1` baseline of the same base preset:
+/// `(base, tiers, knee_time_delta_pct, knee_energy_delta_pct)`, both
+/// deltas relative to the baseline knee (negative = the hierarchy's
+/// knee is strictly better on that axis).
+pub fn knee_shifts(frontiers: &[FamilyFrontier]) -> Vec<(String, String, f64, f64)> {
+    let knee_of = |label: &str| {
+        frontiers
+            .iter()
+            .find(|f| f.label == label)
+            .and_then(|f| f.summary.as_ref().ok())
+            .and_then(|s| s.knee_chord.as_ref())
+            .map(|k| k.point)
+    };
+    let mut out = Vec::new();
+    for f in frontiers {
+        let (base, tname) = split_label(&f.label);
+        if tname == "tiers-1" {
+            continue;
+        }
+        let Some(flat) = knee_of(&format!("{base}{LABEL_SEP}tiers-1")) else { continue };
+        let Some(k) = f.summary.as_ref().ok().and_then(|s| s.knee_chord.as_ref()) else {
+            continue;
+        };
+        out.push((
+            base.to_string(),
+            tname.to_string(),
+            (k.point.time / flat.time - 1.0) * 100.0,
+            (k.point.energy / flat.energy - 1.0) * 100.0,
+        ));
+    }
+    out
+}
+
+fn split_label(label: &str) -> (&str, &str) {
+    label.split_once(LABEL_SEP).unwrap_or((label, ""))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_covers_every_combination() {
+        let fr = series(17);
+        assert_eq!(fr.len(), tradeoff_presets().len() * tier_presets().len());
+        for f in &fr {
+            assert!(f.summary.is_ok(), "{} left the domain", f.label);
+        }
+        assert_eq!(table(&fr).n_rows(), fr.len());
+    }
+
+    #[test]
+    fn deeper_hierarchies_knee_strictly_dominates_the_flat_baseline() {
+        // The acceptance headline: on every base preset the 2- and
+        // 3-level stacks move the knee strictly down *and* left of the
+        // flattened single-level equivalent.
+        let fr = series(33);
+        let shifts = knee_shifts(&fr);
+        assert_eq!(shifts.len(), tradeoff_presets().len() * (tier_presets().len() - 1));
+        for (base, tiers, dt, de) in &shifts {
+            assert!(
+                *dt < 0.0 && *de < 0.0,
+                "{base}+{tiers}: knee time {dt:+.2}% / energy {de:+.2}% vs tiers-1"
+            );
+        }
+    }
+}

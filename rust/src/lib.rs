@@ -91,6 +91,27 @@
 //! `BENCH_<n>.json` perf trajectory; see the [`serve`] module docs for
 //! the full protocol (grammar, error records, backpressure).
 //!
+//! # Tiered checkpoint storage
+//!
+//! [`storage`] replaces the paper's single `(C, R, P_IO)` triple with a
+//! multi-level hierarchy — node-local SSD → burst buffer → parallel
+//! file system, each level a [`storage::TierSpec`] with its own write
+//! cost, restart cost, I/O power draw and copy-retention bound.
+//! Checkpoints write synchronously to tier 0 and *drain
+//! asynchronously* to slower tiers every κ-th checkpoint; a node loss
+//! destroys the local copies, so recovery restarts from the freshest
+//! copy on the nearest surviving tier. [`model::tiers`] prices the
+//! hierarchy analytically (κ-minimised time/energy envelopes, a
+//! numerically-solved optimal period plus per-tier drain-cadence
+//! vector, memoised like the exact optima), the DES simulates drain
+//! queues and nearest-tier restarts, and the frontier/policy/serve
+//! layers accept tiered scenarios end-to-end (`--tiers`, the
+//! `ScenarioSpec` `"tiers"` key, `figures::tiers` → `tiers.csv`).
+//! Degenerate 1-level hierarchies canonicalise to the scalar model at
+//! construction ([`storage::TierConfig::from_tiers`]) and encode to
+//! zero extra key words, so every pre-refactor period, frontier point,
+//! sample path and solve key is reproduced bit-for-bit.
+//!
 //! # Observability
 //!
 //! [`telemetry`] is the one instrumentation surface for the whole
@@ -125,6 +146,7 @@ pub mod pareto;
 pub mod runtime;
 pub mod serve;
 pub mod sim;
+pub mod storage;
 pub mod sweep;
 pub mod telemetry;
 pub mod util;

@@ -18,7 +18,8 @@ use std::path::{Path, PathBuf};
 
 use ckpt_period::cli::{ArgSpec, Args, CliError};
 use ckpt_period::config::presets::{
-    drift_preset, drift_presets, fig1_scenario, power_ratio_sweep, tradeoff_presets,
+    drift_preset, drift_presets, fig1_scenario, power_ratio_sweep, tier_preset, tier_presets,
+    tradeoff_presets,
 };
 use ckpt_period::config::ScenarioSpec;
 use ckpt_period::coordinator::{Coordinator, CoordinatorConfig, OverlapMode, PeriodPolicy};
@@ -45,6 +46,8 @@ const USAGE: &str =
 Reproduction of Aupy et al., 'Optimal Checkpointing Period: Time vs. Energy' (2013).
 
   optimize  optimal periods + time/energy trade-off for a scenario
+            (--tiers <preset|grammar> evaluates it over a multi-level
+            storage hierarchy; shared by sweep/pareto/simulate)
   sweep     CSV of T_final/E_final over a period grid
   pareto    time-energy Pareto frontier: knees, eps-constraint solves,
             optional Monte-Carlo validation, JSON artifact (--out);
@@ -66,7 +69,8 @@ Reproduction of Aupy et al., 'Optimal Checkpointing Period: Time vs. Energy' (20
             non-stationary environment (requires --adaptive)
   figures   regenerate every paper figure (incl. the frontier, the
             first-order-vs-exact knee drift, the adaptive policy
-            comparison, and the drift-tracking sweep) as CSV
+            comparison, the drift-tracking sweep, and the multi-level
+            storage-tier comparison) as CSV
   train     fault-tolerant PJRT training run (--model as in simulate;
             --adaptive takes --alpha/--hysteresis, and --drift scales
             the failure injector's MTBF along the schedule)
@@ -81,7 +85,9 @@ Reproduction of Aupy et al., 'Optimal Checkpointing Period: Time vs. Energy' (20
             Prometheus text exposition instead of a batch reply
   bench     standardised serving benchmark (cold/warm memo latency,
             queries/sec at 1/4/8 threads, grid-engine cell throughput)
-            -> BENCH_<n>.json at the repo root (--quick for CI)
+            -> BENCH_<n>.json at the repo root (--quick for CI;
+            --gate compares the two newest trajectory entries and fails
+            on a >15% warm-path regression instead of benchmarking)
   info      artifact inventory + the unified cache/memo counter table
             (--metrics prints the full Prometheus text exposition)
 
@@ -129,7 +135,7 @@ fn cli_err(e: CliError) -> String {
 }
 
 /// Shared scenario flags.
-const SCENARIO_SPECS: [ArgSpec; 8] = [
+const SCENARIO_SPECS: [ArgSpec; 9] = [
     ArgSpec::flag("c", "10", "checkpoint duration C (minutes)"),
     ArgSpec::flag("r", "10", "recovery duration R (minutes)"),
     ArgSpec::flag("d", "1", "downtime D (minutes)"),
@@ -137,8 +143,42 @@ const SCENARIO_SPECS: [ArgSpec; 8] = [
     ArgSpec::flag("mu", "300", "platform MTBF (minutes)"),
     ArgSpec::flag("t-base", "10000", "application duration T_base (minutes)"),
     ArgSpec::flag("rho", "5.5", "power ratio rho = (1+beta)/(1+alpha)"),
+    ArgSpec::flag(
+        "tiers",
+        "",
+        "storage hierarchy: a preset (tiers-1|tiers-2|tiers-3) or the raw tier \
+         grammar; overrides C/R and the I/O draw with the hierarchy's projection",
+    ),
     ArgSpec::flag("config", "", "JSON scenario file (overrides the flags above)"),
 ];
+
+/// Map an unparseable `--tiers` value to a [`CliError`] with the full
+/// grammar (and the preset names) in the message, mirroring `--drift`.
+/// Raw grammar input is validated through [`TierHierarchy`] here so a
+/// bad stack (too many levels, a non-positive cost) fails with the
+/// same flag-scoped error as a syntax mistake.
+fn parse_tiers_flag(raw: &str) -> Result<Vec<ckpt_period::storage::TierSpec>, String> {
+    if let Some(preset) = tier_preset(raw) {
+        return Ok(preset);
+    }
+    ckpt_period::storage::parse_tier_specs(raw)
+        .and_then(|specs| {
+            ckpt_period::storage::TierHierarchy::new(&specs)?;
+            Ok(specs)
+        })
+        .map_err(|e| {
+            let presets: Vec<&str> = tier_presets().iter().map(|(n, _)| *n).collect();
+            cli_err(CliError::InvalidValue(
+                "tiers".into(),
+                raw.into(),
+                format!(
+                    "{e}; expected {} or a preset ({})",
+                    ckpt_period::storage::TIER_GRAMMAR,
+                    presets.join("|")
+                ),
+            ))
+        })
+}
 
 fn scenario_from(args: &Args) -> Result<Scenario, String> {
     let cfg = args.get("config");
@@ -155,13 +195,15 @@ fn scenario_from(args: &Args) -> Result<Scenario, String> {
     .map_err(|e| e.to_string())?;
     let power = PowerParams::from_rho(args.get_f64("rho").map_err(cli_err)?, 1.0, 0.0)
         .map_err(|e| e.to_string())?;
-    Scenario::new(
-        ckpt,
-        power,
-        args.get_f64("mu").map_err(cli_err)?,
-        args.get_f64("t-base").map_err(cli_err)?,
-    )
-    .map_err(|e| e.to_string())
+    let mu = args.get_f64("mu").map_err(cli_err)?;
+    let t_base = args.get_f64("t-base").map_err(cli_err)?;
+    let raw_tiers = args.get("tiers");
+    if !raw_tiers.is_empty() {
+        let tiers = parse_tiers_flag(raw_tiers)?;
+        return Scenario::with_tier_specs(ckpt, power, mu, t_base, &tiers)
+            .map_err(|e| e.to_string());
+    }
+    Scenario::new(ckpt, power, mu, t_base).map_err(|e| e.to_string())
 }
 
 fn cmd_optimize(argv: &[String]) -> Result<(), String> {
@@ -672,6 +714,15 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     let reps = args.get_usize("replicates").map_err(cli_err)?;
     let seed = args.get_u64("seed").map_err(cli_err)?;
     let knobs = ControllerKnobs::from_args(&args)?;
+    // Mirrors the serve-layer rule (and the simulator's own assert):
+    // the drain queue has no trajectory semantics yet.
+    if s.hierarchy().is_some() && !knobs.drift.is_stationary() {
+        return Err(cli_err(CliError::InvalidValue(
+            "drift".into(),
+            args.get("drift").into(),
+            "tiered scenarios (--tiers) require a stationary drift schedule".into(),
+        )));
+    }
     let trace_path = args.get("trace");
     if args.switch("adaptive") {
         let tracing = !trace_path.is_empty();
@@ -1099,6 +1150,12 @@ fn cmd_figures(argv: &[String]) -> Result<(), String> {
         );
     }
 
+    let ti = figures::tiers::series(n);
+    figures::persist(&figures::tiers::table(&ti), &dir, "tiers").map_err(|e| e.to_string())?;
+    for (base, tname, dt, de) in figures::tiers::knee_shifts(&ti) {
+        println!("tiers knee [{base}+{tname}]: time {dt:+.1}% / energy {de:+.1}% vs tiers-1");
+    }
+
     let ad = figures::adaptive::series(64);
     figures::persist(&figures::adaptive::table(&ad), &dir, "adaptive")
         .map_err(|e| e.to_string())?;
@@ -1456,6 +1513,11 @@ fn repo_root() -> PathBuf {
 fn cmd_bench(argv: &[String]) -> Result<(), String> {
     let specs = [
         ArgSpec::switch("quick", "shrink every workload (sets CKPT_BENCH_QUICK; CI mode)"),
+        ArgSpec::switch(
+            "gate",
+            "compare the two newest BENCH_<n>.json instead of benchmarking: fail on a \
+             >15% warm-path regression, skip cleanly across schema changes (CI gate)",
+        ),
         ArgSpec::flag(
             "out-dir",
             "",
@@ -1472,6 +1534,12 @@ fn cmd_bench(argv: &[String]) -> Result<(), String> {
         "" => repo_root(),
         d => PathBuf::from(d),
     };
+    if args.switch("gate") {
+        for line in ckpt_period::serve::bench::gate_trajectory(&dir)? {
+            println!("{line}");
+        }
+        return Ok(());
+    }
     let doc = ckpt_period::serve::bench::run_bench();
     // First unused index: the perf trajectory appends, never overwrites.
     let mut n = 0u32;

@@ -42,6 +42,7 @@ use super::exact::{
     e_final_exact, exact_breakdown, t_energy_opt_exact, t_final_exact, t_time_opt_exact,
     RecoveryModel,
 };
+use super::optimize::grid_then_golden;
 use super::params::{ModelError, Scenario};
 use super::{energy, time};
 use crate::util::memo::PureMemo;
@@ -96,12 +97,29 @@ impl Backend {
 
     /// Expected makespan at period `t`. `+inf` outside the backend's
     /// domain (first-order: `t ∉ (a, 2μb)`; exact: `t ≤ a`).
+    ///
+    /// Tiered scenarios: the first-order arm dispatches through
+    /// [`time::t_final`] to the κ-minimised envelope; the exact arm
+    /// applies the tier structure as an **additive first-order
+    /// correction** on top of the exact renewal value of the flattened
+    /// projection — `exact(flat) + (FO_tiered − FO_flat)` — since the
+    /// renewal recursion has no closed tiered analogue. For scalar
+    /// scenarios both corrections vanish identically.
     pub fn t_final(&self, s: &Scenario, t: f64) -> f64 {
         match self {
             Backend::FirstOrder => time::t_final(s, t),
             Backend::Exact(m) => {
                 if t <= s.a() {
                     f64::INFINITY
+                } else if s.hierarchy().is_some() {
+                    let flat = s.scalar_effective();
+                    let fo_tiered = time::t_final(s, t);
+                    let fo_flat = time::t_final(&flat, t);
+                    if !fo_tiered.is_finite() || !fo_flat.is_finite() {
+                        f64::INFINITY
+                    } else {
+                        t_final_exact(s, t, *m) + (fo_tiered - fo_flat)
+                    }
                 } else {
                     t_final_exact(s, t, *m)
                 }
@@ -109,14 +127,23 @@ impl Backend {
         }
     }
 
-    /// Expected energy at period `t` (same domain convention as
-    /// [`Self::t_final`]).
+    /// Expected energy at period `t` (same domain convention and tier
+    /// handling as [`Self::t_final`]).
     pub fn e_final(&self, s: &Scenario, t: f64) -> f64 {
         match self {
             Backend::FirstOrder => energy::e_final(s, t),
             Backend::Exact(m) => {
                 if t <= s.a() {
                     f64::INFINITY
+                } else if s.hierarchy().is_some() {
+                    let flat = s.scalar_effective();
+                    let fo_tiered = energy::e_final(s, t);
+                    let fo_flat = energy::e_final(&flat, t);
+                    if !fo_tiered.is_finite() || !fo_flat.is_finite() {
+                        f64::INFINITY
+                    } else {
+                        e_final_exact(s, t, *m) + (fo_tiered - fo_flat)
+                    }
                 } else {
                     e_final_exact(s, t, *m)
                 }
@@ -135,6 +162,11 @@ impl Backend {
             Backend::Exact(m) => {
                 if t <= s.a() {
                     (f64::INFINITY, f64::INFINITY)
+                } else if s.hierarchy().is_some() {
+                    // The tier corrections differ per objective; route
+                    // through the single-objective arms (the breakdown
+                    // sharing below only pays off for scalar scenarios).
+                    (self.t_final(s, t), self.e_final(s, t))
                 } else {
                     let b = exact_breakdown(s, t, *m);
                     (b.makespan, b.energy)
@@ -171,13 +203,22 @@ impl Backend {
 
     /// The backend's time-optimal period, clamped to `T ≥ C`. Errors
     /// exactly when the first-order model has no feasible period (see
-    /// the module docs on the shared domain gate).
+    /// the module docs on the shared domain gate). Tiered scenarios
+    /// minimise the tier-corrected objective numerically, memoised
+    /// like the scalar exact optima (the key carries the tier words).
     pub fn t_time_opt(&self, s: &Scenario) -> Result<f64, ModelError> {
         match self {
             Backend::FirstOrder => time::t_time_opt(s),
             Backend::Exact(m) => {
                 s.clamp_period(s.min_period())?;
-                Ok(cached_opt(OPT_TIME_TAG, *m, s, || t_time_opt_exact(s, *m)))
+                if s.hierarchy().is_some() {
+                    let b = *self;
+                    Ok(cached_opt(OPT_TIME_TAG, *m, s, || {
+                        numeric_opt(s, |t| b.t_final(s, t))
+                    }))
+                } else {
+                    Ok(cached_opt(OPT_TIME_TAG, *m, s, || t_time_opt_exact(s, *m)))
+                }
             }
         }
     }
@@ -189,7 +230,14 @@ impl Backend {
             Backend::FirstOrder => energy::t_energy_opt(s),
             Backend::Exact(m) => {
                 s.clamp_period(s.min_period())?;
-                Ok(cached_opt(OPT_ENERGY_TAG, *m, s, || t_energy_opt_exact(s, *m)))
+                if s.hierarchy().is_some() {
+                    let b = *self;
+                    Ok(cached_opt(OPT_ENERGY_TAG, *m, s, || {
+                        numeric_opt(s, |t| b.e_final(s, t))
+                    }))
+                } else {
+                    Ok(cached_opt(OPT_ENERGY_TAG, *m, s, || t_energy_opt_exact(s, *m)))
+                }
             }
         }
     }
@@ -198,23 +246,39 @@ impl Backend {
 const OPT_TIME_TAG: u64 = 1;
 const OPT_ENERGY_TAG: u64 = 2;
 
-type OptKey = [u64; 12];
+type OptKey = Vec<u64>;
 
 /// One entry per (optimum, recovery model, scenario) triple; see
 /// [`PureMemo`] for the clearing/concurrency contract. Sized for drift
 /// sweeps, which visit one scenario per distinct quantised trajectory
-/// view ([`opt_memo_stats`] reports the churn).
+/// view ([`opt_memo_stats`] reports the churn). Keys are the
+/// variable-length [`Scenario::key_words`] (scalar scenarios produce
+/// the historical 12-word shape, tiered ones append their extension).
 static OPT_MEMO: PureMemo<OptKey> = PureMemo::new(32_768);
 
 fn opt_key(tag: u64, model: RecoveryModel, s: &Scenario) -> OptKey {
-    let mut k = [0u64; 12];
-    k[0] = tag;
-    k[1] = match model {
+    let mut k = Vec::with_capacity(12);
+    k.push(tag);
+    k.push(match model {
         RecoveryModel::Ideal => 1,
         RecoveryModel::Restarting => 2,
-    };
-    k[2..12].copy_from_slice(&s.key_bits());
+    });
+    k.extend(s.key_words());
     k
+}
+
+/// Numeric argmin over the first-order feasibility domain — the same
+/// bracketing as `energy::t_energy_opt_numeric`, but over an arbitrary
+/// (tier-corrected) objective.
+fn numeric_opt(s: &Scenario, f: impl FnMut(f64) -> f64) -> f64 {
+    let (lo, hi) = s.domain();
+    let lo = lo.max(s.min_period() * 0.5).max(lo + 1e-9 * (hi - lo));
+    let hi = hi * (1.0 - 1e-9);
+    if lo >= hi {
+        return s.min_period();
+    }
+    let (t, _) = grid_then_golden(f, lo, hi, 400, 1e-9 * (hi - lo));
+    t
 }
 
 /// Memoised numeric optimum: pure function of the key, so which thread
@@ -378,6 +442,41 @@ mod tests {
                 assert_eq!(time.to_bits(), b.t_final(&s, t).to_bits(), "{} t={t}", b.name());
                 assert_eq!(energy.to_bits(), b.e_final(&s, t).to_bits(), "{} t={t}", b.name());
             }
+        }
+    }
+
+    #[test]
+    fn exact_backend_applies_additive_tier_correction() {
+        use crate::storage::TierSpec;
+        let flat = fig1_scenario(120.0, 5.5);
+        let tiered = Scenario::with_tier_specs(
+            flat.ckpt,
+            flat.power,
+            flat.mu,
+            flat.t_base,
+            &[TierSpec::new(1.0, 1.0, 30.0), TierSpec::new(10.0, 10.0, 100.0)],
+        )
+        .unwrap();
+        let proj = tiered.scalar_effective();
+        for m in [RecoveryModel::Ideal, RecoveryModel::Restarting] {
+            let b = Backend::Exact(m);
+            for t in [30.0, 60.0, 120.0] {
+                let expect = t_final_exact(&proj, t, m)
+                    + (time::t_final(&tiered, t) - time::t_final(&proj, t));
+                assert_eq!(b.t_final(&tiered, t).to_bits(), expect.to_bits());
+                let expect_e = e_final_exact(&proj, t, m)
+                    + (energy::e_final(&tiered, t) - energy::e_final(&proj, t));
+                assert_eq!(b.e_final(&tiered, t).to_bits(), expect_e.to_bits());
+            }
+            // Optima are finite, in-domain, memo-stable, and distinct
+            // from the flattened projection's (the memo key carries the
+            // tier words).
+            let tt = b.t_time_opt(&tiered).unwrap();
+            assert_eq!(tt.to_bits(), b.t_time_opt(&tiered).unwrap().to_bits());
+            assert!(tt >= tiered.min_period());
+            assert!(b.t_final(&tiered, tt).is_finite());
+            let flat_tt = b.t_time_opt(&proj).unwrap();
+            assert_ne!(tt.to_bits(), flat_tt.to_bits(), "{}", b.name());
         }
     }
 

@@ -72,6 +72,11 @@ pub fn io_per_failure(s: &Scenario, t: f64) -> f64 {
 }
 
 /// Compute all phase durations at period `t`.
+///
+/// For tiered scenarios `t_final` is the κ-minimised envelope while the
+/// phase *split* uses the effective scalar projection (tier-0 writes,
+/// tier-1 recovery) — a diagnostic view; the tiered energy accounting
+/// itself lives in [`super::tiers::e_final_at`].
 pub fn phase_times(s: &Scenario, t: f64) -> PhaseTimes {
     let tf = t_final(s, t);
     if !tf.is_finite() {
@@ -90,7 +95,13 @@ pub fn phase_times(s: &Scenario, t: f64) -> PhaseTimes {
 }
 
 /// Expected total energy `E_final(T)` (mW·min with the paper's units).
+///
+/// Tiered scenarios dispatch to the κ-minimised envelope in
+/// [`super::tiers`]; the scalar path below is untouched.
 pub fn e_final(s: &Scenario, t: f64) -> f64 {
+    if let Some(h) = s.hierarchy() {
+        return super::tiers::e_final_tiered(s, h, t);
+    }
     let ph = phase_times(s, t);
     if !ph.t_final.is_finite() {
         return f64::INFINITY;
@@ -135,6 +146,9 @@ pub fn t_energy_opt_raw(s: &Scenario) -> f64 {
 /// Energy-optimal period clamped into `[C, 2μb)`: the period **AlgoE**
 /// checkpoints with.
 pub fn t_energy_opt(s: &Scenario) -> Result<f64, ModelError> {
+    if let Some(h) = s.hierarchy() {
+        return super::tiers::t_energy_opt_tiered(s, h);
+    }
     s.clamp_period(t_energy_opt_raw(s))
 }
 

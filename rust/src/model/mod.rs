@@ -19,6 +19,11 @@
 //! * [`msk`] — the Meneses–Sarood–Kalé baseline of [6], with the
 //!   per-failure loss terms the paper's §3.2 side note attributes to it.
 //! * [`ratios`] — the AlgoT-vs-AlgoE comparisons all figures are built on.
+//! * [`tiers`] — the multi-level storage analytics: κ-minimised
+//!   time/energy envelopes over a [`crate::storage::TierHierarchy`] and
+//!   the memoised optimal period-plus-cadence vector ([`tiers::TierPlan`]).
+//!   [`time`]/[`energy`] dispatch to it when a scenario carries a
+//!   hierarchy; scalar scenarios never touch it.
 //!
 //! # When the exact backend matters
 //!
@@ -42,6 +47,7 @@ pub mod msk;
 pub mod optimize;
 pub mod params;
 pub mod ratios;
+pub mod tiers;
 pub mod time;
 pub mod waste;
 

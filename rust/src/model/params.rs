@@ -1,5 +1,7 @@
 //! Model parameters (§2 of the paper) and their validity checks.
 
+use crate::storage::{TierConfig, TierHierarchy};
+
 /// Resilience parameters (§2.1). All times in minutes.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CheckpointParams {
@@ -167,6 +169,13 @@ pub struct Scenario {
     pub mu: f64,
     /// Failure-free application duration `T_base` in minutes.
     pub t_base: f64,
+    /// Storage model. [`TierConfig::Scalar`] (the default, and what
+    /// every pre-existing constructor produces) means `ckpt`/`power`
+    /// are the whole story. `Tiered` carries the multi-level hierarchy
+    /// while `ckpt.c`/`ckpt.r`/`power.p_io` hold its *effective
+    /// projection* — tier-0 write cost, tier-1 restart cost, tier-0 I/O
+    /// power — so scalar-only consumers still see sensible numbers.
+    pub tiers: TierConfig,
 }
 
 impl Scenario {
@@ -176,9 +185,79 @@ impl Scenario {
         mu: f64,
         t_base: f64,
     ) -> Result<Self, ModelError> {
-        let s = Scenario { ckpt, power, mu, t_base };
+        let s = Scenario { ckpt, power, mu, t_base, tiers: TierConfig::Scalar };
         s.validate()?;
         Ok(s)
+    }
+
+    /// Scenario over a storage hierarchy. `ckpt` supplies `D` and `ω`
+    /// only; its `c`/`r` (and `power.p_io`) are overwritten with the
+    /// hierarchy's effective projection: synchronous writes land on
+    /// tier 0 (`c = C_0`, `p_io = P_IO_0`) and recovery reads the
+    /// nearest drained tier (`r = R_1`). A 1-level hierarchy
+    /// canonicalises to the scalar model — bit-for-bit, because the
+    /// projection of a single tier *is* that tier.
+    pub fn with_tiers(
+        ckpt: CheckpointParams,
+        power: PowerParams,
+        mu: f64,
+        t_base: f64,
+        tiers: TierConfig,
+    ) -> Result<Self, ModelError> {
+        let (ckpt, power, tiers) = match tiers.hierarchy() {
+            None => {
+                (ckpt, power, TierConfig::Scalar)
+            }
+            Some(h) => {
+                let mut ckpt = ckpt;
+                let mut power = power;
+                ckpt.c = h.tier(0).c;
+                ckpt.r = h.tier(1).r;
+                power.p_io = h.tier(0).p_io;
+                (ckpt, power, tiers)
+            }
+        };
+        let s = Scenario { ckpt, power, mu, t_base, tiers };
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Scenario over a raw tier slice. A 1-level slice canonicalises to
+    /// the scalar model with that tier's `(c, r, p_io)` projected onto
+    /// `ckpt`/`power`; ≥ 2 levels go through [`Scenario::with_tiers`].
+    pub fn with_tier_specs(
+        ckpt: CheckpointParams,
+        power: PowerParams,
+        mu: f64,
+        t_base: f64,
+        tiers: &[crate::storage::TierSpec],
+    ) -> Result<Self, ModelError> {
+        if let [only] = tiers {
+            // Validate through the hierarchy path, then project: the
+            // single tier *is* the scalar (C, R, P_IO) triple.
+            TierHierarchy::new(tiers).map_err(ModelError::Invalid)?;
+            let mut ckpt = ckpt;
+            let mut power = power;
+            ckpt.c = only.c;
+            ckpt.r = only.r;
+            power.p_io = only.p_io;
+            return Scenario::new(ckpt, power, mu, t_base);
+        }
+        let cfg = TierConfig::from_tiers(tiers).map_err(ModelError::Invalid)?;
+        Scenario::with_tiers(ckpt, power, mu, t_base, cfg)
+    }
+
+    /// The scalar projection of this scenario: identical for `Scalar`,
+    /// and for `Tiered` the same parameters with the hierarchy dropped
+    /// (what a consumer that flattens the hierarchy would see).
+    pub fn scalar_effective(&self) -> Scenario {
+        Scenario { tiers: TierConfig::Scalar, ..*self }
+    }
+
+    /// The storage hierarchy, when this scenario is tiered.
+    #[inline]
+    pub fn hierarchy(&self) -> Option<&TierHierarchy> {
+        self.tiers.hierarchy()
     }
 
     pub fn validate(&self) -> Result<(), ModelError> {
@@ -254,13 +333,13 @@ impl Scenario {
         worst * 10.0 <= self.mu
     }
 
-    /// Exact-bits encoding of every scenario parameter, for memo/cache
-    /// keys (the grid engine's cell keys, the online-policy memo, the
-    /// exact-optima memo). One canonical listing: the exhaustive
-    /// destructuring below makes adding a field a compile error here —
-    /// rather than a silent memo alias at whichever key site forgot it.
+    /// Exact-bits encoding of the *scalar* scenario parameters — the
+    /// historical fixed-width key prefix. Tier structure is **not**
+    /// included; key sites must use [`Scenario::key_words`]. Kept
+    /// `[u64; 10]` so scalar keys (and every seed derived from them)
+    /// stay bit-identical across the tiered-storage refactor.
     pub fn key_bits(&self) -> [u64; 10] {
-        let Scenario { ckpt, power, mu, t_base } = *self;
+        let Scenario { ckpt, power, mu, t_base, tiers: _ } = *self;
         let CheckpointParams { c, r, d, omega } = ckpt;
         let PowerParams { p_static, p_cal, p_io, p_down } = power;
         [
@@ -275,6 +354,24 @@ impl Scenario {
             mu.to_bits(),
             t_base.to_bits(),
         ]
+    }
+
+    /// Exact-bits encoding of **every** scenario parameter, for
+    /// memo/cache keys (the grid engine's cell keys, the online-policy
+    /// memo, the optima memos, serve solve keys): the 10-word scalar
+    /// prefix from [`Scenario::key_bits`] plus the tier extension from
+    /// [`TierConfig::key_words`]. The extension is *empty* for scalar
+    /// scenarios, so pre-refactor keys — and the seeds split from them
+    /// — are reproduced bit-for-bit; tiered scenarios can never alias a
+    /// scalar one because their extension starts with a non-zero level
+    /// count. One canonical listing: the exhaustive destructuring in
+    /// the two halves makes adding a field a compile error here rather
+    /// than a silent memo alias at whichever key site forgot it.
+    pub fn key_words(&self) -> Vec<u64> {
+        let mut k = Vec::with_capacity(10 + 1 + 5 * 4);
+        k.extend_from_slice(&self.key_bits());
+        k.extend(self.tiers.key_words());
+        k
     }
 }
 
@@ -418,5 +515,72 @@ mod tests {
         for (i, v) in variants.iter().enumerate() {
             assert_ne!(v.key_bits(), bits, "field {i} not covered by key_bits");
         }
+    }
+
+    #[test]
+    fn key_words_equal_key_bits_for_scalar() {
+        let s = paper_fig1_scenario(300.0, 5.5);
+        assert_eq!(s.key_words(), s.key_bits().to_vec());
+    }
+
+    #[test]
+    fn key_words_cover_tier_structure() {
+        use crate::storage::TierSpec;
+        let base = paper_fig1_scenario(300.0, 5.5);
+        let tiered = Scenario::with_tier_specs(
+            base.ckpt,
+            base.power,
+            base.mu,
+            base.t_base,
+            &[TierSpec::new(1.0, 1.0, 30.0), TierSpec::new(10.0, 10.0, 100.0)],
+        )
+        .unwrap();
+        assert_ne!(tiered.key_words(), tiered.key_bits().to_vec());
+        assert!(tiered.key_words().len() > 10);
+        // Scalar-projected copy drops the extension again.
+        assert_eq!(
+            tiered.scalar_effective().key_words(),
+            tiered.key_bits().to_vec()
+        );
+    }
+
+    #[test]
+    fn single_tier_scenario_is_bit_identical_to_scalar() {
+        use crate::storage::TierSpec;
+        let base = paper_fig1_scenario(300.0, 5.5);
+        let one = Scenario::with_tier_specs(
+            base.ckpt,
+            base.power,
+            base.mu,
+            base.t_base,
+            &[TierSpec::new(base.ckpt.c, base.ckpt.r, base.power.p_io)],
+        )
+        .unwrap();
+        assert_eq!(one, base);
+        assert_eq!(one.key_words(), base.key_words());
+        assert!(one.tiers.is_scalar());
+    }
+
+    #[test]
+    fn tiered_scenario_projects_effective_scalars() {
+        use crate::storage::TierSpec;
+        let base = paper_fig1_scenario(300.0, 5.5);
+        let tiered = Scenario::with_tier_specs(
+            base.ckpt,
+            base.power,
+            base.mu,
+            base.t_base,
+            &[TierSpec::new(1.0, 1.5, 30.0), TierSpec::new(10.0, 12.0, 100.0)],
+        )
+        .unwrap();
+        // c = C_0, r = R_1 (restart reads the nearest drained tier),
+        // p_io = P_IO_0 (synchronous writes land on tier 0).
+        assert_eq!(tiered.ckpt.c, 1.0);
+        assert_eq!(tiered.ckpt.r, 12.0);
+        assert_eq!(tiered.power.p_io, 30.0);
+        // D and omega pass through from the caller's ckpt.
+        assert_eq!(tiered.ckpt.d, base.ckpt.d);
+        assert_eq!(tiered.ckpt.omega, base.ckpt.omega);
+        assert!(tiered.hierarchy().is_some());
     }
 }

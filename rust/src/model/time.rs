@@ -33,7 +33,14 @@ pub fn time_lost_per_failure(s: &Scenario, t: f64) -> f64 {
 ///
 /// Panics in debug if `t` is outside the open domain `(a, 2μb)`; returns
 /// `+inf` in release (callers that sweep grids filter on finiteness).
+///
+/// Tiered scenarios dispatch to the κ-minimised envelope in
+/// [`super::tiers`]; the scalar path below is untouched by the
+/// hierarchy refactor.
 pub fn t_final(s: &Scenario, t: f64) -> f64 {
+    if let Some(h) = s.hierarchy() {
+        return super::tiers::t_final_tiered(s, h, t);
+    }
     let (lo, hi) = s.domain();
     if t <= lo || t >= hi {
         return f64::INFINITY;
@@ -59,6 +66,9 @@ pub fn t_time_opt_raw(s: &Scenario) -> f64 {
 /// overhead vanishes; the raw formula returns 0 and the clamp (to `C`)
 /// is what makes AlgoT well defined — checkpoint back-to-back.
 pub fn t_time_opt(s: &Scenario) -> Result<f64, ModelError> {
+    if let Some(h) = s.hierarchy() {
+        return super::tiers::t_time_opt_tiered(s, h);
+    }
     s.clamp_period(t_time_opt_raw(s))
 }
 

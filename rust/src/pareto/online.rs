@@ -41,7 +41,12 @@ use super::knee::KneeMethod;
 /// cost a non-issue.
 pub const ONLINE_FRONTIER_POINTS: usize = 129;
 
-type MemoKey = [u64; 14];
+/// Variable-width key: the fixed policy/backend prefix plus the
+/// scenario's [`Scenario::key_words`] listing (exact bits of the scalar
+/// ten-word core, extended by the tier structure when the scenario
+/// carries a hierarchy — scalar keys are byte-identical to the
+/// pre-tier fixed-width ones modulo the container).
+type MemoKey = Vec<u64>;
 
 /// One entry per distinct quantised `(C, R, μ)` visited by a controller
 /// trajectory (plus one per preset/budget/backend); see [`PureMemo`]
@@ -86,23 +91,29 @@ fn pow10(e: i32) -> f64 {
 /// exact. Errors when the quantised estimates leave the model's domain
 /// (e.g. a collapsing μ estimate) — exactly when the exact scenario is
 /// at or past the domain edge too.
+///
+/// The tier structure is configuration, not an estimate: it passes
+/// through unquantised (the effective `C`/`R` the estimators track are
+/// the hierarchy's projections, which *are* quantised above).
 fn quantized_scenario(s: &Scenario) -> Result<Scenario, ModelError> {
     let ckpt =
         CheckpointParams::new(quantize(s.ckpt.c), quantize(s.ckpt.r), s.ckpt.d, s.ckpt.omega)?;
-    Scenario::new(ckpt, s.power, quantize(s.mu), s.t_base)
+    let mut q = Scenario::new(ckpt, s.power, quantize(s.mu), s.t_base)?;
+    q.tiers = s.tiers;
+    Ok(q)
 }
 
 /// Exact-bits key of a (policy, backend, quantised scenario) triple.
 /// `tag` distinguishes the policy kind, `param` its budget (0 for
 /// knees), `backend` the objective model; the scenario enters through
-/// the canonical [`Scenario::key_bits`] listing.
+/// the canonical [`Scenario::key_words`] listing (tier-aware).
 fn memo_key(tag: u64, param: f64, backend: Backend, q: &Scenario) -> MemoKey {
-    let mut k = [0u64; 14];
-    k[0] = tag;
-    k[1] = param.to_bits();
-    k[2] = backend.key_word();
-    k[3..13].copy_from_slice(&q.key_bits());
-    k[13] = ONLINE_FRONTIER_POINTS as u64;
+    let mut k = Vec::with_capacity(14);
+    k.push(tag);
+    k.push(param.to_bits());
+    k.push(backend.key_word());
+    k.extend(q.key_words());
+    k.push(ONLINE_FRONTIER_POINTS as u64);
     k
 }
 
@@ -311,7 +322,13 @@ mod tests {
         // fails with OutOfDomain, which the controller maps to None.
         let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, 0.5).unwrap();
         let power = PowerParams::from_rho(5.5, 1.0, 0.0).unwrap();
-        let s = Scenario { ckpt, power, mu: 10.0, t_base: 1000.0 };
+        let s = Scenario {
+            ckpt,
+            power,
+            mu: 10.0,
+            t_base: 1000.0,
+            tiers: crate::storage::TierConfig::Scalar,
+        };
         for backend in [FO, EXACT] {
             assert!(knee_period(&s, KneeMethod::MaxDistanceToChord, backend).is_err());
             assert!(min_energy_period(&s, 5.0, backend).is_err());

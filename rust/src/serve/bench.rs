@@ -28,6 +28,7 @@
 //! that leg's batches), the pool thread count each measurement
 //! actually used, and a full registry snapshot under `"telemetry"`.
 
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicI32, Ordering};
 use std::time::Instant;
 
@@ -244,6 +245,133 @@ pub fn run_bench() -> Json {
     ])
 }
 
+/// Warm-path regression the trajectory gate tolerates before failing:
+/// warm numbers are memo/cache hits, far above run-to-run noise, so a
+/// 15% drop is a real regression, not a flaky runner.
+pub const GATE_TOLERANCE_PCT: f64 = 15.0;
+
+/// The `BENCH_<n>.json` trajectory entries under `dir`, index-sorted.
+fn trajectory_entries(dir: &Path) -> Vec<(u32, PathBuf)> {
+    let mut out = Vec::new();
+    let Ok(rd) = std::fs::read_dir(dir) else { return out };
+    for e in rd.flatten() {
+        let name = e.file_name();
+        let name = name.to_string_lossy();
+        if let Some(n) =
+            name.strip_prefix("BENCH_").and_then(|s| s.strip_suffix(".json"))
+        {
+            if let Ok(n) = n.parse::<u32>() {
+                out.push((n, e.path()));
+            }
+        }
+    }
+    out.sort_by_key(|(n, _)| *n);
+    out
+}
+
+/// The warm-path metrics the gate compares, as
+/// `(label, previous, current, higher_is_better)` rows. Fields missing
+/// from either document are skipped (schema growth must not break the
+/// gate), and only thread counts present in both `queries_per_sec`
+/// blocks are compared.
+fn gate_metrics(prev: &Json, curr: &Json) -> Vec<(String, f64, f64, bool)> {
+    let mut rows = Vec::new();
+    let both = |key: &str| Some((prev.get(key)?.as_f64()?, curr.get(key)?.as_f64()?));
+    if let Some((p, c)) = both("warm_memo_ns") {
+        rows.push(("warm memo ns/solve".to_string(), p, c, false));
+    }
+    if let Some((p, c)) = both("cell_throughput_per_sec") {
+        rows.push(("grid cells/sec".to_string(), p, c, true));
+    }
+    if let (Some(Json::Obj(pq)), Some(Json::Obj(cq))) =
+        (prev.get("queries_per_sec"), curr.get("queries_per_sec"))
+    {
+        for (threads, pv) in pq {
+            let warm = |v: &Json| v.get("warm").and_then(Json::as_f64);
+            if let (Some(p), Some(c)) = (warm(pv), cq.get(threads).and_then(|v| warm(v))) {
+                rows.push((format!("warm q/s @{threads} thread(s)"), p, c, true));
+            }
+        }
+    }
+    rows
+}
+
+/// Compare the two most recent `BENCH_<n>.json` trajectory entries
+/// under `dir` — the CI perf-regression gate behind `bench --gate`.
+///
+/// Benign situations return `Ok` with an explanation (fewer than two
+/// entries, a schema-version or quick-mode change making the documents
+/// incomparable); a warm-path metric regressing by more than
+/// [`GATE_TOLERANCE_PCT`] returns `Err` with the full report, failing
+/// the CI step. Warm paths only: cold numbers measure the solvers
+/// under allocator/turbo noise, warm numbers measure the cache/memo
+/// machinery this repo's perf story is built on.
+pub fn gate_trajectory(dir: &Path) -> Result<Vec<String>, String> {
+    let entries = trajectory_entries(dir);
+    if entries.len() < 2 {
+        return Ok(vec![format!(
+            "bench gate: {} trajectory entries under {} — need two to compare, skipping",
+            entries.len(),
+            dir.display()
+        )]);
+    }
+    let (_, prev_path) = &entries[entries.len() - 2];
+    let (_, curr_path) = &entries[entries.len() - 1];
+    let load = |p: &Path| -> Result<Json, String> {
+        let text = std::fs::read_to_string(p).map_err(|e| format!("{}: {e}", p.display()))?;
+        crate::util::json::parse(&text).map_err(|e| format!("{}: {e}", p.display()))
+    };
+    let prev = load(prev_path)?;
+    let curr = load(curr_path)?;
+    let name = |p: &Path| p.file_name().unwrap_or_default().to_string_lossy().into_owned();
+    let mut lines = vec![format!("bench gate: {} -> {}", name(prev_path), name(curr_path))];
+
+    let prev_schema = prev.req_str("schema").map_err(|e| e.to_string())?.to_string();
+    let curr_schema = curr.req_str("schema").map_err(|e| e.to_string())?.to_string();
+    if prev_schema != curr_schema {
+        lines.push(format!(
+            "  schema changed ({prev_schema} -> {curr_schema}): not comparable, skipping"
+        ));
+        return Ok(lines);
+    }
+    if prev.get("quick").and_then(Json::as_bool) != curr.get("quick").and_then(Json::as_bool) {
+        lines.push("  quick-mode flag changed: workloads not comparable, skipping".to_string());
+        return Ok(lines);
+    }
+
+    let rows = gate_metrics(&prev, &curr);
+    if rows.is_empty() {
+        lines.push("  no shared warm-path metrics: nothing to compare, skipping".to_string());
+        return Ok(lines);
+    }
+    let mut regressions = 0usize;
+    for (label, p, c, higher_is_better) in rows {
+        if !(p.is_finite() && c.is_finite() && p > 0.0) {
+            continue;
+        }
+        let delta_pct = (c / p - 1.0) * 100.0;
+        let regressed = if higher_is_better {
+            delta_pct < -GATE_TOLERANCE_PCT
+        } else {
+            delta_pct > GATE_TOLERANCE_PCT
+        };
+        lines.push(format!(
+            "  {label}: {p:.0} -> {c:.0} ({delta_pct:+.1}%){}",
+            if regressed { "  REGRESSION" } else { "" }
+        ));
+        regressions += regressed as usize;
+    }
+    if regressions > 0 {
+        return Err(format!(
+            "{}\nbench gate FAILED: {regressions} warm-path metric(s) regressed more than \
+             {GATE_TOLERANCE_PCT}%",
+            lines.join("\n")
+        ));
+    }
+    lines.push(format!("bench gate passed (tolerance {GATE_TOLERANCE_PCT}%)"));
+    Ok(lines)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -252,9 +380,9 @@ mod tests {
     fn fresh_scenarios_never_collide_even_across_calls() {
         let a = fresh_scenarios(16);
         let b = fresh_scenarios(16);
-        let mut keys: Vec<[u64; 10]> = Vec::new();
+        let mut keys: Vec<Vec<u64>> = Vec::new();
         for s in a.iter().chain(&b) {
-            keys.push(s.key_bits());
+            keys.push(s.key_words());
         }
         keys.sort_unstable();
         keys.dedup();
@@ -271,5 +399,90 @@ mod tests {
     #[test]
     fn git_describe_always_yields_a_label() {
         assert!(!git_describe().is_empty());
+    }
+
+    /// Fresh scratch directory for one gate test.
+    fn gate_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ckpt-gate-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// A minimal trajectory document with the gate's warm-path fields.
+    fn write_doc(dir: &Path, n: u32, schema: &str, warm_memo: f64, qps_warm: f64, cells: f64) {
+        let doc = Json::obj(vec![
+            ("schema", Json::Str(schema.into())),
+            ("quick", Json::Bool(true)),
+            ("warm_memo_ns", Json::Num(warm_memo)),
+            ("cell_throughput_per_sec", Json::Num(cells)),
+            (
+                "queries_per_sec",
+                Json::obj(vec![(
+                    "4",
+                    Json::obj(vec![
+                        ("cold", Json::Num(qps_warm / 2.0)),
+                        ("warm", Json::Num(qps_warm)),
+                    ]),
+                )]),
+            ),
+        ]);
+        std::fs::write(dir.join(format!("BENCH_{n}.json")), doc.to_string_pretty()).unwrap();
+    }
+
+    #[test]
+    fn gate_skips_without_two_entries() {
+        let d = gate_dir("empty");
+        let lines = gate_trajectory(&d).unwrap();
+        assert!(lines[0].contains("skipping"), "{lines:?}");
+        write_doc(&d, 0, "ckpt-period/bench/v2", 90.0, 5e6, 2e6);
+        let lines = gate_trajectory(&d).unwrap();
+        assert!(lines[0].contains("skipping"), "{lines:?}");
+    }
+
+    #[test]
+    fn gate_skips_on_schema_change() {
+        let d = gate_dir("schema");
+        write_doc(&d, 0, "ckpt-period/bench/v1", 90.0, 5e6, 2e6);
+        // Even a catastrophic slowdown is not comparable across schemas.
+        write_doc(&d, 1, "ckpt-period/bench/v2", 900.0, 5e5, 2e5);
+        let lines = gate_trajectory(&d).unwrap();
+        assert!(lines.iter().any(|l| l.contains("schema changed")), "{lines:?}");
+    }
+
+    #[test]
+    fn gate_passes_within_tolerance_and_compares_the_two_newest() {
+        let d = gate_dir("pass");
+        // An ancient terrible entry must be ignored: only 7 vs 9 count.
+        write_doc(&d, 2, "ckpt-period/bench/v2", 9000.0, 5e3, 2e3);
+        write_doc(&d, 7, "ckpt-period/bench/v2", 90.0, 5e6, 2e6);
+        write_doc(&d, 9, "ckpt-period/bench/v2", 99.0, 4.6e6, 1.9e6);
+        let lines = gate_trajectory(&d).unwrap();
+        assert!(lines[0].contains("BENCH_7.json") && lines[0].contains("BENCH_9.json"), "{lines:?}");
+        assert!(lines.last().unwrap().contains("passed"), "{lines:?}");
+    }
+
+    #[test]
+    fn gate_fails_on_warm_path_regressions() {
+        // >15% warm-q/s drop.
+        let d = gate_dir("qps");
+        write_doc(&d, 0, "ckpt-period/bench/v2", 90.0, 5e6, 2e6);
+        write_doc(&d, 1, "ckpt-period/bench/v2", 90.0, 3.5e6, 2e6);
+        let err = gate_trajectory(&d).unwrap_err();
+        assert!(err.contains("REGRESSION") && err.contains("FAILED"), "{err}");
+        assert!(err.contains("warm q/s @4"), "{err}");
+
+        // >15% warm-memo latency increase (lower is better there).
+        let d = gate_dir("memo");
+        write_doc(&d, 0, "ckpt-period/bench/v2", 90.0, 5e6, 2e6);
+        write_doc(&d, 1, "ckpt-period/bench/v2", 120.0, 5e6, 2e6);
+        let err = gate_trajectory(&d).unwrap_err();
+        assert!(err.contains("warm memo ns/solve") && err.contains("REGRESSION"), "{err}");
+
+        // An improvement on the lower-is-better axis must NOT fail.
+        let d = gate_dir("better");
+        write_doc(&d, 0, "ckpt-period/bench/v2", 120.0, 5e6, 2e6);
+        write_doc(&d, 1, "ckpt-period/bench/v2", 60.0, 6e6, 3e6);
+        assert!(gate_trajectory(&d).is_ok());
     }
 }

@@ -62,7 +62,7 @@
 //! # Engine
 //!
 //! [`BatchEngine`] deduplicates queries by [`Query::solve_key`]
-//! (scenario [`key_bits`](crate::model::params::Scenario::key_bits) +
+//! (scenario [`key_words`](crate::model::params::Scenario::key_words) +
 //! the grid engine's policy encoding + backend + drift + `at`), solves
 //! each unique key once on the [`ThreadPool`](crate::util::pool::ThreadPool)
 //! work-stealing pool, and scatters answers back — bit-identical to

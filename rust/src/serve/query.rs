@@ -157,6 +157,12 @@ impl Query {
                 return Err(format!("`at` must be a finite number >= 0, got {other}"))
             }
         };
+        // Drift schedules multiply the scalar environment; what they
+        // mean for a multi-level hierarchy is undefined, so the
+        // combination is a per-line error (mirrors the simulator).
+        if scenario.hierarchy().is_some() && !drift.is_stationary() {
+            return Err("tiered scenarios do not accept a drift schedule".into());
+        }
         // Validate the whole trajectory up front: a query that cannot be
         // answered is a per-line error record, never a mid-batch panic.
         EnvTrajectory::new(scenario, drift).map_err(|e| format!("scenario/drift: {e}"))?;
@@ -194,12 +200,13 @@ impl Query {
         Ok(EnvTrajectory::new(self.scenario, self.drift)?.scenario_at(self.at))
     }
 
-    /// Exact-bits dedup/cache key: scenario bits + the grid engine's
-    /// policy encoding + backend word + drift schedule words + `at`
-    /// bits. Two queries with equal keys have bit-identical answers.
+    /// Exact-bits dedup/cache key: scenario words (tier-aware) + the
+    /// grid engine's policy encoding + backend word + drift schedule
+    /// words + `at` bits. Two queries with equal keys have
+    /// bit-identical answers.
     pub fn solve_key(&self) -> Vec<u64> {
         let mut k = Vec::with_capacity(20);
-        k.extend_from_slice(&self.scenario.key_bits());
+        k.extend(self.scenario.key_words());
         k.extend_from_slice(&policy_key(self.policy));
         k.push(self.backend.key_word());
         k.extend(self.drift.key_words());

@@ -74,12 +74,14 @@
 //! (one relaxed load when off), and results are bit-identical with
 //! the sink installed or not (`tests/telemetry.rs`).
 
+use super::engine::{settle_drains, Drain};
 use super::failure::{Failure, FailureProcess, FailureStream};
 use crate::coordinator::adaptive::AdaptiveController;
 use crate::coordinator::policy::PeriodPolicy;
 use crate::drift::{DriftProcess, EnvTrajectory};
 use crate::model::params::{ModelError, Scenario};
 use crate::model::time::young;
+use crate::storage::{CopyRecord, TierHierarchy, TierStore};
 use crate::telemetry::trace;
 use crate::util::json::Json;
 use crate::util::pool::ThreadPool;
@@ -223,6 +225,11 @@ pub struct AdaptiveSimulator {
     /// Cached `!traj.is_stationary()`: gates every drift-only branch so
     /// the stationary path stays bit-identical to the pre-drift code.
     drifting: bool,
+    /// The scenario's storage hierarchy, when it has one: gates every
+    /// tiered branch (drain queues, node-loss restarts) the same way
+    /// `drifting` gates the drift branches — scalar scenarios stay
+    /// bit-identical to the pre-tier code.
+    tiered: Option<TierHierarchy>,
 }
 
 impl AdaptiveSimulator {
@@ -234,7 +241,16 @@ impl AdaptiveSimulator {
         let traj = EnvTrajectory::new(cfg.scenario, cfg.drift)
             .expect("drift schedule leaves the model's domain");
         let drifting = !traj.is_stationary();
-        AdaptiveSimulator { cfg, traj, drifting }
+        let tiered = cfg.scenario.hierarchy().copied();
+        // Drift schedules multiply the *scalar* environment; what a
+        // drifting multi-level hierarchy means (which tier's C ramps?)
+        // is not defined yet, so the combination is rejected rather
+        // than silently mis-simulated.
+        assert!(
+            tiered.is_none() || !drifting,
+            "tiered scenarios require a stationary drift schedule"
+        );
+        AdaptiveSimulator { cfg, traj, drifting, tiered }
     }
 
     pub fn config(&self) -> &AdaptiveSimConfig {
@@ -336,6 +352,18 @@ impl AdaptiveSimulator {
         let mut overlap = 0.0f64;
         let mut next_fail = stream.next_after(0.0);
 
+        // ---- tiered storage state (`None` ⇒ every block below is
+        // skipped and the scalar path is untouched) ----
+        let mut store = self.tiered.as_ref().map(TierStore::new);
+        let mut inflight: Vec<Drain> = Vec::new();
+        let mut drain_free_at = 0.0f64;
+        let mut drain_energy = 0.0f64;
+        let mut rec_io_energy = 0.0f64;
+        // Cadence plan for the period currently in force; recomputed
+        // lazily when the controller moves the period.
+        let mut kappa = [1u32; crate::storage::MAX_TIERS];
+        let mut kappa_period = f64::NAN;
+
         loop {
             // Under drift, the compute slice is planned against the
             // checkpoint cost in force at the period's start; a
@@ -369,8 +397,26 @@ impl AdaptiveSimulator {
                     }
                     now += dt;
                     ctl.observe_uptime(dt);
-                    res.work_lost += overlap + dt;
-                    overlap = 0.0;
+                    let tier_rec = if let (Some(h), Some(st)) =
+                        (self.tiered.as_ref(), store.as_mut())
+                    {
+                        Some(tiered_node_loss(
+                            h,
+                            st,
+                            &mut inflight,
+                            &mut drain_free_at,
+                            &mut drain_energy,
+                            now,
+                            base_progress + dt,
+                            &mut saved,
+                            &mut overlap,
+                            &mut res.work_lost,
+                        ))
+                    } else {
+                        res.work_lost += overlap + dt;
+                        overlap = 0.0;
+                        None
+                    };
                     self.fail_and_recover(
                         &mut ctl,
                         &mut res,
@@ -378,6 +424,8 @@ impl AdaptiveSimulator {
                         &mut next_fail,
                         &mut stream,
                         seed,
+                        tier_rec,
+                        &mut rec_io_energy,
                     );
                     self.reread_period(&mut ctl, &mut res, &mut period, now, seed);
                     continue;
@@ -420,8 +468,26 @@ impl AdaptiveSimulator {
                     }
                     now += dt;
                     ctl.observe_uptime(dt);
-                    res.work_lost += overlap + compute_len + omega * dt;
-                    overlap = 0.0;
+                    let tier_rec = if let (Some(h), Some(st)) =
+                        (self.tiered.as_ref(), store.as_mut())
+                    {
+                        Some(tiered_node_loss(
+                            h,
+                            st,
+                            &mut inflight,
+                            &mut drain_free_at,
+                            &mut drain_energy,
+                            now,
+                            at_ckpt_start + omega * dt,
+                            &mut saved,
+                            &mut overlap,
+                            &mut res.work_lost,
+                        ))
+                    } else {
+                        res.work_lost += overlap + compute_len + omega * dt;
+                        overlap = 0.0;
+                        None
+                    };
                     self.fail_and_recover(
                         &mut ctl,
                         &mut res,
@@ -429,6 +495,8 @@ impl AdaptiveSimulator {
                         &mut next_fail,
                         &mut stream,
                         seed,
+                        tier_rec,
+                        &mut rec_io_energy,
                     );
                     self.reread_period(&mut ctl, &mut res, &mut period, now, seed);
                     continue;
@@ -458,9 +526,44 @@ impl AdaptiveSimulator {
                             ],
                         ));
                     }
+                    // Tiered: land completed drains, record the tier-0
+                    // copy, and schedule the κ-aligned drains against
+                    // the period currently in force (mirrors the
+                    // engine's fixed-period loop).
+                    if let (Some(h), Some(st)) = (self.tiered.as_ref(), store.as_mut()) {
+                        settle_drains(&mut inflight, st, &mut drain_energy, h, now, false);
+                        let pinned: Vec<f64> = inflight.iter().map(|dr| dr.work).collect();
+                        st.record(
+                            0,
+                            CopyRecord { work: at_ckpt_start, available_at: now },
+                            &pinned,
+                        );
+                        if kappa_period != period {
+                            kappa = crate::model::tiers::cadence_for(s, h, period);
+                            kappa_period = period;
+                        }
+                        let idx = res.n_checkpoints;
+                        let mut source_ready = now;
+                        for tier in 1..h.len() {
+                            if idx % kappa[tier] as u64 != 0 {
+                                break;
+                            }
+                            let start = drain_free_at.max(source_ready);
+                            let end = start + h.tier(tier).c;
+                            drain_free_at = end;
+                            source_ready = end;
+                            inflight.push(Drain { tier, work: at_ckpt_start, start, end });
+                        }
+                    }
                     self.reread_period(&mut ctl, &mut res, &mut period, now, seed);
                 }
             }
+        }
+
+        // End of run: completed drains land, in-flight ones abort with
+        // pro-rated energy (no-op on the scalar path).
+        if let (Some(h), Some(st)) = (self.tiered.as_ref(), store.as_mut()) {
+            settle_drains(&mut inflight, st, &mut drain_energy, h, now, true);
         }
 
         res.makespan = now;
@@ -469,7 +572,19 @@ impl AdaptiveSimulator {
             res.tracking_lag_pct /= res.tracking_samples as f64;
             res.drift_lag_pct /= res.tracking_samples as f64;
         }
-        if !self.drifting {
+        if self.tiered.is_some() {
+            // Tiered (always stationary — the constructor rejects the
+            // combination): tier-0 writes at the effective P_IO,
+            // recovery reads priced per surviving tier, drains per
+            // target tier (mirrors the engine's tiered integral).
+            let p = &s.power;
+            res.energy = p.p_static * res.makespan
+                + p.p_cal * (res.time_compute + omega * res.time_checkpoint)
+                + p.p_io * res.time_checkpoint
+                + rec_io_energy
+                + p.p_down * res.time_down
+                + drain_energy;
+        } else if !self.drifting {
             // Stationary: the original end-of-run integral, evaluated in
             // the original association order (bit-identical to the
             // pre-drift code; the incremental sums above would not be).
@@ -580,7 +695,12 @@ impl AdaptiveSimulator {
     /// Downtime + recovery after a failure, mirroring the engine, with
     /// the controller observing every failure, the exposure time, and
     /// the restore duration. Under drift the recovery cost and the I/O
-    /// draw are the trajectory's values at the recovery's start.
+    /// draw are the trajectory's values at the recovery's start; on the
+    /// tiered path `tier_rec` carries the surviving tier's `(R_j,
+    /// P_IO_j)` (already resolved by [`tiered_node_loss`]) and the read
+    /// energy accrues into `rec_io_energy` instead of the end-of-run
+    /// blanket `P_IO` term.
+    #[allow(clippy::too_many_arguments)]
     fn fail_and_recover(
         &self,
         ctl: &mut AdaptiveController,
@@ -589,6 +709,8 @@ impl AdaptiveSimulator {
         next_fail: &mut Failure,
         stream: &mut FailureStream,
         seed: u64,
+        tier_rec: Option<(f64, f64)>,
+        rec_io_energy: &mut f64,
     ) {
         let s = &self.cfg.scenario;
         let (d, r_base) = (s.ckpt.d, s.ckpt.r);
@@ -609,7 +731,9 @@ impl AdaptiveSimulator {
         *next_fail = stream.next_after(*now);
         loop {
             let d_end = *now + d;
-            let (r_now, p_io_rec) = if self.drifting {
+            let (r_now, p_io_rec) = if let Some(t) = tier_rec {
+                t
+            } else if self.drifting {
                 let s_rec = self.traj.scenario_at(d_end);
                 (s_rec.ckpt.r, s_rec.power.p_io)
             } else {
@@ -628,6 +752,9 @@ impl AdaptiveSimulator {
                 } else {
                     res.time_down += d;
                     res.time_recovery += fail_at - d_end;
+                    if tier_rec.is_some() {
+                        *rec_io_energy += p_io_rec * (fail_at - d_end);
+                    }
                     if self.drifting {
                         res.energy += (pw.p_static + pw.p_down) * d
                             + (pw.p_static + p_io_rec) * (fail_at - d_end);
@@ -653,6 +780,9 @@ impl AdaptiveSimulator {
             }
             res.time_down += d;
             res.time_recovery += r_now;
+            if tier_rec.is_some() {
+                *rec_io_energy += p_io_rec * r_now;
+            }
             if self.drifting {
                 res.energy += (pw.p_static + pw.p_down) * d + (pw.p_static + p_io_rec) * r_now;
             }
@@ -668,8 +798,13 @@ impl AdaptiveSimulator {
             if !self.cfg.failures_during_recovery && next_fail.at < *now {
                 *next_fail = stream.next_after(*now);
             }
-            // The "measured" restore duration is the true R(t).
-            ctl.observe_restore(r_now);
+            // The "measured" restore duration is the true R(t). A
+            // tiered restart-from-scratch performs no read at all —
+            // there is nothing to measure, so the estimator is left
+            // alone rather than dragged toward zero.
+            if tier_rec.is_none() || r_now > 0.0 {
+                ctl.observe_restore(r_now);
+            }
             if trace::enabled() {
                 trace::emit(&trace::event(
                     "recovery",
@@ -687,6 +822,38 @@ impl AdaptiveSimulator {
             return;
         }
     }
+}
+
+/// Node loss on the tiered path: abort in-flight drains (pro-rated
+/// energy), purge the node-local tier, and restart from the freshest
+/// surviving copy. Returns the recovery read `(R_j, P_IO_j)` of the
+/// surviving tier — `(0, 0)` when nothing survives and the run restarts
+/// from scratch with no read. Mirrors the engine's `tiered_failure`
+/// bookkeeping.
+#[allow(clippy::too_many_arguments)]
+fn tiered_node_loss(
+    h: &TierHierarchy,
+    store: &mut TierStore,
+    inflight: &mut Vec<Drain>,
+    drain_free_at: &mut f64,
+    drain_energy: &mut f64,
+    now: f64,
+    progress_at_fail: f64,
+    saved: &mut f64,
+    overlap: &mut f64,
+    work_lost: &mut f64,
+) -> (f64, f64) {
+    settle_drains(inflight, store, drain_energy, h, now, true);
+    *drain_free_at = now;
+    store.purge_node_local();
+    let (r, p_io, restart) = match store.freshest_surviving(now) {
+        Some((tier, copy)) => (h.tier(tier).r, h.tier(tier).p_io, copy.work),
+        None => (0.0, 0.0, 0.0),
+    };
+    *work_lost += progress_at_fail - restart;
+    *saved = restart;
+    *overlap = 0.0;
+    (r, p_io)
 }
 
 /// Aggregated Monte-Carlo estimates of adaptive runs.
@@ -1160,6 +1327,61 @@ mod tests {
             at: 100.0,
             to: DriftTargets { c: 1.0, r: 1.0, mu: 0.04, p_io: 1.0 },
         };
+        let _ = AdaptiveSimulator::new(cfg);
+    }
+
+    // ---- tiered storage --------------------------------------------------
+
+    fn tiered_scenario() -> Scenario {
+        let ckpt = crate::model::CheckpointParams::new(10.0, 10.0, 1.0, 0.5).unwrap();
+        let power = crate::model::PowerParams::from_rho(5.5, 1.0, 0.0).unwrap();
+        Scenario::with_tier_specs(
+            ckpt,
+            power,
+            300.0,
+            10_000.0,
+            &[
+                crate::storage::TierSpec::new(1.0, 1.0, 0.3),
+                crate::storage::TierSpec::new(10.0, 10.0, 1.0),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn tiered_adaptive_is_deterministic_and_thread_invariant() {
+        let cfg = AdaptiveSimConfig::paper(tiered_scenario(), KNEE);
+        let sim = AdaptiveSimulator::new(cfg.clone());
+        assert_eq!(sim.run(7), sim.run(7));
+        let a = adaptive_monte_carlo(&cfg, 32, 7, 1);
+        let b = adaptive_monte_carlo(&cfg, 32, 7, 8);
+        assert_eq!(a.makespan.mean().to_bits(), b.makespan.mean().to_bits());
+        assert_eq!(a.energy.mean().to_bits(), b.energy.mean().to_bits());
+        assert_eq!(a.final_period.mean().to_bits(), b.final_period.mean().to_bits());
+    }
+
+    #[test]
+    fn tiered_adaptive_pays_drain_energy() {
+        // Same effective scalars, same seeds: the tiered run's energy
+        // must exceed the scalar run's by the drain traffic (the
+        // effective projection has identical C/R/P_IO on tier 0).
+        let tiered = tiered_scenario();
+        let flat = tiered.scalar_effective();
+        let mc_t = adaptive_monte_carlo(&AdaptiveSimConfig::paper(tiered, KNEE), 24, 5, 8);
+        let mc_f = adaptive_monte_carlo(&AdaptiveSimConfig::paper(flat, KNEE), 24, 5, 8);
+        assert!(
+            mc_t.energy.mean() > mc_f.energy.mean(),
+            "tiered {} !> flat {}",
+            mc_t.energy.mean(),
+            mc_f.energy.mean()
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "stationary")]
+    fn tiered_plus_drift_is_rejected() {
+        let mut cfg = AdaptiveSimConfig::paper(tiered_scenario(), KNEE);
+        cfg.drift = io_ramp();
         let _ = AdaptiveSimulator::new(cfg);
     }
 }

@@ -27,6 +27,7 @@
 
 use super::failure::{FailureProcess, FailureStream};
 use crate::model::params::Scenario;
+use crate::storage::{CopyRecord, TierHierarchy, TierStore};
 use crate::util::rng::Pcg64;
 
 /// Configuration of a simulation.
@@ -118,7 +119,14 @@ impl Simulator {
     }
 
     /// Execute one sample path.
+    ///
+    /// Tiered scenarios take the drain-queue event loop
+    /// ([`Self::run_tiered`]); scalar scenarios run the original loop
+    /// below, untouched by the hierarchy refactor.
     pub fn run(&self, seed: u64) -> RunResult {
+        if let Some(h) = self.cfg.scenario.hierarchy() {
+            return self.run_tiered(seed, h);
+        }
         let s = &self.cfg.scenario;
         let t_period = self.cfg.period;
         let c = s.ckpt.c;
@@ -270,6 +278,311 @@ impl Simulator {
                 *next_fail = stream.next_after(*now);
             }
             return;
+        }
+    }
+
+    /// One sample path over a storage hierarchy.
+    ///
+    /// Differences from the scalar loop:
+    ///
+    /// * Every completed checkpoint lands a tier-0 copy; every
+    ///   `κ_i`-th checkpoint schedules an asynchronous **drain** to
+    ///   tier `i` on a serialised drain device (one transfer at a
+    ///   time; deeper drains chain off the shallower copy's landing).
+    ///   The cadence vector is the energy-minimising plan at this
+    ///   period ([`crate::model::tiers::cadence_for`]) — a pure
+    ///   function of the config, so thread-count determinism holds.
+    /// * Drains overlap compute: they cost energy
+    ///   (`P_IO_i · C_i` when complete, pro-rated when a failure or
+    ///   the end of the run aborts them) but no wall time.
+    /// * A failure is a node loss: tier-0 copies are destroyed and
+    ///   in-flight drains abort. Recovery restarts from the freshest
+    ///   surviving copy (drain completed before the failure), reading
+    ///   `R_j` minutes at `P_IO_j`; with no surviving copy the run
+    ///   restarts from scratch after the downtime, with no recovery
+    ///   read.
+    /// * Per-tier retention/capacity evicts old copies, never the
+    ///   freshest and never the source of an in-flight drain.
+    fn run_tiered(&self, seed: u64, h: &TierHierarchy) -> RunResult {
+        let s = &self.cfg.scenario;
+        let t_period = self.cfg.period;
+        let c = s.ckpt.c; // tier-0 write cost (effective projection)
+        let d = s.ckpt.d;
+        let omega = s.ckpt.omega;
+        let compute_len = t_period - c;
+        let kappa = crate::model::tiers::cadence_for(s, h, t_period);
+
+        let mut rng = Pcg64::seeded(seed);
+        let mut stream = self.cfg.failure.stream(&mut rng);
+
+        let mut res = RunResult {
+            makespan: 0.0,
+            energy: 0.0,
+            n_failures: 0,
+            n_checkpoints: 0,
+            work_lost: 0.0,
+            time_compute: 0.0,
+            time_checkpoint: 0.0,
+            time_recovery: 0.0,
+            time_down: 0.0,
+        };
+
+        let mut store = TierStore::new(h);
+        let mut inflight: Vec<Drain> = Vec::new();
+        let mut drain_free_at = 0.0f64;
+        // I/O energy priced per tier (drains + recovery reads); the
+        // blanket `p_io` at the end only covers tier-0 writes.
+        let mut drain_energy = 0.0f64;
+        let mut recovery_io_energy = 0.0f64;
+
+        let mut now = 0.0f64;
+        let mut saved = 0.0f64;
+        let mut overlap = 0.0f64;
+        let mut next_fail = stream.next_after(0.0);
+
+        let phase_end = |now: f64, len: f64, need: f64, rate: f64, fail_at: f64| -> PhaseEnd {
+            let finish = if rate > 0.0 && need / rate <= len {
+                Some(need / rate)
+            } else {
+                None
+            };
+            let fail = if fail_at < now + len { Some(fail_at - now) } else { None };
+            match (finish, fail) {
+                (Some(f), Some(x)) if f <= x => PhaseEnd::Finished(f),
+                (_, Some(x)) => PhaseEnd::Failed(x),
+                (Some(f), None) => PhaseEnd::Finished(f),
+                (None, None) => PhaseEnd::Ran,
+            }
+        };
+
+        loop {
+            // ---- compute phase ----
+            let base_progress = saved + overlap;
+            let need = s.t_base - base_progress;
+            debug_assert!(need > 0.0);
+            match phase_end(now, compute_len, need, 1.0, next_fail.at) {
+                PhaseEnd::Finished(dt) => {
+                    res.time_compute += dt;
+                    now += dt;
+                    break;
+                }
+                PhaseEnd::Failed(dt) => {
+                    res.time_compute += dt;
+                    now += dt;
+                    let progress = base_progress + dt;
+                    self.tiered_failure(
+                        &mut res,
+                        &mut now,
+                        &mut next_fail,
+                        &mut stream,
+                        h,
+                        &mut store,
+                        &mut inflight,
+                        &mut drain_free_at,
+                        &mut drain_energy,
+                        &mut recovery_io_energy,
+                        d,
+                        progress,
+                        &mut saved,
+                        &mut overlap,
+                    );
+                    continue;
+                }
+                PhaseEnd::Ran => {
+                    res.time_compute += compute_len;
+                    now += compute_len;
+                }
+            }
+
+            // ---- checkpoint phase (synchronous tier-0 write) ----
+            let at_ckpt_start = base_progress + compute_len;
+            let need = s.t_base - at_ckpt_start;
+            match phase_end(now, c, need, omega, next_fail.at) {
+                PhaseEnd::Finished(dt) => {
+                    res.time_checkpoint += dt;
+                    now += dt;
+                    break;
+                }
+                PhaseEnd::Failed(dt) => {
+                    res.time_checkpoint += dt;
+                    now += dt;
+                    let progress = at_ckpt_start + omega * dt;
+                    self.tiered_failure(
+                        &mut res,
+                        &mut now,
+                        &mut next_fail,
+                        &mut stream,
+                        h,
+                        &mut store,
+                        &mut inflight,
+                        &mut drain_free_at,
+                        &mut drain_energy,
+                        &mut recovery_io_energy,
+                        d,
+                        progress,
+                        &mut saved,
+                        &mut overlap,
+                    );
+                    continue;
+                }
+                PhaseEnd::Ran => {
+                    res.time_checkpoint += c;
+                    now += c;
+                    res.n_checkpoints += 1;
+                    saved = at_ckpt_start;
+                    overlap = omega * c;
+                    // Completed drains land their copies before new
+                    // pins are computed.
+                    settle_drains(&mut inflight, &mut store, &mut drain_energy, h, now, false);
+                    let pinned: Vec<f64> = inflight.iter().map(|dr| dr.work).collect();
+                    store.record(
+                        0,
+                        CopyRecord { work: at_ckpt_start, available_at: now },
+                        &pinned,
+                    );
+                    // Chain drains: tier i sources the tier i-1 copy.
+                    let idx = res.n_checkpoints;
+                    let mut source_ready = now;
+                    for tier in 1..h.len() {
+                        if idx % kappa[tier] as u64 != 0 {
+                            break; // nested divisibility: deeper drains align
+                        }
+                        let start = drain_free_at.max(source_ready);
+                        let end = start + h.tier(tier).c;
+                        drain_free_at = end;
+                        source_ready = end;
+                        inflight.push(Drain { tier, work: at_ckpt_start, start, end });
+                    }
+                }
+            }
+        }
+
+        // End of run: completed drains land (energy), in-flight ones
+        // abort with pro-rated energy.
+        settle_drains(&mut inflight, &mut store, &mut drain_energy, h, now, true);
+
+        res.makespan = now;
+        let p = &s.power;
+        res.energy = p.p_static * res.makespan
+            + p.p_cal * (res.time_compute + omega * res.time_checkpoint)
+            + p.p_io * res.time_checkpoint
+            + recovery_io_energy
+            + p.p_down * res.time_down
+            + drain_energy;
+        res
+    }
+
+    /// Failure handling for the tiered loop: settle/abort drains, kill
+    /// node-local copies, pick the restart tier, then run the
+    /// downtime+recovery loop with that tier's read cost and power.
+    #[allow(clippy::too_many_arguments)]
+    fn tiered_failure(
+        &self,
+        res: &mut RunResult,
+        now: &mut f64,
+        next_fail: &mut super::failure::Failure,
+        stream: &mut FailureStream,
+        h: &TierHierarchy,
+        store: &mut TierStore,
+        inflight: &mut Vec<Drain>,
+        drain_free_at: &mut f64,
+        drain_energy: &mut f64,
+        recovery_io_energy: &mut f64,
+        d: f64,
+        progress_at_fail: f64,
+        saved: &mut f64,
+        overlap: &mut f64,
+    ) {
+        let fail_at = *now;
+        settle_drains(inflight, store, drain_energy, h, fail_at, true);
+        *drain_free_at = fail_at;
+        store.purge_node_local();
+        let (r, p_io_r, restart_work) = match store.freshest_surviving(fail_at) {
+            Some((tier, copy)) => (h.tier(tier).r, h.tier(tier).p_io, copy.work),
+            // Nothing survives anywhere: restart from scratch after the
+            // downtime, with no checkpoint to read.
+            None => (0.0, 0.0, 0.0),
+        };
+        res.work_lost += progress_at_fail - restart_work;
+        *saved = restart_work;
+        *overlap = 0.0;
+
+        res.n_failures += 1;
+        *next_fail = stream.next_after(*now);
+        loop {
+            let d_end = *now + d;
+            let r_end = d_end + r;
+            if self.cfg.failures_during_recovery && next_fail.at < r_end {
+                let fail_at = next_fail.at;
+                if fail_at < d_end {
+                    res.time_down += fail_at - *now;
+                } else {
+                    res.time_down += d;
+                    let partial = fail_at - d_end;
+                    res.time_recovery += partial;
+                    *recovery_io_energy += p_io_r * partial;
+                }
+                *now = fail_at;
+                res.n_failures += 1;
+                *next_fail = stream.next_after(*now);
+                continue;
+            }
+            res.time_down += d;
+            res.time_recovery += r;
+            *recovery_io_energy += p_io_r * r;
+            *now = r_end;
+            if !self.cfg.failures_during_recovery && next_fail.at < *now {
+                *next_fail = stream.next_after(*now);
+            }
+            return;
+        }
+    }
+}
+
+/// An asynchronous tier-to-tier transfer in flight. Shared with the
+/// adaptive simulator's tiered path ([`super::adaptive`]).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Drain {
+    /// Destination tier (sources the `tier - 1` copy of `work`).
+    pub(crate) tier: usize,
+    pub(crate) work: f64,
+    pub(crate) start: f64,
+    pub(crate) end: f64,
+}
+
+/// Land every drain that completed by `up_to` (full energy, copy
+/// recorded). With `abort`, also charge pro-rated energy for drains the
+/// cutoff interrupts and discard them (failure or end of run); without
+/// it, later drains simply stay in flight.
+pub(crate) fn settle_drains(
+    inflight: &mut Vec<Drain>,
+    store: &mut TierStore,
+    drain_energy: &mut f64,
+    h: &TierHierarchy,
+    up_to: f64,
+    abort: bool,
+) {
+    // Conservative pin set: any in-flight source work stays evictable
+    // from no tier until the transfer settles.
+    let pinned: Vec<f64> = inflight.iter().map(|dr| dr.work).collect();
+    let mut i = 0;
+    while i < inflight.len() {
+        let dr = inflight[i];
+        if dr.end <= up_to {
+            *drain_energy += h.tier(dr.tier).p_io * (dr.end - dr.start);
+            store.record(
+                dr.tier,
+                CopyRecord { work: dr.work, available_at: dr.end },
+                &pinned,
+            );
+            inflight.remove(i);
+        } else if abort {
+            if dr.start < up_to {
+                *drain_energy += h.tier(dr.tier).p_io * (up_to - dr.start);
+            }
+            inflight.remove(i);
+        } else {
+            i += 1;
         }
     }
 }
@@ -467,5 +780,140 @@ mod tests {
                 8000.0 + res.work_lost
             );
         }
+    }
+
+    // ---- tiered storage paths ----
+
+    use crate::storage::TierSpec;
+
+    /// SSD (fast local) → PFS (slow, survives node loss).
+    fn tiered_scenario(mu: f64, t_base: f64) -> Scenario {
+        let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, 0.5).unwrap();
+        let power = PowerParams::new(10.0, 10.0, 100.0, 0.0).unwrap();
+        Scenario::with_tier_specs(
+            ckpt,
+            power,
+            mu,
+            t_base,
+            &[TierSpec::new(1.0, 1.0, 30.0), TierSpec::new(10.0, 10.0, 100.0)],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn tiered_deterministic_per_seed() {
+        let s = tiered_scenario(200.0, 5000.0);
+        let sim = Simulator::new(SimConfig::paper(s, 80.0));
+        let a = sim.run(42);
+        let b = sim.run(42);
+        assert_eq!(a, b);
+        let c = sim.run(43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn tiered_failure_free_drains_cost_energy_not_time() {
+        // Without failures the tiered loop walks the same period
+        // schedule as the scalar loop over the effective projection
+        // (tier-0 write = C, same ω): identical makespan and phase
+        // times, strictly more energy (the drains to deeper tiers).
+        let s = tiered_scenario(1e18, 9_500.0);
+        let flat = s.scalar_effective();
+        let mk = |sc: Scenario| {
+            Simulator::new(SimConfig {
+                scenario: sc,
+                period: 100.0,
+                failure: no_failures(),
+                failures_during_recovery: true,
+            })
+            .run(1)
+        };
+        let tiered = mk(s);
+        let scalar = mk(flat);
+        assert_eq!(tiered.n_failures, 0);
+        assert!((tiered.makespan - scalar.makespan).abs() < 1e-9);
+        assert!((tiered.time_compute - scalar.time_compute).abs() < 1e-9);
+        assert!((tiered.time_checkpoint - scalar.time_checkpoint).abs() < 1e-9);
+        assert!(
+            tiered.energy > scalar.energy,
+            "drain energy missing: tiered={} scalar={}",
+            tiered.energy,
+            scalar.energy
+        );
+    }
+
+    #[test]
+    fn tiered_work_conservation_under_failures() {
+        let s = tiered_scenario(120.0, 8_000.0);
+        let sim = Simulator::new(SimConfig::paper(s, 70.0));
+        for seed in 0..10 {
+            let res = sim.run(seed);
+            let executed = res.time_compute + 0.5 * res.time_checkpoint;
+            assert!(
+                rel_err(executed, 8_000.0 + res.work_lost) < 1e-9,
+                "seed={seed}: executed={executed} vs {}",
+                8_000.0 + res.work_lost
+            );
+            // Makespan is still the sum of phase wall times (drains
+            // overlap compute; they never add wall time).
+            let total = res.time_compute
+                + res.time_checkpoint
+                + res.time_recovery
+                + res.time_down;
+            assert!(rel_err(res.makespan, total) < 1e-12, "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn tiered_node_loss_restarts_from_drained_copy_or_zero() {
+        // A drain so slow it can never complete before the next failure:
+        // every node loss wipes tier 0 and finds nothing deeper, so each
+        // failure restarts from scratch (no recovery read: R comes from
+        // the *surviving* tier, and there is none).
+        let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, 0.0).unwrap();
+        let power = PowerParams::new(10.0, 10.0, 100.0, 0.0).unwrap();
+        let s = Scenario::with_tier_specs(
+            ckpt,
+            power,
+            60.0,
+            500.0,
+            &[TierSpec::new(1.0, 1.0, 30.0), TierSpec::new(1e15, 10.0, 100.0)],
+        )
+        .unwrap();
+        let sim = Simulator::new(SimConfig::paper(s, 50.0));
+        let res = sim.run(5);
+        assert!(res.n_failures > 0, "want at least one failure");
+        assert_eq!(
+            res.time_recovery, 0.0,
+            "no surviving copy should mean no recovery read"
+        );
+        // Restart-from-zero loses *all* progress at each failure; with a
+        // normal hierarchy (same seed, same failure process) the PFS
+        // copies cap the losses.
+        let normal = Simulator::new(SimConfig::paper(tiered_scenario(60.0, 500.0), 50.0)).run(5);
+        assert!(
+            res.work_lost >= normal.work_lost,
+            "scratch restarts ({}) should lose at least as much as tiered recovery ({})",
+            res.work_lost,
+            normal.work_lost
+        );
+    }
+
+    #[test]
+    fn tiered_recovery_reads_survive_tier_pricing() {
+        // With failures present and a working hierarchy, recovery reads
+        // happen from the drained tier (R_1 = 10) even though the
+        // effective tier-0 write is only C_0 = 1.
+        let s = tiered_scenario(100.0, 4_000.0);
+        let sim = Simulator::new(SimConfig::paper(s, 40.0));
+        let mut saw_recovery = false;
+        for seed in 0..20 {
+            let res = sim.run(seed);
+            if res.n_failures > 0 && res.time_recovery > 0.0 {
+                saw_recovery = true;
+                break;
+            }
+        }
+        assert!(saw_recovery, "expected at least one recovery read from the PFS tier");
     }
 }

@@ -1,0 +1,513 @@
+//! Tiered checkpoint storage: the multi-level `(C_i, R_i, P_IO_i)`
+//! hierarchy behind the scalar model.
+//!
+//! The paper prices every checkpoint with one `(C, R, P_IO)` triple —
+//! one storage device. Real Exascale stacks (VELOC-style) write
+//! **synchronously to node-local storage** (tier 0: cheap, but a node
+//! loss takes the copy with it) and **drain asynchronously** to slower,
+//! safer tiers (burst buffer, then the parallel file system), restarting
+//! from the nearest tier that still holds a usable copy.
+//!
+//! This module owns the data model for that hierarchy:
+//!
+//! * [`TierSpec`] — one level's write cost `c`, read/restart cost `r`,
+//!   I/O power draw `p_io`, and copy bounds (`capacity`, `retention`).
+//! * [`TierHierarchy`] — an ordered, validated stack of 1..=[`MAX_TIERS`]
+//!   levels, fastest (node-local) first. Fixed-size and `Copy` so a
+//!   [`crate::model::Scenario`] can embed it without losing `Copy`.
+//! * [`TierConfig`] — `Scalar` (the paper's model, byte-for-byte) or
+//!   `Tiered`. Every pre-existing constructor produces `Scalar`, and a
+//!   1-level hierarchy *canonicalises* to `Scalar`, so degenerate
+//!   hierarchies reproduce the scalar model bit-for-bit by construction.
+//! * [`TierStore`] — the discrete-event simulator's view: which copies
+//!   exist on which tier, when each became usable (drain completion),
+//!   newest-K eviction per tier, and nearest-surviving-tier lookup
+//!   under node-loss scope (tier 0 dies with the node; tiers ≥ 1
+//!   survive).
+//!
+//! Failure-scope semantics: a failure is a *node* loss. Copies on
+//! tier 0 (node-local SSD) are destroyed; copies on tiers ≥ 1 (burst
+//! buffer, PFS) survive. Recovery reads the freshest surviving copy
+//! whose drain completed before the failure; ties prefer the fastest
+//! (lowest) tier. The analytical counterpart lives in
+//! [`crate::model::tiers`].
+//!
+//! Key material: [`TierConfig::key_words`] is the exact-bits extension
+//! appended to [`crate::model::Scenario::key_words`]. `Scalar` encodes
+//! to **zero words**, which is what keeps every pre-existing memo key,
+//! cache key and derived seed bit-identical.
+
+/// Maximum number of storage levels (node-local SSD, burst buffer, PFS,
+/// plus one spare). Fixed so the hierarchy stays `Copy`.
+pub const MAX_TIERS: usize = 4;
+
+/// One storage level. Times in minutes, power in the same per-node
+/// units as [`crate::model::PowerParams`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TierSpec {
+    /// Write cost `C_i`: wall-clock minutes to land one checkpoint on
+    /// this tier (synchronous for tier 0, drain duration for tiers ≥ 1).
+    pub c: f64,
+    /// Read cost `R_i`: wall-clock minutes to restart from this tier.
+    pub r: f64,
+    /// I/O power draw `P_IO_i` while reading/writing this tier.
+    pub p_io: f64,
+    /// Maximum simultaneous copies held on this tier (0 = unbounded).
+    pub capacity: u32,
+    /// Keep only the newest `retention` checkpoints (0 = unbounded).
+    pub retention: u32,
+}
+
+impl TierSpec {
+    /// Unbounded tier (no capacity/retention limits).
+    pub fn new(c: f64, r: f64, p_io: f64) -> Self {
+        TierSpec { c, r, p_io, capacity: 0, retention: 0 }
+    }
+
+    pub fn with_limits(c: f64, r: f64, p_io: f64, capacity: u32, retention: u32) -> Self {
+        TierSpec { c, r, p_io, capacity, retention }
+    }
+
+    fn validate(&self, idx: usize) -> Result<(), String> {
+        if !(self.c > 0.0 && self.c.is_finite()) {
+            return Err(format!("tier {idx}: c must be > 0, got {}", self.c));
+        }
+        if !(self.r >= 0.0 && self.r.is_finite()) {
+            return Err(format!("tier {idx}: r must be >= 0, got {}", self.r));
+        }
+        if !(self.p_io >= 0.0 && self.p_io.is_finite()) {
+            return Err(format!("tier {idx}: io must be >= 0, got {}", self.p_io));
+        }
+        Ok(())
+    }
+
+    /// Effective copy bound: the tightest of the non-zero limits
+    /// (`None` = unbounded).
+    pub fn keep_bound(&self) -> Option<usize> {
+        match (self.capacity, self.retention) {
+            (0, 0) => None,
+            (c, 0) => Some(c as usize),
+            (0, k) => Some(k as usize),
+            (c, k) => Some(c.min(k) as usize),
+        }
+    }
+}
+
+/// An ordered stack of 1..=[`MAX_TIERS`] storage levels, fastest first.
+/// Embedded in a scenario it always has ≥ 2 levels: 1-level stacks
+/// canonicalise to [`TierConfig::Scalar`] at the [`TierConfig::from_tiers`]
+/// entry point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TierHierarchy {
+    specs: [TierSpec; MAX_TIERS],
+    n: u8,
+}
+
+impl TierHierarchy {
+    /// Validated hierarchy from a slice of 1..=[`MAX_TIERS`] specs.
+    /// (A 1-level hierarchy is legal here; [`TierConfig::from_tiers`]
+    /// is the canonicalising entry point.)
+    pub fn new(tiers: &[TierSpec]) -> Result<Self, String> {
+        if tiers.is_empty() {
+            return Err("hierarchy needs at least 1 tier".into());
+        }
+        if tiers.len() > MAX_TIERS {
+            return Err(format!("at most {MAX_TIERS} tiers supported, got {}", tiers.len()));
+        }
+        for (i, t) in tiers.iter().enumerate() {
+            t.validate(i)?;
+        }
+        let mut specs = [TierSpec::new(1.0, 0.0, 0.0); MAX_TIERS];
+        specs[..tiers.len()].copy_from_slice(tiers);
+        Ok(TierHierarchy { specs, n: tiers.len() as u8 })
+    }
+
+    /// Number of levels (1..=[`MAX_TIERS`]).
+    pub fn len(&self) -> usize {
+        self.n as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // by construction: `new` rejects empty hierarchies
+    }
+
+    /// Level `i` (0 = fastest / node-local). Panics if out of range.
+    pub fn tier(&self, i: usize) -> &TierSpec {
+        assert!(i < self.len(), "tier index {i} out of range (n={})", self.n);
+        &self.specs[i]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &TierSpec> {
+        self.specs[..self.len()].iter()
+    }
+
+    /// Exact-bits key words for this hierarchy: the level count, then
+    /// every field of every level. The exhaustive destructuring makes
+    /// adding a `TierSpec` field a compile error here, mirroring the
+    /// `Scenario::key_bits` convention.
+    pub fn key_words(&self) -> Vec<u64> {
+        let mut k = Vec::with_capacity(1 + 5 * self.len());
+        k.push(self.n as u64);
+        for spec in self.iter() {
+            let TierSpec { c, r, p_io, capacity, retention } = *spec;
+            k.push(c.to_bits());
+            k.push(r.to_bits());
+            k.push(p_io.to_bits());
+            k.push(capacity as u64);
+            k.push(retention as u64);
+        }
+        k
+    }
+}
+
+/// A scenario's storage model: the paper's scalar triple, or a
+/// multi-level hierarchy.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum TierConfig {
+    /// The pre-refactor scalar model: one `(C, R, P_IO)` triple read
+    /// from `Scenario { ckpt, power, .. }`. Encodes to zero key words.
+    #[default]
+    Scalar,
+    /// A ≥2-level hierarchy. The scenario's scalar fields hold the
+    /// *effective projection* (tier-0 write cost, tier-1 restart cost,
+    /// tier-0 I/O power); the hierarchy carries the full structure.
+    Tiered(TierHierarchy),
+}
+
+impl TierConfig {
+    /// Canonicalising constructor: a 1-level hierarchy **is** the scalar
+    /// model, so it becomes [`TierConfig::Scalar`] — the bit-for-bit
+    /// degenerate-equivalence guarantee falls out of this.
+    pub fn from_tiers(tiers: &[TierSpec]) -> Result<Self, String> {
+        let h = TierHierarchy::new(tiers)?;
+        if h.len() == 1 {
+            Ok(TierConfig::Scalar)
+        } else {
+            Ok(TierConfig::Tiered(h))
+        }
+    }
+
+    /// The hierarchy, when there is more than one level.
+    pub fn hierarchy(&self) -> Option<&TierHierarchy> {
+        match self {
+            TierConfig::Scalar => None,
+            TierConfig::Tiered(h) => Some(h),
+        }
+    }
+
+    pub fn is_scalar(&self) -> bool {
+        matches!(self, TierConfig::Scalar)
+    }
+
+    /// Exact-bits key extension. **Empty for `Scalar`** — every
+    /// pre-existing key/seed derivation stays bit-identical.
+    pub fn key_words(&self) -> Vec<u64> {
+        match self {
+            TierConfig::Scalar => Vec::new(),
+            TierConfig::Tiered(h) => h.key_words(),
+        }
+    }
+}
+
+/// Grammar for `--tiers` and the serve wire: tiers separated by `/`,
+/// fastest first, each `c=<f>,r=<f>,io=<f>[,cap=<n>][,keep=<n>]`.
+///
+/// Example: `c=1,r=1,io=30/c=10,r=10,io=100,keep=2`.
+pub const TIER_GRAMMAR: &str = "c=<min>,r=<min>,io=<power>[,cap=<n>][,keep=<n>] \
+                                joined by '/' fastest-first (1-4 tiers), e.g. \
+                                c=1,r=1,io=30/c=10,r=10,io=100";
+
+/// Parse the [`TIER_GRAMMAR`] into a (canonicalised) [`TierConfig`].
+pub fn parse_tiers(input: &str) -> Result<TierConfig, String> {
+    TierConfig::from_tiers(&parse_tier_specs(input)?)
+}
+
+/// Parse the [`TIER_GRAMMAR`] into raw specs, fastest first — for
+/// callers (the `--tiers` flag) that need a 1-level spec's fields
+/// *before* [`TierConfig::from_tiers`] canonicalises it away. Count
+/// and field validation happen at hierarchy construction.
+pub fn parse_tier_specs(input: &str) -> Result<Vec<TierSpec>, String> {
+    let mut tiers = Vec::new();
+    for (idx, part) in input.split('/').enumerate() {
+        let mut c = None;
+        let mut r = None;
+        let mut io = None;
+        let mut cap = 0u32;
+        let mut keep = 0u32;
+        for field in part.split(',') {
+            let field = field.trim();
+            let (key, val) = field
+                .split_once('=')
+                .ok_or_else(|| format!("tier {idx}: expected key=value, got '{field}'"))?;
+            match key.trim() {
+                "c" => c = Some(parse_f64(idx, "c", val)?),
+                "r" => r = Some(parse_f64(idx, "r", val)?),
+                "io" => io = Some(parse_f64(idx, "io", val)?),
+                "cap" => cap = parse_u32(idx, "cap", val)?,
+                "keep" => keep = parse_u32(idx, "keep", val)?,
+                other => return Err(format!("tier {idx}: unknown field '{other}'")),
+            }
+        }
+        let c = c.ok_or_else(|| format!("tier {idx}: missing required field 'c'"))?;
+        let r = r.ok_or_else(|| format!("tier {idx}: missing required field 'r'"))?;
+        let io = io.ok_or_else(|| format!("tier {idx}: missing required field 'io'"))?;
+        tiers.push(TierSpec::with_limits(c, r, io, cap, keep));
+    }
+    Ok(tiers)
+}
+
+fn parse_f64(idx: usize, key: &str, val: &str) -> Result<f64, String> {
+    val.trim()
+        .parse::<f64>()
+        .map_err(|_| format!("tier {idx}: field '{key}' is not a number: '{val}'"))
+}
+
+fn parse_u32(idx: usize, key: &str, val: &str) -> Result<u32, String> {
+    val.trim()
+        .parse::<u32>()
+        .map_err(|_| format!("tier {idx}: field '{key}' is not a count: '{val}'"))
+}
+
+/// A checkpoint copy held on some tier during a simulation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CopyRecord {
+    /// Work units captured by this checkpoint (restart resumes here).
+    pub work: f64,
+    /// Simulation time at which the copy became usable (write or drain
+    /// completion).
+    pub available_at: f64,
+}
+
+/// The DES-side store: per-tier copy lists with newest-K eviction and
+/// nearest-surviving-tier recovery lookup.
+///
+/// Eviction never removes a tier's freshest copy, and never removes a
+/// copy pinned as the source of an in-flight drain (the drain would
+/// silently lose its data otherwise).
+#[derive(Debug, Clone)]
+pub struct TierStore {
+    /// `copies[i]` sorted by insertion order == ascending `work`.
+    copies: Vec<Vec<CopyRecord>>,
+    bounds: Vec<Option<usize>>,
+}
+
+impl TierStore {
+    pub fn new(h: &TierHierarchy) -> Self {
+        TierStore {
+            copies: vec![Vec::new(); h.len()],
+            bounds: h.iter().map(|t| t.keep_bound()).collect(),
+        }
+    }
+
+    /// Record a landed copy on `tier`, then evict beyond the tier's
+    /// bound — oldest first, skipping the freshest copy and any copy
+    /// whose `work` appears in `pinned` (in-flight drain sources).
+    pub fn record(&mut self, tier: usize, copy: CopyRecord, pinned: &[f64]) {
+        let list = &mut self.copies[tier];
+        list.push(copy);
+        if let Some(bound) = self.bounds[tier] {
+            let bound = bound.max(1);
+            let mut i = 0;
+            while list.len() > bound && i < list.len() - 1 {
+                let w = list[i].work;
+                if pinned.iter().any(|&p| p.to_bits() == w.to_bits()) {
+                    i += 1; // pinned: try the next-oldest instead
+                } else {
+                    list.remove(i);
+                }
+            }
+        }
+    }
+
+    /// Copies currently held on `tier` (test/diagnostic use).
+    pub fn tier_copies(&self, tier: usize) -> &[CopyRecord] {
+        &self.copies[tier]
+    }
+
+    /// A node loss destroys every tier-0 (node-local) copy.
+    pub fn purge_node_local(&mut self) {
+        if let Some(local) = self.copies.first_mut() {
+            local.clear();
+        }
+    }
+
+    /// Freshest copy usable at a failure striking at `fail_at`:
+    /// maximum `work` over all tiers ≥ 1 (tier 0 just died with the
+    /// node) with `available_at <= fail_at`; ties prefer the lowest
+    /// (fastest) tier. `None` means restart from scratch.
+    pub fn freshest_surviving(&self, fail_at: f64) -> Option<(usize, CopyRecord)> {
+        let mut best: Option<(usize, CopyRecord)> = None;
+        for (tier, list) in self.copies.iter().enumerate().skip(1) {
+            for &c in list {
+                if c.available_at <= fail_at {
+                    let better = match best {
+                        None => true,
+                        Some((_, b)) => c.work > b.work,
+                    };
+                    if better {
+                        best = Some((tier, c));
+                    }
+                }
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_level() -> TierHierarchy {
+        TierHierarchy::new(&[
+            TierSpec::new(1.0, 1.0, 30.0),
+            TierSpec::new(10.0, 10.0, 100.0),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn single_tier_canonicalises_to_scalar() {
+        let cfg = TierConfig::from_tiers(&[TierSpec::new(10.0, 10.0, 100.0)]).unwrap();
+        assert!(cfg.is_scalar());
+        assert!(cfg.hierarchy().is_none());
+        assert!(cfg.key_words().is_empty());
+    }
+
+    #[test]
+    fn multi_tier_keeps_hierarchy() {
+        let cfg = TierConfig::from_tiers(&[
+            TierSpec::new(1.0, 1.0, 30.0),
+            TierSpec::new(10.0, 10.0, 100.0),
+        ])
+        .unwrap();
+        let h = cfg.hierarchy().unwrap();
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.tier(0).c, 1.0);
+        assert_eq!(h.tier(1).p_io, 100.0);
+    }
+
+    #[test]
+    fn hierarchy_validation() {
+        assert!(TierHierarchy::new(&[]).is_err());
+        assert!(TierHierarchy::new(&[TierSpec::new(0.0, 1.0, 1.0)]).is_err());
+        assert!(TierHierarchy::new(&[TierSpec::new(1.0, -1.0, 1.0)]).is_err());
+        assert!(TierHierarchy::new(&[TierSpec::new(1.0, 1.0, f64::NAN)]).is_err());
+        let five = [TierSpec::new(1.0, 1.0, 1.0); 5];
+        assert!(TierHierarchy::new(&five).is_err());
+    }
+
+    #[test]
+    fn key_words_cover_every_field_of_every_tier() {
+        let base = two_level();
+        let bits = base.key_words();
+        assert_eq!(bits.len(), 1 + 5 * 2);
+        assert_eq!(bits[0], 2, "leading word is the level count");
+        // Each field perturbation changes the key.
+        for field in 0..5 {
+            for tier in 0..2 {
+                let mut specs: Vec<TierSpec> = base.iter().copied().collect();
+                match field {
+                    0 => specs[tier].c += 1.0,
+                    1 => specs[tier].r += 1.0,
+                    2 => specs[tier].p_io += 1.0,
+                    3 => specs[tier].capacity += 1,
+                    _ => specs[tier].retention += 1,
+                }
+                let v = TierHierarchy::new(&specs).unwrap();
+                assert_ne!(v.key_words(), bits, "tier {tier} field {field} not covered");
+            }
+        }
+        // Level count is covered too.
+        let mut specs: Vec<TierSpec> = base.iter().copied().collect();
+        specs.push(TierSpec::new(20.0, 20.0, 200.0));
+        assert_ne!(TierHierarchy::new(&specs).unwrap().key_words(), bits);
+    }
+
+    #[test]
+    fn grammar_roundtrip_and_errors() {
+        let cfg = parse_tiers("c=1,r=1,io=30/c=10,r=10,io=100,keep=2").unwrap();
+        let h = cfg.hierarchy().unwrap();
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.tier(1).retention, 2);
+        assert_eq!(h.tier(1).capacity, 0);
+        // Single tier canonicalises.
+        assert!(parse_tiers("c=10,r=10,io=100").unwrap().is_scalar());
+        // Errors.
+        assert!(parse_tiers("").is_err());
+        assert!(parse_tiers("c=1,r=1").is_err(), "missing io");
+        assert!(parse_tiers("c=1,r=1,io=x").is_err(), "non-numeric");
+        assert!(parse_tiers("c=1,r=1,io=1,zap=2").is_err(), "unknown field");
+        assert!(parse_tiers("c=1,r=1,io=1,cap=1.5").is_err(), "non-integer cap");
+        assert!(parse_tiers("c=0,r=1,io=1/c=1,r=1,io=1").is_err(), "c=0 invalid");
+    }
+
+    #[test]
+    fn store_recovery_prefers_freshest_then_fastest() {
+        let h = TierHierarchy::new(&[
+            TierSpec::new(1.0, 1.0, 30.0),
+            TierSpec::new(2.0, 3.0, 60.0),
+            TierSpec::new(10.0, 10.0, 100.0),
+        ])
+        .unwrap();
+        let mut store = TierStore::new(&h);
+        store.record(0, CopyRecord { work: 50.0, available_at: 51.0 }, &[]);
+        store.record(1, CopyRecord { work: 40.0, available_at: 45.0 }, &[]);
+        store.record(2, CopyRecord { work: 40.0, available_at: 60.0 }, &[]);
+        // Tier-0 copy is freshest but dies with the node; tier-1 copy of
+        // the same work as tier-2 wins on tier order; the tier-2 copy is
+        // not yet available at t=50.
+        let (tier, copy) = store.freshest_surviving(50.0).unwrap();
+        assert_eq!(tier, 1);
+        assert_eq!(copy.work, 40.0);
+        // After the tier-2 drain lands, work ties still pick tier 1.
+        let (tier, _) = store.freshest_surviving(61.0).unwrap();
+        assert_eq!(tier, 1);
+        // A fresher tier-2 copy beats the older tier-1 copy.
+        store.record(2, CopyRecord { work: 48.0, available_at: 62.0 }, &[]);
+        let (tier, copy) = store.freshest_surviving(63.0).unwrap();
+        assert_eq!(tier, 2);
+        assert_eq!(copy.work, 48.0);
+        // Nothing survives at t=0.
+        assert!(store.freshest_surviving(0.0).is_none());
+    }
+
+    #[test]
+    fn node_loss_purges_only_tier0() {
+        let h = two_level();
+        let mut store = TierStore::new(&h);
+        store.record(0, CopyRecord { work: 10.0, available_at: 11.0 }, &[]);
+        store.record(1, CopyRecord { work: 10.0, available_at: 21.0 }, &[]);
+        store.purge_node_local();
+        assert!(store.tier_copies(0).is_empty());
+        assert_eq!(store.tier_copies(1).len(), 1);
+    }
+
+    #[test]
+    fn eviction_keeps_newest_k_and_pins() {
+        let h = TierHierarchy::new(&[
+            TierSpec::new(1.0, 1.0, 30.0),
+            TierSpec::with_limits(10.0, 10.0, 100.0, 0, 2),
+        ])
+        .unwrap();
+        let mut store = TierStore::new(&h);
+        for i in 0..4 {
+            let w = 10.0 * (i + 1) as f64;
+            store.record(1, CopyRecord { work: w, available_at: w + 1.0 }, &[]);
+        }
+        let works: Vec<f64> = store.tier_copies(1).iter().map(|c| c.work).collect();
+        assert_eq!(works, vec![30.0, 40.0], "newest 2 retained");
+        // A pinned old copy survives; the next-oldest unpinned one goes.
+        store.record(1, CopyRecord { work: 50.0, available_at: 51.0 }, &[30.0]);
+        let works: Vec<f64> = store.tier_copies(1).iter().map(|c| c.work).collect();
+        assert_eq!(works, vec![30.0, 50.0], "pinned 30 kept, 40 evicted");
+    }
+
+    #[test]
+    fn capacity_and_retention_tightest_wins() {
+        assert_eq!(TierSpec::with_limits(1.0, 1.0, 1.0, 3, 2).keep_bound(), Some(2));
+        assert_eq!(TierSpec::with_limits(1.0, 1.0, 1.0, 2, 3).keep_bound(), Some(2));
+        assert_eq!(TierSpec::with_limits(1.0, 1.0, 1.0, 0, 3).keep_bound(), Some(3));
+        assert_eq!(TierSpec::new(1.0, 1.0, 1.0).keep_bound(), None);
+    }
+}

@@ -63,7 +63,16 @@ use super::cache::CellKey;
 /// v2: the objective-model backend joined the Frontier cell and the
 /// policy encoding. v3: the drift layer joined the cell space (the
 /// `DriftRun` job, drifting failure processes in the key).
-const KEY_VERSION: u64 = 3;
+/// v4: tiered storage joined the cell space (the scenario key grew its
+/// tier extension words; `Sim` cells gained drain queues).
+const KEY_VERSION: u64 = 4;
+
+/// Seed derivation stays pinned at the v3 word: a seed key only needs
+/// to be *unique per environment*, and the sample paths derived from it
+/// are pinned by golden simulated figures. Scalar cells therefore keep
+/// their exact pre-tier seeds; tiered cells still get distinct seeds
+/// through the scenario's tier extension words.
+const SEED_KEY_VERSION: u64 = 3;
 
 /// What to compute for one cell.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -457,8 +466,8 @@ impl GridSpec {
     /// policy, replicate count) always enter both keys.
     fn key_for(&self, cell: &Cell, for_seed: bool) -> CellKey {
         let mut k = Vec::with_capacity(24);
-        k.push(KEY_VERSION);
-        k.extend_from_slice(&cell.scenario.key_bits());
+        k.push(if for_seed { SEED_KEY_VERSION } else { KEY_VERSION });
+        k.extend(cell.scenario.key_words());
         match &cell.failure {
             None => k.push(0),
             Some(FailureProcess::Exponential { mtbf }) => {

@@ -152,7 +152,7 @@ pub mod metrics {
     };
 }
 
-/// One row of the unified cache/memo statistics table: the four
+/// One row of the unified cache/memo statistics table: the five
 /// process-wide caches, one schema (`info` renders this; the
 /// Prometheus exposition emits the same numbers as labelled families).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -186,6 +186,7 @@ pub fn cache_rows() -> Vec<CacheRow> {
     let (grid_hits, grid_misses) = crate::sweep::cache::stats();
     let (online, online_len) = crate::pareto::online::memo_stats();
     let (opt, opt_len) = crate::model::backend::opt_memo_stats();
+    let (tier, tier_len) = crate::model::tiers::tier_plan_memo_stats();
     let (serve_hits, serve_misses) = crate::serve::answer_cache_stats();
     vec![
         CacheRow {
@@ -208,6 +209,13 @@ pub fn cache_rows() -> Vec<CacheRow> {
             hits: opt.hits,
             misses: opt.misses,
             clears: opt.clears,
+        },
+        CacheRow {
+            name: "tier plan memo",
+            entries: tier_len,
+            hits: tier.hits,
+            misses: tier.misses,
+            clears: tier.clears,
         },
         CacheRow {
             name: "serve answer cache",
@@ -256,7 +264,13 @@ mod tests {
         let names: Vec<&str> = rows.iter().map(|r| r.name).collect();
         assert_eq!(
             names,
-            ["grid cell cache", "online policy memo", "exact optima memo", "serve answer cache"]
+            [
+                "grid cell cache",
+                "online policy memo",
+                "exact optima memo",
+                "tier plan memo",
+                "serve answer cache"
+            ]
         );
         let empty = CacheRow { name: "x", entries: 0, hits: 0, misses: 0, clears: 0 };
         assert_eq!(empty.hit_rate(), 0.0);

@@ -54,16 +54,19 @@ impl MemoStats {
     }
 }
 
-/// A capacity-bounded memo for a pure `K -> f64` function.
-pub struct PureMemo<K> {
-    map: OnceLock<Mutex<HashMap<K, f64>>>,
+/// A capacity-bounded memo for a pure `K -> V` function (`V = f64` by
+/// default — the historical shape; the tier-plan memo stores a small
+/// plan struct instead). Keys only need `Clone`, so variable-length
+/// `Vec<u64>` keys (scenarios with tier extensions) work too.
+pub struct PureMemo<K, V = f64> {
+    map: OnceLock<Mutex<HashMap<K, V>>>,
     capacity: usize,
     hits: AtomicU64,
     misses: AtomicU64,
     clears: AtomicU64,
 }
 
-impl<K: Eq + Hash + Copy> PureMemo<K> {
+impl<K: Eq + Hash + Clone, V: Clone> PureMemo<K, V> {
     /// Const-constructible so instances can live in `static`s.
     pub const fn new(capacity: usize) -> Self {
         PureMemo {
@@ -75,7 +78,7 @@ impl<K: Eq + Hash + Copy> PureMemo<K> {
         }
     }
 
-    fn map(&self) -> &Mutex<HashMap<K, f64>> {
+    fn map(&self) -> &Mutex<HashMap<K, V>> {
         self.map.get_or_init(|| Mutex::new(HashMap::new()))
     }
 
@@ -86,11 +89,11 @@ impl<K: Eq + Hash + Copy> PureMemo<K> {
     pub fn get_or_try_compute<E>(
         &self,
         key: K,
-        compute: impl FnOnce() -> Result<f64, E>,
-    ) -> Result<f64, E> {
-        if let Some(&v) = self.map().lock().unwrap().get(&key) {
+        compute: impl FnOnce() -> Result<V, E>,
+    ) -> Result<V, E> {
+        if let Some(v) = self.map().lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(v);
+            return Ok(v.clone());
         }
         // Compute outside the lock: a concurrent miss on the same key
         // just recomputes the same pure value.
@@ -101,12 +104,12 @@ impl<K: Eq + Hash + Copy> PureMemo<K> {
             m.clear();
             self.clears.fetch_add(1, Ordering::Relaxed);
         }
-        m.insert(key, v);
+        m.insert(key, v.clone());
         Ok(v)
     }
 
     /// Infallible variant of [`Self::get_or_try_compute`].
-    pub fn get_or_compute(&self, key: K, compute: impl FnOnce() -> f64) -> f64 {
+    pub fn get_or_compute(&self, key: K, compute: impl FnOnce() -> V) -> V {
         self.get_or_try_compute::<Infallible>(key, || Ok(compute()))
             .unwrap_or_else(|e| match e {})
     }

@@ -89,6 +89,7 @@ fn figures_generates_csvs() {
     assert!(out.contains("knee drift"), "{out}");
     assert!(out.contains("adaptive knee"), "{out}");
     assert!(out.contains("drift tracking"), "{out}");
+    assert!(out.contains("tiers knee"), "{out}");
     for f in [
         "fig1.csv",
         "fig2.csv",
@@ -99,10 +100,95 @@ fn figures_generates_csvs() {
         "knee_drift.csv",
         "adaptive.csv",
         "drift.csv",
+        "tiers.csv",
     ] {
         assert!(dir.join(f).exists(), "missing {f}");
     }
     let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn optimize_accepts_tier_presets_and_raw_grammar() {
+    // Preset: the hierarchy's projection overrides C/R, so the optimal
+    // periods differ from the flat default scenario.
+    let flat = run_ok(&["optimize", "--mu", "300", "--rho", "5.5"]);
+    let tiered = run_ok(&["optimize", "--mu", "300", "--rho", "5.5", "--tiers", "tiers-2"]);
+    assert!(tiered.contains("AlgoT"), "{tiered}");
+    assert_ne!(flat, tiered, "--tiers tiers-2 changed nothing");
+    // Raw grammar round-trips through the same path.
+    let raw = run_ok(&[
+        "optimize",
+        "--mu",
+        "300",
+        "--rho",
+        "5.5",
+        "--tiers",
+        "c=1,r=1,io=3/c=10,r=10,io=10",
+    ]);
+    assert!(raw.contains("AlgoE"), "{raw}");
+    // A single-level stack is the scalar model: identical output to
+    // spelling C/R directly.
+    let one = run_ok(&["optimize", "--mu", "300", "--rho", "5.5", "--tiers", "c=10,r=10,io=10"]);
+    assert_eq!(one, flat, "1-level --tiers must degenerate to the scalar path");
+}
+
+#[test]
+fn tiers_flag_rejects_bad_values_with_the_full_grammar() {
+    for bad in ["nope", "c=1,r=1", "c=1,r=1,io=3/c=0,r=1,io=1", "x=2"] {
+        let out = bin().args(["optimize", "--tiers", bad]).output().unwrap();
+        assert!(!out.status.success(), "--tiers {bad} accepted");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("invalid value"), "{bad}: {err}");
+        assert!(err.contains("tiers-1|tiers-2|tiers-3"), "{bad}: presets missing from {err}");
+        assert!(err.contains("joined by '/'"), "{bad}: grammar missing from {err}");
+    }
+    // Tiered scenarios reject drift schedules at the flag layer, not
+    // with a panic inside the simulator.
+    let out = bin()
+        .args([
+            "simulate",
+            "--adaptive",
+            "--tiers",
+            "tiers-2",
+            "--drift",
+            "io-ramp",
+            "--replicates",
+            "4",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("stationary"), "{err}");
+}
+
+#[test]
+fn bench_gate_compares_the_trajectory() {
+    let dir = std::env::temp_dir().join("ckpt_cli_bench_gate");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    // No trajectory yet: benign skip, exit 0.
+    let out = run_ok(&["bench", "--gate", "--out-dir", dir.to_str().unwrap()]);
+    assert!(out.contains("skipping"), "{out}");
+    let doc = |warm: f64| {
+        format!(
+            r#"{{"schema": "ckpt-period/bench/v2", "quick": true, "warm_memo_ns": 90.0,
+                "cell_throughput_per_sec": 2000000.0,
+                "queries_per_sec": {{"4": {{"cold": 1.0, "warm": {warm}}}}}}}"#
+        )
+    };
+    std::fs::write(dir.join("BENCH_0.json"), doc(5.0e6)).unwrap();
+    std::fs::write(dir.join("BENCH_1.json"), doc(4.9e6)).unwrap();
+    let out = run_ok(&["bench", "--gate", "--out-dir", dir.to_str().unwrap()]);
+    assert!(out.contains("bench gate passed"), "{out}");
+    // A 30% warm-q/s drop on the newest pair fails with a full report.
+    std::fs::write(dir.join("BENCH_2.json"), doc(3.4e6)).unwrap();
+    let out =
+        bin().args(["bench", "--gate", "--out-dir", dir.to_str().unwrap()]).output().unwrap();
+    assert!(!out.status.success(), "regressed trajectory must fail the gate");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("REGRESSION") && err.contains("FAILED"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
@@ -368,9 +454,13 @@ fn info_reports_memo_counters() {
     assert!(out.contains("memo caches"), "{out}");
     // One registry-driven table, every cached surface a row (zero
     // counters in a fresh process, but every row is always there).
-    for row in
-        ["grid cell cache", "online policy memo", "exact optima memo", "serve answer cache"]
-    {
+    for row in [
+        "grid cell cache",
+        "online policy memo",
+        "exact optima memo",
+        "tier plan memo",
+        "serve answer cache",
+    ] {
         assert!(out.contains(row), "missing cache row {row}: {out}");
     }
     for col in ["entries", "hits", "misses", "clears", "hit rate"] {
@@ -384,6 +474,7 @@ fn info_metrics_prints_the_prometheus_exposition() {
     assert!(out.contains("# TYPE ckpt_cache_hits_total counter"), "{out}");
     assert!(out.contains("# TYPE ckpt_serve_stage_ns histogram"), "{out}");
     assert!(out.contains("ckpt_cache_entries{cache=\"grid-cell-cache\"}"), "{out}");
+    assert!(out.contains("ckpt_cache_entries{cache=\"tier-plan-memo\"}"), "{out}");
     assert!(out.contains("ckpt_serve_stage_ns_bucket{stage=\"solve\",le=\"+Inf\"}"), "{out}");
     // Exposition-only mode: no summary tables mixed into the scrape.
     assert!(!out.contains("memo caches"), "{out}");

@@ -7,9 +7,9 @@
 //! change to the model, the optimal-period solvers, or the grid-engine
 //! rewiring fails loudly here.
 
-use ckpt_period::config::presets::tradeoff_presets;
+use ckpt_period::config::presets::{tier_preset, tradeoff_presets};
 use ckpt_period::figures::{drift, fig1, fig2, fig3, headline, knee_drift};
-use ckpt_period::model::{Backend, RecoveryModel};
+use ckpt_period::model::{Backend, RecoveryModel, Scenario};
 use ckpt_period::pareto::{Frontier, KneeMethod};
 
 const REL_TOL: f64 = 1e-9;
@@ -176,6 +176,118 @@ fn frontier_golden_hypervolume_and_knee_rows() {
         assert_close(&format!("{label} knee period"), k.point.period, knee_period);
         assert_close(&format!("{label} knee makespan"), k.point.time, knee_time);
         assert_close(&format!("{label} knee energy"), k.point.energy, knee_energy);
+    }
+}
+
+#[test]
+fn tiers_golden_knee_rows() {
+    // Golden rows for the multi-level storage figure: the two headline
+    // base presets under each tier stack (the flattened PFS baseline
+    // and the 2-/3-level drained hierarchies), at the same 65-point
+    // sampling as the frontier rows above. Values from the same
+    // independently mirrored forms as every other fixture here. The
+    // tiered optimal periods pass through `grid_then_golden`, so the
+    // whole block sits at the numeric-optimiser tolerance.
+    //
+    // This is also the acceptance gate for the hierarchy story: after
+    // the golden check, the >=2-level knees must strictly dominate the
+    // flattened tiers-1 knee of the same base preset — on EVERY base
+    // preset, both axes at once.
+    const N: usize = 65;
+    // (base, tiers, hypervolume, knee_period, knee_makespan, knee_energy)
+    let golden = [
+        (
+            "fig1-rho5.5",
+            "tiers-1",
+            0.8468027928654311,
+            83.66927355941102,
+            13175.590452351636,
+            42585.14151061798,
+        ),
+        (
+            "fig1-rho5.5",
+            "tiers-2",
+            0.8002461721041462,
+            39.34791050627604,
+            11739.97817059445,
+            41022.165764539,
+        ),
+        (
+            "fig1-rho5.5",
+            "tiers-3",
+            0.7789424795972112,
+            29.157009556547827,
+            10943.377498167474,
+            27145.67156039877,
+        ),
+        (
+            "exascale-io-heavy",
+            "tiers-1",
+            0.8434805974814471,
+            46.06166960443084,
+            16442.352541244945,
+            69751.6816764987,
+        ),
+        (
+            "exascale-io-heavy",
+            "tiers-2",
+            0.7568119254792574,
+            27.56417742098122,
+            14274.694490285654,
+            66177.35862220114,
+        ),
+        (
+            "exascale-io-heavy",
+            "tiers-3",
+            0.7755899783911637,
+            17.386761664609384,
+            11688.301080532268,
+            33019.17379428112,
+        ),
+    ];
+    let presets = tradeoff_presets();
+    let tiered = |base: &str, tiers: &str| {
+        let (_, s) = presets
+            .iter()
+            .find(|(l, _)| *l == base)
+            .unwrap_or_else(|| panic!("preset {base} disappeared"));
+        let specs = tier_preset(tiers).unwrap_or_else(|| panic!("tier preset {tiers}"));
+        Scenario::with_tier_specs(s.ckpt, s.power, s.mu, s.t_base, &specs)
+            .unwrap_or_else(|e| panic!("{base}+{tiers}: {e}"))
+    };
+    for (base, tiers, hv, knee_period, knee_time, knee_energy) in golden {
+        let label = format!("{base}+{tiers}");
+        let s = tiered(base, tiers);
+        let f = Frontier::compute(&s, N, Backend::FirstOrder).expect(&label);
+        assert_close_tol(&format!("{label} hypervolume"), f.hypervolume(), hv, EXACT_REL_TOL);
+        let k = f.knee(KneeMethod::MaxDistanceToChord).expect(&label);
+        assert_close_tol(&format!("{label} knee period"), k.point.period, knee_period, EXACT_REL_TOL);
+        assert_close_tol(&format!("{label} knee makespan"), k.point.time, knee_time, EXACT_REL_TOL);
+        assert_close_tol(&format!("{label} knee energy"), k.point.energy, knee_energy, EXACT_REL_TOL);
+    }
+    // Strict knee dominance of the drained hierarchies over the flat
+    // baseline, across every base preset (not just the golden pair).
+    for (base, _) in &presets {
+        let flat = Frontier::compute(&tiered(base, "tiers-1"), N, Backend::FirstOrder)
+            .expect(base)
+            .knee(KneeMethod::MaxDistanceToChord)
+            .expect(base)
+            .point;
+        for tiers in ["tiers-2", "tiers-3"] {
+            let k = Frontier::compute(&tiered(base, tiers), N, Backend::FirstOrder)
+                .expect(base)
+                .knee(KneeMethod::MaxDistanceToChord)
+                .expect(base)
+                .point;
+            assert!(
+                k.time < flat.time && k.energy < flat.energy,
+                "{base}+{tiers} knee ({}, {}) does not dominate tiers-1 ({}, {})",
+                k.time,
+                k.energy,
+                flat.time,
+                flat.energy
+            );
+        }
     }
 }
 

@@ -1,0 +1,238 @@
+//! ISSUE 8 acceptance gate: the tiered storage hierarchy is a strict
+//! superset of the scalar model. A degenerate single-tier hierarchy
+//! must reproduce the scalar code path **bit for bit** — direct model
+//! calls, grid cells, frontier geometry, serve answers at 1 and 8 pool
+//! participants, and simulated sample paths — on every trade-off
+//! preset. Multi-level hierarchies must keep the frontier invariants
+//! (pinned endpoints, strict dominance ordering, interior knee,
+//! `T_Energy_opt >= T_Time_opt`) and stay byte-identical across
+//! thread counts when the drain-queue simulator fans out.
+
+use ckpt_period::config::presets::{tier_preset, tradeoff_presets};
+use ckpt_period::coordinator::PeriodPolicy;
+use ckpt_period::model::{e_final, t_energy_opt, t_final, t_time_opt, Backend, Scenario};
+use ckpt_period::pareto::{Frontier, KneeMethod};
+use ckpt_period::serve::{solve, BatchEngine, Query};
+use ckpt_period::sim::{monte_carlo, SimConfig, Simulator};
+use ckpt_period::storage::TierSpec;
+use ckpt_period::sweep::{CellOutput, GridSpec};
+use ckpt_period::util::pool::ThreadPool;
+
+/// The scenario re-expressed as a one-level hierarchy: same `(C, R,
+/// P_IO)` triple, but routed through the tier-construction path.
+fn single_tier_twin(s: &Scenario) -> Scenario {
+    let one = [TierSpec::new(s.ckpt.c, s.ckpt.r, s.power.p_io)];
+    Scenario::with_tier_specs(s.ckpt, s.power, s.mu, s.t_base, &one)
+        .expect("single tier stays in domain")
+}
+
+/// A tiered variant of a base preset under a named tier stack.
+fn tiered(s: &Scenario, stack: &str) -> Scenario {
+    let specs = tier_preset(stack).expect("tier preset exists");
+    Scenario::with_tier_specs(s.ckpt, s.power, s.mu, s.t_base, &specs)
+        .expect("tier preset stays in domain")
+}
+
+/// Interior sample periods of a scenario's analytic domain.
+fn sample_periods(s: &Scenario) -> Vec<f64> {
+    let (lo, hi) = s.domain();
+    [0.1, 0.3, 0.5, 0.7, 0.9]
+        .iter()
+        .map(|f| (lo + (hi - lo) * f).max(s.min_period()))
+        .collect()
+}
+
+#[test]
+fn single_tier_is_bit_identical_to_the_scalar_model() {
+    for (label, s) in tradeoff_presets() {
+        let twin = single_tier_twin(&s);
+        assert!(twin.hierarchy().is_none(), "{label}: 1 level must canonicalise to Scalar");
+        assert_eq!(twin.key_words(), s.key_words(), "{label}: solve keys diverged");
+
+        // Optimal periods and both objectives, bit for bit.
+        let (tt, tt2) = (t_time_opt(&s).unwrap(), t_time_opt(&twin).unwrap());
+        let (te, te2) = (t_energy_opt(&s).unwrap(), t_energy_opt(&twin).unwrap());
+        assert_eq!(tt.to_bits(), tt2.to_bits(), "{label}: t_time_opt");
+        assert_eq!(te.to_bits(), te2.to_bits(), "{label}: t_energy_opt");
+        for t in sample_periods(&s) {
+            assert_eq!(
+                t_final(&s, t).to_bits(),
+                t_final(&twin, t).to_bits(),
+                "{label}: t_final({t})"
+            );
+            assert_eq!(
+                e_final(&s, t).to_bits(),
+                e_final(&twin, t).to_bits(),
+                "{label}: e_final({t})"
+            );
+        }
+
+        // Frontier samples, point for point.
+        let fa = Frontier::compute(&s, 33, Backend::FirstOrder).unwrap();
+        let fb = Frontier::compute(&twin, 33, Backend::FirstOrder).unwrap();
+        assert_eq!(fa.len(), fb.len(), "{label}: frontier length");
+        for (p, q) in fa.points().iter().zip(fb.points()) {
+            assert_eq!(p.period.to_bits(), q.period.to_bits(), "{label}: frontier period");
+            assert_eq!(p.time.to_bits(), q.time.to_bits(), "{label}: frontier time");
+            assert_eq!(p.energy.to_bits(), q.energy.to_bits(), "{label}: frontier energy");
+        }
+
+        // Simulated sample paths share every field of every replicate.
+        let t = t_time_opt(&s).unwrap();
+        let run_a = Simulator::new(SimConfig::paper(s, t)).run(7);
+        let run_b = Simulator::new(SimConfig::paper(twin, t)).run(7);
+        assert_eq!(run_a.makespan.to_bits(), run_b.makespan.to_bits(), "{label}: makespan");
+        assert_eq!(run_a.energy.to_bits(), run_b.energy.to_bits(), "{label}: energy");
+        assert_eq!(run_a.n_failures, run_b.n_failures, "{label}: failures");
+        assert_eq!(run_a.n_checkpoints, run_b.n_checkpoints, "{label}: checkpoints");
+        assert_eq!(run_a.work_lost.to_bits(), run_b.work_lost.to_bits(), "{label}: work lost");
+    }
+}
+
+#[test]
+fn single_tier_grid_cells_match_the_scalar_cells() {
+    // The same equivalence through the grid engine: model cells over a
+    // period sweep plus a frontier cell, scalar vs single-tier twin,
+    // with the memo cache both off and on (the shared key means the
+    // twin's cached cells must serve the scalar spec and vice versa).
+    for (label, s) in tradeoff_presets() {
+        let twin = single_tier_twin(&s);
+        let periods = sample_periods(&s);
+        for use_cache in [false, true] {
+            let mut build = |sc: Scenario| {
+                let mut spec = GridSpec::model_sweep(sc, &periods, 42);
+                spec.push_frontier(sc, 17);
+                if use_cache {
+                    spec
+                } else {
+                    spec.without_cache()
+                }
+            };
+            let ra = build(s).evaluate();
+            let rb = build(twin).evaluate();
+            assert_eq!(ra.len(), rb.len(), "{label}: cell count");
+            for (a, b) in ra.iter().zip(&rb) {
+                match (&a.output, &b.output) {
+                    (
+                        CellOutput::Model { t_final: t1, e_final: e1 },
+                        CellOutput::Model { t_final: t2, e_final: e2 },
+                    ) => {
+                        assert_eq!(t1.to_bits(), t2.to_bits(), "{label}: cell t_final");
+                        assert_eq!(e1.to_bits(), e2.to_bits(), "{label}: cell e_final");
+                    }
+                    (CellOutput::Frontier(Ok(f1)), CellOutput::Frontier(Ok(f2))) => {
+                        assert_eq!(f1.hypervolume.to_bits(), f2.hypervolume.to_bits(), "{label}");
+                        assert_eq!(f1.points.len(), f2.points.len(), "{label}");
+                        for (p, q) in f1.points.iter().zip(&f2.points) {
+                            assert_eq!(p.time.to_bits(), q.time.to_bits(), "{label}");
+                            assert_eq!(p.energy.to_bits(), q.energy.to_bits(), "{label}");
+                        }
+                    }
+                    (a, b) => panic!("{label}: cell outputs diverged: {a:?} vs {b:?}"),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn tiered_serve_answers_are_thread_count_invariant() {
+    // Tiered scenarios through the batch engine: 1 vs 8 pool
+    // participants, cache off and on, must reproduce the sequential
+    // solve bits — the tier-plan memo must not introduce any
+    // scheduling-order sensitivity.
+    let policies = ["algo-t", "algo-e", "knee", "eps-energy:5"];
+    let mut queries = Vec::new();
+    for (_, s) in tradeoff_presets() {
+        for stack in ["tiers-2", "tiers-3"] {
+            let ts = tiered(&s, stack);
+            for raw in policies {
+                queries.push(Query::new(ts, PeriodPolicy::parse(raw).unwrap(), Backend::FirstOrder));
+            }
+        }
+    }
+    let reference: Vec<_> = queries.iter().map(|q| solve(q).expect("in domain")).collect();
+    let serial = ThreadPool::new(0);
+    let wide = ThreadPool::new(7);
+    for (what, answers) in [
+        ("1-thread uncached", BatchEngine::without_cache().answer_all_on(&serial, &queries)),
+        ("8-thread uncached", BatchEngine::without_cache().answer_all_on(&wide, &queries)),
+        ("1-thread cached", BatchEngine::new().answer_all_on(&serial, &queries)),
+        ("8-thread cached", BatchEngine::new().answer_all_on(&wide, &queries)),
+    ] {
+        for (i, (got, want)) in answers.iter().zip(&reference).enumerate() {
+            let got = got.as_ref().expect("tiered queries are solvable");
+            assert_eq!(got.period.to_bits(), want.period.to_bits(), "{what} slot {i}: period");
+            assert_eq!(got.t_final.to_bits(), want.t_final.to_bits(), "{what} slot {i}: t_final");
+            assert_eq!(got.e_final.to_bits(), want.e_final.to_bits(), "{what} slot {i}: e_final");
+        }
+    }
+}
+
+#[test]
+fn multi_level_frontier_keeps_the_pareto_invariants() {
+    for (label, s) in tradeoff_presets() {
+        for stack in ["tiers-2", "tiers-3"] {
+            let ts = tiered(&s, stack);
+            let what = format!("{label}+{stack}");
+            let tt = t_time_opt(&ts).unwrap();
+            let te = t_energy_opt(&ts).unwrap();
+            assert!(te >= tt * (1.0 - 1e-9), "{what}: T_E={te} < T_T={tt}");
+
+            let f = Frontier::compute(&ts, 33, Backend::FirstOrder).expect(&what);
+            let pts = f.points();
+            assert!(pts.len() >= 3, "{what}: frontier collapsed to {} points", pts.len());
+            // Endpoints pinned to the per-objective optima.
+            let (lo, hi) = if tt <= te { (tt, te) } else { (te, tt) };
+            assert_eq!(pts.first().unwrap().period.to_bits(), lo.to_bits(), "{what}: left end");
+            assert_eq!(pts.last().unwrap().period.to_bits(), hi.to_bits(), "{what}: right end");
+            // Strict dominance ordering: time ascending, energy descending.
+            for w in pts.windows(2) {
+                assert!(w[0].time < w[1].time, "{what}: time not strictly ascending");
+                assert!(w[0].energy > w[1].energy, "{what}: energy not strictly descending");
+            }
+            let k = f.knee(KneeMethod::MaxDistanceToChord).expect(&what);
+            assert!(k.index > 0 && k.index < pts.len() - 1, "{what}: knee not interior");
+        }
+    }
+}
+
+#[test]
+fn drain_queue_simulation_is_thread_count_deterministic() {
+    // The drain-queue DES fans replicates out on the pool; estimates
+    // must be byte-identical at every thread count, and a re-run of the
+    // same seed must reproduce the sample path exactly.
+    for stack in ["tiers-2", "tiers-3"] {
+        let (_, base) = &tradeoff_presets()[0];
+        let ts = tiered(base, stack);
+        assert!(ts.hierarchy().is_some(), "{stack} must stay tiered");
+        let period = t_time_opt(&ts).unwrap();
+        let cfg = SimConfig::paper(ts, period);
+
+        let sim = Simulator::new(cfg.clone());
+        let (a, b) = (sim.run(11), sim.run(11));
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{stack}: replay makespan");
+        assert_eq!(a.energy.to_bits(), b.energy.to_bits(), "{stack}: replay energy");
+        assert_eq!(a.n_failures, b.n_failures, "{stack}: replay failures");
+
+        let m1 = monte_carlo(&cfg, 48, 2024, 1);
+        let m8 = monte_carlo(&cfg, 48, 2024, 8);
+        assert_eq!(
+            m1.makespan.mean().to_bits(),
+            m8.makespan.mean().to_bits(),
+            "{stack}: makespan mean differs across thread counts"
+        );
+        assert_eq!(
+            m1.energy.mean().to_bits(),
+            m8.energy.mean().to_bits(),
+            "{stack}: energy mean differs across thread counts"
+        );
+        assert_eq!(
+            m1.work_lost.mean().to_bits(),
+            m8.work_lost.mean().to_bits(),
+            "{stack}: work-lost mean differs across thread counts"
+        );
+        assert!(m1.failures.mean() > 0.0, "{stack}: no failures simulated — test is vacuous");
+        assert!(m1.checkpoints.mean() > 1.0, "{stack}: no checkpoints simulated");
+    }
+}
