@@ -37,8 +37,9 @@
 //!
 //! [`pareto`] characterises the *range* of time/energy trade-offs the
 //! paper's §5 discusses: the exact frontier between `T_Time_opt` and
-//! `T_Energy_opt` (dense sampling, dominance filtering, normalised
-//! hypervolume), knee-point detection (max distance to chord, max
+//! `T_Energy_opt` (dense sampling fanned out on the thread pool and
+//! scattered back by index — bit-identical at every thread count —
+//! dominance filtering, normalised hypervolume), knee-point detection (max distance to chord, max
 //! curvature), ε-constraint solves ("minimise energy subject to a time
 //! overhead ≤ x%", and the transpose), and a Monte-Carlo-validated
 //! frontier cross-checked against the analytic one through seeded
@@ -123,7 +124,21 @@
 //! sink for the adaptive controller (`simulate --adaptive --trace`).
 //! Rendered as a Prometheus text exposition (a `GET /metrics` request
 //! line on the `batch --socket` path, or `info --metrics`) and
-//! embedded as percentile snapshots in `bench` v2 artifacts.
+//! embedded as percentile snapshots in `bench` v3 artifacts.
+//!
+//! Every process-wide cache (grid cells, the optimiser memos, tier
+//! plans, serve answers) is backed by one sharded store
+//! ([`util::shard::ShardedMap`]): 64 shards picked by a fixed-key
+//! hash of the exact key bits, each behind its own lock with its own
+//! hit/miss counters, so hot warm paths at 8 threads no longer queue
+//! on a single mutex and the per-cache aggregates are exact sums of
+//! the shard counters. The exposition adds per-shard occupancy rows
+//! (`ckpt_cache_shard_entries{cache=...,shard=...}`, occupied shards
+//! only), a contended-acquisition histogram
+//! (`ckpt_shard_lock_wait_ns` — near-empty is healthy), and the tier
+//! envelope pruning counters
+//! (`ckpt_tier_envelope_{evaluated,skipped}_total`) whose sum is the
+//! full feasible cadence envelope the bound-pruned scans partition.
 //!
 //! Naming conventions: families are prefixed `ckpt_`, counters end in
 //! `_total`, duration histograms in `_ns`; multi-instance concepts

@@ -40,7 +40,7 @@
 
 use super::exact::{
     e_final_exact, exact_breakdown, t_energy_opt_exact, t_final_exact, t_time_opt_exact,
-    RecoveryModel,
+    ExactEvaluator, RecoveryModel,
 };
 use super::optimize::grid_then_golden;
 use super::params::{ModelError, Scenario};
@@ -212,9 +212,28 @@ impl Backend {
             Backend::Exact(m) => {
                 s.clamp_period(s.min_period())?;
                 if s.hierarchy().is_some() {
-                    let b = *self;
                     Ok(cached_opt(OPT_TIME_TAG, *m, s, || {
-                        numeric_opt(s, |t| b.t_final(s, t))
+                        // Hoist the per-scenario invariants out of the
+                        // ~400-point optimiser loop: the flattened
+                        // projection and the exact evaluator depend only
+                        // on the scenario. The closure body repeats
+                        // [`Self::t_final`]'s tiered arm verbatim (same
+                        // expressions, same inputs), so the argmin is
+                        // bit-identical to minimising `b.t_final` per-t.
+                        let flat = s.scalar_effective();
+                        let ev = ExactEvaluator::new(s, *m);
+                        numeric_opt(s, |t| {
+                            if t <= s.a() {
+                                return f64::INFINITY;
+                            }
+                            let fo_tiered = time::t_final(s, t);
+                            let fo_flat = time::t_final(&flat, t);
+                            if !fo_tiered.is_finite() || !fo_flat.is_finite() {
+                                f64::INFINITY
+                            } else {
+                                ev.breakdown(t).makespan + (fo_tiered - fo_flat)
+                            }
+                        })
                     }))
                 } else {
                     Ok(cached_opt(OPT_TIME_TAG, *m, s, || t_time_opt_exact(s, *m)))
@@ -231,9 +250,23 @@ impl Backend {
             Backend::Exact(m) => {
                 s.clamp_period(s.min_period())?;
                 if s.hierarchy().is_some() {
-                    let b = *self;
                     Ok(cached_opt(OPT_ENERGY_TAG, *m, s, || {
-                        numeric_opt(s, |t| b.e_final(s, t))
+                        // Same hoist as `t_time_opt`: the closure body is
+                        // [`Self::e_final`]'s tiered arm verbatim.
+                        let flat = s.scalar_effective();
+                        let ev = ExactEvaluator::new(s, *m);
+                        numeric_opt(s, |t| {
+                            if t <= s.a() {
+                                return f64::INFINITY;
+                            }
+                            let fo_tiered = energy::e_final(s, t);
+                            let fo_flat = energy::e_final(&flat, t);
+                            if !fo_tiered.is_finite() || !fo_flat.is_finite() {
+                                f64::INFINITY
+                            } else {
+                                ev.breakdown(t).energy + (fo_tiered - fo_flat)
+                            }
+                        })
                     }))
                 } else {
                     Ok(cached_opt(OPT_ENERGY_TAG, *m, s, || t_energy_opt_exact(s, *m)))
@@ -294,6 +327,11 @@ fn cached_opt(tag: u64, model: RecoveryModel, s: &Scenario, compute: impl FnOnce
 /// per distinct scenario view).
 pub fn opt_memo_stats() -> (crate::util::memo::MemoStats, usize) {
     (OPT_MEMO.stats(), OPT_MEMO.len())
+}
+
+/// Live entries per backing shard (`ckpt_cache_shard_entries`).
+pub fn opt_memo_shard_entries() -> Vec<usize> {
+    OPT_MEMO.shard_entries()
 }
 
 #[cfg(test)]

@@ -79,58 +79,104 @@ pub fn expected_recovery(s: &Scenario, model: RecoveryModel) -> f64 {
     }
 }
 
-/// Exact expectation at period `t` (must satisfy `t > (1−ω)C`; unlike
-/// the first-order forms there is **no upper domain limit** — the exact
-/// model stays finite for every `t`).
-pub fn exact_breakdown(s: &Scenario, t: f64, model: RecoveryModel) -> ExactBreakdown {
-    assert!(t > s.a(), "period {t} does not exceed lost work {}", s.a());
-    let lam = 1.0 / s.mu;
-    let c = s.ckpt.c;
-    let e_rec = expected_recovery(s, model);
+/// Per-scenario invariants of the exact renewal model, hoisted out of
+/// the per-period loop. The numeric optimiser evaluates the breakdown
+/// at ~400 grid points plus the golden-section refinement per solve;
+/// `λ`, `E_rec`, `e^{λC}` and the whole (t-independent) checkpoint wall
+/// per span only depend on the scenario, so they are computed once
+/// here. Every hoisted value is the *verbatim* subexpression the
+/// one-shot path computed (same operations on the same inputs), so
+/// [`ExactEvaluator::breakdown`] is bit-identical to the historical
+/// per-call [`exact_breakdown`] — which now just delegates.
+#[derive(Debug, Clone, Copy)]
+pub struct ExactEvaluator {
+    s: Scenario,
+    lam: f64,
+    c: f64,
+    /// `ωC` — the overlap term's numerator in the banked-work formula.
+    omega_c: f64,
+    e_rec: f64,
+    /// `e^{λC}`.
+    exp_lam_c: f64,
+    /// `(e^{λC} − 1)/λ` — checkpoint wall per span, t-independent.
+    ckpt_per_span: f64,
+    /// `D + R`, for the episode down/recovery split.
+    dr: f64,
+}
 
-    // Work banked per span: the successful attempt checkpoints
-    // (T−C) + overlap, where overlap = ωC only if the span saw no
-    // failure (a rollback resets the overlap — the ωC done during the
-    // previous checkpoint is lost, exactly the paper's per-failure ωC
-    // term). P(no failure in span) = e^{−λT}.
-    let growth = (lam * t).exp();
-    let work_per_span = (t - c) + s.ckpt.omega * c / growth;
-    let spans = s.t_base / work_per_span;
-    let fails_per_span = growth - 1.0;
-
-    let compute_per_span = ((lam * t).exp() - (lam * c).exp()) / lam;
-    let ckpt_per_span = ((lam * c).exp() - 1.0) / lam;
-
-    let failures = spans * fails_per_span;
-    let compute_wall = spans * compute_per_span;
-    let checkpoint_wall = spans * ckpt_per_span;
-    // Down/recovery split: the D and R parts scale proportionally inside
-    // each episode (for Restarting this is the expected share — failures
-    // land uniformly-exponentially across the episode).
-    let dr = s.ckpt.d + s.ckpt.r;
-    let episode_wall = failures * e_rec;
-    let (down_wall, recovery_wall) = if dr > 0.0 {
-        (episode_wall * s.ckpt.d / dr, episode_wall * s.ckpt.r / dr)
-    } else {
-        (0.0, 0.0)
-    };
-
-    let makespan = compute_wall + checkpoint_wall + episode_wall;
-    let p = &s.power;
-    let energy = p.p_static * makespan
-        + p.p_cal * (compute_wall + s.ckpt.omega * checkpoint_wall)
-        + p.p_io * (checkpoint_wall + recovery_wall)
-        + p.p_down * down_wall;
-
-    ExactBreakdown {
-        makespan,
-        energy,
-        failures,
-        compute_wall,
-        checkpoint_wall,
-        recovery_wall,
-        down_wall,
+impl ExactEvaluator {
+    pub fn new(s: &Scenario, model: RecoveryModel) -> ExactEvaluator {
+        let lam = 1.0 / s.mu;
+        let c = s.ckpt.c;
+        let exp_lam_c = (lam * c).exp();
+        ExactEvaluator {
+            s: *s,
+            lam,
+            c,
+            omega_c: s.ckpt.omega * c,
+            e_rec: expected_recovery(s, model),
+            exp_lam_c,
+            ckpt_per_span: (exp_lam_c - 1.0) / lam,
+            dr: s.ckpt.d + s.ckpt.r,
+        }
     }
+
+    /// Exact expectation at period `t` (must satisfy `t > (1−ω)C`;
+    /// unlike the first-order forms there is **no upper domain limit**
+    /// — the exact model stays finite for every `t`).
+    pub fn breakdown(&self, t: f64) -> ExactBreakdown {
+        let s = &self.s;
+        assert!(t > s.a(), "period {t} does not exceed lost work {}", s.a());
+
+        // Work banked per span: the successful attempt checkpoints
+        // (T−C) + overlap, where overlap = ωC only if the span saw no
+        // failure (a rollback resets the overlap — the ωC done during
+        // the previous checkpoint is lost, exactly the paper's
+        // per-failure ωC term). P(no failure in span) = e^{−λT}.
+        let growth = (self.lam * t).exp();
+        let work_per_span = (t - self.c) + self.omega_c / growth;
+        let spans = s.t_base / work_per_span;
+        let fails_per_span = growth - 1.0;
+
+        let compute_per_span = (growth - self.exp_lam_c) / self.lam;
+
+        let failures = spans * fails_per_span;
+        let compute_wall = spans * compute_per_span;
+        let checkpoint_wall = spans * self.ckpt_per_span;
+        // Down/recovery split: the D and R parts scale proportionally
+        // inside each episode (for Restarting this is the expected share
+        // — failures land uniformly-exponentially across the episode).
+        let episode_wall = failures * self.e_rec;
+        let (down_wall, recovery_wall) = if self.dr > 0.0 {
+            (episode_wall * s.ckpt.d / self.dr, episode_wall * s.ckpt.r / self.dr)
+        } else {
+            (0.0, 0.0)
+        };
+
+        let makespan = compute_wall + checkpoint_wall + episode_wall;
+        let p = &s.power;
+        let energy = p.p_static * makespan
+            + p.p_cal * (compute_wall + s.ckpt.omega * checkpoint_wall)
+            + p.p_io * (checkpoint_wall + recovery_wall)
+            + p.p_down * down_wall;
+
+        ExactBreakdown {
+            makespan,
+            energy,
+            failures,
+            compute_wall,
+            checkpoint_wall,
+            recovery_wall,
+            down_wall,
+        }
+    }
+}
+
+/// One-shot exact expectation at period `t` — builds the per-scenario
+/// [`ExactEvaluator`] and evaluates once. Loops over `t` should build
+/// the evaluator themselves.
+pub fn exact_breakdown(s: &Scenario, t: f64, model: RecoveryModel) -> ExactBreakdown {
+    ExactEvaluator::new(s, model).breakdown(t)
 }
 
 /// Exact expected makespan.
@@ -144,14 +190,17 @@ pub fn e_final_exact(s: &Scenario, t: f64, model: RecoveryModel) -> f64 {
 }
 
 /// Exact time-optimal period (numeric: the exact objective has no
-/// algebraic closed form).
+/// algebraic closed form). The scenario invariants are hoisted out of
+/// the ~400-point optimiser loop via [`ExactEvaluator`].
 pub fn t_time_opt_exact(s: &Scenario, model: RecoveryModel) -> f64 {
-    optimise(s, |t| t_final_exact(s, t, model))
+    let ev = ExactEvaluator::new(s, model);
+    optimise(s, |t| ev.breakdown(t).makespan)
 }
 
 /// Exact energy-optimal period.
 pub fn t_energy_opt_exact(s: &Scenario, model: RecoveryModel) -> f64 {
-    optimise(s, |t| e_final_exact(s, t, model))
+    let ev = ExactEvaluator::new(s, model);
+    optimise(s, |t| ev.breakdown(t).energy)
 }
 
 fn optimise(s: &Scenario, f: impl FnMut(f64) -> f64) -> f64 {
@@ -273,6 +322,25 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn hoisted_evaluator_matches_the_one_shot_path_bit_for_bit() {
+        for (mu, omega) in [(120.0, 0.5), (60.0, 0.0), (3000.0, 1.0)] {
+            let s = scenario(mu, omega);
+            for model in [RecoveryModel::Ideal, RecoveryModel::Restarting] {
+                let ev = ExactEvaluator::new(&s, model);
+                for t in [12.0, 50.0, 200.0, 1000.0] {
+                    // A reused evaluator and a fresh one-shot build must
+                    // agree exactly at every period.
+                    let a = ev.breakdown(t);
+                    let b = exact_breakdown(&s, t, model);
+                    assert_eq!(a, b, "mu={mu} omega={omega} t={t}");
+                    assert_eq!(a.makespan.to_bits(), t_final_exact(&s, t, model).to_bits());
+                    assert_eq!(a.energy.to_bits(), e_final_exact(&s, t, model).to_bits());
+                }
+            }
+        }
     }
 
     #[test]

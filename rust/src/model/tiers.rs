@@ -50,6 +50,15 @@
 //! power dominates — that asymmetry is the tiered analogue of the
 //! paper's `T_Energy_opt ≥ T_Time_opt` headline.
 //!
+//! The envelope scans are **bound-pruned**, not exhaustive: the time
+//! objective ignores every cadence but `κ₁` (one evaluation per
+//! subtree), and the energy scan collapses each innermost cadence run
+//! to a drain-cost lower bound at its far end, skipping runs that
+//! cannot beat the running best — bit-identical to the exhaustive scan
+//! by construction (see [`min_energy_cadence`]), with the
+//! evaluated/skipped split exported on the
+//! `ckpt_tier_envelope_*_total` counters.
+//!
 //! # The optimal period vector
 //!
 //! [`time_plan`]/[`energy_plan`] minimise the envelopes numerically
@@ -64,6 +73,7 @@
 //! the degenerate case is the scalar code path itself, bit for bit.
 
 use crate::storage::{TierHierarchy, MAX_TIERS};
+use crate::telemetry::registry::metrics;
 use crate::util::memo::{MemoStats, PureMemo};
 
 use super::energy::re_exec_per_failure;
@@ -96,6 +106,11 @@ static TIER_PLAN_MEMO: PureMemo<Vec<u64>, TierPlan> = PureMemo::new(16_384);
 /// telemetry registry's "tier plan memo" cache row).
 pub fn tier_plan_memo_stats() -> (MemoStats, usize) {
     (TIER_PLAN_MEMO.stats(), TIER_PLAN_MEMO.len())
+}
+
+/// Live entries per backing shard (`ckpt_cache_shard_entries`).
+pub fn tier_plan_memo_shard_entries() -> Vec<usize> {
+    TIER_PLAN_MEMO.shard_entries()
 }
 
 fn plan_key(tag: u64, s: &Scenario) -> Vec<u64> {
@@ -191,28 +206,295 @@ pub fn e_final_at(s: &Scenario, h: &TierHierarchy, t: f64, kappa: &[u32; MAX_TIE
         + tf * s.power.p_static
 }
 
-/// κ-minimised expected-time envelope (the tiered `T_final`).
-pub fn t_final_tiered(s: &Scenario, h: &TierHierarchy, t: f64) -> f64 {
-    let mut best = f64::INFINITY;
+/// Evaluation/skip counts from one envelope scan. `evaluated +
+/// skipped` equals the size of the full divisibility-constrained
+/// feasible cadence set, so `skipped / (evaluated + skipped)` is the
+/// pruning rate. Summed process-wide into the
+/// `ckpt_tier_envelope_{evaluated,skipped}_total` counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScanStats {
+    /// Cadence vectors whose objective was actually computed.
+    pub evaluated: u64,
+    /// Cadence vectors pruned before evaluation — by the drain-cost
+    /// lower bound (energy) or by collapsing a `κ₁` subtree of equal
+    /// values to its representative (time).
+    pub skipped: u64,
+}
+
+impl ScanStats {
+    fn publish(self) -> Self {
+        metrics::TIER_ENVELOPE_EVALUATED_TOTAL.add(self.evaluated);
+        metrics::TIER_ENVELOPE_SKIPPED_TOTAL.add(self.skipped);
+        self
+    }
+}
+
+/// Number of feasible cadence vectors in the `κ₁` subtree — what an
+/// exhaustive scan would have evaluated there.
+fn subtree_len(h: &TierHierarchy, t: f64, k1: u32) -> u64 {
+    let n = h.len();
+    let feasible = |i: usize, k: u32| h.tier(i).c <= k as f64 * t;
+    if n == 2 {
+        return 1;
+    }
+    let mut count = 0u64;
+    let mut k2 = k1;
+    while k2 <= KAPPA_MAX {
+        if feasible(2, k2) {
+            if n == 3 {
+                count += 1;
+            } else {
+                let mut k3 = k2;
+                while k3 <= KAPPA_MAX {
+                    if feasible(3, k3) {
+                        count += 1;
+                    }
+                    k3 += k2;
+                }
+            }
+        }
+        k2 += k1;
+    }
+    count
+}
+
+/// First feasible cadence vector of the `κ₁` subtree in enumeration
+/// order, if any — the vector an exhaustive first-found scan records
+/// for a subtree whose objective values are all equal.
+fn first_completion(h: &TierHierarchy, t: f64, k1: u32) -> Option<[u32; MAX_TIERS]> {
+    let n = h.len();
+    let feasible = |i: usize, k: u32| h.tier(i).c <= k as f64 * t;
+    let mut kappa = [1u32; MAX_TIERS];
+    kappa[1] = k1;
+    if n == 2 {
+        return Some(kappa);
+    }
+    let mut k2 = k1;
+    while k2 <= KAPPA_MAX {
+        if feasible(2, k2) {
+            kappa[2] = k2;
+            if n == 3 {
+                return Some(kappa);
+            }
+            let mut k3 = k2;
+            while k3 <= KAPPA_MAX {
+                if feasible(3, k3) {
+                    kappa[3] = k3;
+                    return Some(kappa);
+                }
+                k3 += k2;
+            }
+        }
+        k2 += k1;
+    }
+    None
+}
+
+/// Time envelope scan: [`t_final_at`] ignores every cadence but `κ₁`,
+/// so each subtree collapses to one evaluation at its first feasible
+/// completion — the exact vector the exhaustive first-found scan would
+/// record, since all of a subtree's values share `κ₁` bit for bit and
+/// the strict `<` update keeps the first occurrence. Returns
+/// `(min, argmin, stats)`; the argmin is `[0; MAX_TIERS]` when every
+/// feasible vector is out of domain (`+inf`), matching the exhaustive
+/// scan's never-updated state.
+pub fn min_time_cadence(
+    s: &Scenario,
+    h: &TierHierarchy,
+    t: f64,
+) -> (f64, [u32; MAX_TIERS], ScanStats) {
+    let feasible = |i: usize, k: u32| h.tier(i).c <= k as f64 * t;
+    let mut best_v = f64::INFINITY;
+    let mut best_k = [0u32; MAX_TIERS];
+    let mut stats = ScanStats::default();
+    for k1 in 1..=KAPPA_MAX {
+        if !feasible(1, k1) {
+            continue;
+        }
+        let Some(first) = first_completion(h, t, k1) else {
+            continue;
+        };
+        let v = t_final_at(s, h, t, &first);
+        stats.evaluated += 1;
+        stats.skipped += subtree_len(h, t, k1) - 1;
+        if v < best_v {
+            best_v = v;
+            best_k = first;
+        }
+    }
+    (best_v, best_k, stats.publish())
+}
+
+/// Shared state of one bound-pruned energy scan (see
+/// [`min_energy_cadence`]).
+struct EnergyScan<'a> {
+    s: &'a Scenario,
+    h: &'a TierHierarchy,
+    t: f64,
+    best_v: f64,
+    best_k: [u32; MAX_TIERS],
+    stats: ScanStats,
+}
+
+impl EnergyScan<'_> {
+    fn feasible(&self, i: usize, k: u32) -> bool {
+        self.h.tier(i).c <= k as f64 * self.t
+    }
+
+    /// Scan one innermost run — the multiples of `step` written into
+    /// `kappa[slot]` — without walking it. Feasibility (`C ≤ κ·t`) is
+    /// monotone in κ, so the feasible multiples form a suffix
+    /// `m_lo..=m_hi`; the objective varies along the run only through
+    /// that tier's drain term `P_IO·C·N/κ`, monotone decreasing in κ
+    /// (and round-to-nearest `+`/`/` are monotone, so the *computed*
+    /// values are non-increasing bit-wise). One evaluation at the
+    /// run's end therefore yields the run minimum — a drain-cost lower
+    /// bound for the whole run. Runs that cannot beat the running best
+    /// are skipped wholesale; a winning run's argmin — the first
+    /// vector attaining the minimum, exactly what the exhaustive
+    /// scan's strict `<` update records — is recovered by bisection.
+    fn run(&mut self, kappa: &mut [u32; MAX_TIERS], slot: usize, step: u32) {
+        let m_hi = KAPPA_MAX / step;
+        let mut m_lo = 1u32;
+        while m_lo <= m_hi && !self.feasible(slot, m_lo * step) {
+            m_lo += 1;
+        }
+        if m_lo > m_hi {
+            return;
+        }
+        let len = (m_hi - m_lo + 1) as u64;
+        kappa[slot] = m_hi * step;
+        let v_end = e_final_at(self.s, self.h, self.t, kappa);
+        self.stats.evaluated += 1;
+        if v_end >= self.best_v {
+            // Nothing here can beat the best: the run is non-increasing
+            // toward `v_end ≥ best`, and the strict `<` update would
+            // have ignored every vector in it.
+            self.stats.skipped += len - 1;
+        } else {
+            // Bisect for the first multiple attaining `v_end` —
+            // attainment (bit-equality with the run minimum) is a
+            // monotone predicate along a non-increasing run.
+            let (mut lo, mut hi) = (m_lo, m_hi);
+            let mut evals = 0u64;
+            while lo < hi {
+                let mid = lo + (hi - lo) / 2;
+                kappa[slot] = mid * step;
+                evals += 1;
+                if e_final_at(self.s, self.h, self.t, kappa).to_bits() == v_end.to_bits() {
+                    hi = mid;
+                } else {
+                    lo = mid + 1;
+                }
+            }
+            self.stats.evaluated += evals;
+            self.stats.skipped += len - 1 - evals;
+            self.best_v = v_end;
+            kappa[slot] = lo * step;
+            self.best_k = *kappa;
+        }
+        kappa[slot] = 1;
+    }
+}
+
+/// Bound-pruned energy envelope scan: the minimum of [`e_final_at`]
+/// over the feasible cadence set, its argmin, and the scan counts —
+/// bit-identical (value *and* argmin) to the exhaustive first-found
+/// scan ([`e_final_tiered_reference`]); see [`EnergyScan::run`] for
+/// why the pruning cannot perturb either.
+pub fn min_energy_cadence(
+    s: &Scenario,
+    h: &TierHierarchy,
+    t: f64,
+) -> (f64, [u32; MAX_TIERS], ScanStats) {
+    let n = h.len();
+    let mut scan = EnergyScan {
+        s,
+        h,
+        t,
+        best_v: f64::INFINITY,
+        best_k: [0u32; MAX_TIERS],
+        stats: ScanStats::default(),
+    };
+    let mut kappa = [1u32; MAX_TIERS];
+    for k1 in 1..=KAPPA_MAX {
+        if !scan.feasible(1, k1) {
+            continue;
+        }
+        kappa[1] = k1;
+        if n == 2 {
+            // One vector per `κ₁`: evaluate it directly.
+            let v = e_final_at(s, h, t, &kappa);
+            scan.stats.evaluated += 1;
+            if v < scan.best_v {
+                scan.best_v = v;
+                scan.best_k = kappa;
+            }
+        } else if n == 3 {
+            scan.run(&mut kappa, 2, k1);
+        } else {
+            let mut k2 = k1;
+            while k2 <= KAPPA_MAX {
+                if scan.feasible(2, k2) {
+                    kappa[2] = k2;
+                    scan.run(&mut kappa, 3, k2);
+                }
+                k2 += k1;
+            }
+            kappa[2] = 1;
+        }
+    }
+    (scan.best_v, scan.best_k, scan.stats.publish())
+}
+
+/// Exhaustive time envelope scan — the pre-pruning reference the tests
+/// hold [`min_time_cadence`] against, bit for bit. Not public API.
+#[doc(hidden)]
+pub fn t_final_tiered_reference(
+    s: &Scenario,
+    h: &TierHierarchy,
+    t: f64,
+) -> (f64, [u32; MAX_TIERS]) {
+    let mut best_v = f64::INFINITY;
+    let mut best_k = [0u32; MAX_TIERS];
     for_each_cadence(h, t, |kappa| {
         let v = t_final_at(s, h, t, kappa);
-        if v < best {
-            best = v;
+        if v < best_v {
+            best_v = v;
+            best_k = *kappa;
         }
     });
-    best
+    (best_v, best_k)
+}
+
+/// Exhaustive energy envelope scan — reference for
+/// [`min_energy_cadence`]. Not public API.
+#[doc(hidden)]
+pub fn e_final_tiered_reference(
+    s: &Scenario,
+    h: &TierHierarchy,
+    t: f64,
+) -> (f64, [u32; MAX_TIERS]) {
+    let mut best_v = f64::INFINITY;
+    let mut best_k = [0u32; MAX_TIERS];
+    for_each_cadence(h, t, |kappa| {
+        let v = e_final_at(s, h, t, kappa);
+        if v < best_v {
+            best_v = v;
+            best_k = *kappa;
+        }
+    });
+    (best_v, best_k)
+}
+
+/// κ-minimised expected-time envelope (the tiered `T_final`).
+pub fn t_final_tiered(s: &Scenario, h: &TierHierarchy, t: f64) -> f64 {
+    min_time_cadence(s, h, t).0
 }
 
 /// κ-minimised expected-energy envelope (the tiered `E_final`).
 pub fn e_final_tiered(s: &Scenario, h: &TierHierarchy, t: f64) -> f64 {
-    let mut best = f64::INFINITY;
-    for_each_cadence(h, t, |kappa| {
-        let v = e_final_at(s, h, t, kappa);
-        if v < best {
-            best = v;
-        }
-    });
-    best
+    min_energy_cadence(s, h, t).0
 }
 
 /// The energy-minimising cadence vector at a fixed period — what the
@@ -221,15 +503,7 @@ pub fn e_final_tiered(s: &Scenario, h: &TierHierarchy, t: f64) -> f64 {
 /// feasible cadence when the period is outside the analytic domain (a
 /// simulation can still run there).
 pub fn cadence_for(s: &Scenario, h: &TierHierarchy, t: f64) -> [u32; MAX_TIERS] {
-    let mut best = [0u32; MAX_TIERS];
-    let mut best_v = f64::INFINITY;
-    for_each_cadence(h, t, |kappa| {
-        let v = e_final_at(s, h, t, kappa);
-        if v < best_v {
-            best_v = v;
-            best = *kappa;
-        }
-    });
+    let (_, mut best, _) = min_energy_cadence(s, h, t);
     if best[0] == 0 {
         // Outside the analytic domain: first feasible cadence, or the
         // slowest one if even KAPPA_MAX cannot keep up.
@@ -272,15 +546,7 @@ fn solve_plan(s: &Scenario, h: &TierHierarchy, obj: Objective) -> TierPlan {
         Objective::Energy => cadence_for(s, h, period),
         Objective::Time => {
             // Time is minimised at the smallest feasible cadence.
-            let mut best = [0u32; MAX_TIERS];
-            let mut best_v = f64::INFINITY;
-            for_each_cadence(h, period, |kappa| {
-                let v = t_final_at(s, h, period, kappa);
-                if v < best_v {
-                    best_v = v;
-                    best = *kappa;
-                }
-            });
+            let (_, best, _) = min_time_cadence(s, h, period);
             if best[0] == 0 {
                 cadence_for(s, h, period)
             } else {
@@ -495,5 +761,79 @@ mod tests {
         // Below a = (1-ω)C_0 the envelope is infinite.
         assert!(t_final_tiered(&s, &h, s.a() * 0.5).is_infinite());
         assert!(e_final_tiered(&s, &h, s.a() * 0.5).is_infinite());
+    }
+
+    fn three_tier_scenario() -> Scenario {
+        // SSD + burst buffer + PFS — the shape of the tiers-3 preset.
+        let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, 0.5).unwrap();
+        let power = PowerParams::new(1.0, 1.0, 10.0, 0.0).unwrap();
+        Scenario::with_tier_specs(
+            ckpt,
+            power,
+            300.0,
+            10_000.0,
+            &[
+                TierSpec::new(1.0, 1.0, 3.0),
+                TierSpec::new(2.0, 3.0, 6.0),
+                TierSpec::new(10.0, 10.0, 10.0),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn pruned_scans_match_the_exhaustive_reference_bit_for_bit() {
+        for s in [tiered_scenario(), three_tier_scenario()] {
+            let h = *s.hierarchy().unwrap();
+            for t in [s.a() * 0.5, 20.0, 40.0, 60.0, 90.0, 150.0] {
+                let (tv, tk, _) = min_time_cadence(&s, &h, t);
+                let (rtv, rtk) = t_final_tiered_reference(&s, &h, t);
+                assert_eq!(tv.to_bits(), rtv.to_bits(), "time min at t={t}");
+                assert_eq!(tk, rtk, "time argmin at t={t}");
+                let (ev, ek, _) = min_energy_cadence(&s, &h, t);
+                let (rev, rek) = e_final_tiered_reference(&s, &h, t);
+                assert_eq!(ev.to_bits(), rev.to_bits(), "energy min at t={t}");
+                assert_eq!(ek, rek, "energy argmin at t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn scan_counts_partition_the_full_envelope() {
+        // evaluated + skipped must equal the exhaustive scan's
+        // evaluation count, for both objectives.
+        let s = three_tier_scenario();
+        let h = *s.hierarchy().unwrap();
+        let t = 60.0;
+        let mut full = 0u64;
+        for_each_cadence(&h, t, |_| full += 1);
+        let (_, _, ts) = min_time_cadence(&s, &h, t);
+        let (_, _, es) = min_energy_cadence(&s, &h, t);
+        assert_eq!(ts.evaluated + ts.skipped, full);
+        assert_eq!(es.evaluated + es.skipped, full);
+    }
+
+    #[test]
+    fn pruning_skips_more_than_half_the_envelope_on_three_tiers() {
+        let s = three_tier_scenario();
+        let h = *s.hierarchy().unwrap();
+        let mut total = ScanStats::default();
+        for t in [30.0, 45.0, 60.0, 90.0] {
+            let (_, _, ts) = min_time_cadence(&s, &h, t);
+            let (_, _, es) = min_energy_cadence(&s, &h, t);
+            total.evaluated += ts.evaluated + es.evaluated;
+            total.skipped += ts.skipped + es.skipped;
+        }
+        assert!(
+            total.skipped > total.evaluated,
+            "pruning too weak: {total:?}"
+        );
+        // And the pruning never perturbs the solved plans: the plans
+        // still minimise the *reference* envelopes (checked bit-wise
+        // against the pruned scan in the test above).
+        let tp = time_plan(&s, &h).unwrap();
+        let ep = energy_plan(&s, &h).unwrap();
+        assert_eq!(tp.kappa[0], 1);
+        assert_eq!(ep.kappa[0], 1);
     }
 }

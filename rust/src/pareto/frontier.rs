@@ -19,6 +19,7 @@
 
 use crate::model::backend::Backend;
 use crate::model::params::{ModelError, Scenario};
+use crate::util::pool::ThreadPool;
 
 use super::knee::{knee, Knee, KneeMethod};
 
@@ -65,7 +66,24 @@ impl Frontier {
     /// exact). Errors when the scenario has no feasible period at all
     /// (the same gate under every backend; see
     /// [`Backend::t_time_opt`]).
+    ///
+    /// Sampling fans out on the process-wide [`ThreadPool`]: each point
+    /// is a pure function of `(scenario, i, n, backend)` and
+    /// [`ThreadPool::map`] scatters results by index, so the sampled
+    /// vector is bit-identical at any thread count (nested calls from
+    /// inside pool workers degrade to inline evaluation).
     pub fn compute(s: &Scenario, n: usize, backend: Backend) -> Result<Frontier, ModelError> {
+        Self::compute_on(ThreadPool::global(), s, n, backend)
+    }
+
+    /// [`Self::compute`] on a caller-supplied pool (benches pin thread
+    /// counts with this; the global-pool path is the serving default).
+    pub fn compute_on(
+        pool: &ThreadPool,
+        s: &Scenario,
+        n: usize,
+        backend: Backend,
+    ) -> Result<Frontier, ModelError> {
         assert!(n >= 2, "need at least the two endpoint samples, got {n}");
         let _span =
             crate::telemetry::Span::start(&crate::telemetry::registry::metrics::FRONTIER_SOLVE_NS);
@@ -73,23 +91,42 @@ impl Frontier {
         let te = backend.t_energy_opt(s)?;
         let (lo, hi) = if tt <= te { (tt, te) } else { (te, tt) };
 
-        let mut sampled = Vec::with_capacity(n);
-        if hi - lo <= 0.0 {
+        let sampled = if hi - lo <= 0.0 {
             // Degenerate trade-off: both optima clamp to the same period
             // (e.g. the Fig. 3 breakdown tail). One point, zero spread.
+            vec![point_at(s, lo, backend)]
+        } else {
+            pool.map(n, |i| point_at(s, sample_period(lo, hi, i, n), backend))
+        };
+        Ok(Frontier {
+            scenario: *s,
+            backend,
+            t_time_opt: tt,
+            t_energy_opt: te,
+            points: filter_dominated(sampled),
+        })
+    }
+
+    /// Serial reference implementation of [`Self::compute`] — the
+    /// pre-parallel sampling loop, kept as the bit-identity oracle for
+    /// the zero-perturbation suite. Not part of the public API.
+    #[doc(hidden)]
+    pub fn compute_reference(
+        s: &Scenario,
+        n: usize,
+        backend: Backend,
+    ) -> Result<Frontier, ModelError> {
+        assert!(n >= 2, "need at least the two endpoint samples, got {n}");
+        let tt = backend.t_time_opt(s)?;
+        let te = backend.t_energy_opt(s)?;
+        let (lo, hi) = if tt <= te { (tt, te) } else { (te, tt) };
+
+        let mut sampled = Vec::with_capacity(n);
+        if hi - lo <= 0.0 {
             sampled.push(point_at(s, lo, backend));
         } else {
             for i in 0..n {
-                // Pin the endpoints to the optima exactly; interior
-                // points are uniform in the period.
-                let period = if i == 0 {
-                    lo
-                } else if i == n - 1 {
-                    hi
-                } else {
-                    lo + (hi - lo) * i as f64 / (n - 1) as f64
-                };
-                sampled.push(point_at(s, period, backend));
+                sampled.push(point_at(s, sample_period(lo, hi, i, n), backend));
             }
         }
         Ok(Frontier {
@@ -175,6 +212,19 @@ impl Frontier {
     /// Consume the frontier, keeping only the point list.
     pub fn into_points(self) -> Vec<FrontierPoint> {
         self.points
+    }
+}
+
+/// The `i`-th of `n` sample periods on `[lo, hi]`: endpoints pinned to
+/// the optima exactly, interior points uniform in the period. One
+/// shared formula so the pooled and serial sampling paths cannot drift.
+fn sample_period(lo: f64, hi: f64, i: usize, n: usize) -> f64 {
+    if i == 0 {
+        lo
+    } else if i == n - 1 {
+        hi
+    } else {
+        lo + (hi - lo) * i as f64 / (n - 1) as f64
     }
 }
 
@@ -435,6 +485,20 @@ mod tests {
                 Err(ModelError::OutOfDomain(_)) => {}
                 other => panic!("{}: expected OutOfDomain, got {other:?}", backend.name()),
             }
+        }
+    }
+
+    #[test]
+    fn pooled_sampling_matches_the_serial_reference_bit_for_bit() {
+        let s = fig1_scenario(120.0, 5.5);
+        for backend in [Backend::FirstOrder, Backend::Exact(RecoveryModel::Ideal)] {
+            let reference = Frontier::compute_reference(&s, 65, backend).unwrap();
+            for workers in [0, 3, 7] {
+                let pool = ThreadPool::new(workers);
+                let pooled = Frontier::compute_on(&pool, &s, 65, backend).unwrap();
+                assert_eq!(pooled, reference, "{} workers under {}", workers, backend.name());
+            }
+            assert_eq!(Frontier::compute(&s, 65, backend).unwrap(), reference);
         }
     }
 

@@ -175,6 +175,11 @@ pub fn memo_stats() -> (crate::util::memo::MemoStats, usize) {
     (MEMO.stats(), MEMO.len())
 }
 
+/// Live entries per backing shard (`ckpt_cache_shard_entries`).
+pub fn memo_shard_entries() -> Vec<usize> {
+    MEMO.shard_entries()
+}
+
 fn validate_budget(pct: f64) -> Result<(), ModelError> {
     if !(pct.is_finite() && pct >= 0.0) {
         return Err(ModelError::Invalid(format!(

@@ -27,6 +27,17 @@
 //! snapshots around each queries/sec leg, so each window holds exactly
 //! that leg's batches), the pool thread count each measurement
 //! actually used, and a full registry snapshot under `"telemetry"`.
+//!
+//! Schema v3 adds the two solve-hot-path legs behind the sharded-cache
+//! and pruned-envelope work: **frontier points/sec at 1, 4 and 8
+//! threads** (dense exact-backend sampling over
+//! [`Frontier::compute_on`] on a per-leg local pool; cold = never-seen
+//! tiered scenario including the optima-memo misses, warm =
+//! memo-resident re-sample) and **tier-plan solves/sec** (cold
+//! bound-pruned envelope optimisation vs memoised repeats, with the
+//! `ckpt_tier_envelope_*` counter deltas of the cold pass recording
+//! the pruning rate). The gate compares cold legs as well as warm ones
+//! since v3.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicI32, Ordering};
@@ -37,12 +48,16 @@ use super::query::Query;
 use crate::config::presets::fig1_scenario;
 use crate::coordinator::PeriodPolicy;
 use crate::model::params::Scenario;
-use crate::model::Backend;
+use crate::model::{tiers, Backend, CheckpointParams, PowerParams, RecoveryModel};
 use crate::pareto::online::knee_period;
-use crate::pareto::KneeMethod;
+use crate::pareto::{Frontier, KneeMethod};
+use crate::storage::TierSpec;
 use crate::sweep::GridSpec;
 use crate::telemetry::histogram::HistogramSnapshot;
-use crate::telemetry::registry::metrics::{SERVE_DEDUP_NS, SERVE_SCATTER_NS, SERVE_SOLVE_NS};
+use crate::telemetry::registry::metrics::{
+    SERVE_DEDUP_NS, SERVE_SCATTER_NS, SERVE_SOLVE_NS, TIER_ENVELOPE_EVALUATED_TOTAL,
+    TIER_ENVELOPE_SKIPPED_TOTAL,
+};
 use crate::telemetry::render;
 use crate::util::bench::{black_box, Bench};
 use crate::util::json::Json;
@@ -141,6 +156,89 @@ fn queries_per_sec(threads: usize, batch: usize, reps: usize) -> (f64, f64, usiz
     (b / percentile(&cold_s, 0.5), b / percentile(&warm_s, 0.5), pool_threads)
 }
 
+/// `k` three-tier scenarios off the same μ walk as [`fresh_scenarios`]
+/// — exact-bits tier-plan/optima memo keys no prior phase has seen.
+/// The SSD + burst-buffer + PFS shape matches the tiers-3 preset, the
+/// configuration the envelope pruning is sized against.
+fn fresh_tiered(k: usize) -> Vec<Scenario> {
+    let start = FRESH.fetch_add(k as i32, Ordering::Relaxed);
+    let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, 0.5).expect("static params");
+    let power = PowerParams::new(1.0, 1.0, 10.0, 0.0).expect("static params");
+    (0..k as i32)
+        .map(|i| {
+            Scenario::with_tier_specs(
+                ckpt,
+                power,
+                300.0,
+                10_000.0 * MU_GROWTH.powi(start + i),
+                &[
+                    TierSpec::new(1.0, 1.0, 3.0),
+                    TierSpec::new(2.0, 3.0, 6.0),
+                    TierSpec::new(10.0, 10.0, 10.0),
+                ],
+            )
+            .expect("bench scenarios stay in domain")
+        })
+        .collect()
+}
+
+/// (cold, warm) frontier points/sec on a pool with `threads`
+/// participants: dense exact-backend sampling of a tiered scenario's
+/// trade-off through [`Frontier::compute_on`]. Cold solves a
+/// never-seen scenario (the optima-memo misses — two numeric
+/// optimisations — included); warm re-samples the same scenario with
+/// memo-resident optima, so it measures the pooled per-point sampling
+/// itself. Median over `reps` fresh scenarios.
+fn frontier_points_per_sec(threads: usize, points: usize, reps: usize) -> (f64, f64, usize) {
+    let pool = ThreadPool::new(threads - 1);
+    let pool_threads = pool.n_workers() + 1;
+    let backend = Backend::Exact(RecoveryModel::Ideal);
+    let mut cold_s = Vec::with_capacity(reps);
+    let mut warm_s = Vec::with_capacity(reps);
+    for s in fresh_tiered(reps) {
+        let t0 = Instant::now();
+        black_box(Frontier::compute_on(&pool, &s, points, backend).expect("in domain"));
+        cold_s.push(t0.elapsed().as_secs_f64());
+        let t1 = Instant::now();
+        black_box(Frontier::compute_on(&pool, &s, points, backend).expect("in domain"));
+        warm_s.push(t1.elapsed().as_secs_f64());
+    }
+    let p = points as f64;
+    (p / percentile(&cold_s, 0.5), p / percentile(&warm_s, 0.5), pool_threads)
+}
+
+/// Tier-plan solves/sec over `k` fresh three-tier scenarios (a time
+/// plan and an energy plan each): cold runs the bound-pruned envelope
+/// optimisation end to end, warm repeats the memo-resident plans. Also
+/// returns the `ckpt_tier_envelope_*` counter deltas over the cold
+/// pass — the recorded pruning rate.
+fn tier_plan_solves_per_sec(k: usize) -> (f64, f64, u64, u64) {
+    let scenarios = fresh_tiered(k);
+    let solve = |s: &Scenario| {
+        let h = *s.hierarchy().expect("tiered scenario");
+        black_box(tiers::time_plan(s, &h).expect("in domain"));
+        black_box(tiers::energy_plan(s, &h).expect("in domain"));
+    };
+    let evaluated0 = TIER_ENVELOPE_EVALUATED_TOTAL.get();
+    let skipped0 = TIER_ENVELOPE_SKIPPED_TOTAL.get();
+    let t0 = Instant::now();
+    for s in &scenarios {
+        solve(s);
+    }
+    let cold = t0.elapsed().as_secs_f64();
+    let evaluated = TIER_ENVELOPE_EVALUATED_TOTAL.get() - evaluated0;
+    let skipped = TIER_ENVELOPE_SKIPPED_TOTAL.get() - skipped0;
+    const PASSES: usize = 10;
+    let t1 = Instant::now();
+    for _ in 0..PASSES {
+        for s in &scenarios {
+            solve(s);
+        }
+    }
+    let warm = t1.elapsed().as_secs_f64();
+    ((2 * k) as f64 / cold, (2 * k * PASSES) as f64 / warm, evaluated, skipped)
+}
+
 /// The serve-stage percentile block for one queries/sec leg: the
 /// windowed histogram deltas (`after.since(before)`) for the engine's
 /// dedup/solve/scatter spans, so each leg reports exactly its own
@@ -186,6 +284,8 @@ pub fn run_bench() -> Json {
     let batch = if quick { 256 } else { 1024 };
     let reps = if quick { 3 } else { 5 };
     let cells = if quick { 2048usize } else { 8192 };
+    let frontier_points = if quick { 64usize } else { 256 };
+    let tier_scenarios = if quick { 32usize } else { 128 };
 
     println!("serve bench ({}): memo latency …", if quick { "quick" } else { "full" });
     let memo = memo_latency(memo_scenarios);
@@ -211,6 +311,29 @@ pub fn run_bench() -> Json {
         ));
     }
 
+    let mut frontier = Vec::new();
+    for threads in [1usize, 4, 8] {
+        let (cold, warm, pool_threads) =
+            frontier_points_per_sec(threads, frontier_points, reps);
+        println!("  frontier @{threads} thread(s): {cold:.0} cold pts/s, {warm:.0} warm pts/s");
+        frontier.push((
+            threads.to_string(),
+            Json::obj(vec![
+                ("cold", Json::Num(cold)),
+                ("warm", Json::Num(warm)),
+                ("pool_threads", Json::Num(pool_threads as f64)),
+            ]),
+        ));
+    }
+
+    let (tier_cold, tier_warm, envelope_evaluated, envelope_skipped) =
+        tier_plan_solves_per_sec(tier_scenarios);
+    println!(
+        "  tier plans: {tier_cold:.0} cold solves/s, {tier_warm:.0} warm solves/s \
+         ({envelope_skipped} of {} envelope vectors pruned)",
+        envelope_evaluated + envelope_skipped
+    );
+
     // Grid-engine cell throughput through the shared harness (prints
     // its own report line and lands in target/bench-results/serve.json).
     let s = fig1_scenario(300.0, 5.5);
@@ -224,7 +347,7 @@ pub fn run_bench() -> Json {
     bench.finish();
 
     Json::obj(vec![
-        ("schema", Json::Str("ckpt-period/bench/v2".into())),
+        ("schema", Json::Str("ckpt-period/bench/v3".into())),
         ("suite", Json::Str("serve".into())),
         ("quick", Json::Bool(quick)),
         ("git_describe", Json::Str(git_describe())),
@@ -237,6 +360,18 @@ pub fn run_bench() -> Json {
         ("cold_memo_p99_ns", Json::Num(memo.cold_p99_ns)),
         ("warm_memo_ns", Json::Num(memo.warm_ns)),
         ("queries_per_sec", Json::Obj(qps.into_iter().collect())),
+        ("frontier_points", Json::Num(frontier_points as f64)),
+        ("frontier_per_sec", Json::Obj(frontier.into_iter().collect())),
+        ("tier_plan_scenarios", Json::Num(tier_scenarios as f64)),
+        (
+            "tier_plan_per_sec",
+            Json::obj(vec![
+                ("cold", Json::Num(tier_cold)),
+                ("warm", Json::Num(tier_warm)),
+                ("envelope_evaluated", Json::Num(envelope_evaluated as f64)),
+                ("envelope_skipped", Json::Num(envelope_skipped as f64)),
+            ]),
+        ),
         ("cells", Json::Num(cells as f64)),
         ("cell_throughput_per_sec", Json::Num(cell_throughput)),
         // The whole-registry snapshot: counters, cache rows, histogram
@@ -269,27 +404,44 @@ fn trajectory_entries(dir: &Path) -> Vec<(u32, PathBuf)> {
     out
 }
 
-/// The warm-path metrics the gate compares, as
-/// `(label, previous, current, higher_is_better)` rows. Fields missing
-/// from either document are skipped (schema growth must not break the
-/// gate), and only thread counts present in both `queries_per_sec`
-/// blocks are compared.
+/// The gated metrics, as `(label, previous, current, higher_is_better)`
+/// rows. Fields missing from either document are skipped (schema
+/// growth must not break the gate), and only thread counts present in
+/// both per-thread blocks are compared. Warm legs measure the
+/// cache/memo machinery; cold legs (gated since v3) measure the
+/// solvers themselves — sharded lookups, pool scatter, envelope
+/// pruning — under the same tolerance.
 fn gate_metrics(prev: &Json, curr: &Json) -> Vec<(String, f64, f64, bool)> {
     let mut rows = Vec::new();
     let both = |key: &str| Some((prev.get(key)?.as_f64()?, curr.get(key)?.as_f64()?));
+    if let Some((p, c)) = both("cold_memo_ns") {
+        rows.push(("cold memo ns/solve".to_string(), p, c, false));
+    }
     if let Some((p, c)) = both("warm_memo_ns") {
         rows.push(("warm memo ns/solve".to_string(), p, c, false));
     }
     if let Some((p, c)) = both("cell_throughput_per_sec") {
         rows.push(("grid cells/sec".to_string(), p, c, true));
     }
-    if let (Some(Json::Obj(pq)), Some(Json::Obj(cq))) =
-        (prev.get("queries_per_sec"), curr.get("queries_per_sec"))
-    {
-        for (threads, pv) in pq {
-            let warm = |v: &Json| v.get("warm").and_then(Json::as_f64);
-            if let (Some(p), Some(c)) = (warm(pv), cq.get(threads).and_then(|v| warm(v))) {
-                rows.push((format!("warm q/s @{threads} thread(s)"), p, c, true));
+    // Per-thread-count legs: queries/sec and frontier points/sec, cold
+    // and warm sides both.
+    for (block, what) in [("queries_per_sec", "q/s"), ("frontier_per_sec", "frontier pts/s")] {
+        if let (Some(Json::Obj(pq)), Some(Json::Obj(cq))) = (prev.get(block), curr.get(block)) {
+            for (threads, pv) in pq {
+                for side in ["cold", "warm"] {
+                    let leg = |v: &Json| v.get(side).and_then(Json::as_f64);
+                    if let (Some(p), Some(c)) = (leg(pv), cq.get(threads).and_then(|v| leg(v))) {
+                        rows.push((format!("{side} {what} @{threads} thread(s)"), p, c, true));
+                    }
+                }
+            }
+        }
+    }
+    if let (Some(pt), Some(ct)) = (prev.get("tier_plan_per_sec"), curr.get("tier_plan_per_sec")) {
+        for side in ["cold", "warm"] {
+            let leg = |v: &Json| v.get(side).and_then(Json::as_f64);
+            if let (Some(p), Some(c)) = (leg(pt), leg(ct)) {
+                rows.push((format!("{side} tier plans/s"), p, c, true));
             }
         }
     }
@@ -301,11 +453,13 @@ fn gate_metrics(prev: &Json, curr: &Json) -> Vec<(String, f64, f64, bool)> {
 ///
 /// Benign situations return `Ok` with an explanation (fewer than two
 /// entries, a schema-version or quick-mode change making the documents
-/// incomparable); a warm-path metric regressing by more than
+/// incomparable); a gated metric regressing by more than
 /// [`GATE_TOLERANCE_PCT`] returns `Err` with the full report, failing
-/// the CI step. Warm paths only: cold numbers measure the solvers
-/// under allocator/turbo noise, warm numbers measure the cache/memo
-/// machinery this repo's perf story is built on.
+/// the CI step. Warm legs cover the cache/memo machinery this repo's
+/// perf story is built on; since v3 the cold legs are gated too — the
+/// sharded-cache and envelope-pruning work moved the solvers
+/// themselves, and the 15% tolerance still clears allocator/turbo
+/// noise on cold medians.
 pub fn gate_trajectory(dir: &Path) -> Result<Vec<String>, String> {
     let entries = trajectory_entries(dir);
     if entries.len() < 2 {
@@ -363,7 +517,7 @@ pub fn gate_trajectory(dir: &Path) -> Result<Vec<String>, String> {
     }
     if regressions > 0 {
         return Err(format!(
-            "{}\nbench gate FAILED: {regressions} warm-path metric(s) regressed more than \
+            "{}\nbench gate FAILED: {regressions} metric(s) regressed more than \
              {GATE_TOLERANCE_PCT}%",
             lines.join("\n")
         ));
@@ -458,7 +612,8 @@ mod tests {
         write_doc(&d, 7, "ckpt-period/bench/v2", 90.0, 5e6, 2e6);
         write_doc(&d, 9, "ckpt-period/bench/v2", 99.0, 4.6e6, 1.9e6);
         let lines = gate_trajectory(&d).unwrap();
-        assert!(lines[0].contains("BENCH_7.json") && lines[0].contains("BENCH_9.json"), "{lines:?}");
+        let pair = lines[0].contains("BENCH_7.json") && lines[0].contains("BENCH_9.json");
+        assert!(pair, "{lines:?}");
         assert!(lines.last().unwrap().contains("passed"), "{lines:?}");
     }
 
@@ -484,5 +639,50 @@ mod tests {
         write_doc(&d, 0, "ckpt-period/bench/v2", 120.0, 5e6, 2e6);
         write_doc(&d, 1, "ckpt-period/bench/v2", 60.0, 6e6, 3e6);
         assert!(gate_trajectory(&d).is_ok());
+    }
+
+    #[test]
+    fn gate_covers_the_v3_cold_and_solver_legs() {
+        let d = gate_dir("v3");
+        let doc = |frontier_warm: f64, tier_cold: f64, cold_memo: f64| {
+            Json::obj(vec![
+                ("schema", Json::Str("ckpt-period/bench/v3".into())),
+                ("quick", Json::Bool(true)),
+                ("cold_memo_ns", Json::Num(cold_memo)),
+                ("warm_memo_ns", Json::Num(90.0)),
+                (
+                    "frontier_per_sec",
+                    Json::obj(vec![(
+                        "8",
+                        Json::obj(vec![
+                            ("cold", Json::Num(2e5)),
+                            ("warm", Json::Num(frontier_warm)),
+                        ]),
+                    )]),
+                ),
+                (
+                    "tier_plan_per_sec",
+                    Json::obj(vec![("cold", Json::Num(tier_cold)), ("warm", Json::Num(5e4))]),
+                ),
+            ])
+        };
+        let write = |n: u32, d_json: Json| {
+            std::fs::write(d.join(format!("BENCH_{n}.json")), d_json.to_string_pretty()).unwrap();
+        };
+        write(0, doc(4e5, 1e3, 100.0));
+        write(1, doc(4e5, 1e3, 100.0));
+        assert!(gate_trajectory(&d).is_ok());
+        // A cold solver-leg regression now fails the gate.
+        write(2, doc(4e5, 7e2, 100.0));
+        let err = gate_trajectory(&d).unwrap_err();
+        assert!(err.contains("cold tier plans/s") && err.contains("REGRESSION"), "{err}");
+        // So does a pooled-frontier warm regression.
+        write(3, doc(2e5, 7e2, 100.0));
+        let err = gate_trajectory(&d).unwrap_err();
+        assert!(err.contains("warm frontier pts/s @8"), "{err}");
+        // And a cold-memo latency increase (lower is better there).
+        write(4, doc(2e5, 7e2, 130.0));
+        let err = gate_trajectory(&d).unwrap_err();
+        assert!(err.contains("cold memo ns/solve"), "{err}");
     }
 }

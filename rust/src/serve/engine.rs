@@ -19,17 +19,15 @@
 //!   determinism contract as [`ThreadPool::map`].
 
 use std::collections::HashMap;
-use std::sync::{Mutex, OnceLock};
 
 use super::query::Query;
 use crate::model::params::ModelError;
 use crate::telemetry::registry::metrics::{
-    SERVE_ANSWER_CACHE_CLEARS_TOTAL, SERVE_ANSWER_CACHE_HITS_TOTAL,
-    SERVE_ANSWER_CACHE_MISSES_TOTAL, SERVE_DEDUP_NS, SERVE_QUERIES_TOTAL, SERVE_SCATTER_NS,
-    SERVE_SOLVE_NS,
+    SERVE_DEDUP_NS, SERVE_QUERIES_TOTAL, SERVE_SCATTER_NS, SERVE_SOLVE_NS,
 };
 use crate::telemetry::Span;
 use crate::util::pool::ThreadPool;
+use crate::util::shard::ShardedMap;
 
 /// One solved query: the policy's period and where it lands on both
 /// objectives, plus the backend's per-objective optima for context.
@@ -83,11 +81,7 @@ pub fn solve(q: &Query) -> Result<Answer, ModelError> {
 /// recomputation).
 const ANSWER_CACHE_CAPACITY: usize = 1 << 16;
 
-static ANSWER_CACHE: OnceLock<Mutex<HashMap<Vec<u64>, Answer>>> = OnceLock::new();
-
-fn cache() -> &'static Mutex<HashMap<Vec<u64>, Answer>> {
-    ANSWER_CACHE.get_or_init(|| Mutex::new(HashMap::new()))
-}
+static ANSWER_CACHE: ShardedMap<Vec<u64>, Answer> = ShardedMap::clearing(ANSWER_CACHE_CAPACITY);
 
 /// Cached [`solve`]: repeats of a key are served without re-entering
 /// the solver. Only `Ok` answers are cached — errors pass through
@@ -95,36 +89,38 @@ fn cache() -> &'static Mutex<HashMap<Vec<u64>, Answer>> {
 /// (counters track cache behaviour, not domain validity).
 pub fn solve_cached(q: &Query) -> Result<Answer, ModelError> {
     let key = q.solve_key();
-    if let Some(&a) = cache().lock().unwrap().get(&key) {
-        SERVE_ANSWER_CACHE_HITS_TOTAL.inc();
+    if let Some(a) = ANSWER_CACHE.get(&key) {
         return Ok(a);
     }
     // Compute outside the lock: a concurrent miss on the same key just
-    // recomputes the same pure value.
+    // recomputes the same pure value. Insert-if-absent keeps the first
+    // writer's answer (identical bits either way — answers are pure
+    // functions of the key) so stats stay coherent.
     let a = solve(q)?;
-    SERVE_ANSWER_CACHE_MISSES_TOTAL.inc();
-    let mut m = cache().lock().unwrap();
-    if m.len() >= ANSWER_CACHE_CAPACITY {
-        SERVE_ANSWER_CACHE_CLEARS_TOTAL.inc();
-        m.clear();
-    }
-    m.insert(key, a);
-    Ok(a)
+    ANSWER_CACHE.count_miss(&key);
+    Ok(ANSWER_CACHE.insert_if_absent(key, a))
 }
 
 /// Hit/miss counters of the serve answer cache since process start
 /// (the `info` subcommand's serve-path line, mirroring
 /// `sweep::cache::stats`).
 pub fn answer_cache_stats() -> (u64, u64) {
-    (
-        SERVE_ANSWER_CACHE_HITS_TOTAL.get(),
-        SERVE_ANSWER_CACHE_MISSES_TOTAL.get(),
-    )
+    ANSWER_CACHE.stats()
+}
+
+/// Wholesale capacity clears of the serve answer cache.
+pub fn answer_cache_clears() -> u64 {
+    ANSWER_CACHE.clears()
 }
 
 /// Live entry count of the serve answer cache.
 pub fn answer_cache_len() -> usize {
-    cache().lock().unwrap().len()
+    ANSWER_CACHE.len()
+}
+
+/// Live entries per shard (`ckpt_cache_shard_entries` exposition).
+pub fn answer_cache_shard_entries() -> Vec<usize> {
+    ANSWER_CACHE.shard_entries()
 }
 
 /// Batch query engine: dedup by solve key, solve each unique query once

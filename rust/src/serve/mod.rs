@@ -84,6 +84,7 @@ pub mod query;
 pub mod wire;
 
 pub use engine::{
-    answer_cache_len, answer_cache_stats, solve, solve_cached, Answer, BatchEngine,
+    answer_cache_clears, answer_cache_len, answer_cache_shard_entries, answer_cache_stats, solve,
+    solve_cached, Answer, BatchEngine,
 };
 pub use query::{parse_lines, policy_spec, ErrorRecord, Query};

@@ -10,22 +10,24 @@
 //! seed). Two cells collide only if they would compute byte-identical
 //! results, so a hit is always sound.
 //!
-//! The cache is bounded (`MAX_ENTRIES`, coarse FIFO eviction) and can be
-//! bypassed per-[`GridSpec`](super::GridSpec) or cleared/interrogated for
-//! tests and benches.
+//! Storage is a [`ShardedMap`] in FIFO mode: lookups touch only the
+//! key's shard (64 independent locks instead of the historical single
+//! global mutex, so an 8-thread grid sweep no longer serialises on warm
+//! hits), while puts keep the exact historical semantics — a global
+//! insertion-order FIFO bounded by `MAX_ENTRIES`, evicting the oldest
+//! quarter (one eviction event per batch) at capacity, with
+//! [`set_capacity`] shrinking immediately. The cache can be bypassed
+//! per-[`GridSpec`](super::GridSpec) or cleared/interrogated for tests
+//! and benches.
 //!
-//! Hit/miss/eviction counters live in the telemetry registry
-//! ([`crate::telemetry::registry::metrics`]) so the grid cache reports
-//! through the same unified surface as every other cache; [`stats`]
-//! keeps its historical `(hits, misses)` shape on top of them.
+//! Hit/miss counters are per-shard, aggregated by [`stats`] into the
+//! historical `(hits, misses)` shape; the unified telemetry surface
+//! ([`crate::telemetry::registry::cache_rows`]) reads the same numbers,
+//! and eviction events surface as the row's `clears` column.
 
-use std::collections::HashMap;
-use std::sync::{Mutex, OnceLock};
+use crate::util::shard::ShardedMap;
 
 use super::grid::CellOutput;
-use crate::telemetry::registry::metrics::{
-    GRID_CACHE_EVICTIONS_TOTAL, GRID_CACHE_HITS_TOTAL, GRID_CACHE_MISSES_TOTAL,
-};
 
 /// Exact-bits cache key: every f64 is stored as `to_bits`, discrete
 /// fields as tagged words (see `GridSpec::cell_key`).
@@ -34,92 +36,55 @@ pub(crate) type CellKey = Vec<u64>;
 /// Default capacity bound; a full figure suite is ~10⁴ cells.
 const MAX_ENTRIES: usize = 1 << 18;
 
-struct CacheState {
-    map: HashMap<CellKey, CellOutput>,
-    /// Insertion order for FIFO eviction.
-    order: std::collections::VecDeque<CellKey>,
-    /// Current capacity bound (defaults to [`MAX_ENTRIES`]; tests and
-    /// benches shrink it via [`set_capacity`] to exercise eviction).
-    capacity: usize,
-}
-
-static CACHE: OnceLock<Mutex<CacheState>> = OnceLock::new();
-
-fn cache() -> &'static Mutex<CacheState> {
-    CACHE.get_or_init(|| {
-        Mutex::new(CacheState {
-            map: HashMap::new(),
-            order: std::collections::VecDeque::new(),
-            capacity: MAX_ENTRIES,
-        })
-    })
-}
+static CACHE: ShardedMap<CellKey, CellOutput> = ShardedMap::fifo(MAX_ENTRIES);
 
 pub(crate) fn get(key: &CellKey) -> Option<CellOutput> {
-    let hit = cache().lock().unwrap().map.get(key).cloned();
-    match &hit {
-        Some(_) => GRID_CACHE_HITS_TOTAL.inc(),
-        None => GRID_CACHE_MISSES_TOTAL.inc(),
-    };
-    hit
+    // Counting lookup: every get resolves to exactly one hit or miss,
+    // whether or not a `put` follows (the historical contract
+    // `tests/sweep_cache.rs` pins).
+    CACHE.get_counting(key)
 }
 
 pub(crate) fn put(key: CellKey, value: CellOutput) {
-    let mut st = cache().lock().unwrap();
-    if st.map.len() >= st.capacity {
-        // FIFO eviction of the oldest quarter: amortised, keeps the hot
-        // recent working set.
-        GRID_CACHE_EVICTIONS_TOTAL.inc();
-        for _ in 0..(st.capacity / 4).max(1) {
-            if let Some(old) = st.order.pop_front() {
-                st.map.remove(&old);
-            } else {
-                break;
-            }
-        }
-    }
-    if st.map.insert(key.clone(), value).is_none() {
-        st.order.push_back(key);
-    }
+    CACHE.insert_if_absent(key, value);
 }
 
 /// `(hits, misses)` since process start (or the last [`reset_stats`]).
 pub fn stats() -> (u64, u64) {
-    (GRID_CACHE_HITS_TOTAL.get(), GRID_CACHE_MISSES_TOTAL.get())
+    CACHE.stats()
 }
 
 /// Zero the hit/miss counters (benches bracket phases with this).
 pub fn reset_stats() {
-    GRID_CACHE_HITS_TOTAL.reset();
-    GRID_CACHE_MISSES_TOTAL.reset();
+    CACHE.reset_stats();
+}
+
+/// FIFO eviction events since process start (one per oldest-quarter
+/// batch) — the `clears` column of the unified cache table.
+pub fn evictions() -> u64 {
+    CACHE.evictions()
 }
 
 /// Number of memoised cells.
 pub fn len() -> usize {
-    cache().lock().unwrap().map.len()
+    CACHE.len()
+}
+
+/// Live entries per shard (`ckpt_cache_shard_entries` exposition).
+pub fn shard_entries() -> Vec<usize> {
+    CACHE.shard_entries()
 }
 
 /// Drop every memoised cell (tests; cold-start benchmarking).
 pub fn clear() {
-    let mut st = cache().lock().unwrap();
-    st.map.clear();
-    st.order.clear();
+    CACHE.clear();
 }
 
 /// Override the capacity bound (tests/benches exercising eviction;
 /// process-global — restore [`default_capacity`] afterwards). Shrinking
 /// below the current size evicts FIFO immediately.
 pub fn set_capacity(cap: usize) {
-    let mut st = cache().lock().unwrap();
-    st.capacity = cap.max(1);
-    while st.map.len() > st.capacity {
-        match st.order.pop_front() {
-            Some(old) => {
-                st.map.remove(&old);
-            }
-            None => break,
-        }
-    }
+    CACHE.set_capacity(cap);
 }
 
 /// The default capacity bound ([`set_capacity`]'s restore value).

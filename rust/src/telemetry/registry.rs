@@ -104,11 +104,6 @@ pub mod metrics {
     /// Batches run end-to-end (`run_batch`: stdin, file or one socket
     /// connection each).
     pub static SERVE_BATCHES_TOTAL: Counter = Counter::new();
-    /// Serve answer-cache counters (migrated from `serve::engine`'s
-    /// private atomics; `serve::answer_cache_stats` reads these).
-    pub static SERVE_ANSWER_CACHE_HITS_TOTAL: Counter = Counter::new();
-    pub static SERVE_ANSWER_CACHE_MISSES_TOTAL: Counter = Counter::new();
-    pub static SERVE_ANSWER_CACHE_CLEARS_TOTAL: Counter = Counter::new();
     /// Per-stage batch latency (whole stage per batch, ns):
     /// parse / dedup / solve / scatter.
     pub static SERVE_PARSE_NS: Histogram = Histogram::new();
@@ -117,19 +112,31 @@ pub mod metrics {
     pub static SERVE_SCATTER_NS: Histogram = Histogram::new();
 
     // --- grid engine ----------------------------------------------------
-    /// Grid memo-cache counters (migrated from `sweep::cache`'s private
-    /// atomics; `sweep::cache::stats` reads these).
-    pub static GRID_CACHE_HITS_TOTAL: Counter = Counter::new();
-    pub static GRID_CACHE_MISSES_TOTAL: Counter = Counter::new();
-    /// FIFO eviction events (oldest quarter dropped at capacity).
-    pub static GRID_CACHE_EVICTIONS_TOTAL: Counter = Counter::new();
     /// Per-cell evaluation latency (cache misses only — actual evals).
+    /// (Cache hit/miss counters live per-shard in the caches themselves
+    /// since the sharded-map migration; `cache_rows` aggregates them.)
     pub static GRID_CELL_NS: Histogram = Histogram::new();
+
+    // --- sharded caches -------------------------------------------------
+    /// Time spent blocked on a contended cache-shard lock, across every
+    /// sharded cache in the process. Recorded only when the uncontended
+    /// `try_lock` fast path fails (and span timing is enabled), so a
+    /// near-empty histogram is the healthy signal.
+    pub static SHARD_LOCK_WAIT_NS: Histogram = Histogram::new();
 
     // --- pareto ---------------------------------------------------------
     /// Dense frontier solves (`Frontier::compute`: figures, the pareto
     /// CLI, and every online-policy memo miss).
     pub static FRONTIER_SOLVE_NS: Histogram = Histogram::new();
+
+    // --- tier-plan envelope ---------------------------------------------
+    /// Cadence vectors whose objective was actually evaluated during
+    /// tier-plan envelope scans (`model::tiers`).
+    pub static TIER_ENVELOPE_EVALUATED_TOTAL: Counter = Counter::new();
+    /// Cadence vectors skipped by the drain-cost lower bound before
+    /// their objective was evaluated (same scans; evaluated + skipped =
+    /// the full divisibility-constrained envelope).
+    pub static TIER_ENVELOPE_SKIPPED_TOTAL: Counter = Counter::new();
 
     // --- thread pool ----------------------------------------------------
     /// Successful steals from another participant's queue.
@@ -194,7 +201,7 @@ pub fn cache_rows() -> Vec<CacheRow> {
             entries: crate::sweep::cache::len(),
             hits: grid_hits,
             misses: grid_misses,
-            clears: metrics::GRID_CACHE_EVICTIONS_TOTAL.get(),
+            clears: crate::sweep::cache::evictions(),
         },
         CacheRow {
             name: "online policy memo",
@@ -222,8 +229,21 @@ pub fn cache_rows() -> Vec<CacheRow> {
             entries: crate::serve::answer_cache_len(),
             hits: serve_hits,
             misses: serve_misses,
-            clears: metrics::SERVE_ANSWER_CACHE_CLEARS_TOTAL.get(),
+            clears: crate::serve::answer_cache_clears(),
         },
+    ]
+}
+
+/// Per-shard occupancy of every sharded cache, in [`cache_rows`] order
+/// — the `ckpt_cache_shard_entries` exposition family (occupied shards
+/// only are rendered; the vectors here are always full length).
+pub fn shard_rows() -> Vec<(&'static str, Vec<usize>)> {
+    vec![
+        ("grid cell cache", crate::sweep::cache::shard_entries()),
+        ("online policy memo", crate::pareto::online::memo_shard_entries()),
+        ("exact optima memo", crate::model::backend::opt_memo_shard_entries()),
+        ("tier plan memo", crate::model::tiers::tier_plan_memo_shard_entries()),
+        ("serve answer cache", crate::serve::answer_cache_shard_entries()),
     ]
 }
 
@@ -238,6 +258,7 @@ pub fn histogram_families() -> Vec<(&'static str, Option<&'static str>, &'static
         ("ckpt_pool_job_ns", None, &metrics::POOL_JOB_NS),
         ("ckpt_grid_cell_ns", None, &metrics::GRID_CELL_NS),
         ("ckpt_frontier_solve_ns", None, &metrics::FRONTIER_SOLVE_NS),
+        ("ckpt_shard_lock_wait_ns", None, &metrics::SHARD_LOCK_WAIT_NS),
     ]
 }
 

@@ -45,6 +45,16 @@ pub fn prometheus() -> String {
             "Batches submitted to the thread pool",
             metrics::POOL_BATCHES_TOTAL.get(),
         ),
+        (
+            "ckpt_tier_envelope_evaluated_total",
+            "Cadence vectors evaluated by tier-plan envelope scans",
+            metrics::TIER_ENVELOPE_EVALUATED_TOTAL.get(),
+        ),
+        (
+            "ckpt_tier_envelope_skipped_total",
+            "Cadence vectors pruned by the drain-cost lower bound",
+            metrics::TIER_ENVELOPE_SKIPPED_TOTAL.get(),
+        ),
     ];
     for (name, help, v) in counters {
         header(&mut out, name, help, "counter");
@@ -97,6 +107,26 @@ pub fn prometheus() -> String {
                 _ => r.clears,
             };
             out.push_str(&format!("{name}{{cache=\"{}\"}} {v}\n", slug(r.name)));
+        }
+    }
+
+    // Per-shard occupancy of the sharded caches: occupied shards only
+    // (64 mostly-zero lines per cache would drown the exposition; the
+    // HELP/TYPE header keeps the family in the inventory regardless).
+    header(
+        &mut out,
+        "ckpt_cache_shard_entries",
+        "Live entries per cache shard (occupied shards only)",
+        "gauge",
+    );
+    for (name, shards) in registry::shard_rows() {
+        for (i, n) in shards.iter().enumerate() {
+            if *n > 0 {
+                out.push_str(&format!(
+                    "ckpt_cache_shard_entries{{cache=\"{}\",shard=\"{i}\"}} {n}\n",
+                    slug(name)
+                ));
+            }
         }
     }
 
@@ -181,6 +211,14 @@ pub fn snapshot_json() -> Json {
         ("pool_steals_total", Json::Num(metrics::POOL_STEALS_TOTAL.get() as f64)),
         ("pool_jobs_total", Json::Num(metrics::POOL_JOBS_TOTAL.get() as f64)),
         ("pool_batches_total", Json::Num(metrics::POOL_BATCHES_TOTAL.get() as f64)),
+        (
+            "tier_envelope_evaluated_total",
+            Json::Num(metrics::TIER_ENVELOPE_EVALUATED_TOTAL.get() as f64),
+        ),
+        (
+            "tier_envelope_skipped_total",
+            Json::Num(metrics::TIER_ENVELOPE_SKIPPED_TOTAL.get() as f64),
+        ),
     ]);
     let caches = Json::Obj(
         registry::cache_rows()
@@ -231,10 +269,14 @@ mod tests {
             "ckpt_pool_worker_busy_ns_total",
             "ckpt_cache_entries",
             "ckpt_cache_hits_total",
+            "ckpt_cache_shard_entries",
+            "ckpt_tier_envelope_evaluated_total",
+            "ckpt_tier_envelope_skipped_total",
             "ckpt_serve_stage_ns",
             "ckpt_pool_job_ns",
             "ckpt_grid_cell_ns",
             "ckpt_frontier_solve_ns",
+            "ckpt_shard_lock_wait_ns",
         ] {
             assert!(text.contains(&format!("# TYPE {family}")), "missing {family}\n{text}");
         }

@@ -11,7 +11,10 @@
 //! [`PureMemo`] is that contract, once, instead of a hand-rolled copy
 //! per call site. (The grid engine's [`crate::sweep::cache`] is the
 //! heavyweight sibling: structured values, hit/miss counters, tunable
-//! capacity.)
+//! capacity.) Storage is a [`ShardedMap`] — 64 hash-picked shards,
+//! each behind its own mutex — so warm lookups on different keys no
+//! longer serialise on one global lock, and a miss inserts
+//! first-writer-wins instead of overwriting.
 //!
 //! Each memo carries hit/miss/clear counters ([`PureMemo::stats`],
 //! mirroring `sweep::cache::stats`): drift trajectories re-key the
@@ -25,11 +28,10 @@
 //! the value anyone reads — the property every thread-count-invariance
 //! test in the crate leans on.
 
-use std::collections::HashMap;
 use std::convert::Infallible;
 use std::hash::Hash;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, OnceLock};
+
+use super::shard::ShardedMap;
 
 /// Counter snapshot of one [`PureMemo`] (since process start).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -59,27 +61,13 @@ impl MemoStats {
 /// plan struct instead). Keys only need `Clone`, so variable-length
 /// `Vec<u64>` keys (scenarios with tier extensions) work too.
 pub struct PureMemo<K, V = f64> {
-    map: OnceLock<Mutex<HashMap<K, V>>>,
-    capacity: usize,
-    hits: AtomicU64,
-    misses: AtomicU64,
-    clears: AtomicU64,
+    map: ShardedMap<K, V>,
 }
 
 impl<K: Eq + Hash + Clone, V: Clone> PureMemo<K, V> {
     /// Const-constructible so instances can live in `static`s.
     pub const fn new(capacity: usize) -> Self {
-        PureMemo {
-            map: OnceLock::new(),
-            capacity,
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-            clears: AtomicU64::new(0),
-        }
-    }
-
-    fn map(&self) -> &Mutex<HashMap<K, V>> {
-        self.map.get_or_init(|| Mutex::new(HashMap::new()))
+        PureMemo { map: ShardedMap::clearing(capacity) }
     }
 
     /// Cached value for `key`, computing (and caching) it on a miss.
@@ -91,21 +79,18 @@ impl<K: Eq + Hash + Clone, V: Clone> PureMemo<K, V> {
         key: K,
         compute: impl FnOnce() -> Result<V, E>,
     ) -> Result<V, E> {
-        if let Some(v) = self.map().lock().unwrap().get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(v.clone());
+        if let Some(v) = self.map.get(&key) {
+            return Ok(v);
         }
         // Compute outside the lock: a concurrent miss on the same key
-        // just recomputes the same pure value.
+        // just recomputes the same pure value. The insert is
+        // insert-if-absent, so the first writer wins and a losing racer
+        // returns the stored value — stats stay coherent (exactly one
+        // hit *or* one miss per resolved lookup) and nobody overwrites
+        // an entry that a hit could be concurrently reading.
         let v = compute()?;
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        let mut m = self.map().lock().unwrap();
-        if m.len() >= self.capacity {
-            m.clear();
-            self.clears.fetch_add(1, Ordering::Relaxed);
-        }
-        m.insert(key, v.clone());
-        Ok(v)
+        self.map.count_miss(&key);
+        Ok(self.map.insert_if_absent(key, v))
     }
 
     /// Infallible variant of [`Self::get_or_try_compute`].
@@ -116,7 +101,7 @@ impl<K: Eq + Hash + Clone, V: Clone> PureMemo<K, V> {
 
     /// Number of live entries (test/diagnostic use).
     pub fn len(&self) -> usize {
-        self.map().lock().unwrap().len()
+        self.map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -125,11 +110,14 @@ impl<K: Eq + Hash + Clone, V: Clone> PureMemo<K, V> {
 
     /// Hit/miss/clear counters since process start.
     pub fn stats(&self) -> MemoStats {
-        MemoStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            clears: self.clears.load(Ordering::Relaxed),
-        }
+        let (hits, misses) = self.map.stats();
+        MemoStats { hits, misses, clears: self.map.clears() }
+    }
+
+    /// Live entries per backing shard ([`ShardedMap::shard_entries`] —
+    /// the `ckpt_cache_shard_entries` exposition family).
+    pub fn shard_entries(&self) -> Vec<usize> {
+        self.map.shard_entries()
     }
 }
 

@@ -8,9 +8,10 @@
 //! a minimal JSON reader/writer ([`json`]), a tiny property-based testing
 //! harness ([`proptest`]), a timing harness for the `harness = false`
 //! benches ([`bench`]), an ASCII table printer ([`table`]), a
-//! process-wide pure-function memo ([`memo`]), and a persistent
-//! work-stealing thread pool ([`pool`]) that the Monte-Carlo runner and
-//! the scenario-grid engine fan out on.
+//! process-wide pure-function memo ([`memo`]), the sharded concurrent
+//! map every process-wide cache is built on ([`shard`]), and a
+//! persistent work-stealing thread pool ([`pool`]) that the Monte-Carlo
+//! runner and the scenario-grid engine fan out on.
 
 pub mod bench;
 pub mod json;
@@ -18,5 +19,6 @@ pub mod memo;
 pub mod pool;
 pub mod proptest;
 pub mod rng;
+pub mod shard;
 pub mod stats;
 pub mod table;

@@ -1,0 +1,438 @@
+//! Sharded concurrent map — the shared backing store for every
+//! process-wide cache.
+//!
+//! The three cache families in the crate (the `PureMemo` scalar memos,
+//! the grid-cell cache in [`crate::sweep::cache`], and the serve answer
+//! cache) all started life as a single global `Mutex<HashMap>`. That is
+//! correct — every entry is a pure function of its exact-bits key — but
+//! it serialises the 8-thread pool on the hottest path in the process:
+//! warm solves that should be a hash lookup queue on one lock.
+//!
+//! [`ShardedMap`] keeps the same semantics and splits the storage into
+//! [`N_SHARDS`] hash-picked shards, each behind its own `Mutex`, so
+//! concurrent lookups on different keys proceed in parallel. The shard
+//! index is derived from the key with a deterministic fixed-key hasher
+//! (`DefaultHasher::new()` — *not* a per-process `RandomState`), so the
+//! key→shard assignment is reproducible run to run; which shard holds a
+//! value can never influence the value itself, which preserves the
+//! crate-wide bit-identical determinism contract at any thread count.
+//!
+//! Two overflow policies cover the existing caches:
+//!
+//! * [`ShardedMap::clearing`] — wholesale clear when the total entry
+//!   count reaches capacity (the historical `PureMemo` / answer-cache
+//!   behaviour: entries are pure functions of their keys, so losing
+//!   them only costs recomputation).
+//! * [`ShardedMap::fifo`] — global insertion-order FIFO eviction of the
+//!   oldest quarter at capacity (the historical `sweep::cache`
+//!   behaviour, preserved exactly: one eviction *event* per batch,
+//!   `set_capacity` shrinks immediately).
+//!
+//! Counters are per-shard relaxed atomics aggregated on read, so the
+//! unified `MemoStats`/`cache_rows` surfaces keep their exact historical
+//! accounting (every lookup resolves to exactly one hit or one miss in
+//! the counting modes). Lock contention is observable: when span timing
+//! is enabled and an uncontended `try_lock` fails, the blocked wait is
+//! recorded in the `ckpt_shard_lock_wait_ns` histogram
+//! ([`crate::telemetry::registry::metrics::SHARD_LOCK_WAIT_NS`]) —
+//! observational only, never read back into computation.
+
+use std::collections::hash_map::{DefaultHasher, Entry};
+use std::collections::{HashMap, VecDeque};
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+use crate::telemetry::registry::{metrics, timing_enabled};
+
+/// Number of shards. 64 keeps the per-shard mutex essentially
+/// uncontended for an 8-thread pool while the whole array stays small
+/// enough to iterate for `len`/`clear`/stat aggregation.
+pub const N_SHARDS: usize = 64;
+
+/// What to do when an insert finds the map at capacity.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Overflow {
+    /// Drop every entry (one `clears` event), then insert.
+    Clear,
+    /// Evict the globally-oldest quarter in insertion order (one
+    /// `evictions` event per batch), then insert.
+    EvictQuarter,
+}
+
+/// Lock a shard (or the FIFO meta state), recording contended waits in
+/// the shard lock-wait histogram. The uncontended path is a bare
+/// `try_lock`, so the instrumentation costs nothing unless the lock is
+/// actually fought over (and timing is enabled at all).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // Cache state is plain data: recover from poisoning like the pool
+    // does rather than cascading a worker panic into every reader.
+    if timing_enabled() {
+        if let Ok(g) = m.try_lock() {
+            return g;
+        }
+        let wait = Instant::now();
+        let g = m.lock().unwrap_or_else(|e| e.into_inner());
+        metrics::SHARD_LOCK_WAIT_NS.observe(wait.elapsed().as_nanos() as u64);
+        return g;
+    }
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+struct Shard<K, V> {
+    map: Mutex<HashMap<K, V>>,
+    /// Mirror of `map.len()`, readable without the lock (for `len`).
+    entries: AtomicUsize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+struct Meta<K> {
+    /// Global insertion order for FIFO eviction (unused in clearing
+    /// mode). Guarded by its own lock so reads never touch it.
+    order: VecDeque<K>,
+    /// Current capacity bound ([`ShardedMap::set_capacity`]).
+    capacity: usize,
+}
+
+struct State<K, V> {
+    shards: Vec<Shard<K, V>>,
+    meta: Mutex<Meta<K>>,
+}
+
+/// A capacity-bounded concurrent map of pure `K -> V` entries, sharded
+/// across [`N_SHARDS`] independent locks. Const-constructible so
+/// instances can live in `static`s; storage is allocated lazily on
+/// first use.
+pub struct ShardedMap<K, V> {
+    state: OnceLock<State<K, V>>,
+    default_capacity: usize,
+    overflow: Overflow,
+    clears: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> ShardedMap<K, V> {
+    const fn with_overflow(capacity: usize, overflow: Overflow) -> Self {
+        ShardedMap {
+            state: OnceLock::new(),
+            default_capacity: capacity,
+            overflow,
+            clears: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Wholesale-clear-at-capacity map (memo semantics).
+    pub const fn clearing(capacity: usize) -> Self {
+        Self::with_overflow(capacity, Overflow::Clear)
+    }
+
+    /// Global-FIFO quarter-eviction map (grid-cache semantics).
+    pub const fn fifo(capacity: usize) -> Self {
+        Self::with_overflow(capacity, Overflow::EvictQuarter)
+    }
+
+    fn state(&self) -> &State<K, V> {
+        self.state.get_or_init(|| State {
+            shards: (0..N_SHARDS)
+                .map(|_| Shard {
+                    map: Mutex::new(HashMap::new()),
+                    entries: AtomicUsize::new(0),
+                    hits: AtomicU64::new(0),
+                    misses: AtomicU64::new(0),
+                })
+                .collect(),
+            meta: Mutex::new(Meta { order: VecDeque::new(), capacity: self.default_capacity }),
+        })
+    }
+
+    /// Deterministic key→shard assignment: `DefaultHasher::new()` is
+    /// fixed-key SipHash, so the same key lands on the same shard in
+    /// every process (unlike `RandomState`). The shard index is pure
+    /// bookkeeping — it can never change a stored value.
+    fn shard(&self, key: &K) -> &Shard<K, V> {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.state().shards[(h.finish() as usize) & (N_SHARDS - 1)]
+    }
+
+    /// Cached value for `key`. Counts a hit on presence and *nothing*
+    /// on absence — memo semantics, where a miss is attributed only
+    /// once a computed value actually lands ([`Self::count_miss`]), so
+    /// failed computes stay invisible to the counters.
+    pub fn get(&self, key: &K) -> Option<V> {
+        let sh = self.shard(key);
+        let v = lock(&sh.map).get(key).cloned();
+        if v.is_some() {
+            sh.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        v
+    }
+
+    /// Cached value for `key`, counting a hit *or* a miss at lookup
+    /// time — grid-cache semantics, where every lookup resolves to
+    /// exactly one counter event whether or not a `put` follows.
+    pub fn get_counting(&self, key: &K) -> Option<V> {
+        let sh = self.shard(key);
+        let v = lock(&sh.map).get(key).cloned();
+        match &v {
+            Some(_) => {
+                sh.hits.fetch_add(1, Ordering::Relaxed);
+            }
+            None => {
+                sh.misses.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        v
+    }
+
+    /// Attribute one miss to `key`'s shard (the memo path calls this
+    /// after a *successful* compute, just before the insert).
+    pub fn count_miss(&self, key: &K) {
+        self.shard(key).misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Insert `key → value` unless the key is already present, and
+    /// return the winning value: first-writer-wins under concurrency,
+    /// so every thread that raced on the same key observes the same
+    /// stored value (pure functions of the key make the values equal
+    /// anyway; returning the stored one makes it structural). Applies
+    /// the overflow policy first when the map is at capacity.
+    pub fn insert_if_absent(&self, key: K, value: V) -> V {
+        match self.overflow {
+            Overflow::Clear => self.insert_clearing(key, value),
+            Overflow::EvictQuarter => self.insert_fifo(key, value),
+        }
+    }
+
+    fn insert_clearing(&self, key: K, value: V) -> V {
+        let st = self.state();
+        if self.len() >= self.default_capacity {
+            for sh in &st.shards {
+                lock(&sh.map).clear();
+                sh.entries.store(0, Ordering::Relaxed);
+            }
+            self.clears.fetch_add(1, Ordering::Relaxed);
+        }
+        let sh = self.shard(&key);
+        let mut m = lock(&sh.map);
+        match m.entry(key) {
+            Entry::Occupied(e) => e.get().clone(),
+            Entry::Vacant(e) => {
+                e.insert(value.clone());
+                sh.entries.fetch_add(1, Ordering::Relaxed);
+                value
+            }
+        }
+    }
+
+    fn insert_fifo(&self, key: K, value: V) -> V {
+        let st = self.state();
+        // Puts serialise on the meta lock (they did on the single global
+        // lock before); the win is that *gets* only touch one shard.
+        // Lock order is always meta → shard, so gets can never deadlock
+        // against an eviction sweep.
+        let mut meta = lock(&st.meta);
+        if self.len() >= meta.capacity {
+            // FIFO eviction of the oldest quarter: amortised, keeps the
+            // hot recent working set. One eviction event per batch.
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+            let batch = (meta.capacity / 4).max(1);
+            self.evict_oldest(&mut meta, batch);
+        }
+        let sh = self.shard(&key);
+        let mut m = lock(&sh.map);
+        match m.entry(key.clone()) {
+            Entry::Occupied(e) => e.get().clone(),
+            Entry::Vacant(e) => {
+                e.insert(value.clone());
+                sh.entries.fetch_add(1, Ordering::Relaxed);
+                drop(m);
+                meta.order.push_back(key);
+                value
+            }
+        }
+    }
+
+    /// Pop up to `n` keys off the global FIFO order and remove them
+    /// from their shards. Caller holds the meta lock.
+    fn evict_oldest(&self, meta: &mut Meta<K>, n: usize) {
+        for _ in 0..n {
+            match meta.order.pop_front() {
+                Some(old) => {
+                    let sh = self.shard(&old);
+                    if lock(&sh.map).remove(&old).is_some() {
+                        sh.entries.fetch_sub(1, Ordering::Relaxed);
+                    }
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Total live entries across every shard (atomic mirrors; no locks).
+    pub fn len(&self) -> usize {
+        self.state().shards.iter().map(|s| s.entries.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every entry (tests; cold-start benchmarking). Not counted
+    /// as a capacity clear.
+    pub fn clear(&self) {
+        let st = self.state();
+        let mut meta = lock(&st.meta);
+        meta.order.clear();
+        for sh in &st.shards {
+            lock(&sh.map).clear();
+            sh.entries.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// `(hits, misses)` aggregated over every shard.
+    pub fn stats(&self) -> (u64, u64) {
+        let st = self.state();
+        let hits = st.shards.iter().map(|s| s.hits.load(Ordering::Relaxed)).sum();
+        let misses = st.shards.iter().map(|s| s.misses.load(Ordering::Relaxed)).sum();
+        (hits, misses)
+    }
+
+    /// Wholesale capacity clears (clearing mode).
+    pub fn clears(&self) -> u64 {
+        self.clears.load(Ordering::Relaxed)
+    }
+
+    /// FIFO eviction events — one per oldest-quarter batch (fifo mode).
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Zero the hit/miss counters (benches bracket phases with this).
+    /// Clear/eviction event counts are left alone, matching the
+    /// historical `sweep::cache::reset_stats` behaviour.
+    pub fn reset_stats(&self) {
+        for sh in &self.state().shards {
+            sh.hits.store(0, Ordering::Relaxed);
+            sh.misses.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Override the capacity bound (tests/benches exercising eviction;
+    /// restore the construction-time default afterwards). In fifo mode,
+    /// shrinking below the current size evicts FIFO immediately;
+    /// clearing-mode maps keep their construction-time capacity.
+    pub fn set_capacity(&self, cap: usize) {
+        let st = self.state();
+        let mut meta = lock(&st.meta);
+        meta.capacity = cap.max(1);
+        while self.len() > meta.capacity {
+            if meta.order.is_empty() {
+                break;
+            }
+            self.evict_oldest(&mut meta, 1);
+        }
+    }
+
+    /// The construction-time capacity bound (`set_capacity`'s restore
+    /// value).
+    pub fn default_capacity(&self) -> usize {
+        self.default_capacity
+    }
+
+    /// Live entries per shard, in shard order — the
+    /// `ckpt_cache_shard_entries` exposition family reads this.
+    pub fn shard_entries(&self) -> Vec<usize> {
+        self.state().shards.iter().map(|s| s.entries.load(Ordering::Relaxed)).collect()
+    }
+
+    /// `(hits, misses)` per shard, in shard order (the concurrency
+    /// proptest asserts these sum to exactly the aggregate).
+    pub fn shard_stats(&self) -> Vec<(u64, u64)> {
+        self.state()
+            .shards
+            .iter()
+            .map(|s| (s.hits.load(Ordering::Relaxed), s.misses.load(Ordering::Relaxed)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_insert_and_memo_counting() {
+        static MAP: ShardedMap<u64, f64> = ShardedMap::clearing(16);
+        assert_eq!(MAP.get(&1), None);
+        assert_eq!(MAP.stats(), (0, 0)); // plain get never counts a miss
+        MAP.count_miss(&1);
+        assert_eq!(MAP.insert_if_absent(1, 42.0), 42.0);
+        assert_eq!(MAP.get(&1), Some(42.0));
+        assert_eq!(MAP.stats(), (1, 1));
+        // First writer wins: a losing racer reads back the stored value.
+        assert_eq!(MAP.insert_if_absent(1, 99.0), 42.0);
+        assert_eq!(MAP.get(&1), Some(42.0));
+        assert_eq!(MAP.len(), 1);
+        let per_shard: u64 = MAP.shard_stats().iter().map(|(h, m)| h + m).sum();
+        let (hits, misses) = MAP.stats();
+        assert_eq!(per_shard, hits + misses);
+    }
+
+    #[test]
+    fn clearing_mode_clears_wholesale_at_capacity() {
+        static MAP: ShardedMap<u64, f64> = ShardedMap::clearing(4);
+        for k in 0..4 {
+            MAP.insert_if_absent(k, k as f64);
+        }
+        assert_eq!((MAP.len(), MAP.clears()), (4, 0));
+        MAP.insert_if_absent(100, 100.0);
+        assert_eq!((MAP.len(), MAP.clears()), (1, 1));
+        assert_eq!(MAP.get(&100), Some(100.0));
+        assert_eq!(MAP.get(&0), None);
+    }
+
+    #[test]
+    fn fifo_mode_evicts_oldest_quarter_and_shrinks_on_set_capacity() {
+        static MAP: ShardedMap<u64, f64> = ShardedMap::fifo(16);
+        for k in 0..16 {
+            MAP.insert_if_absent(k, k as f64);
+        }
+        assert_eq!((MAP.len(), MAP.evictions()), (16, 0));
+        // At capacity: one eviction event drops the oldest quarter.
+        MAP.insert_if_absent(16, 16.0);
+        assert_eq!((MAP.len(), MAP.evictions()), (13, 1));
+        for k in 0..4 {
+            assert_eq!(MAP.get(&k), None, "oldest quarter should be gone");
+        }
+        assert_eq!(MAP.get(&4), Some(4.0));
+        assert_eq!(MAP.get(&16), Some(16.0));
+        // Shrinking evicts FIFO immediately without an eviction event.
+        MAP.set_capacity(4);
+        assert_eq!((MAP.len(), MAP.evictions()), (4, 1));
+        assert_eq!(MAP.get(&16), Some(16.0), "newest entry survives the shrink");
+        MAP.set_capacity(MAP.default_capacity());
+        assert_eq!(MAP.default_capacity(), 16);
+    }
+
+    #[test]
+    fn shard_assignment_is_deterministic_and_spread() {
+        static MAP: ShardedMap<u64, f64> = ShardedMap::clearing(1 << 12);
+        for k in 0..512 {
+            MAP.insert_if_absent(k, k as f64);
+        }
+        let occupancy = MAP.shard_entries();
+        assert_eq!(occupancy.len(), N_SHARDS);
+        assert_eq!(occupancy.iter().sum::<usize>(), 512);
+        // SipHash spreads 512 sequential keys over far more than one
+        // shard; exact counts are pinned by determinism, spread by hash
+        // quality.
+        let occupied = occupancy.iter().filter(|&&n| n > 0).count();
+        assert!(occupied > N_SHARDS / 2, "only {occupied} shards occupied");
+        let again: Vec<usize> = MAP.shard_entries();
+        assert_eq!(occupancy, again);
+    }
+}

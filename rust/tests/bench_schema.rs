@@ -1,11 +1,11 @@
-//! Bench-harness self-test (ISSUE 6 satellite, extended by ISSUE 7):
-//! `bench --quick` must emit a `BENCH_<n>.json` that validates against
-//! the current schema (`ckpt-period/bench/v2` — tail latency, per-leg
-//! serve-stage percentiles, a telemetry snapshot), and the committed
-//! repo-root trajectory must stay readable: every historical point
-//! validates under its own declared version, v1 or v2, with the shared
-//! key set intact. Every future PR's perf trajectory depends on these
-//! keys staying put.
+//! Bench-harness self-test (ISSUE 6 satellite, extended by ISSUEs 7
+//! and 9): `bench --quick` must emit a `BENCH_<n>.json` that validates
+//! against the current schema (`ckpt-period/bench/v3` — v2's tail
+//! latency and telemetry snapshot plus the pooled-frontier and
+//! tier-plan solver legs), and the committed repo-root trajectory must
+//! stay readable: every historical point validates under its own
+//! declared version, v1/v2/v3, with the shared key set intact. Every
+//! future PR's perf trajectory depends on these keys staying put.
 
 use std::path::Path;
 use std::process::Command;
@@ -83,14 +83,49 @@ fn validate_v2(doc: &Json, origin: &str) {
     }
 }
 
+/// v3 additions: pooled frontier points/sec per thread count, and the
+/// tier-plan solver leg with its envelope-pruning counter deltas.
+fn validate_v3(doc: &Json, origin: &str) {
+    assert!(req_num(doc, "frontier_points") >= 2.0, "{origin}: frontier_points");
+    let fps = doc.get("frontier_per_sec").expect("frontier_per_sec object");
+    for threads in ["1", "4", "8"] {
+        let t = fps
+            .get(threads)
+            .unwrap_or_else(|| panic!("{origin}: missing frontier thread count {threads}"));
+        let origin = format!("{origin} frontier @{threads}t");
+        assert!(req_num(t, "cold") > 0.0, "{origin}: cold pts/s");
+        assert!(req_num(t, "warm") > 0.0, "{origin}: warm pts/s");
+        assert!(req_num(t, "pool_threads") >= 1.0, "{origin}: pool_threads");
+    }
+
+    assert!(req_num(doc, "tier_plan_scenarios") >= 1.0, "{origin}: tier_plan_scenarios");
+    let tp = doc.get("tier_plan_per_sec").expect("tier_plan_per_sec object");
+    assert!(req_num(tp, "cold") > 0.0, "{origin}: tier cold solves/s");
+    assert!(req_num(tp, "warm") > 0.0, "{origin}: tier warm solves/s");
+    // The bound-pruned envelope must be doing real work on the
+    // three-tier bench scenarios: more vectors pruned than evaluated.
+    let evaluated = req_num(tp, "envelope_evaluated");
+    let skipped = req_num(tp, "envelope_skipped");
+    assert!(evaluated >= 1.0, "{origin}: envelope never evaluated");
+    assert!(
+        skipped > evaluated,
+        "{origin}: pruning below 50% (evaluated {evaluated}, skipped {skipped})"
+    );
+}
+
 /// Dispatch on the declared schema version. Every version validates
-/// the common key set; v2 adds the observability payload.
+/// the common key set; v2 adds the observability payload, v3 the
+/// solver legs.
 fn validate(doc: &Json, origin: &str) {
     let schema = doc.req_str("schema").unwrap_or_else(|e| panic!("{origin}: {e}")).to_string();
     validate_common(doc, origin);
     match schema.as_str() {
         "ckpt-period/bench/v1" => {}
         "ckpt-period/bench/v2" => validate_v2(doc, origin),
+        "ckpt-period/bench/v3" => {
+            validate_v2(doc, origin);
+            validate_v3(doc, origin);
+        }
         other => panic!("{origin}: unknown bench schema {other}"),
     }
 }
@@ -118,7 +153,7 @@ fn bench_quick_emits_a_schema_valid_trajectory_point() {
     let doc = parse(&raw).expect("valid JSON");
 
     // A fresh run must declare the current schema and fully validate.
-    assert_eq!(doc.req_str("schema").unwrap(), "ckpt-period/bench/v2");
+    assert_eq!(doc.req_str("schema").unwrap(), "ckpt-period/bench/v3");
     assert_eq!(doc.get("quick").and_then(|q| q.as_bool()), Some(true));
     validate(&doc, "fresh quick run");
 

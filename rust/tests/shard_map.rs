@@ -1,0 +1,165 @@
+//! Concurrency semantics of the sharded map behind every process-wide
+//! cache (ISSUE 9 satellite). The unit tests in `util::shard` cover the
+//! single-threaded policy mechanics; these tests race real thread
+//! counts (1 vs 8) over overlapping keys and assert the contract the
+//! caches depend on:
+//!
+//! * reads stay bit-identical to the pure function of the key being
+//!   cached, at any thread count and interleaving;
+//! * the memo counting protocol (`get` / `count_miss` /
+//!   `insert_if_absent`) resolves every operation to exactly one
+//!   hit-or-miss event, and the per-shard counters sum exactly to the
+//!   aggregates;
+//! * `insert_if_absent` is first-writer-wins: racing writers all
+//!   observe the one stored value;
+//! * capacity bounds hold under concurrent inserts in both overflow
+//!   modes (the semantics `tests/sweep_cache.rs` exercises through the
+//!   grid cache).
+
+use std::sync::Barrier;
+
+use ckpt_period::util::shard::{ShardedMap, N_SHARDS};
+
+/// The pure function of the key these tests cache — any deterministic
+/// f64-valued function works; the assertions are on exact bits.
+fn value_of(k: u64) -> f64 {
+    (k as f64).sqrt() * 3.0 + k as f64 / 7.0
+}
+
+/// Run the memo protocol over `keys` overlapping keys from `threads`
+/// threads (each thread visits every key once, in a thread-specific
+/// rotation so the interleavings differ), asserting every read is
+/// bit-identical to [`value_of`]. Returns the map for counter checks.
+fn run_memo(threads: u64, keys: u64) -> ShardedMap<u64, f64> {
+    let map: ShardedMap<u64, f64> = ShardedMap::clearing(1 << 14);
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let map = &map;
+            scope.spawn(move || {
+                for i in 0..keys {
+                    let k = (i + t * 17) % keys;
+                    let v = match map.get(&k) {
+                        Some(v) => v,
+                        None => {
+                            let computed = value_of(k);
+                            map.count_miss(&k);
+                            map.insert_if_absent(k, computed)
+                        }
+                    };
+                    assert_eq!(v.to_bits(), value_of(k).to_bits(), "key {k} perturbed");
+                }
+            });
+        }
+    });
+    map
+}
+
+#[test]
+fn memo_protocol_counts_exactly_one_event_per_lookup_at_any_thread_count() {
+    const KEYS: u64 = 512;
+    for threads in [1u64, 8] {
+        let map = run_memo(threads, KEYS);
+        let (hits, misses) = map.stats();
+        // Every operation is either a counted hit or a compute that
+        // counted one miss — no lookup is dropped or double-counted,
+        // however the 8 threads interleave.
+        assert_eq!(
+            hits + misses,
+            threads * KEYS,
+            "{threads} thread(s): {hits} hits + {misses} misses"
+        );
+        // Every key was computed at least once, and duplicated computes
+        // can only come from racing threads.
+        assert!(misses >= KEYS, "{threads} thread(s): only {misses} misses");
+        if threads == 1 {
+            assert_eq!((hits, misses), (0, KEYS), "single thread never races");
+        }
+        // First-writer-wins keeps one entry per key regardless of races.
+        assert_eq!(map.len(), KEYS as usize);
+        // Per-shard counters sum exactly to the aggregates.
+        let stats = map.shard_stats();
+        assert_eq!(stats.len(), N_SHARDS);
+        let shard_hits: u64 = stats.iter().map(|(h, _)| h).sum();
+        let shard_misses: u64 = stats.iter().map(|(_, m)| m).sum();
+        assert_eq!((shard_hits, shard_misses), (hits, misses));
+        assert_eq!(map.shard_entries().iter().sum::<usize>(), map.len());
+    }
+}
+
+#[test]
+fn shard_assignment_is_independent_of_thread_count() {
+    const KEYS: u64 = 512;
+    // The key→shard hash is fixed-key, so the occupancy profile of the
+    // same key set must be identical however many threads filled it.
+    let serial = run_memo(1, KEYS);
+    let racing = run_memo(8, KEYS);
+    assert_eq!(serial.shard_entries(), racing.shard_entries());
+}
+
+#[test]
+fn racing_inserts_are_first_writer_wins() {
+    const RACERS: usize = 8;
+    let map: ShardedMap<u64, f64> = ShardedMap::clearing(64);
+    let barrier = Barrier::new(RACERS);
+    // Deliberately distinct values per racer (the caches only ever
+    // store pure functions of the key; this isolates the mechanism):
+    // whoever lands first, everyone must observe the same stored value.
+    let observed: Vec<f64> = std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for t in 0..RACERS {
+            let (map, barrier) = (&map, &barrier);
+            joins.push(scope.spawn(move || {
+                barrier.wait();
+                map.insert_if_absent(7, 1000.0 + t as f64)
+            }));
+        }
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    let stored = map.get(&7).expect("key present");
+    for v in &observed {
+        assert_eq!(v.to_bits(), stored.to_bits(), "a racer saw a losing value");
+    }
+    assert_eq!(map.len(), 1);
+}
+
+#[test]
+fn capacity_bounds_hold_under_concurrent_inserts() {
+    // FIFO mode: 8 threads push 800 distinct keys through capacity 64;
+    // quarter-eviction must keep the bound the whole way.
+    let fifo: ShardedMap<u64, f64> = ShardedMap::fifo(64);
+    std::thread::scope(|scope| {
+        for t in 0..8u64 {
+            let fifo = &fifo;
+            scope.spawn(move || {
+                for i in 0..100u64 {
+                    let k = t * 1000 + i;
+                    fifo.insert_if_absent(k, value_of(k));
+                    assert!(fifo.len() <= 64, "fifo bound broken at {} entries", fifo.len());
+                }
+            });
+        }
+    });
+    assert!(fifo.evictions() >= 1, "800 inserts through capacity 64 never evicted");
+    assert!(fifo.len() <= 64 && !fifo.is_empty());
+    // Shrinking evicts immediately; survivors still read back pure.
+    fifo.set_capacity(8);
+    assert!(fifo.len() <= 8, "shrink left {} entries", fifo.len());
+    fifo.set_capacity(fifo.default_capacity());
+
+    // Clearing mode: the wholesale clear keeps the same bound.
+    let clearing: ShardedMap<u64, f64> = ShardedMap::clearing(64);
+    std::thread::scope(|scope| {
+        for t in 0..8u64 {
+            let clearing = &clearing;
+            scope.spawn(move || {
+                for i in 0..100u64 {
+                    let k = t * 1000 + i;
+                    let v = clearing.insert_if_absent(k, value_of(k));
+                    assert_eq!(v.to_bits(), value_of(k).to_bits());
+                }
+            });
+        }
+    });
+    assert!(clearing.clears() >= 1, "800 inserts through capacity 64 never cleared");
+    assert!(clearing.len() <= 64 + 8, "clear failed to bound the map: {}", clearing.len());
+}

@@ -8,7 +8,7 @@
 //! thread count) and the trace's replay property (the period events
 //! account for every update the summary counts).
 
-use ckpt_period::config::presets::{fig1_scenario, tradeoff_presets};
+use ckpt_period::config::presets::{fig1_scenario, tier_presets, tradeoff_presets};
 use ckpt_period::coordinator::PeriodPolicy;
 use ckpt_period::drift::DriftProcess;
 use ckpt_period::model::Backend;
@@ -54,7 +54,7 @@ fn counters_never_leak_into_keys_or_results() {
     for _ in 0..10_000 {
         metrics::SERVE_QUERIES_TOTAL.inc();
         metrics::POOL_STEALS_TOTAL.inc();
-        metrics::GRID_CACHE_HITS_TOTAL.inc();
+        metrics::TIER_ENVELOPE_EVALUATED_TOTAL.inc();
         metrics::POOL_QUEUE_DEPTH.set(17);
         metrics::SERVE_SOLVE_NS.observe(12_345);
         metrics::GRID_CELL_NS.observe(777);
@@ -270,6 +270,70 @@ fn trace_is_zero_perturbation_and_replays_period_updates() {
 /// state and one full of traffic — the golden-figure guard, cheap form:
 /// the figure stack's inputs are policy periods and sim cells, both
 /// pinned above, so here we pin the frontier path the figures draw.
+/// ISSUE 9 extension of the zero-perturbation contract to the hot-path
+/// overhaul: pool-parallel frontier sampling (1 vs 8 worker pools) must
+/// be byte-identical to the serial reference loop, and the bound-pruned
+/// tier-envelope scans must match the exhaustive scans — minimum *and*
+/// argmin — across every trade-off preset × objective backend × storage
+/// hierarchy crossing.
+#[test]
+fn parallel_frontier_and_pruned_tier_scans_match_their_references() {
+    use ckpt_period::model::tiers::{
+        e_final_tiered_reference, min_energy_cadence, min_time_cadence, t_final_tiered_reference,
+    };
+    use ckpt_period::model::{RecoveryModel, Scenario};
+    use ckpt_period::pareto::Frontier;
+
+    let backends = [Backend::FirstOrder, Backend::Exact(RecoveryModel::Ideal)];
+    for (pname, base) in tradeoff_presets() {
+        for (tname, specs) in tier_presets() {
+            // Re-dress the preset's parameters in each storage hierarchy
+            // (tiers-1 canonicalises back to the scalar model); skip
+            // crossings that leave the model's constructor domain.
+            let Ok(s) =
+                Scenario::with_tier_specs(base.ckpt, base.power, base.mu, base.t_base, &specs)
+            else {
+                continue;
+            };
+            for backend in backends {
+                // No feasible period under this crossing: nothing to
+                // sample (both paths fail the same way).
+                let Ok(reference) = Frontier::compute_reference(&s, 17, backend) else {
+                    assert!(
+                        Frontier::compute(&s, 17, backend).is_err(),
+                        "{pname}/{tname}: pooled path disagrees on feasibility"
+                    );
+                    continue;
+                };
+                for workers in [0usize, 7] {
+                    let pool = ThreadPool::new(workers);
+                    let pooled = Frontier::compute_on(&pool, &s, 17, backend).unwrap();
+                    assert_eq!(
+                        pooled,
+                        reference,
+                        "{pname}/{tname}: {workers} workers under {}",
+                        backend.name()
+                    );
+                }
+            }
+            // Pruned envelope scans vs the exhaustive references, at
+            // periods inside, near, and outside the analytic domain.
+            if let Some(&h) = s.hierarchy() {
+                for t in [s.a() * 0.5, 20.0, 45.0, 90.0] {
+                    let (tv, tk, _) = min_time_cadence(&s, &h, t);
+                    let (rtv, rtk) = t_final_tiered_reference(&s, &h, t);
+                    assert_eq!(tv.to_bits(), rtv.to_bits(), "{pname}/{tname} time min, t={t}");
+                    assert_eq!(tk, rtk, "{pname}/{tname} time argmin, t={t}");
+                    let (ev, ek, _) = min_energy_cadence(&s, &h, t);
+                    let (rev, rek) = e_final_tiered_reference(&s, &h, t);
+                    assert_eq!(ev.to_bits(), rev.to_bits(), "{pname}/{tname} energy min, t={t}");
+                    assert_eq!(ek, rek, "{pname}/{tname} energy argmin, t={t}");
+                }
+            }
+        }
+    }
+}
+
 #[test]
 fn frontier_solves_are_unmoved_by_span_instrumentation() {
     use ckpt_period::pareto::Frontier;
