@@ -149,6 +149,37 @@
 //! or any computed result. `tests/telemetry.rs` enforces the contract
 //! by pinning instrumented runs bit-identical across thread counts
 //! with tracing on and off.
+//!
+//! # Performance notes
+//!
+//! Two hot paths have dedicated fast executors, both governed by the
+//! same invariant — **execution shape never touches a result bit**:
+//!
+//! * **Monte Carlo** runs through the batched lockstep executor
+//!   ([`sim::batch`]): B replicas per pool job advanced in lockstep
+//!   over struct-of-arrays state, with block-drawn failure samples per
+//!   replica stream and allocation-free event steps. Replicas are
+//!   independent (replica `i` owns `seed + i`), so lockstep
+//!   interleaving preserves every replica's own operation sequence and
+//!   the batched results are bit-for-bit the per-replica loop's — the
+//!   retained `#[doc(hidden)]` reference drivers and
+//!   `tests/batch_sim.rs` pin exactly that. The batch size (`--batch`,
+//!   auto ≈ 4 jobs per pool participant, capped so a block stays
+//!   cache-resident) is an execution-shape knob like the thread count.
+//!   `BENCH_3.json`: 3.4–3.9× the scalar fan-out's replicas/sec at
+//!   1–8 threads.
+//! * **Exact-backend re-solves warm-start** from a per-family hint
+//!   store ([`model::backend`]): scenarios sharing every parameter a
+//!   drift schedule cannot rescale form one family, and successive
+//!   solves seed a 3-probe bracket around the family's previous
+//!   optimum ([`model::optimize::grid_then_golden_warm`]) instead of
+//!   rescanning ~400 grid points. The bracket only validates when it
+//!   reproduces the cold scan's geometry exactly, and fails open to
+//!   the cold path bit-identically — hints can make solves faster,
+//!   never different. Observability: `ckpt_opt_warm_{hits,fallbacks}_total`.
+//!
+//! The serving bench (`ckpt-period bench`, schema v4) measures both
+//! legs on every PR and `bench --gate` fails CI on >15% regressions.
 
 pub mod cli;
 pub mod config;

@@ -697,6 +697,12 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
         "controller period-space hysteresis band, >= 0 (adaptive only)",
     ));
     specs.push(ArgSpec::flag("replicates", "200", "Monte-Carlo replicates"));
+    specs.push(ArgSpec::flag(
+        "batch",
+        "auto",
+        "replicas per batched-executor pool job: auto|<n> with n >= 1 \
+         (execution-shape knob; results are identical for every value)",
+    ));
     specs.push(ArgSpec::flag("seed", "1", "base seed (cell seeds derive from it)"));
     specs.push(ArgSpec::flag(
         "trace",
@@ -712,6 +718,8 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     let backend = parse_model(args.get("model"))?;
     let policy = parse_policy(args.get("policy"))?.with_backend(backend);
     let reps = args.get_usize("replicates").map_err(cli_err)?;
+    require_positive("replicates", reps as u64)?;
+    apply_batch_flag(&args)?;
     let seed = args.get_u64("seed").map_err(cli_err)?;
     let knobs = ControllerKnobs::from_args(&args)?;
     // Mirrors the serve-layer rule (and the simulator's own assert):
@@ -794,6 +802,41 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     println!("period = {period:.2} min, {reps} replicates, model {}", backend.name());
     println!("{}", t.render());
     Ok(())
+}
+
+/// Reject a zero count knob (`--replicates`, `--steps`) up front:
+/// zero sample paths would make every downstream statistic undefined
+/// and previously tripped an assert deep in the Monte-Carlo runner.
+fn require_positive(flag: &str, n: u64) -> Result<(), String> {
+    if n == 0 {
+        return Err(cli_err(CliError::InvalidValue(
+            flag.into(),
+            "0".into(),
+            "expected an integer >= 1".into(),
+        )));
+    }
+    Ok(())
+}
+
+/// Parse `--batch auto|<n>` and install it process-wide for the
+/// batched Monte-Carlo executor ([`ckpt_period::sim::batch`]).
+fn apply_batch_flag(args: &Args) -> Result<(), String> {
+    let raw = args.get("batch");
+    if raw == "auto" {
+        ckpt_period::sim::batch::set_batch_size(None);
+        return Ok(());
+    }
+    match raw.parse::<usize>() {
+        Ok(n) if n > 0 => {
+            ckpt_period::sim::batch::set_batch_size(Some(n));
+            Ok(())
+        }
+        _ => Err(cli_err(CliError::InvalidValue(
+            "batch".into(),
+            raw.into(),
+            "expected 'auto' or an integer >= 1 (replicas per pool job)".into(),
+        ))),
+    }
 }
 
 /// Map an unparseable `--policy` value to a [`CliError`] with the full
@@ -1247,6 +1290,7 @@ fn cmd_train(argv: &[String]) -> Result<(), String> {
     cfg.policy = parse_policy(args.get("policy"))?
         .with_backend(parse_model(args.get("model"))?);
     cfg.steps = args.get_u64("steps").map_err(cli_err)?;
+    require_positive("steps", cfg.steps)?;
     cfg.mu_s = args.get_f64("mu").map_err(cli_err)?;
     cfg.downtime_s = args.get_f64("downtime").map_err(cli_err)?;
     cfg.data_seed = args.get_u64("seed").map_err(cli_err)?;

@@ -20,7 +20,14 @@
 //!   **memoised process-wide** keyed on the scenario's exact parameter
 //!   bits — the cached value is a pure function of its key, so grid
 //!   sweeps stay fast and results are byte-identical across thread
-//!   counts, exactly like the [`crate::sweep`] memo cache.
+//!   counts, exactly like the [`crate::sweep`] memo cache. On a memo
+//!   miss the scan is **warm-started** from the last argmin solved for
+//!   the same drift-invariant scenario family (the `WARM_HINTS` store):
+//!   successive re-solves under drift validate a 3-probe bracket
+//!   around the previous optimum instead of scanning the full grid,
+//!   falling back to the cold scan bit-identically when the bracket
+//!   check fails. Hints are advisory — they can change how fast a
+//!   solve runs, never what it returns.
 //!
 //! At large `μ` the two backends agree (the truncation error scales
 //! like `1/μ`; see `rust/tests/model_backend.rs` for the property
@@ -39,13 +46,15 @@
 //! `None`.
 
 use super::exact::{
-    e_final_exact, exact_breakdown, t_energy_opt_exact, t_final_exact, t_time_opt_exact,
-    ExactEvaluator, RecoveryModel,
+    e_final_exact, exact_breakdown, t_energy_opt_exact, t_energy_opt_exact_warm, t_final_exact,
+    t_time_opt_exact, t_time_opt_exact_warm, ExactEvaluator, RecoveryModel,
 };
-use super::optimize::grid_then_golden;
+use super::optimize::{grid_then_golden, grid_then_golden_warm};
 use super::params::{ModelError, Scenario};
 use super::{energy, time};
+use crate::telemetry::registry::metrics;
 use crate::util::memo::PureMemo;
+use crate::util::shard::ShardedMap;
 
 /// Which objective model evaluates `T_final`/`E_final` and their
 /// optimal periods.
@@ -212,7 +221,7 @@ impl Backend {
             Backend::Exact(m) => {
                 s.clamp_period(s.min_period())?;
                 if s.hierarchy().is_some() {
-                    Ok(cached_opt(OPT_TIME_TAG, *m, s, || {
+                    Ok(cached_opt(OPT_TIME_TAG, *m, s, |hint| {
                         // Hoist the per-scenario invariants out of the
                         // ~400-point optimiser loop: the flattened
                         // projection and the exact evaluator depend only
@@ -222,7 +231,7 @@ impl Backend {
                         // bit-identical to minimising `b.t_final` per-t.
                         let flat = s.scalar_effective();
                         let ev = ExactEvaluator::new(s, *m);
-                        numeric_opt(s, |t| {
+                        let obj = |t: f64| {
                             if t <= s.a() {
                                 return f64::INFINITY;
                             }
@@ -233,10 +242,23 @@ impl Backend {
                             } else {
                                 ev.breakdown(t).makespan + (fo_tiered - fo_flat)
                             }
-                        })
+                        };
+                        if let Some(h) = hint {
+                            if let Some(t) = numeric_opt_warm(s, &obj, h) {
+                                return (t, true);
+                            }
+                        }
+                        (numeric_opt(s, &obj), false)
                     }))
                 } else {
-                    Ok(cached_opt(OPT_TIME_TAG, *m, s, || t_time_opt_exact(s, *m)))
+                    Ok(cached_opt(OPT_TIME_TAG, *m, s, |hint| {
+                        if let Some(h) = hint {
+                            if let Some(t) = t_time_opt_exact_warm(s, *m, h) {
+                                return (t, true);
+                            }
+                        }
+                        (t_time_opt_exact(s, *m), false)
+                    }))
                 }
             }
         }
@@ -250,12 +272,12 @@ impl Backend {
             Backend::Exact(m) => {
                 s.clamp_period(s.min_period())?;
                 if s.hierarchy().is_some() {
-                    Ok(cached_opt(OPT_ENERGY_TAG, *m, s, || {
+                    Ok(cached_opt(OPT_ENERGY_TAG, *m, s, |hint| {
                         // Same hoist as `t_time_opt`: the closure body is
                         // [`Self::e_final`]'s tiered arm verbatim.
                         let flat = s.scalar_effective();
                         let ev = ExactEvaluator::new(s, *m);
-                        numeric_opt(s, |t| {
+                        let obj = |t: f64| {
                             if t <= s.a() {
                                 return f64::INFINITY;
                             }
@@ -266,10 +288,23 @@ impl Backend {
                             } else {
                                 ev.breakdown(t).energy + (fo_tiered - fo_flat)
                             }
-                        })
+                        };
+                        if let Some(h) = hint {
+                            if let Some(t) = numeric_opt_warm(s, &obj, h) {
+                                return (t, true);
+                            }
+                        }
+                        (numeric_opt(s, &obj), false)
                     }))
                 } else {
-                    Ok(cached_opt(OPT_ENERGY_TAG, *m, s, || t_energy_opt_exact(s, *m)))
+                    Ok(cached_opt(OPT_ENERGY_TAG, *m, s, |hint| {
+                        if let Some(h) = hint {
+                            if let Some(t) = t_energy_opt_exact_warm(s, *m, h) {
+                                return (t, true);
+                            }
+                        }
+                        (t_energy_opt_exact(s, *m), false)
+                    }))
                 }
             }
         }
@@ -300,6 +335,42 @@ fn opt_key(tag: u64, model: RecoveryModel, s: &Scenario) -> OptKey {
     k
 }
 
+/// Last solved argmin per **drift-invariant scenario family** — the
+/// warm-start hint store behind [`Backend::t_time_opt`] /
+/// [`Backend::t_energy_opt`] memo misses. Drift targets rescale `C`,
+/// `R`, `μ` and `P_IO` only, so the family key keeps everything drift
+/// leaves fixed (`D`, `ω`, the other power rails, `t_base`, the tier
+/// words): successive quantised views of one drifting scenario land on
+/// the same family and seed each other's brackets. Entries are
+/// advisory — a stale or cross-scenario hint either fails the bracket
+/// check (cold fallback) or validates to the cold-identical bracket —
+/// so last-writer-wins overwrite ([`ShardedMap::put`]) is sound.
+static WARM_HINTS: ShardedMap<OptKey, f64> = ShardedMap::clearing(32_768);
+
+fn warm_key(tag: u64, model: RecoveryModel, s: &Scenario) -> OptKey {
+    let mut k = Vec::with_capacity(12);
+    k.push(tag);
+    k.push(match model {
+        RecoveryModel::Ideal => 1,
+        RecoveryModel::Restarting => 2,
+    });
+    k.push(s.ckpt.d.to_bits());
+    k.push(s.ckpt.omega.to_bits());
+    k.push(s.power.p_static.to_bits());
+    k.push(s.power.p_cal.to_bits());
+    k.push(s.power.p_down.to_bits());
+    k.push(s.t_base.to_bits());
+    if let Some(h) = s.hierarchy() {
+        for i in 0..h.len() {
+            let tier = h.tier(i);
+            k.push(tier.c.to_bits());
+            k.push(tier.r.to_bits());
+            k.push(tier.p_io.to_bits());
+        }
+    }
+    k
+}
+
 /// Numeric argmin over the first-order feasibility domain — the same
 /// bracketing as `energy::t_energy_opt_numeric`, but over an arbitrary
 /// (tier-corrected) objective.
@@ -314,11 +385,47 @@ fn numeric_opt(s: &Scenario, f: impl FnMut(f64) -> f64) -> f64 {
     t
 }
 
+/// [`numeric_opt`] seeded from `hint`: identical bracket expressions,
+/// so a validated hint yields the cold argmin bit-for-bit. `None` on a
+/// failed bracket check — and on the degenerate `lo >= hi` domain,
+/// where the cold path's `min_period` early-out must win.
+fn numeric_opt_warm(s: &Scenario, f: impl FnMut(f64) -> f64, hint: f64) -> Option<f64> {
+    let (lo, hi) = s.domain();
+    let lo = lo.max(s.min_period() * 0.5).max(lo + 1e-9 * (hi - lo));
+    let hi = hi * (1.0 - 1e-9);
+    if lo >= hi {
+        return None;
+    }
+    let (t, _) = grid_then_golden_warm(f, lo, hi, 400, 1e-9 * (hi - lo), hint)?;
+    Some(t)
+}
+
 /// Memoised numeric optimum: pure function of the key, so which thread
 /// (or concurrently running grid cell) fills the entry first cannot
 /// change the value anyone reads.
-fn cached_opt(tag: u64, model: RecoveryModel, s: &Scenario, compute: impl FnOnce() -> f64) -> f64 {
-    OPT_MEMO.get_or_compute(opt_key(tag, model, s), compute)
+///
+/// On a memo miss, `solve` receives the family's previous argmin from
+/// [`WARM_HINTS`] (if any) and reports `(argmin, used_warm_path)`; the
+/// fresh argmin is stored back as the family's next hint. Warm hits
+/// and fallbacks are counted on `ckpt_opt_warm_{hits,fallbacks}_total`.
+fn cached_opt(
+    tag: u64,
+    model: RecoveryModel,
+    s: &Scenario,
+    solve: impl FnOnce(Option<f64>) -> (f64, bool),
+) -> f64 {
+    let fam = warm_key(tag, model, s);
+    OPT_MEMO.get_or_compute(opt_key(tag, model, s), || {
+        let hint = WARM_HINTS.get(&fam);
+        let (t, warm) = solve(hint);
+        if warm {
+            metrics::OPT_WARM_HITS_TOTAL.inc();
+        } else {
+            metrics::OPT_WARM_FALLBACKS_TOTAL.inc();
+        }
+        WARM_HINTS.put(fam, t);
+        t
+    })
 }
 
 /// Counter snapshot of the exact-optima memo (hits/misses/wholesale
@@ -515,6 +622,64 @@ mod tests {
             assert!(b.t_final(&tiered, tt).is_finite());
             let flat_tt = b.t_time_opt(&proj).unwrap();
             assert_ne!(tt.to_bits(), flat_tt.to_bits(), "{}", b.name());
+        }
+    }
+
+    #[test]
+    fn warm_hints_never_change_results() {
+        // Scenarios in one drift-invariant family (only μ differs):
+        // every solve after the first sees the previous argmin as its
+        // warm hint, and must still equal the hint-free exact solve
+        // bit-for-bit — hints steer the scan, never the answer.
+        for m in [RecoveryModel::Ideal, RecoveryModel::Restarting] {
+            let b = Backend::Exact(m);
+            for mu in [90.0, 96.0, 103.0, 111.0, 240.0, 57.0] {
+                let s = fig1_scenario(mu, 5.5);
+                assert_eq!(
+                    b.t_time_opt(&s).unwrap().to_bits(),
+                    t_time_opt_exact(&s, m).to_bits(),
+                    "time {} mu={mu}",
+                    b.name()
+                );
+                assert_eq!(
+                    b.t_energy_opt(&s).unwrap().to_bits(),
+                    t_energy_opt_exact(&s, m).to_bits(),
+                    "energy {} mu={mu}",
+                    b.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tiered_warm_resolves_match_cold_numeric_opt() {
+        use crate::storage::TierSpec;
+        let specs = [TierSpec::new(1.0, 1.0, 30.0), TierSpec::new(10.0, 10.0, 100.0)];
+        let m = RecoveryModel::Restarting;
+        let b = Backend::Exact(m);
+        // One drift-invariant tiered family solved in sequence: the
+        // second and third solves see the previous argmin as a hint.
+        for mu in [140.0, 133.0, 127.0] {
+            let base = fig1_scenario(mu, 5.5);
+            let s = Scenario::with_tier_specs(base.ckpt, base.power, base.mu, base.t_base, &specs)
+                .unwrap();
+            let got = b.t_time_opt(&s).unwrap();
+            // Cold reference: the tiered objective minimised hint-free.
+            let flat = s.scalar_effective();
+            let ev = ExactEvaluator::new(&s, m);
+            let cold = numeric_opt(&s, |t| {
+                if t <= s.a() {
+                    return f64::INFINITY;
+                }
+                let fo_tiered = time::t_final(&s, t);
+                let fo_flat = time::t_final(&flat, t);
+                if !fo_tiered.is_finite() || !fo_flat.is_finite() {
+                    f64::INFINITY
+                } else {
+                    ev.breakdown(t).makespan + (fo_tiered - fo_flat)
+                }
+            });
+            assert_eq!(got.to_bits(), cold.to_bits(), "mu={mu}");
         }
     }
 

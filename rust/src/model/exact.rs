@@ -39,7 +39,7 @@
 //! forms are visibly off; `examples/exascale_study` prints the
 //! first-order-vs-exact ablation.
 
-use super::optimize::grid_then_golden;
+use super::optimize::{grid_then_golden, grid_then_golden_warm};
 use super::params::Scenario;
 
 /// How recovery interacts with further failures (must match the
@@ -203,6 +203,25 @@ pub fn t_energy_opt_exact(s: &Scenario, model: RecoveryModel) -> f64 {
     optimise(s, |t| ev.breakdown(t).energy)
 }
 
+/// [`t_time_opt_exact`] seeded with the argmin of a previous, nearby
+/// solve (the warm-start re-solve path under drift). Returns `None`
+/// when the hint's grid bracket fails to validate — the caller falls
+/// back to the cold scan. A validated hint refines the exact bracket
+/// the cold scan would pick, so `Some(t)` is bit-identical to
+/// [`t_time_opt_exact`] (see
+/// [`grid_then_golden_warm`](super::optimize::grid_then_golden_warm)).
+pub fn t_time_opt_exact_warm(s: &Scenario, model: RecoveryModel, hint: f64) -> Option<f64> {
+    let ev = ExactEvaluator::new(s, model);
+    optimise_warm(s, |t| ev.breakdown(t).makespan, hint)
+}
+
+/// Warm-started [`t_energy_opt_exact`]; same contract as
+/// [`t_time_opt_exact_warm`].
+pub fn t_energy_opt_exact_warm(s: &Scenario, model: RecoveryModel, hint: f64) -> Option<f64> {
+    let ev = ExactEvaluator::new(s, model);
+    optimise_warm(s, |t| ev.breakdown(t).energy, hint)
+}
+
 fn optimise(s: &Scenario, f: impl FnMut(f64) -> f64) -> f64 {
     // The exact objective is unimodal in t on (a, ∞): waste explodes both
     // as t -> a (checkpoint overhead) and t -> ∞ (e^{λt} re-execution).
@@ -211,6 +230,16 @@ fn optimise(s: &Scenario, f: impl FnMut(f64) -> f64) -> f64 {
     let hi = (10.0 * s.mu).max(lo * 4.0);
     let (t, _) = grid_then_golden(f, lo, hi, 400, 1e-10 * hi);
     t.max(s.min_period())
+}
+
+/// [`optimise`] seeded from `hint`: identical bracket expressions and
+/// post-processing, so a validated hint yields the cold argmin
+/// bit-for-bit.
+fn optimise_warm(s: &Scenario, f: impl FnMut(f64) -> f64, hint: f64) -> Option<f64> {
+    let lo = s.min_period().max(s.a() * 1.000001);
+    let hi = (10.0 * s.mu).max(lo * 4.0);
+    let (t, _) = grid_then_golden_warm(f, lo, hi, 400, 1e-10 * hi, hint)?;
+    Some(t.max(s.min_period()))
 }
 
 #[cfg(test)]
@@ -227,6 +256,34 @@ mod tests {
         let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, omega).unwrap();
         let power = PowerParams::new(10.0, 10.0, 100.0, 0.0).unwrap();
         Scenario::new(ckpt, power, mu, 10_000.0).unwrap()
+    }
+
+    #[test]
+    fn warm_optima_are_bit_identical_to_cold() {
+        // Seed with the cold argmin itself. When the hint rounds into
+        // the cold scan's grid cell the bracket validates and must
+        // refine bit-identically; when it rounds into a neighbouring
+        // cell the strict-dip check falls back (also correct).
+        let mut validated = 0;
+        for model in [RecoveryModel::Ideal, RecoveryModel::Restarting] {
+            for mu in [150.0, 600.0, 2_400.0] {
+                let s = scenario(mu, 0.5);
+                let cold_t = t_time_opt_exact(&s, model);
+                let cold_e = t_energy_opt_exact(&s, model);
+                if let Some(warm_t) = t_time_opt_exact_warm(&s, model, cold_t) {
+                    assert_eq!(cold_t.to_bits(), warm_t.to_bits(), "time mu={mu}");
+                    validated += 1;
+                }
+                if let Some(warm_e) = t_energy_opt_exact_warm(&s, model, cold_e) {
+                    assert_eq!(cold_e.to_bits(), warm_e.to_bits(), "energy mu={mu}");
+                    validated += 1;
+                }
+            }
+        }
+        assert!(validated > 0, "no warm bracket validated across 12 seeds");
+        // A hopeless hint falls back.
+        let s = scenario(600.0, 0.5);
+        assert!(t_time_opt_exact_warm(&s, RecoveryModel::Ideal, f64::NAN).is_none());
     }
 
     #[test]

@@ -72,6 +72,56 @@ pub fn grid_then_golden(
     golden_section(f, a, b, tol)
 }
 
+/// Warm-started variant of [`grid_then_golden`]: seed the scan with an
+/// `hint` argmin carried over from a previous, nearby solve.
+///
+/// Probes the three grid points bracketing the hint; when they form a
+/// strict, finite, interior local minimum, the full grid scan is
+/// skipped and golden-section refines exactly the bracket the cold
+/// scan would have selected — for a unimodal objective the grid argmin
+/// is the grid point nearest the true minimum, so a validated hint
+/// bracket *is* the cold bracket (same `lo + step * i` endpoint
+/// expressions, same refinement calls) and the result is bit-identical
+/// to [`grid_then_golden`]. Cost: 3 probes + refinement instead of
+/// `grid + 1` probes + refinement.
+///
+/// Returns `None` when the bracket check fails — non-finite or
+/// out-of-domain hint, probe values not a strict interior dip (e.g.
+/// the optimum moved to the domain edge, or drifted more than a grid
+/// cell past the hint's neighbours) — and the caller falls back to the
+/// cold path.
+pub fn grid_then_golden_warm(
+    mut f: impl FnMut(f64) -> f64,
+    lo: f64,
+    hi: f64,
+    grid: usize,
+    tol: f64,
+    hint: f64,
+) -> Option<(f64, f64)> {
+    assert!(grid >= 2 && hi > lo);
+    if !hint.is_finite() {
+        return None;
+    }
+    let step = (hi - lo) / grid as f64;
+    let j_raw = ((hint - lo) / step).round();
+    if !(0.0..=grid as f64).contains(&j_raw) {
+        return None;
+    }
+    // Edge hints clamp to the innermost interior point; a true edge
+    // optimum then fails the strict-dip check below and falls back.
+    let j = (j_raw as usize).clamp(1, grid - 1);
+    let vm = f(lo + step * (j - 1) as f64);
+    let vj = f(lo + step * j as f64);
+    let vp = f(lo + step * (j + 1) as f64);
+    if !(vm.is_finite() && vj.is_finite() && vp.is_finite()) || !(vm > vj && vj < vp) {
+        return None;
+    }
+    // Identical endpoint expressions to the cold path with `best_i = j`.
+    let a = lo + step * (j - 1) as f64;
+    let b = (lo + step * (j + 1) as f64).min(hi);
+    Some(golden_section(f, a, b, tol))
+}
+
 /// Solve `a2·x² + a1·x + a0 = 0` for real roots, returned ascending.
 pub fn quadratic_roots(a2: f64, a1: f64, a0: f64) -> Vec<f64> {
     if a2 == 0.0 {
@@ -125,6 +175,46 @@ mod tests {
         let f = |x: f64| if x < 6.0 { 10.0 - 1e-6 * x } else { (x - 8.0) * (x - 8.0) };
         let (x, _) = grid_then_golden(f, 0.0, 10.0, 50, 1e-9);
         assert!((x - 8.0).abs() < 1e-6, "x={x}");
+    }
+
+    #[test]
+    fn warm_start_matches_cold_when_bracket_validates() {
+        let f = |x: f64| (x - 3.7) * (x - 3.7);
+        let cold = grid_then_golden(f, 0.0, 10.0, 100, 1e-9);
+        let warm = grid_then_golden_warm(f, 0.0, 10.0, 100, 1e-9, 3.64).unwrap();
+        assert_eq!(cold.0.to_bits(), warm.0.to_bits());
+        assert_eq!(cold.1.to_bits(), warm.1.to_bits());
+    }
+
+    #[test]
+    fn warm_start_rejects_bad_hints() {
+        let f = |x: f64| (x - 8.0) * (x - 8.0);
+        // Hint far from the minimum: the probed triple is monotone.
+        assert!(grid_then_golden_warm(f, 0.0, 10.0, 50, 1e-9, 1.0).is_none());
+        // Non-finite and out-of-domain hints.
+        assert!(grid_then_golden_warm(f, 0.0, 10.0, 50, 1e-9, f64::NAN).is_none());
+        assert!(grid_then_golden_warm(f, 0.0, 10.0, 50, 1e-9, 42.0).is_none());
+        // Minimum at the domain edge: never a strict interior dip.
+        assert!(grid_then_golden_warm(|x| x, 2.0, 5.0, 50, 1e-9, 2.0).is_none());
+    }
+
+    #[test]
+    fn prop_warm_start_is_bit_identical_to_cold() {
+        check("warm start matches cold grid_then_golden", 300, |g: &mut Gen| {
+            let m = g.f64_in(1.0, 9.0);
+            let scale = g.f64_in(0.1, 10.0);
+            let hint = m + g.f64_in(-0.5, 0.5);
+            let f = |x: f64| scale * (x - m) * (x - m);
+            if let Some(warm) = grid_then_golden_warm(f, 0.0, 10.0, 64, 1e-9, hint) {
+                let cold = grid_then_golden(f, 0.0, 10.0, 64, 1e-9);
+                prop_assert!(
+                    g,
+                    warm.0.to_bits() == cold.0.to_bits() && warm.1.to_bits() == cold.1.to_bits(),
+                    "warm {warm:?} cold {cold:?}"
+                );
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -38,6 +38,16 @@
 //! `ckpt_tier_envelope_*` counter deltas of the cold pass recording
 //! the pruning rate). The gate compares cold legs as well as warm ones
 //! since v3.
+//!
+//! Schema v4 adds the two legs behind the batched-executor and
+//! warm-start work: **Monte-Carlo replicas/sec at 1, 4 and 8 threads**
+//! (the retained per-replica scalar reference loop vs the batched
+//! lockstep executor on per-leg local pools — identical seeds,
+//! bit-identical results, the lockstep batch size in force reported
+//! per leg) and **warm-started exact endpoint re-solves/sec** (a μ
+//! walk down one warm-hint family, the drift re-solve shape, vs
+//! family-cold solves that each run the full endpoint grid scan, with
+//! the `ckpt_opt_warm_*` counter deltas of the drifting pass).
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicI32, Ordering};
@@ -51,12 +61,14 @@ use crate::model::params::Scenario;
 use crate::model::{tiers, Backend, CheckpointParams, PowerParams, RecoveryModel};
 use crate::pareto::online::knee_period;
 use crate::pareto::{Frontier, KneeMethod};
+use crate::sim::batch::{effective_batch_size, run_batched_on};
+use crate::sim::{FailureProcess, SimConfig, Simulator};
 use crate::storage::TierSpec;
 use crate::sweep::GridSpec;
 use crate::telemetry::histogram::HistogramSnapshot;
 use crate::telemetry::registry::metrics::{
-    SERVE_DEDUP_NS, SERVE_SCATTER_NS, SERVE_SOLVE_NS, TIER_ENVELOPE_EVALUATED_TOTAL,
-    TIER_ENVELOPE_SKIPPED_TOTAL,
+    OPT_WARM_FALLBACKS_TOTAL, OPT_WARM_HITS_TOTAL, SERVE_DEDUP_NS, SERVE_SCATTER_NS,
+    SERVE_SOLVE_NS, TIER_ENVELOPE_EVALUATED_TOTAL, TIER_ENVELOPE_SKIPPED_TOTAL,
 };
 use crate::telemetry::render;
 use crate::util::bench::{black_box, Bench};
@@ -239,6 +251,127 @@ fn tier_plan_solves_per_sec(k: usize) -> (f64, f64, u64, u64) {
     ((2 * k) as f64 / cold, (2 * k * PASSES) as f64 / warm, evaluated, skipped)
 }
 
+/// (scalar, batched) Monte-Carlo replicas/sec on a pool with `threads`
+/// participants: the retained per-replica reference loop (one
+/// `Simulator::run` per pool task) vs the batched lockstep executor
+/// ([`run_batched_on`], whole blocks per pool job over
+/// struct-of-arrays state). Identical seeds, bit-identical results —
+/// the leg measures execution shape only. Median over `reps` runs;
+/// also returns the lockstep batch size in force and the pool's
+/// participant count.
+fn sim_replicas_per_sec(
+    threads: usize,
+    replicates: usize,
+    reps: usize,
+) -> (f64, f64, usize, usize) {
+    let pool = ThreadPool::new(threads - 1);
+    let pool_threads = pool.n_workers() + 1;
+    let s = fig1_scenario(300.0, 5.5);
+    // Young's period: deterministic, in domain, close enough to the
+    // optimum that the event mix is representative.
+    let period = s.min_period().max((2.0 * s.ckpt.c * s.mu).sqrt());
+    let cfg = SimConfig {
+        scenario: s,
+        period,
+        failure: FailureProcess::Exponential { mtbf: 300.0 },
+        failures_during_recovery: true,
+    };
+    let sim = Simulator::new(cfg.clone());
+    // A fixed base seed: both executors simulate the same sample paths,
+    // so the two timings cover identical work.
+    const SEED: u64 = 41_000_000;
+    let mut scalar_s = Vec::with_capacity(reps);
+    let mut batched_s = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        if threads == 1 {
+            for i in 0..replicates {
+                black_box(sim.run(SEED + i as u64));
+            }
+        } else {
+            black_box(pool.map(replicates, |i| sim.run(SEED + i as u64)));
+        }
+        scalar_s.push(t0.elapsed().as_secs_f64());
+        let t1 = Instant::now();
+        black_box(run_batched_on(&pool, &cfg, replicates, SEED, threads));
+        batched_s.push(t1.elapsed().as_secs_f64());
+    }
+    let r = replicates as f64;
+    (
+        r / percentile(&scalar_s, 0.5),
+        r / percentile(&batched_s, 0.5),
+        effective_batch_size(replicates),
+        pool_threads,
+    )
+}
+
+/// ω decay for the family-cold re-solve scenarios: multiplicative off
+/// the shared [`FRESH`] counter, so every step is a never-seen
+/// warm-hint family key and the decayed value stays in `(0, 0.5]` for
+/// any process-lifetime counter value.
+const OMEGA_DECAY: f64 = 0.9995;
+
+/// (cold, warm) exact-backend endpoint solves/sec. The *warm* pass
+/// walks μ multiplicatively down one warm-hint family — the shape of a
+/// drifting frontier re-solve — so after the family's first solve
+/// every optimisation seeds a 3-probe bracket from the previous
+/// optimum. The *cold* pass gives every scenario a fresh ω (ω is part
+/// of the drift-invariant family key), so the hint store never has an
+/// offer and every solve runs the full endpoint grid scan. Also
+/// returns the `ckpt_opt_warm_*` counter deltas of the warm pass — the
+/// recorded hit/fallback split.
+fn warm_resolve_per_sec(k: usize) -> (f64, f64, u64, u64) {
+    let backend = Backend::Exact(RecoveryModel::Ideal);
+    let base = fig1_scenario(140.0, 5.5);
+    let start = FRESH.fetch_add(2 * k as i32, Ordering::Relaxed);
+    let solve = |s: &Scenario| {
+        black_box(backend.t_time_opt(s).expect("bench scenarios stay in domain"));
+        black_box(backend.t_energy_opt(s).expect("bench scenarios stay in domain"));
+    };
+    let cold_scens: Vec<Scenario> = (0..k as i32)
+        .map(|i| {
+            let ckpt = CheckpointParams::new(
+                base.ckpt.c,
+                base.ckpt.r,
+                base.ckpt.d,
+                0.5 * OMEGA_DECAY.powi(start + i),
+            )
+            .expect("bench scenarios stay in domain");
+            Scenario::new(ckpt, base.power, base.mu, base.t_base)
+                .expect("bench scenarios stay in domain")
+        })
+        .collect();
+    let warm_scens: Vec<Scenario> = (0..k as i32)
+        .map(|i| {
+            Scenario::new(
+                base.ckpt,
+                base.power,
+                140.0 * MU_GROWTH.powi(start + k as i32 + i),
+                base.t_base,
+            )
+            .expect("bench scenarios stay in domain")
+        })
+        .collect();
+    let t0 = Instant::now();
+    for s in &cold_scens {
+        solve(s);
+    }
+    let cold = t0.elapsed().as_secs_f64();
+    let hits0 = OPT_WARM_HITS_TOTAL.get();
+    let falls0 = OPT_WARM_FALLBACKS_TOTAL.get();
+    let t1 = Instant::now();
+    for s in &warm_scens {
+        solve(s);
+    }
+    let warm = t1.elapsed().as_secs_f64();
+    (
+        (2 * k) as f64 / cold,
+        (2 * k) as f64 / warm,
+        OPT_WARM_HITS_TOTAL.get() - hits0,
+        OPT_WARM_FALLBACKS_TOTAL.get() - falls0,
+    )
+}
+
 /// The serve-stage percentile block for one queries/sec leg: the
 /// windowed histogram deltas (`after.since(before)`) for the engine's
 /// dedup/solve/scatter spans, so each leg reports exactly its own
@@ -286,6 +419,8 @@ pub fn run_bench() -> Json {
     let cells = if quick { 2048usize } else { 8192 };
     let frontier_points = if quick { 64usize } else { 256 };
     let tier_scenarios = if quick { 32usize } else { 128 };
+    let sim_replicates = if quick { 512usize } else { 4096 };
+    let warm_scenarios = if quick { 32usize } else { 128 };
 
     println!("serve bench ({}): memo latency …", if quick { "quick" } else { "full" });
     let memo = memo_latency(memo_scenarios);
@@ -326,6 +461,32 @@ pub fn run_bench() -> Json {
         ));
     }
 
+    let mut sim = Vec::new();
+    for threads in [1usize, 4, 8] {
+        let (scalar, batched, batch_size, pool_threads) =
+            sim_replicas_per_sec(threads, sim_replicates, reps);
+        println!(
+            "  sim @{threads} thread(s): {scalar:.0} scalar replicas/s, \
+             {batched:.0} batched replicas/s (batch {batch_size})"
+        );
+        sim.push((
+            threads.to_string(),
+            Json::obj(vec![
+                ("scalar", Json::Num(scalar)),
+                ("batched", Json::Num(batched)),
+                ("batch_size", Json::Num(batch_size as f64)),
+                ("pool_threads", Json::Num(pool_threads as f64)),
+            ]),
+        ));
+    }
+
+    let (resolve_cold, resolve_warm, warm_hits, warm_fallbacks) =
+        warm_resolve_per_sec(warm_scenarios);
+    println!(
+        "  warm re-solves: {resolve_cold:.0} cold solves/s, {resolve_warm:.0} warm solves/s \
+         ({warm_hits} warm hits, {warm_fallbacks} fallbacks)"
+    );
+
     let (tier_cold, tier_warm, envelope_evaluated, envelope_skipped) =
         tier_plan_solves_per_sec(tier_scenarios);
     println!(
@@ -347,7 +508,7 @@ pub fn run_bench() -> Json {
     bench.finish();
 
     Json::obj(vec![
-        ("schema", Json::Str("ckpt-period/bench/v3".into())),
+        ("schema", Json::Str("ckpt-period/bench/v4".into())),
         ("suite", Json::Str("serve".into())),
         ("quick", Json::Bool(quick)),
         ("git_describe", Json::Str(git_describe())),
@@ -370,6 +531,18 @@ pub fn run_bench() -> Json {
                 ("warm", Json::Num(tier_warm)),
                 ("envelope_evaluated", Json::Num(envelope_evaluated as f64)),
                 ("envelope_skipped", Json::Num(envelope_skipped as f64)),
+            ]),
+        ),
+        ("sim_replicates", Json::Num(sim_replicates as f64)),
+        ("sim_replicas_per_sec", Json::Obj(sim.into_iter().collect())),
+        ("warm_resolve_scenarios", Json::Num(warm_scenarios as f64)),
+        (
+            "warm_resolve_per_sec",
+            Json::obj(vec![
+                ("cold", Json::Num(resolve_cold)),
+                ("warm", Json::Num(resolve_warm)),
+                ("warm_hits", Json::Num(warm_hits as f64)),
+                ("warm_fallbacks", Json::Num(warm_fallbacks as f64)),
             ]),
         ),
         ("cells", Json::Num(cells as f64)),
@@ -423,12 +596,18 @@ fn gate_metrics(prev: &Json, curr: &Json) -> Vec<(String, f64, f64, bool)> {
     if let Some((p, c)) = both("cell_throughput_per_sec") {
         rows.push(("grid cells/sec".to_string(), p, c, true));
     }
-    // Per-thread-count legs: queries/sec and frontier points/sec, cold
-    // and warm sides both.
-    for (block, what) in [("queries_per_sec", "q/s"), ("frontier_per_sec", "frontier pts/s")] {
+    // Per-thread-count legs: queries/sec and frontier points/sec (cold
+    // and warm sides), and since v4 the Monte-Carlo replicas/sec leg
+    // (scalar and batched sides).
+    let per_thread: [(&str, &str, [&str; 2]); 3] = [
+        ("queries_per_sec", "q/s", ["cold", "warm"]),
+        ("frontier_per_sec", "frontier pts/s", ["cold", "warm"]),
+        ("sim_replicas_per_sec", "sim replicas/s", ["scalar", "batched"]),
+    ];
+    for (block, what, sides) in per_thread {
         if let (Some(Json::Obj(pq)), Some(Json::Obj(cq))) = (prev.get(block), curr.get(block)) {
             for (threads, pv) in pq {
-                for side in ["cold", "warm"] {
+                for side in sides {
                     let leg = |v: &Json| v.get(side).and_then(Json::as_f64);
                     if let (Some(p), Some(c)) = (leg(pv), cq.get(threads).and_then(|v| leg(v))) {
                         rows.push((format!("{side} {what} @{threads} thread(s)"), p, c, true));
@@ -437,11 +616,18 @@ fn gate_metrics(prev: &Json, curr: &Json) -> Vec<(String, f64, f64, bool)> {
             }
         }
     }
-    if let (Some(pt), Some(ct)) = (prev.get("tier_plan_per_sec"), curr.get("tier_plan_per_sec")) {
-        for side in ["cold", "warm"] {
-            let leg = |v: &Json| v.get(side).and_then(Json::as_f64);
-            if let (Some(p), Some(c)) = (leg(pt), leg(ct)) {
-                rows.push((format!("{side} tier plans/s"), p, c, true));
+    // Single-block cold/warm legs: tier-plan solves (v3) and the
+    // warm-started endpoint re-solves (v4).
+    for (block, what) in [
+        ("tier_plan_per_sec", "tier plans/s"),
+        ("warm_resolve_per_sec", "endpoint re-solves/s"),
+    ] {
+        if let (Some(pt), Some(ct)) = (prev.get(block), curr.get(block)) {
+            for side in ["cold", "warm"] {
+                let leg = |v: &Json| v.get(side).and_then(Json::as_f64);
+                if let (Some(p), Some(c)) = (leg(pt), leg(ct)) {
+                    rows.push((format!("{side} {what}"), p, c, true));
+                }
             }
         }
     }
@@ -459,7 +645,9 @@ fn gate_metrics(prev: &Json, curr: &Json) -> Vec<(String, f64, f64, bool)> {
 /// perf story is built on; since v3 the cold legs are gated too — the
 /// sharded-cache and envelope-pruning work moved the solvers
 /// themselves, and the 15% tolerance still clears allocator/turbo
-/// noise on cold medians.
+/// noise on cold medians. Since v4 the gate also covers the batched
+/// Monte-Carlo replicas/sec legs (scalar and batched sides per thread
+/// count) and the warm-started endpoint re-solve leg.
 pub fn gate_trajectory(dir: &Path) -> Result<Vec<String>, String> {
     let entries = trajectory_entries(dir);
     if entries.len() < 2 {
@@ -602,6 +790,15 @@ mod tests {
         write_doc(&d, 1, "ckpt-period/bench/v2", 900.0, 5e5, 2e5);
         let lines = gate_trajectory(&d).unwrap();
         assert!(lines.iter().any(|l| l.contains("schema changed")), "{lines:?}");
+
+        // The v3 -> v4 transition point skips cleanly the same way: the
+        // v4 doc grows legs the v3 one lacks, so they never compare.
+        let d = gate_dir("schema34");
+        write_doc(&d, 0, "ckpt-period/bench/v3", 90.0, 5e6, 2e6);
+        write_doc(&d, 1, "ckpt-period/bench/v4", 900.0, 5e5, 2e5);
+        let lines = gate_trajectory(&d).unwrap();
+        assert!(lines.iter().any(|l| l.contains("schema changed")), "{lines:?}");
+        assert!(lines.last().unwrap().contains("skipping"), "{lines:?}");
     }
 
     #[test]
@@ -684,5 +881,48 @@ mod tests {
         write(4, doc(2e5, 7e2, 130.0));
         let err = gate_trajectory(&d).unwrap_err();
         assert!(err.contains("cold memo ns/solve"), "{err}");
+    }
+
+    #[test]
+    fn gate_covers_the_v4_sim_and_warm_resolve_legs() {
+        let d = gate_dir("v4");
+        let doc = |batched: f64, resolve_warm: f64| {
+            Json::obj(vec![
+                ("schema", Json::Str("ckpt-period/bench/v4".into())),
+                ("quick", Json::Bool(true)),
+                ("warm_memo_ns", Json::Num(90.0)),
+                (
+                    "sim_replicas_per_sec",
+                    Json::obj(vec![(
+                        "8",
+                        Json::obj(vec![
+                            ("scalar", Json::Num(8e5)),
+                            ("batched", Json::Num(batched)),
+                        ]),
+                    )]),
+                ),
+                (
+                    "warm_resolve_per_sec",
+                    Json::obj(vec![
+                        ("cold", Json::Num(2e4)),
+                        ("warm", Json::Num(resolve_warm)),
+                    ]),
+                ),
+            ])
+        };
+        let write = |n: u32, d_json: Json| {
+            std::fs::write(d.join(format!("BENCH_{n}.json")), d_json.to_string_pretty()).unwrap();
+        };
+        write(0, doc(3e6, 1.8e5));
+        write(1, doc(3e6, 1.8e5));
+        assert!(gate_trajectory(&d).is_ok());
+        // A batched-executor throughput regression fails the gate.
+        write(2, doc(2e6, 1.8e5));
+        let err = gate_trajectory(&d).unwrap_err();
+        assert!(err.contains("batched sim replicas/s @8") && err.contains("REGRESSION"), "{err}");
+        // So does a warm-started re-solve slowdown.
+        write(3, doc(2e6, 1.2e5));
+        let err = gate_trajectory(&d).unwrap_err();
+        assert!(err.contains("warm endpoint re-solves/s"), "{err}");
     }
 }

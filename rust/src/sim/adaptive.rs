@@ -74,8 +74,8 @@
 //! (one relaxed load when off), and results are bit-identical with
 //! the sink installed or not (`tests/telemetry.rs`).
 
-use super::engine::{settle_drains, Drain};
-use super::failure::{Failure, FailureProcess, FailureStream};
+use super::engine::{settle_drains_with, Drain};
+use super::failure::{Failure, FailureProcess, FailureSource};
 use crate::coordinator::adaptive::AdaptiveController;
 use crate::coordinator::policy::PeriodPolicy;
 use crate::drift::{DriftProcess, EnvTrajectory};
@@ -217,19 +217,23 @@ fn phase_end(now: f64, len: f64, need: f64, rate: f64, fail_at: f64) -> PhaseEnd
 }
 
 /// The adaptive simulator. Construct once, run many seeds.
+///
+/// Fields are `pub(crate)` so the batched lockstep executor
+/// ([`super::batch`]) can drive the same trajectory/controller state
+/// without re-validating the drift schedule per block.
 #[derive(Debug, Clone)]
 pub struct AdaptiveSimulator {
-    cfg: AdaptiveSimConfig,
+    pub(crate) cfg: AdaptiveSimConfig,
     /// The scenario-at-time view of `cfg.scenario` under `cfg.drift`.
-    traj: EnvTrajectory,
+    pub(crate) traj: EnvTrajectory,
     /// Cached `!traj.is_stationary()`: gates every drift-only branch so
     /// the stationary path stays bit-identical to the pre-drift code.
-    drifting: bool,
+    pub(crate) drifting: bool,
     /// The scenario's storage hierarchy, when it has one: gates every
     /// tiered branch (drain queues, node-loss restarts) the same way
     /// `drifting` gates the drift branches — scalar scenarios stay
     /// bit-identical to the pre-tier code.
-    tiered: Option<TierHierarchy>,
+    pub(crate) tiered: Option<TierHierarchy>,
 }
 
 impl AdaptiveSimulator {
@@ -255,6 +259,17 @@ impl AdaptiveSimulator {
 
     pub fn config(&self) -> &AdaptiveSimConfig {
         &self.cfg
+    }
+
+    /// A clairvoyant twin of this simulator: same scenario, same
+    /// (already-validated) trajectory, with
+    /// [`AdaptiveSimConfig::oracle`] set. The drift grid cell pairs
+    /// each estimating run with its oracle baseline off one trajectory
+    /// build instead of re-validating the drift schedule twice.
+    pub fn oracle_twin(&self) -> AdaptiveSimulator {
+        let mut twin = self.clone();
+        twin.cfg.oracle = true;
+        twin
     }
 
     /// Execute one sample path.
@@ -359,6 +374,9 @@ impl AdaptiveSimulator {
         let mut drain_free_at = 0.0f64;
         let mut drain_energy = 0.0f64;
         let mut rec_io_energy = 0.0f64;
+        // Pin-set scratch, reused across every settle (no per-event
+        // allocation; values rebuilt in place).
+        let mut pinned: Vec<f64> = Vec::new();
         // Cadence plan for the period currently in force; recomputed
         // lazily when the controller moves the period.
         let mut kappa = [1u32; crate::storage::MAX_TIERS];
@@ -411,6 +429,7 @@ impl AdaptiveSimulator {
                             &mut saved,
                             &mut overlap,
                             &mut res.work_lost,
+                            &mut pinned,
                         ))
                     } else {
                         res.work_lost += overlap + dt;
@@ -482,6 +501,7 @@ impl AdaptiveSimulator {
                             &mut saved,
                             &mut overlap,
                             &mut res.work_lost,
+                            &mut pinned,
                         ))
                     } else {
                         res.work_lost += overlap + compute_len + omega * dt;
@@ -531,8 +551,17 @@ impl AdaptiveSimulator {
                     // the period currently in force (mirrors the
                     // engine's fixed-period loop).
                     if let (Some(h), Some(st)) = (self.tiered.as_ref(), store.as_mut()) {
-                        settle_drains(&mut inflight, st, &mut drain_energy, h, now, false);
-                        let pinned: Vec<f64> = inflight.iter().map(|dr| dr.work).collect();
+                        settle_drains_with(
+                            &mut inflight,
+                            st,
+                            &mut drain_energy,
+                            h,
+                            now,
+                            false,
+                            &mut pinned,
+                        );
+                        pinned.clear();
+                        pinned.extend(inflight.iter().map(|dr| dr.work));
                         st.record(
                             0,
                             CopyRecord { work: at_ckpt_start, available_at: now },
@@ -563,7 +592,7 @@ impl AdaptiveSimulator {
         // End of run: completed drains land, in-flight ones abort with
         // pro-rated energy (no-op on the scalar path).
         if let (Some(h), Some(st)) = (self.tiered.as_ref(), store.as_mut()) {
-            settle_drains(&mut inflight, st, &mut drain_energy, h, now, true);
+            settle_drains_with(&mut inflight, st, &mut drain_energy, h, now, true, &mut pinned);
         }
 
         res.makespan = now;
@@ -600,7 +629,7 @@ impl AdaptiveSimulator {
     /// The policy's period on the true instantaneous scenario at `now`
     /// (clamped to that scenario's feasible range) — the moving target
     /// the tracking metrics measure against and the oracle applies.
-    fn instantaneous_target(&self, now: f64) -> Option<f64> {
+    pub(crate) fn instantaneous_target(&self, now: f64) -> Option<f64> {
         let s_now = if self.drifting { self.traj.scenario_at(now) } else { self.cfg.scenario };
         let p = self.cfg.policy.period(&s_now).ok()?;
         s_now.clamp_period(p).ok()
@@ -631,7 +660,7 @@ impl AdaptiveSimulator {
     /// in oracle mode, from the true instantaneous policy period. Also
     /// samples the tracking-lag metric against the instantaneous
     /// target.
-    fn reread_period(
+    pub(crate) fn reread_period(
         &self,
         ctl: &mut AdaptiveController,
         res: &mut AdaptiveRunResult,
@@ -699,15 +728,17 @@ impl AdaptiveSimulator {
     /// tiered path `tier_rec` carries the surviving tier's `(R_j,
     /// P_IO_j)` (already resolved by [`tiered_node_loss`]) and the read
     /// energy accrues into `rec_io_energy` instead of the end-of-run
-    /// blanket `P_IO` term.
+    /// blanket `P_IO` term. Generic over the failure source so the
+    /// scalar reference loop and the batched executor monomorphise to
+    /// the same body.
     #[allow(clippy::too_many_arguments)]
-    fn fail_and_recover(
+    pub(crate) fn fail_and_recover<S: FailureSource>(
         &self,
         ctl: &mut AdaptiveController,
         res: &mut AdaptiveRunResult,
         now: &mut f64,
         next_fail: &mut Failure,
-        stream: &mut FailureStream,
+        stream: &mut S,
         seed: u64,
         tier_rec: Option<(f64, f64)>,
         rec_io_energy: &mut f64,
@@ -829,9 +860,10 @@ impl AdaptiveSimulator {
 /// surviving copy. Returns the recovery read `(R_j, P_IO_j)` of the
 /// surviving tier — `(0, 0)` when nothing survives and the run restarts
 /// from scratch with no read. Mirrors the engine's `tiered_failure`
-/// bookkeeping.
+/// bookkeeping. `pinned` is caller-owned pin-set scratch (see
+/// [`settle_drains_with`]).
 #[allow(clippy::too_many_arguments)]
-fn tiered_node_loss(
+pub(crate) fn tiered_node_loss(
     h: &TierHierarchy,
     store: &mut TierStore,
     inflight: &mut Vec<Drain>,
@@ -842,8 +874,9 @@ fn tiered_node_loss(
     saved: &mut f64,
     overlap: &mut f64,
     work_lost: &mut f64,
+    pinned: &mut Vec<f64>,
 ) -> (f64, f64) {
-    settle_drains(inflight, store, drain_energy, h, now, true);
+    settle_drains_with(inflight, store, drain_energy, h, now, true, pinned);
     *drain_free_at = now;
     store.purge_node_local();
     let (r, p_io, restart) = match store.freshest_surviving(now) {
@@ -875,10 +908,72 @@ pub struct AdaptiveMonteCarloResult {
     pub drift_lag: OnlineStats,
 }
 
+/// Fold per-replicate results into the Monte-Carlo aggregate, in
+/// replicate-index order (the order is part of the thread-count
+/// determinism contract — `OnlineStats` sums are order-sensitive).
+fn collect_stats(replicates: usize, results: &[AdaptiveRunResult]) -> AdaptiveMonteCarloResult {
+    let mut mc = AdaptiveMonteCarloResult {
+        replicates,
+        makespan: OnlineStats::new(),
+        energy: OnlineStats::new(),
+        failures: OnlineStats::new(),
+        checkpoints: OnlineStats::new(),
+        work_lost: OnlineStats::new(),
+        period_updates: OnlineStats::new(),
+        final_period: OnlineStats::new(),
+        tracking_lag: OnlineStats::new(),
+        drift_lag: OnlineStats::new(),
+    };
+    for r in results {
+        mc.makespan.push(r.makespan);
+        mc.energy.push(r.energy);
+        mc.failures.push(r.n_failures as f64);
+        mc.checkpoints.push(r.n_checkpoints as f64);
+        mc.work_lost.push(r.work_lost);
+        mc.period_updates.push(r.n_period_updates as f64);
+        mc.final_period.push(r.final_period);
+        mc.tracking_lag.push(r.tracking_lag_pct);
+        mc.drift_lag.push(r.drift_lag_pct);
+    }
+    mc
+}
+
 /// Run `replicates` independent adaptive sample paths. Replicate `i`
 /// simulates seed `base_seed + i`; results are byte-identical for every
 /// `threads` value (same contract as [`super::runner::monte_carlo`]).
+///
+/// Dispatches to the batched lockstep executor ([`super::batch`]) —
+/// bit-identical to the per-replica loop by construction, pinned by
+/// `tests/batch_sim.rs` against [`adaptive_monte_carlo_reference`].
 pub fn adaptive_monte_carlo(
+    cfg: &AdaptiveSimConfig,
+    replicates: usize,
+    base_seed: u64,
+    threads: usize,
+) -> AdaptiveMonteCarloResult {
+    let sim = AdaptiveSimulator::new(cfg.clone());
+    adaptive_monte_carlo_with(&sim, replicates, base_seed, threads)
+}
+
+/// [`adaptive_monte_carlo`] on an already-constructed simulator: skips
+/// re-validating the drift trajectory, so paired runs (an estimating
+/// run and its [`AdaptiveSimulator::oracle_twin`]) share one build.
+pub fn adaptive_monte_carlo_with(
+    sim: &AdaptiveSimulator,
+    replicates: usize,
+    base_seed: u64,
+    threads: usize,
+) -> AdaptiveMonteCarloResult {
+    assert!(replicates > 0);
+    let results = super::batch::run_adaptive_batched(sim, replicates, base_seed, threads);
+    collect_stats(replicates, &results)
+}
+
+/// The pre-batching per-replica driver, kept verbatim as the
+/// bit-identity reference for the lockstep executor (the PR 9
+/// `compute_reference` pattern). Not part of the public surface.
+#[doc(hidden)]
+pub fn adaptive_monte_carlo_reference(
     cfg: &AdaptiveSimConfig,
     replicates: usize,
     base_seed: u64,
@@ -892,31 +987,7 @@ pub fn adaptive_monte_carlo(
     } else {
         ThreadPool::global().map(replicates, |i| sim.run(base_seed + i as u64))
     };
-
-    let mut mc = AdaptiveMonteCarloResult {
-        replicates,
-        makespan: OnlineStats::new(),
-        energy: OnlineStats::new(),
-        failures: OnlineStats::new(),
-        checkpoints: OnlineStats::new(),
-        work_lost: OnlineStats::new(),
-        period_updates: OnlineStats::new(),
-        final_period: OnlineStats::new(),
-        tracking_lag: OnlineStats::new(),
-        drift_lag: OnlineStats::new(),
-    };
-    for r in &results {
-        mc.makespan.push(r.makespan);
-        mc.energy.push(r.energy);
-        mc.failures.push(r.n_failures as f64);
-        mc.checkpoints.push(r.n_checkpoints as f64);
-        mc.work_lost.push(r.work_lost);
-        mc.period_updates.push(r.n_period_updates as f64);
-        mc.final_period.push(r.final_period);
-        mc.tracking_lag.push(r.tracking_lag_pct);
-        mc.drift_lag.push(r.drift_lag_pct);
-    }
-    mc
+    collect_stats(replicates, &results)
 }
 
 #[cfg(test)]

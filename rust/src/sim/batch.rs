@@ -1,0 +1,1022 @@
+//! Batched lockstep Monte-Carlo executor: the hot path behind
+//! [`super::runner::monte_carlo`] and
+//! [`super::adaptive::adaptive_monte_carlo`].
+//!
+//! # Why lockstep batching is bit-identical
+//!
+//! Replicates are fully independent: replicate `i` owns its RNG
+//! (`Pcg64::seeded(base_seed + i)`), its failure stream, and its event
+//! state, and nothing it computes feeds any other replicate. Advancing
+//! B replicas in lockstep (one outer period-iteration per replica per
+//! sweep) therefore *interleaves* their floating-point operations but
+//! never changes any single replica's operation sequence — each
+//! replica's result is bit-for-bit the result the per-replica loop
+//! produces, and the index-ordered aggregation downstream is untouched.
+//! `tests/batch_sim.rs` pins this against the `#[doc(hidden)]`
+//! reference drivers across presets × backends × tier stacks × drift
+//! families.
+//!
+//! What batching buys over the replica-at-a-time fan-out:
+//!
+//! * **Struct-of-arrays state.** The loop-carried scalars (clocks,
+//!   saved/overlap work, next-failure events, per-replica accumulators)
+//!   live in flat arrays indexed by slot, so a sweep over the block
+//!   walks contiguous memory instead of chasing one replica's state
+//!   through a full run before touching the next.
+//! * **Block-drawn failure samples.** Gap-based streams pre-draw their
+//!   exponential samples in blocks ([`BufferedFailures`]), amortising
+//!   sampler dispatch; draw *order* per stream is unchanged, so the
+//!   PR 5 seed contract (and the thinning envelope, which stays
+//!   on-demand) is untouched.
+//! * **Allocation-free event steps.** Per-slot drain queues retain
+//!   their capacity and the pin-set scratch is one buffer per block
+//!   ([`super::engine::settle_drains_with`]); steady-state stepping
+//!   performs no heap traffic.
+//! * **Coarser pool jobs.** One pool job runs a whole block, so the
+//!   per-job scheduling overhead is paid once per B replicas.
+//!
+//! The per-replica scalar loops in [`super::engine`] / [`super::adaptive`]
+//! remain the executable specification; the step functions here are
+//! expression-for-expression transliterations of their loop bodies
+//! (the recovery helpers are literally shared, monomorphised over
+//! [`FailureSource`]).
+//!
+//! # Batch size
+//!
+//! The batch size is an execution-shape knob, never a result knob —
+//! exactly like the thread count. [`set_batch_size`] installs a
+//! process-wide override (the CLI's `--batch`); `auto` targets ~4 jobs
+//! per pool participant, capped at [`MAX_AUTO_BATCH`] so a block's
+//! working set stays cache-resident. The size in force is exported via
+//! the `sim_batch_size` gauge.
+
+use super::adaptive::{tiered_node_loss, AdaptiveRunResult, AdaptiveSimulator};
+use super::engine::{
+    phase_end, settle_drains_with, Drain, PhaseEnd, RunResult, SimConfig, Simulator,
+};
+use super::failure::{BufferedFailures, Failure, FailureSource};
+use crate::coordinator::adaptive::AdaptiveController;
+use crate::model::time::young;
+use crate::storage::{CopyRecord, TierHierarchy, TierStore, MAX_TIERS};
+use crate::telemetry::registry::metrics;
+use crate::telemetry::trace;
+use crate::util::json::Json;
+use crate::util::pool::ThreadPool;
+use crate::util::rng::Pcg64;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Upper bound on the *auto* batch size: beyond this the block's
+/// struct-of-arrays working set stops fitting in cache and lockstep
+/// sweeps lose their locality win. An explicit [`set_batch_size`]
+/// override may exceed it.
+pub const MAX_AUTO_BATCH: usize = 32;
+
+/// Process-wide batch-size override; `0` means auto.
+static BATCH_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Install (or clear, with `None`) the process-wide batch-size
+/// override. Like `CKPT_POOL_THREADS`, this changes execution shape
+/// only: replicas are independent and aggregated in replicate-index
+/// order, so no value of the knob can change a result. `Some(0)` is
+/// treated as auto.
+pub fn set_batch_size(batch: Option<usize>) {
+    BATCH_OVERRIDE.store(batch.unwrap_or(0), Ordering::Relaxed);
+}
+
+/// The batch size the executor will use for a `replicates`-sized call:
+/// the override when set, otherwise ~4 jobs per pool participant capped
+/// at [`MAX_AUTO_BATCH`]; never more than `replicates`.
+pub fn effective_batch_size(replicates: usize) -> usize {
+    let user = BATCH_OVERRIDE.load(Ordering::Relaxed);
+    let b = if user > 0 {
+        user
+    } else {
+        let participants = ThreadPool::global().n_workers() + 1;
+        let per_job = replicates / (4 * participants);
+        per_job.clamp(1, MAX_AUTO_BATCH)
+    };
+    b.min(replicates.max(1))
+}
+
+/// A block of replicas advancing in lockstep. `step` runs one outer
+/// period-iteration of slot `i`'s event loop and reports whether the
+/// replica finished.
+trait Lockstep {
+    fn slots(&self) -> usize;
+    fn step(&mut self, i: usize) -> bool;
+}
+
+/// Sweep the block until every slot finishes. Slots are stepped in
+/// slot (= replicate) order each sweep; finished slots drop out.
+fn drive<M: Lockstep>(block: &mut M) {
+    let mut live: Vec<usize> = (0..block.slots()).collect();
+    while !live.is_empty() {
+        live.retain(|&i| !block.step(i));
+    }
+}
+
+const ZERO_RUN: RunResult = RunResult {
+    makespan: 0.0,
+    energy: 0.0,
+    n_failures: 0,
+    n_checkpoints: 0,
+    work_lost: 0.0,
+    time_compute: 0.0,
+    time_checkpoint: 0.0,
+    time_recovery: 0.0,
+    time_down: 0.0,
+};
+
+/// Fan `replicates` out over `pool` in blocks of `batch`, preserving
+/// replicate order (jobs are index-ordered and flattened in order).
+fn fan_out<T: Send>(
+    pool: &ThreadPool,
+    replicates: usize,
+    threads: usize,
+    batch: usize,
+    block_of: &(impl Fn(usize, usize) -> Vec<T> + Sync),
+) -> Vec<T> {
+    // Manual ceiling division: `usize::div_ceil` postdates the MSRV.
+    let n_jobs = (replicates + batch - 1) / batch;
+    let job = |j: usize| {
+        let lo = j * batch;
+        let hi = ((j + 1) * batch).min(replicates);
+        block_of(lo, hi)
+    };
+    let threads = threads.clamp(1, replicates);
+    let blocks: Vec<Vec<T>> = if threads == 1 || ThreadPool::in_worker() || n_jobs == 1 {
+        (0..n_jobs).map(job).collect()
+    } else {
+        pool.map(n_jobs, job)
+    };
+    let mut out = Vec::with_capacity(replicates);
+    for b in blocks {
+        out.extend(b);
+    }
+    out
+}
+
+/// Run `replicates` fixed-period sample paths of `cfg` through the
+/// lockstep executor. Replicate `i` simulates seed `base_seed + i`;
+/// the returned vector is in replicate order and each element is
+/// bit-identical to `Simulator::run(base_seed + i)`.
+pub fn run_batched(
+    cfg: &SimConfig,
+    replicates: usize,
+    base_seed: u64,
+    threads: usize,
+) -> Vec<RunResult> {
+    run_batched_on(ThreadPool::global(), cfg, replicates, base_seed, threads)
+}
+
+/// [`run_batched`] on a caller-supplied pool. The serving bench's
+/// replicas/sec legs use per-leg local pools so a "4 threads"
+/// measurement means exactly four participants rather than however
+/// many workers the global pool happens to own.
+pub fn run_batched_on(
+    pool: &ThreadPool,
+    cfg: &SimConfig,
+    replicates: usize,
+    base_seed: u64,
+    threads: usize,
+) -> Vec<RunResult> {
+    assert!(replicates > 0);
+    let sim = Simulator::new(cfg.clone());
+    let batch = effective_batch_size(replicates);
+    metrics::SIM_BATCH_SIZE.set(batch as u64);
+    metrics::SIM_BATCH_REPLICAS_TOTAL.add(replicates as u64);
+    metrics::SIM_BATCH_JOBS_TOTAL.add(((replicates + batch - 1) / batch) as u64);
+    match sim.config().scenario.hierarchy() {
+        Some(_) => fan_out(pool, replicates, threads, batch, &|lo, hi| {
+            let mut block = FixedTieredBlock::new(&sim, base_seed, lo, hi);
+            drive(&mut block);
+            block.finish()
+        }),
+        None => fan_out(pool, replicates, threads, batch, &|lo, hi| {
+            let mut block = FixedScalarBlock::new(&sim, base_seed, lo, hi);
+            drive(&mut block);
+            block.finish()
+        }),
+    }
+}
+
+/// Run `replicates` adaptive sample paths through the lockstep
+/// executor. Same ordering/bit-identity contract as [`run_batched`],
+/// against `AdaptiveSimulator::run`.
+pub fn run_adaptive_batched(
+    sim: &AdaptiveSimulator,
+    replicates: usize,
+    base_seed: u64,
+    threads: usize,
+) -> Vec<AdaptiveRunResult> {
+    assert!(replicates > 0);
+    let batch = effective_batch_size(replicates);
+    metrics::SIM_BATCH_SIZE.set(batch as u64);
+    metrics::SIM_BATCH_REPLICAS_TOTAL.add(replicates as u64);
+    metrics::SIM_BATCH_JOBS_TOTAL.add(((replicates + batch - 1) / batch) as u64);
+    fan_out(ThreadPool::global(), replicates, threads, batch, &|lo, hi| {
+        let mut block = AdaptiveBlock::new(sim, base_seed, lo, hi);
+        drive(&mut block);
+        block.finish()
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Fixed-period, scalar scenario (transliterates `Simulator::run`).
+// ---------------------------------------------------------------------------
+
+struct FixedScalarBlock<'a> {
+    sim: &'a Simulator,
+    compute_len: f64,
+    streams: Vec<BufferedFailures>,
+    next_fail: Vec<Failure>,
+    now: Vec<f64>,
+    saved: Vec<f64>,
+    overlap: Vec<f64>,
+    res: Vec<RunResult>,
+}
+
+impl<'a> FixedScalarBlock<'a> {
+    fn new(sim: &'a Simulator, base_seed: u64, lo: usize, hi: usize) -> Self {
+        let n = hi - lo;
+        let cfg = sim.config();
+        let compute_len = cfg.period - cfg.scenario.ckpt.c;
+        let mut block = FixedScalarBlock {
+            sim,
+            compute_len,
+            streams: Vec::with_capacity(n),
+            next_fail: Vec::with_capacity(n),
+            now: vec![0.0; n],
+            saved: vec![0.0; n],
+            overlap: vec![0.0; n],
+            res: vec![ZERO_RUN; n],
+        };
+        for i in lo..hi {
+            let mut rng = Pcg64::seeded(base_seed + i as u64);
+            let mut stream = BufferedFailures::new(cfg.failure.stream(&mut rng));
+            block.next_fail.push(stream.next_after(0.0));
+            block.streams.push(stream);
+        }
+        block
+    }
+
+    fn finish(mut self) -> Vec<RunResult> {
+        let s = &self.sim.config().scenario;
+        let omega = s.ckpt.omega;
+        let p = &s.power;
+        for i in 0..self.res.len() {
+            let res = &mut self.res[i];
+            res.makespan = self.now[i];
+            res.energy = p.p_static * res.makespan
+                + p.p_cal * (res.time_compute + omega * res.time_checkpoint)
+                + p.p_io * (res.time_checkpoint + res.time_recovery)
+                + p.p_down * res.time_down;
+        }
+        self.res
+    }
+}
+
+impl Lockstep for FixedScalarBlock<'_> {
+    fn slots(&self) -> usize {
+        self.res.len()
+    }
+
+    fn step(&mut self, i: usize) -> bool {
+        let sim = self.sim;
+        let s = &sim.config().scenario;
+        let c = s.ckpt.c;
+        let (d, r) = (s.ckpt.d, s.ckpt.r);
+        let omega = s.ckpt.omega;
+
+        // ---- compute phase (rate 1) ----
+        let base_progress = self.saved[i] + self.overlap[i];
+        let need = s.t_base - base_progress;
+        debug_assert!(need > 0.0);
+        match phase_end(self.now[i], self.compute_len, need, 1.0, self.next_fail[i].at) {
+            PhaseEnd::Finished(dt) => {
+                self.res[i].time_compute += dt;
+                self.now[i] += dt;
+                return true;
+            }
+            PhaseEnd::Failed(dt) => {
+                self.res[i].time_compute += dt;
+                self.now[i] += dt;
+                self.res[i].work_lost += self.overlap[i] + dt;
+                self.overlap[i] = 0.0;
+                sim.fail_and_recover(
+                    &mut self.res[i],
+                    &mut self.now[i],
+                    &mut self.next_fail[i],
+                    &mut self.streams[i],
+                    d,
+                    r,
+                );
+                return false;
+            }
+            PhaseEnd::Ran => {
+                self.res[i].time_compute += self.compute_len;
+                self.now[i] += self.compute_len;
+            }
+        }
+
+        // ---- checkpoint phase (rate ω) ----
+        let at_ckpt_start = base_progress + self.compute_len;
+        let need = s.t_base - at_ckpt_start;
+        match phase_end(self.now[i], c, need, omega, self.next_fail[i].at) {
+            PhaseEnd::Finished(dt) => {
+                self.res[i].time_checkpoint += dt;
+                self.now[i] += dt;
+                true
+            }
+            PhaseEnd::Failed(dt) => {
+                self.res[i].time_checkpoint += dt;
+                self.now[i] += dt;
+                self.res[i].work_lost += self.overlap[i] + self.compute_len + omega * dt;
+                self.overlap[i] = 0.0;
+                sim.fail_and_recover(
+                    &mut self.res[i],
+                    &mut self.now[i],
+                    &mut self.next_fail[i],
+                    &mut self.streams[i],
+                    d,
+                    r,
+                );
+                false
+            }
+            PhaseEnd::Ran => {
+                self.res[i].time_checkpoint += c;
+                self.now[i] += c;
+                self.res[i].n_checkpoints += 1;
+                self.saved[i] = at_ckpt_start;
+                self.overlap[i] = omega * c;
+                false
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fixed-period, tiered scenario (transliterates `Simulator::run_tiered`).
+// ---------------------------------------------------------------------------
+
+struct FixedTieredBlock<'a> {
+    sim: &'a Simulator,
+    h: &'a TierHierarchy,
+    compute_len: f64,
+    kappa: [u32; MAX_TIERS],
+    streams: Vec<BufferedFailures>,
+    next_fail: Vec<Failure>,
+    now: Vec<f64>,
+    saved: Vec<f64>,
+    overlap: Vec<f64>,
+    res: Vec<RunResult>,
+    store: Vec<TierStore>,
+    inflight: Vec<Vec<Drain>>,
+    drain_free_at: Vec<f64>,
+    drain_energy: Vec<f64>,
+    recovery_io_energy: Vec<f64>,
+    /// Shared pin-set scratch (one allocation per block).
+    pinned: Vec<f64>,
+}
+
+impl<'a> FixedTieredBlock<'a> {
+    fn new(sim: &'a Simulator, base_seed: u64, lo: usize, hi: usize) -> Self {
+        let n = hi - lo;
+        let cfg = sim.config();
+        let s = &cfg.scenario;
+        let h = s.hierarchy().expect("tiered block needs a hierarchy");
+        let compute_len = cfg.period - s.ckpt.c;
+        let kappa = crate::model::tiers::cadence_for(s, h, cfg.period);
+        let mut block = FixedTieredBlock {
+            sim,
+            h,
+            compute_len,
+            kappa,
+            streams: Vec::with_capacity(n),
+            next_fail: Vec::with_capacity(n),
+            now: vec![0.0; n],
+            saved: vec![0.0; n],
+            overlap: vec![0.0; n],
+            res: vec![ZERO_RUN; n],
+            store: (0..n).map(|_| TierStore::new(h)).collect(),
+            inflight: (0..n).map(|_| Vec::new()).collect(),
+            drain_free_at: vec![0.0; n],
+            drain_energy: vec![0.0; n],
+            recovery_io_energy: vec![0.0; n],
+            pinned: Vec::new(),
+        };
+        for i in lo..hi {
+            let mut rng = Pcg64::seeded(base_seed + i as u64);
+            let mut stream = BufferedFailures::new(cfg.failure.stream(&mut rng));
+            block.next_fail.push(stream.next_after(0.0));
+            block.streams.push(stream);
+        }
+        block
+    }
+
+    fn finish(mut self) -> Vec<RunResult> {
+        let s = &self.sim.config().scenario;
+        let omega = s.ckpt.omega;
+        let p = &s.power;
+        for i in 0..self.res.len() {
+            settle_drains_with(
+                &mut self.inflight[i],
+                &mut self.store[i],
+                &mut self.drain_energy[i],
+                self.h,
+                self.now[i],
+                true,
+                &mut self.pinned,
+            );
+            let res = &mut self.res[i];
+            res.makespan = self.now[i];
+            res.energy = p.p_static * res.makespan
+                + p.p_cal * (res.time_compute + omega * res.time_checkpoint)
+                + p.p_io * res.time_checkpoint
+                + self.recovery_io_energy[i]
+                + p.p_down * res.time_down
+                + self.drain_energy[i];
+        }
+        self.res
+    }
+
+    fn node_loss(&mut self, i: usize, d: f64, progress: f64) {
+        let sim = self.sim;
+        sim.tiered_failure(
+            &mut self.res[i],
+            &mut self.now[i],
+            &mut self.next_fail[i],
+            &mut self.streams[i],
+            self.h,
+            &mut self.store[i],
+            &mut self.inflight[i],
+            &mut self.drain_free_at[i],
+            &mut self.drain_energy[i],
+            &mut self.recovery_io_energy[i],
+            d,
+            progress,
+            &mut self.saved[i],
+            &mut self.overlap[i],
+            &mut self.pinned,
+        );
+    }
+}
+
+impl Lockstep for FixedTieredBlock<'_> {
+    fn slots(&self) -> usize {
+        self.res.len()
+    }
+
+    fn step(&mut self, i: usize) -> bool {
+        let s = &self.sim.config().scenario;
+        let c = s.ckpt.c;
+        let d = s.ckpt.d;
+        let omega = s.ckpt.omega;
+
+        // ---- compute phase ----
+        let base_progress = self.saved[i] + self.overlap[i];
+        let need = s.t_base - base_progress;
+        debug_assert!(need > 0.0);
+        match phase_end(self.now[i], self.compute_len, need, 1.0, self.next_fail[i].at) {
+            PhaseEnd::Finished(dt) => {
+                self.res[i].time_compute += dt;
+                self.now[i] += dt;
+                return true;
+            }
+            PhaseEnd::Failed(dt) => {
+                self.res[i].time_compute += dt;
+                self.now[i] += dt;
+                let progress = base_progress + dt;
+                self.node_loss(i, d, progress);
+                return false;
+            }
+            PhaseEnd::Ran => {
+                self.res[i].time_compute += self.compute_len;
+                self.now[i] += self.compute_len;
+            }
+        }
+
+        // ---- checkpoint phase (synchronous tier-0 write) ----
+        let at_ckpt_start = base_progress + self.compute_len;
+        let need = s.t_base - at_ckpt_start;
+        match phase_end(self.now[i], c, need, omega, self.next_fail[i].at) {
+            PhaseEnd::Finished(dt) => {
+                self.res[i].time_checkpoint += dt;
+                self.now[i] += dt;
+                true
+            }
+            PhaseEnd::Failed(dt) => {
+                self.res[i].time_checkpoint += dt;
+                self.now[i] += dt;
+                let progress = at_ckpt_start + omega * dt;
+                self.node_loss(i, d, progress);
+                false
+            }
+            PhaseEnd::Ran => {
+                self.res[i].time_checkpoint += c;
+                self.now[i] += c;
+                self.res[i].n_checkpoints += 1;
+                self.saved[i] = at_ckpt_start;
+                self.overlap[i] = omega * c;
+                settle_drains_with(
+                    &mut self.inflight[i],
+                    &mut self.store[i],
+                    &mut self.drain_energy[i],
+                    self.h,
+                    self.now[i],
+                    false,
+                    &mut self.pinned,
+                );
+                self.pinned.clear();
+                self.pinned.extend(self.inflight[i].iter().map(|dr| dr.work));
+                self.store[i].record(
+                    0,
+                    CopyRecord { work: at_ckpt_start, available_at: self.now[i] },
+                    &self.pinned,
+                );
+                let idx = self.res[i].n_checkpoints;
+                let mut source_ready = self.now[i];
+                for tier in 1..self.h.len() {
+                    if idx % self.kappa[tier] as u64 != 0 {
+                        break;
+                    }
+                    let start = self.drain_free_at[i].max(source_ready);
+                    let end = start + self.h.tier(tier).c;
+                    self.drain_free_at[i] = end;
+                    source_ready = end;
+                    self.inflight[i].push(Drain { tier, work: at_ckpt_start, start, end });
+                }
+                false
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Adaptive (transliterates `AdaptiveSimulator::run`).
+// ---------------------------------------------------------------------------
+
+struct AdaptiveBlock<'a> {
+    sim: &'a AdaptiveSimulator,
+    seeds: Vec<u64>,
+    ctl: Vec<AdaptiveController>,
+    period: Vec<f64>,
+    streams: Vec<BufferedFailures>,
+    next_fail: Vec<Failure>,
+    now: Vec<f64>,
+    saved: Vec<f64>,
+    overlap: Vec<f64>,
+    res: Vec<AdaptiveRunResult>,
+    // Tiered state; untouched (empty queues, kappa never read) when the
+    // scenario is scalar.
+    store: Vec<Option<TierStore>>,
+    inflight: Vec<Vec<Drain>>,
+    drain_free_at: Vec<f64>,
+    drain_energy: Vec<f64>,
+    rec_io_energy: Vec<f64>,
+    kappa: Vec<[u32; MAX_TIERS]>,
+    kappa_period: Vec<f64>,
+    /// Shared pin-set scratch (one allocation per block).
+    pinned: Vec<f64>,
+}
+
+impl<'a> AdaptiveBlock<'a> {
+    fn new(sim: &'a AdaptiveSimulator, base_seed: u64, lo: usize, hi: usize) -> Self {
+        let n = hi - lo;
+        let cfg = &sim.cfg;
+        let s = &cfg.scenario;
+        let omega = s.ckpt.omega;
+        let d = s.ckpt.d;
+        let fallback = s.clamp_period(young(s)).expect("feasible by construction");
+        let mut block = AdaptiveBlock {
+            sim,
+            seeds: Vec::with_capacity(n),
+            ctl: Vec::with_capacity(n),
+            period: Vec::with_capacity(n),
+            streams: Vec::with_capacity(n),
+            next_fail: Vec::with_capacity(n),
+            now: vec![0.0; n],
+            saved: vec![0.0; n],
+            overlap: vec![0.0; n],
+            res: Vec::with_capacity(n),
+            store: (0..n).map(|_| sim.tiered.as_ref().map(TierStore::new)).collect(),
+            inflight: (0..n).map(|_| Vec::new()).collect(),
+            drain_free_at: vec![0.0; n],
+            drain_energy: vec![0.0; n],
+            rec_io_energy: vec![0.0; n],
+            kappa: vec![[1u32; MAX_TIERS]; n],
+            kappa_period: vec![f64::NAN; n],
+            pinned: Vec::new(),
+        };
+        for i in lo..hi {
+            let seed = base_seed + i as u64;
+            // Controller construction + calibration, verbatim from
+            // `AdaptiveSimulator::run` (same observation order ⇒ same
+            // estimator state bits).
+            let mut ctl = AdaptiveController::new(
+                cfg.policy,
+                s.power,
+                omega,
+                d,
+                cfg.prior_mu,
+                s.t_base,
+            )
+            .with_ewma_alpha(cfg.alpha)
+            .with_hysteresis(cfg.hysteresis);
+            let s0 = sim.traj.scenario_at(0.0);
+            ctl.observe_checkpoint(s0.ckpt.c);
+            ctl.observe_restore(s0.ckpt.r);
+            if trace::enabled() {
+                trace::emit(&trace::event(
+                    "observe",
+                    seed,
+                    0.0,
+                    vec![
+                        ("c_est", Json::Num(ctl.c_estimate())),
+                        ("r_est", Json::Num(ctl.r_estimate())),
+                        ("mu_est", Json::Num(ctl.mu_estimate())),
+                        ("oracle", Json::Bool(cfg.oracle)),
+                    ],
+                ));
+            }
+            let period = if cfg.oracle {
+                sim.instantaneous_target(0.0).unwrap_or(fallback)
+            } else {
+                match ctl.period() {
+                    Some(p) => s.clamp_period(p).unwrap_or(fallback),
+                    None => fallback,
+                }
+            };
+            if trace::enabled() {
+                trace::emit(&trace::event(
+                    "period",
+                    seed,
+                    0.0,
+                    vec![
+                        ("current", Json::Null),
+                        ("fresh", Json::Num(period)),
+                        ("changed", Json::Bool(false)),
+                        ("suppressed", Json::Bool(false)),
+                        ("oracle", Json::Bool(cfg.oracle)),
+                    ],
+                ));
+            }
+            let mut rng = Pcg64::seeded(seed);
+            let mut stream = BufferedFailures::new(cfg.failure.stream(&mut rng));
+            block.next_fail.push(stream.next_after(0.0));
+            block.streams.push(stream);
+            block.seeds.push(seed);
+            block.ctl.push(ctl);
+            block.period.push(period);
+            block.res.push(AdaptiveRunResult {
+                makespan: 0.0,
+                energy: 0.0,
+                n_failures: 0,
+                n_checkpoints: 0,
+                work_lost: 0.0,
+                time_compute: 0.0,
+                time_checkpoint: 0.0,
+                time_recovery: 0.0,
+                time_down: 0.0,
+                n_period_updates: 0,
+                final_period: period,
+                tracking_lag_pct: 0.0,
+                drift_lag_pct: 0.0,
+                tracking_samples: 0,
+            });
+        }
+        block
+    }
+
+    fn finish(mut self) -> Vec<AdaptiveRunResult> {
+        let sim = self.sim;
+        let s = &sim.cfg.scenario;
+        let omega = s.ckpt.omega;
+        for i in 0..self.res.len() {
+            if let (Some(h), Some(st)) = (sim.tiered.as_ref(), self.store[i].as_mut()) {
+                settle_drains_with(
+                    &mut self.inflight[i],
+                    st,
+                    &mut self.drain_energy[i],
+                    h,
+                    self.now[i],
+                    true,
+                    &mut self.pinned,
+                );
+            }
+            let res = &mut self.res[i];
+            res.makespan = self.now[i];
+            res.final_period = self.period[i];
+            if res.tracking_samples > 0 {
+                res.tracking_lag_pct /= res.tracking_samples as f64;
+                res.drift_lag_pct /= res.tracking_samples as f64;
+            }
+            if sim.tiered.is_some() {
+                let p = &s.power;
+                res.energy = p.p_static * res.makespan
+                    + p.p_cal * (res.time_compute + omega * res.time_checkpoint)
+                    + p.p_io * res.time_checkpoint
+                    + self.rec_io_energy[i]
+                    + p.p_down * res.time_down
+                    + self.drain_energy[i];
+            } else if !sim.drifting {
+                let p = &s.power;
+                res.energy = p.p_static * res.makespan
+                    + p.p_cal * (res.time_compute + omega * res.time_checkpoint)
+                    + p.p_io * (res.time_checkpoint + res.time_recovery)
+                    + p.p_down * res.time_down;
+            }
+        }
+        self.res
+    }
+
+    /// Node-loss + recovery + period re-read, shared by both phases'
+    /// `Failed` arms (the per-phase `progress` expression differs).
+    fn fail_path(&mut self, i: usize, dt: f64, progress: f64, overlap_loss: f64) {
+        let sim = self.sim;
+        let seed = self.seeds[i];
+        self.ctl[i].observe_uptime(dt);
+        let tier_rec = if let (Some(h), Some(st)) = (sim.tiered.as_ref(), self.store[i].as_mut())
+        {
+            Some(tiered_node_loss(
+                h,
+                st,
+                &mut self.inflight[i],
+                &mut self.drain_free_at[i],
+                &mut self.drain_energy[i],
+                self.now[i],
+                progress,
+                &mut self.saved[i],
+                &mut self.overlap[i],
+                &mut self.res[i].work_lost,
+                &mut self.pinned,
+            ))
+        } else {
+            self.res[i].work_lost += overlap_loss;
+            self.overlap[i] = 0.0;
+            None
+        };
+        sim.fail_and_recover(
+            &mut self.ctl[i],
+            &mut self.res[i],
+            &mut self.now[i],
+            &mut self.next_fail[i],
+            &mut self.streams[i],
+            seed,
+            tier_rec,
+            &mut self.rec_io_energy[i],
+        );
+        sim.reread_period(&mut self.ctl[i], &mut self.res[i], &mut self.period[i], self.now[i], seed);
+    }
+}
+
+impl Lockstep for AdaptiveBlock<'_> {
+    fn slots(&self) -> usize {
+        self.res.len()
+    }
+
+    fn step(&mut self, i: usize) -> bool {
+        let sim = self.sim;
+        let s = &sim.cfg.scenario;
+        let c = s.ckpt.c;
+        let omega = s.ckpt.omega;
+        let pw = s.power;
+        let seed = self.seeds[i];
+
+        let compute_len = if sim.drifting {
+            (self.period[i] - sim.traj.scenario_at(self.now[i]).ckpt.c).max(1e-3 * c)
+        } else {
+            self.period[i] - c
+        };
+
+        // ---- compute phase (rate 1, power static+cal) ----
+        let base_progress = self.saved[i] + self.overlap[i];
+        let need = s.t_base - base_progress;
+        debug_assert!(need > 0.0);
+        match phase_end(self.now[i], compute_len, need, 1.0, self.next_fail[i].at) {
+            PhaseEnd::Finished(dt) => {
+                self.res[i].time_compute += dt;
+                if sim.drifting {
+                    self.res[i].energy += (pw.p_static + pw.p_cal) * dt;
+                }
+                self.now[i] += dt;
+                return true;
+            }
+            PhaseEnd::Failed(dt) => {
+                self.res[i].time_compute += dt;
+                if sim.drifting {
+                    self.res[i].energy += (pw.p_static + pw.p_cal) * dt;
+                }
+                self.now[i] += dt;
+                let overlap_loss = self.overlap[i] + dt;
+                self.fail_path(i, dt, base_progress + dt, overlap_loss);
+                return false;
+            }
+            PhaseEnd::Ran => {
+                self.res[i].time_compute += compute_len;
+                if sim.drifting {
+                    self.res[i].energy += (pw.p_static + pw.p_cal) * compute_len;
+                }
+                self.now[i] += compute_len;
+                self.ctl[i].observe_uptime(compute_len);
+            }
+        }
+
+        // ---- checkpoint phase (rate ω, power static+ω·cal+io) ----
+        let (c_ckpt, p_io_ckpt) = if sim.drifting {
+            let s_ck = sim.traj.scenario_at(self.now[i]);
+            (s_ck.ckpt.c, s_ck.power.p_io)
+        } else {
+            (c, pw.p_io)
+        };
+        let ckpt_rate = pw.p_static + omega * pw.p_cal + p_io_ckpt;
+        let at_ckpt_start = base_progress + compute_len;
+        let need = s.t_base - at_ckpt_start;
+        match phase_end(self.now[i], c_ckpt, need, omega, self.next_fail[i].at) {
+            PhaseEnd::Finished(dt) => {
+                self.res[i].time_checkpoint += dt;
+                if sim.drifting {
+                    self.res[i].energy += ckpt_rate * dt;
+                }
+                self.now[i] += dt;
+                true
+            }
+            PhaseEnd::Failed(dt) => {
+                self.res[i].time_checkpoint += dt;
+                if sim.drifting {
+                    self.res[i].energy += ckpt_rate * dt;
+                }
+                self.now[i] += dt;
+                let overlap_loss = self.overlap[i] + compute_len + omega * dt;
+                self.fail_path(i, dt, at_ckpt_start + omega * dt, overlap_loss);
+                false
+            }
+            PhaseEnd::Ran => {
+                self.res[i].time_checkpoint += c_ckpt;
+                if sim.drifting {
+                    self.res[i].energy += ckpt_rate * c_ckpt;
+                }
+                self.now[i] += c_ckpt;
+                self.ctl[i].observe_uptime(c_ckpt);
+                self.res[i].n_checkpoints += 1;
+                self.saved[i] = at_ckpt_start;
+                self.overlap[i] = omega * c_ckpt;
+                self.ctl[i].observe_checkpoint(c_ckpt);
+                if trace::enabled() {
+                    trace::emit(&trace::event(
+                        "observe",
+                        seed,
+                        self.now[i],
+                        vec![
+                            ("c_est", Json::Num(self.ctl[i].c_estimate())),
+                            ("r_est", Json::Num(self.ctl[i].r_estimate())),
+                            ("mu_est", Json::Num(self.ctl[i].mu_estimate())),
+                            ("oracle", Json::Bool(sim.cfg.oracle)),
+                        ],
+                    ));
+                }
+                if let (Some(h), Some(st)) = (sim.tiered.as_ref(), self.store[i].as_mut()) {
+                    settle_drains_with(
+                        &mut self.inflight[i],
+                        st,
+                        &mut self.drain_energy[i],
+                        h,
+                        self.now[i],
+                        false,
+                        &mut self.pinned,
+                    );
+                    self.pinned.clear();
+                    self.pinned.extend(self.inflight[i].iter().map(|dr| dr.work));
+                    st.record(
+                        0,
+                        CopyRecord { work: at_ckpt_start, available_at: self.now[i] },
+                        &self.pinned,
+                    );
+                    if self.kappa_period[i] != self.period[i] {
+                        self.kappa[i] = crate::model::tiers::cadence_for(s, h, self.period[i]);
+                        self.kappa_period[i] = self.period[i];
+                    }
+                    let idx = self.res[i].n_checkpoints;
+                    let mut source_ready = self.now[i];
+                    for tier in 1..h.len() {
+                        if idx % self.kappa[i][tier] as u64 != 0 {
+                            break;
+                        }
+                        let start = self.drain_free_at[i].max(source_ready);
+                        let end = start + h.tier(tier).c;
+                        self.drain_free_at[i] = end;
+                        source_ready = end;
+                        self.inflight[i].push(Drain { tier, work: at_ckpt_start, start, end });
+                    }
+                }
+                sim.reread_period(
+                    &mut self.ctl[i],
+                    &mut self.res[i],
+                    &mut self.period[i],
+                    self.now[i],
+                    seed,
+                );
+                false
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::fig1_scenario;
+    use crate::coordinator::policy::PeriodPolicy;
+    use crate::model::params::{CheckpointParams, PowerParams, Scenario};
+    use crate::sim::adaptive::AdaptiveSimConfig;
+    use crate::sim::FailureProcess;
+    use crate::storage::TierSpec;
+
+    fn scenario(mu: f64) -> Scenario {
+        let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, 0.5).unwrap();
+        let power = PowerParams::new(10.0, 10.0, 100.0, 0.0).unwrap();
+        Scenario::new(ckpt, power, mu, 20_000.0).unwrap()
+    }
+
+    #[test]
+    fn batched_fixed_scalar_matches_per_replica_runs() {
+        let cfg = SimConfig::paper(scenario(120.0), 80.0);
+        let sim = Simulator::new(cfg.clone());
+        for threads in [1, 4] {
+            let batched = run_batched(&cfg, 24, 7, threads);
+            for (i, got) in batched.iter().enumerate() {
+                let want = sim.run(7 + i as u64);
+                assert_eq!(*got, want, "replicate {i} at {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_fixed_tiered_matches_per_replica_runs() {
+        let ckpt = CheckpointParams::new(10.0, 10.0, 1.0, 0.5).unwrap();
+        let power = PowerParams::new(10.0, 10.0, 100.0, 0.0).unwrap();
+        let s = Scenario::with_tier_specs(
+            ckpt,
+            power,
+            120.0,
+            8_000.0,
+            &[TierSpec::new(1.0, 1.0, 30.0), TierSpec::new(10.0, 10.0, 100.0)],
+        )
+        .unwrap();
+        let cfg = SimConfig::paper(s, 70.0);
+        let sim = Simulator::new(cfg.clone());
+        let batched = run_batched(&cfg, 16, 3, 1);
+        for (i, got) in batched.iter().enumerate() {
+            let want = sim.run(3 + i as u64);
+            assert_eq!(*got, want, "replicate {i}");
+        }
+    }
+
+    #[test]
+    fn batched_adaptive_matches_per_replica_runs() {
+        let s = fig1_scenario(300.0, 5.5);
+        let sim =
+            AdaptiveSimulator::new(AdaptiveSimConfig::paper(s, PeriodPolicy::AlgoT));
+        let batched = run_adaptive_batched(&sim, 12, 11, 1);
+        for (i, got) in batched.iter().enumerate() {
+            let want = sim.run(11 + i as u64);
+            assert_eq!(*got, want, "replicate {i}");
+        }
+    }
+
+    #[test]
+    fn per_node_streams_pass_through_unblocked() {
+        // PerNodeWeibull consumes a heap-ordered, now-dependent draw
+        // count: the buffered wrapper must pass it through on demand.
+        let mut cfg = SimConfig::paper(scenario(150.0), 80.0);
+        cfg.failure = FailureProcess::PerNodeWeibull { n: 8, shape: 0.7, scale_ind: 1200.0 };
+        let sim = Simulator::new(cfg.clone());
+        let batched = run_batched(&cfg, 8, 5, 1);
+        for (i, got) in batched.iter().enumerate() {
+            assert_eq!(*got, sim.run(5 + i as u64), "replicate {i}");
+        }
+    }
+
+    #[test]
+    fn batch_size_override_is_result_neutral() {
+        let cfg = SimConfig::paper(scenario(120.0), 80.0);
+        let base = run_batched(&cfg, 20, 1, 1);
+        for b in [1usize, 3, 7, 64] {
+            set_batch_size(Some(b));
+            let got = run_batched(&cfg, 20, 1, 1);
+            set_batch_size(None);
+            assert_eq!(got, base, "batch size {b} changed results");
+        }
+    }
+
+    #[test]
+    fn effective_batch_size_respects_override_and_bounds() {
+        set_batch_size(Some(5));
+        assert_eq!(effective_batch_size(100), 5);
+        assert_eq!(effective_batch_size(3), 3, "never exceeds the replicate count");
+        set_batch_size(None);
+        let auto = effective_batch_size(10_000);
+        assert!((1..=MAX_AUTO_BATCH).contains(&auto), "auto size {auto} out of bounds");
+        assert_eq!(effective_batch_size(1), 1);
+    }
+}

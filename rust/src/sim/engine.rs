@@ -25,7 +25,7 @@
 //! The engine is allocation-free after construction: one loop, a few
 //! floats — ~50 ns per simulated period (see `benches/micro_simulator`).
 
-use super::failure::{FailureProcess, FailureStream};
+use super::failure::{FailureProcess, FailureSource};
 use crate::model::params::Scenario;
 use crate::storage::{CopyRecord, TierHierarchy, TierStore};
 use crate::util::rng::Pcg64;
@@ -93,7 +93,7 @@ pub struct Simulator {
 }
 
 /// What ended a phase.
-enum PhaseEnd {
+pub(crate) enum PhaseEnd {
     /// Phase ran its full planned length.
     Ran,
     /// The application's last work unit completed at the returned
@@ -101,6 +101,27 @@ enum PhaseEnd {
     Finished(f64),
     /// A failure struck at the returned in-phase offset.
     Failed(f64),
+}
+
+/// Phase outcome for a phase of `len` wall time during which `need`
+/// work remains and work accrues at `rate`. Shared with the batched
+/// lockstep executor ([`super::batch`]); the closures inside
+/// [`Simulator::run`]/[`Simulator::run_tiered`] keep their own verbatim
+/// copies so the scalar reference loops stay byte-for-byte untouched —
+/// the math here is identical, expression for expression.
+pub(crate) fn phase_end(now: f64, len: f64, need: f64, rate: f64, fail_at: f64) -> PhaseEnd {
+    let finish = if rate > 0.0 && need / rate <= len {
+        Some(need / rate)
+    } else {
+        None
+    };
+    let fail = if fail_at < now + len { Some(fail_at - now) } else { None };
+    match (finish, fail) {
+        (Some(f), Some(x)) if f <= x => PhaseEnd::Finished(f),
+        (_, Some(x)) => PhaseEnd::Failed(x),
+        (Some(f), None) => PhaseEnd::Finished(f),
+        (None, None) => PhaseEnd::Ran,
+    }
 }
 
 impl Simulator {
@@ -235,13 +256,16 @@ impl Simulator {
     }
 
     /// Handle the downtime + recovery after a failure, including failures
-    /// that strike *during* recovery when configured.
-    fn fail_and_recover(
+    /// that strike *during* recovery when configured. Generic over the
+    /// failure source so the scalar reference loop (plain stream) and
+    /// the batched executor (block-drawing wrapper) monomorphise to the
+    /// same body.
+    pub(crate) fn fail_and_recover<S: FailureSource>(
         &self,
         res: &mut RunResult,
         now: &mut f64,
         next_fail: &mut super::failure::Failure,
-        stream: &mut FailureStream,
+        stream: &mut S,
         d: f64,
         r: f64,
     ) {
@@ -334,6 +358,9 @@ impl Simulator {
         // blanket `p_io` at the end only covers tier-0 writes.
         let mut drain_energy = 0.0f64;
         let mut recovery_io_energy = 0.0f64;
+        // Pin-set scratch, reused across every settle (values are
+        // rebuilt in place — no per-event allocation).
+        let mut pinned: Vec<f64> = Vec::new();
 
         let mut now = 0.0f64;
         let mut saved = 0.0f64;
@@ -385,6 +412,7 @@ impl Simulator {
                         progress,
                         &mut saved,
                         &mut overlap,
+                        &mut pinned,
                     );
                     continue;
                 }
@@ -422,6 +450,7 @@ impl Simulator {
                         progress,
                         &mut saved,
                         &mut overlap,
+                        &mut pinned,
                     );
                     continue;
                 }
@@ -433,8 +462,17 @@ impl Simulator {
                     overlap = omega * c;
                     // Completed drains land their copies before new
                     // pins are computed.
-                    settle_drains(&mut inflight, &mut store, &mut drain_energy, h, now, false);
-                    let pinned: Vec<f64> = inflight.iter().map(|dr| dr.work).collect();
+                    settle_drains_with(
+                        &mut inflight,
+                        &mut store,
+                        &mut drain_energy,
+                        h,
+                        now,
+                        false,
+                        &mut pinned,
+                    );
+                    pinned.clear();
+                    pinned.extend(inflight.iter().map(|dr| dr.work));
                     store.record(
                         0,
                         CopyRecord { work: at_ckpt_start, available_at: now },
@@ -459,7 +497,7 @@ impl Simulator {
 
         // End of run: completed drains land (energy), in-flight ones
         // abort with pro-rated energy.
-        settle_drains(&mut inflight, &mut store, &mut drain_energy, h, now, true);
+        settle_drains_with(&mut inflight, &mut store, &mut drain_energy, h, now, true, &mut pinned);
 
         res.makespan = now;
         let p = &s.power;
@@ -475,13 +513,15 @@ impl Simulator {
     /// Failure handling for the tiered loop: settle/abort drains, kill
     /// node-local copies, pick the restart tier, then run the
     /// downtime+recovery loop with that tier's read cost and power.
+    /// `pinned` is caller-owned pin-set scratch (see
+    /// [`settle_drains_with`]).
     #[allow(clippy::too_many_arguments)]
-    fn tiered_failure(
+    pub(crate) fn tiered_failure<S: FailureSource>(
         &self,
         res: &mut RunResult,
         now: &mut f64,
         next_fail: &mut super::failure::Failure,
-        stream: &mut FailureStream,
+        stream: &mut S,
         h: &TierHierarchy,
         store: &mut TierStore,
         inflight: &mut Vec<Drain>,
@@ -492,9 +532,10 @@ impl Simulator {
         progress_at_fail: f64,
         saved: &mut f64,
         overlap: &mut f64,
+        pinned: &mut Vec<f64>,
     ) {
         let fail_at = *now;
-        settle_drains(inflight, store, drain_energy, h, fail_at, true);
+        settle_drains_with(inflight, store, drain_energy, h, fail_at, true, pinned);
         *drain_free_at = fail_at;
         store.purge_node_local();
         let (r, p_io_r, restart_work) = match store.freshest_surviving(fail_at) {
@@ -554,17 +595,25 @@ pub(crate) struct Drain {
 /// recorded). With `abort`, also charge pro-rated energy for drains the
 /// cutoff interrupts and discard them (failure or end of run); without
 /// it, later drains simply stay in flight.
-pub(crate) fn settle_drains(
+///
+/// `pinned` is a caller-owned pin-set scratch buffer: the simulators
+/// and the batched executor reuse one allocation across every event
+/// step. The buffer is cleared and rebuilt from the same expression an
+/// allocating path would use, so the recorded values are identical.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn settle_drains_with(
     inflight: &mut Vec<Drain>,
     store: &mut TierStore,
     drain_energy: &mut f64,
     h: &TierHierarchy,
     up_to: f64,
     abort: bool,
+    pinned: &mut Vec<f64>,
 ) {
     // Conservative pin set: any in-flight source work stays evictable
     // from no tier until the transfer settles.
-    let pinned: Vec<f64> = inflight.iter().map(|dr| dr.work).collect();
+    pinned.clear();
+    pinned.extend(inflight.iter().map(|dr| dr.work));
     let mut i = 0;
     while i < inflight.len() {
         let dr = inflight[i];

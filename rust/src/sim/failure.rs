@@ -221,6 +221,103 @@ impl FailureStream {
     }
 }
 
+/// Anything the event loops can pull ordered failure events from: the
+/// plain [`FailureStream`] or the block-drawing [`BufferedFailures`]
+/// wrapper. The recovery helpers in [`super::engine`]/[`super::adaptive`]
+/// are generic over this, so the scalar reference loops and the batched
+/// lockstep executor ([`super::batch`]) share one monomorphised body —
+/// identical floating-point operation order either way.
+pub(crate) trait FailureSource {
+    fn next_after(&mut self, now: f64) -> Failure;
+}
+
+impl FailureSource for FailureStream {
+    #[inline]
+    fn next_after(&mut self, now: f64) -> Failure {
+        FailureStream::next_after(self, now)
+    }
+}
+
+/// Samples pre-drawn per refill of a blockable stream. Small enough
+/// that a short run never draws far ahead of what it consumes, large
+/// enough to amortise the per-call dispatch on failure-heavy paths.
+const FAILURE_BLOCK: usize = 32;
+
+/// Block-drawing wrapper over a [`FailureStream`].
+///
+/// The exponential samplers draw *gaps* that do not depend on `now`
+/// (`at = now + rng.exponential(mtbf)`), so their samples can be drawn
+/// in blocks ahead of consumption: the PCG draw **order is unchanged**
+/// (samples are consumed in exactly the order they are drawn, and each
+/// `(gap, node)` pair is drawn in the same within-event order as the
+/// on-demand sampler), only the wall-clock moment of the draw moves.
+/// `at = now + gap` is then the same f64 expression the stream
+/// evaluates, so events are bit-identical — `buffered_failures_are_
+/// bit_identical_to_on_demand` pins this per variant.
+///
+/// Now-dependent samplers (the Lewis–Shedler [`FailureStream::Thinned`]
+/// envelope, whose acceptance draws depend on the proposal time, and
+/// [`FailureStream::PerNodeRenewal`], whose heap consumption depends on
+/// how far the engine fast-forwarded) pass through on demand, draw for
+/// draw.
+pub(crate) struct BufferedFailures {
+    inner: FailureStream,
+    /// Pre-drawn `(gap, node)` samples; refilled in place (the
+    /// allocation happens once, at construction).
+    buf: Vec<(f64, usize)>,
+    pos: usize,
+    blockable: bool,
+}
+
+impl BufferedFailures {
+    pub(crate) fn new(inner: FailureStream) -> Self {
+        let blockable = matches!(
+            inner,
+            FailureStream::Exponential { .. } | FailureStream::AggregateAttributed { .. }
+        );
+        BufferedFailures {
+            inner,
+            buf: Vec::with_capacity(if blockable { FAILURE_BLOCK } else { 0 }),
+            pos: 0,
+            blockable,
+        }
+    }
+
+    fn refill(&mut self) {
+        self.buf.clear();
+        self.pos = 0;
+        match &mut self.inner {
+            FailureStream::Exponential { mtbf, rng } => {
+                for _ in 0..FAILURE_BLOCK {
+                    self.buf.push((rng.exponential(*mtbf), 0));
+                }
+            }
+            FailureStream::AggregateAttributed { mtbf, n, rng } => {
+                for _ in 0..FAILURE_BLOCK {
+                    let gap = rng.exponential(*mtbf);
+                    let node = rng.below(*n as u64) as usize;
+                    self.buf.push((gap, node));
+                }
+            }
+            _ => unreachable!("refill is only reachable for blockable streams"),
+        }
+    }
+}
+
+impl FailureSource for BufferedFailures {
+    fn next_after(&mut self, now: f64) -> Failure {
+        if !self.blockable {
+            return self.inner.next_after(now);
+        }
+        if self.pos == self.buf.len() {
+            self.refill();
+        }
+        let (gap, node) = self.buf[self.pos];
+        self.pos += 1;
+        Failure { at: now + gap, node }
+    }
+}
+
 /// Lanczos approximation of Γ(x) for x > 0 (used for Weibull means).
 pub fn gamma(x: f64) -> f64 {
     // g = 7, n = 9 Lanczos coefficients.
@@ -282,6 +379,37 @@ mod tests {
         let p = FailureProcess::Exponential { mtbf: 120.0 };
         let m = mean_interarrival(&p, 100_000, 1);
         assert!((m - 120.0).abs() / 120.0 < 0.02, "m={m}");
+    }
+
+    #[test]
+    fn buffered_failures_are_bit_identical_to_on_demand() {
+        // Every process family, including non-blockable ones (thinned,
+        // per-node renewal) which must pass straight through. Arrival
+        // times are advanced irregularly (by fractions of the gap) so
+        // now-dependence would surface as a divergence.
+        let procs = [
+            FailureProcess::Exponential { mtbf: 120.0 },
+            FailureProcess::PerNodeExponential { n: 100, mtbf_ind: 12_000.0 },
+            FailureProcess::PerNodeWeibull { n: 8, shape: 0.7, scale_ind: 1200.0 },
+        ];
+        for p in procs {
+            for seed in [1u64, 7, 42] {
+                let mut rng_a = Pcg64::seeded(seed);
+                let mut direct = p.stream(&mut rng_a);
+                let mut rng_b = Pcg64::seeded(seed);
+                let mut buffered = BufferedFailures::new(p.stream(&mut rng_b));
+                let (mut now_a, mut now_b) = (0.0f64, 0.0f64);
+                for step in 0..200 {
+                    let a = direct.next_after(now_a);
+                    let b = buffered.next_after(now_b);
+                    assert_eq!(a.at.to_bits(), b.at.to_bits(), "{p:?} seed {seed} step {step}");
+                    assert_eq!(a.node, b.node, "{p:?} seed {seed} step {step}");
+                    let frac = 0.25 + 0.5 * ((step % 3) as f64 / 2.0);
+                    now_a += (a.at - now_a) * frac;
+                    now_b = now_a;
+                }
+            }
+        }
     }
 
     #[test]

@@ -22,6 +22,12 @@
 //!   ([`crate::drift::EnvTrajectory`], thinned sampling).
 //! * [`engine`] — the single-run event loop.
 //! * [`runner`] — seeded Monte-Carlo replication on the persistent pool.
+//! * [`batch`] — the batched lockstep executor behind [`monte_carlo`]
+//!   and [`adaptive_monte_carlo`]: B replicas advance in lockstep per
+//!   pool job over struct-of-arrays state, with block-drawn failure
+//!   samples and no per-event allocation — bit-identical to the
+//!   per-replica loops (replicas are independent; interleaving them
+//!   changes no replica's operation sequence).
 //! * [`adaptive`] — the engine with the online
 //!   [`AdaptiveController`](crate::coordinator::AdaptiveController) in
 //!   the loop: `C`/`R`/`μ` re-estimated along the sample path and the
@@ -55,13 +61,14 @@
 //! invoked from a grid cell on a pool worker).
 
 pub mod adaptive;
+pub mod batch;
 pub mod engine;
 pub mod failure;
 pub mod runner;
 
 pub use adaptive::{
-    adaptive_monte_carlo, AdaptiveMonteCarloResult, AdaptiveRunResult, AdaptiveSimConfig,
-    AdaptiveSimulator,
+    adaptive_monte_carlo, adaptive_monte_carlo_with, AdaptiveMonteCarloResult,
+    AdaptiveRunResult, AdaptiveSimConfig, AdaptiveSimulator,
 };
 pub use engine::{RunResult, SimConfig, Simulator};
 pub use failure::FailureProcess;

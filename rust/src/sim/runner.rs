@@ -36,11 +36,52 @@ impl MonteCarloResult {
     }
 }
 
+/// Fold per-replicate results into the Monte-Carlo aggregate, in
+/// replicate-index order (order is part of the thread-count determinism
+/// contract — `OnlineStats` sums are order-sensitive).
+fn collect_stats(replicates: usize, results: &[RunResult]) -> MonteCarloResult {
+    let mut mc = MonteCarloResult {
+        replicates,
+        makespan: OnlineStats::new(),
+        energy: OnlineStats::new(),
+        failures: OnlineStats::new(),
+        checkpoints: OnlineStats::new(),
+        work_lost: OnlineStats::new(),
+    };
+    for r in results {
+        mc.makespan.push(r.makespan);
+        mc.energy.push(r.energy);
+        mc.failures.push(r.n_failures as f64);
+        mc.checkpoints.push(r.n_checkpoints as f64);
+        mc.work_lost.push(r.work_lost);
+    }
+    mc
+}
+
 /// Run `replicates` independent sample paths of `cfg`. Replicate `i`
 /// simulates seed `base_seed + i`; `threads > 1` fans the replicates out
 /// on the persistent pool. Results are identical for every `threads`
 /// value (the pool writes by index and aggregation is in index order).
+///
+/// Dispatches to the batched lockstep executor ([`super::batch`]) —
+/// bit-identical to the per-replica loop by construction, pinned by
+/// `tests/batch_sim.rs` against [`monte_carlo_reference`].
 pub fn monte_carlo(
+    cfg: &SimConfig,
+    replicates: usize,
+    base_seed: u64,
+    threads: usize,
+) -> MonteCarloResult {
+    assert!(replicates > 0);
+    let results = super::batch::run_batched(cfg, replicates, base_seed, threads);
+    collect_stats(replicates, &results)
+}
+
+/// The pre-batching per-replica driver, kept verbatim as the
+/// bit-identity reference for the lockstep executor (the PR 9
+/// `compute_reference` pattern). Not part of the public surface.
+#[doc(hidden)]
+pub fn monte_carlo_reference(
     cfg: &SimConfig,
     replicates: usize,
     base_seed: u64,
@@ -54,23 +95,7 @@ pub fn monte_carlo(
     } else {
         ThreadPool::global().map(replicates, |i| sim.run(base_seed + i as u64))
     };
-
-    let mut mc = MonteCarloResult {
-        replicates,
-        makespan: OnlineStats::new(),
-        energy: OnlineStats::new(),
-        failures: OnlineStats::new(),
-        checkpoints: OnlineStats::new(),
-        work_lost: OnlineStats::new(),
-    };
-    for r in &results {
-        mc.makespan.push(r.makespan);
-        mc.energy.push(r.energy);
-        mc.failures.push(r.n_failures as f64);
-        mc.checkpoints.push(r.n_checkpoints as f64);
-        mc.work_lost.push(r.work_lost);
-    }
-    mc
+    collect_stats(replicates, &results)
 }
 
 /// Empirically search the period minimising mean makespan or energy by

@@ -50,7 +50,10 @@ use crate::model::ratios::{compare, Comparison};
 use crate::model::{e_final, t_final};
 use crate::pareto::frontier::FrontierSummary;
 use crate::pareto::KneeMethod;
-use crate::sim::adaptive::{adaptive_monte_carlo, AdaptiveMonteCarloResult, AdaptiveSimConfig};
+use crate::sim::adaptive::{
+    adaptive_monte_carlo, adaptive_monte_carlo_with, AdaptiveMonteCarloResult, AdaptiveSimConfig,
+    AdaptiveSimulator,
+};
 use crate::sim::runner::{monte_carlo, MonteCarloResult};
 use crate::sim::{FailureProcess, SimConfig};
 use crate::util::pool::ThreadPool;
@@ -650,13 +653,15 @@ fn eval_cell(cell: &Cell, seed: u64) -> CellOutput {
             cfg.failures_during_recovery = failures_during_recovery;
             cfg.alpha = alpha;
             cfg.hysteresis = hysteresis;
-            let mc = adaptive_monte_carlo(&cfg, replicates, seed, replicates);
+            // Build the simulator (and its sampled `EnvTrajectory`)
+            // once per cell: the clairvoyant twin shares the identical
+            // trajectory instead of re-sampling it from the config.
+            let sim = AdaptiveSimulator::new(cfg);
+            let mc = adaptive_monte_carlo_with(&sim, replicates, seed, replicates);
             // The clairvoyant twin: same seeds (and, for μ-stationary
             // schedules, bit-identical failure draws), period re-read
             // from the true instantaneous scenario.
-            let mut oracle_cfg = cfg.clone();
-            oracle_cfg.oracle = true;
-            let omc = adaptive_monte_carlo(&oracle_cfg, replicates, seed, replicates);
+            let omc = adaptive_monte_carlo_with(&sim.oracle_twin(), replicates, seed, replicates);
             let s = &cell.scenario;
             let e_floor = s.t_base * (s.power.p_static + s.power.p_cal);
             CellOutput::Drift(Some(DriftSummary {

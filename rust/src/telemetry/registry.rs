@@ -138,6 +138,25 @@ pub mod metrics {
     /// the full divisibility-constrained envelope).
     pub static TIER_ENVELOPE_SKIPPED_TOTAL: Counter = Counter::new();
 
+    // --- batched Monte-Carlo executor -----------------------------------
+    /// Lockstep batch size in force for the most recent
+    /// `sim::batch` dispatch (override or auto — execution shape only,
+    /// never part of any result or cache key).
+    pub static SIM_BATCH_SIZE: Gauge = Gauge::new();
+    /// Replicates dispatched through the batched executor.
+    pub static SIM_BATCH_REPLICAS_TOTAL: Counter = Counter::new();
+    /// Lockstep blocks (pool jobs) dispatched by the batched executor.
+    pub static SIM_BATCH_JOBS_TOTAL: Counter = Counter::new();
+
+    // --- warm-start frontier re-solves ----------------------------------
+    /// Warm-started optimiser solves whose seeded bracket validated (the
+    /// golden refinement ran on the cold-identical bracket directly,
+    /// skipping the grid scan).
+    pub static OPT_WARM_HITS_TOTAL: Counter = Counter::new();
+    /// Warm-start attempts whose bracket check failed, falling back to
+    /// the cold grid-then-golden path bit-identically.
+    pub static OPT_WARM_FALLBACKS_TOTAL: Counter = Counter::new();
+
     // --- thread pool ----------------------------------------------------
     /// Successful steals from another participant's queue.
     pub static POOL_STEALS_TOTAL: Counter = Counter::new();

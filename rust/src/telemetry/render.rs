@@ -55,6 +55,26 @@ pub fn prometheus() -> String {
             "Cadence vectors pruned by the drain-cost lower bound",
             metrics::TIER_ENVELOPE_SKIPPED_TOTAL.get(),
         ),
+        (
+            "ckpt_sim_batch_replicas_total",
+            "Replicates dispatched through the batched Monte-Carlo executor",
+            metrics::SIM_BATCH_REPLICAS_TOTAL.get(),
+        ),
+        (
+            "ckpt_sim_batch_jobs_total",
+            "Lockstep blocks dispatched by the batched Monte-Carlo executor",
+            metrics::SIM_BATCH_JOBS_TOTAL.get(),
+        ),
+        (
+            "ckpt_opt_warm_hits_total",
+            "Warm-started optimiser solves whose seeded bracket validated",
+            metrics::OPT_WARM_HITS_TOTAL.get(),
+        ),
+        (
+            "ckpt_opt_warm_fallbacks_total",
+            "Warm-start attempts that fell back to the cold grid scan",
+            metrics::OPT_WARM_FALLBACKS_TOTAL.get(),
+        ),
     ];
     for (name, help, v) in counters {
         header(&mut out, name, help, "counter");
@@ -68,6 +88,14 @@ pub fn prometheus() -> String {
         "gauge",
     );
     out.push_str(&format!("ckpt_pool_queue_depth {}\n", metrics::POOL_QUEUE_DEPTH.get()));
+
+    header(
+        &mut out,
+        "ckpt_sim_batch_size",
+        "Lockstep batch size in force for the most recent sim dispatch",
+        "gauge",
+    );
+    out.push_str(&format!("ckpt_sim_batch_size {}\n", metrics::SIM_BATCH_SIZE.get()));
 
     // Per-worker busy time: one family, worker-labelled; only slots
     // that have recorded anything (the inventory line stays via HELP).
@@ -219,6 +247,17 @@ pub fn snapshot_json() -> Json {
             "tier_envelope_skipped_total",
             Json::Num(metrics::TIER_ENVELOPE_SKIPPED_TOTAL.get() as f64),
         ),
+        (
+            "sim_batch_replicas_total",
+            Json::Num(metrics::SIM_BATCH_REPLICAS_TOTAL.get() as f64),
+        ),
+        ("sim_batch_jobs_total", Json::Num(metrics::SIM_BATCH_JOBS_TOTAL.get() as f64)),
+        ("sim_batch_size", Json::Num(metrics::SIM_BATCH_SIZE.get() as f64)),
+        ("opt_warm_hits_total", Json::Num(metrics::OPT_WARM_HITS_TOTAL.get() as f64)),
+        (
+            "opt_warm_fallbacks_total",
+            Json::Num(metrics::OPT_WARM_FALLBACKS_TOTAL.get() as f64),
+        ),
     ]);
     let caches = Json::Obj(
         registry::cache_rows()
@@ -272,6 +311,11 @@ mod tests {
             "ckpt_cache_shard_entries",
             "ckpt_tier_envelope_evaluated_total",
             "ckpt_tier_envelope_skipped_total",
+            "ckpt_sim_batch_size",
+            "ckpt_sim_batch_replicas_total",
+            "ckpt_sim_batch_jobs_total",
+            "ckpt_opt_warm_hits_total",
+            "ckpt_opt_warm_fallbacks_total",
             "ckpt_serve_stage_ns",
             "ckpt_pool_job_ns",
             "ckpt_grid_cell_ns",

@@ -256,6 +256,51 @@ impl<K: Eq + Hash + Clone, V: Clone> ShardedMap<K, V> {
         }
     }
 
+    /// Insert or overwrite `key → value` — last-writer-wins, unlike
+    /// [`Self::insert_if_absent`]. This is the *hint-store* operation
+    /// (e.g. the warm-start argmin hints in
+    /// [`crate::model::backend`]): entries are advisory seeds whose
+    /// freshest value is the most useful one, not pure functions of
+    /// their key, so overwriting is the point. Applies the same
+    /// overflow policy as `insert_if_absent`; in FIFO mode the
+    /// insertion-order slot is claimed on first insert only (an
+    /// overwrite does not refresh recency).
+    pub fn put(&self, key: K, value: V) {
+        match self.overflow {
+            Overflow::Clear => {
+                let st = self.state();
+                if self.len() >= self.default_capacity {
+                    for sh in &st.shards {
+                        lock(&sh.map).clear();
+                        sh.entries.store(0, Ordering::Relaxed);
+                    }
+                    self.clears.fetch_add(1, Ordering::Relaxed);
+                }
+                let sh = self.shard(&key);
+                let mut m = lock(&sh.map);
+                if m.insert(key, value).is_none() {
+                    sh.entries.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Overflow::EvictQuarter => {
+                let st = self.state();
+                let mut meta = lock(&st.meta);
+                if self.len() >= meta.capacity {
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                    let batch = (meta.capacity / 4).max(1);
+                    self.evict_oldest(&mut meta, batch);
+                }
+                let sh = self.shard(&key);
+                let mut m = lock(&sh.map);
+                if m.insert(key.clone(), value).is_none() {
+                    sh.entries.fetch_add(1, Ordering::Relaxed);
+                    drop(m);
+                    meta.order.push_back(key);
+                }
+            }
+        }
+    }
+
     /// Pop up to `n` keys off the global FIFO order and remove them
     /// from their shards. Caller holds the meta lock.
     fn evict_oldest(&self, meta: &mut Meta<K>, n: usize) {
@@ -380,6 +425,26 @@ mod tests {
         let per_shard: u64 = MAP.shard_stats().iter().map(|(h, m)| h + m).sum();
         let (hits, misses) = MAP.stats();
         assert_eq!(per_shard, hits + misses);
+    }
+
+    #[test]
+    fn put_overwrites_where_insert_if_absent_does_not() {
+        static MAP: ShardedMap<u64, f64> = ShardedMap::clearing(16);
+        MAP.put(1, 10.0);
+        assert_eq!((MAP.get(&1), MAP.len()), (Some(10.0), 1));
+        MAP.put(1, 20.0);
+        assert_eq!((MAP.get(&1), MAP.len()), (Some(20.0), 1), "put overwrites in place");
+        assert_eq!(MAP.insert_if_absent(1, 30.0), 20.0, "first-writer-wins still holds");
+
+        static FIFO: ShardedMap<u64, f64> = ShardedMap::fifo(8);
+        for k in 0..8 {
+            FIFO.put(k, k as f64);
+        }
+        FIFO.put(3, 33.0);
+        assert_eq!((FIFO.get(&3), FIFO.len()), (Some(33.0), 8), "overwrite adds no entry");
+        FIFO.put(8, 8.0);
+        assert_eq!(FIFO.evictions(), 1, "capacity put still evicts FIFO");
+        assert_eq!(FIFO.get(&0), None);
     }
 
     #[test]

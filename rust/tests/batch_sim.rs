@@ -1,0 +1,245 @@
+//! Acceptance tests of the batched lockstep Monte-Carlo executor and
+//! the warm-started frontier re-solves (ISSUE 10):
+//!
+//! (a) the batched executor is bit-identical to the retained
+//!     per-replica reference loops — fixed-period (scalar and tiered)
+//!     and adaptive (stationary, drifting, tiered) — at 1 and 8
+//!     threads, for every batch size (property tests over random
+//!     scenarios × presets × drift schedules × tier stacks);
+//! (b) the per-seed decision-trace event sequences are unchanged by
+//!     batching (replicates may interleave; each path's own sequence
+//!     may not);
+//! (c) warm-started exact-backend solves along a drift-style family
+//!     sequence return exactly the hint-free exact optima on every
+//!     trade-off preset.
+
+use ckpt_period::config::presets::{drift_preset, fig1_scenario, tradeoff_presets};
+use ckpt_period::coordinator::policy::PeriodPolicy;
+use ckpt_period::drift::DriftProcess;
+use ckpt_period::model::exact::{t_energy_opt_exact, t_time_opt_exact};
+use ckpt_period::model::params::{CheckpointParams, PowerParams, Scenario};
+use ckpt_period::model::{Backend, RecoveryModel};
+use ckpt_period::prop_assert;
+use ckpt_period::sim::adaptive::adaptive_monte_carlo_reference;
+use ckpt_period::sim::batch::set_batch_size;
+use ckpt_period::sim::runner::monte_carlo_reference;
+use ckpt_period::sim::{adaptive_monte_carlo, monte_carlo, FailureProcess, SimConfig};
+use ckpt_period::storage::TierSpec;
+use ckpt_period::telemetry::trace;
+use ckpt_period::util::json::parse;
+use ckpt_period::util::proptest::{check, Gen};
+use ckpt_period::util::stats::OnlineStats;
+
+/// Both aggregates carry order-sensitive `OnlineStats` folds, so bit
+/// equality of mean and variance per channel pins the full per-replicate
+/// result stream (any reordering or value drift perturbs the fold).
+fn assert_stats_eq(name: &str, a: &OnlineStats, b: &OnlineStats, ctx: &str) {
+    assert_eq!(a.count(), b.count(), "{name} count ({ctx})");
+    assert_eq!(a.mean().to_bits(), b.mean().to_bits(), "{name} mean ({ctx})");
+    assert_eq!(
+        a.variance().to_bits(),
+        b.variance().to_bits(),
+        "{name} variance ({ctx})"
+    );
+}
+
+#[test]
+fn prop_batched_fixed_executor_is_bit_identical_to_the_reference() {
+    check("batched fixed-period executor matches reference", 24, |g: &mut Gen| {
+        let c = g.f64_in(2.0, 15.0);
+        let r = g.f64_in(2.0, 15.0);
+        let d = g.f64_in(0.0, 3.0);
+        let omega = g.f64_in(0.0, 1.0);
+        let mu = g.f64_log_in(80.0, 2000.0);
+        let ckpt = CheckpointParams::new(c, r, d, omega).unwrap();
+        let power = PowerParams::from_rho(g.f64_in(1.5, 10.0), 1.0, 0.0).unwrap();
+        let scenario = if g.bool() {
+            // A 2-level tier stack: fast node-local front, durable back.
+            let specs = [
+                TierSpec::new(c * 0.2, r * 0.2, 30.0),
+                TierSpec::new(c, r, 100.0),
+            ];
+            Scenario::with_tier_specs(ckpt, power, mu, 8_000.0, &specs).unwrap()
+        } else {
+            Scenario::new(ckpt, power, mu, 8_000.0).unwrap()
+        };
+        let period = g.f64_in(scenario.min_period() * 1.5, scenario.min_period() * 6.0);
+        let failure = match g.usize_in(0, 2) {
+            0 => FailureProcess::Exponential { mtbf: mu },
+            1 => FailureProcess::PerNodeExponential { n: 8, mtbf_ind: mu * 8.0 },
+            _ => FailureProcess::PerNodeWeibull { n: 8, shape: 0.7, scale_ind: mu * 8.0 },
+        };
+        let cfg = SimConfig {
+            scenario,
+            period,
+            failure,
+            failures_during_recovery: g.bool(),
+        };
+        let reps = g.usize_in(1, 20);
+        let seed = g.usize_in(0, 1_000_000) as u64;
+        set_batch_size(Some(g.usize_in(1, reps + 4)));
+        let reference = monte_carlo_reference(&cfg, reps, seed, 1);
+        for threads in [1, 8] {
+            let batched = monte_carlo(&cfg, reps, seed, threads);
+            let ctx = format!("threads={threads} reps={reps} seed={seed}");
+            for (name, a, b) in [
+                ("makespan", &reference.makespan, &batched.makespan),
+                ("energy", &reference.energy, &batched.energy),
+                ("failures", &reference.failures, &batched.failures),
+                ("checkpoints", &reference.checkpoints, &batched.checkpoints),
+                ("work_lost", &reference.work_lost, &batched.work_lost),
+            ] {
+                assert_stats_eq(name, a, b, &ctx);
+            }
+            prop_assert!(g, batched.replicates == reps, "replicate count ({ctx})");
+        }
+        set_batch_size(None);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batched_adaptive_executor_is_bit_identical_to_the_reference() {
+    let policies = [
+        PeriodPolicy::AlgoT,
+        PeriodPolicy::AlgoE,
+        PeriodPolicy::Daly,
+        PeriodPolicy::Young,
+    ];
+    let drifts = ["stationary", "io-ramp", "mu-decay", "step-reconfig", "contention-burst"];
+    check("batched adaptive executor matches reference", 16, |g: &mut Gen| {
+        let mu = g.f64_log_in(120.0, 1200.0);
+        let base = fig1_scenario(mu, g.f64_in(2.0, 9.0));
+        let tiered = g.bool();
+        let scenario = if tiered {
+            let specs = [TierSpec::new(1.0, 1.0, 30.0), TierSpec::new(10.0, 10.0, 100.0)];
+            Scenario::with_tier_specs(base.ckpt, base.power, base.mu, base.t_base, &specs)
+                .unwrap()
+        } else {
+            base
+        };
+        let policy = *g.choose(&policies);
+        // The drain queue has no trajectory semantics: tier stacks run
+        // stationary, scalar scenarios draw any drift preset.
+        let drift = if tiered { "stationary" } else { *g.choose(&drifts) };
+        let process = if drift == "stationary" {
+            DriftProcess::Stationary
+        } else {
+            drift_preset(drift).unwrap()
+        };
+        let cfg = ckpt_period::sim::AdaptiveSimConfig::paper_drifting(scenario, policy, process)
+            .unwrap();
+        let reps = g.usize_in(1, 10);
+        let seed = g.usize_in(0, 1_000_000) as u64;
+        set_batch_size(Some(g.usize_in(1, reps + 2)));
+        let reference = adaptive_monte_carlo_reference(&cfg, reps, seed, 1);
+        for threads in [1, 8] {
+            let batched = adaptive_monte_carlo(&cfg, reps, seed, threads);
+            let ctx = format!(
+                "threads={threads} reps={reps} seed={seed} drift={drift} tiered={tiered}"
+            );
+            for (name, a, b) in [
+                ("makespan", &reference.makespan, &batched.makespan),
+                ("energy", &reference.energy, &batched.energy),
+                ("failures", &reference.failures, &batched.failures),
+                ("checkpoints", &reference.checkpoints, &batched.checkpoints),
+                ("work_lost", &reference.work_lost, &batched.work_lost),
+                ("period_updates", &reference.period_updates, &batched.period_updates),
+                ("final_period", &reference.final_period, &batched.final_period),
+                ("tracking_lag", &reference.tracking_lag, &batched.tracking_lag),
+                ("drift_lag", &reference.drift_lag, &batched.drift_lag),
+            ] {
+                assert_stats_eq(name, a, b, &ctx);
+            }
+        }
+        set_batch_size(None);
+        Ok(())
+    });
+}
+
+/// Lockstep batching may interleave *different* replicates' trace
+/// events (each line carries its seed), but every single path's own
+/// event sequence must be byte-identical to the reference loop's.
+#[test]
+fn batched_decision_traces_match_the_reference_per_seed() {
+    // A seed range no other test uses, so concurrent tests in this
+    // binary can't bleed events into the filter below.
+    const BASE_SEED: u64 = 870_001;
+    const REPS: usize = 6;
+    let cfg = ckpt_period::sim::AdaptiveSimConfig::paper_drifting(
+        fig1_scenario(300.0, 5.5),
+        PeriodPolicy::AlgoT,
+        drift_preset("io-ramp").unwrap(),
+    )
+    .unwrap();
+
+    let dir = std::env::temp_dir().join(format!("ckpt_batch_trace_{}", std::process::id()));
+    let per_seed = |path: &std::path::Path| {
+        let mut by_seed: std::collections::BTreeMap<u64, Vec<String>> =
+            std::collections::BTreeMap::new();
+        for line in std::fs::read_to_string(path).expect("trace written").lines() {
+            let doc = parse(line).unwrap_or_else(|e| panic!("bad trace line {line}: {e}"));
+            let seed = doc.req_f64("seed").expect("seed") as u64;
+            if (BASE_SEED..BASE_SEED + REPS as u64).contains(&seed) {
+                by_seed.entry(seed).or_default().push(line.to_string());
+            }
+        }
+        by_seed
+    };
+
+    let ref_path = dir.join("reference.jsonl");
+    trace::install(&ref_path).expect("trace sink installs");
+    let reference = adaptive_monte_carlo_reference(&cfg, REPS, BASE_SEED, 1);
+    assert!(trace::finish());
+
+    let batched_path = dir.join("batched.jsonl");
+    set_batch_size(Some(2));
+    trace::install(&batched_path).expect("trace sink installs");
+    let batched = adaptive_monte_carlo(&cfg, REPS, BASE_SEED, 8);
+    assert!(trace::finish());
+    set_batch_size(None);
+
+    assert_eq!(
+        reference.makespan.mean().to_bits(),
+        batched.makespan.mean().to_bits()
+    );
+    let (ref_events, batch_events) = (per_seed(&ref_path), per_seed(&batched_path));
+    assert_eq!(ref_events.len(), REPS, "every path traced");
+    for (seed, lines) in &ref_events {
+        assert!(!lines.is_empty(), "seed {seed} traced no events");
+        assert_eq!(
+            Some(lines),
+            batch_events.get(seed),
+            "seed {seed}: per-path event sequence changed under batching"
+        );
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Drift-style re-solves through the backend (which seed each other's
+/// warm brackets family-by-family) return exactly the hint-free exact
+/// optima — on every trade-off preset, both recovery models, walking μ
+/// downward the way a drift schedule would.
+#[test]
+fn warm_started_exact_solves_match_cold_solves_on_every_preset() {
+    for m in [RecoveryModel::Ideal, RecoveryModel::Restarting] {
+        let b = Backend::Exact(m);
+        for (label, s) in tradeoff_presets() {
+            for factor in [1.0, 0.95, 0.9, 0.86] {
+                let sf = Scenario::new(s.ckpt, s.power, s.mu * factor, s.t_base).unwrap();
+                assert_eq!(
+                    b.t_time_opt(&sf).expect(label).to_bits(),
+                    t_time_opt_exact(&sf, m).to_bits(),
+                    "{label} x{factor} time ({})",
+                    b.name()
+                );
+                assert_eq!(
+                    b.t_energy_opt(&sf).expect(label).to_bits(),
+                    t_energy_opt_exact(&sf, m).to_bits(),
+                    "{label} x{factor} energy ({})",
+                    b.name()
+                );
+            }
+        }
+    }
+}

@@ -1,11 +1,12 @@
-//! Bench-harness self-test (ISSUE 6 satellite, extended by ISSUEs 7
-//! and 9): `bench --quick` must emit a `BENCH_<n>.json` that validates
-//! against the current schema (`ckpt-period/bench/v3` — v2's tail
-//! latency and telemetry snapshot plus the pooled-frontier and
-//! tier-plan solver legs), and the committed repo-root trajectory must
-//! stay readable: every historical point validates under its own
-//! declared version, v1/v2/v3, with the shared key set intact. Every
-//! future PR's perf trajectory depends on these keys staying put.
+//! Bench-harness self-test (ISSUE 6 satellite, extended by ISSUEs 7,
+//! 9 and 10): `bench --quick` must emit a `BENCH_<n>.json` that
+//! validates against the current schema (`ckpt-period/bench/v4` — v3's
+//! solver legs plus the batched Monte-Carlo replicas/sec legs and the
+//! warm-started endpoint re-solve leg), and the committed repo-root
+//! trajectory must stay readable: every historical point validates
+//! under its own declared version, v1/v2/v3/v4, with the shared key
+//! set intact. Every future PR's perf trajectory depends on these keys
+//! staying put.
 
 use std::path::Path;
 use std::process::Command;
@@ -113,9 +114,40 @@ fn validate_v3(doc: &Json, origin: &str) {
     );
 }
 
+/// v4 additions: scalar-vs-batched Monte-Carlo replicas/sec per thread
+/// count (with the lockstep batch size in force), and the warm-started
+/// endpoint re-solve leg with its hit/fallback counter deltas.
+fn validate_v4(doc: &Json, origin: &str) {
+    assert!(req_num(doc, "sim_replicates") >= 1.0, "{origin}: sim_replicates");
+    let sim = doc.get("sim_replicas_per_sec").expect("sim_replicas_per_sec object");
+    for threads in ["1", "4", "8"] {
+        let t = sim
+            .get(threads)
+            .unwrap_or_else(|| panic!("{origin}: missing sim thread count {threads}"));
+        let origin = format!("{origin} sim @{threads}t");
+        assert!(req_num(t, "scalar") > 0.0, "{origin}: scalar replicas/s");
+        assert!(req_num(t, "batched") > 0.0, "{origin}: batched replicas/s");
+        assert!(req_num(t, "batch_size") >= 1.0, "{origin}: batch_size");
+        assert!(req_num(t, "pool_threads") >= 1.0, "{origin}: pool_threads");
+    }
+
+    assert!(req_num(doc, "warm_resolve_scenarios") >= 2.0, "{origin}: warm_resolve_scenarios");
+    let wr = doc.get("warm_resolve_per_sec").expect("warm_resolve_per_sec object");
+    let cold = req_num(wr, "cold");
+    let warm = req_num(wr, "warm");
+    assert!(cold > 0.0 && warm > 0.0, "{origin}: re-solve rates cold {cold} warm {warm}");
+    // A validated 3-probe bracket replaces the ~400-point endpoint
+    // scan, so the drifting pass must out-run the family-cold one.
+    assert!(warm > cold, "{origin}: warm re-solves {warm}/s not above cold {cold}/s");
+    // The μ walk moves the optimum well under a grid cell per step:
+    // the seeded brackets must actually validate, not fall back.
+    assert!(req_num(wr, "warm_hits") >= 1.0, "{origin}: warm pass never hit");
+    assert!(req_num(wr, "warm_fallbacks") >= 0.0, "{origin}: warm_fallbacks");
+}
+
 /// Dispatch on the declared schema version. Every version validates
 /// the common key set; v2 adds the observability payload, v3 the
-/// solver legs.
+/// solver legs, v4 the batched-executor and warm-re-solve legs.
 fn validate(doc: &Json, origin: &str) {
     let schema = doc.req_str("schema").unwrap_or_else(|e| panic!("{origin}: {e}")).to_string();
     validate_common(doc, origin);
@@ -125,6 +157,11 @@ fn validate(doc: &Json, origin: &str) {
         "ckpt-period/bench/v3" => {
             validate_v2(doc, origin);
             validate_v3(doc, origin);
+        }
+        "ckpt-period/bench/v4" => {
+            validate_v2(doc, origin);
+            validate_v3(doc, origin);
+            validate_v4(doc, origin);
         }
         other => panic!("{origin}: unknown bench schema {other}"),
     }
@@ -153,7 +190,7 @@ fn bench_quick_emits_a_schema_valid_trajectory_point() {
     let doc = parse(&raw).expect("valid JSON");
 
     // A fresh run must declare the current schema and fully validate.
-    assert_eq!(doc.req_str("schema").unwrap(), "ckpt-period/bench/v3");
+    assert_eq!(doc.req_str("schema").unwrap(), "ckpt-period/bench/v4");
     assert_eq!(doc.get("quick").and_then(|q| q.as_bool()), Some(true));
     validate(&doc, "fresh quick run");
 

@@ -449,6 +449,35 @@ fn drift_and_knob_flags_are_validated() {
 }
 
 #[test]
+fn replicate_and_batch_knobs_are_validated() {
+    // Zero sample paths is a CliError up front, not an assert deep in
+    // the Monte-Carlo runner.
+    for args in [vec!["simulate", "--replicates", "0"], vec!["train", "--steps", "0"]] {
+        let out = bin().args(&args).output().unwrap();
+        assert!(!out.status.success(), "{args:?} accepted");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("invalid value"), "{args:?}: {err}");
+        assert!(err.contains(">= 1"), "{args:?}: {err}");
+    }
+    // --batch takes 'auto' or a positive integer, full grammar in the
+    // message like --policy/--model.
+    for bad in ["0", "many", "2.5"] {
+        let out = bin().args(["simulate", "--batch", bad, "--replicates", "4"]).output().unwrap();
+        assert!(!out.status.success(), "--batch {bad} accepted");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("batch"), "{bad}: {err}");
+        assert!(err.contains("auto"), "{bad}: grammar missing from {err}");
+    }
+    // The batch size is an execution-shape knob: stdout is
+    // byte-identical for every value.
+    let base = run_ok(&["simulate", "--replicates", "24", "--seed", "5"]);
+    for b in ["1", "5", "64"] {
+        let out = run_ok(&["simulate", "--replicates", "24", "--seed", "5", "--batch", b]);
+        assert_eq!(base, out, "--batch {b} changed the output");
+    }
+}
+
+#[test]
 fn info_reports_memo_counters() {
     let out = run_ok(&["info"]);
     assert!(out.contains("memo caches"), "{out}");
